@@ -1,0 +1,99 @@
+//! `cargo bench` — regenerates every paper table/figure at quick scale
+//! (the experiment harness itself; pass FASTGM_BENCH_FULL=1 for
+//! paper-scale) plus micro-benchmarks of the coordinator hot paths.
+//!
+//! Uses the in-crate mini-criterion (`util::bench`) — the criterion crate
+//! is not in the offline set. Results: stdout + results/bench_*.jsonl.
+
+use fastgm::coordinator::protocol::{Request, Response};
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::data::corpus::Corpus;
+use fastgm::data::synthetic::{dense_vector, WeightDist};
+use fastgm::exp::{self, ExpOptions};
+use fastgm::lsh::{LshIndex, LshParams};
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::{Sketcher, SparseVector};
+use fastgm::util::bench::{Bencher, Suite};
+use fastgm::util::rng::SplitMix64;
+
+fn main() {
+    fastgm::util::logger::init();
+    let full = std::env::var("FASTGM_BENCH_FULL").is_ok();
+    let opts = ExpOptions { out_dir: "results".into(), full };
+
+    println!("== paper tables & figures (quick={}) ==", !full);
+    for name in exp::ALL {
+        println!("\n--- {name} ---");
+        if let Err(e) = exp::run(name, &opts) {
+            eprintln!("experiment {name} failed: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    println!("\n== coordinator hot-path micro-benchmarks ==");
+    let b = Bencher::from_env();
+    let mut suite = Suite::new().with_jsonl(&opts.jsonl_path("bench_micro"));
+
+    // Core sketching kernel across representative shapes.
+    let mut rng = SplitMix64::new(42);
+    for (n, k) in [(100usize, 256usize), (1000, 256), (1000, 1024), (10_000, 1024)] {
+        let v = dense_vector(&mut rng, n, WeightDist::Uniform01);
+        let fg = FastGm::new(k, 1);
+        suite.record(b.run(&format!("fastgm/n{n}/k{k}"), || fg.sketch(&v)));
+    }
+
+    // Corpus-shaped sketching (sparse text vectors).
+    let corpus = Corpus::by_name("real-sim", 7).unwrap();
+    let docs = corpus.vectors(64);
+    let fg = FastGm::new(256, 1);
+    let mut i = 0;
+    suite.record(b.run("fastgm/real-sim/k256", || {
+        i = (i + 1) % docs.len();
+        fg.sketch(&docs[i])
+    }));
+
+    // LSH query against a 2k-document index.
+    let sketches: Vec<_> = corpus.vectors(2000).iter().map(|d| fg.sketch(d)).collect();
+    let mut index = LshIndex::new(LshParams::for_threshold(256, 0.5));
+    for (i, sk) in sketches.iter().enumerate() {
+        index.insert(i as u64, sk.clone());
+    }
+    let mut q = 0;
+    suite.record(b.run("lsh/query@2000docs", || {
+        q = (q + 7) % sketches.len();
+        index.query(&sketches[q], 10).unwrap()
+    }));
+
+    // In-process coordinator round-trip (worker pool + registry).
+    let coord = Coordinator::new(CoordinatorConfig {
+        k: 256,
+        workers: 4,
+        ..Default::default()
+    })
+    .unwrap();
+    let v = SparseVector::new((0..100u64).collect(), vec![1.0; 100]);
+    let mut n = 0u64;
+    suite.record(b.run("coordinator/sketch-roundtrip", || {
+        n += 1;
+        let r = coord.call(Request::Sketch { name: format!("b{}", n % 64), vector: v.clone() });
+        assert!(matches!(r, Response::Sketch { .. }));
+    }));
+    suite.record(b.run("coordinator/ping-roundtrip", || coord.call(Request::Ping)));
+    coord.shutdown();
+
+    // Merge throughput (distributed-site central role).
+    let site_sketches: Vec<_> = (0..32)
+        .map(|i| {
+            let v = SparseVector::new(
+                (i * 50..i * 50 + 100u64).collect(),
+                vec![1.0; 100],
+            );
+            fg.sketch(&v)
+        })
+        .collect();
+    suite.record(b.run("merge/32sites/k256", || {
+        fastgm::coordinator::merger::merge_tree(&site_sketches, 4).unwrap()
+    }));
+
+    println!("\nbench complete; JSONL in results/");
+}

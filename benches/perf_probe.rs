@@ -1,0 +1,36 @@
+//! Focused probe for the §Perf iteration loop (small, fast, targeted).
+use fastgm::data::synthetic::{dense_vector, WeightDist};
+use fastgm::data::stream::generate;
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::lemiesz::LemieszSketch;
+use fastgm::sketch::pminhash::PMinHash;
+use fastgm::sketch::stream_fastgm::StreamFastGm;
+use fastgm::sketch::Sketcher;
+use fastgm::util::bench::{Bencher, Suite};
+use fastgm::util::rng::SplitMix64;
+
+fn main() {
+    let b = Bencher { budget: 0.6, samples: 9, warmup: 0.08 };
+    let mut suite = Suite::new();
+    let mut rng = SplitMix64::new(42);
+    for (n, k) in [(1000usize, 64usize), (100, 256), (1000, 256), (1000, 1024), (10_000, 1024)] {
+        let v = dense_vector(&mut rng, n, WeightDist::Uniform01);
+        let fg = FastGm::new(k, 1);
+        suite.record(b.run(&format!("fastgm/n{n}/k{k}"), || fg.sketch(&v)));
+        let pm = PMinHash::new(k, 1);
+        suite.record(b.run(&format!("pminhash/n{n}/k{k}"), || pm.sketch(&v)));
+    }
+    let stream = generate(&mut rng, 1000, 1.0, WeightDist::Uniform01, 0);
+    for k in [256usize, 1024] {
+        suite.record(b.run(&format!("stream-fastgm/n1000/k{k}"), || {
+            let mut s = StreamFastGm::new(k, 1);
+            for &(id, w) in &stream.events { s.push(id, w); }
+            s.sketch()
+        }));
+        suite.record(b.run(&format!("lemiesz/n1000/k{k}"), || {
+            let mut s = LemieszSketch::new(k, 1);
+            for &(id, w) in &stream.events { s.push(id, w); }
+            s.sketch()
+        }));
+    }
+}

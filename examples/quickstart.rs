@@ -1,0 +1,50 @@
+//! Quickstart: the 60-second tour of the FastGM library.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fastgm::estimate::cardinality::estimate_cardinality;
+use fastgm::estimate::jaccard::{estimate_jp, probability_jaccard};
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::stream_fastgm::StreamFastGm;
+use fastgm::sketch::{GumbelMaxSketch, Sketcher, SparseVector};
+
+fn main() -> anyhow::Result<()> {
+    // Two weighted vectors (e.g. TF-IDF bags of words). Ids are arbitrary
+    // u64 (hash your tokens); weights must be positive.
+    let doc_a = SparseVector::new(vec![1, 2, 3, 4], vec![1.0, 0.5, 2.0, 1.0]);
+    let doc_b = SparseVector::new(vec![1, 2, 3, 9], vec![1.0, 0.5, 2.0, 1.5]);
+
+    // 1. Sketch with FastGM — O(k ln k + n⁺) instead of O(k·n⁺).
+    let k = 1024;
+    let sketcher = FastGm::new(k, /*seed=*/ 42);
+    let sk_a = sketcher.sketch(&doc_a);
+    let sk_b = sketcher.sketch(&doc_b);
+
+    // 2. Probability Jaccard similarity from the ArgMax registers.
+    let est = estimate_jp(&sk_a, &sk_b)?;
+    let truth = probability_jaccard(&doc_a, &doc_b);
+    println!("J_P estimate = {est:.4}   (exact = {truth:.4}, k = {k})");
+
+    // 3. Weighted cardinality from the Max registers: ĉ = (k-1)/Σy.
+    let card = estimate_cardinality(&sk_a);
+    println!("weighted cardinality of A ≈ {card:.2}   (exact = {})", doc_a.total_weight());
+
+    // 4. Streams: one-pass Stream-FastGM with duplicate-safe updates.
+    let mut stream = StreamFastGm::new(k, 42);
+    for (id, w) in doc_a.positive() {
+        stream.push(id, w);
+        stream.push(id, w); // duplicates are free
+    }
+    assert_eq!(stream.sketch(), sk_a, "stream == batch, bit for bit");
+    println!("stream sketch identical to batch sketch ✓");
+
+    // 5. Mergeability (§2.3): union semantics across distributed sites.
+    let merged = GumbelMaxSketch::merge_all([&sk_a, &sk_b])?;
+    println!(
+        "merged (union) cardinality ≈ {:.2}",
+        estimate_cardinality(&merged)
+    );
+    Ok(())
+}

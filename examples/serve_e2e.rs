@@ -1,0 +1,202 @@
+//! END-TO-END DRIVER: the full three-layer system on a real small workload.
+//!
+//! Starts the coordinator + TCP server in-process (accelerator enabled when
+//! `artifacts/` is built), then drives it with concurrent clients over the
+//! wire:
+//!
+//!   1. ingest a document corpus (sparse → CPU FastGM workers),
+//!   2. build the LSH index,
+//!   3. mixed query load from 4 client threads: LSH similarity queries,
+//!      pairwise J_P estimates, stream pushes + cardinality reads, and
+//!      dense sketches (batched onto the AOT Pallas artifact when present),
+//!   4. report throughput, latency percentiles, estimate accuracy, and the
+//!      server's own metrics.
+//!
+//! Results are recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_e2e
+//! ```
+
+use fastgm::coordinator::client::Client;
+use fastgm::coordinator::protocol::{Request, Response};
+use fastgm::coordinator::server::Server;
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::data::corpus::Corpus;
+use fastgm::estimate::jaccard::probability_jaccard;
+use fastgm::sketch::SparseVector;
+use fastgm::util::rng::SplitMix64;
+use fastgm::util::stats::percentile;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N_DOCS: usize = 2000;
+const K: usize = 256;
+
+fn main() -> anyhow::Result<()> {
+    fastgm::util::logger::init();
+    let artifacts = if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts".to_string())
+    } else {
+        eprintln!("note: artifacts/ not built — dense path uses CPU fallback");
+        None
+    };
+    let coordinator = Arc::new(Coordinator::new(CoordinatorConfig {
+        k: K,
+        workers: 4,
+        artifacts_dir: artifacts,
+        batch_max: 8,
+        batch_deadline: Duration::from_millis(2),
+        ..Default::default()
+    })?);
+    println!("accelerator enabled: {}", coordinator.accel_enabled());
+    let server = Server::start(coordinator, "127.0.0.1:0")?;
+    let addr = server.addr.to_string();
+
+    // ---- Phase 1: ingest corpus over the wire (pipelined). -------------
+    let corpus = Corpus::by_name("rcv1", 7).unwrap();
+    let docs: Vec<SparseVector> = corpus.vectors(N_DOCS);
+    let t0 = Instant::now();
+    // Indexed ingestion, pipelined in 64-doc batches.
+    let mut client = Client::connect(&addr)?;
+    let mut ingested = 0;
+    let mut base = 0usize;
+    while base < docs.len() {
+        let end = (base + 64).min(docs.len());
+        let reqs: Vec<Request> = (base..end)
+            .map(|i| Request::Sketch { name: format!("doc{i}"), vector: docs[i].clone() })
+            .collect();
+        for r in client.call_pipelined(&reqs)? {
+            assert!(matches!(r, Response::Sketch { .. }), "ingest failed: {r:?}");
+            ingested += 1;
+        }
+        base = end;
+    }
+    let ingest_dt = t0.elapsed().as_secs_f64();
+    println!(
+        "ingested {ingested} docs in {:.2}s  ({:.0} docs/s over TCP, FastGM k={K})",
+        ingest_dt,
+        ingested as f64 / ingest_dt
+    );
+
+    // ---- Phase 2: LSH index. -------------------------------------------
+    let t0 = Instant::now();
+    let reqs: Vec<Request> =
+        (0..docs.len()).map(|i| Request::LshInsert { name: format!("doc{i}") }).collect();
+    for chunk in reqs.chunks(128) {
+        for r in client.call_pipelined(chunk)? {
+            assert!(matches!(r, Response::Ack { .. }));
+        }
+    }
+    println!("indexed {} docs in {:.2}s", docs.len(), t0.elapsed().as_secs_f64());
+
+    // ---- Phase 3: mixed query load from 4 concurrent clients. ----------
+    let queries_per_client = 150;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..4u64)
+        .map(|tid| {
+            let addr = addr.clone();
+            let docs = docs.clone();
+            std::thread::spawn(move || -> anyhow::Result<(Vec<f64>, usize, f64)> {
+                let mut client = Client::connect(&addr)?;
+                let mut rng = SplitMix64::new(500 + tid);
+                let mut latencies = Vec::new();
+                let mut lsh_hits = 0;
+                let mut jp_sq_err = 0.0;
+                for q in 0..queries_per_client {
+                    let t0 = Instant::now();
+                    match q % 4 {
+                        0 => {
+                            // LSH near-duplicate query for a known doc.
+                            let target = rng.next_range(0, docs.len() - 1);
+                            let Response::TopK { hits } = client.call(&Request::LshQuery {
+                                vector: docs[target].clone(),
+                                limit: 5,
+                            })?
+                            else {
+                                anyhow::bail!("bad lsh response")
+                            };
+                            if hits.first().map(|h| h.0 == format!("doc{target}")) == Some(true) {
+                                lsh_hits += 1;
+                            }
+                        }
+                        1 => {
+                            // Pairwise J_P vs exact.
+                            let a = rng.next_range(0, docs.len() - 1);
+                            let b = rng.next_range(0, docs.len() - 1);
+                            let Response::Estimate { value } = client.call(&Request::Jaccard {
+                                a: format!("doc{a}"),
+                                b: format!("doc{b}"),
+                            })?
+                            else {
+                                anyhow::bail!("bad jaccard response")
+                            };
+                            let truth = probability_jaccard(&docs[a], &docs[b]);
+                            jp_sq_err += (value - truth) * (value - truth);
+                        }
+                        2 => {
+                            // Stream push + cardinality.
+                            let items: Vec<(u64, f64)> =
+                                (0..32).map(|i| (rng.next_range(0, 5000) as u64 * 7 + i, 1.0)).collect();
+                            client.call(&Request::Push { stream: format!("s{tid}"), items })?;
+                            client.call(&Request::Cardinality { stream: format!("s{tid}") })?;
+                        }
+                        _ => {
+                            // Dense sketch → accelerator batcher.
+                            let dense: Vec<f64> =
+                                (0..512).map(|_| if rng.next_f64() < 0.5 { 0.0 } else { rng.next_f64() }).collect();
+                            let Response::Sketch { .. } = client.call(&Request::SketchDense {
+                                name: format!("dense{tid}_{q}"),
+                                weights: dense,
+                            })?
+                            else {
+                                anyhow::bail!("bad dense response")
+                            };
+                        }
+                    }
+                    latencies.push(t0.elapsed().as_secs_f64());
+                }
+                Ok((latencies, lsh_hits, jp_sq_err))
+            })
+        })
+        .collect();
+
+    let mut latencies = Vec::new();
+    let mut lsh_hits = 0;
+    let mut jp_sq_err = 0.0;
+    for h in handles {
+        let (l, hits, err) = h.join().expect("client thread")?;
+        latencies.extend(l);
+        lsh_hits += hits;
+        jp_sq_err += err;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total_q = latencies.len();
+    println!("\n== mixed query load ==");
+    println!("throughput: {:.0} req/s ({total_q} requests, 4 clients, {wall:.2}s wall)",
+        total_q as f64 / wall);
+    println!(
+        "latency: p50 {:.2} ms, p90 {:.2} ms, p99 {:.2} ms",
+        percentile(&latencies, 0.5) * 1e3,
+        percentile(&latencies, 0.9) * 1e3,
+        percentile(&latencies, 0.99) * 1e3
+    );
+    let lsh_total = 4 * (0..queries_per_client).filter(|q| q % 4 == 0).count();
+    println!("LSH self-recall: {:.1}%", 100.0 * lsh_hits as f64 / lsh_total as f64);
+    let jp_total = 4 * (0..queries_per_client).filter(|q| q % 4 == 1).count();
+    let jp_rmse = (jp_sq_err / jp_total as f64).sqrt();
+    println!("J_P RMSE vs exact: {jp_rmse:.4} (theory ≈ {:.4} at J≈0.05)",
+        (0.05f64 * 0.95 / K as f64).sqrt());
+
+    // ---- Phase 4: server metrics. ---------------------------------------
+    let Response::MetricsDump { snapshot } = client.call(&Request::Metrics)? else {
+        anyhow::bail!("bad metrics response")
+    };
+    println!("\nserver metrics: {snapshot}");
+
+    server.stop();
+    assert!(lsh_hits as f64 / lsh_total as f64 > 0.9, "LSH recall too low");
+    assert!(jp_rmse < 0.1, "J_P estimates off");
+    println!("\nserve_e2e OK");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Profiling harness for the Stream-FastGM hot path (used by the §Perf
+//! iteration log in EXPERIMENTS.md):
+//!
+//! ```bash
+//! cargo build --release --example stream_profile
+//! perf record -F 999 ./target/release/examples/stream_profile
+//! perf report --stdio | head -20
+//! ```
+//!
+//! Prints the release count per iteration — the quantity the paper's
+//! complexity analysis bounds (Algorithm 2 pays Θ(k ln k · ln n) releases
+//! on randomly-ordered streams because y* shrinks gradually; see
+//! EXPERIMENTS.md §Perf).
+
+use fastgm::data::stream::generate;
+use fastgm::data::synthetic::WeightDist;
+use fastgm::sketch::stream_fastgm::StreamFastGm;
+use fastgm::util::rng::SplitMix64;
+
+fn main() {
+    let mut rng = SplitMix64::new(42);
+    let stream = generate(&mut rng, 1000, 1.0, WeightDist::Uniform01, 0);
+    let mut acc = 0.0f64;
+    let mut total_released = 0u64;
+    let iters = 300;
+    for it in 0..iters {
+        let mut s = StreamFastGm::new(1024, it);
+        for &(id, w) in &stream.events {
+            s.push(id, w);
+        }
+        total_released += s.released;
+        acc += s.sketch().y[0];
+    }
+    println!("checksum {acc:.6}; releases/iter = {}", total_released / iters);
+}

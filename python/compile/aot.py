@@ -1,0 +1,131 @@
+"""AOT pipeline: lower every model variant to HLO **text** + a manifest.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the interchange
+format: jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids that the
+xla_extension 0.5.1 behind the Rust ``xla`` crate rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits ``<name>.hlo.txt`` per variant plus ``manifest.json`` describing the
+input/output shapes and dtypes the Rust runtime must honor.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, builder(k) -> fn, example input specs)
+# Shapes are the coordinator's batch buckets (rust/src/runtime/accel.rs).
+_U32 = jnp.uint32
+_F32 = jnp.float32
+_I32 = jnp.int32
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def variants():
+    """The AOT compilation matrix."""
+    out = []
+    for (b, n, k) in [(8, 1024, 256), (32, 1024, 256), (8, 4096, 1024)]:
+        out.append(
+            (
+                f"sketch_b{b}_n{n}_k{k}",
+                model.dense_sketch(k),
+                [_spec((1,), _U32), _spec((b, n), _F32)],
+                "pallas",
+            )
+        )
+    # Pure-XLA ablation twin of the first bucket.
+    b, n, k = 8, 1024, 256
+    out.append(
+        (
+            f"sketchxla_b{b}_n{n}_k{k}",
+            model.dense_sketch_xla(k),
+            [_spec((1,), _U32), _spec((b, n), _F32)],
+            "xla",
+        )
+    )
+    # Similarity matrix over signatures.
+    q, c, k = 16, 128, 256
+    out.append(
+        (
+            f"simmat_q{q}_c{c}_k{k}",
+            model.sim_matrix,
+            [_spec((q, k), _I32), _spec((c, k), _I32)],
+            "pallas",
+        )
+    )
+    # Fused end-to-end graph.
+    q, c, n, k = 8, 64, 1024, 256
+    out.append(
+        (
+            f"sketchsim_q{q}_c{c}_n{n}_k{k}",
+            model.sketch_sim(k),
+            [_spec((1,), _U32), _spec((q, n), _F32), _spec((c, n), _F32)],
+            "pallas",
+        )
+    )
+    return out
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="build a single variant by name")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, specs, kind in variants():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        # out_info is a pytree of ShapeDtypeStructs (tuple for multi-output).
+        flat_outs, _ = jax.tree_util.tree_flatten(outs)
+        manifest.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": kind,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": s.dtype.name} for s in specs
+                ],
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": jnp.dtype(o.dtype).name}
+                    for o in flat_outs
+                ],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump({"version": 1, "artifacts": manifest}, f, indent=2)
+    print(f"wrote {mpath} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernel: dense batched Gumbel-Max sketch.
+
+Computes, for a batch of dense weight rows ``V [B, N]`` and sketch length
+``K``, the registers
+
+    Y[b, j] = min_i  -ln(a_ij) / V[b, i]      (over V[b, i] > 0)
+    S[b, j] = argmin_i ...                     (0 if the row is empty)
+
+with the Direct-family counter RNG generated *inside* the kernel — no
+[N, K] random matrix ever touches HBM.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+``(B/bb, K/bk)``; each program keeps its V row-block and one [bn, bk]
+race-variable tile in VMEM and reduces over N in a ``fori_loop`` — the
+HBM↔VMEM schedule a CUDA version would express with threadblocks is the
+BlockSpec + index_map here. The min/argmin accumulator lives in registers
+(loop carry). This is a VPU-bound elementwise/reduction kernel; the MXU has
+no min-plus mode, so the roofline is memory bandwidth on V (see DESIGN.md
+§Perf for the VMEM/utilization estimate).
+
+Must be lowered with ``interpret=True``: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import direct_exp
+
+
+def _sketch_kernel(seed_ref, v_ref, y_ref, s_ref, *, bn, bk, n):
+    """One (bb × bk) output tile; loops the N axis in bn-sized chunks."""
+    ki = pl.program_id(1)
+    seed = seed_ref[0]
+    bb = v_ref.shape[0]
+    j = (ki * bk + jnp.arange(bk, dtype=jnp.uint32))[None, :]  # [1, bk]
+
+    def body(c, carry):
+        y, s = carry
+        i0 = c * bn
+        i = (i0.astype(jnp.uint32) + jnp.arange(bn, dtype=jnp.uint32))[:, None]
+        e = direct_exp(seed, i, j)  # [bn, bk] — generated in VMEM/registers
+        v = v_ref[:, pl.ds(i0, bn)]  # [bb, bn]
+        cand = jnp.where(
+            v[:, :, None] > 0, e[None, :, :] / v[:, :, None], jnp.float32(jnp.inf)
+        )  # [bb, bn, bk]
+        cmin = cand.min(axis=1)
+        carg = cand.argmin(axis=1).astype(jnp.int32) + i0.astype(jnp.int32)
+        upd = cmin < y
+        return jnp.where(upd, cmin, y), jnp.where(upd, carg, s)
+
+    y0 = jnp.full((bb, bk), jnp.inf, jnp.float32)
+    s0 = jnp.zeros((bb, bk), jnp.int32)
+    y, s = jax.lax.fori_loop(0, n // bn, body, (y0, s0))
+    y_ref[...] = y
+    s_ref[...] = s
+
+
+def pick_blocks(b, n, k):
+    """Block sizes: bb×bn×bk ≈ 128 KiB f32 tile, divisibility enforced."""
+
+    def largest_div(x, cap):
+        d = min(x, cap)
+        while x % d:
+            d -= 1
+        return d
+
+    bb = largest_div(b, 8)
+    bn = largest_div(n, 128)
+    bk = largest_div(k, 128)
+    return bb, bn, bk
+
+
+def gumbel_sketch(seed, v, k, *, interpret=True):
+    """Batched dense Gumbel-Max sketch via Pallas.
+
+    Args:
+      seed: shape-(1,) uint32 array.
+      v: [B, N] float32 weights (non-positive entries are absent).
+      k: sketch length.
+
+    Returns: (y [B,k] float32, s [B,k] int32).
+    """
+    b, n = v.shape
+    bb, bn, bk = pick_blocks(b, n, k)
+    kernel = functools.partial(_sketch_kernel, bn=bn, bk=bk, n=n)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bb, k // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki: (0,)),
+            pl.BlockSpec((bb, n), lambda bi, ki: (bi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bk), lambda bi, ki: (bi, ki)),
+            pl.BlockSpec((bb, bk), lambda bi, ki: (bi, ki)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(seed, jnp.uint32).reshape(1), v)

@@ -1,0 +1,77 @@
+"""Pure-jnp reference oracles for the Pallas kernels, plus the Direct-family
+counter RNG shared bit-for-bit with the Rust coordinator
+(``rust/src/util/rng.rs``). Golden-value tests on both sides pin the two
+implementations to the same constants (see ``python/tests/test_rng.py``).
+
+Everything here is build-time only: the AOT pipeline (``compile/aot.py``)
+lowers the model to HLO text once; Python never runs on the request path.
+"""
+
+import jax.numpy as jnp
+
+# Constants mirrored in rust/src/util/rng.rs (Direct family).
+_DIRECT_SALT = 0xA0761D64
+_MUL_I = 0x9E3779B1
+_MUL_J = 0x85EBCA77
+
+
+def fmix32(h):
+    """murmur3 32-bit finalizer over uint32 arrays (wrapping arithmetic)."""
+    h = jnp.asarray(h, jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def direct_bits(seed, i, j):
+    """32 uniform bits for cell (i, j) under ``seed`` — two chained
+    finalizer rounds, identical to ``rng::direct_bits`` in Rust."""
+    seed = jnp.asarray(seed, jnp.uint32)
+    i = jnp.asarray(i, jnp.uint32)
+    j = jnp.asarray(j, jnp.uint32)
+    h = fmix32(seed ^ jnp.uint32(_DIRECT_SALT) ^ (i * jnp.uint32(_MUL_I)))
+    return fmix32(h ^ (j * jnp.uint32(_MUL_J)))
+
+
+def direct_uniform(seed, i, j):
+    """Uniform f32 in the open interval (0, 1): ((bits>>9)+0.5) * 2^-23."""
+    bits = direct_bits(seed, i, j)
+    return ((bits >> 9).astype(jnp.float32) + jnp.float32(0.5)) * jnp.float32(
+        1.0 / 8388608.0
+    )
+
+
+def direct_exp(seed, i, j):
+    """EXP(1) draw for cell (i, j): -ln(U), strictly positive and finite."""
+    return -jnp.log(direct_uniform(seed, i, j))
+
+
+def gumbel_sketch_ref_k(seed, v, k):
+    """Dense Gumbel-Max sketch oracle: y_j = min_i -ln(a_ij)/v_i over the
+    positive entries; s_j the argmin (0 when the whole row is empty).
+
+    v: [B, N] f32. Returns (y [B,k] f32, s [B,k] int32).
+    """
+    seed = jnp.asarray(seed, jnp.uint32).reshape(()).astype(jnp.uint32)
+    b, n = v.shape
+    i = jnp.arange(n, dtype=jnp.uint32)[:, None]
+    j = jnp.arange(k, dtype=jnp.uint32)[None, :]
+    e = direct_exp(seed, i, j)  # [N, K]
+    cand = jnp.where(
+        v[:, :, None] > 0, e[None, :, :] / v[:, :, None], jnp.float32(jnp.inf)
+    )  # [B, N, K]
+    y = cand.min(axis=1)
+    s = cand.argmin(axis=1).astype(jnp.int32)
+    return y, s
+
+
+def sim_matrix_ref(sq, sc):
+    """Mean register-equality matrix: out[q, c] = (1/K) Σ_j [sq[q,j]==sc[c,j]].
+
+    sq: [Q, K] int32, sc: [C, K] int32. Returns [Q, C] float32.
+    """
+    eq = (sq[:, None, :] == sc[None, :, :]).astype(jnp.float32)
+    return eq.mean(axis=2)

@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernel: sketch-equality similarity matrix.
+
+Given ArgMax signatures ``Sq [Q, K]`` and ``Sc [C, K]`` (int32 register
+ids), computes the probability-Jaccard estimate matrix
+
+    out[q, c] = (1/K) Σ_j [ Sq[q, j] == Sc[c, j] ]
+
+tiled like a matmul: grid over (Q/bq, C/bc) output tiles, reduction over K
+in bkc-sized chunks held in VMEM. Equality-compare + accumulate runs on the
+VPU; an MXU formulation would need n-wide one-hot expansions of register
+ids (infeasible for large id spaces) — the trade-off DESIGN.md
+§Hardware-Adaptation calls out.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sim_kernel(sq_ref, sc_ref, o_ref, *, bkc, k):
+    def body(c, acc):
+        j0 = c * bkc
+        a = sq_ref[:, pl.ds(j0, bkc)]  # [bq, bkc]
+        b = sc_ref[:, pl.ds(j0, bkc)]  # [bc, bkc]
+        eq = (a[:, None, :] == b[None, :, :]).astype(jnp.float32)
+        return acc + eq.sum(axis=2)
+
+    bq = sq_ref.shape[0]
+    bc = sc_ref.shape[0]
+    acc = jax.lax.fori_loop(0, k // bkc, body, jnp.zeros((bq, bc), jnp.float32))
+    o_ref[...] = acc * jnp.float32(1.0 / k)
+
+
+def pick_blocks(q, c, k):
+    def largest_div(x, cap):
+        d = min(x, cap)
+        while x % d:
+            d -= 1
+        return d
+
+    return largest_div(q, 16), largest_div(c, 128), largest_div(k, 128)
+
+
+def sim_matrix(sq, sc, *, interpret=True):
+    """Pairwise J_P estimates between two signature batches.
+
+    sq: [Q, K] int32, sc: [C, K] int32 → [Q, C] float32.
+    """
+    q, k = sq.shape
+    c, k2 = sc.shape
+    assert k == k2, f"signature lengths differ: {k} vs {k2}"
+    bq, bc, bkc = pick_blocks(q, c, k)
+    kernel = functools.partial(_sim_kernel, bkc=bkc, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(q // bq, c // bc),
+        in_specs=[
+            pl.BlockSpec((bq, k), lambda qi, ci: (qi, 0)),
+            pl.BlockSpec((bc, k), lambda qi, ci: (ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bc), lambda qi, ci: (qi, ci)),
+        out_shape=jax.ShapeDtypeStruct((q, c), jnp.float32),
+        interpret=interpret,
+    )(sq, sc)

@@ -1,0 +1,62 @@
+"""Layer-2 JAX model: the compute graphs the coordinator AOT-loads.
+
+Three graphs, each lowered to HLO text by ``compile/aot.py``:
+
+* ``dense_sketch``     — Pallas dense Gumbel-Max sketch (the accelerator
+                         path for dense, low-dimensional batches).
+* ``dense_sketch_xla`` — same computation as pure jnp (the materialize-
+                         everything baseline; the `ablation-accel`
+                         experiment compares the two).
+* ``sim_matrix``       — Pallas pairwise similarity of ArgMax signatures.
+* ``sketch_sim``       — fused end-to-end graph: sketch a query batch and a
+                         candidate batch, then score all pairs; shows the
+                         kernels composing inside one XLA module.
+
+All functions are shape-monomorphic at lowering time (PJRT AOT requires
+static shapes); the Rust runtime buckets/pads requests to the compiled
+shapes (see ``rust/src/runtime``).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gumbel_sketch import gumbel_sketch
+from .kernels.ref import gumbel_sketch_ref_k
+from .kernels.sim_matrix import sim_matrix as sim_matrix_kernel
+
+
+def dense_sketch(k):
+    """Returns fn(seed [1] u32, v [B,N] f32) -> (y [B,k] f32, s [B,k] i32)."""
+
+    def fn(seed, v):
+        return gumbel_sketch(seed, v, k)
+
+    return fn
+
+
+def dense_sketch_xla(k):
+    """Pure-XLA baseline of the same computation (no Pallas)."""
+
+    def fn(seed, v):
+        return gumbel_sketch_ref_k(seed, v, k)
+
+    return fn
+
+
+def sim_matrix(sq, sc):
+    """fn(sq [Q,K] i32, sc [C,K] i32) -> [Q,C] f32."""
+    return sim_matrix_kernel(sq, sc)
+
+
+def sketch_sim(k):
+    """Fused graph: sketch queries and candidates, then score all pairs.
+
+    fn(seed, vq [Q,N], vc [C,N]) -> (yq, sq, yc, sc, sim [Q,C])
+    """
+
+    def fn(seed, vq, vc):
+        yq, sq = gumbel_sketch(seed, vq, k)
+        yc, sc = gumbel_sketch(seed, vc, k)
+        sim = sim_matrix_kernel(sq, sc)
+        return yq, sq, yc, sc, sim
+
+    return fn

@@ -1,0 +1,123 @@
+//! Bounded admission control in front of the worker pool.
+//!
+//! Two policies, configured at startup (`server.shed` in the config):
+//! * **Block** — producers wait for queue space (lossless ingestion,
+//!   the right choice for the data-pipeline use).
+//! * **Shed** — over-capacity requests fail fast with an error response
+//!   (the serving posture: protect tail latency).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Block,
+    Shed,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum AdmitError {
+    #[error("queue full, request shed")]
+    Shed,
+    #[error("queue closed")]
+    Closed,
+}
+
+/// Sender side of the bounded queue.
+pub struct Admission<T> {
+    tx: SyncSender<T>,
+    policy: Policy,
+    shed: Arc<AtomicU64>,
+    admitted: Arc<AtomicU64>,
+}
+
+impl<T> Clone for Admission<T> {
+    fn clone(&self) -> Self {
+        Admission {
+            tx: self.tx.clone(),
+            policy: self.policy,
+            shed: self.shed.clone(),
+            admitted: self.admitted.clone(),
+        }
+    }
+}
+
+impl<T> Admission<T> {
+    pub fn submit(&self, item: T) -> Result<(), AdmitError> {
+        match self.policy {
+            Policy::Block => {
+                self.tx.send(item).map_err(|_| AdmitError::Closed)?;
+                self.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Policy::Shed => match self.tx.try_send(item) {
+                Ok(()) => {
+                    self.admitted.fetch_add(1, Ordering::Relaxed);
+                    Ok(())
+                }
+                Err(TrySendError::Full(_)) => {
+                    self.shed.fetch_add(1, Ordering::Relaxed);
+                    Err(AdmitError::Shed)
+                }
+                Err(TrySendError::Disconnected(_)) => Err(AdmitError::Closed),
+            },
+        }
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    pub fn admitted_count(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+}
+
+/// Build a bounded queue of `capacity` with the given policy.
+pub fn bounded<T>(capacity: usize, policy: Policy) -> (Admission<T>, Receiver<T>) {
+    let (tx, rx) = std::sync::mpsc::sync_channel(capacity);
+    (
+        Admission {
+            tx,
+            policy,
+            shed: Arc::new(AtomicU64::new(0)),
+            admitted: Arc::new(AtomicU64::new(0)),
+        },
+        rx,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shed_policy_drops_over_capacity() {
+        let (adm, _rx) = bounded::<u32>(2, Policy::Shed);
+        assert!(adm.submit(1).is_ok());
+        assert!(adm.submit(2).is_ok());
+        assert_eq!(adm.submit(3), Err(AdmitError::Shed));
+        assert_eq!(adm.shed_count(), 1);
+        assert_eq!(adm.admitted_count(), 2);
+    }
+
+    #[test]
+    fn block_policy_waits_for_space() {
+        let (adm, rx) = bounded::<u32>(1, Policy::Block);
+        adm.submit(1).unwrap();
+        let adm2 = adm.clone();
+        let h = std::thread::spawn(move || adm2.submit(2)); // blocks until recv
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 1);
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.recv().unwrap(), 2);
+    }
+
+    #[test]
+    fn closed_queue_reports_closed() {
+        let (adm, rx) = bounded::<u32>(1, Policy::Shed);
+        drop(rx);
+        assert_eq!(adm.submit(1), Err(AdmitError::Closed));
+    }
+}

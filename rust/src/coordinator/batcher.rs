@@ -1,0 +1,264 @@
+//! Dynamic batching for the dense accelerator path.
+//!
+//! Dense sketch requests queue here; a dedicated flush thread drains them
+//! when either `max_batch` rows are pending or `deadline` has elapsed since
+//! the oldest row arrived — the classic serving trade-off between device
+//! utilization and tail latency. If no accelerator is configured the
+//! batcher degrades to an immediate CPU P-MinHash path with identical
+//! (Direct-family) semantics, so callers never see the difference.
+
+use crate::runtime::accel::DenseSketchAccel;
+use crate::sketch::{pminhash::PMinHash, GumbelMaxSketch, Sketcher, SparseVector};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Pending {
+    weights: Vec<f64>,
+    reply: Sender<anyhow::Result<GumbelMaxSketch>>,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct Queue {
+    items: Vec<Pending>,
+    closed: bool,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub deadline: Duration,
+    pub k: usize,
+    pub seed: u32,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 8,
+            deadline: Duration::from_millis(2),
+            k: 256,
+            seed: 42,
+        }
+    }
+}
+
+pub struct DenseBatcher {
+    cfg: BatcherConfig,
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// Batches flushed (metric).
+    pub flushes: Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl DenseBatcher {
+    /// `artifacts_dir`: where to load the accelerator from. The PJRT
+    /// wrapper types are `!Send`, so the runtime is constructed *inside*
+    /// the flush thread; on load failure the batcher logs and serves the
+    /// CPU fallback.
+    pub fn new(cfg: BatcherConfig, artifacts_dir: Option<String>) -> DenseBatcher {
+        let queue = Arc::new((Mutex::new(Queue::default()), Condvar::new()));
+        let flushes = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let q2 = queue.clone();
+        let f2 = flushes.clone();
+        let handle = std::thread::Builder::new()
+            .name("fastgm-batcher".into())
+            .spawn(move || {
+                let accel = artifacts_dir.and_then(|dir| {
+                    match crate::runtime::Runtime::load(&dir).and_then(DenseSketchAccel::new) {
+                        Ok(a) => {
+                            log::info!(
+                                "accelerator online: buckets={:?}",
+                                a.buckets().iter().map(|b| (b.b, b.n, b.k)).collect::<Vec<_>>()
+                            );
+                            Some(a)
+                        }
+                        Err(e) => {
+                            log::warn!("accelerator disabled: {e}");
+                            None
+                        }
+                    }
+                });
+                flush_loop(cfg, q2, accel, f2)
+            })
+            .expect("spawn batcher");
+        DenseBatcher { cfg, queue, handle: Some(handle), flushes }
+    }
+
+    /// Enqueue a dense row; the receiver resolves when its batch flushes.
+    pub fn submit(&self, weights: Vec<f64>) -> Receiver<anyhow::Result<GumbelMaxSketch>> {
+        let (tx, rx) = channel();
+        let (lock, cv) = &*self.queue;
+        let mut q = lock.lock().unwrap();
+        q.items.push(Pending { weights, reply: tx, enqueued: Instant::now() });
+        cv.notify_one();
+        rx
+    }
+
+    pub fn k(&self) -> usize {
+        self.cfg.k
+    }
+
+    pub fn shutdown(mut self) {
+        {
+            let (lock, cv) = &*self.queue;
+            lock.lock().unwrap().closed = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn flush_loop(
+    cfg: BatcherConfig,
+    queue: Arc<(Mutex<Queue>, Condvar)>,
+    accel: Option<DenseSketchAccel>,
+    flushes: Arc<std::sync::atomic::AtomicU64>,
+) {
+    let (lock, cv) = &*queue;
+    loop {
+        let batch: Vec<Pending> = {
+            let mut q = lock.lock().unwrap();
+            loop {
+                if q.closed && q.items.is_empty() {
+                    return;
+                }
+                if q.items.len() >= cfg.max_batch {
+                    break;
+                }
+                if let Some(oldest) = q.items.first().map(|p| p.enqueued) {
+                    let age = oldest.elapsed();
+                    if age >= cfg.deadline || q.closed {
+                        break;
+                    }
+                    let (guard, _timeout) = cv.wait_timeout(q, cfg.deadline - age).unwrap();
+                    q = guard;
+                } else {
+                    q = cv.wait(q).unwrap();
+                }
+            }
+            let take = q.items.len().min(cfg.max_batch);
+            q.items.drain(..take).collect()
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        flushes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        run_batch(&cfg, &accel, batch);
+    }
+}
+
+fn run_batch(cfg: &BatcherConfig, accel: &Option<DenseSketchAccel>, batch: Vec<Pending>) {
+    // Try the accelerator for the whole batch; on any failure (no bucket,
+    // runtime error) fall back to the CPU Direct-family path per row.
+    if let Some(acc) = accel {
+        let rows: Vec<Vec<f64>> = batch.iter().map(|p| p.weights.clone()).collect();
+        match acc.sketch_batch(cfg.seed, &rows, cfg.k) {
+            Ok(sketches) => {
+                for (p, sk) in batch.into_iter().zip(sketches) {
+                    let _ = p.reply.send(Ok(sk));
+                }
+                return;
+            }
+            Err(e) => {
+                log::debug!("accelerator batch failed ({e}); CPU fallback");
+            }
+        }
+    }
+    let cpu = PMinHash::new(cfg.k, cfg.seed);
+    for p in batch {
+        let sk = cpu.sketch(&SparseVector::from_dense(&p.weights));
+        let _ = p.reply.send(Ok(sk));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn rows(n: usize, len: usize) -> Vec<Vec<f64>> {
+        let mut r = SplitMix64::new(1);
+        (0..n)
+            .map(|_| (0..len).map(|_| if r.next_f64() < 0.3 { 0.0 } else { r.next_f64() }).collect())
+            .collect()
+    }
+
+    #[test]
+    fn cpu_fallback_matches_pminhash() {
+        let b = DenseBatcher::new(
+            BatcherConfig { max_batch: 4, deadline: Duration::from_millis(1), k: 64, seed: 9 },
+            None,
+        );
+        let data = rows(6, 100);
+        let rxs: Vec<_> = data.iter().map(|r| b.submit(r.clone())).collect();
+        let cpu = PMinHash::new(64, 9);
+        for (row, rx) in data.iter().zip(rxs) {
+            let got = rx.recv().unwrap().unwrap();
+            let want = cpu.sketch(&SparseVector::from_dense(row));
+            assert_eq!(got, want);
+        }
+        assert!(b.flushes.load(std::sync::atomic::Ordering::Relaxed) >= 2);
+        b.shutdown();
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batches() {
+        let b = DenseBatcher::new(
+            BatcherConfig {
+                max_batch: 1000,
+                deadline: Duration::from_millis(5),
+                k: 16,
+                seed: 1,
+            },
+            None,
+        );
+        let rx = b.submit(vec![1.0, 2.0]);
+        // Must resolve well before a full batch accumulates.
+        let got = rx.recv_timeout(Duration::from_millis(500)).unwrap().unwrap();
+        assert_eq!(got.k(), 16);
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let b = DenseBatcher::new(
+            BatcherConfig {
+                max_batch: 100,
+                deadline: Duration::from_secs(10), // long: rely on shutdown
+                k: 8,
+                seed: 1,
+            },
+            None,
+        );
+        let rx = b.submit(vec![0.5]);
+        b.shutdown();
+        assert!(rx.recv().unwrap().is_ok(), "pending item must still resolve");
+    }
+
+    #[test]
+    fn accelerated_path_if_artifacts_present() {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping accel batcher test: artifacts not built");
+            return;
+        }
+        let b = DenseBatcher::new(
+            BatcherConfig { max_batch: 8, deadline: Duration::from_millis(2), k: 256, seed: 3 },
+            Some(dir.to_string()),
+        );
+        let data = rows(10, 512);
+        let rxs: Vec<_> = data.iter().map(|r| b.submit(r.clone())).collect();
+        let cpu = PMinHash::new(256, 3);
+        for (row, rx) in data.iter().zip(rxs) {
+            let got = rx.recv().unwrap().unwrap();
+            let want = cpu.sketch(&SparseVector::from_dense(row));
+            let mism = (0..256).filter(|&j| want.s[j] != got.s[j]).count();
+            assert!(mism <= 3, "{mism}/256 registers disagree");
+        }
+        b.shutdown();
+    }
+}

@@ -1,0 +1,86 @@
+//! Blocking TCP client for the JSON-lines protocol — used by the CLI
+//! (`fastgm client`), the examples and the load generator in
+//! `examples/serve_e2e.rs`.
+
+use super::protocol::{self, Request, Response};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("cannot connect to '{addr}': {e}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    /// Send one request and wait for its response line.
+    pub fn call(&mut self, req: &Request) -> anyhow::Result<Response> {
+        let line = protocol::encode_line(&req.to_json());
+        self.writer.write_all(line.as_bytes())?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        protocol::decode_response(&reply)
+    }
+
+    /// Pipeline many requests, then collect all responses (cuts RTT for
+    /// bulk ingestion).
+    pub fn call_pipelined(&mut self, reqs: &[Request]) -> anyhow::Result<Vec<Response>> {
+        let mut buf = String::new();
+        for r in reqs {
+            buf.push_str(&protocol::encode_line(&r.to_json()));
+        }
+        self.writer.write_all(buf.as_bytes())?;
+        let mut out = Vec::with_capacity(reqs.len());
+        for _ in reqs {
+            let mut reply = String::new();
+            let n = self.reader.read_line(&mut reply)?;
+            anyhow::ensure!(n > 0, "server closed mid-pipeline");
+            out.push(protocol::decode_response(&reply)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::Server;
+    use crate::coordinator::service::{Coordinator, CoordinatorConfig};
+    use std::sync::Arc;
+
+    #[test]
+    fn pipelined_requests_preserve_order() {
+        let coord = Arc::new(
+            Coordinator::new(CoordinatorConfig { k: 32, workers: 2, ..Default::default() })
+                .unwrap(),
+        );
+        let server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let reqs: Vec<Request> = (0..10u64)
+            .map(|i| Request::Push { stream: "p".into(), items: vec![(i, 1.0)] })
+            .collect();
+        let resps = client.call_pipelined(&reqs).unwrap();
+        assert_eq!(resps.len(), 10);
+        for (i, r) in resps.iter().enumerate() {
+            let Response::Ack { info } = r else { panic!("expected ack") };
+            assert!(
+                info.contains(&format!("processed {}", i + 1)),
+                "response {i} out of order: {info}"
+            );
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn connect_failure_is_clean_error() {
+        assert!(Client::connect("127.0.0.1:1").is_err());
+    }
+}

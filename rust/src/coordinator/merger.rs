@@ -1,0 +1,75 @@
+//! Distributed-site sketch merging (§2.3): a balanced binary merge tree
+//! over per-site sketches. Merging is associative/commutative, so the tree
+//! shape only affects parallelism; the parallel variant splits across
+//! threads for large fan-in (the central-site role in the paper's
+//! weighted-cardinality setting).
+
+use crate::sketch::{GumbelMaxSketch, MergeError};
+
+/// Sequential fold (small fan-in).
+pub fn merge_sequential(sketches: &[GumbelMaxSketch]) -> Result<GumbelMaxSketch, MergeError> {
+    assert!(!sketches.is_empty());
+    GumbelMaxSketch::merge_all(sketches.iter())
+}
+
+/// Balanced-tree merge, splitting across `threads` for wide fan-in.
+pub fn merge_tree(
+    sketches: &[GumbelMaxSketch],
+    threads: usize,
+) -> Result<GumbelMaxSketch, MergeError> {
+    assert!(!sketches.is_empty());
+    if sketches.len() < 4 || threads <= 1 {
+        return merge_sequential(sketches);
+    }
+    let chunk = sketches.len().div_ceil(threads);
+    let partials: Vec<Result<GumbelMaxSketch, MergeError>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = sketches
+            .chunks(chunk)
+            .map(|c| scope.spawn(move || merge_sequential(c)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("merge thread")).collect()
+    });
+    let partials: Result<Vec<GumbelMaxSketch>, MergeError> = partials.into_iter().collect();
+    merge_sequential(&partials?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::lemiesz::LemieszSketch;
+    use crate::estimate::cardinality::estimate_cardinality;
+
+    fn site_sketch(k: usize, seed: u32, ids: std::ops::Range<u64>) -> GumbelMaxSketch {
+        let mut s = LemieszSketch::new(k, seed);
+        for id in ids {
+            s.push(id, 1.0);
+        }
+        s.sketch()
+    }
+
+    #[test]
+    fn tree_equals_sequential_equals_union() {
+        let k = 128;
+        let sites: Vec<GumbelMaxSketch> =
+            (0..10).map(|i| site_sketch(k, 5, (i * 100)..(i * 100 + 150))).collect();
+        let seq = merge_sequential(&sites).unwrap();
+        let tree = merge_tree(&sites, 4).unwrap();
+        assert_eq!(seq, tree);
+        // Union set is 0..1050 (overlapping ranges), estimate tracks it.
+        let est = estimate_cardinality(&tree);
+        assert!((est - 1050.0).abs() / 1050.0 < 0.2, "est={est}");
+    }
+
+    #[test]
+    fn merge_rejects_mixed_seeds() {
+        let a = site_sketch(16, 1, 0..10);
+        let b = site_sketch(16, 2, 0..10);
+        assert!(merge_tree(&[a, b], 2).is_err());
+    }
+
+    #[test]
+    fn single_site_is_identity() {
+        let a = site_sketch(16, 1, 0..10);
+        assert_eq!(merge_tree(std::slice::from_ref(&a), 8).unwrap(), a);
+    }
+}

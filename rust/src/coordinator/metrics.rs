@@ -1,0 +1,178 @@
+//! Service metrics: lock-free counters and log₂-bucketed latency
+//! histograms per operation, snapshotted to JSON for the `metrics` op and
+//! the end-to-end examples' reports.
+
+use crate::util::json::Value;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Latency histogram with power-of-two microsecond buckets (1µs … ~17min).
+#[derive(Debug, Default)]
+pub struct LatencyHist {
+    buckets: [AtomicU64; 31],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHist {
+    pub fn record(&self, seconds: f64) {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(30);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from the bucket boundaries (upper edge).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        (1u64 << 31) as f64
+    }
+}
+
+/// Global metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<HashMap<String, u64>>,
+    latencies: Mutex<HashMap<String, std::sync::Arc<LatencyHist>>>,
+    started: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics {
+            counters: Mutex::new(HashMap::new()),
+            latencies: Mutex::new(HashMap::new()),
+            started: Some(Instant::now()),
+        }
+    }
+
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, delta: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn hist(&self, name: &str) -> std::sync::Arc<LatencyHist> {
+        self.latencies
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Record an operation's latency and bump its counter.
+    pub fn observe(&self, op: &str, seconds: f64) {
+        self.incr(&format!("ops.{op}"));
+        self.hist(&format!("latency.{op}")).record(seconds);
+    }
+
+    pub fn snapshot(&self) -> Value {
+        let counters = self.counters.lock().unwrap();
+        let mut items: Vec<(String, Value)> = counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Value::num(*v as f64)))
+            .collect();
+        items.sort_by(|a, b| a.0.cmp(&b.0));
+        let lat = self.latencies.lock().unwrap();
+        let mut lat_items: Vec<(String, Value)> = lat
+            .iter()
+            .map(|(k, h)| {
+                (
+                    k.clone(),
+                    Value::obj(vec![
+                        ("count", Value::num(h.count() as f64)),
+                        ("mean_us", Value::num(h.mean_us())),
+                        ("p50_us", Value::num(h.quantile_us(0.5))),
+                        ("p99_us", Value::num(h.quantile_us(0.99))),
+                    ]),
+                )
+            })
+            .collect();
+        lat_items.sort_by(|a, b| a.0.cmp(&b.0));
+        Value::obj(vec![
+            (
+                "uptime_s",
+                Value::num(self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)),
+            ),
+            ("counters", Value::Obj(items)),
+            ("latency", Value::Obj(lat_items)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.incr("a");
+        m.add("b", 5);
+        assert_eq!(m.counter("a"), 2);
+        assert_eq!(m.counter("b"), 5);
+        assert_eq!(m.counter("zzz"), 0);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_monotone() {
+        let h = LatencyHist::default();
+        for us in [1.0, 10.0, 100.0, 1000.0, 10_000.0] {
+            for _ in 0..100 {
+                h.record(us / 1e6);
+            }
+        }
+        assert_eq!(h.count(), 500);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.9));
+        assert!(h.quantile_us(0.9) <= h.quantile_us(0.999));
+        assert!(h.mean_us() > 1.0);
+    }
+
+    #[test]
+    fn snapshot_is_json_object() {
+        let m = Metrics::new();
+        m.observe("sketch", 0.001);
+        let v = m.snapshot();
+        assert!(v.get("counters").unwrap().get("ops.sketch").is_some());
+        let lat = v.get("latency").unwrap().get("latency.sketch").unwrap();
+        assert_eq!(lat.get("count").unwrap().as_f64(), Some(1.0));
+        // Round-trips through text.
+        let text = v.to_string();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+}

@@ -1,0 +1,31 @@
+//! The serving coordinator — Layer 3 of the stack.
+//!
+//! A request-path framework in the shape of a sketching analytics service:
+//!
+//! * [`protocol`] — JSON-lines wire requests/responses.
+//! * [`service`] — the [`service::Coordinator`]: routes sparse vectors to
+//!   CPU FastGM workers, dense batches to the AOT accelerator, streams to
+//!   Stream-FastGM states; owns the sketch registry and LSH index.
+//! * [`router`] — the sparse/dense/stream routing decision.
+//! * [`worker`] — the CPU worker pool (std threads + shared queue).
+//! * [`batcher`] — size/deadline dynamic batching for the accelerator.
+//! * [`backpressure`] — bounded admission queue with shed-or-block policy.
+//! * [`registry`] — named sketch & stream state store.
+//! * [`merger`] — distributed-site sketch merge (§2.3 mergeability).
+//! * [`metrics`] — counters + latency histograms, surfaced over the wire.
+//! * [`server`] / [`client`] — TCP JSON-lines transport.
+//!
+//! Python never appears here: the accelerator path executes AOT-compiled
+//! HLO through [`crate::runtime`].
+
+pub mod protocol;
+pub mod metrics;
+pub mod backpressure;
+pub mod registry;
+pub mod router;
+pub mod worker;
+pub mod batcher;
+pub mod merger;
+pub mod service;
+pub mod server;
+pub mod client;

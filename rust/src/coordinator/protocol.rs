@@ -1,0 +1,388 @@
+//! Wire protocol: newline-delimited JSON objects with an `"op"` tag.
+//!
+//! Every request/response round-trips through [`crate::util::json`]; the
+//! encoding tests below lock the format (it is also what
+//! `examples/serve_e2e.rs` and the Python-free CLI client speak).
+
+use crate::sketch::{GumbelMaxSketch, SparseVector};
+use crate::util::json::{self, Value};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Sketch a sparse vector with FastGM (Ordered family) and store it.
+    Sketch { name: String, vector: SparseVector },
+    /// Sketch a dense row — router may batch it onto the accelerator
+    /// (Direct family).
+    SketchDense { name: String, weights: Vec<f64> },
+    /// Fetch a stored sketch.
+    GetSketch { name: String },
+    /// Push stream elements into a named Stream-FastGM state.
+    Push { stream: String, items: Vec<(u64, f64)> },
+    /// Weighted cardinality estimate of a stream.
+    Cardinality { stream: String },
+    /// Probability-Jaccard estimate between two stored sketches.
+    Jaccard { a: String, b: String },
+    /// Weighted-Jaccard estimate via cardinality algebra.
+    WeightedJaccard { a: String, b: String },
+    /// Merge stored sketches (distributed sites, §2.3) into `out`.
+    Merge { names: Vec<String>, out: String },
+    /// Insert a stored sketch into the LSH index.
+    LshInsert { name: String },
+    /// Query the LSH index with a fresh vector.
+    LshQuery { vector: SparseVector, limit: usize },
+    /// Metrics snapshot.
+    Metrics,
+    Ping,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Sketch { name: String, sketch: GumbelMaxSketch },
+    Ack { info: String },
+    Estimate { value: f64 },
+    TopK { hits: Vec<(String, f64)> },
+    MetricsDump { snapshot: Value },
+    Error { message: String },
+    Pong,
+}
+
+fn vector_to_json(v: &SparseVector) -> Value {
+    Value::obj(vec![
+        ("ids", Value::arr_u64(&v.ids)),
+        ("weights", Value::arr_f64(&v.weights)),
+    ])
+}
+
+fn vector_from_json(v: &Value) -> anyhow::Result<SparseVector> {
+    let ids = v
+        .req("ids")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("ids not an array"))?
+        .iter()
+        .map(|x| x.as_u64_lossless().ok_or_else(|| anyhow::anyhow!("bad id")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let weights = v
+        .req("weights")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("weights not an array"))?
+        .iter()
+        .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("bad weight")))
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    anyhow::ensure!(ids.len() == weights.len(), "ids/weights length mismatch");
+    Ok(SparseVector::new(ids, weights))
+}
+
+impl Request {
+    pub fn to_json(&self) -> Value {
+        match self {
+            Request::Sketch { name, vector } => Value::obj(vec![
+                ("op", Value::str("sketch")),
+                ("name", Value::str(name.clone())),
+                ("vector", vector_to_json(vector)),
+            ]),
+            Request::SketchDense { name, weights } => Value::obj(vec![
+                ("op", Value::str("sketch_dense")),
+                ("name", Value::str(name.clone())),
+                ("weights", Value::arr_f64(weights)),
+            ]),
+            Request::GetSketch { name } => Value::obj(vec![
+                ("op", Value::str("get_sketch")),
+                ("name", Value::str(name.clone())),
+            ]),
+            Request::Push { stream, items } => Value::obj(vec![
+                ("op", Value::str("push")),
+                ("stream", Value::str(stream.clone())),
+                (
+                    "items",
+                    Value::Arr(
+                        items
+                            .iter()
+                            .map(|(id, w)| {
+                                Value::Arr(vec![Value::u64(*id), Value::num(*w)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Request::Cardinality { stream } => Value::obj(vec![
+                ("op", Value::str("cardinality")),
+                ("stream", Value::str(stream.clone())),
+            ]),
+            Request::Jaccard { a, b } => Value::obj(vec![
+                ("op", Value::str("jaccard")),
+                ("a", Value::str(a.clone())),
+                ("b", Value::str(b.clone())),
+            ]),
+            Request::WeightedJaccard { a, b } => Value::obj(vec![
+                ("op", Value::str("weighted_jaccard")),
+                ("a", Value::str(a.clone())),
+                ("b", Value::str(b.clone())),
+            ]),
+            Request::Merge { names, out } => Value::obj(vec![
+                ("op", Value::str("merge")),
+                (
+                    "names",
+                    Value::Arr(names.iter().map(|n| Value::str(n.clone())).collect()),
+                ),
+                ("out", Value::str(out.clone())),
+            ]),
+            Request::LshInsert { name } => Value::obj(vec![
+                ("op", Value::str("lsh_insert")),
+                ("name", Value::str(name.clone())),
+            ]),
+            Request::LshQuery { vector, limit } => Value::obj(vec![
+                ("op", Value::str("lsh_query")),
+                ("vector", vector_to_json(vector)),
+                ("limit", Value::num(*limit as f64)),
+            ]),
+            Request::Metrics => Value::obj(vec![("op", Value::str("metrics"))]),
+            Request::Ping => Value::obj(vec![("op", Value::str("ping"))]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Request> {
+        Ok(match v.req_str("op")? {
+            "sketch" => Request::Sketch {
+                name: v.req_str("name")?.to_string(),
+                vector: vector_from_json(v.req("vector")?)?,
+            },
+            "sketch_dense" => Request::SketchDense {
+                name: v.req_str("name")?.to_string(),
+                weights: v
+                    .req("weights")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("weights not an array"))?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("bad weight")))
+                    .collect::<anyhow::Result<_>>()?,
+            },
+            "get_sketch" => Request::GetSketch { name: v.req_str("name")?.to_string() },
+            "push" => Request::Push {
+                stream: v.req_str("stream")?.to_string(),
+                items: v
+                    .req("items")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("items not an array"))?
+                    .iter()
+                    .map(|pair| {
+                        let id = pair
+                            .idx(0)
+                            .and_then(|x| x.as_u64_lossless())
+                            .ok_or_else(|| anyhow::anyhow!("bad item id"))?;
+                        let w = pair
+                            .idx(1)
+                            .and_then(|x| x.as_f64())
+                            .ok_or_else(|| anyhow::anyhow!("bad item weight"))?;
+                        Ok((id, w))
+                    })
+                    .collect::<anyhow::Result<_>>()?,
+            },
+            "cardinality" => Request::Cardinality { stream: v.req_str("stream")?.to_string() },
+            "jaccard" => Request::Jaccard {
+                a: v.req_str("a")?.to_string(),
+                b: v.req_str("b")?.to_string(),
+            },
+            "weighted_jaccard" => Request::WeightedJaccard {
+                a: v.req_str("a")?.to_string(),
+                b: v.req_str("b")?.to_string(),
+            },
+            "merge" => Request::Merge {
+                names: v
+                    .req("names")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("names not an array"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow::anyhow!("bad name"))
+                    })
+                    .collect::<anyhow::Result<_>>()?,
+                out: v.req_str("out")?.to_string(),
+            },
+            "lsh_insert" => Request::LshInsert { name: v.req_str("name")?.to_string() },
+            "lsh_query" => Request::LshQuery {
+                vector: vector_from_json(v.req("vector")?)?,
+                limit: v.req_usize("limit")?,
+            },
+            "metrics" => Request::Metrics,
+            "ping" => Request::Ping,
+            other => anyhow::bail!("unknown op '{other}'"),
+        })
+    }
+
+    /// Op tag (metrics label).
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Sketch { .. } => "sketch",
+            Request::SketchDense { .. } => "sketch_dense",
+            Request::GetSketch { .. } => "get_sketch",
+            Request::Push { .. } => "push",
+            Request::Cardinality { .. } => "cardinality",
+            Request::Jaccard { .. } => "jaccard",
+            Request::WeightedJaccard { .. } => "weighted_jaccard",
+            Request::Merge { .. } => "merge",
+            Request::LshInsert { .. } => "lsh_insert",
+            Request::LshQuery { .. } => "lsh_query",
+            Request::Metrics => "metrics",
+            Request::Ping => "ping",
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Value {
+        match self {
+            Response::Sketch { name, sketch } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("sketch")),
+                ("name", Value::str(name.clone())),
+                ("sketch", sketch.to_json()),
+            ]),
+            Response::Ack { info } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("ack")),
+                ("info", Value::str(info.clone())),
+            ]),
+            Response::Estimate { value } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("estimate")),
+                ("value", Value::num(*value)),
+            ]),
+            Response::TopK { hits } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("topk")),
+                (
+                    "hits",
+                    Value::Arr(
+                        hits.iter()
+                            .map(|(n, s)| {
+                                Value::Arr(vec![Value::str(n.clone()), Value::num(*s)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Response::MetricsDump { snapshot } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("metrics")),
+                ("snapshot", snapshot.clone()),
+            ]),
+            Response::Error { message } => Value::obj(vec![
+                ("ok", Value::Bool(false)),
+                ("type", Value::str("error")),
+                ("message", Value::str(message.clone())),
+            ]),
+            Response::Pong => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("pong")),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Response> {
+        Ok(match v.req_str("type")? {
+            "sketch" => Response::Sketch {
+                name: v.req_str("name")?.to_string(),
+                sketch: GumbelMaxSketch::from_json(v.req("sketch")?)?,
+            },
+            "ack" => Response::Ack { info: v.req_str("info")?.to_string() },
+            "estimate" => Response::Estimate { value: v.req_f64("value")? },
+            "topk" => Response::TopK {
+                hits: v
+                    .req("hits")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("hits not an array"))?
+                    .iter()
+                    .map(|pair| {
+                        let n = pair
+                            .idx(0)
+                            .and_then(|x| x.as_str())
+                            .ok_or_else(|| anyhow::anyhow!("bad hit name"))?;
+                        let s = pair
+                            .idx(1)
+                            .and_then(|x| x.as_f64())
+                            .ok_or_else(|| anyhow::anyhow!("bad hit score"))?;
+                        Ok((n.to_string(), s))
+                    })
+                    .collect::<anyhow::Result<_>>()?,
+            },
+            "metrics" => Response::MetricsDump { snapshot: v.req("snapshot")?.clone() },
+            "error" => Response::Error { message: v.req_str("message")?.to_string() },
+            "pong" => Response::Pong,
+            other => anyhow::bail!("unknown response type '{other}'"),
+        })
+    }
+
+    pub fn err(msg: impl std::fmt::Display) -> Response {
+        Response::Error { message: msg.to_string() }
+    }
+}
+
+/// Encode as one wire line.
+pub fn encode_line(v: &Value) -> String {
+    format!("{v}\n")
+}
+
+pub fn decode_request(line: &str) -> anyhow::Result<Request> {
+    Request::from_json(&json::parse(line.trim())?)
+}
+
+pub fn decode_response(line: &str) -> anyhow::Result<Response> {
+    Response::from_json(&json::parse(line.trim())?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::Family;
+
+    fn roundtrip_req(r: Request) {
+        let line = encode_line(&r.to_json());
+        let back = decode_request(&line).unwrap();
+        assert_eq!(r, back, "request roundtrip failed for {line}");
+    }
+
+    fn roundtrip_resp(r: Response) {
+        let line = encode_line(&r.to_json());
+        let back = decode_response(&line).unwrap();
+        assert_eq!(r, back, "response roundtrip failed for {line}");
+    }
+
+    #[test]
+    fn all_requests_roundtrip() {
+        let v = SparseVector::new(vec![1, 5], vec![0.5, 2.0]);
+        roundtrip_req(Request::Sketch { name: "doc1".into(), vector: v.clone() });
+        roundtrip_req(Request::SketchDense { name: "d".into(), weights: vec![0.0, 1.5] });
+        roundtrip_req(Request::GetSketch { name: "doc1".into() });
+        roundtrip_req(Request::Push { stream: "s".into(), items: vec![(3, 0.5), (9, 1.0)] });
+        roundtrip_req(Request::Cardinality { stream: "s".into() });
+        roundtrip_req(Request::Jaccard { a: "x".into(), b: "y".into() });
+        roundtrip_req(Request::WeightedJaccard { a: "x".into(), b: "y".into() });
+        roundtrip_req(Request::Merge { names: vec!["a".into(), "b".into()], out: "u".into() });
+        roundtrip_req(Request::LshInsert { name: "doc1".into() });
+        roundtrip_req(Request::LshQuery { vector: v, limit: 10 });
+        roundtrip_req(Request::Metrics);
+        roundtrip_req(Request::Ping);
+    }
+
+    #[test]
+    fn all_responses_roundtrip() {
+        let mut sk = GumbelMaxSketch::empty(Family::Ordered, 7, 4);
+        sk.y[2] = 0.125;
+        sk.s[2] = 42;
+        roundtrip_resp(Response::Sketch { name: "doc1".into(), sketch: sk });
+        roundtrip_resp(Response::Ack { info: "stored".into() });
+        roundtrip_resp(Response::Estimate { value: 3.5 });
+        roundtrip_resp(Response::TopK { hits: vec![("a".into(), 0.9), ("b".into(), 0.5)] });
+        roundtrip_resp(Response::Error { message: "nope".into() });
+        roundtrip_resp(Response::Pong);
+    }
+
+    #[test]
+    fn rejects_unknown_ops() {
+        assert!(decode_request(r#"{"op":"explode"}"#).is_err());
+        assert!(decode_request("not json").is_err());
+        assert!(decode_request(r#"{"op":"sketch"}"#).is_err()); // missing fields
+    }
+}

@@ -1,0 +1,106 @@
+//! Named state store: sketches (by name) and live Stream-FastGM states.
+//! Shared across workers behind RwLocks; sketch computation happens outside
+//! the lock — only the store/fetch is serialized.
+
+use crate::sketch::stream_fastgm::StreamFastGm;
+use crate::sketch::GumbelMaxSketch;
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+#[derive(Default)]
+pub struct Registry {
+    sketches: RwLock<HashMap<String, GumbelMaxSketch>>,
+    streams: RwLock<HashMap<String, StreamFastGm>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    pub fn put_sketch(&self, name: &str, sk: GumbelMaxSketch) {
+        self.sketches.write().unwrap().insert(name.to_string(), sk);
+    }
+
+    pub fn get_sketch(&self, name: &str) -> Option<GumbelMaxSketch> {
+        self.sketches.read().unwrap().get(name).cloned()
+    }
+
+    pub fn sketch_count(&self) -> usize {
+        self.sketches.read().unwrap().len()
+    }
+
+    /// Push items into a stream, creating it with (k, seed) on first touch.
+    pub fn stream_push(&self, name: &str, k: usize, seed: u64, items: &[(u64, f64)]) -> u64 {
+        let mut streams = self.streams.write().unwrap();
+        let st = streams
+            .entry(name.to_string())
+            .or_insert_with(|| StreamFastGm::new(k, seed));
+        for &(id, w) in items {
+            st.push(id, w);
+        }
+        st.processed
+    }
+
+    pub fn stream_sketch(&self, name: &str) -> Option<GumbelMaxSketch> {
+        self.streams.read().unwrap().get(name).map(|s| s.sketch())
+    }
+
+    pub fn stream_count(&self) -> usize {
+        self.streams.read().unwrap().len()
+    }
+
+    /// Run `f` over every stored (name, sketch) pair (read lock held).
+    pub fn for_each_sketch(&self, mut f: impl FnMut(&str, &GumbelMaxSketch)) {
+        for (n, s) in self.sketches.read().unwrap().iter() {
+            f(n, s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::Family;
+
+    #[test]
+    fn sketch_store_roundtrip() {
+        let r = Registry::new();
+        assert!(r.get_sketch("x").is_none());
+        r.put_sketch("x", GumbelMaxSketch::empty(Family::Ordered, 1, 4));
+        assert_eq!(r.get_sketch("x").unwrap().k(), 4);
+        assert_eq!(r.sketch_count(), 1);
+    }
+
+    #[test]
+    fn stream_state_persists_across_pushes() {
+        let r = Registry::new();
+        let n1 = r.stream_push("s", 16, 7, &[(1, 0.5)]);
+        let n2 = r.stream_push("s", 16, 7, &[(2, 1.0), (3, 0.25)]);
+        assert_eq!(n1, 1);
+        assert_eq!(n2, 3);
+        assert_eq!(r.stream_count(), 1);
+        let sk = r.stream_sketch("s").unwrap();
+        assert!(sk.y.iter().any(|y| y.is_finite()));
+    }
+
+    #[test]
+    fn concurrent_pushes_do_not_lose_updates() {
+        let r = std::sync::Arc::new(Registry::new());
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100u64 {
+                    r.stream_push("shared", 32, 1, &[(t * 1000 + i, 1.0)]);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // processed counts all pushes.
+        let streams = r.streams.read().unwrap();
+        assert_eq!(streams.get("shared").unwrap().processed, 400);
+    }
+}

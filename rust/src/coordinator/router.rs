@@ -1,0 +1,111 @@
+//! Routing policy: which execution path serves a sketch request.
+//!
+//! The paper's algorithm is a CPU win for sparse, high-dimensional vectors;
+//! the AOT accelerator wins for dense low-dimensional batches (the
+//! `ablation-accel` experiment quantifies the crossover). The router makes
+//! that call per request from (a) the dense length limit the compiled
+//! buckets accept and (b) a density heuristic for sparse inputs that
+//! happen to be dense-representable.
+
+use crate::sketch::SparseVector;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    /// CPU FastGM (Ordered family): the paper's algorithm.
+    CpuFastGm,
+    /// Dense accelerator via the batcher (Direct family).
+    Accelerator,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Largest dense length any compiled bucket accepts (0 = accel off).
+    pub accel_max_len: usize,
+    /// Minimum fill fraction for a sparse vector to be worth densifying.
+    pub min_density: f64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { accel_max_len: 0, min_density: 0.25 }
+    }
+}
+
+pub struct Router {
+    pub cfg: RouterConfig,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        Router { cfg }
+    }
+
+    /// Route an explicitly dense request (weights indexed 0..len).
+    pub fn route_dense(&self, len: usize) -> Path {
+        if self.cfg.accel_max_len >= len && len > 0 {
+            Path::Accelerator
+        } else {
+            Path::CpuFastGm
+        }
+    }
+
+    /// Route a sparse vector: densify only when the id space is small
+    /// enough for a bucket AND the vector is dense enough that padding
+    /// waste stays bounded.
+    pub fn route_sparse(&self, v: &SparseVector) -> Path {
+        if self.cfg.accel_max_len == 0 {
+            return Path::CpuFastGm;
+        }
+        let Some(max_id) = v.positive().map(|(id, _)| id).max() else {
+            return Path::CpuFastGm;
+        };
+        let span = max_id as usize + 1;
+        if span > self.cfg.accel_max_len {
+            return Path::CpuFastGm;
+        }
+        let density = v.n_plus() as f64 / span as f64;
+        if density >= self.cfg.min_density {
+            Path::Accelerator
+        } else {
+            Path::CpuFastGm
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_routes_by_bucket_limit() {
+        let r = Router::new(RouterConfig { accel_max_len: 1024, min_density: 0.25 });
+        assert_eq!(r.route_dense(512), Path::Accelerator);
+        assert_eq!(r.route_dense(1024), Path::Accelerator);
+        assert_eq!(r.route_dense(4096), Path::CpuFastGm);
+        assert_eq!(r.route_dense(0), Path::CpuFastGm);
+    }
+
+    #[test]
+    fn accel_off_routes_everything_to_cpu() {
+        let r = Router::new(RouterConfig::default());
+        assert_eq!(r.route_dense(16), Path::CpuFastGm);
+        let v = SparseVector::new(vec![1, 2], vec![1.0, 1.0]);
+        assert_eq!(r.route_sparse(&v), Path::CpuFastGm);
+    }
+
+    #[test]
+    fn sparse_density_heuristic() {
+        let r = Router::new(Router::new(RouterConfig { accel_max_len: 1024, min_density: 0.25 }).cfg);
+        // Dense-ish small-span vector → accelerator.
+        let dense = SparseVector::new((0..512u64).collect(), vec![1.0; 512]);
+        assert_eq!(r.route_sparse(&dense), Path::Accelerator);
+        // Sparse vector in a small span → CPU.
+        let sparse = SparseVector::new(vec![5, 900], vec![1.0, 1.0]);
+        assert_eq!(r.route_sparse(&sparse), Path::CpuFastGm);
+        // Huge id (hashed token) → CPU regardless of count.
+        let hashed = SparseVector::new(vec![u64::MAX - 3], vec![1.0]);
+        assert_eq!(r.route_sparse(&hashed), Path::CpuFastGm);
+        // Empty → CPU (no-op).
+        assert_eq!(r.route_sparse(&SparseVector::default()), Path::CpuFastGm);
+    }
+}

@@ -1,0 +1,176 @@
+//! TCP JSON-lines server: one accept loop, one thread per connection, each
+//! line a [`protocol::Request`], each reply a single JSON line. Shutdown is
+//! cooperative: a flag plus a self-connection to unblock `accept`.
+
+use super::protocol::{self, Response};
+use super::service::Coordinator;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (use port 0 for an ephemeral port) and serve.
+    pub fn start(coordinator: Arc<Coordinator>, addr: &str) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("cannot bind '{addr}': {e}"))?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = shutdown.clone();
+        let handle = std::thread::Builder::new()
+            .name("fastgm-acceptor".into())
+            .spawn(move || {
+                log::info!("serving on {local}");
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let coord = coordinator.clone();
+                            let cflag = flag.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("fastgm-conn".into())
+                                .spawn(move || serve_connection(coord, stream, cflag));
+                        }
+                        Err(e) => log::warn!("accept error: {e}"),
+                    }
+                }
+                log::info!("acceptor stopped");
+            })?;
+        Ok(Server { addr: local, shutdown, handle: Some(handle) })
+    }
+
+    /// Stop accepting and join the acceptor (in-flight connections finish
+    /// their current request and then see EOF behaviour from clients).
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Unblock accept.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_connection(coord: Arc<Coordinator>, stream: TcpStream, shutdown: Arc<AtomicBool>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match protocol::decode_request(&line) {
+            Ok(req) => coord.call(req),
+            Err(e) => Response::err(format!("bad request: {e}")),
+        };
+        let out = protocol::encode_line(&resp.to_json());
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+    }
+    log::debug!("connection {peer} closed");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::client::Client;
+    use crate::coordinator::protocol::Request;
+    use crate::coordinator::service::CoordinatorConfig;
+    use crate::sketch::SparseVector;
+
+    fn start_server() -> (Server, Arc<Coordinator>) {
+        let coord = Arc::new(
+            Coordinator::new(CoordinatorConfig { k: 64, workers: 2, ..Default::default() })
+                .unwrap(),
+        );
+        let server = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+        (server, coord)
+    }
+
+    #[test]
+    fn ping_over_tcp() {
+        let (server, _coord) = start_server();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+        server.stop();
+    }
+
+    #[test]
+    fn full_flow_over_tcp() {
+        let (server, _coord) = start_server();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let v = SparseVector::new(vec![1, 2, 3], vec![1.0, 2.0, 0.5]);
+        let resp = client
+            .call(&Request::Sketch { name: "doc".into(), vector: v.clone() })
+            .unwrap();
+        assert!(matches!(resp, Response::Sketch { .. }));
+        let resp = client
+            .call(&Request::Jaccard { a: "doc".into(), b: "doc".into() })
+            .unwrap();
+        assert_eq!(resp, Response::Estimate { value: 1.0 });
+        // Errors arrive as error responses, connection stays usable.
+        let resp = client.call(&Request::GetSketch { name: "ghost".into() }).unwrap();
+        assert!(matches!(resp, Response::Error { .. }));
+        assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (server, _coord) = start_server();
+        let addr = server.addr.to_string();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                for i in 0..20u64 {
+                    let items = vec![(t * 1000 + i, 1.0)];
+                    let resp = client
+                        .call(&Request::Push { stream: format!("s{t}"), items })
+                        .unwrap();
+                    assert!(matches!(resp, Response::Ack { .. }));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut client = Client::connect(&addr).unwrap();
+        let resp = client.call(&Request::Cardinality { stream: "s0".into() }).unwrap();
+        assert!(matches!(resp, Response::Estimate { .. }));
+        server.stop();
+    }
+
+    #[test]
+    fn malformed_lines_get_error_responses() {
+        let (server, _coord) = start_server();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.write_all(b"this is not json\n").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = protocol::decode_response(&line).unwrap();
+        assert!(matches!(resp, Response::Error { .. }));
+        server.stop();
+    }
+}

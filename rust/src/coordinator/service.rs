@@ -1,0 +1,457 @@
+//! The coordinator service: wires registry, router, worker pool, batcher,
+//! LSH index, metrics and (optionally) the PJRT accelerator into one
+//! request handler. This is what the TCP server, the CLI and the examples
+//! all drive.
+//!
+//! Family discipline (DESIGN.md §2): the `sketch` op always produces
+//! **Ordered**-family FastGM sketches; `sketch_dense` always produces
+//! **Direct**-family sketches (accelerator or CPU P-MinHash fallback —
+//! identical semantics). Estimators reject cross-family pairs, so a
+//! mis-routed comparison fails loudly instead of silently biasing.
+
+use super::backpressure::Policy;
+use super::batcher::{BatcherConfig, DenseBatcher};
+use super::merger::merge_tree;
+use super::metrics::Metrics;
+use super::protocol::{Request, Response};
+use super::registry::Registry;
+use super::router::{Router, RouterConfig};
+use super::worker::WorkerPool;
+use crate::estimate::cardinality::{estimate_cardinality, estimate_weighted_jaccard};
+use crate::estimate::jaccard::estimate_jp;
+use crate::lsh::{LshIndex, LshParams};
+use crate::sketch::fastgm::FastGm;
+use crate::sketch::Sketcher;
+use crate::util::config::Config;
+use crate::util::hash::token_id;
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub k: usize,
+    pub seed: u64,
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub shed: bool,
+    /// Artifact directory; None (or missing manifest) disables the
+    /// accelerator — everything runs on CPU with identical semantics.
+    pub artifacts_dir: Option<String>,
+    pub batch_max: usize,
+    pub batch_deadline: Duration,
+    pub lsh_threshold: f64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            k: 256,
+            seed: 42,
+            workers: 4,
+            queue_capacity: 1024,
+            shed: false,
+            artifacts_dir: None,
+            batch_max: 8,
+            batch_deadline: Duration::from_millis(2),
+            lsh_threshold: 0.5,
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Read from a parsed TOML-subset [`Config`] (the launcher path).
+    pub fn from_config(cfg: &Config) -> CoordinatorConfig {
+        let d = CoordinatorConfig::default();
+        CoordinatorConfig {
+            k: cfg.usize("sketch.k", d.k),
+            seed: cfg.u64("sketch.seed", d.seed),
+            workers: cfg.usize("server.workers", d.workers),
+            queue_capacity: cfg.usize("server.queue_capacity", d.queue_capacity),
+            shed: cfg.bool("server.shed", d.shed),
+            artifacts_dir: {
+                let dir = cfg.str("accel.artifacts_dir", "artifacts");
+                if dir.is_empty() || dir == "off" {
+                    None
+                } else {
+                    Some(dir)
+                }
+            },
+            batch_max: cfg.usize("accel.max_batch", d.batch_max),
+            batch_deadline: Duration::from_micros(
+                (cfg.f64("accel.deadline_ms", 2.0) * 1000.0) as u64,
+            ),
+            lsh_threshold: cfg.f64("lsh.threshold", d.lsh_threshold),
+        }
+    }
+}
+
+struct Inner {
+    cfg: CoordinatorConfig,
+    registry: Registry,
+    metrics: Metrics,
+    fastgm: FastGm,
+    router: Router,
+    batcher: DenseBatcher,
+    lsh: RwLock<LshIndex>,
+    lsh_names: RwLock<HashMap<u64, String>>,
+    accel_on: bool,
+}
+
+pub struct Coordinator {
+    inner: Arc<Inner>,
+    pool: WorkerPool,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
+        // Bucket metadata comes from the manifest WITHOUT touching PJRT
+        // (the xla wrapper types are !Send); the batcher thread owns the
+        // actual runtime.
+        let (accel_dir, accel_max_len) = match &cfg.artifacts_dir {
+            Some(dir) => match crate::runtime::read_manifest(dir) {
+                Ok(specs) => {
+                    let max_len = specs
+                        .iter()
+                        .filter(|s| {
+                            s.name.starts_with("sketch_b")
+                                && s.outputs.first().map(|o| o.shape[1]) == Some(cfg.k)
+                        })
+                        .map(|s| s.inputs[1].shape[1])
+                        .max()
+                        .unwrap_or(0);
+                    (Some(dir.clone()), max_len)
+                }
+                Err(e) => {
+                    log::warn!("accelerator disabled: {e}");
+                    (None, 0)
+                }
+            },
+            None => (None, 0),
+        };
+        let accel_on = accel_dir.is_some();
+        let batcher = DenseBatcher::new(
+            BatcherConfig {
+                max_batch: cfg.batch_max,
+                deadline: cfg.batch_deadline,
+                k: cfg.k,
+                seed: cfg.seed as u32,
+            },
+            accel_dir,
+        );
+        let inner = Arc::new(Inner {
+            fastgm: FastGm::new(cfg.k, cfg.seed),
+            router: Router::new(RouterConfig { accel_max_len, min_density: 0.25 }),
+            registry: Registry::new(),
+            metrics: Metrics::new(),
+            batcher,
+            lsh: RwLock::new(LshIndex::new(LshParams::for_threshold(cfg.k, cfg.lsh_threshold))),
+            lsh_names: RwLock::new(HashMap::new()),
+            accel_on,
+            cfg: cfg.clone(),
+        });
+        let handler = {
+            let inner = inner.clone();
+            Arc::new(move |req: Request| inner.handle(req))
+        };
+        let policy = if cfg.shed { Policy::Shed } else { Policy::Block };
+        let pool = WorkerPool::new(cfg.workers, cfg.queue_capacity, policy, handler);
+        Ok(Coordinator { inner, pool })
+    }
+
+    /// Synchronous request (used by CLI / examples / per-connection loops).
+    pub fn call(&self, req: Request) -> Response {
+        let op = req.op();
+        let t0 = Instant::now();
+        let resp = self.pool.call(req);
+        self.inner.metrics.observe(op, t0.elapsed().as_secs_f64());
+        resp
+    }
+
+    /// Async submit (load generators).
+    pub fn submit(&self, req: Request) -> std::sync::mpsc::Receiver<Response> {
+        self.inner.metrics.incr(&format!("submit.{}", req.op()));
+        self.pool.submit(req)
+    }
+
+    pub fn accel_enabled(&self) -> bool {
+        self.inner.accel_on
+    }
+
+    pub fn metrics_snapshot(&self) -> crate::util::json::Value {
+        self.inner.metrics.snapshot()
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.inner.cfg
+    }
+
+    pub fn shutdown(self) {
+        self.pool.shutdown();
+        // inner.batcher shut down on drop of last Arc: explicit drain here.
+        match Arc::try_unwrap(self.inner) {
+            Ok(inner) => inner.batcher.shutdown(),
+            Err(_) => log::warn!("coordinator inner still referenced at shutdown"),
+        }
+    }
+}
+
+impl Inner {
+    fn handle(&self, req: Request) -> Response {
+        match self.handle_inner(req) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.metrics.incr("errors");
+                Response::err(e)
+            }
+        }
+    }
+
+    fn handle_inner(&self, req: Request) -> anyhow::Result<Response> {
+        Ok(match req {
+            Request::Ping => Response::Pong,
+            Request::Metrics => {
+                let mut snap = self.metrics.snapshot();
+                snap.set("sketches", crate::util::json::Value::num(self.registry.sketch_count() as f64));
+                snap.set("streams", crate::util::json::Value::num(self.registry.stream_count() as f64));
+                snap.set("accel", crate::util::json::Value::Bool(self.accel_on));
+                snap.set(
+                    "batch_flushes",
+                    crate::util::json::Value::num(
+                        self.batcher.flushes.load(std::sync::atomic::Ordering::Relaxed) as f64,
+                    ),
+                );
+                Response::MetricsDump { snapshot: snap }
+            }
+            Request::Sketch { name, vector } => {
+                let sk = self.fastgm.sketch(&vector);
+                self.registry.put_sketch(&name, sk.clone());
+                Response::Sketch { name, sketch: sk }
+            }
+            Request::SketchDense { name, weights } => {
+                // Router decides engine; both produce Direct-family
+                // sketches via the batcher (accel or CPU fallback).
+                let _path = self.router.route_dense(weights.len());
+                let rx = self.batcher.submit(weights);
+                let sk = rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("batcher dropped request"))??;
+                self.registry.put_sketch(&name, sk.clone());
+                Response::Sketch { name, sketch: sk }
+            }
+            Request::GetSketch { name } => {
+                let sk = self
+                    .registry
+                    .get_sketch(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{name}'"))?;
+                Response::Sketch { name, sketch: sk }
+            }
+            Request::Push { stream, items } => {
+                let n = self.registry.stream_push(&stream, self.cfg.k, self.cfg.seed, &items);
+                Response::Ack { info: format!("stream '{stream}' processed {n}") }
+            }
+            Request::Cardinality { stream } => {
+                let sk = self
+                    .registry
+                    .stream_sketch(&stream)
+                    .ok_or_else(|| anyhow::anyhow!("no stream named '{stream}'"))?;
+                Response::Estimate { value: estimate_cardinality(&sk) }
+            }
+            Request::Jaccard { a, b } => {
+                let sa = self
+                    .registry
+                    .get_sketch(&a)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{a}'"))?;
+                let sb = self
+                    .registry
+                    .get_sketch(&b)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{b}'"))?;
+                Response::Estimate { value: estimate_jp(&sa, &sb)? }
+            }
+            Request::WeightedJaccard { a, b } => {
+                let sa = self
+                    .registry
+                    .get_sketch(&a)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{a}'"))?;
+                let sb = self
+                    .registry
+                    .get_sketch(&b)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{b}'"))?;
+                Response::Estimate { value: estimate_weighted_jaccard(&sa, &sb)? }
+            }
+            Request::Merge { names, out } => {
+                anyhow::ensure!(!names.is_empty(), "merge needs at least one sketch");
+                let sketches: Vec<_> = names
+                    .iter()
+                    .map(|n| {
+                        self.registry
+                            .get_sketch(n)
+                            .ok_or_else(|| anyhow::anyhow!("no sketch named '{n}'"))
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                let merged = merge_tree(&sketches, 4)?;
+                self.registry.put_sketch(&out, merged.clone());
+                Response::Sketch { name: out, sketch: merged }
+            }
+            Request::LshInsert { name } => {
+                let sk = self
+                    .registry
+                    .get_sketch(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{name}'"))?;
+                let key = token_id(&name);
+                self.lsh.write().unwrap().insert(key, sk);
+                self.lsh_names.write().unwrap().insert(key, name.clone());
+                Response::Ack { info: format!("indexed '{name}'") }
+            }
+            Request::LshQuery { vector, limit } => {
+                let query = self.fastgm.sketch(&vector);
+                let hits = self.lsh.read().unwrap().query(&query, limit)?;
+                let names = self.lsh_names.read().unwrap();
+                Response::TopK {
+                    hits: hits
+                        .into_iter()
+                        .map(|(key, score)| {
+                            (
+                                names.get(&key).cloned().unwrap_or_else(|| format!("#{key}")),
+                                score,
+                            )
+                        })
+                        .collect(),
+                }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SparseVector;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            k: 128,
+            workers: 2,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap()
+    }
+
+    fn vecs() -> (SparseVector, SparseVector) {
+        (
+            SparseVector::new(vec![1, 2, 3, 4], vec![1.0, 0.5, 2.0, 1.0]),
+            SparseVector::new(vec![1, 2, 3, 9], vec![1.0, 0.5, 2.0, 1.5]),
+        )
+    }
+
+    #[test]
+    fn sketch_store_jaccard_flow() {
+        let c = coord();
+        let (u, v) = vecs();
+        let truth = crate::estimate::jaccard::probability_jaccard(&u, &v);
+        assert!(matches!(
+            c.call(Request::Sketch { name: "u".into(), vector: u }),
+            Response::Sketch { .. }
+        ));
+        assert!(matches!(
+            c.call(Request::Sketch { name: "v".into(), vector: v }),
+            Response::Sketch { .. }
+        ));
+        let Response::Estimate { value } = c.call(Request::Jaccard { a: "u".into(), b: "v".into() })
+        else {
+            panic!("expected estimate")
+        };
+        assert!((value - truth).abs() < 0.2, "est={value} truth={truth}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn stream_cardinality_flow() {
+        let c = coord();
+        let items: Vec<(u64, f64)> = (0..300).map(|i| (i, 1.0)).collect();
+        c.call(Request::Push { stream: "s".into(), items: items.clone() });
+        c.call(Request::Push { stream: "s".into(), items }); // duplicates
+        let Response::Estimate { value } = c.call(Request::Cardinality { stream: "s".into() })
+        else {
+            panic!("expected estimate")
+        };
+        assert!((value - 300.0).abs() / 300.0 < 0.25, "est={value}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn dense_sketch_and_family_separation() {
+        let c = coord();
+        let dense: Vec<f64> = (0..64).map(|i| (i % 7) as f64 * 0.3).collect();
+        let Response::Sketch { sketch, .. } =
+            c.call(Request::SketchDense { name: "d".into(), weights: dense })
+        else {
+            panic!("expected sketch")
+        };
+        assert_eq!(sketch.family, crate::sketch::Family::Direct);
+        // Cross-family comparison must error.
+        let (u, _) = vecs();
+        c.call(Request::Sketch { name: "u".into(), vector: u });
+        let resp = c.call(Request::Jaccard { a: "u".into(), b: "d".into() });
+        assert!(matches!(resp, Response::Error { .. }), "got {resp:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn merge_and_lsh_flow() {
+        let c = coord();
+        let (u, v) = vecs();
+        c.call(Request::Sketch { name: "u".into(), vector: u.clone() });
+        c.call(Request::Sketch { name: "v".into(), vector: v });
+        let Response::Sketch { sketch: merged, .. } =
+            c.call(Request::Merge { names: vec!["u".into(), "v".into()], out: "m".into() })
+        else {
+            panic!("expected merged sketch")
+        };
+        assert_eq!(merged.k(), 128);
+        // LSH: index u and v, query with u — u must be the top hit.
+        c.call(Request::LshInsert { name: "u".into() });
+        c.call(Request::LshInsert { name: "v".into() });
+        let Response::TopK { hits } = c.call(Request::LshQuery { vector: u, limit: 2 }) else {
+            panic!("expected topk")
+        };
+        assert_eq!(hits[0].0, "u");
+        assert!((hits[0].1 - 1.0).abs() < 1e-9);
+        c.shutdown();
+    }
+
+    #[test]
+    fn errors_are_responses_not_panics() {
+        let c = coord();
+        assert!(matches!(
+            c.call(Request::GetSketch { name: "ghost".into() }),
+            Response::Error { .. }
+        ));
+        assert!(matches!(
+            c.call(Request::Cardinality { stream: "ghost".into() }),
+            Response::Error { .. }
+        ));
+        assert!(matches!(
+            c.call(Request::Merge { names: vec![], out: "x".into() }),
+            Response::Error { .. }
+        ));
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_reflect_traffic() {
+        let c = coord();
+        c.call(Request::Ping);
+        c.call(Request::Ping);
+        let Response::MetricsDump { snapshot } = c.call(Request::Metrics) else {
+            panic!("expected metrics")
+        };
+        let pings = snapshot
+            .get("counters")
+            .and_then(|c| c.get("ops.ping"))
+            .and_then(|v| v.as_f64())
+            .unwrap();
+        assert!(pings >= 2.0);
+        c.shutdown();
+    }
+}

@@ -1,0 +1,157 @@
+//! CPU worker pool: N threads draining the bounded admission queue and
+//! running the coordinator's request handler. Replies travel over one-shot
+//! mpsc channels so callers can be synchronous (server connections) or
+//! fire-and-forget (benchmarks).
+
+use super::backpressure::{bounded, Admission, Policy};
+use super::protocol::{Request, Response};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A queued unit of work.
+pub struct Job {
+    pub request: Request,
+    pub reply: Sender<Response>,
+}
+
+pub struct WorkerPool {
+    admission: Admission<Job>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads, each calling `handler` per job.
+    pub fn new(
+        workers: usize,
+        queue_capacity: usize,
+        policy: Policy,
+        handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
+    ) -> WorkerPool {
+        assert!(workers >= 1);
+        let (admission, rx) = bounded::<Job>(queue_capacity, policy);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = rx.clone();
+            let handler = handler.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fastgm-worker-{w}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        let Ok(job) = job else { return };
+                        let resp = handler(job.request);
+                        let _ = job.reply.send(resp); // caller may have gone
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool { admission, handles }
+    }
+
+    /// Submit a request; returns the reply receiver. A `Shed` error is
+    /// converted to an immediate error response on the channel.
+    pub fn submit(&self, request: Request) -> Receiver<Response> {
+        let (tx, rx) = channel();
+        let job = Job { request, reply: tx };
+        if let Err(e) = self.admission.submit(job) {
+            // Channel tx moved into job; rebuild a reply channel.
+            let (tx2, rx2) = channel();
+            let _ = tx2.send(Response::err(e));
+            return rx2;
+        }
+        rx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, request: Request) -> Response {
+        match self.submit(request).recv() {
+            Ok(r) => r,
+            Err(_) => Response::err("worker pool shut down"),
+        }
+    }
+
+    pub fn shed_count(&self) -> u64 {
+        self.admission.shed_count()
+    }
+
+    /// Drop the queue and join all workers.
+    pub fn shutdown(self) {
+        drop(self.admission);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_pool(workers: usize, cap: usize, policy: Policy) -> WorkerPool {
+        WorkerPool::new(
+            workers,
+            cap,
+            policy,
+            Arc::new(|req: Request| Response::Ack { info: req.op().to_string() }),
+        )
+    }
+
+    #[test]
+    fn round_trips_requests() {
+        let pool = echo_pool(2, 16, Policy::Block);
+        let r = pool.call(Request::Ping);
+        assert_eq!(r, Response::Ack { info: "ping".into() });
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parallel_submissions_all_complete() {
+        let pool = Arc::new(echo_pool(4, 64, Policy::Block));
+        let mut rxs = Vec::new();
+        for _ in 0..100 {
+            rxs.push(pool.submit(Request::Metrics));
+        }
+        for rx in rxs {
+            assert!(matches!(rx.recv().unwrap(), Response::Ack { .. }));
+        }
+    }
+
+    #[test]
+    fn shed_under_pressure_returns_error() {
+        // One slow worker, capacity 1, shed policy: flooding must shed.
+        let pool = WorkerPool::new(
+            1,
+            1,
+            Policy::Shed,
+            Arc::new(|_req| {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+                Response::Pong
+            }),
+        );
+        let mut shed_seen = false;
+        let mut rxs = Vec::new();
+        for _ in 0..20 {
+            rxs.push(pool.submit(Request::Ping));
+        }
+        for rx in rxs {
+            if matches!(rx.recv().unwrap(), Response::Error { .. }) {
+                shed_seen = true;
+            }
+        }
+        assert!(shed_seen, "expected at least one shed response");
+        assert!(pool.shed_count() > 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let pool = echo_pool(3, 8, Policy::Block);
+        pool.call(Request::Ping);
+        pool.shutdown(); // must not hang
+    }
+}

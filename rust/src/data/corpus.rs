@@ -1,0 +1,170 @@
+//! Synthetic analogs of the paper's six real-world datasets (Table 1).
+//!
+//! The real corpora are not redistributable inside this environment, so
+//! each analog reproduces the statistics FastGM's runtime actually depends
+//! on — vector count, feature-space size, the per-vector positive-entry
+//! (n⁺) profile, and a TF-IDF-like weight distribution — via Zipf feature
+//! popularity and log-normal n⁺ draws (DESIGN.md §3 documents the
+//! substitution). Real svmlight files drop in through [`super::svmlight`]
+//! and the `--dataset path:<file>` CLI syntax.
+//!
+//! | analog     | #vectors | #features | mean n⁺ (approx) |
+//! |------------|----------|-----------|------------------|
+//! | real-sim   | 72,309   | 20,958    | 52               |
+//! | rcv1       | 20,242   | 47,236    | 74               |
+//! | news20     | 19,996   | 1,355,191 | 455              |
+//! | libimseti  | 220,970  | 220,970   | 78               |
+//! | wiki10     | 14,146   | 104,374   | 97               |
+//! | movielens  | 69,878   | 80,555    | 143              |
+
+use super::synthetic::Zipf;
+use crate::sketch::SparseVector;
+use crate::util::rng::SplitMix64;
+
+/// Static description of a corpus analog.
+#[derive(Debug, Clone, Copy)]
+pub struct CorpusSpec {
+    pub name: &'static str,
+    pub vectors: usize,
+    pub features: usize,
+    /// Mean positive entries per vector (log-normal across vectors).
+    pub mean_nplus: f64,
+    /// log-std of the per-vector n⁺ distribution.
+    pub nplus_sigma: f64,
+    /// Zipf exponent of feature popularity.
+    pub zipf_s: f64,
+}
+
+pub const CORPORA: &[CorpusSpec] = &[
+    CorpusSpec { name: "real-sim", vectors: 72_309, features: 20_958, mean_nplus: 52.0, nplus_sigma: 0.9, zipf_s: 1.05 },
+    CorpusSpec { name: "rcv1", vectors: 20_242, features: 47_236, mean_nplus: 74.0, nplus_sigma: 0.8, zipf_s: 1.1 },
+    CorpusSpec { name: "news20", vectors: 19_996, features: 1_355_191, mean_nplus: 455.0, nplus_sigma: 1.0, zipf_s: 1.2 },
+    CorpusSpec { name: "libimseti", vectors: 220_970, features: 220_970, mean_nplus: 78.0, nplus_sigma: 1.2, zipf_s: 0.9 },
+    CorpusSpec { name: "wiki10", vectors: 14_146, features: 104_374, mean_nplus: 97.0, nplus_sigma: 0.7, zipf_s: 1.1 },
+    CorpusSpec { name: "movielens", vectors: 69_878, features: 80_555, mean_nplus: 143.0, nplus_sigma: 1.1, zipf_s: 1.0 },
+];
+
+pub fn spec(name: &str) -> Option<&'static CorpusSpec> {
+    CORPORA.iter().find(|c| c.name == name)
+}
+
+/// Deterministic generator of corpus vectors (seeded by corpus + index so
+/// experiments can stream any subset without materializing the corpus).
+pub struct Corpus {
+    pub spec: CorpusSpec,
+    zipf: Zipf,
+    seed: u64,
+}
+
+impl Corpus {
+    pub fn new(spec: CorpusSpec, seed: u64) -> Self {
+        // Cap the Zipf table so news20-scale feature spaces stay cheap;
+        // the tail beyond the cap is sampled uniformly.
+        let table = spec.features.min(200_000);
+        Corpus { spec, zipf: Zipf::new(table, spec.zipf_s), seed }
+    }
+
+    pub fn by_name(name: &str, seed: u64) -> Option<Corpus> {
+        spec(name).map(|s| Corpus::new(*s, seed))
+    }
+
+    /// Generate vector `idx` (0 ≤ idx < spec.vectors).
+    pub fn vector(&self, idx: usize) -> SparseVector {
+        let mut rng = SplitMix64::new(
+            self.seed ^ crate::util::hash::mix2(0xC0_4B05 ^ self.spec.zipf_s.to_bits(), idx as u64),
+        );
+        // Per-vector n⁺ ~ LogNormal(ln(mean) - σ²/2, σ), clamped.
+        let mu = self.spec.mean_nplus.ln() - self.spec.nplus_sigma * self.spec.nplus_sigma / 2.0;
+        let nplus = (mu + self.spec.nplus_sigma * rng.next_normal()).exp().round() as usize;
+        let nplus = nplus.clamp(1, self.spec.features.min(20_000));
+
+        let table = self.spec.features.min(200_000);
+        let mut seen = std::collections::HashSet::with_capacity(nplus * 2);
+        let mut v = SparseVector::default();
+        let mut guard = 0;
+        while v.ids.len() < nplus && guard < nplus * 40 {
+            guard += 1;
+            // Head features by Zipf, plus a uniform tail for huge spaces.
+            let f = if self.spec.features > table && rng.next_f64() < 0.15 {
+                table + rng.next_range(0, self.spec.features - table - 1)
+            } else {
+                self.zipf.sample(&mut rng)
+            } as u64;
+            if seen.insert(f) {
+                // TF-IDF-like: log-normal weight, heavier for rare features.
+                let tf = (1.0 + rng.next_exp()).ln() + 0.1;
+                let idf = (1.0 + (self.spec.features as f64 / (1.0 + f as f64))).ln();
+                v.push(f, tf * idf);
+            }
+        }
+        v
+    }
+
+    /// First `count` vectors.
+    pub fn vectors(&self, count: usize) -> Vec<SparseVector> {
+        (0..count.min(self.spec.vectors)).map(|i| self.vector(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn all_specs_resolve() {
+        for c in CORPORA {
+            assert!(spec(c.name).is_some());
+        }
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn vectors_are_deterministic() {
+        let c = Corpus::by_name("rcv1", 7).unwrap();
+        assert_eq!(c.vector(5), c.vector(5));
+        assert_ne!(c.vector(5), c.vector(6));
+        let c2 = Corpus::by_name("rcv1", 8).unwrap();
+        assert_ne!(c.vector(5), c2.vector(5));
+    }
+
+    #[test]
+    fn nplus_profile_matches_spec() {
+        let c = Corpus::by_name("real-sim", 1).unwrap();
+        let mut s = OnlineStats::new();
+        for i in 0..400 {
+            let v = c.vector(i);
+            assert!(v.n_plus() >= 1);
+            assert!(v.ids.iter().all(|&f| (f as usize) < c.spec.features));
+            s.push(v.n_plus() as f64);
+        }
+        // Log-normal mean ≈ spec mean within sampling tolerance.
+        assert!(
+            (s.mean() - c.spec.mean_nplus).abs() < c.spec.mean_nplus * 0.35,
+            "mean n⁺ = {} vs spec {}",
+            s.mean(),
+            c.spec.mean_nplus
+        );
+    }
+
+    #[test]
+    fn weights_positive_and_skewed() {
+        let c = Corpus::by_name("wiki10", 3).unwrap();
+        let v = c.vector(0);
+        assert!(v.weights.iter().all(|&w| w > 0.0));
+        let mx = v.weights.iter().cloned().fold(0.0, f64::max);
+        let mn = v.weights.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(mx / mn > 2.0, "TF-IDF-like weights should be spread");
+    }
+
+    #[test]
+    fn corpus_vectors_share_popular_features() {
+        // Zipf popularity ⇒ nonzero pairwise overlap on head features.
+        let c = Corpus::by_name("news20", 2).unwrap();
+        let a = c.vector(0);
+        let b = c.vector(1);
+        let sa: std::collections::HashSet<u64> = a.ids.iter().copied().collect();
+        let shared = b.ids.iter().filter(|i| sa.contains(i)).count();
+        assert!(shared > 0, "corpus vectors should overlap on head features");
+    }
+}

@@ -1,0 +1,9 @@
+//! Dataset substrate: synthetic weight/vector generators ([`synthetic`]),
+//! the Table-1 real-dataset analogs ([`corpus`]), svmlight-format IO
+//! ([`svmlight`]) so real datasets can drop in, and duplicate-bearing
+//! stream generation ([`stream`]) for Task 2.
+
+pub mod synthetic;
+pub mod corpus;
+pub mod svmlight;
+pub mod stream;

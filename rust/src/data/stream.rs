@@ -1,0 +1,93 @@
+//! Stream generation for Task 2 (weighted cardinality): sequences of
+//! objects with fixed per-object weights and configurable duplication, plus
+//! the exact ground truth (`Σ_{distinct} v_i`) the estimators are judged
+//! against.
+
+use super::synthetic::WeightDist;
+use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+
+/// A generated stream: `events` in arrival order (with duplicates) and the
+/// distinct-object weight table.
+#[derive(Debug, Clone)]
+pub struct Stream {
+    pub events: Vec<(u64, f64)>,
+    pub weights: HashMap<u64, f64>,
+}
+
+impl Stream {
+    /// Exact weighted cardinality `c = Σ_{i∈N} v_i`.
+    pub fn weighted_cardinality(&self) -> f64 {
+        self.weights.values().sum()
+    }
+
+    pub fn distinct(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Generate a stream of `n` distinct objects (ids offset by `id_base`),
+/// each repeated `1 + Poisson-ish(dup_factor)` times, shuffled.
+pub fn generate(
+    rng: &mut SplitMix64,
+    n: usize,
+    dup_factor: f64,
+    dist: WeightDist,
+    id_base: u64,
+) -> Stream {
+    let mut weights = HashMap::with_capacity(n);
+    let mut events = Vec::new();
+    for i in 0..n as u64 {
+        let id = id_base + i;
+        let w = dist.sample(rng);
+        weights.insert(id, w);
+        let reps = 1 + (rng.next_exp() * dup_factor).floor() as usize;
+        for _ in 0..reps {
+            events.push((id, w));
+        }
+    }
+    rng.shuffle(&mut events);
+    Stream { events, weights }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_covers_all_objects() {
+        let mut r = SplitMix64::new(1);
+        let s = generate(&mut r, 500, 1.5, WeightDist::Uniform01, 0);
+        assert_eq!(s.distinct(), 500);
+        assert!(s.len() >= 500);
+        // Every event id is in the weight table with matching weight.
+        for &(id, w) in &s.events {
+            assert_eq!(s.weights[&id], w);
+        }
+    }
+
+    #[test]
+    fn cardinality_is_weight_sum() {
+        let mut r = SplitMix64::new(2);
+        let s = generate(&mut r, 100, 0.0, WeightDist::Const(2.0), 10);
+        assert!((s.weighted_cardinality() - 200.0).abs() < 1e-9);
+        assert_eq!(s.len(), 100); // dup_factor 0 → no duplicates beyond base
+    }
+
+    #[test]
+    fn duplication_factor_increases_length() {
+        let mut r = SplitMix64::new(3);
+        let a = generate(&mut r, 300, 0.0, WeightDist::Uniform01, 0);
+        let b = generate(&mut r, 300, 3.0, WeightDist::Uniform01, 0);
+        assert!(b.len() > a.len() * 2);
+        assert_eq!(a.distinct(), b.distinct());
+    }
+}

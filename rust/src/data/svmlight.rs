@@ -1,0 +1,108 @@
+//! svmlight / libsvm sparse-format IO (`label idx:val idx:val ...`) — the
+//! format the paper's six real datasets ship in, so they can be dropped
+//! into every experiment via `--dataset path:<file>`.
+
+use crate::sketch::SparseVector;
+use std::io::{BufReader, Read, Write};
+
+/// One row: label + sparse vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Row {
+    pub label: f64,
+    pub vector: SparseVector,
+}
+
+/// Parse svmlight text. Lines starting with `#` and blank lines are
+/// skipped; `#` after data starts a comment.
+pub fn parse(text: &str) -> anyhow::Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let label: f64 = parts
+            .next()
+            .unwrap()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: bad label", lineno + 1))?;
+        let mut v = SparseVector::default();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected idx:val, got '{tok}'", lineno + 1))?;
+            let idx: u64 = idx
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad index '{idx}'", lineno + 1))?;
+            let val: f64 = val
+                .parse()
+                .map_err(|_| anyhow::anyhow!("line {}: bad value '{val}'", lineno + 1))?;
+            v.push(idx, val);
+        }
+        rows.push(Row { label, vector: v });
+    }
+    Ok(rows)
+}
+
+pub fn load(path: &str) -> anyhow::Result<Vec<Row>> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open svmlight file '{path}': {e}"))?;
+    let mut text = String::new();
+    BufReader::new(f).read_to_string(&mut text)?;
+    parse(&text)
+}
+
+pub fn write(path: &str, rows: &[Row]) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for r in rows {
+        write!(f, "{}", r.label)?;
+        for (id, w) in r.vector.ids.iter().zip(&r.vector.weights) {
+            write!(f, " {id}:{w}")?;
+        }
+        writeln!(f)?;
+    }
+    Ok(())
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# a comment line
+1 3:0.5 17:1.25 99:2
+-1 1:0.1   # trailing comment
+
+0 5:3.5
+";
+
+    #[test]
+    fn parses_labels_and_entries() {
+        let rows = parse(SAMPLE).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].label, 1.0);
+        assert_eq!(rows[0].vector.ids, vec![3, 17, 99]);
+        assert_eq!(rows[0].vector.weights, vec![0.5, 1.25, 2.0]);
+        assert_eq!(rows[1].label, -1.0);
+        assert_eq!(rows[2].vector.ids, vec![5]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("1 nocolon").is_err());
+        assert!(parse("notanumber 1:2").is_err());
+        assert!(parse("1 x:2").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let rows = parse(SAMPLE).unwrap();
+        let path = std::env::temp_dir().join("fastgm_svmlight_test.txt");
+        write(path.to_str().unwrap(), &rows).unwrap();
+        let back = load(path.to_str().unwrap()).unwrap();
+        assert_eq!(rows, back);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,217 @@
+//! Synthetic workload generation: the weight distributions the paper's
+//! evaluation draws from (UNI(0,1), EXP(1), N(1,0.1), Beta(5,5)), sparse
+//! vector construction, Zipf-popularity sampling and controlled-overlap
+//! vector pairs for the similarity experiments.
+
+use crate::sketch::SparseVector;
+use crate::util::rng::SplitMix64;
+
+/// Weight distributions used across the paper's experiments.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WeightDist {
+    /// UNI(0,1) — Fig. 4, Fig. 7.
+    Uniform01,
+    /// EXP(1) — Fig. 4 (results "similar", per the paper).
+    Exp1,
+    /// N(μ, σ), truncated to positive — Fig. 7 uses N(1, 0.1).
+    Normal(f64, f64),
+    /// Beta(α, β) — Fig. 10/11 packet sizes use Beta(5,5).
+    Beta(f64, f64),
+    /// Constant weight (unweighted cardinality ablation).
+    Const(f64),
+}
+
+impl WeightDist {
+    pub fn sample(&self, rng: &mut SplitMix64) -> f64 {
+        match *self {
+            WeightDist::Uniform01 => {
+                let u = rng.next_f64();
+                // Open interval already; keep away from exact zero weight.
+                u.max(1e-12)
+            }
+            WeightDist::Exp1 => rng.next_exp(),
+            WeightDist::Normal(mu, sigma) => {
+                // Truncated at a small positive floor (weights must be > 0).
+                loop {
+                    let x = mu + sigma * rng.next_normal();
+                    if x > 0.0 {
+                        return x;
+                    }
+                }
+            }
+            WeightDist::Beta(a, b) => rng.next_beta(a, b).max(1e-12),
+            WeightDist::Const(c) => c,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            WeightDist::Uniform01 => "UNI(0,1)".into(),
+            WeightDist::Exp1 => "EXP(1)".into(),
+            WeightDist::Normal(m, s) => format!("N({m},{s})"),
+            WeightDist::Beta(a, b) => format!("Beta({a},{b})"),
+            WeightDist::Const(c) => format!("Const({c})"),
+        }
+    }
+}
+
+/// A fully dense vector of length n with ids 0..n (the paper's synthetic
+/// Task-1 setting: n⁺ = n).
+pub fn dense_vector(rng: &mut SplitMix64, n: usize, dist: WeightDist) -> SparseVector {
+    SparseVector::new(
+        (0..n as u64).collect(),
+        (0..n).map(|_| dist.sample(rng)).collect(),
+    )
+}
+
+/// A sparse vector with `n_plus` distinct random ids drawn from `0..n`.
+pub fn sparse_vector(
+    rng: &mut SplitMix64,
+    n: usize,
+    n_plus: usize,
+    dist: WeightDist,
+) -> SparseVector {
+    assert!(n_plus <= n);
+    // Floyd's algorithm for a uniform n_plus-subset of 0..n.
+    let mut chosen = std::collections::HashSet::with_capacity(n_plus);
+    for j in (n - n_plus)..n {
+        let t = rng.next_range(0, j);
+        if !chosen.insert(t as u64) {
+            chosen.insert(j as u64);
+        }
+    }
+    let mut ids: Vec<u64> = chosen.into_iter().collect();
+    ids.sort_unstable();
+    let weights = ids.iter().map(|_| dist.sample(rng)).collect();
+    SparseVector::new(ids, weights)
+}
+
+/// A pair of vectors sharing ~`overlap` fraction of their support (ids and
+/// weights identical on the shared part) — the Fig. 6 workload.
+pub fn overlapping_pair(
+    rng: &mut SplitMix64,
+    n_plus: usize,
+    overlap: f64,
+    dist: WeightDist,
+) -> (SparseVector, SparseVector) {
+    let mut u = SparseVector::default();
+    let mut v = SparseVector::default();
+    for i in 0..n_plus as u64 {
+        let w = dist.sample(rng);
+        if rng.next_f64() < overlap {
+            u.push(i, w);
+            v.push(i, w);
+        } else if rng.next_u64() & 1 == 0 {
+            u.push(i, w);
+            v.push(i | (1 << 62), dist.sample(rng));
+        } else {
+            u.push(i | (1 << 61), dist.sample(rng));
+            v.push(i, w);
+        }
+    }
+    (u, v)
+}
+
+/// Zipf sampler over `0..n` with exponent `s` (feature popularity in the
+/// corpus analogs). Uses the standard inverse-CDF over precomputed
+/// cumulative weights for exactness at corpus scale.
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n >= 1);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 1..=n {
+            acc += 1.0 / (i as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut SplitMix64) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c < u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn weight_dists_have_expected_means() {
+        let mut r = SplitMix64::new(1);
+        let cases: Vec<(WeightDist, f64)> = vec![
+            (WeightDist::Uniform01, 0.5),
+            (WeightDist::Exp1, 1.0),
+            (WeightDist::Normal(1.0, 0.1), 1.0),
+            (WeightDist::Beta(5.0, 5.0), 0.5),
+            (WeightDist::Const(2.0), 2.0),
+        ];
+        for (dist, want) in cases {
+            let mut s = OnlineStats::new();
+            for _ in 0..40_000 {
+                let x = dist.sample(&mut r);
+                assert!(x > 0.0, "{} produced non-positive", dist.name());
+                s.push(x);
+            }
+            assert!(
+                (s.mean() - want).abs() < 0.02,
+                "{}: mean={} want={want}",
+                dist.name(),
+                s.mean()
+            );
+        }
+    }
+
+    #[test]
+    fn dense_vector_has_full_support() {
+        let mut r = SplitMix64::new(2);
+        let v = dense_vector(&mut r, 100, WeightDist::Uniform01);
+        assert_eq!(v.n_plus(), 100);
+    }
+
+    #[test]
+    fn sparse_vector_ids_distinct_and_bounded() {
+        let mut r = SplitMix64::new(3);
+        let v = sparse_vector(&mut r, 1000, 64, WeightDist::Exp1);
+        assert_eq!(v.ids.len(), 64);
+        let mut ids = v.ids.clone();
+        ids.dedup();
+        assert_eq!(ids.len(), 64, "ids must be distinct");
+        assert!(v.ids.iter().all(|&i| i < 1000));
+    }
+
+    #[test]
+    fn overlapping_pair_controls_similarity() {
+        let mut r = SplitMix64::new(4);
+        let (u, v) = overlapping_pair(&mut r, 300, 0.8, WeightDist::Uniform01);
+        let jp = crate::estimate::jaccard::probability_jaccard(&u, &v);
+        assert!(jp > 0.5 && jp < 0.95, "jp={jp}");
+        let (u2, v2) = overlapping_pair(&mut r, 300, 0.1, WeightDist::Uniform01);
+        let jp2 = crate::estimate::jaccard::probability_jaccard(&u2, &v2);
+        assert!(jp2 < jp, "jp2={jp2} should be below jp={jp}");
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(1000, 1.1);
+        let mut r = SplitMix64::new(5);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..20_000 {
+            let i = z.sample(&mut r);
+            assert!(i < 1000);
+            counts[i] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[500]);
+    }
+}

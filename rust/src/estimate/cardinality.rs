@@ -1,0 +1,190 @@
+//! Weighted cardinality estimation and the mergeable sketch set algebra
+//! (Lemiesz VLDB'21; Theorem 2 of the paper).
+//!
+//! Each `y_j ~ EXP(c)` for `c = Σ_{i∈N} v_i`, so `Σ_j y_j ~ Γ(k, c)` and
+//! `ĉ = (k-1)/Σ_j y_j` is the minimum-variance unbiased estimator with
+//! `Var(ĉ/c) ≈ 2/k`. Unions come free from sketch merge; intersections,
+//! differences and weighted Jaccard follow by inclusion–exclusion — the
+//! operations the sensor-network experiments (Fig. 10) are built on.
+
+use crate::sketch::{GumbelMaxSketch, MergeError};
+
+/// `ĉ = (k-1)/Σ y_j`. Returns 0 for an empty sketch (all registers ∞) and
+/// requires k ≥ 2 (the k=1 estimator has no finite mean).
+pub fn estimate_cardinality(sk: &GumbelMaxSketch) -> f64 {
+    let k = sk.k();
+    assert!(k >= 2, "cardinality estimation needs k >= 2");
+    let sum: f64 = sk.y.iter().sum();
+    if !sum.is_finite() || sum <= 0.0 {
+        return 0.0;
+    }
+    (k as f64 - 1.0) / sum
+}
+
+/// Theoretical relative standard deviation of the estimator (Theorem 2).
+pub fn cardinality_rel_std(k: usize) -> f64 {
+    (2.0 / k as f64).sqrt()
+}
+
+/// Estimated weighted cardinality of the union of the underlying sets.
+pub fn estimate_union(sketches: &[&GumbelMaxSketch]) -> Result<f64, MergeError> {
+    let merged = GumbelMaxSketch::merge_all(sketches.iter().copied())?;
+    Ok(estimate_cardinality(&merged))
+}
+
+/// Inclusion–exclusion: `|A∩B| = ĉ_A + ĉ_B − ĉ_{A∪B}`. May be slightly
+/// negative due to estimation noise; clamped at 0.
+pub fn estimate_intersection(
+    a: &GumbelMaxSketch,
+    b: &GumbelMaxSketch,
+) -> Result<f64, MergeError> {
+    let ca = estimate_cardinality(a);
+    let cb = estimate_cardinality(b);
+    let cu = estimate_union(&[a, b])?;
+    Ok((ca + cb - cu).max(0.0))
+}
+
+/// `|A \ B| = ĉ_{A∪B} − ĉ_B`, clamped at 0.
+pub fn estimate_difference(
+    a: &GumbelMaxSketch,
+    b: &GumbelMaxSketch,
+) -> Result<f64, MergeError> {
+    let cu = estimate_union(&[a, b])?;
+    Ok((cu - estimate_cardinality(b)).max(0.0))
+}
+
+/// Weighted Jaccard from cardinality algebra:
+/// `J_W = (ĉ_A + ĉ_B − ĉ_U) / ĉ_U`, clamped to [0, 1].
+pub fn estimate_weighted_jaccard(
+    a: &GumbelMaxSketch,
+    b: &GumbelMaxSketch,
+) -> Result<f64, MergeError> {
+    let cu = estimate_union(&[a, b])?;
+    if cu <= 0.0 {
+        return Ok(0.0);
+    }
+    let inter = estimate_cardinality(a) + estimate_cardinality(b) - cu;
+    Ok((inter / cu).clamp(0.0, 1.0))
+}
+
+/// `|A \ (B ∪ C)| = ĉ_{A∪B∪C} − ĉ_{B∪C}` — the "lost packets" metric of
+/// Fig. 10c (packets from source A that reached neither node).
+pub fn estimate_difference_union(
+    a: &GumbelMaxSketch,
+    b: &GumbelMaxSketch,
+    c: &GumbelMaxSketch,
+) -> Result<f64, MergeError> {
+    let cabc = estimate_union(&[a, b, c])?;
+    let cbc = estimate_union(&[b, c])?;
+    Ok((cabc - cbc).max(0.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::lemiesz::LemieszSketch;
+    use crate::sketch::stream_fastgm::StreamFastGm;
+    use crate::util::rng::SplitMix64;
+    use crate::util::stats::OnlineStats;
+
+    fn lemiesz_of(k: usize, seed: u32, items: &[(u64, f64)]) -> GumbelMaxSketch {
+        let mut s = LemieszSketch::new(k, seed);
+        for &(id, w) in items {
+            s.push(id, w);
+        }
+        s.sketch()
+    }
+
+    #[test]
+    fn unbiased_within_theory() {
+        let items: Vec<(u64, f64)> = (0..500).map(|i| (i as u64, 0.5 + (i % 7) as f64 * 0.1)).collect();
+        let truth: f64 = items.iter().map(|(_, w)| w).sum();
+        let k = 128;
+        let mut stats = OnlineStats::new();
+        for seed in 0..150u32 {
+            stats.push(estimate_cardinality(&lemiesz_of(k, seed, &items)));
+        }
+        let rel_err = (stats.mean() - truth).abs() / truth;
+        assert!(rel_err < 0.02, "mean={} truth={truth}", stats.mean());
+        // Var(ĉ/c) ≈ 2/k.
+        let rel_std = stats.std() / truth;
+        let theo = cardinality_rel_std(k);
+        assert!(rel_std < 1.5 * theo && rel_std > theo / 1.5, "rel_std={rel_std} theo={theo}");
+    }
+
+    #[test]
+    fn stream_fastgm_sketch_estimates_equally_well() {
+        // The Ordered family y-part is also EXP(c) — the estimator is
+        // family-agnostic.
+        let items: Vec<(u64, f64)> = (0..300).map(|i| (i as u64 * 3 + 7, 1.0)).collect();
+        let truth = 300.0;
+        let mut stats = OnlineStats::new();
+        for seed in 0..100u64 {
+            let mut s = StreamFastGm::new(128, seed);
+            for &(id, w) in &items {
+                s.push(id, w);
+            }
+            stats.push(estimate_cardinality(&s.sketch()));
+        }
+        assert!((stats.mean() - truth).abs() / truth < 0.03, "mean={}", stats.mean());
+    }
+
+    #[test]
+    fn union_intersection_difference_consistency() {
+        let a_items: Vec<(u64, f64)> = (0..400).map(|i| (i, 1.0)).collect();
+        let b_items: Vec<(u64, f64)> = (200..600).map(|i| (i, 1.0)).collect();
+        let k = 512;
+        let mut u_est = OnlineStats::new();
+        let mut i_est = OnlineStats::new();
+        let mut d_est = OnlineStats::new();
+        let mut j_est = OnlineStats::new();
+        for seed in 0..60u32 {
+            let sa = lemiesz_of(k, seed, &a_items);
+            let sb = lemiesz_of(k, seed, &b_items);
+            u_est.push(estimate_union(&[&sa, &sb]).unwrap());
+            i_est.push(estimate_intersection(&sa, &sb).unwrap());
+            d_est.push(estimate_difference(&sa, &sb).unwrap());
+            j_est.push(estimate_weighted_jaccard(&sa, &sb).unwrap());
+        }
+        assert!((u_est.mean() - 600.0).abs() / 600.0 < 0.05, "union={}", u_est.mean());
+        assert!((i_est.mean() - 200.0).abs() / 200.0 < 0.2, "inter={}", i_est.mean());
+        assert!((d_est.mean() - 200.0).abs() / 200.0 < 0.2, "diff={}", d_est.mean());
+        assert!((j_est.mean() - 200.0 / 600.0).abs() < 0.05, "jw={}", j_est.mean());
+    }
+
+    #[test]
+    fn difference_union_three_way() {
+        // A = 0..300, B = 100..300, C = 200..400 → A \ (B∪C) = 0..100.
+        let k = 512;
+        let mut stats = OnlineStats::new();
+        for seed in 0..60u32 {
+            let sa = lemiesz_of(k, seed, &(0..300).map(|i| (i, 1.0)).collect::<Vec<_>>());
+            let sb = lemiesz_of(k, seed, &(100..300).map(|i| (i, 1.0)).collect::<Vec<_>>());
+            let sc = lemiesz_of(k, seed, &(200..400).map(|i| (i, 1.0)).collect::<Vec<_>>());
+            stats.push(estimate_difference_union(&sa, &sb, &sc).unwrap());
+        }
+        assert!((stats.mean() - 100.0).abs() / 100.0 < 0.25, "mean={}", stats.mean());
+    }
+
+    #[test]
+    fn empty_sketch_estimates_zero() {
+        let empty = GumbelMaxSketch::empty(crate::sketch::Family::Direct, 1, 16);
+        assert_eq!(estimate_cardinality(&empty), 0.0);
+    }
+
+    #[test]
+    fn weights_change_the_answer() {
+        // Same support, doubled weights → doubled cardinality (what HLL
+        // cannot see; ablation hook).
+        let mut r = SplitMix64::new(1);
+        let items: Vec<(u64, f64)> = (0..200).map(|i| (i, r.next_f64() + 0.5)).collect();
+        let doubled: Vec<(u64, f64)> = items.iter().map(|&(i, w)| (i, 2.0 * w)).collect();
+        let mut ratio = OnlineStats::new();
+        for seed in 0..40u32 {
+            let a = estimate_cardinality(&lemiesz_of(256, seed, &items));
+            let b = estimate_cardinality(&lemiesz_of(256, seed, &doubled));
+            ratio.push(b / a);
+        }
+        assert!((ratio.mean() - 2.0).abs() < 0.05, "ratio={}", ratio.mean());
+    }
+}

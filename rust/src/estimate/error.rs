@@ -1,0 +1,73 @@
+//! RMSE experiment runner: repeats an estimator over independent seeds and
+//! reports the empirical root-mean-square error — the metric of the paper's
+//! §4.3 (Fig. 6 and Fig. 7 are produced through this).
+
+use crate::util::stats::rmse_scalar;
+
+/// Result of an error experiment.
+#[derive(Debug, Clone)]
+pub struct ErrorReport {
+    pub truth: f64,
+    pub mean_estimate: f64,
+    pub rmse: f64,
+    pub runs: usize,
+}
+
+/// Run `estimate(seed)` for `runs` seeds against scalar ground `truth`.
+pub fn rmse_experiment(
+    truth: f64,
+    runs: usize,
+    mut estimate: impl FnMut(u64) -> f64,
+) -> ErrorReport {
+    let estimates: Vec<f64> = (0..runs as u64).map(&mut estimate).collect();
+    ErrorReport {
+        truth,
+        mean_estimate: estimates.iter().sum::<f64>() / runs.max(1) as f64,
+        rmse: rmse_scalar(&estimates, truth),
+        runs,
+    }
+}
+
+/// Paired variant: `estimate(seed)` returns (estimate, truth) per run —
+/// used when the workload itself is resampled per run (Fig. 6's vector
+/// pairs).
+pub fn rmse_experiment_paired(
+    runs: usize,
+    mut run: impl FnMut(u64) -> (f64, f64),
+) -> ErrorReport {
+    let pairs: Vec<(f64, f64)> = (0..runs as u64).map(&mut run).collect();
+    let se: f64 = pairs.iter().map(|(e, t)| (e - t) * (e - t)).sum();
+    let mean_t = pairs.iter().map(|(_, t)| t).sum::<f64>() / runs.max(1) as f64;
+    let mean_e = pairs.iter().map(|(e, _)| e).sum::<f64>() / runs.max(1) as f64;
+    ErrorReport {
+        truth: mean_t,
+        mean_estimate: mean_e,
+        rmse: (se / runs.max(1) as f64).sqrt(),
+        runs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_estimator_has_zero_rmse() {
+        let r = rmse_experiment(5.0, 10, |_| 5.0);
+        assert_eq!(r.rmse, 0.0);
+        assert_eq!(r.mean_estimate, 5.0);
+    }
+
+    #[test]
+    fn biased_estimator_rmse_equals_bias() {
+        let r = rmse_experiment(5.0, 10, |_| 6.0);
+        assert!((r.rmse - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paired_runner_averages() {
+        let r = rmse_experiment_paired(4, |s| (s as f64, s as f64 + 0.5));
+        assert!((r.rmse - 0.5).abs() < 1e-12);
+        assert!((r.truth - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,178 @@
+//! Jaccard similarities: exact computations on sparse vectors (ground
+//! truth) and the sketch-based estimators.
+//!
+//! * `J_P(u,v) = Σ_{i∈N⁺_{u,v}} 1 / Σ_l max(u_l/u_i, v_l/v_i)` — probability
+//!   Jaccard (Moulton & Jiang). Estimated by the ArgMax-register match
+//!   fraction; unbiased with variance `J(1-J)/k` (Theorem 1).
+//! * `J_W(u,v) = Σ min(u_i,v_i) / Σ max(u_i,v_i)` — weighted Jaccard
+//!   (ground truth for BagMinHash/ICWS and the simnet Fig. 10d metric).
+
+use crate::sketch::{GumbelMaxSketch, MergeError, SparseVector, EMPTY_REGISTER};
+use std::collections::HashMap;
+
+/// Exact probability Jaccard similarity.
+pub fn probability_jaccard(u: &SparseVector, v: &SparseVector) -> f64 {
+    let mu: HashMap<u64, f64> = u.positive().collect();
+    let mv: HashMap<u64, f64> = v.positive().collect();
+    let mut total = 0.0;
+    for (&i, &ui) in &mu {
+        let Some(&vi) = mv.get(&i) else { continue };
+        // denom = Σ_l max(u_l/u_i, v_l/v_i), over the union support.
+        let mut denom = 0.0;
+        for (&l, &ul) in &mu {
+            let vl = mv.get(&l).copied().unwrap_or(0.0);
+            denom += (ul / ui).max(vl / vi);
+        }
+        for (&l, &vl) in &mv {
+            if !mu.contains_key(&l) {
+                denom += vl / vi;
+            }
+        }
+        total += 1.0 / denom;
+    }
+    total
+}
+
+/// Exact weighted Jaccard similarity.
+pub fn weighted_jaccard(u: &SparseVector, v: &SparseVector) -> f64 {
+    let mu: HashMap<u64, f64> = u.positive().collect();
+    let mv: HashMap<u64, f64> = v.positive().collect();
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (&i, &ui) in &mu {
+        let vi = mv.get(&i).copied().unwrap_or(0.0);
+        num += ui.min(vi);
+        den += ui.max(vi);
+    }
+    for (&i, &vi) in &mv {
+        if !mu.contains_key(&i) {
+            den += vi;
+        }
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Estimate `J_P` from two Gumbel-Max sketches: the fraction of ArgMax
+/// registers that agree. Errors on family/seed/length mismatch.
+pub fn estimate_jp(
+    a: &GumbelMaxSketch,
+    b: &GumbelMaxSketch,
+) -> Result<f64, MergeError> {
+    a.check_compatible(b)?;
+    let k = a.k();
+    let m = (0..k)
+        .filter(|&j| a.s[j] != EMPTY_REGISTER && a.s[j] == b.s[j])
+        .count();
+    Ok(m as f64 / k as f64)
+}
+
+/// Theoretical standard deviation of the J_P estimator (Theorem 1).
+pub fn jp_estimator_std(jp: f64, k: usize) -> f64 {
+    (jp * (1.0 - jp) / k as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::fastgm::FastGm;
+    use crate::sketch::pminhash::PMinHash;
+    use crate::sketch::{Family, Sketcher};
+    use crate::util::proptest::forall_explain;
+    use crate::util::rng::SplitMix64;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn jp_identical_vectors_is_one() {
+        let v = SparseVector::new(vec![1, 2, 3], vec![0.2, 0.5, 0.3]);
+        assert!((probability_jaccard(&v, &v) - 1.0).abs() < 1e-12);
+        assert!((weighted_jaccard(&v, &v) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jp_disjoint_is_zero() {
+        let u = SparseVector::new(vec![1], vec![1.0]);
+        let v = SparseVector::new(vec![2], vec![1.0]);
+        assert_eq!(probability_jaccard(&u, &v), 0.0);
+        assert_eq!(weighted_jaccard(&u, &v), 0.0);
+    }
+
+    #[test]
+    fn jp_is_scale_invariant_jw_is_not() {
+        let u = SparseVector::new(vec![1, 2], vec![1.0, 2.0]);
+        let v = SparseVector::new(vec![1, 2, 3], vec![2.0, 1.0, 1.0]);
+        let v_scaled = SparseVector::new(vec![1, 2, 3], vec![6.0, 3.0, 3.0]);
+        let a = probability_jaccard(&u, &v);
+        let b = probability_jaccard(&u, &v_scaled);
+        assert!((a - b).abs() < 1e-12, "J_P must be scale-invariant");
+        let wa = weighted_jaccard(&u, &v);
+        let wb = weighted_jaccard(&u, &v_scaled);
+        assert!((wa - wb).abs() > 0.05, "J_W must change under scaling");
+    }
+
+    #[test]
+    fn jp_symmetry_property() {
+        forall_explain(
+            40,
+            |r| {
+                let n = r.next_range(1, 12);
+                let mk = |r: &mut SplitMix64| {
+                    SparseVector::new(
+                        (0..n as u64).collect(),
+                        (0..n).map(|_| if r.next_f64() < 0.3 { 0.0 } else { r.next_exp() }).collect(),
+                    )
+                };
+                (mk(r), mk(r))
+            },
+            |(u, v)| {
+                let a = probability_jaccard(u, v);
+                let b = probability_jaccard(v, u);
+                if (a - b).abs() < 1e-9 && (0.0..=1.0 + 1e-9).contains(&a) {
+                    Ok(())
+                } else {
+                    Err(format!("J_P asymmetric or out of range: {a} vs {b}"))
+                }
+            },
+        );
+    }
+
+    /// Theorem 1: the sketch estimator is unbiased for J_P with variance
+    /// J(1-J)/k — check both with the Ordered (FastGM) and Direct
+    /// (P-MinHash) families.
+    #[test]
+    fn estimator_unbiased_both_families() {
+        let u = SparseVector::new(vec![1, 2, 3, 4], vec![1.0, 0.5, 2.0, 0.0]);
+        let v = SparseVector::new(vec![1, 2, 3, 5], vec![0.5, 0.5, 1.0, 1.0]);
+        let truth = probability_jaccard(&u, &v);
+        let k = 256;
+        let runs = 80;
+
+        let mut ord = OnlineStats::new();
+        let mut dir = OnlineStats::new();
+        for seed in 0..runs {
+            let f = FastGm::new(k, seed as u64);
+            ord.push(estimate_jp(&f.sketch(&u), &f.sketch(&v)).unwrap());
+            let p = PMinHash::new(k, seed);
+            dir.push(estimate_jp(&p.sketch(&u), &p.sketch(&v)).unwrap());
+        }
+        let tol = 3.0 * jp_estimator_std(truth, k) / (runs as f64).sqrt();
+        assert!((ord.mean() - truth).abs() < tol, "ordered mean={} truth={truth}", ord.mean());
+        assert!((dir.mean() - truth).abs() < tol, "direct mean={} truth={truth}", dir.mean());
+        // Variance within 2x of theory (loose; runs is small).
+        let theo_var = truth * (1.0 - truth) / k as f64;
+        assert!(ord.var() < 2.5 * theo_var && ord.var() > theo_var / 2.5,
+            "ordered var={} theory={theo_var}", ord.var());
+    }
+
+    #[test]
+    fn estimator_rejects_cross_family() {
+        let v = SparseVector::new(vec![1], vec![1.0]);
+        let a = FastGm::new(16, 1).sketch(&v);
+        let b = PMinHash::new(16, 1).sketch(&v);
+        assert!(matches!(estimate_jp(&a, &b), Err(MergeError::FamilyMismatch(_, _))));
+        assert_eq!(a.family, Family::Ordered);
+    }
+}

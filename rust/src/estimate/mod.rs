@@ -1,0 +1,8 @@
+//! Estimators over Gumbel-Max sketches: probability/weighted Jaccard
+//! similarity ([`jaccard`]), weighted cardinality and the mergeable set
+//! algebra of Lemiesz ([`cardinality`]), and an RMSE experiment runner
+//! ([`error`]) used by the Fig. 6/7 reproductions.
+
+pub mod jaccard;
+pub mod cardinality;
+pub mod error;

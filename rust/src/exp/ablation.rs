@@ -1,0 +1,124 @@
+//! Ablations beyond the paper's figures (DESIGN.md §4, A1/A2):
+//!
+//! * **A1 `ablation-delta`** — FastSearch budget step Δ. The paper claims
+//!   low sensitivity; we sweep Δ ∈ {k/4 … 8k} and report time + variables
+//!   released (output is provably Δ-invariant; a unit test asserts it).
+//! * **A2 `ablation-accel`** — dense-batch throughput: CPU FastGM vs CPU
+//!   P-MinHash vs the AOT accelerator (when artifacts are built), across
+//!   batch sizes. Locates the sparse/dense crossover the router encodes.
+
+use super::ExpOptions;
+use crate::data::synthetic::{dense_vector, WeightDist};
+use crate::sketch::fastgm::FastGm;
+use crate::sketch::pminhash::PMinHash;
+use crate::sketch::{Sketcher, SparseVector};
+use crate::util::rng::SplitMix64;
+use crate::util::stats::{fmt_duration, Table};
+use std::time::Instant;
+
+pub fn run_delta(opts: &ExpOptions) -> anyhow::Result<()> {
+    let b = opts.bencher();
+    let k = 1024;
+    let n = if opts.full { 10_000 } else { 2000 };
+    let mut rng = SplitMix64::new(0xAB1);
+    let v = dense_vector(&mut rng, n, WeightDist::Uniform01);
+
+    let mut t = Table::new(&["delta", "time", "released", "vs delta=k"]);
+    let deltas = [k / 4, k / 2, k, 2 * k, 4 * k, 8 * k];
+    let mut base_time = 0.0;
+    for &delta in &deltas {
+        let fg = FastGm::new(k, 1).with_delta(delta);
+        let r = b.run(&format!("delta{delta}"), || fg.sketch(&v));
+        let (_, stats) = fg.sketch_counted(&v);
+        if delta == k {
+            base_time = r.median;
+        }
+        t.row(vec![
+            format!("{}k", delta as f64 / k as f64),
+            fmt_duration(r.median),
+            stats.total_released().to_string(),
+            if base_time > 0.0 { format!("{:.2}x", r.median / base_time) } else { "-".into() },
+        ]);
+    }
+    opts.emit("ablation_delta", "A1: FastSearch step Δ sensitivity (k=1024)", &t)?;
+    Ok(())
+}
+
+pub fn run_accel(opts: &ExpOptions) -> anyhow::Result<()> {
+    let k = 256;
+    let n = 1024; // dense length matching the compiled bucket
+    let batch = if opts.full { 256 } else { 64 };
+    let mut rng = SplitMix64::new(0xAB2);
+    let rows: Vec<Vec<f64>> = (0..batch)
+        .map(|_| (0..n).map(|_| if rng.next_f64() < 0.5 { 0.0 } else { rng.next_f64() }).collect())
+        .collect();
+    let sparse: Vec<SparseVector> =
+        rows.iter().map(|r| SparseVector::from_dense(r)).collect();
+
+    let mut t = Table::new(&["engine", "batch", "total", "per-vector", "family"]);
+
+    // CPU FastGM (Ordered).
+    let fg = FastGm::new(k, 42);
+    let t0 = Instant::now();
+    for v in &sparse {
+        std::hint::black_box(fg.sketch(v));
+    }
+    let t_fg = t0.elapsed().as_secs_f64();
+    t.row(vec![
+        "cpu fastgm".into(),
+        batch.to_string(),
+        fmt_duration(t_fg),
+        fmt_duration(t_fg / batch as f64),
+        "ordered".into(),
+    ]);
+
+    // CPU P-MinHash (Direct, the dense baseline).
+    let pm = PMinHash::new(k, 42);
+    let t0 = Instant::now();
+    for v in &sparse {
+        std::hint::black_box(pm.sketch(v));
+    }
+    let t_pm = t0.elapsed().as_secs_f64();
+    t.row(vec![
+        "cpu pminhash".into(),
+        batch.to_string(),
+        fmt_duration(t_pm),
+        fmt_duration(t_pm / batch as f64),
+        "direct".into(),
+    ]);
+
+    // Accelerator (Direct), if artifacts are present. Runtime is !Send so
+    // build and use it inline on this thread.
+    let dir = "artifacts";
+    if std::path::Path::new(dir).join("manifest.json").exists() {
+        match crate::runtime::Runtime::load(dir)
+            .and_then(crate::runtime::accel::DenseSketchAccel::new)
+        {
+            Ok(accel) => {
+                // Warm-up execution (first PJRT call pays setup).
+                let _ = accel.sketch_batch(42, &rows[0..1.min(rows.len())], k);
+                let t0 = Instant::now();
+                let out = accel.sketch_batch(42, &rows, k)?;
+                let t_ac = t0.elapsed().as_secs_f64();
+                assert_eq!(out.len(), batch);
+                t.row(vec![
+                    "aot accel (pjrt cpu)".into(),
+                    batch.to_string(),
+                    fmt_duration(t_ac),
+                    fmt_duration(t_ac / batch as f64),
+                    "direct".into(),
+                ]);
+            }
+            Err(e) => log::warn!("accelerator unavailable for ablation: {e}"),
+        }
+    } else {
+        log::warn!("artifacts not built; ablation-accel reports CPU rows only");
+    }
+
+    opts.emit(
+        "ablation_accel",
+        "A2: dense-batch engines (n=1024, k=256) — CPU vs AOT accelerator",
+        &t,
+    )?;
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Fig. 11 — sensor-network sketching time: total per-node sketch build
+//! cost across the simulated network, Stream-FastGM vs Lemiesz.
+//! (a) d=30, varying k; (b) k=1024, varying depth.
+//! Paper shape: Stream-FastGM ~52× faster at k=2048; speedup grows with k.
+
+use super::ExpOptions;
+use crate::simnet::{NodeSketcher, SimNet, SimParams};
+use crate::util::stats::{fmt_duration, Table};
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    let base = if opts.full {
+        SimParams::default()
+    } else {
+        SimParams { depth: 8, packets_per_source: 1500, ..SimParams::default() }
+    };
+
+    // (a) varying k at fixed depth.
+    let ks: Vec<usize> =
+        if opts.full { vec![64, 256, 1024, 2048] } else { vec![64, 256, 1024] };
+    let mut t = Table::new(&["d", "k", "stream-fastgm", "lemiesz", "speedup"]);
+    for &k in &ks {
+        let p = SimParams { k, ..base };
+        let tf = SimNet::run(p, NodeSketcher::StreamFastGm).sketch_seconds;
+        let tl = SimNet::run(p, NodeSketcher::Lemiesz).sketch_seconds;
+        t.row(vec![
+            base.depth.to_string(),
+            k.to_string(),
+            fmt_duration(tf),
+            fmt_duration(tl),
+            format!("{:.1}x", tl / tf),
+        ]);
+    }
+    opts.emit("fig11_a", "Fig 11(a): per-network sketching time vs k", &t)?;
+
+    // (b) varying depth at fixed k.
+    let k = if opts.full { 1024 } else { 256 };
+    let depths: Vec<usize> = if opts.full { vec![10, 20, 30, 40] } else { vec![4, 8, 12] };
+    let mut t2 = Table::new(&["k", "d", "stream-fastgm", "lemiesz", "speedup"]);
+    for &d in &depths {
+        let p = SimParams { depth: d, k, ..base };
+        let tf = SimNet::run(p, NodeSketcher::StreamFastGm).sketch_seconds;
+        let tl = SimNet::run(p, NodeSketcher::Lemiesz).sketch_seconds;
+        t2.row(vec![
+            k.to_string(),
+            d.to_string(),
+            fmt_duration(tf),
+            fmt_duration(tl),
+            format!("{:.1}x", tl / tf),
+        ]);
+    }
+    opts.emit("fig11_b", "Fig 11(b): per-network sketching time vs depth", &t2)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "timing ratios need --release")]
+    fn stream_fastgm_faster_in_network() {
+        let p = SimParams { depth: 4, packets_per_source: 1000, k: 512, ..SimParams::default() };
+        let tf = SimNet::run(p, NodeSketcher::StreamFastGm).sketch_seconds;
+        let tl = SimNet::run(p, NodeSketcher::Lemiesz).sketch_seconds;
+        assert!(tl / tf > 2.0, "expected >2x, got {:.1}x", tl / tf);
+    }
+}

@@ -1,0 +1,135 @@
+//! Fig. 4 — Task-1 sketching efficiency on synthetic vectors (UNI(0,1)
+//! weights): FastGM vs FastGM-c vs P-MinHash vs BagMinHash.
+//! (a–c) time vs k at fixed n; (d–f) time vs n at fixed k.
+//! Paper shape: FastGM ≫ P-MinHash (13–125×), FastGM > BagMinHash below
+//! n ≈ 10⁵, FastGM 1.2–4× FastGM-c.
+
+use super::ExpOptions;
+use crate::data::synthetic::{dense_vector, WeightDist};
+use crate::sketch::bagminhash::BagMinHash;
+use crate::sketch::fastgm::FastGm;
+use crate::sketch::fastgm_c::FastGmConference;
+use crate::sketch::pminhash::PMinHash;
+use crate::sketch::{Sketcher, SparseVector};
+use crate::util::bench::Suite;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::{fmt_duration, Table};
+
+pub const ALGOS: &[&str] = &["fastgm", "fastgm-c", "pminhash", "bagminhash"];
+
+/// Median seconds to sketch `v` with each algorithm at length k.
+pub fn time_all(
+    opts: &ExpOptions,
+    suite: &mut Suite,
+    label: &str,
+    v: &SparseVector,
+    k: usize,
+) -> Vec<(String, f64)> {
+    let b = opts.bencher();
+    let mut out = Vec::new();
+    let fg = FastGm::new(k, 1);
+    out.push(("fastgm".into(), {
+        let r = b.run(&format!("{label}/fastgm"), || fg.sketch(v));
+        let m = r.median;
+        suite.record(r);
+        m
+    }));
+    let fgc = FastGmConference::new(k, 1);
+    out.push(("fastgm-c".into(), {
+        let r = b.run(&format!("{label}/fastgm-c"), || fgc.sketch(v));
+        let m = r.median;
+        suite.record(r);
+        m
+    }));
+    let pm = PMinHash::new(k, 1);
+    out.push(("pminhash".into(), {
+        let r = b.run(&format!("{label}/pminhash"), || pm.sketch(v));
+        let m = r.median;
+        suite.record(r);
+        m
+    }));
+    let bm = BagMinHash::new(k, 1);
+    out.push(("bagminhash".into(), {
+        let r = b.run(&format!("{label}/bagminhash"), || bm.sketch(v));
+        let m = r.median;
+        suite.record(r);
+        m
+    }));
+    out
+}
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    let mut rng = SplitMix64::new(0xF16_4);
+    let mut suite = Suite::new().with_jsonl(&opts.jsonl_path("fig4"));
+
+    // (a–c): time vs k at fixed n.
+    let ks: Vec<usize> =
+        if opts.full { vec![64, 128, 256, 512, 1024, 2048, 4096] } else { vec![64, 256, 1024] };
+    let ns: Vec<usize> = if opts.full { vec![100, 1000, 10_000] } else { vec![100, 1000] };
+    let mut t = Table::new(&["n", "k", "fastgm", "fastgm-c", "pminhash", "bagminhash", "speedup vs pminhash"]);
+    for &n in &ns {
+        let v = dense_vector(&mut rng, n, WeightDist::Uniform01);
+        for &k in &ks {
+            let res = time_all(opts, &mut suite, &format!("fig4/n{n}/k{k}"), &v, k);
+            let fast = res[0].1;
+            let pm = res[2].1;
+            t.row(vec![
+                n.to_string(),
+                k.to_string(),
+                fmt_duration(res[0].1),
+                fmt_duration(res[1].1),
+                fmt_duration(res[2].1),
+                fmt_duration(res[3].1),
+                format!("{:.1}x", pm / fast),
+            ]);
+        }
+    }
+    opts.emit("fig4_abc", "Fig 4(a-c): sketch time vs k (UNI(0,1) weights)", &t)?;
+
+    // (d–f): time vs n at fixed k.
+    let ks2: Vec<usize> = if opts.full { vec![256, 1024, 4096] } else { vec![256] };
+    let ns2: Vec<usize> =
+        if opts.full { vec![100, 1000, 10_000, 100_000] } else { vec![100, 1000, 10_000] };
+    let mut t2 = Table::new(&["k", "n", "fastgm", "fastgm-c", "pminhash", "bagminhash", "speedup vs pminhash"]);
+    for &k in &ks2 {
+        for &n in &ns2 {
+            let v = dense_vector(&mut rng, n, WeightDist::Uniform01);
+            let res = time_all(opts, &mut suite, &format!("fig4/k{k}/n{n}"), &v, k);
+            t2.row(vec![
+                k.to_string(),
+                n.to_string(),
+                fmt_duration(res[0].1),
+                fmt_duration(res[1].1),
+                fmt_duration(res[2].1),
+                fmt_duration(res[3].1),
+                format!("{:.1}x", res[2].1 / res[0].1),
+            ]);
+        }
+    }
+    opts.emit("fig4_def", "Fig 4(d-f): sketch time vs n (UNI(0,1) weights)", &t2)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's headline: FastGM beats P-MinHash by a growing factor.
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "timing ratios need --release")]
+    fn fastgm_beats_pminhash_at_moderate_scale() {
+        let opts = ExpOptions { out_dir: std::env::temp_dir().join("fastgm_fig4_test").to_str().unwrap().into(), full: false };
+        let mut rng = SplitMix64::new(1);
+        let v = dense_vector(&mut rng, 2000, WeightDist::Uniform01);
+        let mut suite = Suite::new();
+        let res = time_all(&opts, &mut suite, "test", &v, 512);
+        let fast = res.iter().find(|(n, _)| n == "fastgm").unwrap().1;
+        let pm = res.iter().find(|(n, _)| n == "pminhash").unwrap().1;
+        assert!(
+            pm / fast > 3.0,
+            "expected ≥3x speedup at n=2000,k=512; got {:.2}x",
+            pm / fast
+        );
+        let _ = std::fs::remove_dir_all(&opts.out_dir);
+    }
+}

@@ -1,0 +1,63 @@
+//! Fig. 5 — Task-1 sketching efficiency on the six real-dataset analogs
+//! (Table 1): mean per-vector sketch time across k for FastGM, FastGM-c,
+//! P-MinHash and BagMinHash. Paper shape: FastGM fastest everywhere,
+//! ~8–26× over P-MinHash on the sparse text corpora.
+
+use super::ExpOptions;
+use crate::data::corpus::{Corpus, CORPORA};
+use crate::sketch::bagminhash::BagMinHash;
+use crate::sketch::fastgm::FastGm;
+use crate::sketch::fastgm_c::FastGmConference;
+use crate::sketch::pminhash::PMinHash;
+use crate::sketch::Sketcher;
+use crate::util::stats::{fmt_duration, Table};
+use std::time::Instant;
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    let ks: Vec<usize> = if opts.full { vec![64, 256, 1024, 4096] } else { vec![256] };
+    let vectors_per_corpus = if opts.full { 300 } else { 60 };
+
+    let mut t = Table::new(&[
+        "dataset", "k", "fastgm", "fastgm-c", "pminhash", "bagminhash", "speedup vs pminhash",
+    ]);
+    for spec in CORPORA {
+        let corpus = Corpus::new(*spec, 7);
+        let vectors = corpus.vectors(vectors_per_corpus);
+        for &k in &ks {
+            let fg = FastGm::new(k, 1);
+            let fgc = FastGmConference::new(k, 1);
+            let pm = PMinHash::new(k, 1);
+            let bm = BagMinHash::new(k, 1);
+            let time_per_vec = |f: &dyn Fn(&crate::sketch::SparseVector)| {
+                let t0 = Instant::now();
+                for v in &vectors {
+                    f(v);
+                }
+                t0.elapsed().as_secs_f64() / vectors.len() as f64
+            };
+            let t_fg = time_per_vec(&|v| {
+                fg.sketch(v);
+            });
+            let t_fgc = time_per_vec(&|v| {
+                fgc.sketch(v);
+            });
+            let t_pm = time_per_vec(&|v| {
+                pm.sketch(v);
+            });
+            let t_bm = time_per_vec(&|v| {
+                bm.sketch(v);
+            });
+            t.row(vec![
+                spec.name.to_string(),
+                k.to_string(),
+                fmt_duration(t_fg),
+                fmt_duration(t_fgc),
+                fmt_duration(t_pm),
+                fmt_duration(t_bm),
+                format!("{:.1}x", t_pm / t_fg),
+            ]);
+        }
+    }
+    opts.emit("fig5", "Fig 5: per-vector sketch time on dataset analogs", &t)?;
+    Ok(())
+}

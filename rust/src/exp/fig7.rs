@@ -1,0 +1,94 @@
+//! Fig. 7 — weighted cardinality estimation RMSE on synthetic datasets,
+//! weights UNI(0,1) and N(1, 0.1), FastGM sketch vs Lemiesz's sketch.
+//! Paper shape: identical accuracy (both `y` parts are EXP(c) registers),
+//! relative RMSE ≈ √(2/k).
+
+use super::ExpOptions;
+use crate::data::stream::generate;
+use crate::data::synthetic::WeightDist;
+use crate::estimate::cardinality::{cardinality_rel_std, estimate_cardinality};
+use crate::sketch::lemiesz::LemieszSketch;
+use crate::sketch::stream_fastgm::StreamFastGm;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Table;
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    let ks: Vec<usize> = if opts.full { vec![64, 128, 256, 512, 1024] } else { vec![64, 256] };
+    let ns: Vec<usize> = if opts.full { vec![1000, 10_000] } else { vec![1000] };
+    let runs = if opts.full { 200 } else { 50 };
+    let dists = [WeightDist::Uniform01, WeightDist::Normal(1.0, 0.1)];
+
+    let mut t = Table::new(&[
+        "weights", "n", "k", "rel-RMSE fastgm", "rel-RMSE lemiesz", "theory sqrt(2/k)",
+    ]);
+    for dist in dists {
+        for &n in &ns {
+            let mut rng = SplitMix64::new(0xF16_7);
+            let stream = generate(&mut rng, n, 1.0, dist, 0);
+            let truth = stream.weighted_cardinality();
+            for &k in &ks {
+                let mut se_f = 0.0;
+                let mut se_l = 0.0;
+                for seed in 0..runs as u64 {
+                    let mut f = StreamFastGm::new(k, seed);
+                    let mut l = LemieszSketch::new(k, seed as u32);
+                    for &(id, w) in &stream.events {
+                        f.push(id, w);
+                        l.push(id, w);
+                    }
+                    let ef = estimate_cardinality(&f.sketch());
+                    let el = estimate_cardinality(&l.sketch());
+                    se_f += (ef / truth - 1.0) * (ef / truth - 1.0);
+                    se_l += (el / truth - 1.0) * (el / truth - 1.0);
+                }
+                t.row(vec![
+                    dist.name(),
+                    n.to_string(),
+                    k.to_string(),
+                    format!("{:.4}", (se_f / runs as f64).sqrt()),
+                    format!("{:.4}", (se_l / runs as f64).sqrt()),
+                    format!("{:.4}", cardinality_rel_std(k)),
+                ]);
+            }
+        }
+    }
+    opts.emit("fig7", "Fig 7: weighted cardinality rel-RMSE vs k", &t)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// FastGM's and Lemiesz's estimators have the same error profile,
+    /// matching √(2/k) — the Fig. 7 claim.
+    #[test]
+    fn both_sketches_match_theory() {
+        let mut rng = SplitMix64::new(5);
+        let stream = generate(&mut rng, 500, 0.5, WeightDist::Uniform01, 0);
+        let truth = stream.weighted_cardinality();
+        let k = 256;
+        let runs = 60;
+        let mut se_f = 0.0;
+        let mut se_l = 0.0;
+        for seed in 0..runs as u64 {
+            let mut f = StreamFastGm::new(k, seed);
+            let mut l = LemieszSketch::new(k, seed as u32);
+            for &(id, w) in &stream.events {
+                f.push(id, w);
+                l.push(id, w);
+            }
+            se_f += (estimate_cardinality(&f.sketch()) / truth - 1.0).powi(2);
+            se_l += (estimate_cardinality(&l.sketch()) / truth - 1.0).powi(2);
+        }
+        let rmse_f = (se_f / runs as f64).sqrt();
+        let rmse_l = (se_l / runs as f64).sqrt();
+        let theory = cardinality_rel_std(k);
+        for (name, rmse) in [("fastgm", rmse_f), ("lemiesz", rmse_l)] {
+            assert!(
+                rmse < 1.6 * theory && rmse > theory / 1.6,
+                "{name}: rmse={rmse} theory={theory}"
+            );
+        }
+    }
+}

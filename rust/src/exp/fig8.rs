@@ -1,0 +1,93 @@
+//! Fig. 8 — streaming sketch generation time: Stream-FastGM vs Lemiesz's
+//! sketch. (a) n=1000 objects, varying k; (b) k=1024, varying n.
+//! Paper shape: Stream-FastGM 23× faster at n=1000 (average over k),
+//! ~120× at n=10⁶ with k=1024.
+
+use super::ExpOptions;
+use crate::data::stream::{generate, Stream};
+use crate::data::synthetic::WeightDist;
+use crate::sketch::lemiesz::LemieszSketch;
+use crate::sketch::stream_fastgm::StreamFastGm;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::{fmt_duration, Table};
+use std::time::Instant;
+
+fn time_stream_fastgm(stream: &Stream, k: usize) -> f64 {
+    let t0 = Instant::now();
+    let mut s = StreamFastGm::new(k, 1);
+    for &(id, w) in &stream.events {
+        s.push(id, w);
+    }
+    std::hint::black_box(s.sketch());
+    t0.elapsed().as_secs_f64()
+}
+
+fn time_lemiesz(stream: &Stream, k: usize) -> f64 {
+    let t0 = Instant::now();
+    let mut s = LemieszSketch::new(k, 1);
+    for &(id, w) in &stream.events {
+        s.push(id, w);
+    }
+    std::hint::black_box(s.sketch());
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
+    let mut rng = SplitMix64::new(0xF16_8);
+
+    // (a) n = 1000, varying k.
+    let ks: Vec<usize> =
+        if opts.full { vec![64, 128, 256, 512, 1024, 2048, 4096] } else { vec![64, 256, 1024] };
+    let stream = generate(&mut rng, 1000, 1.0, WeightDist::Uniform01, 0);
+    let mut t = Table::new(&["n", "k", "stream-fastgm", "lemiesz", "speedup"]);
+    for &k in &ks {
+        let tf = time_stream_fastgm(&stream, k);
+        let tl = time_lemiesz(&stream, k);
+        t.row(vec![
+            "1000".into(),
+            k.to_string(),
+            fmt_duration(tf),
+            fmt_duration(tl),
+            format!("{:.1}x", tl / tf),
+        ]);
+    }
+    opts.emit("fig8_a", "Fig 8(a): streaming sketch time vs k (n=1000)", &t)?;
+
+    // (b) k = 1024, varying n.
+    let k = 1024;
+    let ns: Vec<usize> =
+        if opts.full { vec![1000, 10_000, 100_000, 1_000_000] } else { vec![1000, 10_000, 50_000] };
+    let mut t2 = Table::new(&["k", "n", "stream-fastgm", "lemiesz", "speedup"]);
+    for &n in &ns {
+        let stream = generate(&mut rng, n, 0.5, WeightDist::Uniform01, 0);
+        let tf = time_stream_fastgm(&stream, k);
+        let tl = time_lemiesz(&stream, k);
+        t2.row(vec![
+            k.to_string(),
+            n.to_string(),
+            fmt_duration(tf),
+            fmt_duration(tl),
+            format!("{:.1}x", tl / tf),
+        ]);
+    }
+    opts.emit("fig8_b", "Fig 8(b): streaming sketch time vs n (k=1024)", &t2)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The headline Task-2 efficiency claim, scaled down: Stream-FastGM
+    /// must beat Lemiesz by a wide, k-growing margin.
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "timing ratios need --release")]
+    fn stream_fastgm_dominates_lemiesz() {
+        let mut rng = SplitMix64::new(2);
+        let stream = generate(&mut rng, 2000, 0.5, WeightDist::Uniform01, 0);
+        let s512 = time_lemiesz(&stream, 512) / time_stream_fastgm(&stream, 512);
+        assert!(s512 > 2.0, "expected >2x at k=512, got {s512:.1}x");
+        let s64 = time_lemiesz(&stream, 64) / time_stream_fastgm(&stream, 64);
+        assert!(s512 > s64, "speedup should grow with k: {s64:.1}x -> {s512:.1}x");
+    }
+}

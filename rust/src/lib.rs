@@ -1,0 +1,29 @@
+//! # FastGM — Fast Gumbel-Max Sketch and its Applications
+//!
+//! A full-system reproduction of the TKDE paper *"Fast Gumbel-Max Sketch and
+//! its Applications"* (Zhang et al.), built as a three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the request-path coordinator: sketch
+//!   algorithms ([`sketch`]), estimators ([`estimate`]), LSH index ([`lsh`]),
+//!   dataset substrate ([`data`]), sensor-network simulator ([`simnet`]),
+//!   and a serving coordinator ([`coordinator`]) with router, batcher,
+//!   worker pool and backpressure.
+//! * **Layer 2/1 (python/, build-time only)** — a JAX model and Pallas
+//!   kernels AOT-lowered to HLO text, loaded on the request path by
+//!   [`runtime`] through the PJRT CPU client (`xla` crate).
+//!
+//! The paper's contribution — computing a k-length Gumbel-Max sketch in
+//! `O(k ln k + n⁺)` instead of `O(k n⁺)` — lives in [`sketch::fastgm`] and
+//! [`sketch::stream_fastgm`]; every baseline it is evaluated against in the
+//! paper is implemented alongside it (see DESIGN.md §4 for the experiment
+//! index).
+
+pub mod util;
+pub mod sketch;
+pub mod estimate;
+pub mod lsh;
+pub mod data;
+pub mod simnet;
+pub mod coordinator;
+pub mod runtime;
+pub mod exp;

@@ -1,0 +1,271 @@
+//! Locality-sensitive hashing over Gumbel-ArgMax sketches.
+//!
+//! The paper (§1) notes that each `s_j(·)` maps similar vectors to the same
+//! value with probability `J_P`, so the classic banding scheme applies:
+//! split the k registers into `b` bands of `r` rows; two vectors collide in
+//! a band iff all r registers match, so
+//! `P(candidate) = 1 − (1 − J_P^r)^b` — the usual S-curve. The index stores
+//! band-hash → vector ids and answers top-k queries in sub-linear time,
+//! re-ranking candidates with the full-sketch estimator.
+
+use crate::estimate::jaccard::estimate_jp;
+use crate::sketch::{GumbelMaxSketch, MergeError};
+use crate::util::hash::hash_u64s;
+use std::collections::HashMap;
+
+/// Banding parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct LshParams {
+    pub bands: usize,
+    pub rows: usize,
+}
+
+impl LshParams {
+    /// Choose (bands, rows) for sketch length k targeting threshold `t`:
+    /// the S-curve midpoint is ≈ (1/b)^(1/r); scan divisors of k for the
+    /// closest fit.
+    pub fn for_threshold(k: usize, t: f64) -> LshParams {
+        assert!(k >= 1);
+        let t = t.clamp(0.01, 0.99);
+        let mut best = LshParams { bands: k, rows: 1 };
+        let mut best_err = f64::INFINITY;
+        for rows in 1..=k {
+            if k % rows != 0 {
+                continue;
+            }
+            let bands = k / rows;
+            let mid = (1.0 / bands as f64).powf(1.0 / rows as f64);
+            let err = (mid - t).abs();
+            if err < best_err {
+                best_err = err;
+                best = LshParams { bands, rows };
+            }
+        }
+        best
+    }
+
+    /// Collision probability of the banding scheme at similarity `j`.
+    pub fn candidate_probability(&self, j: f64) -> f64 {
+        1.0 - (1.0 - j.powi(self.rows as i32)).powi(self.bands as i32)
+    }
+}
+
+/// A banded LSH index over ArgMax sketches.
+pub struct LshIndex {
+    params: LshParams,
+    seed: u64,
+    /// band index → (bucket key → vector ids)
+    tables: Vec<HashMap<u64, Vec<u64>>>,
+    /// id → full sketch, for re-ranking.
+    sketches: HashMap<u64, GumbelMaxSketch>,
+}
+
+impl LshIndex {
+    pub fn new(params: LshParams) -> Self {
+        LshIndex {
+            params,
+            seed: 0x15B_5EED,
+            tables: (0..params.bands).map(|_| HashMap::new()).collect(),
+            sketches: HashMap::new(),
+        }
+    }
+
+    pub fn params(&self) -> LshParams {
+        self.params
+    }
+
+    pub fn len(&self) -> usize {
+        self.sketches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sketches.is_empty()
+    }
+
+    fn band_keys(&self, sk: &GumbelMaxSketch) -> Vec<u64> {
+        let LshParams { bands, rows } = self.params;
+        assert!(
+            bands * rows <= sk.k(),
+            "bands*rows ({}) exceeds sketch length {}",
+            bands * rows,
+            sk.k()
+        );
+        (0..bands)
+            .map(|b| hash_u64s(&sk.s[b * rows..(b + 1) * rows], self.seed ^ b as u64))
+            .collect()
+    }
+
+    /// Insert a vector's sketch under `id` (replaces a previous insert).
+    pub fn insert(&mut self, id: u64, sk: GumbelMaxSketch) {
+        if self.sketches.contains_key(&id) {
+            self.remove(id);
+        }
+        for (b, key) in self.band_keys(&sk).into_iter().enumerate() {
+            self.tables[b].entry(key).or_default().push(id);
+        }
+        self.sketches.insert(id, sk);
+    }
+
+    pub fn remove(&mut self, id: u64) -> bool {
+        let Some(sk) = self.sketches.remove(&id) else {
+            return false;
+        };
+        for (b, key) in self.band_keys(&sk).into_iter().enumerate() {
+            if let Some(bucket) = self.tables[b].get_mut(&key) {
+                bucket.retain(|&x| x != id);
+                if bucket.is_empty() {
+                    self.tables[b].remove(&key);
+                }
+            }
+        }
+        true
+    }
+
+    /// Raw candidate set (unique ids colliding in ≥1 band).
+    pub fn candidates(&self, query: &GumbelMaxSketch) -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for (b, key) in self.band_keys(query).into_iter().enumerate() {
+            if let Some(bucket) = self.tables[b].get(&key) {
+                for &id in bucket {
+                    if seen.insert(id) {
+                        out.push(id);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Top-`limit` ids by estimated J_P among the candidates.
+    pub fn query(
+        &self,
+        query: &GumbelMaxSketch,
+        limit: usize,
+    ) -> Result<Vec<(u64, f64)>, MergeError> {
+        let mut scored = Vec::new();
+        for id in self.candidates(query) {
+            let sk = &self.sketches[&id];
+            scored.push((id, estimate_jp(query, sk)?));
+        }
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        scored.truncate(limit);
+        Ok(scored)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::fastgm::FastGm;
+    use crate::sketch::{Sketcher, SparseVector};
+    use crate::util::rng::SplitMix64;
+
+    fn vec_with_overlap(r: &mut SplitMix64, base: &SparseVector, keep: f64) -> SparseVector {
+        // Copy `keep` fraction of base's mass, fresh ids for the rest.
+        let mut v = SparseVector::default();
+        for (id, w) in base.positive() {
+            if r.next_f64() < keep {
+                v.push(id, w);
+            } else {
+                v.push(r.next_u64() | (1 << 63), w);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn params_for_threshold_are_sane() {
+        let p = LshParams::for_threshold(256, 0.5);
+        assert_eq!(p.bands * p.rows, 256);
+        assert!(p.candidate_probability(0.9) > 0.95);
+        assert!(p.candidate_probability(0.05) < 0.35);
+        // S-curve monotone.
+        assert!(p.candidate_probability(0.6) > p.candidate_probability(0.4));
+    }
+
+    #[test]
+    fn near_duplicates_are_found_far_ones_mostly_not() {
+        let mut r = SplitMix64::new(77);
+        let f = FastGm::new(128, 5);
+        let base = SparseVector::new(
+            (0..40u64).collect(),
+            (0..40).map(|_| r.next_f64() + 0.1).collect(),
+        );
+        let mut index = LshIndex::new(LshParams::for_threshold(128, 0.5));
+        // id 0 = near-duplicate (J_P high), ids 1.. = unrelated.
+        let near = vec_with_overlap(&mut r, &base, 0.95);
+        index.insert(0, f.sketch(&near));
+        for id in 1..60u64 {
+            let far = SparseVector::new(
+                (0..40).map(|i| id * 1000 + i).collect(),
+                (0..40).map(|_| r.next_f64() + 0.1).collect(),
+            );
+            index.insert(id, f.sketch(&far));
+        }
+        let hits = index.query(&f.sketch(&base), 5).unwrap();
+        assert_eq!(hits[0].0, 0, "near-duplicate must rank first: {hits:?}");
+        assert!(hits[0].1 > 0.5);
+        // The far vectors should mostly not even be candidates.
+        let cands = index.candidates(&f.sketch(&base));
+        assert!(cands.len() < 30, "too many candidates: {}", cands.len());
+    }
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let f = FastGm::new(64, 1);
+        let v = SparseVector::new(vec![1, 2, 3], vec![1.0, 1.0, 1.0]);
+        let mut index = LshIndex::new(LshParams { bands: 16, rows: 4 });
+        index.insert(9, f.sketch(&v));
+        assert_eq!(index.len(), 1);
+        assert!(!index.candidates(&f.sketch(&v)).is_empty());
+        assert!(index.remove(9));
+        assert!(!index.remove(9));
+        assert!(index.candidates(&f.sketch(&v)).is_empty());
+        assert!(index.is_empty());
+    }
+
+    #[test]
+    fn reinsert_replaces() {
+        let f = FastGm::new(64, 1);
+        let v1 = SparseVector::new(vec![1, 2], vec![1.0, 1.0]);
+        let v2 = SparseVector::new(vec![8, 9], vec![1.0, 1.0]);
+        let mut index = LshIndex::new(LshParams { bands: 16, rows: 4 });
+        index.insert(5, f.sketch(&v1));
+        index.insert(5, f.sketch(&v2));
+        assert_eq!(index.len(), 1);
+        // Query v1 must not find the stale entry in every band.
+        let hits = index.query(&f.sketch(&v2), 1).unwrap();
+        assert_eq!(hits[0].0, 5);
+        assert_eq!(hits[0].1, 1.0);
+    }
+
+    /// Empirical candidate rate tracks the analytic S-curve.
+    #[test]
+    fn candidate_rate_matches_scurve() {
+        let mut r = SplitMix64::new(3);
+        let k = 64;
+        let params = LshParams { bands: 16, rows: 4 };
+        let f = FastGm::new(k, 2);
+        let mut hits = 0;
+        let trials = 200;
+        let mut expected = 0.0;
+        for _ in 0..trials {
+            let base = SparseVector::new(
+                (0..30u64).map(|i| i + (r.next_u64() << 32)).collect(),
+                (0..30).map(|_| r.next_f64() + 0.1).collect(),
+            );
+            let other = vec_with_overlap(&mut r, &base, 0.7);
+            let jp = crate::estimate::jaccard::probability_jaccard(&base, &other);
+            expected += params.candidate_probability(jp);
+            let mut index = LshIndex::new(params);
+            index.insert(1, f.sketch(&other));
+            if !index.candidates(&f.sketch(&base)).is_empty() {
+                hits += 1;
+            }
+        }
+        let rate = hits as f64 / trials as f64;
+        let want = expected / trials as f64;
+        assert!((rate - want).abs() < 0.12, "rate={rate} want={want}");
+    }
+}

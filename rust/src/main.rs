@@ -1,0 +1,280 @@
+//! `fastgm` — launcher CLI for the FastGM sketching service.
+//!
+//! ```text
+//! fastgm serve    [--config cfg.toml] [--addr host:port] [--set k=v ...]
+//! fastgm client   [--addr host:port] (--ping | --metrics | --json '{...}')
+//! fastgm sketch   [--dataset NAME|path:FILE|synthetic] [--k K] [--algo A] [--count N]
+//! fastgm exp      <table1|fig4|...|ablation-delta|ablation-accel|all> [--out DIR] [--full]
+//! fastgm simnet   [--depth D] [--packets N] [--k K]
+//! fastgm info
+//! ```
+
+use fastgm::coordinator::client::Client;
+use fastgm::coordinator::protocol::{decode_request, encode_line, Request};
+use fastgm::coordinator::server::Server;
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::data::corpus::{Corpus, CORPORA};
+use fastgm::data::svmlight;
+use fastgm::data::synthetic::{dense_vector, WeightDist};
+use fastgm::exp::{self, ExpOptions};
+use fastgm::sketch::bagminhash::BagMinHash;
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::fastgm_c::FastGmConference;
+use fastgm::sketch::pminhash::PMinHash;
+use fastgm::sketch::{Sketcher, SparseVector};
+use fastgm::simnet::{NodeSketcher, SimNet, SimParams};
+use fastgm::util::argparse::ArgSpec;
+use fastgm::util::config::Config;
+use fastgm::util::rng::SplitMix64;
+use fastgm::util::stats::fmt_duration;
+use std::sync::Arc;
+
+fn main() {
+    fastgm::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(argv: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = argv.first() else {
+        anyhow::bail!(top_help());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "sketch" => cmd_sketch(rest),
+        "exp" => cmd_exp(rest),
+        "simnet" => cmd_simnet(rest),
+        "info" => cmd_info(),
+        "--help" | "-h" | "help" => {
+            println!("{}", top_help());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}'\n\n{}", top_help()),
+    }
+}
+
+fn top_help() -> String {
+    "fastgm — Fast Gumbel-Max Sketch service (paper reproduction)\n\n\
+     USAGE: fastgm <COMMAND> [OPTIONS]\n\n\
+     COMMANDS:\n\
+       serve    run the sketching coordinator (TCP JSON-lines)\n\
+       client   talk to a running coordinator\n\
+       sketch   sketch a dataset locally and report timing\n\
+       exp      regenerate a paper table/figure (or 'all')\n\
+       simnet   run the braided-chain sensor network simulation\n\
+       info     environment, corpora and artifact status\n\n\
+     Each command accepts --help."
+        .to_string()
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("serve", "run the sketching coordinator")
+        .opt("config", "", "TOML config file")
+        .opt("addr", "127.0.0.1:7878", "listen address")
+        .multi("set", "config override key=value");
+    let args = spec.parse(argv)?;
+    let mut cfg = if args.str("config").is_empty() {
+        Config::new()
+    } else {
+        Config::from_file(&args.str("config"))?
+    };
+    for s in args.all("set") {
+        cfg.set_override(&s)?;
+    }
+    let ccfg = CoordinatorConfig::from_config(&cfg);
+    log::info!(
+        "starting coordinator: k={} workers={} accel={:?}",
+        ccfg.k,
+        ccfg.workers,
+        ccfg.artifacts_dir
+    );
+    let coordinator = Arc::new(Coordinator::new(ccfg)?);
+    let server = Server::start(coordinator, &args.str("addr"))?;
+    println!("fastgm serving on {}", server.addr);
+    // Serve until killed.
+    loop {
+        std::thread::park();
+    }
+}
+
+fn cmd_client(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("client", "talk to a running coordinator")
+        .opt("addr", "127.0.0.1:7878", "server address")
+        .flag("ping", "send a ping")
+        .flag("metrics", "fetch metrics")
+        .opt("json", "", "raw request JSON (one object)");
+    let args = spec.parse(argv)?;
+    let mut client = Client::connect(&args.str("addr"))?;
+    let req = if args.flag("ping") {
+        Request::Ping
+    } else if args.flag("metrics") {
+        Request::Metrics
+    } else if !args.str("json").is_empty() {
+        decode_request(&args.str("json"))?
+    } else {
+        anyhow::bail!("one of --ping | --metrics | --json required");
+    };
+    let resp = client.call(&req)?;
+    println!("{}", encode_line(&resp.to_json()).trim());
+    Ok(())
+}
+
+fn load_dataset(name: &str, count: usize) -> anyhow::Result<Vec<SparseVector>> {
+    if let Some(path) = name.strip_prefix("path:") {
+        return Ok(svmlight::load(path)?.into_iter().take(count).map(|r| r.vector).collect());
+    }
+    if name == "synthetic" {
+        let mut rng = SplitMix64::new(1);
+        return Ok((0..count)
+            .map(|_| dense_vector(&mut rng, 1000, WeightDist::Uniform01))
+            .collect());
+    }
+    let corpus = Corpus::by_name(name, 7)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{name}' (see `fastgm info`)"))?;
+    Ok(corpus.vectors(count))
+}
+
+fn cmd_sketch(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("sketch", "sketch a dataset locally, report timing")
+        .opt("dataset", "synthetic", "synthetic | corpus name | path:FILE (svmlight)")
+        .opt("k", "1024", "sketch length")
+        .opt("algo", "fastgm", "fastgm | fastgm-c | pminhash | bagminhash")
+        .opt("count", "100", "number of vectors")
+        .opt("seed", "1", "sketch seed");
+    let args = spec.parse(argv)?;
+    let k = args.usize("k")?;
+    let seed = args.u64("seed")?;
+    let vectors = load_dataset(&args.str("dataset"), args.usize("count")?)?;
+    anyhow::ensure!(!vectors.is_empty(), "dataset is empty");
+    let t0 = std::time::Instant::now();
+    match args.str("algo").as_str() {
+        "fastgm" => {
+            let s = FastGm::new(k, seed);
+            for v in &vectors {
+                std::hint::black_box(s.sketch(v));
+            }
+        }
+        "fastgm-c" => {
+            let s = FastGmConference::new(k, seed);
+            for v in &vectors {
+                std::hint::black_box(s.sketch(v));
+            }
+        }
+        "pminhash" => {
+            let s = PMinHash::new(k, seed as u32);
+            for v in &vectors {
+                std::hint::black_box(s.sketch(v));
+            }
+        }
+        "bagminhash" => {
+            let s = BagMinHash::new(k, seed);
+            for v in &vectors {
+                std::hint::black_box(s.sketch(v));
+            }
+        }
+        other => anyhow::bail!("unknown algo '{other}'"),
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let mean_np =
+        vectors.iter().map(|v| v.n_plus()).sum::<usize>() as f64 / vectors.len() as f64;
+    println!(
+        "{} vectors (mean n+ {:.1}), k={k}, algo={}: total {}, per-vector {}",
+        vectors.len(),
+        mean_np,
+        args.str("algo"),
+        fmt_duration(dt),
+        fmt_duration(dt / vectors.len() as f64)
+    );
+    Ok(())
+}
+
+fn cmd_exp(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("exp", "regenerate a paper table/figure")
+        .positional("name", "table1|fig4|fig5|fig6|fig7|fig8|fig10|fig11|ablation-*|all")
+        .opt("out", "results", "output directory")
+        .flag("full", "paper-scale parameters (slow)");
+    let args = spec.parse(argv)?;
+    let name = args
+        .positional(0)
+        .ok_or_else(|| anyhow::anyhow!("experiment name required\n\n{}", spec.help_text()))?
+        .to_string();
+    let opts = ExpOptions { out_dir: args.str("out"), full: args.flag("full") };
+    exp::run(&name, &opts)
+}
+
+fn cmd_simnet(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("simnet", "run the braided-chain sensor network")
+        .opt("depth", "30", "number of layers")
+        .opt("packets", "10000", "packets per source")
+        .opt("k", "200", "sketch length")
+        .opt("p1", "0.9", "same-chain delivery probability")
+        .opt("p2", "0.1", "cross-chain delivery probability")
+        .opt("sketcher", "stream-fastgm", "stream-fastgm | lemiesz");
+    let args = spec.parse(argv)?;
+    let params = SimParams {
+        depth: args.usize("depth")?,
+        packets_per_source: args.usize("packets")?,
+        k: args.usize("k")?,
+        p1: args.f64("p1")?,
+        p2: args.f64("p2")?,
+        seed: 42,
+    };
+    let sketcher = match args.str("sketcher").as_str() {
+        "stream-fastgm" => NodeSketcher::StreamFastGm,
+        "lemiesz" => NodeSketcher::Lemiesz,
+        other => anyhow::bail!("unknown sketcher '{other}'"),
+    };
+    let net = SimNet::run(params, sketcher);
+    println!(
+        "simnet: d={} n={} k={} sketching took {}",
+        params.depth,
+        params.packets_per_source,
+        params.k,
+        fmt_duration(net.sketch_seconds)
+    );
+    println!("layer  lost-truth  lost-est  J_W-truth  J_W-est");
+    let c = net.fig10c();
+    let d = net.fig10d();
+    for l in 0..params.depth {
+        println!(
+            "{l:>5}  {:>10.1}  {:>8.1}  {:>9.3}  {:>7.3}",
+            c[l].0, c[l].1, d[l].0, d[l].1
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("fastgm {} — Fast Gumbel-Max Sketch reproduction", env!("CARGO_PKG_VERSION"));
+    println!("\ncorpora analogs:");
+    for c in CORPORA {
+        println!(
+            "  {:<10} {:>8} vectors  {:>9} features  mean n+ ~{}",
+            c.name, c.vectors, c.features, c.mean_nplus
+        );
+    }
+    match fastgm::runtime::read_manifest("artifacts") {
+        Ok(specs) => {
+            println!("\nartifacts ({}):", specs.len());
+            for s in specs {
+                println!(
+                    "  {:<32} {:?} -> {:?}",
+                    s.name,
+                    s.inputs.iter().map(|t| &t.shape).collect::<Vec<_>>(),
+                    s.outputs.iter().map(|t| &t.shape).collect::<Vec<_>>()
+                );
+            }
+        }
+        Err(e) => println!("\nartifacts: not built ({e})"),
+    }
+    Ok(())
+}

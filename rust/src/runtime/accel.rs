@@ -1,0 +1,186 @@
+//! Dense-batch sketch accelerator: the bridge between coordinator requests
+//! and the AOT `sketch_*` artifacts.
+//!
+//! Requests carry dense weight rows of arbitrary length; the accelerator
+//! buckets them to the smallest compiled `(B, N, K)` shape that fits
+//! (padding rows with zeros — absent elements — and the batch with empty
+//! rows), executes on PJRT, and converts outputs back into
+//! [`GumbelMaxSketch`]es of the **Direct** family, interchangeable with CPU
+//! P-MinHash sketches of the same seed (runtime tests pin that).
+
+use crate::sketch::{Family, GumbelMaxSketch, EMPTY_REGISTER};
+use super::Runtime;
+
+/// A compiled dense-sketch shape.
+#[derive(Debug, Clone)]
+pub struct Bucket {
+    pub name: String,
+    pub b: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+pub struct DenseSketchAccel {
+    runtime: Runtime,
+    buckets: Vec<Bucket>,
+}
+
+impl DenseSketchAccel {
+    /// Wrap a runtime, indexing every `sketch_*` (Pallas) artifact.
+    pub fn new(runtime: Runtime) -> anyhow::Result<DenseSketchAccel> {
+        let mut buckets = Vec::new();
+        for name in runtime.names() {
+            if !name.starts_with("sketch_b") {
+                continue;
+            }
+            let spec = runtime.spec(name).unwrap();
+            buckets.push(Bucket {
+                name: name.to_string(),
+                b: spec.inputs[1].shape[0],
+                n: spec.inputs[1].shape[1],
+                k: spec.outputs[0].shape[1],
+            });
+        }
+        anyhow::ensure!(!buckets.is_empty(), "no sketch_* artifacts in runtime");
+        // Smallest-first so `pick` finds the tightest fit.
+        buckets.sort_by_key(|b| (b.n, b.k, b.b));
+        Ok(DenseSketchAccel { runtime, buckets })
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// The tightest bucket with n ≥ len and exactly k registers.
+    pub fn pick(&self, len: usize, k: usize) -> Option<&Bucket> {
+        self.buckets.iter().find(|b| b.n >= len && b.k == k)
+    }
+
+    /// Max dense length any bucket of sketch length k accepts.
+    pub fn max_len(&self, k: usize) -> usize {
+        self.buckets.iter().filter(|b| b.k == k).map(|b| b.n).max().unwrap_or(0)
+    }
+
+    /// Sketch a batch of dense rows (ids = dense indices). Rows longer than
+    /// every bucket are rejected — the router sends those to CPU FastGM.
+    pub fn sketch_batch(
+        &self,
+        seed: u32,
+        rows: &[Vec<f64>],
+        k: usize,
+    ) -> anyhow::Result<Vec<GumbelMaxSketch>> {
+        anyhow::ensure!(!rows.is_empty(), "empty batch");
+        let longest = rows.iter().map(|r| r.len()).max().unwrap();
+        let bucket = self
+            .pick(longest, k)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no bucket fits dense length {longest} with k={k}")
+            })?
+            .clone();
+
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(bucket.b) {
+            // Pad rows to n and the chunk to b with zero rows.
+            let mut flat = vec![0f32; bucket.b * bucket.n];
+            for (r, row) in chunk.iter().enumerate() {
+                for (i, &w) in row.iter().enumerate() {
+                    if w > 0.0 {
+                        flat[r * bucket.n + i] = w as f32;
+                    }
+                }
+            }
+            let seed_lit = xla::Literal::vec1(&[seed]);
+            let v_lit = xla::Literal::vec1(&flat)
+                .reshape(&[bucket.b as i64, bucket.n as i64])?;
+            let outs = self.runtime.execute(&bucket.name, &[seed_lit, v_lit])?;
+            let y: Vec<f32> = outs[0].to_vec()?;
+            let s: Vec<i32> = outs[1].to_vec()?;
+            for (r, row) in chunk.iter().enumerate() {
+                let mut sk = GumbelMaxSketch::empty(Family::Direct, seed as u64, bucket.k);
+                let empty_row = row.iter().all(|&w| w <= 0.0);
+                for j in 0..bucket.k {
+                    let yv = y[r * bucket.k + j] as f64;
+                    if yv.is_finite() && !empty_row {
+                        sk.y[j] = yv;
+                        sk.s[j] = s[r * bucket.k + j] as u64;
+                    } else {
+                        sk.y[j] = f64::INFINITY;
+                        sk.s[j] = EMPTY_REGISTER;
+                    }
+                }
+                out.push(sk);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{pminhash::PMinHash, Sketcher, SparseVector};
+    use crate::util::rng::SplitMix64;
+
+    fn accel() -> Option<DenseSketchAccel> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            eprintln!("skipping accel test: artifacts not built");
+            return None;
+        }
+        Some(DenseSketchAccel::new(Runtime::load(dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn buckets_indexed_and_picked() {
+        let Some(a) = accel() else { return };
+        assert!(a.buckets().len() >= 2);
+        let b = a.pick(700, 256).unwrap();
+        assert!(b.n >= 700 && b.k == 256);
+        assert!(a.pick(100_000, 256).is_none());
+        assert!(a.max_len(256) >= 1024);
+    }
+
+    #[test]
+    fn batch_matches_cpu_pminhash() {
+        let Some(a) = accel() else { return };
+        let mut rng = SplitMix64::new(4);
+        let rows: Vec<Vec<f64>> = (0..10)
+            .map(|_| {
+                (0..600)
+                    .map(|_| if rng.next_f64() < 0.4 { 0.0 } else { rng.next_f64() })
+                    .collect()
+            })
+            .collect();
+        let sketches = a.sketch_batch(77, &rows, 256).unwrap();
+        assert_eq!(sketches.len(), 10);
+        let cpu = PMinHash::new(256, 77);
+        for (row, sk) in rows.iter().zip(&sketches) {
+            let want = cpu.sketch(&SparseVector::from_dense(row));
+            let mism = (0..256).filter(|&j| want.s[j] != sk.s[j]).count();
+            assert!(mism <= 3, "{mism}/256 argmax registers disagree");
+            for j in 0..256 {
+                if want.s[j] == sk.s[j] && want.y[j].is_finite() {
+                    let rel = (want.y[j] - sk.y[j]).abs() / want.y[j].max(1e-9);
+                    assert!(rel < 1e-4, "register {j}: {} vs {}", want.y[j], sk.y[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_padded_rows_are_empty_sketches() {
+        let Some(a) = accel() else { return };
+        let rows = vec![vec![0.0; 64], vec![1.0; 64]];
+        let sketches = a.sketch_batch(1, &rows, 256).unwrap();
+        assert!(sketches[0].y.iter().all(|y| y.is_infinite()));
+        assert!(sketches[0].s.iter().all(|&s| s == EMPTY_REGISTER));
+        assert!(sketches[1].y.iter().all(|y| y.is_finite()));
+    }
+
+    #[test]
+    fn oversized_rows_are_rejected() {
+        let Some(a) = accel() else { return };
+        let rows = vec![vec![1.0; 100_000]];
+        assert!(a.sketch_batch(1, &rows, 256).is_err());
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json` produced by `python/compile/aot.py`) and executes them on
+//! the request path through the `xla` crate's CPU PJRT client.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Every module is lowered
+//! with `return_tuple=True`, so results are un-tupled here.
+
+pub mod accel;
+
+use crate::util::json::{self, Value};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Tensor shape+dtype from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Value) -> anyhow::Result<TensorSpec> {
+        let shape = v
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+            .iter()
+            .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<_>>()?;
+        Ok(TensorSpec { shape, dtype: v.req_str("dtype")?.to_string() })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parse `<dir>/manifest.json` WITHOUT touching PJRT — usable from any
+/// thread (the xla wrapper types are !Send, so the service reads bucket
+/// metadata this way and leaves executable construction to the thread
+/// that owns the runtime).
+pub fn read_manifest(dir: &str) -> anyhow::Result<Vec<ArtifactSpec>> {
+    let manifest_path = Path::new(dir).join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        anyhow::anyhow!(
+            "no artifact manifest at {} (run `make artifacts`): {e}",
+            manifest_path.display()
+        )
+    })?;
+    let manifest = json::parse(&text)?;
+    let mut specs = Vec::new();
+    for art in manifest
+        .req("artifacts")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("artifacts not an array"))?
+    {
+        specs.push(ArtifactSpec {
+            name: art.req_str("name")?.to_string(),
+            file: art.req_str("file")?.to_string(),
+            kind: art.req_str("kind")?.to_string(),
+            inputs: art
+                .req("inputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<_>>()?,
+            outputs: art
+                .req("outputs")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        });
+    }
+    anyhow::ensure!(!specs.is_empty(), "manifest listed no artifacts");
+    Ok(specs)
+}
+
+/// The runtime: a PJRT client plus the compiled executables.
+///
+/// NOT `Send`/`Sync` (the underlying wrapper holds `Rc`s): construct and
+/// use it on one thread — the batcher owns one on its flush thread.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, (ArtifactSpec, xla::PjRtLoadedExecutable)>,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.json`. Returns an
+    /// error if the directory or manifest is missing — callers that can
+    /// operate CPU-only (the coordinator) treat that as "accelerator off".
+    pub fn load(dir: &str) -> anyhow::Result<Runtime> {
+        let specs = read_manifest(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for spec in specs {
+            let hlo_path = Path::new(dir).join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                hlo_path
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            log::info!("compiled artifact '{}' ({})", spec.name, spec.kind);
+            executables.insert(spec.name.clone(), (spec, exe));
+        }
+        Ok(Runtime { client, executables })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.executables.get(name).map(|(s, _)| s)
+    }
+
+    /// Execute artifact `name` with the given input literals; returns the
+    /// un-tupled output literals (one per manifest output).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let (spec, exe) = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+        anyhow::ensure!(
+            inputs.len() == spec.inputs.len(),
+            "artifact '{name}' expects {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if Path::new(dir).join("manifest.json").exists() {
+            Some(dir.to_string())
+        } else {
+            eprintln!("skipping runtime test: artifacts not built (`make artifacts`)");
+            None
+        }
+    }
+
+    #[test]
+    fn loads_manifest_and_lists_artifacts() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(rt.names().iter().any(|n| n.starts_with("sketch_b8")));
+        let spec = rt.spec("sketch_b8_n1024_k256").unwrap();
+        assert_eq!(spec.inputs[1].shape, vec![8, 1024]);
+        assert_eq!(spec.outputs[0].shape, vec![8, 256]);
+        assert_eq!(spec.outputs[0].dtype, "float32");
+        assert_eq!(spec.outputs[1].dtype, "int32");
+    }
+
+    #[test]
+    fn executes_sketch_artifact_and_matches_cpu() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(&dir).unwrap();
+        let spec = rt.spec("sketch_b8_n1024_k256").unwrap().clone();
+        let (b, n) = (spec.inputs[1].shape[0], spec.inputs[1].shape[1]);
+        let k = spec.outputs[0].shape[1];
+        // Deterministic pseudo-random dense weights.
+        let mut rng = crate::util::rng::SplitMix64::new(9);
+        let v: Vec<f32> = (0..b * n)
+            .map(|_| if rng.next_f64() < 0.3 { 0.0 } else { rng.next_f64() as f32 })
+            .collect();
+        let seed_lit = xla::Literal::vec1(&[42u32]);
+        let v_lit = xla::Literal::vec1(&v).reshape(&[b as i64, n as i64]).unwrap();
+        let out = rt.execute("sketch_b8_n1024_k256", &[seed_lit, v_lit]).unwrap();
+        let y: Vec<f32> = out[0].to_vec().unwrap();
+        let s: Vec<i32> = out[1].to_vec().unwrap();
+        assert_eq!(y.len(), b * k);
+        assert_eq!(s.len(), b * k);
+
+        // Cross-layer consistency: row 0 must match the CPU Direct-family
+        // P-MinHash sketch up to f32 rounding (libm vs XLA log, ≤ few ulp).
+        use crate::sketch::{pminhash::PMinHash, Sketcher, SparseVector};
+        let row: Vec<f64> = v[0..n].iter().map(|&x| x as f64).collect();
+        let cpu = PMinHash::new(k, 42).sketch(&SparseVector::from_dense(&row));
+        let mut mismatched = 0;
+        for j in 0..k {
+            let ya = y[j] as f64;
+            if cpu.s[j] != s[j] as u64 {
+                mismatched += 1;
+            } else if cpu.y[j].is_finite() {
+                let rel = (ya - cpu.y[j]).abs() / cpu.y[j].max(1e-9);
+                assert!(rel < 1e-4, "register {j}: accel {ya} vs cpu {}", cpu.y[j]);
+            }
+        }
+        assert!(
+            mismatched <= k / 100,
+            "argmax registers disagree in {mismatched}/{k} positions"
+        );
+    }
+
+    #[test]
+    fn executes_simmat_artifact() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load(&dir).unwrap();
+        let spec = rt.spec("simmat_q16_c128_k256").unwrap().clone();
+        let (q, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+        let c = spec.inputs[1].shape[0];
+        // All-equal signatures → similarity 1 everywhere.
+        let sq = xla::Literal::vec1(&vec![7i32; q * k])
+            .reshape(&[q as i64, k as i64])
+            .unwrap();
+        let sc = xla::Literal::vec1(&vec![7i32; c * k])
+            .reshape(&[c as i64, k as i64])
+            .unwrap();
+        let out = rt.execute("simmat_q16_c128_k256", &[sq, sc]).unwrap();
+        let sim: Vec<f32> = out[0].to_vec().unwrap();
+        assert_eq!(sim.len(), q * c);
+        assert!(sim.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Runtime::load("/nonexistent/path").is_err());
+    }
+}

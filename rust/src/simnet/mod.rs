@@ -1,0 +1,336 @@
+//! Braided-chain wireless sensor network simulator — the substrate of the
+//! paper's Fig. 9–11 experiments (following Lemiesz's setting).
+//!
+//! Two sensor chains `S^A`, `S^B` of depth `d`. The first node of each
+//! chain is a traffic source generating `n` packets whose sizes follow
+//! Beta(5,5). A packet held by node `s_ℓ^X` is forwarded to the next
+//! layer's same-chain node with probability `p₁` and, independently, a
+//! copy to the cross-chain node with probability `p₂`. Every node builds a
+//! Gumbel-Max sketch of the (duplicate-bearing) packet sequence passing
+//! through it; sketches answer, per layer (Fig. 10):
+//!
+//! * (a) total size of distinct packets from each source seen at `s_ℓ^A`,
+//! * (b) mean size of distinct packets at `s_ℓ^A`,
+//! * (c) total size of packets from source A lost by layer ℓ,
+//! * (d) weighted Jaccard similarity between `s_ℓ^A` and `s_ℓ^B`,
+//!
+//! with exact ground truth maintained alongside via per-node packet sets.
+//! The mean-size estimate (b) divides the weighted-cardinality estimate by
+//! a unit-weight cardinality estimate from a second sketch over the same
+//! sequence — both mergeable, as §2.3 requires.
+
+use crate::estimate::cardinality::{
+    estimate_cardinality, estimate_difference_union, estimate_intersection,
+    estimate_weighted_jaccard,
+};
+use crate::sketch::stream_fastgm::StreamFastGm;
+use crate::sketch::lemiesz::LemieszSketch;
+use crate::sketch::GumbelMaxSketch;
+use crate::util::rng::SplitMix64;
+use std::collections::HashSet;
+
+/// Simulation parameters (paper defaults: p1=0.9, p2=0.1, d=30, n=10_000,
+/// Beta(5,5) packet sizes, k=200).
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    pub depth: usize,
+    pub packets_per_source: usize,
+    pub p1: f64,
+    pub p2: f64,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams { depth: 30, packets_per_source: 10_000, p1: 0.9, p2: 0.1, k: 200, seed: 42 }
+    }
+}
+
+/// Which sketcher the nodes run (the Fig. 11 efficiency comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeSketcher {
+    StreamFastGm,
+    Lemiesz,
+}
+
+/// Per-node state: exact packet set (ground truth) + two sketches (weighted
+/// and unit-weight) of the sequence received.
+pub struct Node {
+    /// Exact distinct packets received (id).
+    pub packets: HashSet<u64>,
+    /// Weighted sketch of the received sequence.
+    pub sketch_w: GumbelMaxSketch,
+    /// Unit-weight sketch (for distinct counts / mean size).
+    pub sketch_1: GumbelMaxSketch,
+    /// Stream events processed (duplicates included).
+    pub events: u64,
+}
+
+/// The simulated network: `nodes[chain][layer]`, chain 0 = A, 1 = B.
+pub struct SimNet {
+    pub params: SimParams,
+    pub nodes: Vec<Vec<Node>>,
+    /// Packet sizes: `sizes[id]` for ids 0..2n (A: 0..n, B: n..2n).
+    pub sizes: Vec<f64>,
+    /// Total sketching time per node sketcher run (seconds).
+    pub sketch_seconds: f64,
+}
+
+impl SimNet {
+    /// Run the full simulation with the given node sketcher.
+    pub fn run(params: SimParams, sketcher: NodeSketcher) -> SimNet {
+        let n = params.packets_per_source;
+        let mut rng = SplitMix64::new(params.seed);
+        // Packet sizes Beta(5,5); source A owns ids 0..n, B owns n..2n.
+        let sizes: Vec<f64> = (0..2 * n).map(|_| rng.next_beta(5.0, 5.0).max(1e-9)).collect();
+
+        // Per-layer received sequences, built layer by layer. A node's
+        // sequence is the concatenation of what the two previous-layer
+        // nodes forward to it (duplicates preserved).
+        let source_a: Vec<u64> = (0..n as u64).collect();
+        let source_b: Vec<u64> = (n as u64..2 * n as u64).collect();
+        let mut prev: [Vec<u64>; 2] = [source_a, source_b];
+
+        let mut nodes: Vec<Vec<Node>> = vec![Vec::new(), Vec::new()];
+        let mut sketch_seconds = 0.0;
+
+        for layer in 0..params.depth {
+            let mut next: [Vec<u64>; 2] = [Vec::new(), Vec::new()];
+            for chain in 0..2 {
+                let seq = std::mem::take(&mut prev[chain]);
+                // Build this node's state from its received sequence.
+                let t0 = std::time::Instant::now();
+                let (sketch_w, sketch_1) = sketch_sequence(&seq, &sizes, params, sketcher);
+                sketch_seconds += t0.elapsed().as_secs_f64();
+                let packets: HashSet<u64> = seq.iter().copied().collect();
+                nodes[chain].push(Node {
+                    packets,
+                    sketch_w,
+                    sketch_1,
+                    events: seq.len() as u64,
+                });
+                // Forward to the next layer (if any).
+                if layer + 1 < params.depth {
+                    for &pkt in &seq {
+                        if rng.next_f64() < params.p1 {
+                            next[chain].push(pkt);
+                        }
+                        if rng.next_f64() < params.p2 {
+                            next[1 - chain].push(pkt);
+                        }
+                    }
+                }
+            }
+            prev = next;
+        }
+        SimNet { params, nodes, sizes, sketch_seconds }
+    }
+
+    /// Exact weighted size of a packet set.
+    pub fn exact_size(&self, packets: &HashSet<u64>) -> f64 {
+        packets.iter().map(|&p| self.sizes[p as usize]).sum()
+    }
+
+    /// Ids generated by source A / B.
+    fn source_set(&self, chain: usize) -> HashSet<u64> {
+        let n = self.params.packets_per_source as u64;
+        if chain == 0 {
+            (0..n).collect()
+        } else {
+            (n..2 * n).collect()
+        }
+    }
+
+    /// Fig. 10a: per layer, (truth_A, est_A, truth_B, est_B) — total size of
+    /// distinct packets from each source seen at node `s_ℓ^A`.
+    pub fn fig10a(&self) -> Vec<(f64, f64, f64, f64)> {
+        let src: [&HashSet<u64>; 2] = [&self.source_set(0), &self.source_set(1)];
+        // Source sketches: exactly the layer-0 node sketches.
+        let src_sk = [&self.nodes[0][0].sketch_w, &self.nodes[1][0].sketch_w];
+        self.nodes[0]
+            .iter()
+            .map(|node| {
+                let t_a = self.exact_size(&node.packets.intersection(src[0]).copied().collect());
+                let t_b = self.exact_size(&node.packets.intersection(src[1]).copied().collect());
+                let e_a = estimate_intersection(src_sk[0], &node.sketch_w).unwrap();
+                let e_b = estimate_intersection(src_sk[1], &node.sketch_w).unwrap();
+                (t_a, e_a, t_b, e_b)
+            })
+            .collect()
+    }
+
+    /// Fig. 10b: per layer, (truth, estimate) mean distinct-packet size at
+    /// `s_ℓ^A`; estimate = weighted cardinality / unit cardinality.
+    pub fn fig10b(&self) -> Vec<(f64, f64)> {
+        self.nodes[0]
+            .iter()
+            .map(|node| {
+                let count = node.packets.len().max(1) as f64;
+                let truth = self.exact_size(&node.packets) / count;
+                let cw = estimate_cardinality(&node.sketch_w);
+                let c1 = estimate_cardinality(&node.sketch_1).max(1e-12);
+                (truth, cw / c1)
+            })
+            .collect()
+    }
+
+    /// Fig. 10c: per layer, (truth, estimate) total size of source-A packets
+    /// lost by layer ℓ: `|N_A \ (N_{sℓA} ∪ N_{sℓB})|_w`.
+    pub fn fig10c(&self) -> Vec<(f64, f64)> {
+        let src_a = self.source_set(0);
+        let src_sk = &self.nodes[0][0].sketch_w;
+        (0..self.params.depth)
+            .map(|l| {
+                let union: HashSet<u64> = self.nodes[0][l]
+                    .packets
+                    .union(&self.nodes[1][l].packets)
+                    .copied()
+                    .collect();
+                let lost: HashSet<u64> = src_a.difference(&union).copied().collect();
+                let truth = self.exact_size(&lost);
+                let est = estimate_difference_union(
+                    src_sk,
+                    &self.nodes[0][l].sketch_w,
+                    &self.nodes[1][l].sketch_w,
+                )
+                .unwrap();
+                (truth, est)
+            })
+            .collect()
+    }
+
+    /// Fig. 10d: per layer, (truth, estimate) weighted Jaccard between the
+    /// packet sets of `s_ℓ^A` and `s_ℓ^B`.
+    pub fn fig10d(&self) -> Vec<(f64, f64)> {
+        (0..self.params.depth)
+            .map(|l| {
+                let a = &self.nodes[0][l];
+                let b = &self.nodes[1][l];
+                let inter: HashSet<u64> = a.packets.intersection(&b.packets).copied().collect();
+                let union: HashSet<u64> = a.packets.union(&b.packets).copied().collect();
+                let truth = if union.is_empty() {
+                    0.0
+                } else {
+                    self.exact_size(&inter) / self.exact_size(&union)
+                };
+                let est = estimate_weighted_jaccard(&a.sketch_w, &b.sketch_w).unwrap();
+                (truth, est)
+            })
+            .collect()
+    }
+}
+
+/// Sketch one node's received sequence with the selected algorithm,
+/// producing the weighted and unit-weight sketches.
+fn sketch_sequence(
+    seq: &[u64],
+    sizes: &[f64],
+    params: SimParams,
+    sketcher: NodeSketcher,
+) -> (GumbelMaxSketch, GumbelMaxSketch) {
+    match sketcher {
+        NodeSketcher::StreamFastGm => {
+            let mut w = StreamFastGm::new(params.k, params.seed);
+            let mut u = StreamFastGm::new(params.k, params.seed ^ 0xDEAD);
+            for &pkt in seq {
+                w.push(pkt, sizes[pkt as usize]);
+                u.push(pkt, 1.0);
+            }
+            (w.sketch(), u.sketch())
+        }
+        NodeSketcher::Lemiesz => {
+            let mut w = LemieszSketch::new(params.k, params.seed as u32);
+            let mut u = LemieszSketch::new(params.k, (params.seed ^ 0xDEAD) as u32);
+            for &pkt in seq {
+                w.push(pkt, sizes[pkt as usize]);
+                u.push(pkt, 1.0);
+            }
+            (w.sketch(), u.sketch())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_params() -> SimParams {
+        SimParams { depth: 6, packets_per_source: 600, p1: 0.9, p2: 0.1, k: 256, seed: 7 }
+    }
+
+    #[test]
+    fn packet_flow_decays_with_depth() {
+        let net = SimNet::run(small_params(), NodeSketcher::StreamFastGm);
+        // Total distinct packets seen at A-chain nodes decays (p1+p2 ≈ 1 but
+        // losses accumulate). First layer holds exactly the source.
+        assert_eq!(net.nodes[0][0].packets.len(), 600);
+        let first = net.exact_size(&net.nodes[0][0].packets);
+        let last = net.exact_size(&net.nodes[0][5].packets);
+        assert!(last < first, "packet mass should decay: {first} -> {last}");
+    }
+
+    #[test]
+    fn cross_chain_mixing_occurs() {
+        let net = SimNet::run(small_params(), NodeSketcher::StreamFastGm);
+        // By layer 2, A-chain nodes should hold some B-source packets.
+        let n = net.params.packets_per_source as u64;
+        let from_b = net.nodes[0][2].packets.iter().filter(|&&p| p >= n).count();
+        assert!(from_b > 0, "no cross-chain packets reached chain A");
+    }
+
+    #[test]
+    fn fig10_estimates_track_truth() {
+        let net = SimNet::run(small_params(), NodeSketcher::StreamFastGm);
+        // (a) source-A mass at layer ℓ: relative error bounded by the k=256
+        // intersection estimator noise (inclusion-exclusion amplifies; be
+        // generous but meaningful).
+        for (l, (t_a, e_a, _, _)) in net.fig10a().iter().enumerate().take(4) {
+            let rel = (t_a - e_a).abs() / t_a.max(1.0);
+            assert!(rel < 0.35, "fig10a layer {l}: truth={t_a} est={e_a}");
+        }
+        // (b) mean size ≈ 0.5 (Beta(5,5)); estimates within 20%.
+        for (l, (t, e)) in net.fig10b().iter().enumerate() {
+            assert!((t - 0.5).abs() < 0.05, "layer {l} truth mean={t}");
+            assert!((t - e).abs() / t < 0.2, "fig10b layer {l}: truth={t} est={e}");
+        }
+        // (d) weighted Jaccard in [0,1], increasing mixing over depth,
+        // estimates within 0.15 absolute.
+        let d = net.fig10d();
+        for (l, (t, e)) in d.iter().enumerate() {
+            assert!((0.0..=1.0).contains(t));
+            assert!((t - e).abs() < 0.15, "fig10d layer {l}: truth={t} est={e}");
+        }
+        assert!(
+            d[4].0 > d[1].0,
+            "chains should mix with depth: {:?}",
+            d.iter().map(|x| x.0).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn fig10c_lost_mass_grows_with_depth() {
+        let net = SimNet::run(small_params(), NodeSketcher::StreamFastGm);
+        let c = net.fig10c();
+        assert!(c[0].0 == 0.0, "nothing lost at the source layer");
+        assert!(c[5].0 >= c[1].0, "losses accumulate");
+        // Estimate of the last layer within 35% relative (3-way algebra).
+        let (t, e) = c[5];
+        if t > 5.0 {
+            assert!((t - e).abs() / t < 0.35, "truth={t} est={e}");
+        }
+    }
+
+    #[test]
+    fn both_sketchers_agree_on_estimates_shape() {
+        // Same family? No — different RNG families; but both must track the
+        // same truth within tolerance.
+        let a = SimNet::run(small_params(), NodeSketcher::StreamFastGm);
+        let b = SimNet::run(small_params(), NodeSketcher::Lemiesz);
+        let da = a.fig10b();
+        let db = b.fig10b();
+        for l in 0..a.params.depth {
+            assert!((da[l].1 - db[l].1).abs() < 0.15, "layer {l}: {} vs {}", da[l].1, db[l].1);
+        }
+    }
+}

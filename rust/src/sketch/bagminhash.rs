@@ -1,0 +1,255 @@
+//! BagMinHash — weighted minwise hashing (Ertl, KDD'18), the paper's
+//! Task-1 efficiency baseline for weighted Jaccard similarity `J_W`.
+//!
+//! The construction views each element `d` as a region `(0, w_d)` on a
+//! weight axis and runs a Poisson point process of intensity `k` per unit
+//! (weight × time), each point carrying a uniform register mark. Register
+//! `j`'s value for `(d, w)` is the earliest point of `d` with height `< w`
+//! and mark `j` — an `EXP(w)` variable that is *monotonically coupled
+//! across weights*, which is exactly what the minwise property
+//! `P(signature match) = J_W` requires (our first simplified version
+//! dropped that coupling and the unbiasedness test caught it).
+//!
+//! As in Ertl's algorithm the weight axis is cut into dyadic strips
+//! `[2^L, 2^{L+1})` so point generation is weight-independent: each strip
+//! has its own deterministic point stream per element, emitted in ascending
+//! time, and a query weight `w` simply *thins* points with height `≥ w`.
+//! A segment-tree max tracker (Ertl's "binary tree of maxima") provides the
+//! stop bound; strips are processed top-down and abandoned once their
+//! residual point probability is negligible (rate halves per level).
+
+use crate::util::rng::SplitMix64;
+use super::{SparseVector, EMPTY_REGISTER};
+
+/// Domain separation from the Ordered family streams.
+const BAG_SALT: u64 = 0xBA61_14A5_11D5_0B1E;
+
+/// How many dyadic strips below the top strip to visit. Strip L's expected
+/// useful points decay as `k·2^L·y*`; 48 halvings puts the residual below
+/// 2^-48·k·y* — negligible for every workload here.
+const STRIP_DEPTH: i32 = 48;
+
+/// Segment tree over register values supporting point update + global max —
+/// the "binary tree of maxima" of the original algorithm.
+#[derive(Debug, Clone)]
+pub struct MaxTracker {
+    n: usize,
+    tree: Vec<f64>,
+}
+
+impl MaxTracker {
+    pub fn new(n: usize, init: f64) -> Self {
+        MaxTracker { n, tree: vec![init; 2 * n] }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: f64) {
+        let mut idx = self.n + i;
+        self.tree[idx] = v;
+        while idx > 1 {
+            idx /= 2;
+            let m = self.tree[2 * idx].max(self.tree[2 * idx + 1]);
+            if self.tree[idx] == m {
+                break;
+            }
+            self.tree[idx] = m;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f64 {
+        self.tree[self.n + i]
+    }
+
+    #[inline]
+    pub fn max(&self) -> f64 {
+        self.tree[1]
+    }
+}
+
+/// A BagMinHash signature. Lives in its own type: it estimates `J_W`, not
+/// `J_P`, and its race values are consistent only with other BagMinHash
+/// sketches — a separate type makes cross-family estimation a compile
+/// error instead of a silent bias.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BagSketch {
+    pub seed: u64,
+    pub y: Vec<f64>,
+    pub s: Vec<u64>,
+}
+
+impl BagSketch {
+    /// Estimate weighted Jaccard `J_W` by register match fraction.
+    pub fn estimate_jw(&self, other: &BagSketch) -> f64 {
+        assert_eq!(self.seed, other.seed, "BagMinHash seeds must match");
+        assert_eq!(self.y.len(), other.y.len());
+        let k = self.y.len();
+        let m = (0..k)
+            .filter(|&j| self.s[j] == other.s[j] && self.y[j] == other.y[j])
+            .count();
+        m as f64 / k as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BagMinHash {
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl BagMinHash {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        BagMinHash { k, seed }
+    }
+
+    /// Sketch and return the number of Poisson points generated (the work
+    /// counter the Fig. 4/5 efficiency comparison reports).
+    pub fn sketch_counted(&self, v: &SparseVector) -> (BagSketch, u64) {
+        let k = self.k;
+        let mut y = vec![f64::INFINITY; k];
+        let mut s = vec![EMPTY_REGISTER; k];
+        let mut tracker = MaxTracker::new(k, f64::INFINITY);
+        let mut points = 0u64;
+
+        for (id, w) in v.positive() {
+            // Top strip: the dyadic strip containing w.
+            let top = w.log2().floor() as i32;
+            for l in (top - STRIP_DEPTH..=top).rev() {
+                let lo = 2f64.powi(l);
+                let hi = 2f64.powi(l + 1);
+                if lo >= w {
+                    continue; // strip entirely above the weight
+                }
+                // Skip strips whose first point is virtually certain to
+                // exceed the stop bound: P ≈ k·(hi−lo)·y* (points ascend and
+                // rates halve per level, so all lower strips are smaller).
+                let bound = tracker.max();
+                if bound.is_finite() && k as f64 * (hi - lo) * bound < 1e-6 {
+                    break; // safe: lower strips have halving widths
+                }
+                // Deterministic per (element, strip): thinning by `h < w`
+                // reads a prefix of the same stream for every query weight.
+                let mut rng =
+                    SplitMix64::for_element(self.seed ^ BAG_SALT, id ^ ((l as u64) << 40));
+                let rate = k as f64 * (hi - lo);
+                let mut t = 0.0f64;
+                loop {
+                    t += rng.next_exp() / rate;
+                    points += 1;
+                    if t > tracker.max() {
+                        break;
+                    }
+                    let h = lo + rng.next_f64() * (hi - lo);
+                    let j = rng.next_range(0, k - 1);
+                    if h >= w {
+                        continue; // thinned: point above this vector's weight
+                    }
+                    if t < y[j] {
+                        y[j] = t;
+                        s[j] = id;
+                        tracker.set(j, t);
+                    }
+                }
+            }
+        }
+        (BagSketch { seed: self.seed, y, s }, points)
+    }
+
+    pub fn sketch(&self, v: &SparseVector) -> BagSketch {
+        self.sketch_counted(v).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimate::jaccard::weighted_jaccard;
+    use crate::util::rng::SplitMix64;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn max_tracker_matches_naive() {
+        let mut t = MaxTracker::new(7, f64::INFINITY);
+        let mut naive = vec![f64::INFINITY; 7];
+        let mut r = SplitMix64::new(1);
+        for _ in 0..500 {
+            let i = r.next_range(0, 6);
+            let v = r.next_f64();
+            if v < naive[i] {
+                naive[i] = v;
+                t.set(i, v);
+            }
+            let want = naive.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            assert_eq!(t.max(), want);
+        }
+    }
+
+    #[test]
+    fn registers_fill_and_are_deterministic() {
+        let v = SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+        let a = BagMinHash::new(64, 9).sketch(&v);
+        let b = BagMinHash::new(64, 9).sketch(&v);
+        assert_eq!(a, b);
+        assert!(a.y.iter().all(|y| y.is_finite()));
+        assert!(a.s.iter().all(|&s| s != EMPTY_REGISTER));
+    }
+
+    #[test]
+    fn self_similarity_is_one() {
+        let v = SparseVector::new(vec![5, 6], vec![0.3, 0.9]);
+        let a = BagMinHash::new(32, 2).sketch(&v);
+        assert_eq!(a.estimate_jw(&a), 1.0);
+    }
+
+    /// The monotone weight coupling: raising one element's weight can only
+    /// lower (or keep) each register value, never change others' values.
+    #[test]
+    fn weight_coupling_is_monotone() {
+        let u = SparseVector::new(vec![5, 6], vec![0.3, 0.9]);
+        let v = SparseVector::new(vec![5, 6], vec![0.3, 1.7]);
+        let bm = BagMinHash::new(64, 11);
+        let su = bm.sketch(&u);
+        let sv = bm.sketch(&v);
+        for j in 0..64 {
+            assert!(sv.y[j] <= su.y[j], "register {j} not monotone");
+            if su.s[j] == 5 && sv.s[j] == 5 {
+                assert_eq!(su.y[j], sv.y[j], "untouched element's value changed");
+            }
+        }
+    }
+
+    /// Unbiasedness of the J_W estimator — including shared elements whose
+    /// weights DIFFER across the two vectors (the case that requires the
+    /// strip construction).
+    #[test]
+    fn jw_estimator_is_unbiased() {
+        let u = SparseVector::new(vec![1, 2, 3, 4], vec![1.0, 2.0, 0.0, 1.0]);
+        let v = SparseVector::new(vec![1, 2, 3, 4], vec![2.0, 2.0, 1.0, 0.0]);
+        let truth = weighted_jaccard(&u, &v); // (1+2)/(2+2+1+1) = 0.5
+        let mut stats = OnlineStats::new();
+        for seed in 0..120u64 {
+            let bm = BagMinHash::new(64, seed);
+            stats.push(bm.sketch(&u).estimate_jw(&bm.sketch(&v)));
+        }
+        assert!(
+            (stats.mean() - truth).abs() < 0.03,
+            "mean={} truth={truth}",
+            stats.mean()
+        );
+    }
+
+    /// Work: subquadratic in n·k thanks to the stop bound.
+    #[test]
+    fn work_counter_subquadratic() {
+        let mut r = SplitMix64::new(3);
+        let n = 1000;
+        let k = 128;
+        let v = SparseVector::new(
+            (0..n as u64).collect(),
+            (0..n).map(|_| r.next_f64() + 0.01).collect(),
+        );
+        let (_, points) = BagMinHash::new(k, 1).sketch_counted(&v);
+        assert!(points < (n * k) as u64 / 4, "points={points}");
+    }
+}

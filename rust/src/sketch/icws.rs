@@ -1,0 +1,157 @@
+//! ICWS — Improved Consistent Weighted Sampling (Ioffe, ICDM'10).
+//! Related-work baseline: the CWS family all cost `O(k·n⁺)`, the regime
+//! FastGM escapes.
+//!
+//! Per element `i` (weight `w`) and register `j`, with a deterministic
+//! stream per `(i, j)`:
+//!
+//! ```text
+//!   r, c ~ Gamma(2,1),  β ~ UNI(0,1)
+//!   t = ⌊ln w / r + β⌋,   y = exp(r(t-β)),   a = c / (y·e^r)
+//! ```
+//!
+//! The register keeps the argmin-`a` element together with its quantized
+//! level `t`; the full `(i, t)` signature collides between two vectors with
+//! probability **exactly** `J_W` (Ioffe's consistency theorem). Matching on
+//! `i` alone (0-bit CWS, Li '15) is also exposed — it is biased upward for
+//! strongly correlated weight changes, which one of the tests demonstrates.
+
+use crate::util::rng::{fmix64, SplitMix64};
+use super::{SparseVector, EMPTY_REGISTER};
+
+const ICWS_SALT: u64 = 0x1C75_5EED_0FF1_CE00;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IcwsSketch {
+    pub seed: u64,
+    /// Minimal `a` values per register.
+    pub a: Vec<f64>,
+    /// Argmin element ids per register.
+    pub s: Vec<u64>,
+    /// Quantized weight level `t` of the argmin element.
+    pub t: Vec<f64>,
+}
+
+impl IcwsSketch {
+    /// Estimate weighted Jaccard from the full `(id, t)` signature —
+    /// unbiased (consistency theorem).
+    pub fn estimate_jw(&self, other: &IcwsSketch) -> f64 {
+        assert_eq!(self.seed, other.seed, "ICWS seeds must match");
+        assert_eq!(self.a.len(), other.a.len());
+        let k = self.s.len();
+        let m = (0..k)
+            .filter(|&j| self.s[j] == other.s[j] && self.t[j] == other.t[j])
+            .count();
+        m as f64 / k as f64
+    }
+
+    /// 0-bit variant: match on element id only (biased but register-free).
+    pub fn estimate_jw_0bit(&self, other: &IcwsSketch) -> f64 {
+        assert_eq!(self.seed, other.seed);
+        let k = self.s.len();
+        let m = (0..k).filter(|&j| self.s[j] == other.s[j]).count();
+        m as f64 / k as f64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Icws {
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl Icws {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        Icws { k, seed }
+    }
+
+    pub fn sketch(&self, v: &SparseVector) -> IcwsSketch {
+        let k = self.k;
+        let mut a = vec![f64::INFINITY; k];
+        let mut s = vec![EMPTY_REGISTER; k];
+        let mut t_out = vec![0.0f64; k];
+        for (id, w) in v.positive() {
+            let ln_w = w.ln();
+            // One deterministic stream per (element, register): consistency
+            // across vectors requires the same (r, c, β) for a given (i, j).
+            let base = fmix64(id ^ ICWS_SALT) ^ self.seed;
+            for j in 0..k {
+                let mut rng = SplitMix64::new(base.wrapping_add((j as u64) << 1 | 1));
+                let r = -(rng.next_f64().ln() + rng.next_f64().ln()); // Gamma(2,1)
+                let c = -(rng.next_f64().ln() + rng.next_f64().ln());
+                let beta = rng.next_f64();
+                let t = (ln_w / r + beta).floor();
+                let ln_y = r * (t - beta);
+                let a_ij = c * (-ln_y - r).exp();
+                if a_ij < a[j] {
+                    a[j] = a_ij;
+                    s[j] = id;
+                    t_out[j] = t;
+                }
+            }
+        }
+        IcwsSketch { seed: self.seed, a, s, t: t_out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimate::jaccard::weighted_jaccard;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn deterministic_and_consistent() {
+        let v = SparseVector::new(vec![3, 5, 9], vec![0.2, 2.0, 1.0]);
+        let a = Icws::new(32, 1).sketch(&v);
+        let b = Icws::new(32, 1).sketch(&v);
+        assert_eq!(a, b);
+        assert!(a.s.iter().all(|&x| x != EMPTY_REGISTER));
+    }
+
+    #[test]
+    fn identical_vectors_match_fully() {
+        let v = SparseVector::new(vec![1, 2], vec![1.5, 0.5]);
+        let a = Icws::new(64, 7).sketch(&v);
+        assert_eq!(a.estimate_jw(&a), 1.0);
+    }
+
+    /// Consistency theorem: (id, t) match probability == J_W, including
+    /// shared elements with different weights.
+    #[test]
+    fn jw_estimator_is_unbiased() {
+        let u = SparseVector::new(vec![1, 2, 3], vec![2.0, 1.0, 1.0]);
+        let v = SparseVector::new(vec![1, 2, 4], vec![1.0, 1.0, 2.0]);
+        let truth = weighted_jaccard(&u, &v); // (1+1)/(2+1+1+2) = 1/3
+        let mut stats = OnlineStats::new();
+        for seed in 0..60u64 {
+            let icws = Icws::new(128, seed);
+            stats.push(icws.sketch(&u).estimate_jw(&icws.sketch(&v)));
+        }
+        assert!(
+            (stats.mean() - truth).abs() < 0.02,
+            "est={} truth={truth}",
+            stats.mean()
+        );
+    }
+
+    /// The 0-bit shortcut is biased upward under pure rescaling (weights
+    /// fully correlated) — the documented failure mode.
+    #[test]
+    fn zero_bit_variant_overestimates_under_rescaling() {
+        let u = SparseVector::new(vec![1, 2], vec![1.0, 1.0]);
+        let v2 = SparseVector::new(vec![1, 2], vec![2.0, 2.0]);
+        let truth = weighted_jaccard(&u, &v2); // 0.5
+        let mut full = OnlineStats::new();
+        let mut zbit = OnlineStats::new();
+        for seed in 0..60u64 {
+            let icws = Icws::new(128, seed);
+            let (su, sv) = (icws.sketch(&u), icws.sketch(&v2));
+            full.push(su.estimate_jw(&sv));
+            zbit.push(su.estimate_jw_0bit(&sv));
+        }
+        assert!((full.mean() - truth).abs() < 0.03, "full={}", full.mean());
+        assert!(zbit.mean() > truth + 0.1, "0-bit should overestimate here: {}", zbit.mean());
+    }
+}

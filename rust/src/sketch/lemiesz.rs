@@ -1,0 +1,148 @@
+//! Lemiesz's sketch (VLDB'21) — the Task-2 weighted-cardinality baseline.
+//!
+//! Exactly the `y` part of the Direct-family Gumbel-Max sketch, maintained
+//! incrementally over a stream (Eq. 2 of the paper): each arriving object
+//! `i` with weight `v_i` updates `y_j ← min(y_j, -ln(a_ij)/v_i)` for **all**
+//! `j` — `O(k)` per stream element, which is what Stream-FastGM beats.
+//! `Σ y_j ~ Γ(k, c)` gives the estimator `ĉ = (k-1)/Σ y_j`
+//! (see `estimate::cardinality`).
+
+use crate::util::rng::direct_exp;
+use super::{fold_id, Family, GumbelMaxSketch, Sketcher, SparseVector, EMPTY_REGISTER};
+
+/// Incremental Lemiesz sketch over a stream.
+#[derive(Debug, Clone)]
+pub struct LemieszSketch {
+    seed: u32,
+    y: Vec<f64>,
+    s: Vec<u64>,
+    /// Work counter: exponential variables generated (k per element).
+    pub released: u64,
+}
+
+impl LemieszSketch {
+    pub fn new(k: usize, seed: u32) -> Self {
+        assert!(k >= 1);
+        LemieszSketch {
+            seed,
+            y: vec![f64::INFINITY; k],
+            s: vec![EMPTY_REGISTER; k],
+            released: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Process one stream object. Duplicates are idempotent (deterministic
+    /// a_ij). The straightforward algorithm draws all k variables.
+    pub fn push(&mut self, id: u64, weight: f64) {
+        if weight <= 0.0 || !weight.is_finite() {
+            return;
+        }
+        let i = fold_id(id);
+        let inv_w = 1.0 / weight;
+        for j in 0..self.y.len() {
+            let b = direct_exp(self.seed, i, j as u32) as f64 * inv_w;
+            self.released += 1;
+            if b < self.y[j] {
+                self.y[j] = b;
+                self.s[j] = id;
+            }
+        }
+    }
+
+    pub fn sketch(&self) -> GumbelMaxSketch {
+        GumbelMaxSketch {
+            family: Family::Direct,
+            seed: self.seed as u64,
+            y: self.y.clone(),
+            s: self.s.clone(),
+        }
+    }
+}
+
+/// Batch adapter so Lemiesz's sketch plugs into the [`Sketcher`] harnesses.
+#[derive(Debug, Clone)]
+pub struct Lemiesz {
+    pub k: usize,
+    pub seed: u32,
+}
+
+impl Lemiesz {
+    pub fn new(k: usize, seed: u32) -> Self {
+        Lemiesz { k, seed }
+    }
+}
+
+impl Sketcher for Lemiesz {
+    fn name(&self) -> &'static str {
+        "lemiesz"
+    }
+
+    fn family(&self) -> Family {
+        Family::Direct
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
+        let mut st = LemieszSketch::new(self.k, self.seed);
+        for (id, w) in v.positive() {
+            st.push(id, w);
+        }
+        st.sketch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::pminhash::PMinHash;
+    use crate::sketch::Sketcher;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn y_part_equals_pminhash() {
+        // Same Direct family, same RNG ⇒ identical registers.
+        let mut r = SplitMix64::new(8);
+        let v = SparseVector::new(
+            (0..30u64).map(|i| i * 3 + 1).collect(),
+            (0..30).map(|_| r.next_f64() + 0.05).collect(),
+        );
+        let a = Lemiesz::new(64, 5).sketch(&v);
+        let b = PMinHash::new(64, 5).sketch(&v);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn duplicates_idempotent_and_mergeable() {
+        let mut a = LemieszSketch::new(32, 1);
+        a.push(10, 0.5);
+        a.push(11, 1.5);
+        let once = a.sketch();
+        a.push(10, 0.5);
+        assert_eq!(a.sketch(), once);
+
+        // Merge of two sites == single-site union (§2.3 mergeability).
+        let mut site1 = LemieszSketch::new(32, 1);
+        let mut site2 = LemieszSketch::new(32, 1);
+        site1.push(10, 0.5);
+        site2.push(11, 1.5);
+        site2.push(10, 0.5); // shared object
+        let merged = site1.sketch().merge(&site2.sketch()).unwrap();
+        assert_eq!(merged, once);
+    }
+
+    #[test]
+    fn work_is_k_per_distinct_push() {
+        let mut a = LemieszSketch::new(100, 2);
+        for id in 0..50u64 {
+            a.push(id, 1.0);
+        }
+        assert_eq!(a.released, 50 * 100);
+    }
+}

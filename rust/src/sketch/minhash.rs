@@ -1,0 +1,104 @@
+//! Classic binary MinHash (Broder et al.) — the unweighted ancestor of the
+//! whole sketch family, kept as a substrate/related-work baseline and used
+//! by the LSH tests as the binary-vector special case.
+
+use crate::util::rng::{fmix64, SplitMix64};
+
+const MINHASH_SALT: u64 = 0x3141_5926_5358_9793;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct MinHashSketch {
+    pub seed: u64,
+    /// Per-register minimal hash values.
+    pub h: Vec<u64>,
+    /// Per-register argmin element ids.
+    pub s: Vec<u64>,
+}
+
+impl MinHashSketch {
+    /// Estimate set resemblance (binary Jaccard) by match fraction.
+    pub fn resemblance(&self, other: &MinHashSketch) -> f64 {
+        assert_eq!(self.seed, other.seed);
+        assert_eq!(self.h.len(), other.h.len());
+        let m = self.h.iter().zip(&other.h).filter(|(a, b)| a == b).count();
+        m as f64 / self.h.len() as f64
+    }
+
+    pub fn merge(&self, other: &MinHashSketch) -> MinHashSketch {
+        assert_eq!(self.seed, other.seed);
+        let mut out = self.clone();
+        for j in 0..out.h.len() {
+            if other.h[j] < out.h[j] {
+                out.h[j] = other.h[j];
+                out.s[j] = other.s[j];
+            }
+        }
+        out
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MinHash {
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl MinHash {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        MinHash { k, seed }
+    }
+
+    pub fn sketch<'a>(&self, ids: impl IntoIterator<Item = &'a u64>) -> MinHashSketch {
+        let mut h = vec![u64::MAX; self.k];
+        let mut s = vec![u64::MAX; self.k];
+        for &id in ids {
+            // k register hashes from one SplitMix64 stream per element.
+            let mut rng = SplitMix64::new(fmix64(id ^ MINHASH_SALT) ^ self.seed);
+            for j in 0..self.k {
+                let v = rng.next_u64();
+                if v < h[j] {
+                    h[j] = v;
+                    s[j] = id;
+                }
+            }
+        }
+        MinHashSketch { seed: self.seed, h, s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn resemblance_estimator_unbiased() {
+        // |A∩B| = 2, |A∪B| = 4 → J = 0.5.
+        let a = vec![1u64, 2, 3];
+        let b = vec![2u64, 3, 4];
+        let mut stats = OnlineStats::new();
+        for seed in 0..100u64 {
+            let mh = MinHash::new(64, seed);
+            stats.push(mh.sketch(&a).resemblance(&mh.sketch(&b)));
+        }
+        assert!((stats.mean() - 0.5).abs() < 0.02, "mean={}", stats.mean());
+    }
+
+    #[test]
+    fn merge_is_union() {
+        let mh = MinHash::new(32, 9);
+        let a = vec![1u64, 2];
+        let b = vec![3u64, 4];
+        let ab = vec![1u64, 2, 3, 4];
+        assert_eq!(mh.sketch(&a).merge(&mh.sketch(&b)), mh.sketch(&ab));
+    }
+
+    #[test]
+    fn disjoint_sets_rarely_match() {
+        let mh = MinHash::new(256, 1);
+        let a: Vec<u64> = (0..50).collect();
+        let b: Vec<u64> = (100..150).collect();
+        assert!(mh.sketch(&a).resemblance(&mh.sketch(&b)) < 0.05);
+    }
+}

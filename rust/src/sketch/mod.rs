@@ -1,0 +1,386 @@
+//! Gumbel-Max sketches and the algorithms that compute them.
+//!
+//! The paper defines, for a non-negative vector `v` and `j = 1..k`:
+//!
+//! ```text
+//!   y_j(v) = min_{i ∈ N⁺}  -ln(a_ij) / v_i        (Gumbel-Max part)
+//!   s_j(v) = argmin_{i ∈ N⁺} -ln(a_ij) / v_i      (Gumbel-ArgMax part)
+//! ```
+//!
+//! with `a_ij ~ UNI(0,1)` shared across vectors. [`GumbelMaxSketch`] holds
+//! both parts; `x_j = -ln y_j` recovers the literal Gumbel-Max variable.
+//!
+//! Implementations:
+//! * [`fastgm`] — the paper's contribution, `O(k ln k + n⁺)` (Algorithm 1).
+//! * [`stream_fastgm`] — one-pass streaming variant (Algorithm 2).
+//! * [`fastgm_c`] — the WWW'20 conference version (prune-only baseline).
+//! * [`pminhash`] — straightforward `O(k n⁺)` P-MinHash (Moulton & Jiang).
+//! * [`lemiesz`] — Lemiesz's weighted-cardinality sketch (`y` part only).
+//! * [`bagminhash`] — BagMinHash-style weighted-Jaccard baseline (Ertl '18).
+//! * [`icws`] — Improved Consistent Weighted Sampling (Ioffe '10).
+//! * [`minhash`] — classic binary MinHash (substrate / related work).
+//! * [`hyperloglog`] — HLL for unweighted cardinality (ablation baseline).
+//! * [`order_stats`] — the ascending-exponential + streamed-Fisher–Yates
+//!   generator both FastGM variants and BagMinHash build on.
+
+pub mod order_stats;
+pub mod fastgm;
+pub mod stream_fastgm;
+pub mod fastgm_c;
+pub mod pminhash;
+pub mod lemiesz;
+pub mod bagminhash;
+pub mod icws;
+pub mod minhash;
+pub mod hyperloglog;
+
+use crate::util::json::Value;
+
+/// RNG family backing a sketch (DESIGN.md §2). Sketches are only comparable
+/// within a family; [`GumbelMaxSketch::merge`] and the estimators enforce it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// SplitMix64 per-element streams through the order-statistics
+    /// construction (FastGM, Stream-FastGM, FastGM-c, BagMinHash).
+    Ordered,
+    /// Stateless counter RNG `direct_bits(seed, i, j)`, mirrored by the
+    /// Pallas kernels (P-MinHash, Lemiesz, dense accelerator).
+    Direct,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Ordered => "ordered",
+            Family::Direct => "direct",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<Family> {
+        match s {
+            "ordered" => Ok(Family::Ordered),
+            "direct" => Ok(Family::Direct),
+            _ => anyhow::bail!("unknown sketch family '{s}'"),
+        }
+    }
+}
+
+/// Sentinel for an untouched ArgMax register.
+pub const EMPTY_REGISTER: u64 = u64::MAX;
+
+/// Fold a 64-bit element id into the 32-bit Direct-RNG index space (the
+/// Pallas kernel indexes dense columns with u32; sparse ids are folded the
+/// same way on both sides).
+#[inline]
+pub fn fold_id(id: u64) -> u32 {
+    (id ^ (id >> 32)) as u32
+}
+
+/// A sparse non-negative vector: parallel `ids` / `weights` arrays.
+/// Ids are arbitrary u64 (hashed tokens, packet ids, or dense indices);
+/// entries with non-positive weight are ignored by every sketcher.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseVector {
+    pub ids: Vec<u64>,
+    pub weights: Vec<f64>,
+}
+
+impl SparseVector {
+    pub fn new(ids: Vec<u64>, weights: Vec<f64>) -> Self {
+        assert_eq!(ids.len(), weights.len(), "ids/weights length mismatch");
+        SparseVector { ids, weights }
+    }
+
+    /// Build from a dense slice; indices become ids.
+    pub fn from_dense(xs: &[f64]) -> Self {
+        let mut ids = Vec::new();
+        let mut weights = Vec::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if x > 0.0 {
+                ids.push(i as u64);
+                weights.push(x);
+            }
+        }
+        SparseVector { ids, weights }
+    }
+
+    /// Iterator over strictly positive, finite entries.
+    pub fn positive(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        self.ids
+            .iter()
+            .zip(&self.weights)
+            .filter(|(_, &w)| w > 0.0 && w.is_finite())
+            .map(|(&i, &w)| (i, w))
+    }
+
+    pub fn n_plus(&self) -> usize {
+        self.positive().count()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.positive().map(|(_, w)| w).sum()
+    }
+
+    pub fn is_empty_positive(&self) -> bool {
+        self.positive().next().is_none()
+    }
+
+    pub fn push(&mut self, id: u64, w: f64) {
+        self.ids.push(id);
+        self.weights.push(w);
+    }
+}
+
+/// A k-length Gumbel-Max sketch: the `y` (min value) and `s` (argmin id)
+/// register arrays, tagged with the RNG family and seed that produced it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GumbelMaxSketch {
+    pub family: Family,
+    pub seed: u64,
+    pub y: Vec<f64>,
+    pub s: Vec<u64>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum MergeError {
+    #[error("sketch family mismatch: {0} vs {1}")]
+    FamilyMismatch(&'static str, &'static str),
+    #[error("sketch seed mismatch: {0} vs {1}")]
+    SeedMismatch(u64, u64),
+    #[error("sketch length mismatch: {0} vs {1}")]
+    LengthMismatch(usize, usize),
+}
+
+impl GumbelMaxSketch {
+    pub fn empty(family: Family, seed: u64, k: usize) -> Self {
+        GumbelMaxSketch {
+            family,
+            seed,
+            y: vec![f64::INFINITY; k],
+            s: vec![EMPTY_REGISTER; k],
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.y.len()
+    }
+
+    /// The literal Gumbel-Max variables `x_j = -ln y_j`.
+    pub fn gumbel_values(&self) -> Vec<f64> {
+        self.y.iter().map(|y| -y.ln()).collect()
+    }
+
+    pub fn check_compatible(&self, other: &GumbelMaxSketch) -> Result<(), MergeError> {
+        if self.family != other.family {
+            return Err(MergeError::FamilyMismatch(self.family.name(), other.family.name()));
+        }
+        if self.seed != other.seed {
+            return Err(MergeError::SeedMismatch(self.seed, other.seed));
+        }
+        if self.k() != other.k() {
+            return Err(MergeError::LengthMismatch(self.k(), other.k()));
+        }
+        Ok(())
+    }
+
+    /// Merge (union semantics, §2.3): per register, keep the smaller `y`
+    /// and its `s`. The result is exactly the sketch of the union multiset.
+    pub fn merge(&self, other: &GumbelMaxSketch) -> Result<GumbelMaxSketch, MergeError> {
+        self.check_compatible(other)?;
+        let mut out = self.clone();
+        out.merge_in_place(other)?;
+        Ok(out)
+    }
+
+    pub fn merge_in_place(&mut self, other: &GumbelMaxSketch) -> Result<(), MergeError> {
+        self.check_compatible(other)?;
+        for j in 0..self.k() {
+            if other.y[j] < self.y[j] {
+                self.y[j] = other.y[j];
+                self.s[j] = other.s[j];
+            }
+        }
+        Ok(())
+    }
+
+    /// Merge many sketches (e.g. the per-site sketches of §2.3).
+    pub fn merge_all<'a>(
+        sketches: impl IntoIterator<Item = &'a GumbelMaxSketch>,
+    ) -> Result<GumbelMaxSketch, MergeError> {
+        let mut it = sketches.into_iter();
+        let first = it.next().expect("merge_all requires at least one sketch");
+        let mut acc = first.clone();
+        for s in it {
+            acc.merge_in_place(s)?;
+        }
+        Ok(acc)
+    }
+
+    // -- JSON wire format (used by coordinator::protocol and persistence) --
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("family", Value::str(self.family.name())),
+            ("seed", Value::u64(self.seed)),
+            // Infinity is not valid JSON; empty registers encode as -1.
+            (
+                "y",
+                Value::Arr(
+                    self.y
+                        .iter()
+                        .map(|&y| Value::Num(if y.is_finite() { y } else { -1.0 }))
+                        .collect(),
+                ),
+            ),
+            // EMPTY_REGISTER (u64::MAX) is not f64-exact; encode as -1.
+            (
+                "s",
+                Value::Arr(
+                    self.s
+                        .iter()
+                        .map(|&s| {
+                            if s == EMPTY_REGISTER {
+                                Value::Num(-1.0)
+                            } else {
+                                Value::u64(s)
+                            }
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<GumbelMaxSketch> {
+        let family = Family::from_name(v.req_str("family")?)?;
+        let seed = v
+            .req("seed")?
+            .as_u64_lossless()
+            .ok_or_else(|| anyhow::anyhow!("seed not a valid u64"))?;
+        let y: Vec<f64> = v
+            .req("y")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("y not an array"))?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|f| if f < 0.0 { f64::INFINITY } else { f })
+                    .ok_or_else(|| anyhow::anyhow!("y entry not a number"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let s: Vec<u64> = v
+            .req("s")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("s not an array"))?
+            .iter()
+            .map(|x| {
+                if let Some(f) = x.as_f64() {
+                    if f < 0.0 {
+                        return Ok(EMPTY_REGISTER);
+                    }
+                }
+                x.as_u64_lossless()
+                    .ok_or_else(|| anyhow::anyhow!("s entry not a valid id"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(y.len() == s.len(), "y/s length mismatch");
+        Ok(GumbelMaxSketch { family, seed, y, s })
+    }
+}
+
+/// Anything that turns a [`SparseVector`] into a [`GumbelMaxSketch`].
+pub trait Sketcher: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn family(&self) -> Family;
+    fn k(&self) -> usize;
+    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_vector_filters_nonpositive() {
+        let v = SparseVector::new(vec![1, 2, 3, 4], vec![0.5, 0.0, -1.0, 2.0]);
+        assert_eq!(v.n_plus(), 2);
+        assert!((v.total_weight() - 2.5).abs() < 1e-12);
+        let d = SparseVector::from_dense(&[0.0, 1.5, 0.0, 0.25]);
+        assert_eq!(d.ids, vec![1, 3]);
+    }
+
+    #[test]
+    fn merge_takes_pointwise_min() {
+        let a = GumbelMaxSketch {
+            family: Family::Ordered,
+            seed: 1,
+            y: vec![0.5, 2.0],
+            s: vec![10, 11],
+        };
+        let b = GumbelMaxSketch {
+            family: Family::Ordered,
+            seed: 1,
+            y: vec![0.7, 1.0],
+            s: vec![20, 21],
+        };
+        let m = a.merge(&b).unwrap();
+        assert_eq!(m.y, vec![0.5, 1.0]);
+        assert_eq!(m.s, vec![10, 21]);
+    }
+
+    #[test]
+    fn merge_rejects_mismatches() {
+        let a = GumbelMaxSketch::empty(Family::Ordered, 1, 4);
+        let b = GumbelMaxSketch::empty(Family::Direct, 1, 4);
+        assert!(matches!(a.merge(&b), Err(MergeError::FamilyMismatch(_, _))));
+        let c = GumbelMaxSketch::empty(Family::Ordered, 2, 4);
+        assert!(matches!(a.merge(&c), Err(MergeError::SeedMismatch(1, 2))));
+        let d = GumbelMaxSketch::empty(Family::Ordered, 1, 8);
+        assert!(matches!(a.merge(&d), Err(MergeError::LengthMismatch(4, 8))));
+    }
+
+    #[test]
+    fn merge_is_commutative_and_idempotent() {
+        let a = GumbelMaxSketch {
+            family: Family::Direct,
+            seed: 3,
+            y: vec![0.1, 5.0, 2.0],
+            s: vec![1, 2, 3],
+        };
+        let b = GumbelMaxSketch {
+            family: Family::Direct,
+            seed: 3,
+            y: vec![0.2, 4.0, 2.5],
+            s: vec![4, 5, 6],
+        };
+        assert_eq!(a.merge(&b).unwrap(), b.merge(&a).unwrap());
+        assert_eq!(a.merge(&a).unwrap(), a);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_empty_registers() {
+        let mut a = GumbelMaxSketch::empty(Family::Ordered, 42, 3);
+        a.y[1] = 0.25;
+        a.s[1] = 77;
+        let text = a.to_json().to_string();
+        let back = GumbelMaxSketch::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.s[0], EMPTY_REGISTER);
+        assert_eq!(back.s[1], 77);
+        assert_eq!(back.y[1], 0.25);
+        assert!(back.y[0].is_infinite());
+        assert_eq!(back.family, Family::Ordered);
+    }
+
+    #[test]
+    fn gumbel_values_are_neg_log() {
+        let a = GumbelMaxSketch {
+            family: Family::Ordered,
+            seed: 0,
+            y: vec![1.0, std::f64::consts::E],
+            s: vec![0, 0],
+        };
+        let g = a.gumbel_values();
+        assert!((g[0] - 0.0).abs() < 1e-12);
+        assert!((g[1] + 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,409 @@
+//! Ascending exponential generation — the building block of FastGM.
+//!
+//! For an element `i` with weight `v_i`, the k race variables
+//! `b_{i,1..k} ~ EXP(v_i)` are produced **in ascending order** via Rényi's
+//! order-statistics recurrence (Eq. 7/8 of the paper):
+//!
+//! ```text
+//!   b_(z) = b_(z-1) + ( -ln u_z ) / ( v_i · (k - z + 1) ),   b_(0) = 0
+//! ```
+//!
+//! paired with a *streamed* Fisher–Yates shuffle that assigns each arrival a
+//! distinct register ("server") uniformly at random. The resulting stream of
+//! `(arrival_time, register)` tuples is the queue `Q_i` of the paper's
+//! k-server/n-queue model. Draws come from a [`SplitMix64`] stream keyed by
+//! `(seed, element)`, so every vector containing element `i` sees the same
+//! queue — the consistency property Gumbel-Max sketches require.
+//!
+//! The permutation is held *lazily* ([`LazyPerm`]): only the entries touched
+//! by a swap are stored, so an element that releases `R_i ≪ k` customers
+//! costs `O(R_i)` memory instead of the `O(k)` of a materialized array (an
+//! improvement over the paper's `n⁺·k·log k`-bit bookkeeping; see
+//! DESIGN.md §Perf).
+
+use crate::util::rng::SplitMix64;
+
+/// Tiny open-addressing u32→u32 map (linear probing, power-of-two
+/// capacity). `std::collections::HashMap`'s SipHash dominated the race's
+/// per-release cost (§Perf log: ~2× whole-sketch speedup from this swap);
+/// a multiply-shift hash over u32 keys is all the permutation override
+/// table needs.
+#[derive(Debug, Clone)]
+struct U32Map {
+    // keys[i] == u32::MAX means empty (k < 2^32-1 always holds here).
+    keys: Vec<u32>,
+    vals: Vec<u32>,
+    len: usize,
+}
+
+const EMPTY_KEY: u32 = u32::MAX;
+
+impl U32Map {
+    fn new() -> Self {
+        // A map is only built once the inline slots spill, i.e. the queue
+        // is releasing many customers — start at 64 to avoid regrow churn
+        // (grow() was 9% of the stream profile at capacity 8).
+        U32Map { keys: vec![EMPTY_KEY; 64], vals: vec![0; 64], len: 0 }
+    }
+
+    #[inline(always)]
+    fn slot(&self, key: u32) -> usize {
+        // Fibonacci multiply-shift; table length is a power of two.
+        let h = key.wrapping_mul(0x9E37_79B1);
+        (h as usize) & (self.keys.len() - 1)
+    }
+
+    #[inline]
+    fn get(&self, key: u32) -> Option<u32> {
+        let mask = self.keys.len() - 1;
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                return Some(self.vals[i]);
+            }
+            if k == EMPTY_KEY {
+                return None;
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, key: u32, val: u32) {
+        if self.len * 4 >= self.keys.len() * 3 {
+            self.grow();
+        }
+        let mask = self.keys.len() - 1;
+        let mut i = self.slot(key);
+        loop {
+            let k = self.keys[i];
+            if k == key {
+                self.vals[i] = val;
+                return;
+            }
+            if k == EMPTY_KEY {
+                self.keys[i] = key;
+                self.vals[i] = val;
+                self.len += 1;
+                return;
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY_KEY; 0]);
+        let old_vals = std::mem::take(&mut self.vals);
+        self.keys = vec![EMPTY_KEY; old_keys.len() * 2];
+        self.vals = vec![0; old_keys.len() * 2];
+        self.len = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if k != EMPTY_KEY {
+                self.insert(k, v);
+            }
+        }
+    }
+}
+
+/// Inline capacity before spilling to the heap map. Under FastPrune most
+/// queues release only a handful of customers (one override each), so the
+/// common case allocates nothing (§Perf log).
+const INLINE_CAP: usize = 12;
+
+/// A lazily materialized Fisher–Yates permutation of `0..k`.
+///
+/// Conceptually `perm` starts as the identity; `swap_take(z, j)` performs
+/// `swap(perm[z], perm[j])` and returns the new `perm[z]`. Position `z` is
+/// never revisited (the stream only advances), so only the override at `j`
+/// is recorded — inline for the first [`INLINE_CAP`] overrides, then in a
+/// [`U32Map`].
+#[derive(Debug, Clone)]
+pub struct LazyPerm {
+    inline: [(u32, u32); INLINE_CAP],
+    inline_len: usize,
+    spill: Option<Box<U32Map>>,
+}
+
+impl LazyPerm {
+    pub fn new() -> Self {
+        LazyPerm { inline: [(EMPTY_KEY, 0); INLINE_CAP], inline_len: 0, spill: None }
+    }
+
+    #[inline]
+    fn get(&self, i: u32) -> u32 {
+        for &(k, v) in &self.inline[..self.inline_len] {
+            if k == i {
+                return v;
+            }
+        }
+        if let Some(m) = &self.spill {
+            if let Some(v) = m.get(i) {
+                return v;
+            }
+        }
+        i
+    }
+
+    #[inline]
+    fn set(&mut self, key: u32, val: u32) {
+        for slot in &mut self.inline[..self.inline_len] {
+            if slot.0 == key {
+                slot.1 = val;
+                return;
+            }
+        }
+        if self.spill.is_none() && self.inline_len < INLINE_CAP {
+            self.inline[self.inline_len] = (key, val);
+            self.inline_len += 1;
+            return;
+        }
+        self.spill.get_or_insert_with(|| Box::new(U32Map::new())).insert(key, val);
+    }
+
+    /// Swap positions `z` and `j` (`z <= j`) and return the value landing
+    /// at `z`.
+    #[inline]
+    pub fn swap_take(&mut self, z: u32, j: u32) -> u32 {
+        let vj = self.get(j);
+        if z != j {
+            let vz = self.get(z);
+            self.set(j, vz);
+        }
+        // Position z is consumed and never read again; stale entries at z
+        // are harmless (future probes only touch indices > z).
+        vj
+    }
+
+    pub fn touched(&self) -> usize {
+        self.inline_len + self.spill.as_ref().map(|m| m.len).unwrap_or(0)
+    }
+}
+
+impl Default for LazyPerm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The ascending race stream (queue `Q_i`) for one positive element.
+#[derive(Debug, Clone)]
+pub struct ElementRace {
+    rng: SplitMix64,
+    inv_w: f64,
+    k: u32,
+    /// Customers released so far (`z_i` in Algorithm 1).
+    pub z: u32,
+    /// Current arrival time (`b_i` in Algorithm 1).
+    pub b: f64,
+    perm: LazyPerm,
+}
+
+impl ElementRace {
+    /// Queue for element `id` with weight `w > 0` under sketch `seed`.
+    pub fn new(seed: u64, id: u64, w: f64, k: usize) -> Self {
+        debug_assert!(w > 0.0 && w.is_finite());
+        ElementRace {
+            rng: SplitMix64::for_element(seed, id),
+            inv_w: 1.0 / w,
+            k: k as u32,
+            z: 0,
+            b: 0.0,
+            perm: LazyPerm::new(),
+        }
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.z >= self.k
+    }
+
+    /// Release the next customer: `(arrival_time, register)`.
+    /// Returns `None` once all k customers have been released.
+    #[inline]
+    pub fn next(&mut self) -> Option<(f64, u32)> {
+        if self.z >= self.k {
+            return None;
+        }
+        let remaining = (self.k - self.z) as f64;
+        self.z += 1;
+        let u = self.rng.next_f64();
+        self.b += self.inv_w * (-u.ln()) / remaining;
+        let z0 = self.z - 1;
+        let j = self.rng.next_range(z0 as usize, (self.k - 1) as usize) as u32;
+        let c = self.perm.swap_take(z0, j);
+        Some((self.b, c))
+    }
+
+    /// Peek memory used by the lazy permutation (diagnostics).
+    pub fn perm_entries(&self) -> usize {
+        self.perm.touched()
+    }
+
+    /// Drain the remaining stream into `(time, register)` tuples (testing
+    /// and the brute-force oracle).
+    pub fn drain(mut self) -> Vec<(f64, u32)> {
+        let mut out = Vec::with_capacity((self.k - self.z) as usize);
+        while let Some(t) = self.next() {
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// Brute-force oracle: the exact Ordered-family sketch registers obtained by
+/// fully draining every element's queue. `O(n⁺·k)` — used by tests and as
+/// the reference implementation FastGM must match bit-for-bit.
+pub fn oracle_registers(
+    seed: u64,
+    elements: &[(u64, f64)],
+    k: usize,
+) -> (Vec<f64>, Vec<u64>) {
+    let mut y = vec![f64::INFINITY; k];
+    let mut s = vec![super::EMPTY_REGISTER; k];
+    for &(id, w) in elements {
+        if w <= 0.0 {
+            continue;
+        }
+        for (t, c) in ElementRace::new(seed, id, w, k).drain() {
+            let c = c as usize;
+            if t < y[c] {
+                y[c] = t;
+                s[c] = id;
+            }
+        }
+    }
+    (y, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall_explain;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn race_emits_k_ascending_arrivals() {
+        let race = ElementRace::new(7, 42, 0.5, 64);
+        let ts = race.drain();
+        assert_eq!(ts.len(), 64);
+        for w in ts.windows(2) {
+            assert!(w[0].0 < w[1].0, "arrivals must be strictly ascending");
+        }
+    }
+
+    #[test]
+    fn race_registers_form_permutation() {
+        forall_explain(
+            50,
+            |r| (r.next_u64(), r.next_u64(), r.next_f64() + 0.01, r.next_range(1, 128)),
+            |&(seed, id, w, k)| {
+                let race = ElementRace::new(seed, id, w, k);
+                let mut regs: Vec<u32> = race.drain().into_iter().map(|(_, c)| c).collect();
+                regs.sort_unstable();
+                let want: Vec<u32> = (0..k as u32).collect();
+                if regs == want {
+                    Ok(())
+                } else {
+                    Err(format!("registers not a permutation of 0..{k}: {regs:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn race_is_deterministic_per_element() {
+        let a = ElementRace::new(9, 5, 0.3, 32).drain();
+        let b = ElementRace::new(9, 5, 0.3, 32).drain();
+        assert_eq!(a, b);
+        let c = ElementRace::new(10, 5, 0.3, 32).drain();
+        assert_ne!(a, c);
+    }
+
+    /// Each register's value across the stream is an EXP(w) variable: check
+    /// the distribution of per-register values (register j's arrival is one
+    /// of the k iid EXP(w) draws, shuffled).
+    #[test]
+    fn register_values_are_exp_w() {
+        let w = 2.5;
+        let k = 16;
+        let mut stats = OnlineStats::new();
+        for id in 0..4000u64 {
+            for (t, _) in ElementRace::new(1, id, w, k).drain() {
+                stats.push(t);
+            }
+        }
+        // Mean of EXP(w) is 1/w; the pooled per-register values are exactly
+        // the k iid draws.
+        assert!((stats.mean() - 1.0 / w).abs() < 0.01, "mean={}", stats.mean());
+        assert!((stats.var() - 1.0 / (w * w)).abs() < 0.02, "var={}", stats.var());
+    }
+
+    /// First arrival of the queue is the min of k EXP(w) = EXP(k·w).
+    #[test]
+    fn first_arrival_is_exp_kw() {
+        let w = 0.7;
+        let k = 32;
+        let mut stats = OnlineStats::new();
+        for id in 0..20_000u64 {
+            let mut race = ElementRace::new(2, id, w, k);
+            stats.push(race.next().unwrap().0);
+        }
+        let want = 1.0 / (k as f64 * w);
+        assert!(
+            (stats.mean() - want).abs() < want * 0.05,
+            "mean={} want={want}",
+            stats.mean()
+        );
+    }
+
+    #[test]
+    fn lazy_perm_matches_dense_fisher_yates() {
+        forall_explain(
+            100,
+            |r| (r.next_u64(), r.next_range(1, 64)),
+            |&(seed, k)| {
+                // Dense reference.
+                let mut rng = SplitMix64::new(seed);
+                let mut dense: Vec<u32> = (0..k as u32).collect();
+                let mut picks_dense = Vec::new();
+                for z in 0..k {
+                    let _u = rng.next_f64(); // mirror the race's draw order
+                    let j = rng.next_range(z, k - 1);
+                    dense.swap(z, j);
+                    picks_dense.push(dense[z]);
+                }
+                // Lazy version with the same RNG stream.
+                let mut rng = SplitMix64::new(seed);
+                let mut lazy = LazyPerm::new();
+                let mut picks_lazy = Vec::new();
+                for z in 0..k {
+                    let _u = rng.next_f64();
+                    let j = rng.next_range(z, k - 1);
+                    picks_lazy.push(lazy.swap_take(z as u32, j as u32));
+                }
+                if picks_dense == picks_lazy {
+                    Ok(())
+                } else {
+                    Err(format!("dense {picks_dense:?} != lazy {picks_lazy:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn oracle_monotone_under_more_elements() {
+        // Adding elements can only lower register values.
+        let a = oracle_registers(3, &[(1, 0.5), (2, 0.1)], 32);
+        let b = oracle_registers(3, &[(1, 0.5), (2, 0.1), (3, 1.0)], 32);
+        for j in 0..32 {
+            assert!(b.0[j] <= a.0[j]);
+        }
+    }
+
+    #[test]
+    fn oracle_ignores_nonpositive_weights() {
+        let a = oracle_registers(3, &[(1, 0.5), (9, 0.0), (10, -2.0)], 16);
+        let b = oracle_registers(3, &[(1, 0.5)], 16);
+        assert_eq!(a, b);
+    }
+}

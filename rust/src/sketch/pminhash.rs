@@ -1,0 +1,128 @@
+//! P-MinHash — the straightforward `O(k·n⁺)` Gumbel-Max sketch
+//! (Moulton & Jiang 2018), the paper's Task-1 baseline.
+//!
+//! For every positive element `i` and register `j`, draw
+//! `b_ij = -ln(a_ij)/v_i` with the **Direct** counter RNG and keep the
+//! per-register min/argmin. This is the construction the Pallas dense
+//! kernel mirrors, so CPU P-MinHash sketches and accelerator sketches are
+//! interchangeable (same family, same seed ⇒ same registers up to f32
+//! rounding; the runtime integration test checks that).
+
+use crate::util::rng::direct_exp;
+use super::{fold_id, Family, GumbelMaxSketch, Sketcher, SparseVector};
+
+#[derive(Debug, Clone)]
+pub struct PMinHash {
+    pub k: usize,
+    pub seed: u32,
+}
+
+impl PMinHash {
+    pub fn new(k: usize, seed: u32) -> Self {
+        assert!(k >= 1);
+        PMinHash { k, seed }
+    }
+}
+
+impl Sketcher for PMinHash {
+    fn name(&self) -> &'static str {
+        "pminhash"
+    }
+
+    fn family(&self) -> Family {
+        Family::Direct
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
+        let mut out = GumbelMaxSketch::empty(Family::Direct, self.seed as u64, self.k);
+        for (id, w) in v.positive() {
+            let i32id = fold_id(id);
+            let inv_w = 1.0 / w;
+            for j in 0..self.k {
+                let b = direct_exp(self.seed, i32id, j as u32) as f64 * inv_w;
+                if b < out.y[j] {
+                    out.y[j] = b;
+                    out.s[j] = id;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+    use crate::util::stats::OnlineStats;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let v = SparseVector::new(vec![1, 2, 3], vec![0.5, 1.0, 0.25]);
+        let a = PMinHash::new(64, 7).sketch(&v);
+        let b = PMinHash::new(64, 7).sketch(&v);
+        let c = PMinHash::new(64, 8).sketch(&v);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn consistency_across_vectors() {
+        // Shared elements see the same race variables: if u ⊂ v and an
+        // element of u wins register j in v, then u's register j must hold
+        // the same (y, s).
+        let u = SparseVector::new(vec![10, 20], vec![1.0, 2.0]);
+        let v = SparseVector::new(vec![10, 20, 30], vec![1.0, 2.0, 0.5]);
+        let su = PMinHash::new(128, 3).sketch(&u);
+        let sv = PMinHash::new(128, 3).sketch(&v);
+        for j in 0..128 {
+            if sv.s[j] != 30 {
+                assert_eq!(sv.s[j], su.s[j]);
+                assert_eq!(sv.y[j], su.y[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_distribution_proportional_to_weight() {
+        let v = SparseVector::new(vec![0, 1, 2], vec![0.2, 0.5, 0.3]);
+        let k = 4000;
+        let sk = PMinHash::new(k, 99).sketch(&v);
+        let mut counts = [0usize; 3];
+        for &s in &sk.s {
+            counts[s as usize] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let p = c as f64 / k as f64;
+            assert!((p - v.weights[i]).abs() < 0.03, "element {i}: p={p}");
+        }
+    }
+
+    #[test]
+    fn y_mean_matches_exponential_total_weight() {
+        let mut r = SplitMix64::new(4);
+        let mut stats = OnlineStats::new();
+        for seed in 0..60u32 {
+            let v = SparseVector::new(
+                (0..20u64).collect(),
+                (0..20).map(|_| r.next_f64() + 0.1).collect(),
+            );
+            let total = v.total_weight();
+            let sk = PMinHash::new(64, seed).sketch(&v);
+            for y in sk.y {
+                stats.push(y * total); // normalize to EXP(1)
+            }
+        }
+        assert!((stats.mean() - 1.0).abs() < 0.03, "mean={}", stats.mean());
+    }
+
+    #[test]
+    fn empty_vector() {
+        let sk = PMinHash::new(8, 1).sketch(&SparseVector::default());
+        assert!(sk.y.iter().all(|y| y.is_infinite()));
+    }
+}

@@ -1,0 +1,222 @@
+//! Stream-FastGM — Algorithm 2 of the paper.
+//!
+//! One-pass sketching of a data stream `Π = o₁o₂…` where each object `i`
+//! carries a fixed weight `v_i` and may occur many times. Each arriving
+//! element replays its deterministic ascending race; once every register
+//! has been appointed (`FlagFastPrune`), an element's race is aborted the
+//! moment its next arrival exceeds `y* = max_j y_j`.
+//!
+//! Because races are deterministic per `(seed, element)`, re-occurrences of
+//! an element are idempotent, and the final sketch equals the FastGM /
+//! oracle sketch of the stream's de-duplicated weighted vector — the
+//! equivalence test below locks that in.
+
+use super::order_stats::ElementRace;
+use super::{Family, GumbelMaxSketch, EMPTY_REGISTER};
+
+/// Incremental Stream-FastGM state. Feed elements with [`push`](Self::push);
+/// read the sketch at any time with [`sketch`](Self::sketch).
+#[derive(Debug, Clone)]
+pub struct StreamFastGm {
+    k: usize,
+    seed: u64,
+    y: Vec<f64>,
+    s: Vec<u64>,
+    unfilled: usize,
+    /// argmax_j y_j, valid once `unfilled == 0` (`FlagFastPrune` true).
+    jstar: usize,
+    /// Elements processed (stream length seen).
+    pub processed: u64,
+    /// Exponential variables generated (work counter for Fig 8/11).
+    pub released: u64,
+}
+
+impl StreamFastGm {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        StreamFastGm {
+            k,
+            seed,
+            y: vec![f64::INFINITY; k],
+            s: vec![EMPTY_REGISTER; k],
+            unfilled: k,
+            jstar: 0,
+            processed: 0,
+            released: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Process one stream element `(id, weight)`. Weight must be the fixed
+    /// weight of that object; non-positive weights are ignored.
+    pub fn push(&mut self, id: u64, weight: f64) {
+        self.processed += 1;
+        if weight <= 0.0 || !weight.is_finite() {
+            return;
+        }
+        let mut race = ElementRace::new(self.seed, id, weight, self.k);
+        if self.unfilled > 0 {
+            // FlagFastPrune == false: must release the full queue, updating
+            // registers and possibly completing the fill.
+            while let Some((b, c)) = race.next() {
+                self.released += 1;
+                let c = c as usize;
+                if self.s[c] == EMPTY_REGISTER {
+                    self.y[c] = b;
+                    self.s[c] = id;
+                    self.unfilled -= 1;
+                    if self.unfilled == 0 {
+                        self.jstar = argmax(&self.y);
+                        // Switch to pruning for the REST of this element.
+                        self.drain_pruned(&mut race, id);
+                        return;
+                    }
+                } else if b < self.y[c] {
+                    self.y[c] = b;
+                    self.s[c] = id;
+                }
+            }
+        } else {
+            self.drain_pruned(&mut race, id);
+        }
+    }
+
+    /// FlagFastPrune == true: abort on the first arrival beyond y*.
+    fn drain_pruned(&mut self, race: &mut ElementRace, id: u64) {
+        while let Some((b, c)) = race.next() {
+            self.released += 1;
+            if b > self.y[self.jstar] {
+                return;
+            }
+            let c = c as usize;
+            if b < self.y[c] {
+                self.y[c] = b;
+                self.s[c] = id;
+                if c == self.jstar {
+                    self.jstar = argmax(&self.y);
+                }
+            }
+        }
+    }
+
+    /// Current sketch (clones the registers).
+    pub fn sketch(&self) -> GumbelMaxSketch {
+        GumbelMaxSketch {
+            family: Family::Ordered,
+            seed: self.seed,
+            y: self.y.clone(),
+            s: self.s.clone(),
+        }
+    }
+}
+
+fn argmax(y: &[f64]) -> usize {
+    let mut best = 0;
+    for (j, &v) in y.iter().enumerate() {
+        if v > y[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::fastgm::FastGm;
+    use crate::sketch::{Sketcher, SparseVector};
+    use crate::util::proptest::forall_explain;
+    use crate::util::rng::SplitMix64;
+
+    /// Streaming (with duplicates, any order) must equal batch FastGM on the
+    /// de-duplicated weighted vector — exact register equality.
+    #[test]
+    fn stream_equals_batch_fastgm() {
+        forall_explain(
+            40,
+            |r| {
+                let k = [1, 4, 16, 48][r.next_range(0, 3)];
+                let n = r.next_range(1, 60);
+                let elements: Vec<(u64, f64)> =
+                    (0..n).map(|i| (i as u64 * 7 + 1, r.next_exp() + 0.01)).collect();
+                // A stream with duplicates in shuffled order.
+                let mut stream: Vec<(u64, f64)> = Vec::new();
+                for &(id, w) in &elements {
+                    for _ in 0..r.next_range(1, 3) {
+                        stream.push((id, w));
+                    }
+                }
+                r.shuffle(&mut stream);
+                (r.next_u64(), k, elements, stream)
+            },
+            |(seed, k, elements, stream)| {
+                let mut sf = StreamFastGm::new(*k, *seed);
+                for &(id, w) in stream {
+                    sf.push(id, w);
+                }
+                let batch = FastGm::new(*k, *seed).sketch(&SparseVector::new(
+                    elements.iter().map(|e| e.0).collect(),
+                    elements.iter().map(|e| e.1).collect(),
+                ));
+                if sf.sketch() == batch {
+                    Ok(())
+                } else {
+                    Err("stream sketch != batch sketch".to_string())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn duplicates_are_idempotent() {
+        let mut a = StreamFastGm::new(32, 5);
+        let mut b = StreamFastGm::new(32, 5);
+        for (id, w) in [(1u64, 0.5), (2, 1.5), (3, 0.2)] {
+            a.push(id, w);
+            b.push(id, w);
+            b.push(id, w); // duplicate immediately
+        }
+        b.push(1, 0.5); // and again later
+        assert_eq!(a.sketch(), b.sketch());
+    }
+
+    #[test]
+    fn ignores_nonpositive_weights() {
+        let mut a = StreamFastGm::new(16, 3);
+        a.push(1, 1.0);
+        let snap = a.sketch();
+        a.push(2, 0.0);
+        a.push(3, -4.0);
+        a.push(4, f64::NAN);
+        assert_eq!(a.sketch(), snap);
+    }
+
+    /// After the fill phase, heavy pruning: work per element must flatline.
+    #[test]
+    fn prune_work_is_sublinear_in_k() {
+        let k = 256;
+        let mut sf = StreamFastGm::new(k, 7);
+        let mut r = SplitMix64::new(1);
+        let n = 2000u64;
+        for id in 0..n {
+            sf.push(id, r.next_f64() + 0.01);
+        }
+        // Brute force would be n·k = 512_000 releases.
+        assert!(
+            sf.released < (n * k as u64) / 8,
+            "released={} vs brute={}",
+            sf.released,
+            n * k as u64
+        );
+    }
+
+    #[test]
+    fn empty_stream_is_empty_sketch() {
+        let sf = StreamFastGm::new(8, 1);
+        let sk = sf.sketch();
+        assert!(sk.y.iter().all(|y| y.is_infinite()));
+    }
+}

@@ -1,0 +1,263 @@
+//! Declarative CLI argument parsing for the `fastgm` launcher (clap is not
+//! in the offline crate set). Supports subcommands, `--flag`, `--opt value`
+//! / `--opt=value`, repeated options, positionals and generated help text.
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: &'static str,
+    takes_value: bool,
+    repeated: bool,
+    help: &'static str,
+    default: Option<&'static str>,
+}
+
+#[derive(Debug, Default)]
+pub struct ArgSpec {
+    command: String,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: Vec<&'static str>,
+    values: Vec<(&'static str, String)>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(command: &str, about: &'static str) -> Self {
+        ArgSpec { command: command.to_string(), about, ..Default::default() }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: false, repeated: false, help, default: None });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            takes_value: true,
+            repeated: false,
+            help,
+            default: Some(default),
+        });
+        self
+    }
+
+    /// An option that may be given multiple times (e.g. `--set`).
+    pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, takes_value: true, repeated: true, help, default: None });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("fastgm {} — {}\n\nUSAGE:\n  fastgm {}", self.command, self.about, self.command);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p:<14}> {h}\n"));
+            }
+        }
+        s.push_str("\nOPTIONS:\n");
+        for o in &self.opts {
+            let head = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {head:<20} {}{def}\n", o.help));
+        }
+        s.push_str("  --help               print this help\n");
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(raw) = it.next() {
+            if raw == "--help" || raw == "-h" {
+                anyhow::bail!("{}", self.help_text());
+            }
+            if let Some(body) = raw.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                            .clone(),
+                    };
+                    if !spec.repeated && args.values.iter().any(|(n, _)| *n == spec.name) {
+                        anyhow::bail!("--{name} given more than once");
+                    }
+                    args.values.push((spec.name, v));
+                } else {
+                    if inline.is_some() {
+                        anyhow::bail!("--{name} does not take a value");
+                    }
+                    args.flags.push(spec.name);
+                }
+            } else {
+                args.positionals.push(raw.clone());
+            }
+        }
+        if args.positionals.len() > self.positionals.len() {
+            anyhow::bail!(
+                "unexpected positional '{}'\n\n{}",
+                args.positionals[self.positionals.len()],
+                self.help_text()
+            );
+        }
+        // Fill defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                if !args.values.iter().any(|(n, _)| *n == o.name) {
+                    args.values.push((o.name, d.to_string()));
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| *f == name)
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.clone())
+            .unwrap_or_default()
+    }
+
+    pub fn all(&self, name: &str) -> Vec<String> {
+        self.values.iter().filter(|(n, _)| *n == name).map(|(_, v)| v.clone()).collect()
+    }
+
+    pub fn usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.str(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{}'", self.str(name)))
+    }
+
+    pub fn u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{}'", self.str(name)))
+    }
+
+    pub fn f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{}'", self.str(name)))
+    }
+
+    /// Parse a comma-separated list of integers, supporting `a..b` (powers
+    /// kept explicit) — e.g. `64,128,256`.
+    pub fn usize_list(&self, name: &str) -> anyhow::Result<Vec<usize>> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--{name}: bad integer '{s}'"))
+            })
+            .collect()
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "unit test command")
+            .flag("verbose", "chatty")
+            .opt("k", "1024", "sketch length")
+            .multi("set", "config override")
+            .positional("input", "input file")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_opts_positionals() {
+        let a = spec().parse(&sv(&["--verbose", "--k", "256", "file.txt"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize("k").unwrap(), 256);
+        assert_eq!(a.positional(0), Some("file.txt"));
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let a = spec().parse(&sv(&["--k=64"])).unwrap();
+        assert_eq!(a.usize("k").unwrap(), 64);
+        let a = spec().parse(&sv(&[])).unwrap();
+        assert_eq!(a.usize("k").unwrap(), 1024); // default
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let a = spec().parse(&sv(&["--set", "a=1", "--set", "b=2"])).unwrap();
+        assert_eq!(a.all("set"), vec!["a=1".to_string(), "b=2".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_duplicates() {
+        assert!(spec().parse(&sv(&["--nope"])).is_err());
+        assert!(spec().parse(&sv(&["--k", "1", "--k", "2"])).is_err());
+        assert!(spec().parse(&sv(&["a", "b"])).is_err()); // too many positionals
+        assert!(spec().parse(&sv(&["--k"])).is_err()); // missing value
+        assert!(spec().parse(&sv(&["--verbose=x"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_everything() {
+        let h = spec().help_text();
+        assert!(h.contains("--k"));
+        assert!(h.contains("default: 1024"));
+        assert!(h.contains("<input"));
+        let err = spec().parse(&sv(&["--help"])).unwrap_err().to_string();
+        assert!(err.contains("USAGE"));
+    }
+
+    #[test]
+    fn usize_list_parses() {
+        let spec = ArgSpec::new("t", "x").opt("ks", "64,128", "list");
+        let a = spec.parse(&sv(&[])).unwrap();
+        assert_eq!(a.usize_list("ks").unwrap(), vec![64, 128]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! Calibrates iteration counts against a wall-clock budget, reports
+//! median / mean / p10 / p90 per iteration, and can append JSON-lines
+//! records so `cargo bench` output is machine-readable for EXPERIMENTS.md.
+//! Used both by `benches/figures.rs` (`harness = false`) and by the
+//! in-binary experiment harness (`fastgm exp ...`).
+
+use super::stats::{fmt_duration, percentile};
+use std::hint::black_box;
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Seconds per iteration.
+    pub median: f64,
+    pub mean: f64,
+    pub p10: f64,
+    pub p90: f64,
+    pub iters: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::obj(vec![
+            ("name", Value::str(self.name.clone())),
+            ("median_s", Value::num(self.median)),
+            ("mean_s", Value::num(self.mean)),
+            ("p10_s", Value::num(self.p10)),
+            ("p90_s", Value::num(self.p90)),
+            ("iters", Value::num(self.iters as f64)),
+            ("samples", Value::num(self.samples as f64)),
+        ])
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Total wall-clock budget per benchmark (seconds).
+    pub budget: f64,
+    /// Number of timed samples to aim for within the budget.
+    pub samples: usize,
+    /// Warmup time before measurement (seconds).
+    pub warmup: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { budget: 1.0, samples: 15, warmup: 0.15 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { budget: 0.3, samples: 7, warmup: 0.05 }
+    }
+
+    /// From env: `FASTGM_BENCH_BUDGET` (seconds/bench) for CI tuning.
+    pub fn from_env() -> Self {
+        let mut b = Bencher::default();
+        if let Ok(s) = std::env::var("FASTGM_BENCH_BUDGET") {
+            if let Ok(x) = s.parse::<f64>() {
+                b.budget = x.max(0.05);
+            }
+        }
+        b
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call and may
+    /// return a value (fed to `black_box` so the work is not elided).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + calibration: how many iters fit in one sample slot?
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed().as_secs_f64() < self.warmup || calib_iters == 0 {
+            black_box(f());
+            calib_iters += 1;
+            if calib_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / calib_iters as f64;
+        let slot = self.budget / self.samples as f64;
+        let iters_per_sample = ((slot / per_iter).floor() as u64).clamp(1, 10_000_000);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        let bench_start = Instant::now();
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+            total_iters += iters_per_sample;
+            if bench_start.elapsed().as_secs_f64() > self.budget * 2.0 {
+                break; // hard stop for badly calibrated (slow) cases
+            }
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            median: percentile(&samples, 0.5),
+            mean,
+            p10: percentile(&samples, 0.1),
+            p90: percentile(&samples, 0.9),
+            iters: total_iters,
+            samples: samples.len(),
+        }
+    }
+}
+
+/// A named collection of benchmark results with table + JSONL output.
+#[derive(Default)]
+pub struct Suite {
+    pub results: Vec<BenchResult>,
+    pub jsonl_path: Option<String>,
+}
+
+impl Suite {
+    pub fn new() -> Self {
+        Suite::default()
+    }
+
+    /// Write each result as a JSON line to `path` (appending).
+    pub fn with_jsonl(mut self, path: &str) -> Self {
+        self.jsonl_path = Some(path.to_string());
+        self
+    }
+
+    pub fn record(&mut self, r: BenchResult) {
+        println!(
+            "  {:<48} {:>12} /iter   (p10 {:>10}, p90 {:>10}, n={})",
+            r.name,
+            fmt_duration(r.median),
+            fmt_duration(r.p10),
+            fmt_duration(r.p90),
+            r.iters
+        );
+        if let Some(path) = &self.jsonl_path {
+            use std::io::Write;
+            if let Ok(mut f) =
+                std::fs::OpenOptions::new().create(true).append(true).open(path)
+            {
+                let _ = writeln!(f, "{}", r.to_json());
+            }
+        }
+        self.results.push(r);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Speedup of `b` relative to `a` (a.median / b.median).
+    pub fn speedup(&self, a: &str, b: &str) -> Option<f64> {
+        Some(self.get(a)?.median / self.get(b)?.median)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher { budget: 0.05, samples: 3, warmup: 0.01 };
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median > 0.0);
+        assert!(r.p10 <= r.p90);
+        assert!(r.iters > 0);
+    }
+
+    #[test]
+    fn suite_records_and_speedup() {
+        let b = Bencher { budget: 0.04, samples: 3, warmup: 0.005 };
+        let mut suite = Suite::new();
+        suite.record(b.run("fast", || 1u64));
+        suite.record(b.run("slow", || {
+            // black_box each step so release builds cannot collapse the
+            // loop to a constant (this self-test was flaky without it).
+            let mut s = 0u64;
+            for i in 0..2000u64 {
+                s = black_box(s.wrapping_add(black_box(i)));
+            }
+            s
+        }));
+        let sp = suite.speedup("slow", "fast").unwrap();
+        assert!(sp > 1.0, "speedup={sp}");
+    }
+
+    #[test]
+    fn jsonl_written() {
+        let path = std::env::temp_dir().join("fastgm_bench_test.jsonl");
+        let _ = std::fs::remove_file(&path);
+        let b = Bencher { budget: 0.02, samples: 2, warmup: 0.005 };
+        let mut suite = Suite::new().with_jsonl(path.to_str().unwrap());
+        suite.record(b.run("x", || 0u8));
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("x"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

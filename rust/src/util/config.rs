@@ -1,0 +1,239 @@
+//! TOML-subset configuration loader for the launcher.
+//!
+//! Supports the subset a deployment config actually needs: `[section]` /
+//! `[a.b]` headers, `key = value` with strings, integers, floats, booleans
+//! and flat arrays, plus `#` comments. Values flatten into dotted keys
+//! (`server.port`) stored as [`json::Value`], with typed getters and CLI
+//! `--set key=value` overrides layered on top.
+
+use super::json::Value;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Config::default()
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config '{path}': {e}"))?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ConfigError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                let value = parse_value(v.trim()).map_err(|m| err(&m))?;
+                cfg.values.insert(full, value);
+            } else {
+                return Err(err("expected 'key = value' or '[section]'"));
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Apply a `--set key=value` CLI override.
+    pub fn set_override(&mut self, spec: &str) -> anyhow::Result<()> {
+        let (k, v) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{spec}'"))?;
+        let value = parse_value(v.trim()).map_err(|m| anyhow::anyhow!("--set {k}: {m}"))?;
+        self.values.insert(k.trim().to_string(), value);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut xs = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if !p.is_empty() {
+                xs.push(parse_value(p)?);
+            }
+        }
+        return Ok(Value::Arr(xs));
+    }
+    s.parse::<f64>().map(Value::Num).map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+/// Split on commas that are not inside quotes (flat arrays only).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# FastGM service config
+name = "demo"            # inline comment
+[server]
+port = 7878
+workers = 4
+shed = true
+
+[sketch]
+k = 1024
+seed = 42
+families = ["ordered", "direct"]
+rates = [0.5, 1.5]
+
+[accel.dense]
+max_batch = 64
+deadline_ms = 2.5
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.str("name", ""), "demo");
+        assert_eq!(cfg.usize("server.port", 0), 7878);
+        assert!(cfg.bool("server.shed", false));
+        assert_eq!(cfg.usize("sketch.k", 0), 1024);
+        assert_eq!(cfg.f64("accel.dense.deadline_ms", 0.0), 2.5);
+        let fams = cfg.get("sketch.families").unwrap().as_arr().unwrap();
+        assert_eq!(fams[0].as_str(), Some("ordered"));
+        let rates = cfg.get("sketch.rates").unwrap().as_arr().unwrap();
+        assert_eq!(rates[1].as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.usize("server.port", 7878), 7878);
+        assert_eq!(cfg.str("name", "x"), "x");
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut cfg = Config::parse(SAMPLE).unwrap();
+        cfg.set_override("server.port=9000").unwrap();
+        cfg.set_override("extra.flag=true").unwrap();
+        assert_eq!(cfg.usize("server.port", 0), 9000);
+        assert!(cfg.bool("extra.flag", false));
+        assert!(cfg.set_override("nonsense").is_err());
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Config::parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Config::parse("[oops\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let cfg = Config::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(cfg.str("tag", ""), "a#b");
+    }
+}

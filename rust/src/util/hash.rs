@@ -1,0 +1,75 @@
+//! String / byte hashing used to map external object identifiers (packet
+//! ids, document tokens, …) into the `u64` element-id space the sketches
+//! index by, plus an FNV-1a fallback for short keys.
+
+use super::rng::fmix64;
+
+/// FNV-1a 64-bit — stable, allocation-free, good enough for short tokens.
+#[inline]
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// wyhash-style 64-bit mix of two words (used for composite keys).
+#[inline]
+pub fn mix2(a: u64, b: u64) -> u64 {
+    fmix64(a.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ b.wrapping_add(0x2545_F491_4F6C_DD1D))
+}
+
+/// Hash a string token to an element id.
+#[inline]
+pub fn token_id(s: &str) -> u64 {
+    fmix64(fnv1a64(s.as_bytes()))
+}
+
+/// Hash `bytes` with an explicit seed (for LSH band hashing).
+#[inline]
+pub fn seeded(bytes: &[u8], seed: u64) -> u64 {
+    fmix64(fnv1a64(bytes) ^ seed.wrapping_mul(0xA076_1D64_78BD_642F))
+}
+
+/// Hash a slice of u64 values with a seed (LSH band signature → bucket key).
+pub fn hash_u64s(xs: &[u64], seed: u64) -> u64 {
+    let mut h = seed ^ 0x9E37_79B9_7F4A_7C15;
+    for &x in xs {
+        h = mix2(h, x);
+    }
+    fmix64(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_values() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn token_ids_distinct_and_stable() {
+        let a = token_id("alpha");
+        let b = token_id("beta");
+        assert_ne!(a, b);
+        assert_eq!(a, token_id("alpha"));
+    }
+
+    #[test]
+    fn seeded_varies_with_seed() {
+        assert_ne!(seeded(b"x", 1), seeded(b"x", 2));
+    }
+
+    #[test]
+    fn hash_u64s_order_sensitive() {
+        assert_ne!(hash_u64s(&[1, 2, 3], 0), hash_u64s(&[3, 2, 1], 0));
+        assert_eq!(hash_u64s(&[1, 2, 3], 5), hash_u64s(&[1, 2, 3], 5));
+    }
+}

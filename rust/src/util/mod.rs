@@ -1,0 +1,16 @@
+//! Infrastructure substrates built in-crate (the offline environment carries
+//! no clap/serde/criterion/tokio, so the pieces a framework normally pulls
+//! from the ecosystem are implemented here): deterministic RNGs shared with
+//! the Pallas kernels, hashing, JSON, a TOML-subset config loader, CLI
+//! argument parsing, statistics, logging, a micro-benchmark harness and a
+//! small property-testing helper.
+
+pub mod rng;
+pub mod hash;
+pub mod json;
+pub mod config;
+pub mod argparse;
+pub mod stats;
+pub mod logger;
+pub mod bench;
+pub mod proptest;

@@ -1,0 +1,62 @@
+//! A small property-testing helper (the `proptest` crate is not available
+//! in the offline crate set). Deterministic by default; set
+//! `FASTGM_PROPTEST_SEED` / `FASTGM_PROPTEST_CASES` to vary.
+
+use super::rng::SplitMix64;
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics with the seed and
+/// a debug dump of the failing case so it can be replayed.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    gen: impl Fn(&mut SplitMix64) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let cases = env_u64("FASTGM_PROPTEST_CASES", cases as u64) as usize;
+    let seed = env_u64("FASTGM_PROPTEST_SEED", 0xFA57_6D5E);
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        assert!(
+            prop(&input),
+            "property failed (case {case}, seed {seed:#x}); input = {input:#?}"
+        );
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so failures
+/// can explain themselves.
+pub fn forall_explain<T: std::fmt::Debug>(
+    cases: usize,
+    gen: impl Fn(&mut SplitMix64) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cases = env_u64("FASTGM_PROPTEST_CASES", cases as u64) as usize;
+    let seed = env_u64("FASTGM_PROPTEST_SEED", 0xFA57_6D5E);
+    let mut rng = SplitMix64::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}\ninput = {input:#?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, |r| r.next_f64(), |u| *u > 0.0 && *u < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(50, |r| r.next_range(0, 10), |x| *x < 10);
+    }
+}

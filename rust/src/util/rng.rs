@@ -1,0 +1,315 @@
+//! Deterministic random number generation.
+//!
+//! Two RNG *families* back the sketches (DESIGN.md §2):
+//!
+//! * the **`Ordered` family** — a [`SplitMix64`] stream per vector element,
+//!   seeded from `fmix64(element) ^ seed`, consumed by the ascending
+//!   exponential generator (`sketch::order_stats`). Used by FastGM,
+//!   Stream-FastGM and FastGM-c.
+//! * the **`Direct` family** — a stateless counter RNG
+//!   [`direct_bits`]`(seed, i, j)` over 32-bit murmur finalizers, mirrored
+//!   bit-for-bit by the Pallas kernels (`python/compile/kernels/ref.py`).
+//!   Used by P-MinHash, Lemiesz's sketch and the dense AOT accelerator.
+//!
+//! Golden-value tests at the bottom of this file and in
+//! `python/tests/test_rng.py` pin both implementations to the same
+//! constants so the two layers can never silently diverge.
+
+/// The murmur3 32-bit finalizer: a cheap, high-quality avalanche function.
+#[inline(always)]
+pub fn fmix32(mut h: u32) -> u32 {
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    h
+}
+
+/// The murmur3 / splitmix 64-bit finalizer.
+#[inline(always)]
+pub fn fmix64(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    h ^= h >> 33;
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Direct family: stateless counter RNG shared with the Pallas kernels.
+// ---------------------------------------------------------------------------
+
+/// Domain-separation constant folded into the seed (also in `ref.py`).
+pub const DIRECT_SALT: u32 = 0xA076_1D64;
+
+/// 32 uniform bits for cell `(i, j)` under `seed`.
+///
+/// Two chained finalizer rounds: the first mixes `(seed, i)`, the second
+/// mixes in `j`. Identical arithmetic (wrapping u32) on the Python side.
+#[inline(always)]
+pub fn direct_bits(seed: u32, i: u32, j: u32) -> u32 {
+    let h = fmix32(seed ^ DIRECT_SALT ^ i.wrapping_mul(0x9E37_79B1));
+    fmix32(h ^ j.wrapping_mul(0x85EB_CA77))
+}
+
+/// Uniform in the *open* interval (0, 1) with 23 usable bits.
+///
+/// `((bits >> 9) + 0.5) * 2^-23` — never 0 and never 1, so `-ln(u)` is a
+/// strictly positive, finite EXP(1) variable. f32 to match the kernel.
+#[inline(always)]
+pub fn direct_uniform(seed: u32, i: u32, j: u32) -> f32 {
+    ((direct_bits(seed, i, j) >> 9) as f32 + 0.5) * (1.0 / 8_388_608.0)
+}
+
+/// A standard exponential EXP(1) draw for cell `(i, j)`.
+#[inline(always)]
+pub fn direct_exp(seed: u32, i: u32, j: u32) -> f32 {
+    -direct_uniform(seed, i, j).ln()
+}
+
+// ---------------------------------------------------------------------------
+// Ordered family: SplitMix64 streams.
+// ---------------------------------------------------------------------------
+
+/// SplitMix64: tiny, fast, passes BigCrush when cascaded; one stream per
+/// vector element keyed by `element_stream`.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Stream for element `i` of a sketch keyed by `seed`. Consistency
+    /// across vectors (the Gumbel-Max requirement that *the same* a_{i,j}
+    /// back every vector) follows from keying only on `(seed, i)`.
+    pub fn for_element(seed: u64, i: u64) -> Self {
+        SplitMix64::new(fmix64(i.wrapping_add(0x9E37_79B9_7F4A_7C15)) ^ seed)
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline(always)]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform f64 in the open interval (0, 1) — 52 bits + ½ulp offset.
+    #[inline(always)]
+    pub fn next_f64(&mut self) -> f64 {
+        ((self.next_u64() >> 12) as f64 + 0.5) * (1.0 / 4_503_599_627_370_496.0)
+    }
+
+    /// Standard exponential EXP(1): `-ln(U)`, strictly positive and finite.
+    #[inline(always)]
+    pub fn next_exp(&mut self) -> f64 {
+        -self.next_f64().ln()
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive). Uses Lemire-style
+    /// widening-multiply rejection-free mapping (bias < 2^-32 for our
+    /// ranges, all ≤ 2^20).
+    #[inline(always)]
+    pub fn next_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo + 1) as u64;
+        lo + (((self.next_u32() as u64).wrapping_mul(span)) >> 32) as usize
+    }
+
+    /// Standard normal via Box–Muller (fresh pair each call; we do not cache
+    /// the second variate to stay reproducible under interleaving).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64();
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Gamma(shape α > 0, scale 1) via Marsaglia–Tsang, with the standard
+    /// α < 1 boosting transform.
+    pub fn next_gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // G(α) = G(α+1) · U^{1/α}
+            let g = self.next_gamma(alpha + 1.0);
+            return g * self.next_f64().powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.next_normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Beta(α, β) from two gammas.
+    pub fn next_beta(&mut self, alpha: f64, beta: f64) -> f64 {
+        let a = self.next_gamma(alpha);
+        let b = self.next_gamma(beta);
+        a / (a + b)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for z in (1..xs.len()).rev() {
+            let j = self.next_range(0, z);
+            xs.swap(z, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden values for the Direct family — the SAME constants are asserted
+    /// in `python/tests/test_rng.py`. If either side changes, both tests
+    /// fail and the families cannot silently diverge.
+    #[test]
+    fn direct_family_golden() {
+        assert_eq!(fmix32(0), 0);
+        assert_eq!(fmix32(1), 0x514E_28B7);
+        assert_eq!(fmix32(0xDEAD_BEEF), 0x0DE5_C6A9);
+        assert_eq!(direct_bits(0, 0, 0), 0x74B4_A163);
+        assert_eq!(direct_bits(42, 7, 1023), 0xDEFD_EE35);
+        assert_eq!(direct_bits(0xFFFF_FFFF, 123_456, 89), 0x4894_4F12);
+    }
+
+    #[test]
+    fn direct_uniform_is_open_unit_interval() {
+        for i in 0..1000u32 {
+            for j in 0..16u32 {
+                let u = direct_uniform(7, i, j);
+                assert!(u > 0.0 && u < 1.0, "u={u} at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn direct_exp_mean_close_to_one() {
+        let n = 200_000u32;
+        let mean = (0..n).map(|i| direct_exp(3, i, 0) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn splitmix_golden() {
+        // Reference sequence for seed 1234567 (matches the published
+        // SplitMix64 test vectors construction).
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(r.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(r.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn splitmix_uniform_moments() {
+        let mut r = SplitMix64::new(99);
+        let n = 100_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let u = r.next_f64();
+            assert!(u > 0.0 && u < 1.0);
+            sum += u;
+            sumsq += u * u;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 0.5).abs() < 0.005, "mean={mean}");
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var={var}");
+    }
+
+    #[test]
+    fn exp_moments() {
+        let mut r = SplitMix64::new(7);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_exp()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gamma_beta_moments() {
+        let mut r = SplitMix64::new(13);
+        let n = 100_000;
+        // Gamma(5): mean 5, var 5.
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gamma(5.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 5.0).abs() < 0.1, "gamma mean={mean}");
+        // Beta(5,5): mean .5, var 1/44.
+        let bs: Vec<f64> = (0..n).map(|_| r.next_beta(5.0, 5.0)).collect();
+        let bmean = bs.iter().sum::<f64>() / n as f64;
+        let bvar = bs.iter().map(|x| (x - bmean) * (x - bmean)).sum::<f64>() / n as f64;
+        assert!((bmean - 0.5).abs() < 0.01, "beta mean={bmean}");
+        assert!((bvar - 1.0 / 44.0).abs() < 0.005, "beta var={bvar}");
+        // Gamma(0.5) small-shape path: mean 0.5.
+        let gs: Vec<f64> = (0..n).map(|_| r.next_gamma(0.5)).collect();
+        let gmean = gs.iter().sum::<f64>() / n as f64;
+        assert!((gmean - 0.5).abs() < 0.05, "gamma(.5) mean={gmean}");
+    }
+
+    #[test]
+    fn next_range_covers_inclusive_bounds() {
+        let mut r = SplitMix64::new(5);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            let v = r.next_range(2, 9);
+            assert!((2..=9).contains(&v));
+            seen[v - 2] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(21);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn element_streams_are_decorrelated() {
+        // Consecutive element ids must yield unrelated streams.
+        let a = SplitMix64::for_element(0, 1).next_u64();
+        let b = SplitMix64::for_element(0, 2).next_u64();
+        assert_ne!(a, b);
+        assert!(((a ^ b).count_ones() as i32 - 32).abs() < 20);
+    }
+}

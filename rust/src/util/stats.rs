@@ -1,0 +1,281 @@
+//! Statistics helpers shared by the estimators, the experiment harness and
+//! the benchmark runner: online moments (Welford), percentiles, RMSE, and a
+//! fixed-width table printer for paper-style result tables.
+
+/// Online mean/variance accumulator (Welford). Numerically stable for the
+//  long benchmark series the experiment harness feeds it.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * (self.n as f64) * (other.n as f64) / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Root-mean-square error between estimates and a (scalar) ground truth.
+pub fn rmse_scalar(estimates: &[f64], truth: f64) -> f64 {
+    if estimates.is_empty() {
+        return 0.0;
+    }
+    (estimates.iter().map(|e| (e - truth) * (e - truth)).sum::<f64>() / estimates.len() as f64)
+        .sqrt()
+}
+
+/// RMSE between paired estimates and truths.
+pub fn rmse_paired(estimates: &[f64], truths: &[f64]) -> f64 {
+    assert_eq!(estimates.len(), truths.len());
+    if estimates.is_empty() {
+        return 0.0;
+    }
+    (estimates
+        .iter()
+        .zip(truths)
+        .map(|(e, t)| (e - t) * (e - t))
+        .sum::<f64>()
+        / estimates.len() as f64)
+        .sqrt()
+}
+
+/// Percentile with linear interpolation; `q` in [0, 1]. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 0.5)
+}
+
+/// Fixed-width ASCII table used by `fastgm exp ...` to print paper-style
+/// rows (also embedded in EXPERIMENTS.md).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {c:>w$} |", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+}
+
+/// Human formatting for seconds (benchmark output).
+pub fn fmt_duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Format a count like 12345678 → "12.3M".
+pub fn fmt_count(x: f64) -> String {
+    let a = x.abs();
+    if a >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if a >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if a >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn online_stats_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut s = OnlineStats::new();
+        for &x in &xs {
+            s.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!((s.mean() - mean).abs() < 1e-12);
+        assert!((s.var() - var).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10.0);
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn merge_equals_concat_property() {
+        forall(
+            100,
+            |r| {
+                let n1 = r.next_range(0, 50);
+                let n2 = r.next_range(0, 50);
+                let a: Vec<f64> = (0..n1).map(|_| r.next_normal() * 10.0).collect();
+                let b: Vec<f64> = (0..n2).map(|_| r.next_normal() * 10.0).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let mut s1 = OnlineStats::new();
+                a.iter().for_each(|&x| s1.push(x));
+                let mut s2 = OnlineStats::new();
+                b.iter().for_each(|&x| s2.push(x));
+                s1.merge(&s2);
+                let mut s3 = OnlineStats::new();
+                a.iter().chain(b.iter()).for_each(|&x| s3.push(x));
+                (s1.mean() - s3.mean()).abs() < 1e-9 && (s1.var() - s3.var()).abs() < 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_basics() {
+        assert_eq!(rmse_scalar(&[3.0, 3.0], 3.0), 0.0);
+        assert!((rmse_scalar(&[2.0, 4.0], 3.0) - 1.0).abs() < 1e-12);
+        assert!((rmse_paired(&[1.0, 2.0], &[0.0, 2.0]) - (0.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["k", "time"]);
+        t.row(vec!["64".into(), "1.2 ms".into()]);
+        t.row(vec!["4096".into(), "10.0 ms".into()]);
+        let s = t.render();
+        assert!(s.contains("|    k |"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_duration(2.5), "2.500 s");
+        assert_eq!(fmt_duration(0.0025), "2.500 ms");
+        assert_eq!(fmt_count(1_500_000.0), "1.50M");
+    }
+
+    #[test]
+    fn percentile_random_agrees_with_sort() {
+        let mut r = SplitMix64::new(3);
+        let xs: Vec<f64> = (0..101).map(|_| r.next_f64()).collect();
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(percentile(&xs, 0.5), sorted[50]);
+    }
+}

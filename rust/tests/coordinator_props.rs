@@ -1,0 +1,168 @@
+//! Property tests on coordinator invariants (routing, batching, protocol,
+//! registry state) using the in-crate proptest helper.
+
+use fastgm::coordinator::batcher::{BatcherConfig, DenseBatcher};
+use fastgm::coordinator::protocol::{decode_request, encode_line, Request};
+use fastgm::coordinator::router::{Path, Router, RouterConfig};
+use fastgm::coordinator::registry::Registry;
+use fastgm::sketch::{pminhash::PMinHash, Sketcher, SparseVector};
+use fastgm::util::proptest::{forall, forall_explain};
+use fastgm::util::rng::SplitMix64;
+use std::time::Duration;
+
+fn random_vector(r: &mut SplitMix64) -> SparseVector {
+    let n = r.next_range(0, 40);
+    SparseVector::new(
+        (0..n).map(|_| r.next_u64() >> r.next_range(0, 50)).collect(),
+        (0..n).map(|_| r.next_f64() * 3.0 - 0.5).collect(), // incl. ≤0 weights
+    )
+}
+
+/// Routing is total and consistent: every vector gets exactly one path;
+/// vectors that exceed the bucket span or density floor go to CPU; the
+/// accelerator is never chosen when disabled.
+#[test]
+fn routing_invariants() {
+    forall_explain(
+        300,
+        |r| {
+            let max_len = [0usize, 256, 1024, 4096][r.next_range(0, 3)];
+            let density = r.next_f64();
+            (max_len, density, random_vector(r))
+        },
+        |(max_len, density, v)| {
+            let router =
+                Router::new(RouterConfig { accel_max_len: *max_len, min_density: *density });
+            let path = router.route_sparse(v);
+            if *max_len == 0 && path != Path::CpuFastGm {
+                return Err("accelerator chosen while disabled".into());
+            }
+            if let Some(max_id) = v.positive().map(|(id, _)| id).max() {
+                let span = max_id as usize + 1;
+                if span > *max_len && path != Path::CpuFastGm {
+                    return Err(format!("span {span} exceeds bucket {max_len} but routed accel"));
+                }
+                if path == Path::Accelerator {
+                    let d = v.n_plus() as f64 / span as f64;
+                    if d < *density {
+                        return Err(format!("density {d} below floor {density}"));
+                    }
+                }
+            } else if path != Path::CpuFastGm {
+                return Err("empty vector must go to CPU".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Protocol: encode → decode is the identity over randomized requests.
+#[test]
+fn protocol_roundtrip_property() {
+    forall(
+        200,
+        |r| {
+            let ids: Vec<u64> = (0..r.next_range(0, 10)).map(|_| r.next_u64()).collect();
+            let weights: Vec<f64> =
+                ids.iter().map(|_| (r.next_f64() * 8.0).round() / 8.0).collect();
+            let v = SparseVector::new(ids, weights);
+            match r.next_range(0, 4) {
+                0 => Request::Sketch { name: format!("n{}", r.next_u32()), vector: v },
+                1 => Request::Push {
+                    stream: format!("s{}", r.next_range(0, 5)),
+                    items: (0..r.next_range(0, 6))
+                        .map(|_| (r.next_u64() >> 12, (r.next_f64() * 4.0).round() / 4.0))
+                        .collect(),
+                },
+                2 => Request::Merge {
+                    names: (0..r.next_range(1, 4)).map(|i| format!("m{i}")).collect(),
+                    out: "out".into(),
+                },
+                3 => Request::LshQuery { vector: v, limit: r.next_range(1, 100) },
+                _ => Request::Jaccard { a: "a".into(), b: "b".into() },
+            }
+        },
+        |req| {
+            let line = encode_line(&req.to_json());
+            decode_request(&line).map(|back| back == *req).unwrap_or(false)
+        },
+    );
+}
+
+/// Batcher: N submissions yield exactly N replies, each equal to the
+/// direct CPU P-MinHash sketch of its own row, regardless of batch/deadline
+/// interleaving.
+#[test]
+fn batcher_preserves_request_response_pairing() {
+    forall_explain(
+        15,
+        |r| {
+            let rows: Vec<Vec<f64>> = (0..r.next_range(1, 12))
+                .map(|_| {
+                    (0..r.next_range(1, 60))
+                        .map(|_| if r.next_f64() < 0.3 { 0.0 } else { r.next_f64() })
+                        .collect()
+                })
+                .collect();
+            let max_batch = r.next_range(1, 6);
+            let deadline_us = r.next_range(100, 3000) as u64;
+            (rows, max_batch, deadline_us)
+        },
+        |(rows, max_batch, deadline_us)| {
+            let b = DenseBatcher::new(
+                BatcherConfig {
+                    max_batch: *max_batch,
+                    deadline: Duration::from_micros(*deadline_us),
+                    k: 32,
+                    seed: 5,
+                },
+                None,
+            );
+            let rxs: Vec<_> = rows.iter().map(|row| b.submit(row.clone())).collect();
+            let cpu = PMinHash::new(32, 5);
+            for (row, rx) in rows.iter().zip(rxs) {
+                let got = rx
+                    .recv_timeout(Duration::from_secs(5))
+                    .map_err(|_| "batcher timed out".to_string())?
+                    .map_err(|e| e.to_string())?;
+                let want = cpu.sketch(&SparseVector::from_dense(row));
+                if got != want {
+                    return Err("reply does not match its own row".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Registry stream state: pushes from any interleaving of duplicate-bearing
+/// batches produce the same sketch as one combined pass (idempotent,
+/// order-insensitive state).
+#[test]
+fn registry_stream_state_is_order_insensitive() {
+    forall_explain(
+        40,
+        |r| {
+            let items: Vec<(u64, f64)> = (0..r.next_range(1, 30))
+                .map(|_| (r.next_range(0, 12) as u64, 0.0))
+                .map(|(id, _)| (id, 0.25 + (id as f64) * 0.125)) // weight fixed per id
+                .collect();
+            let mut shuffled = items.clone();
+            r.shuffle(&mut shuffled);
+            let cut = r.next_range(0, items.len() - 1);
+            (items, shuffled, cut)
+        },
+        |(items, shuffled, cut)| {
+            let a = Registry::new();
+            a.stream_push("s", 16, 3, items);
+            let b = Registry::new();
+            b.stream_push("s", 16, 3, &shuffled[..*cut]);
+            b.stream_push("s", 16, 3, &shuffled[*cut..]);
+            if a.stream_sketch("s") == b.stream_sketch("s") {
+                Ok(())
+            } else {
+                Err("stream state depends on push order".into())
+            }
+        },
+    );
+}
