@@ -1,9 +1,13 @@
 //! Focused probe for the §Perf iteration loop (small, fast, targeted).
+//! Reports the parallel shard-merge path next to single-threaded FastGM so
+//! the multi-core speedup (and the small-n regression region the router's
+//! `shard_min_nplus` threshold guards against) is visible per run.
 use fastgm::data::synthetic::{dense_vector, WeightDist};
 use fastgm::data::stream::generate;
 use fastgm::sketch::fastgm::FastGm;
 use fastgm::sketch::lemiesz::LemieszSketch;
 use fastgm::sketch::pminhash::PMinHash;
+use fastgm::sketch::sharded::ShardedSketcher;
 use fastgm::sketch::stream_fastgm::StreamFastGm;
 use fastgm::sketch::Sketcher;
 use fastgm::util::bench::{Bencher, Suite};
@@ -17,8 +21,26 @@ fn main() {
         let v = dense_vector(&mut rng, n, WeightDist::Uniform01);
         let fg = FastGm::new(k, 1);
         suite.record(b.run(&format!("fastgm/n{n}/k{k}"), || fg.sketch(&v)));
+        for shards in [2usize, 4] {
+            let sh = ShardedSketcher::new(k, 1, shards);
+            suite.record(b.run(&format!("sharded{shards}/n{n}/k{k}"), || sh.sketch(&v)));
+        }
         let pm = PMinHash::new(k, 1);
         suite.record(b.run(&format!("pminhash/n{n}/k{k}"), || pm.sketch(&v)));
+    }
+    // The shard team's home turf: a large sparse vector (n⁺ ≫ P·k·ln k).
+    {
+        let (n, k) = (200_000usize, 1024usize);
+        let v = dense_vector(&mut rng, n, WeightDist::Uniform01);
+        let fg = FastGm::new(k, 1);
+        suite.record(b.run(&format!("fastgm/n{n}/k{k}"), || fg.sketch(&v)));
+        for shards in [2usize, 4, 8] {
+            let sh = ShardedSketcher::new(k, 1, shards);
+            suite.record(b.run(&format!("sharded{shards}/n{n}/k{k}"), || sh.sketch(&v)));
+        }
+        if let Some(sp) = suite.speedup(&format!("fastgm/n{n}/k{k}"), &format!("sharded4/n{n}/k{k}")) {
+            println!("  -> sharded(4) speedup over fastgm at n={n}, k={k}: {sp:.2}x");
+        }
     }
     let stream = generate(&mut rng, 1000, 1.0, WeightDist::Uniform01, 0);
     for k in [256usize, 1024] {

@@ -12,10 +12,8 @@
 //!   4. report throughput, latency percentiles, estimate accuracy, and the
 //!      server's own metrics.
 //!
-//! Results are recorded in EXPERIMENTS.md §E2E.
-//!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_e2e
+//! cargo run --release --example serve_e2e
 //! ```
 
 use fastgm::coordinator::client::Client;

@@ -1,5 +1,5 @@
-//! Profiling harness for the Stream-FastGM hot path (used by the §Perf
-//! iteration log in EXPERIMENTS.md):
+//! Profiling harness for the Stream-FastGM hot path (used for perf
+//! iteration on the release-count hot loop):
 //!
 //! ```bash
 //! cargo build --release --example stream_profile
@@ -9,8 +9,7 @@
 //!
 //! Prints the release count per iteration — the quantity the paper's
 //! complexity analysis bounds (Algorithm 2 pays Θ(k ln k · ln n) releases
-//! on randomly-ordered streams because y* shrinks gradually; see
-//! EXPERIMENTS.md §Perf).
+//! on randomly-ordered streams because y* shrinks gradually).
 
 use fastgm::data::stream::generate;
 use fastgm::data::synthetic::WeightDist;

@@ -1,0 +1,206 @@
+"""Pure-Python reference of the Rust RNG substrate, for cross-language parity.
+
+Mirrors, operation for operation:
+
+* ``rust/src/util/rng.rs`` — ``fmix32``/``fmix64``, the Direct-family
+  counter RNG ``direct_bits``, and the ``SplitMix64`` stream (``next_u64``,
+  ``next_u32``, ``next_f64``, ``next_range``, ``for_element``);
+* ``rust/src/sketch/order_stats.rs`` — the ascending-exponential
+  ``ElementRace`` with its streamed Fisher-Yates register assignment (a
+  dense permutation here; the Rust side's lazy permutation is
+  observationally identical, which is exactly what the parity test checks).
+
+Running this module regenerates ``rust/tests/fixtures/rng_parity.json``,
+the fixture asserted by BOTH ``python/tests/test_rng_parity.py`` and
+``rust/tests/rng_parity.rs``. Integer outputs must match exactly; arrival
+times involve ``log`` and are compared to 1e-12 relative (libm rounding is
+the only permitted divergence).
+
+All u64 values are serialized as decimal strings (JSON numbers are f64 and
+would silently truncate above 2^53 — the same rule the wire protocol uses);
+f64 values are serialized with ``repr`` (17 significant digits, lossless).
+"""
+
+import json
+import math
+import os
+
+MASK32 = (1 << 32) - 1
+MASK64 = (1 << 64) - 1
+GOLDEN64 = 0x9E3779B97F4A7C15
+DIRECT_SALT = 0xA0761D64
+
+
+def fmix32(h):
+    h &= MASK32
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & MASK32
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & MASK32
+    h ^= h >> 16
+    return h
+
+
+def fmix64(h):
+    h &= MASK64
+    h ^= h >> 33
+    h = (h * 0xFF51AFD7ED558CCD) & MASK64
+    h ^= h >> 33
+    h = (h * 0xC4CEB9FE1A85EC53) & MASK64
+    h ^= h >> 33
+    return h
+
+
+def direct_bits(seed, i, j):
+    h = fmix32(seed ^ DIRECT_SALT ^ ((i * 0x9E3779B1) & MASK32))
+    return fmix32(h ^ ((j * 0x85EBCA77) & MASK32))
+
+
+class SplitMix64:
+    def __init__(self, seed):
+        self.state = seed & MASK64
+
+    @classmethod
+    def for_element(cls, seed, element):
+        return cls(fmix64((element + GOLDEN64) & MASK64) ^ seed)
+
+    def next_u64(self):
+        self.state = (self.state + GOLDEN64) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def next_u32(self):
+        return self.next_u64() >> 32
+
+    def next_f64(self):
+        # ((bits >> 12) + 0.5) * 2^-52: pure dyadic arithmetic, so this is
+        # bit-exact across languages (no libm involved).
+        return ((self.next_u64() >> 12) + 0.5) * (1.0 / 4503599627370496.0)
+
+    def next_range(self, lo, hi):
+        span = hi - lo + 1
+        return lo + ((self.next_u32() * span) >> 32)
+
+
+class ElementRace:
+    """Queue Q_i: k EXP(w) arrivals in ascending order + register marks."""
+
+    def __init__(self, seed, element, w, k):
+        self.rng = SplitMix64.for_element(seed, element)
+        self.inv_w = 1.0 / w
+        self.k = k
+        self.z = 0
+        self.b = 0.0
+        self.perm = list(range(k))
+
+    def next(self):
+        if self.z >= self.k:
+            return None
+        remaining = float(self.k - self.z)
+        self.z += 1
+        u = self.rng.next_f64()
+        self.b += self.inv_w * (-math.log(u)) / remaining
+        z0 = self.z - 1
+        j = self.rng.next_range(z0, self.k - 1)
+        self.perm[z0], self.perm[j] = self.perm[j], self.perm[z0]
+        return (self.b, self.perm[z0])
+
+    def drain(self):
+        out = []
+        while True:
+            t = self.next()
+            if t is None:
+                return out
+            out.append(t)
+
+
+def self_check():
+    """The constants pinned in rust/src/util/rng.rs and test_rng.py —
+    if these hold, the Python port is faithful to the Rust arithmetic."""
+    assert fmix32(0) == 0
+    assert fmix32(1) == 0x514E28B7
+    assert fmix32(0xDEADBEEF) == 0x0DE5C6A9
+    assert direct_bits(0, 0, 0) == 0x74B4A163
+    assert direct_bits(42, 7, 1023) == 0xDEFDEE35
+    assert direct_bits(0xFFFFFFFF, 123456, 89) == 0x48944F12
+    r = SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+    assert r.next_u64() == 0x6E789E6AA1B965F4
+    assert r.next_u64() == 0x06C45D188009454F
+
+
+def generate_fixture():
+    self_check()
+    fix = {}
+
+    fix["fmix32"] = [[str(x), str(fmix32(x))] for x in [0, 1, 2, 0xDEADBEEF, 0xFFFFFFFF, 123456789]]
+    fix["fmix64"] = [
+        [str(x), str(fmix64(x))]
+        for x in [0, 1, GOLDEN64, 0xDEADBEEFCAFEBABE, MASK64, 9007199254740993]
+    ]
+    fix["direct_bits"] = [
+        [str(s), str(i), str(j), str(direct_bits(s, i, j))]
+        for (s, i, j) in [
+            (0, 0, 0),
+            (42, 7, 1023),
+            (0xFFFFFFFF, 123456, 89),
+            (1, 0, 1),
+            (7, 4294967295, 4294967295),
+            (305419896, 99, 3),
+        ]
+    ]
+
+    fix["splitmix64"] = []
+    for seed in [0, 1, 42, 0xFA576D5E, MASK64]:
+        u = SplitMix64(seed)
+        f = SplitMix64(seed)
+        fix["splitmix64"].append(
+            {
+                "seed": str(seed),
+                "u64": [str(u.next_u64()) for _ in range(8)],
+                "f64": [repr(f.next_f64()) for _ in range(4)],
+            }
+        )
+
+    fix["for_element"] = [
+        {"seed": str(seed), "element": str(elem), "first_u64": str(SplitMix64.for_element(seed, elem).next_u64())}
+        for (seed, elem) in [(0, 1), (0, 2), (42, 0), (7, MASK64), (MASK64, 12345)]
+    ]
+
+    fix["element_race"] = []
+    for (seed, elem, w, k) in [
+        (7, 42, 0.5, 16),
+        (1, 9007199254740993, 2.0, 8),
+        (0xFA576D5E, 3, 1.0, 32),
+        (9, 5, 0.25, 1),
+    ]:
+        race = ElementRace(seed, elem, w, k)
+        pairs = race.drain()
+        fix["element_race"].append(
+            {
+                "seed": str(seed),
+                "element": str(elem),
+                "w": repr(w),
+                "k": k,
+                "registers": [c for (_, c) in pairs],
+                "arrivals": [repr(b) for (b, _) in pairs],
+            }
+        )
+    return fix
+
+
+def fixture_path():
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.normpath(
+        os.path.join(here, "..", "..", "rust", "tests", "fixtures", "rng_parity.json")
+    )
+
+
+if __name__ == "__main__":
+    path = fixture_path()
+    with open(path, "w") as f:
+        json.dump(generate_fixture(), f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")

@@ -1,0 +1,103 @@
+"""Cross-language lock on the Ordered-family RNG substrate.
+
+``rust/tests/fixtures/rng_parity.json`` is asserted from both sides:
+``rust/tests/rng_parity.rs`` checks that ``util::rng`` + ``order_stats``
+reproduce it, and this test checks that the pure-Python reference
+(``rng_reference.py``, which generated it) still does. If either language's
+implementation changes, its suite fails against the frozen fixture — the
+same scheme ``test_rng.py`` uses for the Direct-family constants.
+
+Pure stdlib: no jax required.
+"""
+
+import json
+import math
+
+import pytest
+
+from rng_reference import (
+    ElementRace,
+    SplitMix64,
+    direct_bits,
+    fixture_path,
+    fmix32,
+    fmix64,
+    generate_fixture,
+    self_check,
+)
+
+
+@pytest.fixture(scope="module")
+def fixture():
+    with open(fixture_path()) as f:
+        return json.load(f)
+
+
+def test_reference_self_check():
+    # The constants shared with rust/src/util/rng.rs and test_rng.py.
+    self_check()
+
+
+def test_fmix_tables(fixture):
+    for x, want in fixture["fmix32"]:
+        assert fmix32(int(x)) == int(want)
+    for x, want in fixture["fmix64"]:
+        assert fmix64(int(x)) == int(want)
+
+
+def test_direct_bits_table(fixture):
+    for seed, i, j, want in fixture["direct_bits"]:
+        assert direct_bits(int(seed), int(i), int(j)) == int(want)
+
+
+def test_splitmix_streams(fixture):
+    for case in fixture["splitmix64"]:
+        seed = int(case["seed"])
+        r = SplitMix64(seed)
+        for want in case["u64"]:
+            assert r.next_u64() == int(want)
+        r = SplitMix64(seed)
+        for want in case["f64"]:
+            # Dyadic arithmetic: exact across languages.
+            assert r.next_f64() == float(want)
+
+
+def test_for_element_keying(fixture):
+    for case in fixture["for_element"]:
+        r = SplitMix64.for_element(int(case["seed"]), int(case["element"]))
+        assert r.next_u64() == int(case["first_u64"])
+
+
+def test_element_race_streams(fixture):
+    for case in fixture["element_race"]:
+        race = ElementRace(
+            int(case["seed"]), int(case["element"]), float(case["w"]), case["k"]
+        )
+        pairs = race.drain()
+        assert [c for (_, c) in pairs] == case["registers"]
+        for (b, _), want in zip(pairs, case["arrivals"]):
+            # ln() is libm-dependent; allow rounding noise only.
+            assert math.isclose(b, float(want), rel_tol=1e-12)
+        # Sanity: arrivals ascend and registers form a permutation.
+        times = [b for (b, _) in pairs]
+        assert times == sorted(times)
+        assert sorted(c for (_, c) in pairs) == list(range(case["k"]))
+
+
+def test_fixture_is_current():
+    """Regenerating must reproduce the checked-in fixture (up to float
+    formatting, which repr makes canonical)."""
+    with open(fixture_path()) as f:
+        on_disk = json.load(f)
+    fresh = generate_fixture()
+    assert set(fresh) == set(on_disk)
+    for key in ("fmix32", "fmix64", "direct_bits", "splitmix64", "for_element"):
+        assert fresh[key] == on_disk[key], f"section {key} drifted"
+    for a, b in zip(fresh["element_race"], on_disk["element_race"]):
+        assert a["registers"] == b["registers"]
+        for x, y in zip(a["arrivals"], b["arrivals"]):
+            assert math.isclose(float(x), float(y), rel_tol=1e-12)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -3,15 +3,57 @@
 //! Dense sketch requests queue here; a dedicated flush thread drains them
 //! when either `max_batch` rows are pending or `deadline` has elapsed since
 //! the oldest row arrived — the classic serving trade-off between device
-//! utilization and tail latency. If no accelerator is configured the
-//! batcher degrades to an immediate CPU P-MinHash path with identical
-//! (Direct-family) semantics, so callers never see the difference.
+//! utilization and tail latency. If no accelerator is configured (or the
+//! crate is built without the `accel` feature) the batcher degrades to an
+//! immediate CPU P-MinHash path with identical (Direct-family) semantics,
+//! so callers never see the difference.
 
+#[cfg(feature = "accel")]
 use crate::runtime::accel::DenseSketchAccel;
 use crate::sketch::{pminhash::PMinHash, GumbelMaxSketch, Sketcher, SparseVector};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+#[cfg(feature = "accel")]
+type Accel = DenseSketchAccel;
+/// Uninhabited stand-in: without the `accel` feature there is no
+/// accelerator value, only the `None` arm of `Option<Accel>`.
+#[cfg(not(feature = "accel"))]
+type Accel = std::convert::Infallible;
+
+/// Construct the accelerator inside the flush thread (the PJRT wrapper
+/// types are `!Send`). Falls back to `None` — and therefore the CPU path —
+/// on load failure or when built without the `accel` feature.
+#[cfg(feature = "accel")]
+fn load_accel(artifacts_dir: Option<String>) -> Option<Accel> {
+    artifacts_dir.and_then(|dir| {
+        match crate::runtime::Runtime::load(&dir).and_then(DenseSketchAccel::new) {
+            Ok(a) => {
+                log::info!(
+                    "accelerator online: buckets={:?}",
+                    a.buckets().iter().map(|b| (b.b, b.n, b.k)).collect::<Vec<_>>()
+                );
+                Some(a)
+            }
+            Err(e) => {
+                log::warn!("accelerator disabled: {e}");
+                None
+            }
+        }
+    })
+}
+
+#[cfg(not(feature = "accel"))]
+fn load_accel(artifacts_dir: Option<String>) -> Option<Accel> {
+    if let Some(dir) = artifacts_dir {
+        log::warn!(
+            "artifacts dir '{dir}' configured but this build has no `accel` \
+             feature; dense sketches use the CPU fallback"
+        );
+    }
+    None
+}
 
 struct Pending {
     weights: Vec<f64>,
@@ -64,24 +106,7 @@ impl DenseBatcher {
         let f2 = flushes.clone();
         let handle = std::thread::Builder::new()
             .name("fastgm-batcher".into())
-            .spawn(move || {
-                let accel = artifacts_dir.and_then(|dir| {
-                    match crate::runtime::Runtime::load(&dir).and_then(DenseSketchAccel::new) {
-                        Ok(a) => {
-                            log::info!(
-                                "accelerator online: buckets={:?}",
-                                a.buckets().iter().map(|b| (b.b, b.n, b.k)).collect::<Vec<_>>()
-                            );
-                            Some(a)
-                        }
-                        Err(e) => {
-                            log::warn!("accelerator disabled: {e}");
-                            None
-                        }
-                    }
-                });
-                flush_loop(cfg, q2, accel, f2)
-            })
+            .spawn(move || flush_loop(cfg, q2, load_accel(artifacts_dir), f2))
             .expect("spawn batcher");
         DenseBatcher { cfg, queue, handle: Some(handle), flushes }
     }
@@ -115,7 +140,7 @@ impl DenseBatcher {
 fn flush_loop(
     cfg: BatcherConfig,
     queue: Arc<(Mutex<Queue>, Condvar)>,
-    accel: Option<DenseSketchAccel>,
+    accel: Option<Accel>,
     flushes: Arc<std::sync::atomic::AtomicU64>,
 ) {
     let (lock, cv) = &*queue;
@@ -151,9 +176,10 @@ fn flush_loop(
     }
 }
 
-fn run_batch(cfg: &BatcherConfig, accel: &Option<DenseSketchAccel>, batch: Vec<Pending>) {
+fn run_batch(cfg: &BatcherConfig, accel: &Option<Accel>, batch: Vec<Pending>) {
     // Try the accelerator for the whole batch; on any failure (no bucket,
     // runtime error) fall back to the CPU Direct-family path per row.
+    #[cfg(feature = "accel")]
     if let Some(acc) = accel {
         let rows: Vec<Vec<f64>> = batch.iter().map(|p| p.weights.clone()).collect();
         match acc.sketch_batch(cfg.seed, &rows, cfg.k) {
@@ -168,6 +194,8 @@ fn run_batch(cfg: &BatcherConfig, accel: &Option<DenseSketchAccel>, batch: Vec<P
             }
         }
     }
+    #[cfg(not(feature = "accel"))]
+    let _ = accel;
     let cpu = PMinHash::new(cfg.k, cfg.seed);
     for p in batch {
         let sk = cpu.sketch(&SparseVector::from_dense(&p.weights));

@@ -11,8 +11,11 @@ use crate::sketch::SparseVector;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Path {
-    /// CPU FastGM (Ordered family): the paper's algorithm.
+    /// CPU FastGM (Ordered family): the paper's algorithm, one thread.
     CpuFastGm,
+    /// CPU FastGM fanned out over weight-balanced shards and merged
+    /// (Ordered family, bit-identical to [`Path::CpuFastGm`], §2.3).
+    ShardedCpu,
     /// Dense accelerator via the batcher (Direct family).
     Accelerator,
 }
@@ -23,11 +26,21 @@ pub struct RouterConfig {
     pub accel_max_len: usize,
     /// Minimum fill fraction for a sparse vector to be worth densifying.
     pub min_density: f64,
+    /// Shard team size for the parallel CPU path (1 = never shard).
+    pub shards: usize,
+    /// Smallest n⁺ routed to the shard team: each shard re-pays FastGM's
+    /// `O(k ln k)` FastSearch term, so small vectors stay single-threaded.
+    pub shard_min_nplus: usize,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { accel_max_len: 0, min_density: 0.25 }
+        RouterConfig {
+            accel_max_len: 0,
+            min_density: 0.25,
+            shards: 1,
+            shard_min_nplus: 4096,
+        }
     }
 }
 
@@ -38,6 +51,16 @@ pub struct Router {
 impl Router {
     pub fn new(cfg: RouterConfig) -> Router {
         Router { cfg }
+    }
+
+    /// Route an Ordered-family `sketch` request: the only choice is how
+    /// many threads run FastGM (the family discipline pins the algorithm).
+    pub fn route_sketch(&self, n_plus: usize) -> Path {
+        if self.cfg.shards > 1 && n_plus >= self.cfg.shard_min_nplus {
+            Path::ShardedCpu
+        } else {
+            Path::CpuFastGm
+        }
     }
 
     /// Route an explicitly dense request (weights indexed 0..len).
@@ -78,7 +101,11 @@ mod tests {
 
     #[test]
     fn dense_routes_by_bucket_limit() {
-        let r = Router::new(RouterConfig { accel_max_len: 1024, min_density: 0.25 });
+        let r = Router::new(RouterConfig {
+            accel_max_len: 1024,
+            min_density: 0.25,
+            ..RouterConfig::default()
+        });
         assert_eq!(r.route_dense(512), Path::Accelerator);
         assert_eq!(r.route_dense(1024), Path::Accelerator);
         assert_eq!(r.route_dense(4096), Path::CpuFastGm);
@@ -94,8 +121,32 @@ mod tests {
     }
 
     #[test]
+    fn sketch_routes_by_shard_threshold() {
+        let r = Router::new(RouterConfig {
+            shards: 4,
+            shard_min_nplus: 1000,
+            ..RouterConfig::default()
+        });
+        assert_eq!(r.route_sketch(10), Path::CpuFastGm);
+        assert_eq!(r.route_sketch(999), Path::CpuFastGm);
+        assert_eq!(r.route_sketch(1000), Path::ShardedCpu);
+        assert_eq!(r.route_sketch(1_000_000), Path::ShardedCpu);
+        // shards == 1 disables the parallel path regardless of size.
+        let single = Router::new(RouterConfig {
+            shards: 1,
+            shard_min_nplus: 0,
+            ..RouterConfig::default()
+        });
+        assert_eq!(single.route_sketch(1_000_000), Path::CpuFastGm);
+    }
+
+    #[test]
     fn sparse_density_heuristic() {
-        let r = Router::new(Router::new(RouterConfig { accel_max_len: 1024, min_density: 0.25 }).cfg);
+        let r = Router::new(RouterConfig {
+            accel_max_len: 1024,
+            min_density: 0.25,
+            ..RouterConfig::default()
+        });
         // Dense-ish small-span vector → accelerator.
         let dense = SparseVector::new((0..512u64).collect(), vec![1.0; 512]);
         assert_eq!(r.route_sparse(&dense), Path::Accelerator);

@@ -3,7 +3,7 @@
 //! request handler. This is what the TCP server, the CLI and the examples
 //! all drive.
 //!
-//! Family discipline (DESIGN.md §2): the `sketch` op always produces
+//! Family discipline (README.md §RNG-families): the `sketch` op always produces
 //! **Ordered**-family FastGM sketches; `sketch_dense` always produces
 //! **Direct**-family sketches (accelerator or CPU P-MinHash fallback —
 //! identical semantics). Estimators reject cross-family pairs, so a
@@ -15,13 +15,14 @@ use super::merger::merge_tree;
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
 use super::registry::Registry;
-use super::router::{Router, RouterConfig};
+use super::router::{Path, Router, RouterConfig};
 use super::worker::WorkerPool;
 use crate::estimate::cardinality::{estimate_cardinality, estimate_weighted_jaccard};
 use crate::estimate::jaccard::estimate_jp;
 use crate::lsh::{LshIndex, LshParams};
 use crate::sketch::fastgm::FastGm;
-use crate::sketch::Sketcher;
+use crate::sketch::sharded::ShardedSketcher;
+use crate::sketch::{GumbelMaxSketch, Sketcher, SparseVector};
 use crate::util::config::Config;
 use crate::util::hash::token_id;
 use std::collections::HashMap;
@@ -41,6 +42,12 @@ pub struct CoordinatorConfig {
     pub batch_max: usize,
     pub batch_deadline: Duration,
     pub lsh_threshold: f64,
+    /// Shard team size for large sparse `sketch` requests (§2.3 parallel
+    /// shard-merge; 1 disables). The sharded result is bit-identical to
+    /// single-threaded FastGM.
+    pub shards: usize,
+    /// Smallest n⁺ routed to the shard team.
+    pub shard_min_nplus: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -55,6 +62,8 @@ impl Default for CoordinatorConfig {
             batch_max: 8,
             batch_deadline: Duration::from_millis(2),
             lsh_threshold: 0.5,
+            shards: 4,
+            shard_min_nplus: 4096,
         }
     }
 }
@@ -82,6 +91,8 @@ impl CoordinatorConfig {
                 (cfg.f64("accel.deadline_ms", 2.0) * 1000.0) as u64,
             ),
             lsh_threshold: cfg.f64("lsh.threshold", d.lsh_threshold),
+            shards: cfg.usize("sketch.shards", d.shards),
+            shard_min_nplus: cfg.usize("sketch.shard_min_nplus", d.shard_min_nplus),
         }
     }
 }
@@ -91,6 +102,7 @@ struct Inner {
     registry: Registry,
     metrics: Metrics,
     fastgm: FastGm,
+    sharded: ShardedSketcher,
     router: Router,
     batcher: DenseBatcher,
     lsh: RwLock<LshIndex>,
@@ -109,6 +121,15 @@ impl Coordinator {
         // (the xla wrapper types are !Send); the batcher thread owns the
         // actual runtime.
         let (accel_dir, accel_max_len) = match &cfg.artifacts_dir {
+            // Without the `accel` feature a manifest may parse but can never
+            // be loaded: report the accelerator as off (accel_enabled(),
+            // metrics, router max_len) instead of advertising a path that
+            // cannot exist. Dense requests still flow through the batcher's
+            // CPU fallback.
+            Some(dir) if !cfg!(feature = "accel") => {
+                log::warn!("accel.artifacts_dir '{dir}' ignored: built without the `accel` feature");
+                (None, 0)
+            }
             Some(dir) => match crate::runtime::read_manifest(dir) {
                 Ok(specs) => {
                     let max_len = specs
@@ -141,7 +162,13 @@ impl Coordinator {
         );
         let inner = Arc::new(Inner {
             fastgm: FastGm::new(cfg.k, cfg.seed),
-            router: Router::new(RouterConfig { accel_max_len, min_density: 0.25 }),
+            sharded: ShardedSketcher::new(cfg.k, cfg.seed, cfg.shards.max(1)),
+            router: Router::new(RouterConfig {
+                accel_max_len,
+                min_density: 0.25,
+                shards: cfg.shards.max(1),
+                shard_min_nplus: cfg.shard_min_nplus,
+            }),
             registry: Registry::new(),
             metrics: Metrics::new(),
             batcher,
@@ -197,6 +224,22 @@ impl Coordinator {
 }
 
 impl Inner {
+    /// Ordered-family sparse sketch, routed single-threaded or through the
+    /// §2.3 shard team — identical output either way (the router only
+    /// decides parallelism, never the algorithm family).
+    fn sketch_sparse(&self, v: &SparseVector) -> GumbelMaxSketch {
+        match self.router.route_sketch(v.n_plus()) {
+            Path::ShardedCpu => {
+                self.metrics.incr("path.sketch.sharded");
+                self.sharded.sketch(v)
+            }
+            _ => {
+                self.metrics.incr("path.sketch.single");
+                self.fastgm.sketch(v)
+            }
+        }
+    }
+
     fn handle(&self, req: Request) -> Response {
         match self.handle_inner(req) {
             Ok(resp) => resp,
@@ -215,6 +258,7 @@ impl Inner {
                 snap.set("sketches", crate::util::json::Value::num(self.registry.sketch_count() as f64));
                 snap.set("streams", crate::util::json::Value::num(self.registry.stream_count() as f64));
                 snap.set("accel", crate::util::json::Value::Bool(self.accel_on));
+                snap.set("shards", crate::util::json::Value::num(self.cfg.shards as f64));
                 snap.set(
                     "batch_flushes",
                     crate::util::json::Value::num(
@@ -224,7 +268,7 @@ impl Inner {
                 Response::MetricsDump { snapshot: snap }
             }
             Request::Sketch { name, vector } => {
-                let sk = self.fastgm.sketch(&vector);
+                let sk = self.sketch_sparse(&vector);
                 self.registry.put_sketch(&name, sk.clone());
                 Response::Sketch { name, sketch: sk }
             }
@@ -304,7 +348,7 @@ impl Inner {
                 Response::Ack { info: format!("indexed '{name}'") }
             }
             Request::LshQuery { vector, limit } => {
-                let query = self.fastgm.sketch(&vector);
+                let query = self.sketch_sparse(&vector);
                 let hits = self.lsh.read().unwrap().query(&query, limit)?;
                 let names = self.lsh_names.read().unwrap();
                 Response::TopK {
@@ -326,7 +370,6 @@ impl Inner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sketch::SparseVector;
 
     fn coord() -> Coordinator {
         Coordinator::new(CoordinatorConfig {
@@ -417,6 +460,41 @@ mod tests {
         };
         assert_eq!(hits[0].0, "u");
         assert!((hits[0].1 - 1.0).abs() < 1e-9);
+        c.shutdown();
+    }
+
+    #[test]
+    fn large_sketches_route_through_shards_bit_identically() {
+        let c = Coordinator::new(CoordinatorConfig {
+            k: 64,
+            workers: 2,
+            shards: 4,
+            shard_min_nplus: 100, // force the sharded path for this vector
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let v = SparseVector::new(
+            (0..500u64).map(|i| i * 7 + 1).collect(),
+            (0..500).map(|i| 0.1 + (i % 13) as f64 * 0.5).collect(),
+        );
+        let Response::Sketch { sketch, .. } =
+            c.call(Request::Sketch { name: "big".into(), vector: v.clone() })
+        else {
+            panic!("expected sketch")
+        };
+        // Bit-identical to single-threaded FastGM at the same (k, seed).
+        let single = crate::sketch::fastgm::FastGm::new(64, 42).sketch(&v);
+        assert_eq!(sketch, single);
+        // The sharded path counter must have fired.
+        let Response::MetricsDump { snapshot } = c.call(Request::Metrics) else {
+            panic!("expected metrics")
+        };
+        let sharded = snapshot
+            .get("counters")
+            .and_then(|c| c.get("path.sketch.sharded"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0);
+        assert!(sharded >= 1.0, "sharded path not taken: {snapshot}");
         c.shutdown();
     }
 

@@ -4,7 +4,7 @@
 //! each analog reproduces the statistics FastGM's runtime actually depends
 //! on — vector count, feature-space size, the per-vector positive-entry
 //! (n⁺) profile, and a TF-IDF-like weight distribution — via Zipf feature
-//! popularity and log-normal n⁺ draws (DESIGN.md §3 documents the
+//! popularity and log-normal n⁺ draws (README.md §Datasets documents the
 //! substitution). Real svmlight files drop in through [`super::svmlight`]
 //! and the `--dataset path:<file>` CLI syntax.
 //!

@@ -1,4 +1,4 @@
-//! Ablations beyond the paper's figures (DESIGN.md §4, A1/A2):
+//! Ablations beyond the paper's figures (README.md §Experiments, A1/A2):
 //!
 //! * **A1 `ablation-delta`** — FastSearch budget step Δ. The paper claims
 //!   low sensitivity; we sweep Δ ∈ {k/4 … 8k} and report time + variables
@@ -87,33 +87,39 @@ pub fn run_accel(opts: &ExpOptions) -> anyhow::Result<()> {
         "direct".into(),
     ]);
 
-    // Accelerator (Direct), if artifacts are present. Runtime is !Send so
-    // build and use it inline on this thread.
-    let dir = "artifacts";
-    if std::path::Path::new(dir).join("manifest.json").exists() {
-        match crate::runtime::Runtime::load(dir)
-            .and_then(crate::runtime::accel::DenseSketchAccel::new)
-        {
-            Ok(accel) => {
-                // Warm-up execution (first PJRT call pays setup).
-                let _ = accel.sketch_batch(42, &rows[0..1.min(rows.len())], k);
-                let t0 = Instant::now();
-                let out = accel.sketch_batch(42, &rows, k)?;
-                let t_ac = t0.elapsed().as_secs_f64();
-                assert_eq!(out.len(), batch);
-                t.row(vec![
-                    "aot accel (pjrt cpu)".into(),
-                    batch.to_string(),
-                    fmt_duration(t_ac),
-                    fmt_duration(t_ac / batch as f64),
-                    "direct".into(),
-                ]);
+    // Accelerator (Direct), if artifacts are present and the crate was
+    // built with the `accel` feature. Runtime is !Send so build and use it
+    // inline on this thread.
+    #[cfg(feature = "accel")]
+    {
+        let dir = "artifacts";
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            match crate::runtime::Runtime::load(dir)
+                .and_then(crate::runtime::accel::DenseSketchAccel::new)
+            {
+                Ok(accel) => {
+                    // Warm-up execution (first PJRT call pays setup).
+                    let _ = accel.sketch_batch(42, &rows[0..1.min(rows.len())], k);
+                    let t0 = Instant::now();
+                    let out = accel.sketch_batch(42, &rows, k)?;
+                    let t_ac = t0.elapsed().as_secs_f64();
+                    assert_eq!(out.len(), batch);
+                    t.row(vec![
+                        "aot accel (pjrt cpu)".into(),
+                        batch.to_string(),
+                        fmt_duration(t_ac),
+                        fmt_duration(t_ac / batch as f64),
+                        "direct".into(),
+                    ]);
+                }
+                Err(e) => log::warn!("accelerator unavailable for ablation: {e}"),
             }
-            Err(e) => log::warn!("accelerator unavailable for ablation: {e}"),
+        } else {
+            log::warn!("artifacts not built; ablation-accel reports CPU rows only");
         }
-    } else {
-        log::warn!("artifacts not built; ablation-accel reports CPU rows only");
     }
+    #[cfg(not(feature = "accel"))]
+    log::warn!("built without the `accel` feature; ablation-accel reports CPU rows only");
 
     opts.emit(
         "ablation_accel",

@@ -1,4 +1,5 @@
-//! Experiment harness: one module per paper table/figure (DESIGN.md §4).
+//! Experiment harness: one module per paper table/figure (README.md
+//! §Experiments).
 //!
 //! Every experiment prints the paper-style table to stdout and writes it
 //! (plus machine-readable JSONL) under `--out`. `--full` runs paper-scale

@@ -10,13 +10,16 @@
 //!   worker pool and backpressure.
 //! * **Layer 2/1 (python/, build-time only)** — a JAX model and Pallas
 //!   kernels AOT-lowered to HLO text, loaded on the request path by
-//!   [`runtime`] through the PJRT CPU client (`xla` crate).
+//!   [`runtime`] through the PJRT CPU client (`xla` crate, behind the
+//!   off-by-default `accel` cargo feature — see README.md).
 //!
 //! The paper's contribution — computing a k-length Gumbel-Max sketch in
 //! `O(k ln k + n⁺)` instead of `O(k n⁺)` — lives in [`sketch::fastgm`] and
 //! [`sketch::stream_fastgm`]; every baseline it is evaluated against in the
-//! paper is implemented alongside it (see DESIGN.md §4 for the experiment
-//! index).
+//! paper is implemented alongside it (see [`exp`] and README.md §Experiments
+//! for the experiment index). Large sparse vectors can additionally be
+//! sketched across threads with [`sketch::sharded`] — bit-identical to
+//! single-threaded FastGM by the paper's §2.3 mergeability.
 
 pub mod util;
 pub mod sketch;

@@ -4,12 +4,21 @@
 //!
 //! Interchange is HLO **text**: jax ≥ 0.5 serializes protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md). Every module is lowered
-//! with `return_tuple=True`, so results are un-tupled here.
+//! reassigns ids. Every module is lowered with `return_tuple=True`, so
+//! results are un-tupled here.
+//!
+//! **Feature gate:** everything that touches PJRT ([`Runtime`], [`accel`])
+//! is behind the off-by-default `accel` cargo feature, because the `xla`
+//! crate is not in the offline crate set (README.md §Accelerator). Manifest
+//! *parsing* ([`read_manifest`], [`TensorSpec`], [`ArtifactSpec`]) is always
+//! compiled — the coordinator reads bucket metadata through it and treats a
+//! missing manifest (or a build without `accel`) as "accelerator off".
 
+#[cfg(feature = "accel")]
 pub mod accel;
 
 use crate::util::json::{self, Value};
+#[cfg(feature = "accel")]
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -94,11 +103,13 @@ pub fn read_manifest(dir: &str) -> anyhow::Result<Vec<ArtifactSpec>> {
 ///
 /// NOT `Send`/`Sync` (the underlying wrapper holds `Rc`s): construct and
 /// use it on one thread — the batcher owns one on its flush thread.
+#[cfg(feature = "accel")]
 pub struct Runtime {
     client: xla::PjRtClient,
     executables: HashMap<String, (ArtifactSpec, xla::PjRtLoadedExecutable)>,
 }
 
+#[cfg(feature = "accel")]
 impl Runtime {
     /// Load every artifact listed in `<dir>/manifest.json`. Returns an
     /// error if the directory or manifest is missing — callers that can
@@ -156,6 +167,37 @@ impl Runtime {
 }
 
 #[cfg(test)]
+mod manifest_tests {
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let err = read_manifest("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn parses_a_minimal_manifest() {
+        // Process-unique dir: concurrent test runs must not race on it.
+        let dir =
+            std::env::temp_dir().join(format!("fastgm_manifest_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"name":"sketch_b8_n1024_k256","file":"s.hlo.txt","kind":"pallas",
+                "inputs":[{"shape":[1],"dtype":"uint32"},{"shape":[8,1024],"dtype":"float32"}],
+                "outputs":[{"shape":[8,256],"dtype":"float32"},{"shape":[8,256],"dtype":"int32"}]}]}"#,
+        )
+        .unwrap();
+        let specs = read_manifest(dir.to_str().unwrap()).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].inputs[1].shape, vec![8, 1024]);
+        assert_eq!(specs[0].outputs[0].elements(), 8 * 256);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[cfg(all(test, feature = "accel"))]
 mod tests {
     use super::*;
 

@@ -12,6 +12,8 @@
 //!
 //! Implementations:
 //! * [`fastgm`] — the paper's contribution, `O(k ln k + n⁺)` (Algorithm 1).
+//! * [`sharded`] — FastGM fanned out over weight-balanced shards and merged
+//!   (§2.3 union property): bit-identical, multi-core.
 //! * [`stream_fastgm`] — one-pass streaming variant (Algorithm 2).
 //! * [`fastgm_c`] — the WWW'20 conference version (prune-only baseline).
 //! * [`pminhash`] — straightforward `O(k n⁺)` P-MinHash (Moulton & Jiang).
@@ -25,6 +27,7 @@
 
 pub mod order_stats;
 pub mod fastgm;
+pub mod sharded;
 pub mod stream_fastgm;
 pub mod fastgm_c;
 pub mod pminhash;
@@ -36,7 +39,8 @@ pub mod hyperloglog;
 
 use crate::util::json::Value;
 
-/// RNG family backing a sketch (DESIGN.md §2). Sketches are only comparable
+/// RNG family backing a sketch (see [`crate::util::rng`] and README.md
+/// §RNG-families). Sketches are only comparable
 /// within a family; [`GumbelMaxSketch::merge`] and the estimators enforce it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Family {
@@ -369,6 +373,74 @@ mod tests {
         assert_eq!(back.y[1], 0.25);
         assert!(back.y[0].is_infinite());
         assert_eq!(back.family, Family::Ordered);
+    }
+
+    fn from_json_str(text: &str) -> anyhow::Result<GumbelMaxSketch> {
+        GumbelMaxSketch::from_json(&crate::util::json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fields() {
+        for (text, missing) in [
+            (r#"{"seed":1,"y":[1],"s":[2]}"#, "family"),
+            (r#"{"family":"ordered","y":[1],"s":[2]}"#, "seed"),
+            (r#"{"family":"ordered","seed":1,"s":[2]}"#, "y"),
+            (r#"{"family":"ordered","seed":1,"y":[1]}"#, "s"),
+        ] {
+            let err = from_json_str(text).unwrap_err().to_string();
+            assert!(err.contains(missing), "for {text}: {err}");
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_lossy_or_invalid_seeds() {
+        // Fractional and negative numbers cannot be u64 seeds.
+        assert!(from_json_str(r#"{"family":"ordered","seed":1.5,"y":[],"s":[]}"#).is_err());
+        assert!(from_json_str(r#"{"family":"ordered","seed":-3,"y":[],"s":[]}"#).is_err());
+        // Non-numeric strings fail the lossless decimal path.
+        assert!(from_json_str(r#"{"family":"ordered","seed":"abc","y":[],"s":[]}"#).is_err());
+        // A > 2^53 seed survives exactly via the string encoding.
+        let sk = from_json_str(
+            r#"{"family":"direct","seed":"18446744073709551615","y":[0.5],"s":[1]}"#,
+        )
+        .unwrap();
+        assert_eq!(sk.seed, u64::MAX);
+        // And to_json re-encodes it losslessly (string, not a rounded f64).
+        let back = GumbelMaxSketch::from_json(
+            &crate::util::json::parse(&sk.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.seed, u64::MAX);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_families_and_registers() {
+        assert!(from_json_str(r#"{"family":"quantum","seed":1,"y":[],"s":[]}"#).is_err());
+        assert!(from_json_str(r#"{"family":"ordered","seed":1,"y":["x"],"s":[1]}"#).is_err());
+        // Fractional argmin ids are invalid (ids are integers on the wire).
+        assert!(from_json_str(r#"{"family":"ordered","seed":1,"y":[1],"s":[1.5]}"#).is_err());
+        // y/s arity mismatch.
+        assert!(from_json_str(r#"{"family":"ordered","seed":1,"y":[1,2],"s":[1]}"#).is_err());
+    }
+
+    #[test]
+    fn from_json_decodes_negative_entries_as_empty_registers() {
+        // -1 is the wire encoding of EMPTY_REGISTER / +inf (not valid JSON).
+        let sk = from_json_str(
+            r#"{"family":"ordered","seed":7,"y":[-1,0.25],"s":[-1,9]}"#,
+        )
+        .unwrap();
+        assert!(sk.y[0].is_infinite());
+        assert_eq!(sk.s[0], EMPTY_REGISTER);
+        assert_eq!(sk.y[1], 0.25);
+        assert_eq!(sk.s[1], 9);
+        // Any negative number maps to the sentinel, not just -1.
+        let sk = from_json_str(
+            r#"{"family":"ordered","seed":7,"y":[-2.5],"s":[-42]}"#,
+        )
+        .unwrap();
+        assert!(sk.y[0].is_infinite());
+        assert_eq!(sk.s[0], EMPTY_REGISTER);
     }
 
     #[test]

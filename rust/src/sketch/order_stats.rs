@@ -18,8 +18,8 @@
 //! The permutation is held *lazily* ([`LazyPerm`]): only the entries touched
 //! by a swap are stored, so an element that releases `R_i ≪ k` customers
 //! costs `O(R_i)` memory instead of the `O(k)` of a materialized array (an
-//! improvement over the paper's `n⁺·k·log k`-bit bookkeeping; see
-//! DESIGN.md §Perf).
+//! improvement over the paper's `n⁺·k·log k`-bit bookkeeping; the §Perf
+//! comments below record the measurements that drove it).
 
 use crate::util::rng::SplitMix64;
 

@@ -1,0 +1,230 @@
+//! Parallel shard-merge sketching — multi-core FastGM via §2.3 mergeability.
+//!
+//! The union property makes Gumbel-Max sketches exactly combinable: for any
+//! partition of a vector's positive entries into shards, the register-wise
+//! `merge_all` of the per-shard sketches equals the sketch of the whole
+//! vector, **bit for bit** (each element's race stream depends only on
+//! `(seed, id)`, and every register value is the min over element arrivals —
+//! a min over shard minima). [`ShardedSketcher`] exploits that: it splits a
+//! [`SparseVector`] into `P` weight-balanced contiguous shards, sketches
+//! them concurrently with [`FastGm`], and merges.
+//!
+//! Balance: one pass accumulates weight and cuts a shard whenever the
+//! running load reaches `total/P`, so each shard's load overshoots the ideal
+//! by at most one element's weight. Weight balance (not just count balance)
+//! matters because FastSearch's budget schedule releases work in proportion
+//! to normalized weight — a shard holding most of the mass would dominate
+//! the wall clock.
+//!
+//! Threading: shards run on a scoped thread team spawned per call, NOT on
+//! the coordinator's request [`WorkerPool`](crate::coordinator::worker) —
+//! a request handler already executes *on* a pool worker, and fan-out back
+//! into the same bounded pool can deadlock once every worker blocks waiting
+//! for shard jobs that sit behind it in the queue. Scoped threads keep the
+//! fan-out strictly nested and deadlock-free; the coordinator routes only
+//! large requests here (see `coordinator::router::Router::route_sketch`),
+//! where the per-shard `O(k ln k)` FastSearch overhead amortizes.
+
+use super::fastgm::FastGm;
+use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
+
+/// FastGM fanned out over `shards` threads and merged (§2.3).
+#[derive(Debug, Clone)]
+pub struct ShardedSketcher {
+    inner: FastGm,
+    shards: usize,
+}
+
+impl ShardedSketcher {
+    pub fn new(k: usize, seed: u64, shards: usize) -> Self {
+        assert!(shards >= 1, "shard count must be >= 1");
+        ShardedSketcher { inner: FastGm::new(k, seed), shards }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Split `v`'s positive entries into at most `shards` contiguous,
+    /// weight-balanced parts (empty parts are dropped; non-positive entries
+    /// are ignored, exactly as every sketcher does).
+    pub fn partition(v: &SparseVector, shards: usize) -> Vec<SparseVector> {
+        assert!(shards >= 1);
+        let total: f64 = v.total_weight();
+        if total <= 0.0 {
+            return Vec::new();
+        }
+        let target = total / shards as f64;
+        let mut parts: Vec<SparseVector> = Vec::with_capacity(shards);
+        let mut cur = SparseVector::default();
+        let mut load = 0.0f64;
+        for (id, w) in v.positive() {
+            cur.push(id, w);
+            load += w;
+            if load >= target && parts.len() + 1 < shards {
+                parts.push(std::mem::take(&mut cur));
+                load = 0.0;
+            }
+        }
+        if !cur.ids.is_empty() {
+            parts.push(cur);
+        }
+        parts
+    }
+
+    /// Sketch `v` across the shard team. Bit-identical to
+    /// `FastGm::new(k, seed).sketch(v)` (the property test and
+    /// `rust/tests/sharding.rs` lock this).
+    pub fn sketch_sharded(&self, v: &SparseVector) -> GumbelMaxSketch {
+        let parts = Self::partition(v, self.shards);
+        match parts.len() {
+            0 => GumbelMaxSketch::empty(Family::Ordered, self.inner.seed, self.inner.k),
+            1 => self.inner.sketch(&parts[0]),
+            _ => {
+                let results: Vec<GumbelMaxSketch> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = parts[1..]
+                        .iter()
+                        .map(|p| scope.spawn(move || self.inner.sketch(p)))
+                        .collect();
+                    // The calling thread takes the first shard itself.
+                    let mut out = Vec::with_capacity(parts.len());
+                    out.push(self.inner.sketch(&parts[0]));
+                    for h in handles {
+                        out.push(h.join().expect("shard thread panicked"));
+                    }
+                    out
+                });
+                GumbelMaxSketch::merge_all(results.iter())
+                    .expect("shard sketches share family/seed/k")
+            }
+        }
+    }
+}
+
+impl Sketcher for ShardedSketcher {
+    fn name(&self) -> &'static str {
+        "sharded-fastgm"
+    }
+
+    fn family(&self) -> Family {
+        Family::Ordered
+    }
+
+    fn k(&self) -> usize {
+        self.inner.k
+    }
+
+    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
+        self.sketch_sharded(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall_explain;
+    use crate::util::rng::SplitMix64;
+
+    fn random_vector(r: &mut SplitMix64, max_n: usize) -> SparseVector {
+        let n = r.next_range(1, max_n);
+        let mut v = SparseVector::default();
+        for _ in 0..n {
+            // Mix in non-positive weights: partition must skip them too.
+            let w = if r.next_f64() < 0.1 {
+                -r.next_f64()
+            } else {
+                r.next_exp() * 10f64.powi(r.next_range(0, 3) as i32 - 1)
+            };
+            v.push(r.next_u64(), w);
+        }
+        v
+    }
+
+    /// THE tentpole property: sharded == single-threaded FastGM, exactly,
+    /// for every shard count.
+    #[test]
+    fn sharded_equals_fastgm_bit_for_bit() {
+        forall_explain(
+            40,
+            |r| {
+                let k = [1, 8, 33, 64][r.next_range(0, 3)];
+                let shards = r.next_range(1, 9);
+                (r.next_u64(), k, shards, random_vector(r, 120))
+            },
+            |(seed, k, shards, v)| {
+                let single = FastGm::new(*k, *seed).sketch(v);
+                let sharded = ShardedSketcher::new(*k, *seed, *shards).sketch(v);
+                if single == sharded {
+                    Ok(())
+                } else {
+                    Err(format!("sharded (P={shards}) != single for k={k}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn partition_is_weight_balanced_and_lossless() {
+        forall_explain(
+            60,
+            |r| (r.next_range(1, 8), random_vector(r, 200)),
+            |(shards, v)| {
+                let parts = ShardedSketcher::partition(v, *shards);
+                // Lossless: the concatenation is exactly the positive entries
+                // in order.
+                let got: Vec<(u64, f64)> =
+                    parts.iter().flat_map(|p| p.positive()).collect();
+                let want: Vec<(u64, f64)> = v.positive().collect();
+                if got != want {
+                    return Err("partition lost or reordered entries".into());
+                }
+                if parts.len() > *shards {
+                    return Err(format!("{} parts for P={shards}", parts.len()));
+                }
+                // Balance: every shard's load ≤ ideal + its heaviest element.
+                let total = v.total_weight();
+                if total > 0.0 {
+                    let target = total / *shards as f64;
+                    for p in &parts {
+                        let load = p.total_weight();
+                        let heaviest =
+                            p.positive().map(|(_, w)| w).fold(0.0f64, f64::max);
+                        if load > target + heaviest + 1e-9 {
+                            return Err(format!(
+                                "shard load {load} exceeds target {target} + max {heaviest}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_and_nonpositive_vectors_yield_empty_sketch() {
+        let s = ShardedSketcher::new(16, 3, 4);
+        let sk = s.sketch(&SparseVector::default());
+        assert!(sk.y.iter().all(|y| y.is_infinite()));
+        let sk2 = s.sketch(&SparseVector::new(vec![1, 2], vec![0.0, -1.0]));
+        assert_eq!(sk, sk2);
+        assert_eq!(sk.family, Family::Ordered);
+    }
+
+    #[test]
+    fn single_shard_is_plain_fastgm() {
+        let mut r = SplitMix64::new(9);
+        let v = random_vector(&mut r, 50);
+        assert_eq!(
+            ShardedSketcher::new(32, 7, 1).sketch(&v),
+            FastGm::new(32, 7).sketch(&v)
+        );
+    }
+
+    #[test]
+    fn fewer_entries_than_shards_still_works() {
+        let v = SparseVector::new(vec![5], vec![2.0]);
+        let sharded = ShardedSketcher::new(8, 1, 16).sketch(&v);
+        assert_eq!(sharded, FastGm::new(8, 1).sketch(&v));
+    }
+}

@@ -2,7 +2,7 @@
 //!
 //! Calibrates iteration counts against a wall-clock budget, reports
 //! median / mean / p10 / p90 per iteration, and can append JSON-lines
-//! records so `cargo bench` output is machine-readable for EXPERIMENTS.md.
+//! records so `cargo bench` output is machine-readable (results/*.jsonl).
 //! Used both by `benches/figures.rs` (`harness = false`) and by the
 //! in-binary experiment harness (`fastgm exp ...`).
 

@@ -1,6 +1,6 @@
 //! Deterministic random number generation.
 //!
-//! Two RNG *families* back the sketches (DESIGN.md §2):
+//! Two RNG *families* back the sketches (README.md §RNG-families):
 //!
 //! * the **`Ordered` family** — a [`SplitMix64`] stream per vector element,
 //!   seeded from `fmix64(element) ^ seed`, consumed by the ascending

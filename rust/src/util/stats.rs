@@ -120,7 +120,7 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// Fixed-width ASCII table used by `fastgm exp ...` to print paper-style
-/// rows (also embedded in EXPERIMENTS.md).
+/// rows (also written under `results/`).
 pub struct Table {
     headers: Vec<String>,
     rows: Vec<Vec<String>>,

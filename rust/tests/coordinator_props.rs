@@ -31,8 +31,11 @@ fn routing_invariants() {
             (max_len, density, random_vector(r))
         },
         |(max_len, density, v)| {
-            let router =
-                Router::new(RouterConfig { accel_max_len: *max_len, min_density: *density });
+            let router = Router::new(RouterConfig {
+                accel_max_len: *max_len,
+                min_density: *density,
+                ..RouterConfig::default()
+            });
             let path = router.route_sparse(v);
             if *max_len == 0 && path != Path::CpuFastGm {
                 return Err("accelerator chosen while disabled".into());

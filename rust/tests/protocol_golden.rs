@@ -1,0 +1,128 @@
+//! Golden-file conformance tests for `coordinator::protocol`.
+//!
+//! The JSON lines under `rust/tests/golden/` are the wire format, frozen.
+//! Every line must decode, and re-encoding the decoded value must reproduce
+//! the line byte for byte — so neither the encoder nor the decoder can
+//! drift without this test (and the checked-in goldens) changing too. The
+//! exhaustiveness checks force a new golden line whenever a request op or
+//! response type is added.
+
+use fastgm::coordinator::protocol::{
+    decode_request, decode_response, encode_line, Request, Response,
+};
+use fastgm::sketch::{SparseVector, EMPTY_REGISTER};
+use std::collections::BTreeSet;
+
+const REQUESTS: &str = include_str!("golden/requests.jsonl");
+const RESPONSES: &str = include_str!("golden/responses.jsonl");
+
+/// Every request op the protocol knows. Adding a `Request` variant must
+/// extend this list AND `golden/requests.jsonl` in the same change.
+const ALL_REQUEST_OPS: &[&str] = &[
+    "sketch",
+    "sketch_dense",
+    "get_sketch",
+    "push",
+    "cardinality",
+    "jaccard",
+    "weighted_jaccard",
+    "merge",
+    "lsh_insert",
+    "lsh_query",
+    "metrics",
+    "ping",
+];
+
+/// Every response type. Same rule as [`ALL_REQUEST_OPS`].
+const ALL_RESPONSE_TYPES: &[&str] =
+    &["sketch", "ack", "estimate", "topk", "metrics", "error", "pong"];
+
+fn golden_lines(text: &str) -> Vec<&str> {
+    text.lines().map(str::trim).filter(|l| !l.is_empty()).collect()
+}
+
+#[test]
+fn every_golden_request_roundtrips_byte_for_byte() {
+    for line in golden_lines(REQUESTS) {
+        let req = decode_request(line)
+            .unwrap_or_else(|e| panic!("golden request no longer decodes: {line}\n{e}"));
+        let encoded = encode_line(&req.to_json());
+        assert_eq!(
+            encoded.trim(),
+            line,
+            "wire format drifted for op '{}'",
+            req.op()
+        );
+    }
+}
+
+#[test]
+fn every_golden_response_roundtrips_byte_for_byte() {
+    for line in golden_lines(RESPONSES) {
+        let resp = decode_response(line)
+            .unwrap_or_else(|e| panic!("golden response no longer decodes: {line}\n{e}"));
+        let encoded = encode_line(&resp.to_json());
+        assert_eq!(encoded.trim(), line, "wire format drifted for: {line}");
+    }
+}
+
+#[test]
+fn golden_requests_cover_every_op() {
+    let seen: BTreeSet<&str> = golden_lines(REQUESTS)
+        .iter()
+        .map(|l| decode_request(l).unwrap().op())
+        .collect();
+    let want: BTreeSet<&str> = ALL_REQUEST_OPS.iter().copied().collect();
+    assert_eq!(seen, want, "golden file op coverage drifted");
+    // And the protocol rejects anything outside the frozen set.
+    assert!(decode_request(r#"{"op":"explode"}"#).is_err());
+}
+
+#[test]
+fn golden_responses_cover_every_type() {
+    let seen: BTreeSet<String> = golden_lines(RESPONSES)
+        .iter()
+        .map(|l| {
+            let v = fastgm::util::json::parse(l).unwrap();
+            v.req_str("type").unwrap().to_string()
+        })
+        .collect();
+    let want: BTreeSet<String> =
+        ALL_RESPONSE_TYPES.iter().map(|s| s.to_string()).collect();
+    assert_eq!(seen, want, "golden file response-type coverage drifted");
+    assert!(decode_response(r#"{"ok":true,"type":"warp"}"#).is_err());
+}
+
+/// The values inside the goldens decode to exactly the structures we think
+/// they do — in particular the lossless >2^53 id/seed path and the negative
+/// empty-register encoding.
+#[test]
+fn golden_values_decode_losslessly() {
+    let lines = golden_lines(REQUESTS);
+    let Request::Sketch { name, vector } = decode_request(lines[0]).unwrap() else {
+        panic!("first golden line must be a sketch request")
+    };
+    assert_eq!(name, "doc1");
+    assert_eq!(vector, SparseVector::new(vec![1, 5, u64::MAX], vec![0.5, 2.0, 1.25]));
+
+    let Request::Push { stream, items } = decode_request(lines[3]).unwrap() else {
+        panic!("fourth golden line must be a push request")
+    };
+    assert_eq!(stream, "s");
+    assert_eq!(items, vec![(3, 0.5), ((1u64 << 53) + 1, 1.0)]);
+
+    let resp_lines = golden_lines(RESPONSES);
+    let Response::Sketch { sketch, .. } = decode_response(resp_lines[0]).unwrap() else {
+        panic!("first golden response must be a sketch")
+    };
+    assert!(sketch.y[0].is_infinite());
+    assert_eq!(sketch.s[0], EMPTY_REGISTER);
+    assert_eq!(sketch.y[1], 0.25);
+    assert_eq!(sketch.s[1], 77);
+
+    let Response::Sketch { sketch, .. } = decode_response(resp_lines[1]).unwrap() else {
+        panic!("second golden response must be a sketch")
+    };
+    assert_eq!(sketch.seed, u64::MAX);
+    assert_eq!(sketch.s[0], (1u64 << 53) + 1);
+}

@@ -1,0 +1,134 @@
+//! Cross-language RNG parity: `rust/tests/fixtures/rng_parity.json` is
+//! generated (and independently asserted) by the pure-Python reference in
+//! `python/tests/rng_reference.py` / `test_rng_parity.py`. This test pins
+//! `util::rng` and `sketch::order_stats` to the same outputs, so the two
+//! language layers can never silently diverge — the same lock
+//! `test_rng.py` provides for the Direct-family kernel constants.
+//!
+//! Integer outputs (hashes, counter RNG, SplitMix64 streams, register
+//! assignments, and `next_f64`, which is pure dyadic arithmetic) must match
+//! **exactly**. Exponential arrival times go through `ln` and are compared
+//! to 1e-12 relative — libm rounding is the only divergence allowed.
+
+use fastgm::sketch::order_stats::ElementRace;
+use fastgm::util::json::{parse, Value};
+use fastgm::util::rng::{direct_bits, fmix32, fmix64, SplitMix64};
+
+const FIXTURE: &str = include_str!("fixtures/rng_parity.json");
+
+fn fixture() -> Value {
+    parse(FIXTURE).expect("rng_parity.json parses")
+}
+
+/// Fixture u64s are decimal strings (JSON numbers are f64 and would
+/// truncate above 2^53).
+fn u(v: &Value) -> u64 {
+    v.as_str().expect("string-encoded integer").parse().expect("valid u64")
+}
+
+fn f(v: &Value) -> f64 {
+    v.as_str().expect("string-encoded float").parse().expect("valid f64")
+}
+
+fn arr<'a>(v: &'a Value, key: &str) -> &'a [Value] {
+    v.req(key).unwrap().as_arr().unwrap()
+}
+
+#[test]
+fn fmix_finalizers_match_reference() {
+    let fx = fixture();
+    let cases32 = arr(&fx, "fmix32");
+    assert!(cases32.len() >= 5);
+    for case in cases32 {
+        let (input, want) = (u(case.idx(0).unwrap()) as u32, u(case.idx(1).unwrap()) as u32);
+        assert_eq!(fmix32(input), want, "fmix32({input})");
+    }
+    for case in arr(&fx, "fmix64") {
+        let (input, want) = (u(case.idx(0).unwrap()), u(case.idx(1).unwrap()));
+        assert_eq!(fmix64(input), want, "fmix64({input})");
+    }
+}
+
+#[test]
+fn direct_bits_matches_reference() {
+    let fx = fixture();
+    for case in arr(&fx, "direct_bits") {
+        let seed = u(case.idx(0).unwrap()) as u32;
+        let i = u(case.idx(1).unwrap()) as u32;
+        let j = u(case.idx(2).unwrap()) as u32;
+        let want = u(case.idx(3).unwrap()) as u32;
+        assert_eq!(direct_bits(seed, i, j), want, "direct_bits({seed},{i},{j})");
+    }
+}
+
+#[test]
+fn splitmix_streams_match_reference_exactly() {
+    let fx = fixture();
+    let cases = arr(&fx, "splitmix64");
+    assert!(cases.len() >= 3);
+    for case in cases {
+        let seed = u(case.req("seed").unwrap());
+        let mut r = SplitMix64::new(seed);
+        for (i, want) in arr(case, "u64").iter().enumerate() {
+            assert_eq!(r.next_u64(), u(want), "seed {seed}, u64 #{i}");
+        }
+        // next_f64 is dyadic arithmetic on the u64 stream: bit-exact.
+        let mut r = SplitMix64::new(seed);
+        for (i, want) in arr(case, "f64").iter().enumerate() {
+            let got = r.next_f64();
+            assert_eq!(got.to_bits(), f(want).to_bits(), "seed {seed}, f64 #{i}: {got}");
+        }
+    }
+}
+
+#[test]
+fn element_stream_keying_matches_reference() {
+    let fx = fixture();
+    for case in arr(&fx, "for_element") {
+        let seed = u(case.req("seed").unwrap());
+        let element = u(case.req("element").unwrap());
+        let want = u(case.req("first_u64").unwrap());
+        assert_eq!(
+            SplitMix64::for_element(seed, element).next_u64(),
+            want,
+            "for_element({seed}, {element})"
+        );
+    }
+}
+
+#[test]
+fn element_race_matches_reference() {
+    let fx = fixture();
+    let cases = arr(&fx, "element_race");
+    assert!(cases.len() >= 3);
+    for case in cases {
+        let seed = u(case.req("seed").unwrap());
+        let element = u(case.req("element").unwrap());
+        let w = f(case.req("w").unwrap());
+        let k = case.req("k").unwrap().as_usize().unwrap();
+        let pairs = ElementRace::new(seed, element, w, k).drain();
+        let registers = arr(case, "registers");
+        let arrivals = arr(case, "arrivals");
+        assert_eq!(pairs.len(), k);
+        assert_eq!(registers.len(), k);
+        for (z, ((b, c), (want_reg, want_b))) in pairs
+            .iter()
+            .zip(registers.iter().zip(arrivals))
+            .enumerate()
+        {
+            // Register choice: integers all the way down — exact.
+            assert_eq!(
+                *c as usize,
+                want_reg.as_usize().unwrap(),
+                "race({seed},{element},{w},{k}) register #{z}"
+            );
+            // Arrival time: one ln per step, so allow libm ulp noise only.
+            let want_b = f(want_b);
+            let rel = (b - want_b).abs() / want_b.abs().max(f64::MIN_POSITIVE);
+            assert!(
+                rel < 1e-12,
+                "race({seed},{element},{w},{k}) arrival #{z}: {b} vs {want_b} (rel {rel:.3e})"
+            );
+        }
+    }
+}

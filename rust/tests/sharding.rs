@@ -1,0 +1,126 @@
+//! Integration tests for the parallel shard-merge path (§2.3): the sharded
+//! sketcher must be indistinguishable — bit for bit — from single-threaded
+//! FastGM, standalone and through the whole coordinator stack.
+
+use fastgm::coordinator::protocol::{Request, Response};
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::estimate::jaccard::estimate_jp;
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::sharded::ShardedSketcher;
+use fastgm::sketch::{Sketcher, SparseVector};
+use fastgm::util::proptest::forall_explain;
+use fastgm::util::rng::SplitMix64;
+
+fn skewed_vector(r: &mut SplitMix64, n: usize) -> SparseVector {
+    // Zipf-ish weights: the worst case for naive count-based sharding.
+    SparseVector::new(
+        (0..n as u64).map(|i| i.wrapping_mul(0x9E37_79B9) + 1).collect(),
+        (0..n).map(|i| (1.0 / (i as f64 + 1.0)) * (r.next_f64() + 0.5)).collect(),
+    )
+}
+
+/// Acceptance property: ShardedSketcher == FastGm for random vectors, over
+/// shard counts, sketch lengths and seeds.
+#[test]
+fn sharded_sketcher_equals_fastgm_property() {
+    forall_explain(
+        30,
+        |r| {
+            let k = [4usize, 16, 64, 128][r.next_range(0, 3)];
+            let shards = r.next_range(2, 12);
+            let n = r.next_range(1, 400);
+            (r.next_u64(), k, shards, skewed_vector(r, n))
+        },
+        |(seed, k, shards, v)| {
+            let single = FastGm::new(*k, *seed).sketch(v);
+            let sharded = ShardedSketcher::new(*k, *seed, *shards).sketch(v);
+            if single == sharded {
+                Ok(())
+            } else {
+                Err(format!("P={shards}, k={k}: sharded != single-threaded"))
+            }
+        },
+    );
+}
+
+/// Sharded sketches interoperate with everything downstream: estimators see
+/// the exact same registers, so estimates match exactly.
+#[test]
+fn sharded_sketches_interoperate_with_estimators() {
+    let mut r = SplitMix64::new(5);
+    let u = skewed_vector(&mut r, 300);
+    let v = skewed_vector(&mut r, 300);
+    let fg = FastGm::new(128, 7);
+    let sh = ShardedSketcher::new(128, 7, 5);
+    let jp_single = estimate_jp(&fg.sketch(&u), &fg.sketch(&v)).unwrap();
+    let jp_mixed = estimate_jp(&sh.sketch(&u), &fg.sketch(&v)).unwrap();
+    assert_eq!(jp_single, jp_mixed);
+}
+
+/// End to end through the coordinator: the same vector sketched below and
+/// above the shard threshold stores identical registers, so a client can
+/// never observe which path served it.
+#[test]
+fn coordinator_shard_routing_is_transparent() {
+    let v = SparseVector::new(
+        (0..800u64).map(|i| i * 3 + 11).collect(),
+        (0..800).map(|i| 0.05 + (i % 17) as f64).collect(),
+    );
+    let mk = |shards: usize, min_nplus: usize| {
+        Coordinator::new(CoordinatorConfig {
+            k: 64,
+            workers: 2,
+            shards,
+            shard_min_nplus: min_nplus,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap()
+    };
+    // Forced sharded vs forced single-threaded.
+    let sharded_coord = mk(6, 1);
+    let single_coord = mk(1, usize::MAX);
+    let get = |c: &Coordinator| -> fastgm::sketch::GumbelMaxSketch {
+        let Response::Sketch { sketch, .. } =
+            c.call(Request::Sketch { name: "v".into(), vector: v.clone() })
+        else {
+            panic!("expected sketch response")
+        };
+        sketch
+    };
+    let a = get(&sharded_coord);
+    let b = get(&single_coord);
+    assert_eq!(a, b, "shard routing changed the stored sketch");
+    sharded_coord.shutdown();
+    single_coord.shutdown();
+}
+
+/// Concurrency smoke: many large sharded sketch requests in flight at once
+/// (worker pool × shard teams) all complete and all agree with the oracle.
+#[test]
+fn concurrent_sharded_requests_are_correct() {
+    let c = Coordinator::new(CoordinatorConfig {
+        k: 32,
+        workers: 4,
+        shards: 4,
+        shard_min_nplus: 50,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let mut r = SplitMix64::new(77);
+    let vectors: Vec<SparseVector> = (0..16).map(|_| skewed_vector(&mut r, 200)).collect();
+    let rxs: Vec<_> = vectors
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            c.submit(Request::Sketch { name: format!("v{i}"), vector: v.clone() })
+        })
+        .collect();
+    let fg = FastGm::new(32, 42); // coordinator default seed
+    for (v, rx) in vectors.iter().zip(rxs) {
+        let Response::Sketch { sketch, .. } = rx.recv().unwrap() else {
+            panic!("expected sketch response")
+        };
+        assert_eq!(sketch, fg.sketch(v));
+    }
+    c.shutdown();
+}
