@@ -75,7 +75,7 @@ fn main() {
     let mut n = 0u64;
     suite.record(b.run("coordinator/sketch-roundtrip", || {
         n += 1;
-        let r = coord.call(Request::Sketch { name: format!("b{}", n % 64), vector: v.clone() });
+        let r = coord.call(Request::Sketch { name: format!("b{}", n % 64), vector: v.clone(), algo: None });
         assert!(matches!(r, Response::Sketch { .. }));
     }));
     suite.record(b.run("coordinator/ping-roundtrip", || coord.call(Request::Ping)));

@@ -1,7 +1,9 @@
 //! Focused probe for the §Perf iteration loop (small, fast, targeted).
 //! Reports the parallel shard-merge path next to single-threaded FastGM so
 //! the multi-core speedup (and the small-n regression region the router's
-//! `shard_min_nplus` threshold guards against) is visible per run.
+//! `shard_min_nplus` threshold guards against) is visible per run, plus the
+//! engine's scratch-reuse path next to fresh-allocation sketching so the
+//! zero-allocation win is measured on every run.
 use fastgm::data::synthetic::{dense_vector, WeightDist};
 use fastgm::data::stream::generate;
 use fastgm::sketch::fastgm::FastGm;
@@ -9,7 +11,7 @@ use fastgm::sketch::lemiesz::LemieszSketch;
 use fastgm::sketch::pminhash::PMinHash;
 use fastgm::sketch::sharded::ShardedSketcher;
 use fastgm::sketch::stream_fastgm::StreamFastGm;
-use fastgm::sketch::Sketcher;
+use fastgm::sketch::{Family, GumbelMaxSketch, SketchScratch, Sketcher};
 use fastgm::util::bench::{Bencher, Suite};
 use fastgm::util::rng::SplitMix64;
 
@@ -42,6 +44,29 @@ fn main() {
             println!("  -> sharded(4) speedup over fastgm at n={n}, k={k}: {sp:.2}x");
         }
     }
+    // Engine scratch reuse vs fresh allocation: the same FastGm, one path
+    // reusing a per-caller SketchScratch + output registers (the
+    // coordinator's per-worker serving path), the other allocating
+    // everything per call. Outputs are bit-identical (engine_props.rs);
+    // the delta below is pure allocation/initialization cost.
+    for (n, k) in [(1000usize, 256usize), (10_000, 1024)] {
+        let v = dense_vector(&mut rng, n, WeightDist::Uniform01);
+        let fg = FastGm::new(k, 1);
+        let mut scratch = SketchScratch::new();
+        let mut out = GumbelMaxSketch::empty(Family::Ordered, 1, k);
+        suite.record(b.run(&format!("engine-reuse/fastgm/n{n}/k{k}"), || {
+            fg.sketch_into(&v, &mut scratch, &mut out);
+            out.y[0]
+        }));
+        suite.record(b.run(&format!("engine-fresh/fastgm/n{n}/k{k}"), || fg.sketch(&v)));
+        if let Some(sp) = suite.speedup(
+            &format!("engine-fresh/fastgm/n{n}/k{k}"),
+            &format!("engine-reuse/fastgm/n{n}/k{k}"),
+        ) {
+            println!("  -> scratch-reuse speedup over fresh alloc at n={n}, k={k}: {sp:.2}x");
+        }
+    }
+
     let stream = generate(&mut rng, 1000, 1.0, WeightDist::Uniform01, 0);
     for k in [256usize, 1024] {
         suite.record(b.run(&format!("stream-fastgm/n1000/k{k}"), || {

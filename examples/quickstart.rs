@@ -6,9 +6,10 @@
 
 use fastgm::estimate::cardinality::estimate_cardinality;
 use fastgm::estimate::jaccard::{estimate_jp, probability_jaccard};
+use fastgm::sketch::engine::{self, EngineParams};
 use fastgm::sketch::fastgm::FastGm;
 use fastgm::sketch::stream_fastgm::StreamFastGm;
-use fastgm::sketch::{GumbelMaxSketch, Sketcher, SparseVector};
+use fastgm::sketch::{GumbelMaxSketch, SketchScratch, Sketcher, SparseVector};
 
 fn main() -> anyhow::Result<()> {
     // Two weighted vectors (e.g. TF-IDF bags of words). Ids are arbitrary
@@ -46,5 +47,17 @@ fn main() -> anyhow::Result<()> {
         "merged (union) cardinality ≈ {:.2}",
         estimate_cardinality(&merged)
     );
+
+    // 6. The engine registry: any algorithm by name, and the
+    //    zero-allocation hot path — reuse one scratch + output across
+    //    calls (bit-identical to fresh sketches, just without the churn).
+    let engine = engine::build_named("fastgm", EngineParams::new(k, 42))?;
+    let mut scratch = SketchScratch::new();
+    let mut out = GumbelMaxSketch::empty(engine.family(), engine.seed(), engine.k());
+    engine.sketch_into(&doc_a, &mut scratch, &mut out);
+    assert_eq!(out, sk_a, "engine + reused scratch == fresh sketch");
+    engine.sketch_into(&doc_b, &mut scratch, &mut out);
+    assert_eq!(out, sk_b);
+    println!("engine registry + scratch reuse ✓ (algos: fastgm, fastgm-c, sharded, stream, pminhash, lemiesz, icws, bagminhash, minhash)");
     Ok(())
 }

@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
     while base < docs.len() {
         let end = (base + 64).min(docs.len());
         let reqs: Vec<Request> = (base..end)
-            .map(|i| Request::Sketch { name: format!("doc{i}"), vector: docs[i].clone() })
+            .map(|i| Request::Sketch { name: format!("doc{i}"), vector: docs[i].clone(), algo: None })
             .collect();
         for r in client.call_pipelined(&reqs)? {
             assert!(matches!(r, Response::Sketch { .. }), "ingest failed: {r:?}");

@@ -5,8 +5,21 @@
 //!   the right choice for the data-pipeline use).
 //! * **Shed** — over-capacity requests fail fast with an error response
 //!   (the serving posture: protect tail latency).
+//!
+//! The queue is split **per worker**: each consumer owns its own bounded
+//! channel ([`WorkerQueue`]) and [`Admission::submit`] dispatches to the
+//! *shallowest* queue (round-robin on ties), trying every live queue once
+//! before blocking (retry with backoff, never pinned to one queue) or
+//! shedding; a queue whose worker died is skipped until none remain. This
+//! replaced a single `Mutex<Receiver>` that every worker contended on per
+//! dequeue — the convoy the §Perf log flagged once worker counts grew.
+//! Trade-off, stated plainly: admission is depth-aware but there is no
+//! dequeue-side stealing (a job already enqueued behind a long job waits
+//! there even if another worker idles) — the price of per-worker scratch
+//! locality. Per-queue depth counters feed the coordinator's
+//! `queue_depth` gauge.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 
@@ -24,9 +37,11 @@ pub enum AdmitError {
     Closed,
 }
 
-/// Sender side of the bounded queue.
+/// Producer side of the per-worker bounded queues.
 pub struct Admission<T> {
-    tx: SyncSender<T>,
+    senders: Vec<SyncSender<T>>,
+    depths: Vec<Arc<AtomicI64>>,
+    rr: Arc<AtomicUsize>,
     policy: Policy,
     shed: Arc<AtomicU64>,
     admitted: Arc<AtomicU64>,
@@ -35,7 +50,9 @@ pub struct Admission<T> {
 impl<T> Clone for Admission<T> {
     fn clone(&self) -> Self {
         Admission {
-            tx: self.tx.clone(),
+            senders: self.senders.clone(),
+            depths: self.depths.clone(),
+            rr: self.rr.clone(),
             policy: self.policy,
             shed: self.shed.clone(),
             admitted: self.admitted.clone(),
@@ -43,25 +60,94 @@ impl<T> Clone for Admission<T> {
     }
 }
 
+/// Consumer side: one per worker. `recv` maintains the depth gauge.
+pub struct WorkerQueue<T> {
+    rx: Receiver<T>,
+    depth: Arc<AtomicI64>,
+}
+
+impl<T> WorkerQueue<T> {
+    pub fn recv(&self) -> Result<T, std::sync::mpsc::RecvError> {
+        let item = self.rx.recv()?;
+        self.depth.fetch_sub(1, Ordering::Relaxed);
+        Ok(item)
+    }
+
+    /// Items currently enqueued on this worker's queue.
+    pub fn depth(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed).max(0) as u64
+    }
+}
+
 impl<T> Admission<T> {
     pub fn submit(&self, item: T) -> Result<(), AdmitError> {
-        match self.policy {
-            Policy::Block => {
-                self.tx.send(item).map_err(|_| AdmitError::Closed)?;
-                self.admitted.fetch_add(1, Ordering::Relaxed);
-                Ok(())
+        let n = self.senders.len();
+        let rr = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut item = item;
+        let mut backoff = std::time::Duration::from_micros(100);
+        loop {
+            // Start at the shallowest queue (head-of-line mitigation: a
+            // short request admitted after a huge one should not wait
+            // behind it when another worker's queue is emptier), rotating
+            // ties round-robin. Re-picked every pass so a retry reacts to
+            // queues that drained while we backed off.
+            let mut start = rr % n;
+            let mut best = i64::MAX;
+            for off in 0..n {
+                let i = (rr + off) % n;
+                let d = self.depths[i].load(Ordering::Relaxed);
+                if d < best {
+                    best = d;
+                    start = i;
+                }
             }
-            Policy::Shed => match self.tx.try_send(item) {
-                Ok(()) => {
-                    self.admitted.fetch_add(1, Ordering::Relaxed);
-                    Ok(())
+            // Work-conserving pass: try every queue once. A disconnected
+            // queue (worker died) is skipped — service degrades to the
+            // surviving workers; Closed only when NO queue is left.
+            let mut disconnected = 0usize;
+            for off in 0..n {
+                let i = (start + off) % n;
+                // Count before sending so the consumer's decrement can never
+                // observe a slot it outran (depth is a high-water estimate).
+                self.depths[i].fetch_add(1, Ordering::Relaxed);
+                match self.senders[i].try_send(item) {
+                    Ok(()) => {
+                        self.admitted.fetch_add(1, Ordering::Relaxed);
+                        return Ok(());
+                    }
+                    Err(TrySendError::Full(it)) => {
+                        self.depths[i].fetch_sub(1, Ordering::Relaxed);
+                        item = it;
+                    }
+                    Err(TrySendError::Disconnected(it)) => {
+                        self.depths[i].fetch_sub(1, Ordering::Relaxed);
+                        item = it;
+                        disconnected += 1;
+                    }
                 }
-                Err(TrySendError::Full(_)) => {
+            }
+            if disconnected == n {
+                return Err(AdmitError::Closed);
+            }
+            // Every live queue full.
+            match self.policy {
+                Policy::Shed => {
                     self.shed.fetch_add(1, Ordering::Relaxed);
-                    Err(AdmitError::Shed)
+                    return Err(AdmitError::Shed);
                 }
-                Err(TrySendError::Disconnected(_)) => Err(AdmitError::Closed),
-            },
+                // Block must stay work-conserving: rather than pinning a
+                // blocking send on one queue (which would keep the producer
+                // stuck behind a wedged worker while other workers drain
+                // and idle), back off (exponential, capped at 2ms to bound
+                // the poll CPU) and re-scan all queues. Admission order
+                // among concurrently blocked producers is best-effort, not
+                // FIFO — under sustained overload prefer Policy::Shed,
+                // which is the serving posture anyway.
+                Policy::Block => {
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(std::time::Duration::from_millis(2));
+                }
+            }
         }
     }
 
@@ -72,19 +158,72 @@ impl<T> Admission<T> {
     pub fn admitted_count(&self) -> u64 {
         self.admitted.load(Ordering::Relaxed)
     }
+
+    /// Total enqueued items across all worker queues (the gauge).
+    pub fn queue_depth(&self) -> u64 {
+        self.depths.iter().map(|d| d.load(Ordering::Relaxed).max(0) as u64).sum()
+    }
+
+    pub fn queues(&self) -> usize {
+        self.senders.len()
+    }
 }
 
-/// Build a bounded queue of `capacity` with the given policy.
-pub fn bounded<T>(capacity: usize, policy: Policy) -> (Admission<T>, Receiver<T>) {
-    let (tx, rx) = std::sync::mpsc::sync_channel(capacity);
+/// Build one bounded queue of `capacity` with the given policy.
+pub fn bounded<T>(capacity: usize, policy: Policy) -> (Admission<T>, WorkerQueue<T>) {
+    let (adm, mut queues) = bounded_per_worker(1, capacity, policy);
+    (adm, queues.pop().expect("one queue requested"))
+}
+
+/// Build `queues` per-worker bounded queues of `per_queue_capacity` each.
+pub fn bounded_per_worker<T>(
+    queues: usize,
+    per_queue_capacity: usize,
+    policy: Policy,
+) -> (Admission<T>, Vec<WorkerQueue<T>>) {
+    assert!(per_queue_capacity >= 1);
+    build_queues(vec![per_queue_capacity; queues], policy)
+}
+
+/// Build `queues` per-worker queues whose capacities sum to
+/// `total_capacity` (remainder distributed one-per-queue; every queue gets
+/// at least 1 slot, so the effective total is `max(total_capacity,
+/// queues)`). This keeps a configured admission capacity meaningful when
+/// it is split across workers.
+pub fn bounded_split<T>(
+    queues: usize,
+    total_capacity: usize,
+    policy: Policy,
+) -> (Admission<T>, Vec<WorkerQueue<T>>) {
+    assert!(queues >= 1);
+    let caps: Vec<usize> = (0..queues)
+        .map(|i| (total_capacity / queues + usize::from(i < total_capacity % queues)).max(1))
+        .collect();
+    build_queues(caps, policy)
+}
+
+fn build_queues<T>(caps: Vec<usize>, policy: Policy) -> (Admission<T>, Vec<WorkerQueue<T>>) {
+    assert!(!caps.is_empty());
+    let mut senders = Vec::with_capacity(caps.len());
+    let mut depths = Vec::with_capacity(caps.len());
+    let mut rxs = Vec::with_capacity(caps.len());
+    for cap in caps {
+        let (tx, rx) = std::sync::mpsc::sync_channel(cap);
+        let depth = Arc::new(AtomicI64::new(0));
+        senders.push(tx);
+        depths.push(depth.clone());
+        rxs.push(WorkerQueue { rx, depth });
+    }
     (
         Admission {
-            tx,
+            senders,
+            depths,
+            rr: Arc::new(AtomicUsize::new(0)),
             policy,
             shed: Arc::new(AtomicU64::new(0)),
             admitted: Arc::new(AtomicU64::new(0)),
         },
-        rx,
+        rxs,
     )
 }
 
@@ -100,6 +239,7 @@ mod tests {
         assert_eq!(adm.submit(3), Err(AdmitError::Shed));
         assert_eq!(adm.shed_count(), 1);
         assert_eq!(adm.admitted_count(), 2);
+        assert_eq!(adm.queue_depth(), 2);
     }
 
     #[test]
@@ -115,9 +255,105 @@ mod tests {
     }
 
     #[test]
+    fn block_policy_admits_via_any_drained_queue() {
+        // The blocked producer must not pin itself to one queue: draining
+        // ANY queue must unblock it.
+        let (adm, rxs) = bounded_per_worker::<u32>(2, 1, Policy::Block);
+        adm.submit(1).unwrap();
+        adm.submit(2).unwrap();
+        let adm2 = adm.clone();
+        let h = std::thread::spawn(move || adm2.submit(3));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let _ = rxs[1].recv().unwrap();
+        h.join().unwrap().unwrap();
+        assert_eq!(adm.queue_depth(), 2);
+    }
+
+    #[test]
     fn closed_queue_reports_closed() {
         let (adm, rx) = bounded::<u32>(1, Policy::Shed);
         drop(rx);
         assert_eq!(adm.submit(1), Err(AdmitError::Closed));
+    }
+
+    #[test]
+    fn dispatch_spreads_and_overflows_to_free_queues() {
+        let (adm, rxs) = bounded_per_worker::<u32>(3, 2, Policy::Shed);
+        for i in 0..3 {
+            adm.submit(i).unwrap();
+        }
+        // One item per queue: depth ties rotate round-robin, no queue hit
+        // twice yet.
+        for rx in &rxs {
+            assert_eq!(rx.depth(), 1);
+        }
+        // Fill everything; the work-conserving pass must use every slot
+        // before shedding.
+        for i in 3..6 {
+            adm.submit(i).unwrap();
+        }
+        assert_eq!(adm.queue_depth(), 6);
+        assert_eq!(adm.submit(99), Err(AdmitError::Shed));
+        // Draining one queue frees exactly one admission slot.
+        let _ = rxs[0].recv().unwrap();
+        assert_eq!(adm.queue_depth(), 5);
+        assert!(adm.submit(100).is_ok());
+    }
+
+    #[test]
+    fn dead_queue_is_skipped_until_all_are_dead() {
+        // One worker dying must not fail 1/n of submissions: the scan
+        // skips its disconnected queue and admits on the survivors.
+        let (adm, mut rxs) = bounded_per_worker::<u32>(3, 2, Policy::Shed);
+        drop(rxs.remove(1)); // worker 1 "panics"
+        for i in 0..4 {
+            adm.submit(i).unwrap_or_else(|e| panic!("submit {i} failed: {e}"));
+        }
+        assert_eq!(adm.queue_depth(), 4); // 2 on each surviving queue
+        assert_eq!(adm.submit(99), Err(AdmitError::Shed));
+        // Only when every queue is gone does submit report Closed.
+        drop(rxs);
+        assert_eq!(adm.submit(1), Err(AdmitError::Closed));
+    }
+
+    #[test]
+    fn split_capacity_sums_to_configured_total() {
+        // total 7 over 4 queues → capacities 2,2,2,1: exactly 7 admitted.
+        let (adm, _rxs) = bounded_split::<u32>(4, 7, Policy::Shed);
+        for i in 0..7 {
+            adm.submit(i).unwrap_or_else(|e| panic!("submit {i} failed: {e}"));
+        }
+        assert_eq!(adm.submit(99), Err(AdmitError::Shed));
+        assert_eq!(adm.queue_depth(), 7);
+        // Degenerate config: every queue still gets at least one slot.
+        let (tiny, _rxs2) = bounded_split::<u32>(4, 1, Policy::Shed);
+        for i in 0..4 {
+            tiny.submit(i).unwrap();
+        }
+        assert_eq!(tiny.submit(9), Err(AdmitError::Shed));
+    }
+
+    #[test]
+    fn shallowest_queue_gets_the_next_job() {
+        let (adm, rxs) = bounded_per_worker::<u32>(3, 4, Policy::Shed);
+        for i in 0..6 {
+            adm.submit(i).unwrap(); // 2 everywhere
+        }
+        let _ = rxs[2].recv().unwrap(); // queue 2 drains one
+        adm.submit(100).unwrap();
+        assert_eq!(rxs[2].depth(), 2, "new job must land on the shallowest queue");
+    }
+
+    #[test]
+    fn depth_gauge_tracks_recv() {
+        let (adm, rx) = bounded::<u32>(8, Policy::Block);
+        for i in 0..5 {
+            adm.submit(i).unwrap();
+        }
+        assert_eq!(adm.queue_depth(), 5);
+        for _ in 0..5 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(adm.queue_depth(), 0);
     }
 }

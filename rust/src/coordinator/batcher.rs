@@ -72,7 +72,9 @@ pub struct BatcherConfig {
     pub max_batch: usize,
     pub deadline: Duration,
     pub k: usize,
-    pub seed: u32,
+    /// Unified u64 seed; the Direct RNG / Pallas kernel side folds it to 32
+    /// bits exactly like [`crate::sketch::fold_id`] folds element ids.
+    pub seed: u64,
 }
 
 impl Default for BatcherConfig {

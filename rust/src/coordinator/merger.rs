@@ -39,7 +39,7 @@ mod tests {
     use crate::sketch::lemiesz::LemieszSketch;
     use crate::estimate::cardinality::estimate_cardinality;
 
-    fn site_sketch(k: usize, seed: u32, ids: std::ops::Range<u64>) -> GumbelMaxSketch {
+    fn site_sketch(k: usize, seed: u64, ids: std::ops::Range<u64>) -> GumbelMaxSketch {
         let mut s = LemieszSketch::new(k, seed);
         for id in ids {
             s.push(id, 1.0);

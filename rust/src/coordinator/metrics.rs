@@ -60,6 +60,7 @@ impl LatencyHist {
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<HashMap<String, u64>>,
+    gauges: Mutex<HashMap<String, f64>>,
     latencies: Mutex<HashMap<String, std::sync::Arc<LatencyHist>>>,
     started: Option<Instant>,
 }
@@ -68,6 +69,7 @@ impl Metrics {
     pub fn new() -> Self {
         Metrics {
             counters: Mutex::new(HashMap::new()),
+            gauges: Mutex::new(HashMap::new()),
             latencies: Mutex::new(HashMap::new()),
             started: Some(Instant::now()),
         }
@@ -83,6 +85,15 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Set a last-value-wins gauge (e.g. `queue_depth`).
+    pub fn gauge_set(&self, name: &str, value: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.lock().unwrap().get(name).copied().unwrap_or(0.0)
     }
 
     pub fn hist(&self, name: &str) -> std::sync::Arc<LatencyHist> {
@@ -107,6 +118,10 @@ impl Metrics {
             .map(|(k, v)| (k.clone(), Value::num(*v as f64)))
             .collect();
         items.sort_by(|a, b| a.0.cmp(&b.0));
+        let gauges = self.gauges.lock().unwrap();
+        let mut gauge_items: Vec<(String, Value)> =
+            gauges.iter().map(|(k, v)| (k.clone(), Value::num(*v))).collect();
+        gauge_items.sort_by(|a, b| a.0.cmp(&b.0));
         let lat = self.latencies.lock().unwrap();
         let mut lat_items: Vec<(String, Value)> = lat
             .iter()
@@ -129,6 +144,7 @@ impl Metrics {
                 Value::num(self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)),
             ),
             ("counters", Value::Obj(items)),
+            ("gauges", Value::Obj(gauge_items)),
             ("latency", Value::Obj(lat_items)),
         ])
     }
@@ -161,6 +177,20 @@ mod tests {
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.9));
         assert!(h.quantile_us(0.9) <= h.quantile_us(0.999));
         assert!(h.mean_us() > 1.0);
+    }
+
+    #[test]
+    fn gauges_are_last_value_wins() {
+        let m = Metrics::new();
+        assert_eq!(m.gauge("queue_depth"), 0.0);
+        m.gauge_set("queue_depth", 7.0);
+        m.gauge_set("queue_depth", 3.0);
+        assert_eq!(m.gauge("queue_depth"), 3.0);
+        let v = m.snapshot();
+        assert_eq!(
+            v.get("gauges").unwrap().get("queue_depth").unwrap().as_f64(),
+            Some(3.0)
+        );
     }
 
     #[test]

@@ -6,10 +6,13 @@
 //! * [`service`] — the [`service::Coordinator`]: routes sparse vectors to
 //!   CPU FastGM workers, dense batches to the AOT accelerator, streams to
 //!   Stream-FastGM states; owns the sketch registry and LSH index.
-//! * [`router`] — the sparse/dense/stream routing decision.
-//! * [`worker`] — the CPU worker pool (std threads + shared queue).
+//! * [`router`] — the sparse/dense/stream routing decision, including the
+//!   engine-registry `algo` plan ([`router::SketchPlan`]).
+//! * [`worker`] — the CPU worker pool: one bounded queue and one reusable
+//!   [`crate::sketch::SketchScratch`] per worker (round-robin dispatch).
 //! * [`batcher`] — size/deadline dynamic batching for the accelerator.
-//! * [`backpressure`] — bounded admission queue with shed-or-block policy.
+//! * [`backpressure`] — per-worker bounded admission with shed-or-block
+//!   policy and queue-depth gauges.
 //! * [`registry`] — named sketch & stream state store.
 //! * [`merger`] — distributed-site sketch merge (§2.3 mergeability).
 //! * [`metrics`] — counters + latency histograms, surfaced over the wire.

@@ -9,8 +9,13 @@ use crate::util::json::{self, Value};
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    /// Sketch a sparse vector with FastGM (Ordered family) and store it.
-    Sketch { name: String, vector: SparseVector },
+    /// Sketch a sparse vector and store it. `algo` selects the engine-
+    /// registry algorithm by name (`fastgm`, `fastgm-c`, `sharded`,
+    /// `stream`, `pminhash`, `lemiesz`, `icws`, `bagminhash`, `minhash`);
+    /// omitted means the coordinator's configured default (`sketch.algo`,
+    /// itself defaulting to FastGM). Unknown names produce an error
+    /// response listing the registry.
+    Sketch { name: String, vector: SparseVector, algo: Option<String> },
     /// Sketch a dense row — router may batch it onto the accelerator
     /// (Direct family).
     SketchDense { name: String, weights: Vec<f64> },
@@ -75,11 +80,17 @@ fn vector_from_json(v: &Value) -> anyhow::Result<SparseVector> {
 impl Request {
     pub fn to_json(&self) -> Value {
         match self {
-            Request::Sketch { name, vector } => Value::obj(vec![
-                ("op", Value::str("sketch")),
-                ("name", Value::str(name.clone())),
-                ("vector", vector_to_json(vector)),
-            ]),
+            Request::Sketch { name, vector, algo } => {
+                let mut fields = vec![
+                    ("op", Value::str("sketch")),
+                    ("name", Value::str(name.clone())),
+                    ("vector", vector_to_json(vector)),
+                ];
+                if let Some(a) = algo {
+                    fields.push(("algo", Value::str(a.clone())));
+                }
+                Value::obj(fields)
+            }
             Request::SketchDense { name, weights } => Value::obj(vec![
                 ("op", Value::str("sketch_dense")),
                 ("name", Value::str(name.clone())),
@@ -145,6 +156,14 @@ impl Request {
             "sketch" => Request::Sketch {
                 name: v.req_str("name")?.to_string(),
                 vector: vector_from_json(v.req("vector")?)?,
+                algo: match v.get("algo") {
+                    None => None,
+                    Some(a) => Some(
+                        a.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("field 'algo' not a string"))?
+                            .to_string(),
+                    ),
+                },
             },
             "sketch_dense" => Request::SketchDense {
                 name: v.req_str("name")?.to_string(),
@@ -352,7 +371,12 @@ mod tests {
     #[test]
     fn all_requests_roundtrip() {
         let v = SparseVector::new(vec![1, 5], vec![0.5, 2.0]);
-        roundtrip_req(Request::Sketch { name: "doc1".into(), vector: v.clone() });
+        roundtrip_req(Request::Sketch { name: "doc1".into(), vector: v.clone(), algo: None });
+        roundtrip_req(Request::Sketch {
+            name: "doc1".into(),
+            vector: v.clone(),
+            algo: Some("pminhash".into()),
+        });
         roundtrip_req(Request::SketchDense { name: "d".into(), weights: vec![0.0, 1.5] });
         roundtrip_req(Request::GetSketch { name: "doc1".into() });
         roundtrip_req(Request::Push { stream: "s".into(), items: vec![(3, 0.5), (9, 1.0)] });
@@ -384,5 +408,30 @@ mod tests {
         assert!(decode_request(r#"{"op":"explode"}"#).is_err());
         assert!(decode_request("not json").is_err());
         assert!(decode_request(r#"{"op":"sketch"}"#).is_err()); // missing fields
+    }
+
+    #[test]
+    fn sketch_algo_is_optional_but_must_be_a_string() {
+        let no_algo = decode_request(
+            r#"{"op":"sketch","name":"d","vector":{"ids":[1],"weights":[1]}}"#,
+        )
+        .unwrap();
+        assert!(matches!(no_algo, Request::Sketch { algo: None, .. }));
+        let with = decode_request(
+            r#"{"op":"sketch","name":"d","vector":{"ids":[1],"weights":[1]},"algo":"icws"}"#,
+        )
+        .unwrap();
+        let Request::Sketch { algo, .. } = with else { panic!("expected sketch") };
+        assert_eq!(algo.as_deref(), Some("icws"));
+        // Decode does NOT validate the name — the service resolves it via
+        // the engine registry and answers with an error response.
+        assert!(decode_request(
+            r#"{"op":"sketch","name":"d","vector":{"ids":[],"weights":[]},"algo":"nope"}"#
+        )
+        .is_ok());
+        assert!(decode_request(
+            r#"{"op":"sketch","name":"d","vector":{"ids":[],"weights":[]},"algo":7}"#
+        )
+        .is_err());
     }
 }

@@ -7,17 +7,24 @@
 //! buckets accept and (b) a density heuristic for sparse inputs that
 //! happen to be dense-representable.
 
-use crate::sketch::SparseVector;
+use crate::sketch::{AlgorithmId, SparseVector};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Path {
     /// CPU FastGM (Ordered family): the paper's algorithm, one thread.
     CpuFastGm,
-    /// CPU FastGM fanned out over weight-balanced shards and merged
-    /// (Ordered family, bit-identical to [`Path::CpuFastGm`], §2.3).
-    ShardedCpu,
     /// Dense accelerator via the batcher (Direct family).
     Accelerator,
+}
+
+/// Execution plan for a `sketch` request: which engine-registry algorithm
+/// runs it, and whether the FastGM shard team is engaged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchPlan {
+    /// Run the named registry algorithm single-threaded.
+    Engine(AlgorithmId),
+    /// FastGM over the §2.3 shard team (bit-identical to plain FastGM).
+    ShardedFastGm,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -53,13 +60,18 @@ impl Router {
         Router { cfg }
     }
 
-    /// Route an Ordered-family `sketch` request: the only choice is how
-    /// many threads run FastGM (the family discipline pins the algorithm).
-    pub fn route_sketch(&self, n_plus: usize) -> Path {
-        if self.cfg.shards > 1 && n_plus >= self.cfg.shard_min_nplus {
-            Path::ShardedCpu
+    /// Plan a `sketch` request for a registry algorithm. Only plain FastGM
+    /// is upgraded to the shard team (sharding is its §2.3 property; an
+    /// explicitly requested `sharded` algo is already parallel, and every
+    /// other algorithm runs as asked).
+    pub fn plan_sketch(&self, algo: AlgorithmId, n_plus: usize) -> SketchPlan {
+        if algo == AlgorithmId::FastGm
+            && self.cfg.shards > 1
+            && n_plus >= self.cfg.shard_min_nplus
+        {
+            SketchPlan::ShardedFastGm
         } else {
-            Path::CpuFastGm
+            SketchPlan::Engine(algo)
         }
     }
 
@@ -121,23 +133,51 @@ mod tests {
     }
 
     #[test]
-    fn sketch_routes_by_shard_threshold() {
+    fn sketch_plans_by_shard_threshold() {
         let r = Router::new(RouterConfig {
             shards: 4,
             shard_min_nplus: 1000,
             ..RouterConfig::default()
         });
-        assert_eq!(r.route_sketch(10), Path::CpuFastGm);
-        assert_eq!(r.route_sketch(999), Path::CpuFastGm);
-        assert_eq!(r.route_sketch(1000), Path::ShardedCpu);
-        assert_eq!(r.route_sketch(1_000_000), Path::ShardedCpu);
+        let single = SketchPlan::Engine(AlgorithmId::FastGm);
+        assert_eq!(r.plan_sketch(AlgorithmId::FastGm, 10), single);
+        assert_eq!(r.plan_sketch(AlgorithmId::FastGm, 999), single);
+        assert_eq!(r.plan_sketch(AlgorithmId::FastGm, 1000), SketchPlan::ShardedFastGm);
+        assert_eq!(
+            r.plan_sketch(AlgorithmId::FastGm, 1_000_000),
+            SketchPlan::ShardedFastGm
+        );
         // shards == 1 disables the parallel path regardless of size.
-        let single = Router::new(RouterConfig {
+        let one = Router::new(RouterConfig {
             shards: 1,
             shard_min_nplus: 0,
             ..RouterConfig::default()
         });
-        assert_eq!(single.route_sketch(1_000_000), Path::CpuFastGm);
+        assert_eq!(one.plan_sketch(AlgorithmId::FastGm, 1_000_000), single);
+    }
+
+    #[test]
+    fn plan_upgrades_only_fastgm_to_the_shard_team() {
+        let r = Router::new(RouterConfig {
+            shards: 4,
+            shard_min_nplus: 100,
+            ..RouterConfig::default()
+        });
+        assert_eq!(
+            r.plan_sketch(AlgorithmId::FastGm, 1000),
+            SketchPlan::ShardedFastGm
+        );
+        assert_eq!(
+            r.plan_sketch(AlgorithmId::FastGm, 99),
+            SketchPlan::Engine(AlgorithmId::FastGm)
+        );
+        // Every other algorithm runs exactly as requested, any size.
+        for algo in AlgorithmId::ALL {
+            if algo == AlgorithmId::FastGm {
+                continue;
+            }
+            assert_eq!(r.plan_sketch(algo, 1_000_000), SketchPlan::Engine(algo));
+        }
     }
 
     #[test]

@@ -120,7 +120,7 @@ mod tests {
         let mut client = Client::connect(&server.addr.to_string()).unwrap();
         let v = SparseVector::new(vec![1, 2, 3], vec![1.0, 2.0, 0.5]);
         let resp = client
-            .call(&Request::Sketch { name: "doc".into(), vector: v.clone() })
+            .call(&Request::Sketch { name: "doc".into(), vector: v.clone(), algo: None })
             .unwrap();
         assert!(matches!(resp, Response::Sketch { .. }));
         let resp = client

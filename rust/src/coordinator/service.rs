@@ -15,14 +15,13 @@ use super::merger::merge_tree;
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
 use super::registry::Registry;
-use super::router::{Path, Router, RouterConfig};
-use super::worker::WorkerPool;
+use super::router::{Router, RouterConfig, SketchPlan};
+use super::worker::{WorkerContext, WorkerPool};
 use crate::estimate::cardinality::{estimate_cardinality, estimate_weighted_jaccard};
 use crate::estimate::jaccard::estimate_jp;
 use crate::lsh::{LshIndex, LshParams};
-use crate::sketch::fastgm::FastGm;
-use crate::sketch::sharded::ShardedSketcher;
-use crate::sketch::{GumbelMaxSketch, Sketcher, SparseVector};
+use crate::sketch::engine::{self, EngineParams};
+use crate::sketch::{AlgorithmId, GumbelMaxSketch, Sketcher, SparseVector};
 use crate::util::config::Config;
 use crate::util::hash::token_id;
 use std::collections::HashMap;
@@ -48,6 +47,9 @@ pub struct CoordinatorConfig {
     pub shards: usize,
     /// Smallest n⁺ routed to the shard team.
     pub shard_min_nplus: usize,
+    /// Default engine-registry algorithm for `sketch` requests that carry
+    /// no `algo` field (config key `sketch.algo`).
+    pub algo: String,
 }
 
 impl Default for CoordinatorConfig {
@@ -64,6 +66,7 @@ impl Default for CoordinatorConfig {
             lsh_threshold: 0.5,
             shards: 4,
             shard_min_nplus: 4096,
+            algo: "fastgm".to_string(),
         }
     }
 }
@@ -93,6 +96,7 @@ impl CoordinatorConfig {
             lsh_threshold: cfg.f64("lsh.threshold", d.lsh_threshold),
             shards: cfg.usize("sketch.shards", d.shards),
             shard_min_nplus: cfg.usize("sketch.shard_min_nplus", d.shard_min_nplus),
+            algo: cfg.str("sketch.algo", &d.algo),
         }
     }
 }
@@ -101,13 +105,21 @@ struct Inner {
     cfg: CoordinatorConfig,
     registry: Registry,
     metrics: Metrics,
-    fastgm: FastGm,
-    sharded: ShardedSketcher,
     router: Router,
     batcher: DenseBatcher,
     lsh: RwLock<LshIndex>,
     lsh_names: RwLock<HashMap<u64, String>>,
     accel_on: bool,
+    /// Resolved `cfg.algo` (validated at construction time).
+    default_algo: AlgorithmId,
+    /// Engine-registry construction parameters shared by all algorithms.
+    engine_params: EngineParams,
+    /// Registry sketchers, shared across workers (stateless; all
+    /// per-request state lives in the per-worker scratch). The ONLY
+    /// construction path for sketchers — pre-seeded with the hot entries,
+    /// lazily extended per requested `algo` — so (k, seed, shards) can
+    /// never diverge between the default path and per-request overrides.
+    engines: RwLock<HashMap<AlgorithmId, Arc<dyn Sketcher>>>,
 }
 
 pub struct Coordinator {
@@ -150,19 +162,30 @@ impl Coordinator {
             },
             None => (None, 0),
         };
+        // A misconfigured default algorithm fails loudly at startup instead
+        // of per request (checked before any thread is spawned).
+        let default_algo = AlgorithmId::from_name(&cfg.algo)?;
         let accel_on = accel_dir.is_some();
         let batcher = DenseBatcher::new(
             BatcherConfig {
                 max_batch: cfg.batch_max,
                 deadline: cfg.batch_deadline,
                 k: cfg.k,
-                seed: cfg.seed as u32,
+                seed: cfg.seed,
             },
             accel_dir,
         );
+        let engine_params =
+            EngineParams::new(cfg.k, cfg.seed).with_shards(cfg.shards.max(1));
+        // Pre-seed the hot registry entries (default algo + both routed
+        // FastGM paths) so steady-state requests never take the write lock.
+        let mut engines: HashMap<AlgorithmId, Arc<dyn Sketcher>> = HashMap::new();
+        for id in [default_algo, AlgorithmId::FastGm, AlgorithmId::Sharded] {
+            engines
+                .entry(id)
+                .or_insert_with(|| Arc::from(engine::build(id, engine_params)));
+        }
         let inner = Arc::new(Inner {
-            fastgm: FastGm::new(cfg.k, cfg.seed),
-            sharded: ShardedSketcher::new(cfg.k, cfg.seed, cfg.shards.max(1)),
             router: Router::new(RouterConfig {
                 accel_max_len,
                 min_density: 0.25,
@@ -175,11 +198,14 @@ impl Coordinator {
             lsh: RwLock::new(LshIndex::new(LshParams::for_threshold(cfg.k, cfg.lsh_threshold))),
             lsh_names: RwLock::new(HashMap::new()),
             accel_on,
+            default_algo,
+            engine_params,
+            engines: RwLock::new(engines),
             cfg: cfg.clone(),
         });
         let handler = {
             let inner = inner.clone();
-            Arc::new(move |req: Request| inner.handle(req))
+            Arc::new(move |req: Request, ctx: &mut WorkerContext| inner.handle(req, ctx))
         };
         let policy = if cfg.shed { Policy::Shed } else { Policy::Block };
         let pool = WorkerPool::new(cfg.workers, cfg.queue_capacity, policy, handler);
@@ -190,6 +216,9 @@ impl Coordinator {
     pub fn call(&self, req: Request) -> Response {
         let op = req.op();
         let t0 = Instant::now();
+        if matches!(req, Request::Metrics) {
+            self.observe_queue_depth();
+        }
         let resp = self.pool.call(req);
         self.inner.metrics.observe(op, t0.elapsed().as_secs_f64());
         resp
@@ -198,7 +227,24 @@ impl Coordinator {
     /// Async submit (load generators).
     pub fn submit(&self, req: Request) -> std::sync::mpsc::Receiver<Response> {
         self.inner.metrics.incr(&format!("submit.{}", req.op()));
+        if matches!(req, Request::Metrics) {
+            self.observe_queue_depth();
+        }
         self.pool.submit(req)
+    }
+
+    /// Refresh the `queue_depth` gauge from the per-worker queue counters.
+    /// The metrics snapshot is the gauge's only consumer, so it is sampled
+    /// exactly when a `Request::Metrics` is admitted (the depth the report
+    /// will describe) instead of locking the gauge map on every request —
+    /// the sketch hot path stays free of metrics-side mutexes.
+    fn observe_queue_depth(&self) {
+        self.inner.metrics.gauge_set("queue_depth", self.pool.queue_depth() as f64);
+    }
+
+    /// Current depth across the per-worker queues.
+    pub fn queue_depth(&self) -> u64 {
+        self.pool.queue_depth()
     }
 
     pub fn accel_enabled(&self) -> bool {
@@ -224,24 +270,73 @@ impl Coordinator {
 }
 
 impl Inner {
-    /// Ordered-family sparse sketch, routed single-threaded or through the
-    /// §2.3 shard team — identical output either way (the router only
-    /// decides parallelism, never the algorithm family).
-    fn sketch_sparse(&self, v: &SparseVector) -> GumbelMaxSketch {
-        match self.router.route_sketch(v.n_plus()) {
-            Path::ShardedCpu => {
-                self.metrics.incr("path.sketch.sharded");
-                self.sharded.sketch(v)
-            }
-            _ => {
-                self.metrics.incr("path.sketch.single");
-                self.fastgm.sketch(v)
-            }
+    /// The shared registry sketcher for `id`, built on first use.
+    fn engine(&self, id: AlgorithmId) -> Arc<dyn Sketcher> {
+        if let Some(e) = self.engines.read().unwrap().get(&id) {
+            return e.clone();
         }
+        let built: Arc<dyn Sketcher> = Arc::from(engine::build(id, self.engine_params));
+        self.engines.write().unwrap().entry(id).or_insert(built).clone()
     }
 
-    fn handle(&self, req: Request) -> Response {
-        match self.handle_inner(req) {
+    /// Sparse sketch through the engine registry. `algo` is the request's
+    /// override (validated here — unknown names become error responses);
+    /// `None` means the configured default. Plain FastGM may be upgraded to
+    /// the §2.3 shard team by the router — identical output either way (the
+    /// router only decides parallelism, never the algorithm). The worker's
+    /// scratch is reused across requests; `sketch_into` is bit-identical to
+    /// a fresh sketch, so reuse is invisible to callers.
+    fn sketch_sparse(
+        &self,
+        v: &SparseVector,
+        algo: Option<&str>,
+        ctx: &mut WorkerContext,
+    ) -> anyhow::Result<GumbelMaxSketch> {
+        let id = match algo {
+            Some(name) => AlgorithmId::from_name(name)?,
+            None => self.default_algo,
+        };
+        if ctx.scratch.begin_use() {
+            self.metrics.incr("scratch.reuse");
+        } else {
+            self.metrics.incr("scratch.alloc");
+        }
+        let mut out = GumbelMaxSketch::empty(id.family(), self.cfg.seed, self.cfg.k);
+        match self.router.plan_sketch(id, v.n_plus()) {
+            SketchPlan::ShardedFastGm => {
+                self.metrics.incr("path.sketch.sharded");
+                self.engine(AlgorithmId::Sharded).sketch_into(v, &mut ctx.scratch, &mut out);
+            }
+            SketchPlan::Engine(AlgorithmId::FastGm) => {
+                self.metrics.incr("path.sketch.single");
+                self.engine(AlgorithmId::FastGm).sketch_into(v, &mut ctx.scratch, &mut out);
+            }
+            SketchPlan::Engine(other) => {
+                self.metrics.incr(&format!("path.sketch.engine.{}", other.name()));
+                self.engine(other).sketch_into(v, &mut ctx.scratch, &mut out);
+            }
+        }
+        Ok(out)
+    }
+
+    /// LSH scores candidates with `estimate_jp`, which is only defined for
+    /// EXP-register families — with a `sketch.algo` default of icws /
+    /// bagminhash / minhash, both `lsh_insert` and `lsh_query` refuse up
+    /// front with one clear message instead of erroring candidate-by-
+    /// candidate mid-query.
+    fn ensure_lsh_capable(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.default_algo.family().has_exponential_registers(),
+            "LSH requires an EXP-register default algo (ordered/direct families); \
+             configured sketch.algo '{}' is family '{}'",
+            self.default_algo.name(),
+            self.default_algo.family().name(),
+        );
+        Ok(())
+    }
+
+    fn handle(&self, req: Request, ctx: &mut WorkerContext) -> Response {
+        match self.handle_inner(req, ctx) {
             Ok(resp) => resp,
             Err(e) => {
                 self.metrics.incr("errors");
@@ -250,7 +345,7 @@ impl Inner {
         }
     }
 
-    fn handle_inner(&self, req: Request) -> anyhow::Result<Response> {
+    fn handle_inner(&self, req: Request, ctx: &mut WorkerContext) -> anyhow::Result<Response> {
         Ok(match req {
             Request::Ping => Response::Pong,
             Request::Metrics => {
@@ -259,6 +354,7 @@ impl Inner {
                 snap.set("streams", crate::util::json::Value::num(self.registry.stream_count() as f64));
                 snap.set("accel", crate::util::json::Value::Bool(self.accel_on));
                 snap.set("shards", crate::util::json::Value::num(self.cfg.shards as f64));
+                snap.set("algo", crate::util::json::Value::str(self.default_algo.name()));
                 snap.set(
                     "batch_flushes",
                     crate::util::json::Value::num(
@@ -267,8 +363,8 @@ impl Inner {
                 );
                 Response::MetricsDump { snapshot: snap }
             }
-            Request::Sketch { name, vector } => {
-                let sk = self.sketch_sparse(&vector);
+            Request::Sketch { name, vector, algo } => {
+                let sk = self.sketch_sparse(&vector, algo.as_deref(), ctx)?;
                 self.registry.put_sketch(&name, sk.clone());
                 Response::Sketch { name, sketch: sk }
             }
@@ -342,13 +438,31 @@ impl Inner {
                     .registry
                     .get_sketch(&name)
                     .ok_or_else(|| anyhow::anyhow!("no sketch named '{name}'"))?;
+                // LshQuery always sketches the probe with the *default*
+                // algo, so an index entry from any other family/seed/k can
+                // never legitimately match — reject at insert instead of
+                // silently never returning it (or erroring mid-query).
+                let want = self.default_algo.family();
+                self.ensure_lsh_capable()?;
+                anyhow::ensure!(
+                    sk.family == want && sk.seed == self.cfg.seed && sk.k() == self.cfg.k,
+                    "LSH index accepts only default-algo sketches \
+                     (family '{}', seed {}, k {}); '{name}' is family '{}', seed {}, k {}",
+                    want.name(),
+                    self.cfg.seed,
+                    self.cfg.k,
+                    sk.family.name(),
+                    sk.seed,
+                    sk.k(),
+                );
                 let key = token_id(&name);
                 self.lsh.write().unwrap().insert(key, sk);
                 self.lsh_names.write().unwrap().insert(key, name.clone());
                 Response::Ack { info: format!("indexed '{name}'") }
             }
             Request::LshQuery { vector, limit } => {
-                let query = self.sketch_sparse(&vector);
+                self.ensure_lsh_capable()?;
+                let query = self.sketch_sparse(&vector, None, ctx)?;
                 let hits = self.lsh.read().unwrap().query(&query, limit)?;
                 let names = self.lsh_names.read().unwrap();
                 Response::TopK {
@@ -393,11 +507,11 @@ mod tests {
         let (u, v) = vecs();
         let truth = crate::estimate::jaccard::probability_jaccard(&u, &v);
         assert!(matches!(
-            c.call(Request::Sketch { name: "u".into(), vector: u }),
+            c.call(Request::Sketch { name: "u".into(), vector: u, algo: None }),
             Response::Sketch { .. }
         ));
         assert!(matches!(
-            c.call(Request::Sketch { name: "v".into(), vector: v }),
+            c.call(Request::Sketch { name: "v".into(), vector: v, algo: None }),
             Response::Sketch { .. }
         ));
         let Response::Estimate { value } = c.call(Request::Jaccard { a: "u".into(), b: "v".into() })
@@ -434,7 +548,7 @@ mod tests {
         assert_eq!(sketch.family, crate::sketch::Family::Direct);
         // Cross-family comparison must error.
         let (u, _) = vecs();
-        c.call(Request::Sketch { name: "u".into(), vector: u });
+        c.call(Request::Sketch { name: "u".into(), vector: u, algo: None });
         let resp = c.call(Request::Jaccard { a: "u".into(), b: "d".into() });
         assert!(matches!(resp, Response::Error { .. }), "got {resp:?}");
         c.shutdown();
@@ -444,8 +558,8 @@ mod tests {
     fn merge_and_lsh_flow() {
         let c = coord();
         let (u, v) = vecs();
-        c.call(Request::Sketch { name: "u".into(), vector: u.clone() });
-        c.call(Request::Sketch { name: "v".into(), vector: v });
+        c.call(Request::Sketch { name: "u".into(), vector: u.clone(), algo: None });
+        c.call(Request::Sketch { name: "v".into(), vector: v, algo: None });
         let Response::Sketch { sketch: merged, .. } =
             c.call(Request::Merge { names: vec!["u".into(), "v".into()], out: "m".into() })
         else {
@@ -478,7 +592,7 @@ mod tests {
             (0..500).map(|i| 0.1 + (i % 13) as f64 * 0.5).collect(),
         );
         let Response::Sketch { sketch, .. } =
-            c.call(Request::Sketch { name: "big".into(), vector: v.clone() })
+            c.call(Request::Sketch { name: "big".into(), vector: v.clone(), algo: None })
         else {
             panic!("expected sketch")
         };
@@ -495,6 +609,95 @@ mod tests {
             .and_then(|v| v.as_f64())
             .unwrap_or(0.0);
         assert!(sharded >= 1.0, "sharded path not taken: {snapshot}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn algo_field_routes_through_the_engine_registry() {
+        let c = coord();
+        let (u, _) = vecs();
+        // Every registered algorithm is reachable per request.
+        for id in AlgorithmId::ALL {
+            let Response::Sketch { sketch, .. } = c.call(Request::Sketch {
+                name: format!("u-{}", id.name()),
+                vector: u.clone(),
+                algo: Some(id.name().to_string()),
+            }) else {
+                panic!("algo {} not served", id.name())
+            };
+            assert_eq!(sketch.family, id.family(), "family for {}", id.name());
+            assert_eq!(sketch.k(), 128);
+            // Identical to a direct registry build at the coordinator's
+            // (k, seed) — per-worker scratch reuse must be invisible.
+            let direct = engine::build(id, EngineParams::new(128, 42).with_shards(4)).sketch(&u);
+            assert_eq!(sketch, direct, "engine {} diverged through the service", id.name());
+        }
+        // Unknown names become error responses listing the registry.
+        let resp = c.call(Request::Sketch {
+            name: "x".into(),
+            vector: u,
+            algo: Some("quantum".into()),
+        });
+        let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+        assert!(message.contains("unknown sketch algorithm 'quantum'"), "{message}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn configured_default_algo_is_validated_and_used() {
+        let c = Coordinator::new(CoordinatorConfig {
+            k: 64,
+            workers: 1,
+            algo: "pminhash".into(),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let (u, _) = vecs();
+        let Response::Sketch { sketch, .. } =
+            c.call(Request::Sketch { name: "u".into(), vector: u, algo: None })
+        else {
+            panic!("expected sketch")
+        };
+        assert_eq!(sketch.family, crate::sketch::Family::Direct);
+        c.shutdown();
+        // A bad default fails at construction, not per request.
+        assert!(Coordinator::new(CoordinatorConfig {
+            algo: "warpdrive".into(),
+            ..CoordinatorConfig::default()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn scratch_and_queue_metrics_are_reported() {
+        let c = Coordinator::new(CoordinatorConfig {
+            k: 32,
+            workers: 1, // one worker → second sketch must reuse its scratch
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let (u, v) = vecs();
+        c.call(Request::Sketch { name: "u".into(), vector: u, algo: None });
+        c.call(Request::Sketch { name: "v".into(), vector: v, algo: None });
+        let Response::MetricsDump { snapshot } = c.call(Request::Metrics) else {
+            panic!("expected metrics")
+        };
+        let counter = |name: &str| {
+            snapshot
+                .get("counters")
+                .and_then(|c| c.get(name))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        assert_eq!(counter("scratch.alloc"), 1.0, "{snapshot}");
+        assert!(counter("scratch.reuse") >= 1.0, "{snapshot}");
+        // queue_depth gauge present (0 once everything drained).
+        let depth = snapshot
+            .get("gauges")
+            .and_then(|g| g.get("queue_depth"))
+            .and_then(|v| v.as_f64());
+        assert!(depth.is_some(), "queue_depth gauge missing: {snapshot}");
+        assert_eq!(c.queue_depth(), 0);
         c.shutdown();
     }
 

@@ -1,12 +1,16 @@
-//! CPU worker pool: N threads draining the bounded admission queue and
-//! running the coordinator's request handler. Replies travel over one-shot
-//! mpsc channels so callers can be synchronous (server connections) or
+//! CPU worker pool: N threads, each draining its **own** bounded queue
+//! (shallowest-queue dispatch, see [`super::backpressure`]) and running the
+//! coordinator's request handler with a per-worker [`WorkerContext`] —
+//! most importantly a long-lived [`SketchScratch`] so the sketch hot path
+//! allocates nothing per request. Replies travel over one-shot mpsc
+//! channels so callers can be synchronous (server connections) or
 //! fire-and-forget (benchmarks).
 
-use super::backpressure::{bounded, Admission, Policy};
+use super::backpressure::{bounded_split, Admission, Policy};
 use super::protocol::{Request, Response};
+use crate::sketch::SketchScratch;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// A queued unit of work.
@@ -15,37 +19,57 @@ pub struct Job {
     pub reply: Sender<Response>,
 }
 
+/// Per-worker state threaded into every handler invocation.
+pub struct WorkerContext {
+    pub worker_id: usize,
+    /// Reusable sketch arena — the zero-allocation engine's working memory.
+    pub scratch: SketchScratch,
+    /// Jobs completed by this worker.
+    pub jobs_done: u64,
+}
+
+impl WorkerContext {
+    pub fn new(worker_id: usize) -> WorkerContext {
+        WorkerContext { worker_id, scratch: SketchScratch::new(), jobs_done: 0 }
+    }
+}
+
+/// Request handler: runs on a worker thread with that worker's context.
+pub type Handler = Arc<dyn Fn(Request, &mut WorkerContext) -> Response + Send + Sync>;
+
 pub struct WorkerPool {
     admission: Admission<Job>,
     handles: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    /// Spawn `workers` threads, each calling `handler` per job.
+    /// Spawn `workers` threads, each owning one queue slice of
+    /// `queue_capacity` and one [`WorkerContext`]. The configured capacity
+    /// is split across the worker queues (remainder distributed; every
+    /// worker keeps at least one slot, so the effective total is
+    /// `max(queue_capacity, workers)`).
     pub fn new(
         workers: usize,
         queue_capacity: usize,
         policy: Policy,
-        handler: Arc<dyn Fn(Request) -> Response + Send + Sync>,
+        handler: Handler,
     ) -> WorkerPool {
         assert!(workers >= 1);
-        let (admission, rx) = bounded::<Job>(queue_capacity, policy);
-        let rx = Arc::new(Mutex::new(rx));
+        let (admission, queues) = bounded_split::<Job>(workers, queue_capacity, policy);
         let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let rx = rx.clone();
+        for (w, queue) in queues.into_iter().enumerate() {
             let handler = handler.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("fastgm-worker-{w}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        let Ok(job) = job else { return };
-                        let resp = handler(job.request);
-                        let _ = job.reply.send(resp); // caller may have gone
+                    .spawn(move || {
+                        let mut ctx = WorkerContext::new(w);
+                        loop {
+                            let Ok(job) = queue.recv() else { return };
+                            let resp = handler(job.request, &mut ctx);
+                            ctx.jobs_done += 1;
+                            let _ = job.reply.send(resp); // caller may have gone
+                        }
                     })
                     .expect("spawn worker"),
             );
@@ -79,7 +103,17 @@ impl WorkerPool {
         self.admission.shed_count()
     }
 
-    /// Drop the queue and join all workers.
+    /// Jobs currently enqueued across all worker queues (the gauge the
+    /// metrics snapshot reports).
+    pub fn queue_depth(&self) -> u64 {
+        self.admission.queue_depth()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Drop the queues and join all workers.
     pub fn shutdown(self) {
         drop(self.admission);
         for h in self.handles {
@@ -97,7 +131,9 @@ mod tests {
             workers,
             cap,
             policy,
-            Arc::new(|req: Request| Response::Ack { info: req.op().to_string() }),
+            Arc::new(|req: Request, _ctx: &mut WorkerContext| Response::Ack {
+                info: req.op().to_string(),
+            }),
         )
     }
 
@@ -128,7 +164,7 @@ mod tests {
             1,
             1,
             Policy::Shed,
-            Arc::new(|_req| {
+            Arc::new(|_req, _ctx: &mut WorkerContext| {
                 std::thread::sleep(std::time::Duration::from_millis(30));
                 Response::Pong
             }),
@@ -145,6 +181,37 @@ mod tests {
         }
         assert!(shed_seen, "expected at least one shed response");
         assert!(pool.shed_count() > 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn per_worker_context_persists_across_jobs() {
+        // The context's job counter must be per-thread and monotone: with
+        // one worker, N jobs → jobs_done observed as 0..N-1 in order.
+        let pool = WorkerPool::new(
+            1,
+            16,
+            Policy::Block,
+            Arc::new(|_req, ctx: &mut WorkerContext| Response::Ack {
+                info: format!("{}:{}", ctx.worker_id, ctx.jobs_done),
+            }),
+        );
+        for i in 0..5 {
+            let r = pool.call(Request::Ping);
+            assert_eq!(r, Response::Ack { info: format!("0:{i}") });
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn queue_depth_drains_to_zero() {
+        let pool = echo_pool(3, 12, Policy::Block);
+        let rxs: Vec<_> = (0..12).map(|_| pool.submit(Request::Ping)).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        // All replies received → every job dequeued.
+        assert_eq!(pool.queue_depth(), 0);
         pool.shutdown();
     }
 

@@ -27,8 +27,19 @@ pub fn cardinality_rel_std(k: usize) -> f64 {
 }
 
 /// Estimated weighted cardinality of the union of the underlying sets.
+/// Errors unless the family's `y` registers are `EXP(Σw)` races (Ordered /
+/// Direct) — the precondition of the whole algebra; ICWS, BagMinHash and
+/// MinHash registers would yield meaningless numbers. This gate covers
+/// every derived operation below (intersection, difference, `J_W`).
 pub fn estimate_union(sketches: &[&GumbelMaxSketch]) -> Result<f64, MergeError> {
     let merged = GumbelMaxSketch::merge_all(sketches.iter().copied())?;
+    if !merged.family.has_exponential_registers() {
+        return Err(MergeError::EstimatorUnsupported {
+            estimator: "cardinality",
+            family: merged.family.name(),
+            hint: "cardinality algebra needs EXP-register families (ordered/direct)",
+        });
+    }
     Ok(estimate_cardinality(&merged))
 }
 
@@ -87,7 +98,30 @@ mod tests {
     use crate::util::rng::SplitMix64;
     use crate::util::stats::OnlineStats;
 
-    fn lemiesz_of(k: usize, seed: u32, items: &[(u64, f64)]) -> GumbelMaxSketch {
+    /// The algebra assumes EXP-register races; ICWS/BagMinHash/MinHash
+    /// registers would silently produce nonsense, so the gate in
+    /// `estimate_union` must fail every derived operation loudly.
+    #[test]
+    fn cardinality_algebra_rejects_non_exponential_families() {
+        use crate::sketch::engine::{build, AlgorithmId, EngineParams};
+        use crate::sketch::{Sketcher, SparseVector};
+        let v = SparseVector::new(vec![1, 2], vec![1.0, 2.0]);
+        for id in [AlgorithmId::Icws, AlgorithmId::BagMinHash, AlgorithmId::MinHash] {
+            let sk = build(id, EngineParams::new(16, 1)).sketch(&v);
+            for err in [
+                estimate_union(&[&sk]).unwrap_err(),
+                estimate_intersection(&sk, &sk).unwrap_err(),
+                estimate_weighted_jaccard(&sk, &sk).unwrap_err(),
+            ] {
+                assert!(
+                    matches!(err, MergeError::EstimatorUnsupported { .. }),
+                    "{id:?}: {err}"
+                );
+            }
+        }
+    }
+
+    fn lemiesz_of(k: usize, seed: u64, items: &[(u64, f64)]) -> GumbelMaxSketch {
         let mut s = LemieszSketch::new(k, seed);
         for &(id, w) in items {
             s.push(id, w);
@@ -101,7 +135,7 @@ mod tests {
         let truth: f64 = items.iter().map(|(_, w)| w).sum();
         let k = 128;
         let mut stats = OnlineStats::new();
-        for seed in 0..150u32 {
+        for seed in 0..150u64 {
             stats.push(estimate_cardinality(&lemiesz_of(k, seed, &items)));
         }
         let rel_err = (stats.mean() - truth).abs() / truth;
@@ -138,7 +172,7 @@ mod tests {
         let mut i_est = OnlineStats::new();
         let mut d_est = OnlineStats::new();
         let mut j_est = OnlineStats::new();
-        for seed in 0..60u32 {
+        for seed in 0..60u64 {
             let sa = lemiesz_of(k, seed, &a_items);
             let sb = lemiesz_of(k, seed, &b_items);
             u_est.push(estimate_union(&[&sa, &sb]).unwrap());
@@ -157,7 +191,7 @@ mod tests {
         // A = 0..300, B = 100..300, C = 200..400 → A \ (B∪C) = 0..100.
         let k = 512;
         let mut stats = OnlineStats::new();
-        for seed in 0..60u32 {
+        for seed in 0..60u64 {
             let sa = lemiesz_of(k, seed, &(0..300).map(|i| (i, 1.0)).collect::<Vec<_>>());
             let sb = lemiesz_of(k, seed, &(100..300).map(|i| (i, 1.0)).collect::<Vec<_>>());
             let sc = lemiesz_of(k, seed, &(200..400).map(|i| (i, 1.0)).collect::<Vec<_>>());
@@ -180,7 +214,7 @@ mod tests {
         let items: Vec<(u64, f64)> = (0..200).map(|i| (i, r.next_f64() + 0.5)).collect();
         let doubled: Vec<(u64, f64)> = items.iter().map(|&(i, w)| (i, 2.0 * w)).collect();
         let mut ratio = OnlineStats::new();
-        for seed in 0..40u32 {
+        for seed in 0..40u64 {
             let a = estimate_cardinality(&lemiesz_of(256, seed, &items));
             let b = estimate_cardinality(&lemiesz_of(256, seed, &doubled));
             ratio.push(b / a);

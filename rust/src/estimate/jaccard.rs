@@ -57,12 +57,29 @@ pub fn weighted_jaccard(u: &SparseVector, v: &SparseVector) -> f64 {
 }
 
 /// Estimate `J_P` from two Gumbel-Max sketches: the fraction of ArgMax
-/// registers that agree. Errors on family/seed/length mismatch.
+/// registers that agree. Errors on family/seed/length mismatch, and on
+/// every family whose ArgMax registers are not `EXP(w)` races: for
+/// ICWS/BagMinHash the match fraction is the *biased* 0-bit estimator
+/// (their dedicated `estimate_jw` views apply), and for MinHash it is
+/// unweighted support-set resemblance, not `J_P` — returning it here would
+/// be a silently mislabeled number on weighted inputs.
 pub fn estimate_jp(
     a: &GumbelMaxSketch,
     b: &GumbelMaxSketch,
 ) -> Result<f64, MergeError> {
     a.check_compatible(b)?;
+    if !a.family.has_exponential_registers() {
+        let hint = match a.family {
+            crate::sketch::Family::Icws => "use Icws::sketch_full + IcwsSketch::estimate_jw",
+            crate::sketch::Family::Bag => "use BagMinHash::sketch_bag + BagSketch::estimate_jw",
+            _ => "minhash estimates unweighted resemblance; use MinHashSketch::resemblance",
+        };
+        return Err(MergeError::EstimatorUnsupported {
+            estimator: "J_P",
+            family: a.family.name(),
+            hint,
+        });
+    }
     let k = a.k();
     let m = (0..k)
         .filter(|&j| a.s[j] != EMPTY_REGISTER && a.s[j] == b.s[j])
@@ -152,8 +169,9 @@ mod tests {
 
         let mut ord = OnlineStats::new();
         let mut dir = OnlineStats::new();
-        for seed in 0..runs {
-            let f = FastGm::new(k, seed as u64);
+        for seed in 0..runs as u64 {
+            // Both families through the unified u64-seed Sketcher API.
+            let f = FastGm::new(k, seed);
             ord.push(estimate_jp(&f.sketch(&u), &f.sketch(&v)).unwrap());
             let p = PMinHash::new(k, seed);
             dir.push(estimate_jp(&p.sketch(&u), &p.sketch(&v)).unwrap());
@@ -174,5 +192,30 @@ mod tests {
         let b = PMinHash::new(16, 1).sketch(&v);
         assert!(matches!(estimate_jp(&a, &b), Err(MergeError::FamilyMismatch(_, _))));
         assert_eq!(a.family, Family::Ordered);
+    }
+
+    /// ICWS/BagMinHash ArgMax matching is the biased 0-bit estimator, and
+    /// MinHash matching is unweighted resemblance — the J_P estimator must
+    /// refuse all three loudly and point at the right dedicated estimator.
+    #[test]
+    fn estimator_rejects_non_race_families() {
+        use crate::sketch::engine::{build, AlgorithmId, EngineParams};
+        // Identical support, very different weights: true J_P < 1, but a
+        // MinHash match fraction would claim 1.0 — the silent bias the
+        // gate exists to prevent.
+        let v = SparseVector::new(vec![1, 2], vec![100.0, 0.01]);
+        for (id, hint) in [
+            (AlgorithmId::Icws, "estimate_jw"),
+            (AlgorithmId::BagMinHash, "estimate_jw"),
+            (AlgorithmId::MinHash, "resemblance"),
+        ] {
+            let sk = build(id, EngineParams::new(16, 1)).sketch(&v);
+            let err = estimate_jp(&sk, &sk).unwrap_err();
+            assert!(
+                matches!(err, MergeError::EstimatorUnsupported { .. }),
+                "{id:?}: {err}"
+            );
+            assert!(err.to_string().contains(hint), "{err}");
+        }
     }
 }

@@ -6,18 +6,17 @@
 
 use super::ExpOptions;
 use crate::data::synthetic::{dense_vector, WeightDist};
-use crate::sketch::bagminhash::BagMinHash;
-use crate::sketch::fastgm::FastGm;
-use crate::sketch::fastgm_c::FastGmConference;
-use crate::sketch::pminhash::PMinHash;
-use crate::sketch::{Sketcher, SparseVector};
+use crate::sketch::engine::{self, AlgorithmId, EngineParams, SketchScratch};
+use crate::sketch::{GumbelMaxSketch, Sketcher, SparseVector};
 use crate::util::bench::Suite;
 use crate::util::rng::SplitMix64;
 use crate::util::stats::{fmt_duration, Table};
 
 pub const ALGOS: &[&str] = &["fastgm", "fastgm-c", "pminhash", "bagminhash"];
 
-/// Median seconds to sketch `v` with each algorithm at length k.
+/// Median seconds to sketch `v` with each algorithm at length k. All four
+/// baselines run through the engine registry with a reused scratch — the
+/// same zero-allocation path the coordinator serves.
 pub fn time_all(
     opts: &ExpOptions,
     suite: &mut Suite,
@@ -27,34 +26,21 @@ pub fn time_all(
 ) -> Vec<(String, f64)> {
     let b = opts.bencher();
     let mut out = Vec::new();
-    let fg = FastGm::new(k, 1);
-    out.push(("fastgm".into(), {
-        let r = b.run(&format!("{label}/fastgm"), || fg.sketch(v));
-        let m = r.median;
-        suite.record(r);
-        m
-    }));
-    let fgc = FastGmConference::new(k, 1);
-    out.push(("fastgm-c".into(), {
-        let r = b.run(&format!("{label}/fastgm-c"), || fgc.sketch(v));
-        let m = r.median;
-        suite.record(r);
-        m
-    }));
-    let pm = PMinHash::new(k, 1);
-    out.push(("pminhash".into(), {
-        let r = b.run(&format!("{label}/pminhash"), || pm.sketch(v));
-        let m = r.median;
-        suite.record(r);
-        m
-    }));
-    let bm = BagMinHash::new(k, 1);
-    out.push(("bagminhash".into(), {
-        let r = b.run(&format!("{label}/bagminhash"), || bm.sketch(v));
-        let m = r.median;
-        suite.record(r);
-        m
-    }));
+    let mut scratch = SketchScratch::new();
+    for name in ALGOS {
+        let id = AlgorithmId::from_name(name).expect("fig4 algo registered");
+        let s = engine::build(id, EngineParams::new(k, 1));
+        let mut sk = GumbelMaxSketch::empty(s.family(), s.seed(), k);
+        out.push((name.to_string(), {
+            let r = b.run(&format!("{label}/{name}"), || {
+                s.sketch_into(v, &mut scratch, &mut sk);
+                sk.y[0]
+            });
+            let m = r.median;
+            suite.record(r);
+            m
+        }));
+    }
     out
 }
 

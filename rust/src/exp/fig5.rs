@@ -4,12 +4,10 @@
 //! ~8–26× over P-MinHash on the sparse text corpora.
 
 use super::ExpOptions;
+use super::fig4::ALGOS;
 use crate::data::corpus::{Corpus, CORPORA};
-use crate::sketch::bagminhash::BagMinHash;
-use crate::sketch::fastgm::FastGm;
-use crate::sketch::fastgm_c::FastGmConference;
-use crate::sketch::pminhash::PMinHash;
-use crate::sketch::Sketcher;
+use crate::sketch::engine::{self, AlgorithmId, EngineParams, SketchScratch};
+use crate::sketch::{GumbelMaxSketch, Sketcher};
 use crate::util::stats::{fmt_duration, Table};
 use std::time::Instant;
 
@@ -20,33 +18,26 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
     let mut t = Table::new(&[
         "dataset", "k", "fastgm", "fastgm-c", "pminhash", "bagminhash", "speedup vs pminhash",
     ]);
+    let mut scratch = SketchScratch::new();
     for spec in CORPORA {
         let corpus = Corpus::new(*spec, 7);
         let vectors = corpus.vectors(vectors_per_corpus);
         for &k in &ks {
-            let fg = FastGm::new(k, 1);
-            let fgc = FastGmConference::new(k, 1);
-            let pm = PMinHash::new(k, 1);
-            let bm = BagMinHash::new(k, 1);
-            let time_per_vec = |f: &dyn Fn(&crate::sketch::SparseVector)| {
+            // Each baseline from the registry, timed through the reused
+            // scratch (the engine's zero-allocation serving path).
+            let mut times = Vec::with_capacity(ALGOS.len());
+            for name in ALGOS {
+                let id = AlgorithmId::from_name(name).expect("fig5 algo registered");
+                let s = engine::build(id, EngineParams::new(k, 1));
+                let mut sk = GumbelMaxSketch::empty(s.family(), s.seed(), k);
                 let t0 = Instant::now();
                 for v in &vectors {
-                    f(v);
+                    s.sketch_into(v, &mut scratch, &mut sk);
+                    std::hint::black_box(&sk);
                 }
-                t0.elapsed().as_secs_f64() / vectors.len() as f64
-            };
-            let t_fg = time_per_vec(&|v| {
-                fg.sketch(v);
-            });
-            let t_fgc = time_per_vec(&|v| {
-                fgc.sketch(v);
-            });
-            let t_pm = time_per_vec(&|v| {
-                pm.sketch(v);
-            });
-            let t_bm = time_per_vec(&|v| {
-                bm.sketch(v);
-            });
+                times.push(t0.elapsed().as_secs_f64() / vectors.len() as f64);
+            }
+            let (t_fg, t_fgc, t_pm, t_bm) = (times[0], times[1], times[2], times[3]);
             t.row(vec![
                 spec.name.to_string(),
                 k.to_string(),

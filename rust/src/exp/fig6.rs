@@ -41,7 +41,7 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
                 let seed = idx as u64;
                 let fg = FastGm::new(k, seed);
                 let e1 = estimate_jp(&fg.sketch(u), &fg.sketch(v)).unwrap();
-                let pm = PMinHash::new(k, seed as u32);
+                let pm = PMinHash::new(k, seed);
                 let e2 = estimate_jp(&pm.sketch(u), &pm.sketch(v)).unwrap();
                 se_f += (e1 - jp) * (e1 - jp);
                 se_p += (e2 - jp) * (e2 - jp);

@@ -31,7 +31,7 @@ pub fn run(opts: &ExpOptions) -> anyhow::Result<()> {
                 let mut se_l = 0.0;
                 for seed in 0..runs as u64 {
                     let mut f = StreamFastGm::new(k, seed);
-                    let mut l = LemieszSketch::new(k, seed as u32);
+                    let mut l = LemieszSketch::new(k, seed);
                     for &(id, w) in &stream.events {
                         f.push(id, w);
                         l.push(id, w);
@@ -73,7 +73,7 @@ mod tests {
         let mut se_l = 0.0;
         for seed in 0..runs as u64 {
             let mut f = StreamFastGm::new(k, seed);
-            let mut l = LemieszSketch::new(k, seed as u32);
+            let mut l = LemieszSketch::new(k, seed);
             for &(id, w) in &stream.events {
                 f.push(id, w);
                 l.push(id, w);

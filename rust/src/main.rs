@@ -9,6 +9,9 @@
 //! fastgm info
 //! ```
 
+// Same clippy baseline as the library crate (see rust/src/lib.rs).
+#![allow(clippy::needless_range_loop)]
+
 use fastgm::coordinator::client::Client;
 use fastgm::coordinator::protocol::{decode_request, encode_line, Request};
 use fastgm::coordinator::server::Server;
@@ -17,11 +20,8 @@ use fastgm::data::corpus::{Corpus, CORPORA};
 use fastgm::data::svmlight;
 use fastgm::data::synthetic::{dense_vector, WeightDist};
 use fastgm::exp::{self, ExpOptions};
-use fastgm::sketch::bagminhash::BagMinHash;
-use fastgm::sketch::fastgm::FastGm;
-use fastgm::sketch::fastgm_c::FastGmConference;
-use fastgm::sketch::pminhash::PMinHash;
-use fastgm::sketch::{Sketcher, SparseVector};
+use fastgm::sketch::engine::{self, EngineParams};
+use fastgm::sketch::{GumbelMaxSketch, SketchScratch, Sketcher, SparseVector};
 use fastgm::simnet::{NodeSketcher, SimNet, SimParams};
 use fastgm::util::argparse::ArgSpec;
 use fastgm::util::config::Config;
@@ -147,7 +147,7 @@ fn cmd_sketch(argv: &[String]) -> anyhow::Result<()> {
     let spec = ArgSpec::new("sketch", "sketch a dataset locally, report timing")
         .opt("dataset", "synthetic", "synthetic | corpus name | path:FILE (svmlight)")
         .opt("k", "1024", "sketch length")
-        .opt("algo", "fastgm", "fastgm | fastgm-c | pminhash | bagminhash")
+        .opt("algo", "fastgm", "any engine-registry name (fastgm | fastgm-c | sharded | stream | pminhash | lemiesz | icws | bagminhash | minhash)")
         .opt("count", "100", "number of vectors")
         .opt("seed", "1", "sketch seed");
     let args = spec.parse(argv)?;
@@ -155,33 +155,15 @@ fn cmd_sketch(argv: &[String]) -> anyhow::Result<()> {
     let seed = args.u64("seed")?;
     let vectors = load_dataset(&args.str("dataset"), args.usize("count")?)?;
     anyhow::ensure!(!vectors.is_empty(), "dataset is empty");
+    // Any registered algorithm by name, timed through the zero-allocation
+    // engine exactly like the coordinator's hot path runs it.
+    let sketcher = engine::build_named(&args.str("algo"), EngineParams::new(k, seed))?;
+    let mut scratch = SketchScratch::new();
+    let mut out = GumbelMaxSketch::empty(sketcher.family(), sketcher.seed(), k);
     let t0 = std::time::Instant::now();
-    match args.str("algo").as_str() {
-        "fastgm" => {
-            let s = FastGm::new(k, seed);
-            for v in &vectors {
-                std::hint::black_box(s.sketch(v));
-            }
-        }
-        "fastgm-c" => {
-            let s = FastGmConference::new(k, seed);
-            for v in &vectors {
-                std::hint::black_box(s.sketch(v));
-            }
-        }
-        "pminhash" => {
-            let s = PMinHash::new(k, seed as u32);
-            for v in &vectors {
-                std::hint::black_box(s.sketch(v));
-            }
-        }
-        "bagminhash" => {
-            let s = BagMinHash::new(k, seed);
-            for v in &vectors {
-                std::hint::black_box(s.sketch(v));
-            }
-        }
-        other => anyhow::bail!("unknown algo '{other}'"),
+    for v in &vectors {
+        sketcher.sketch_into(v, &mut scratch, &mut out);
+        std::hint::black_box(&out);
     }
     let dt = t0.elapsed().as_secs_f64();
     let mean_np =

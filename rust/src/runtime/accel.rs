@@ -63,9 +63,12 @@ impl DenseSketchAccel {
 
     /// Sketch a batch of dense rows (ids = dense indices). Rows longer than
     /// every bucket are rejected — the router sends those to CPU FastGM.
+    /// The u64 seed is folded to the kernel's 32-bit space with
+    /// [`crate::sketch::fold_id`] (identity for seeds < 2^32), exactly as
+    /// the CPU P-MinHash fallback folds it, so the two stay interchangeable.
     pub fn sketch_batch(
         &self,
-        seed: u32,
+        seed: u64,
         rows: &[Vec<f64>],
         k: usize,
     ) -> anyhow::Result<Vec<GumbelMaxSketch>> {
@@ -89,14 +92,14 @@ impl DenseSketchAccel {
                     }
                 }
             }
-            let seed_lit = xla::Literal::vec1(&[seed]);
+            let seed_lit = xla::Literal::vec1(&[crate::sketch::fold_id(seed)]);
             let v_lit = xla::Literal::vec1(&flat)
                 .reshape(&[bucket.b as i64, bucket.n as i64])?;
             let outs = self.runtime.execute(&bucket.name, &[seed_lit, v_lit])?;
             let y: Vec<f32> = outs[0].to_vec()?;
             let s: Vec<i32> = outs[1].to_vec()?;
             for (r, row) in chunk.iter().enumerate() {
-                let mut sk = GumbelMaxSketch::empty(Family::Direct, seed as u64, bucket.k);
+                let mut sk = GumbelMaxSketch::empty(Family::Direct, seed, bucket.k);
                 let empty_row = row.iter().all(|&w| w <= 0.0);
                 for j in 0..bucket.k {
                     let yv = y[r * bucket.k + j] as f64;

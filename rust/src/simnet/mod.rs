@@ -240,8 +240,8 @@ fn sketch_sequence(
             (w.sketch(), u.sketch())
         }
         NodeSketcher::Lemiesz => {
-            let mut w = LemieszSketch::new(params.k, params.seed as u32);
-            let mut u = LemieszSketch::new(params.k, (params.seed ^ 0xDEAD) as u32);
+            let mut w = LemieszSketch::new(params.k, params.seed);
+            let mut u = LemieszSketch::new(params.k, params.seed ^ 0xDEAD);
             for &pkt in seq {
                 w.push(pkt, sizes[pkt as usize]);
                 u.push(pkt, 1.0);

@@ -19,7 +19,8 @@
 //! residual point probability is negligible (rate halves per level).
 
 use crate::util::rng::SplitMix64;
-use super::{SparseVector, EMPTY_REGISTER};
+use super::engine::SketchScratch;
+use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
 
 /// Domain separation from the Ordered family streams.
 const BAG_SALT: u64 = 0xBA61_14A5_11D5_0B1E;
@@ -65,27 +66,46 @@ impl MaxTracker {
     pub fn max(&self) -> f64 {
         self.tree[1]
     }
+
+    /// Number of leaves.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Reset every leaf (and internal max) to `init`, keeping the
+    /// allocation — indistinguishable from `MaxTracker::new(self.n, init)`.
+    pub fn reset(&mut self, init: f64) {
+        self.tree.fill(init);
+    }
 }
 
-/// A BagMinHash signature. Lives in its own type: it estimates `J_W`, not
-/// `J_P`, and its race values are consistent only with other BagMinHash
-/// sketches — a separate type makes cross-family estimation a compile
-/// error instead of a silent bias.
+/// A BagMinHash signature: a view over the common Gumbel-Max registers
+/// tagged [`Family::Bag`]. It estimates `J_W`, not `J_P`, and its race
+/// values are consistent only with other BagMinHash sketches — the family
+/// tag makes cross-family estimation a loud error instead of a silent bias.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BagSketch {
-    pub seed: u64,
-    pub y: Vec<f64>,
-    pub s: Vec<u64>,
+    pub base: GumbelMaxSketch,
 }
 
 impl BagSketch {
+    pub fn seed(&self) -> u64 {
+        self.base.seed
+    }
+
     /// Estimate weighted Jaccard `J_W` by register match fraction.
     pub fn estimate_jw(&self, other: &BagSketch) -> f64 {
-        assert_eq!(self.seed, other.seed, "BagMinHash seeds must match");
-        assert_eq!(self.y.len(), other.y.len());
-        let k = self.y.len();
+        assert_eq!(self.base.seed, other.base.seed, "BagMinHash seeds must match");
+        assert_eq!(self.base.k(), other.base.k());
+        let k = self.base.k();
         let m = (0..k)
-            .filter(|&j| self.s[j] == other.s[j] && self.y[j] == other.y[j])
+            .filter(|&j| {
+                self.base.s[j] == other.base.s[j] && self.base.y[j] == other.base.y[j]
+            })
             .count();
         m as f64 / k as f64
     }
@@ -106,10 +126,30 @@ impl BagMinHash {
     /// Sketch and return the number of Poisson points generated (the work
     /// counter the Fig. 4/5 efficiency comparison reports).
     pub fn sketch_counted(&self, v: &SparseVector) -> (BagSketch, u64) {
+        let mut scratch = SketchScratch::new();
+        let mut base = GumbelMaxSketch::empty(Family::Bag, self.seed, self.k);
+        let points = self.sketch_counted_into(v, &mut scratch, &mut base);
+        (BagSketch { base }, points)
+    }
+
+    /// The signature without the work counter.
+    pub fn sketch_bag(&self, v: &SparseVector) -> BagSketch {
+        self.sketch_counted(v).0
+    }
+
+    /// Allocation-free core: registers into `out`, stop bounds through the
+    /// scratch's reusable [`MaxTracker`]. Returns the points generated.
+    pub fn sketch_counted_into(
+        &self,
+        v: &SparseVector,
+        scratch: &mut SketchScratch,
+        out: &mut GumbelMaxSketch,
+    ) -> u64 {
         let k = self.k;
-        let mut y = vec![f64::INFINITY; k];
-        let mut s = vec![EMPTY_REGISTER; k];
-        let mut tracker = MaxTracker::new(k, f64::INFINITY);
+        out.reset(Family::Bag, self.seed, k);
+        let y = &mut out.y;
+        let s = &mut out.s;
+        let tracker = scratch.bag_tracker_mut(k, f64::INFINITY);
         let mut points = 0u64;
 
         for (id, w) in v.positive() {
@@ -153,11 +193,29 @@ impl BagMinHash {
                 }
             }
         }
-        (BagSketch { seed: self.seed, y, s }, points)
+        points
+    }
+}
+
+impl Sketcher for BagMinHash {
+    fn name(&self) -> &'static str {
+        "bagminhash"
     }
 
-    pub fn sketch(&self, v: &SparseVector) -> BagSketch {
-        self.sketch_counted(v).0
+    fn family(&self) -> Family {
+        Family::Bag
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn sketch_into(&self, v: &SparseVector, scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        self.sketch_counted_into(v, scratch, out);
     }
 }
 
@@ -165,6 +223,7 @@ impl BagMinHash {
 mod tests {
     use super::*;
     use crate::estimate::jaccard::weighted_jaccard;
+    use crate::sketch::EMPTY_REGISTER;
     use crate::util::rng::SplitMix64;
     use crate::util::stats::OnlineStats;
 
@@ -198,8 +257,11 @@ mod tests {
     #[test]
     fn self_similarity_is_one() {
         let v = SparseVector::new(vec![5, 6], vec![0.3, 0.9]);
-        let a = BagMinHash::new(32, 2).sketch(&v);
+        let a = BagMinHash::new(32, 2).sketch_bag(&v);
         assert_eq!(a.estimate_jw(&a), 1.0);
+        // The view exposes exactly the trait's common registers.
+        assert_eq!(a.base, BagMinHash::new(32, 2).sketch(&v));
+        assert_eq!(a.base.family, Family::Bag);
     }
 
     /// The monotone weight coupling: raising one element's weight can only
@@ -230,7 +292,7 @@ mod tests {
         let mut stats = OnlineStats::new();
         for seed in 0..120u64 {
             let bm = BagMinHash::new(64, seed);
-            stats.push(bm.sketch(&u).estimate_jw(&bm.sketch(&v)));
+            stats.push(bm.sketch_bag(&u).estimate_jw(&bm.sketch_bag(&v)));
         }
         assert!(
             (stats.mean() - truth).abs() < 0.03,

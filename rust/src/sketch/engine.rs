@@ -1,0 +1,274 @@
+//! The zero-allocation sketch engine: a reusable scratch arena plus the
+//! algorithm registry every layer above (coordinator, experiments, benches)
+//! constructs sketchers through.
+//!
+//! At serving scale the `O(k ln k + n⁺)` bound makes the constant factor
+//! the remaining lever, and the dominant constant was per-request heap
+//! churn: `FastGm::sketch` rebuilt its element-race queues, the prune
+//! worklists, and the register arrays on every call. [`SketchScratch`]
+//! owns all of those buffers; [`Sketcher::sketch_into`] threads one
+//! through every algorithm, so a long-lived caller (a coordinator worker,
+//! a benchmark loop, an experiment sweep) pays allocation cost once and
+//! amortizes it to zero.
+//!
+//! Scratch reuse is **provably lossless**: `sketch_into` with an
+//! arbitrarily dirty scratch is bit-identical to a fresh `sketch()` call.
+//! `rust/tests/engine_props.rs` asserts that property for every
+//! [`AlgorithmId`] by iterating the registry, so a newly registered
+//! algorithm is covered automatically.
+
+use super::bagminhash::{BagMinHash, MaxTracker};
+use super::fastgm::FastGm;
+use super::fastgm_c::FastGmConference;
+use super::icws::Icws;
+use super::lemiesz::Lemiesz;
+use super::minhash::MinHash;
+use super::order_stats::ElementRace;
+use super::pminhash::PMinHash;
+use super::sharded::ShardedSketcher;
+use super::stream_fastgm::{StreamFastGm, StreamSketcher};
+use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
+
+/// Reusable working memory for [`Sketcher::sketch_into`]: element-race
+/// queues, budget worklists, shard partitions with per-shard sub-scratches,
+/// a streaming state, and the BagMinHash register-max tracker. One scratch
+/// serves *every* algorithm — the coordinator keeps one per worker thread
+/// and routes all requests through it regardless of the requested `algo`.
+#[derive(Debug, Default)]
+pub struct SketchScratch {
+    /// Positive `(id, weight)` entries of the vector being sketched.
+    pub(crate) elements: Vec<(u64, f64)>,
+    /// Element race queues (FastGM); reset in place per call.
+    pub(crate) races: Vec<ElementRace>,
+    /// FastPrune worklists (indices of still-open queues), swapped per round.
+    pub(crate) alive: Vec<usize>,
+    pub(crate) next_alive: Vec<usize>,
+    /// Shard partitions and their sub-scratches / outputs (sharded path).
+    pub(crate) parts: Vec<SparseVector>,
+    pub(crate) shard_scratches: Vec<SketchScratch>,
+    pub(crate) shard_outs: Vec<GumbelMaxSketch>,
+    /// Streaming state reused by the `stream` / `fastgm-c` batch adapters.
+    pub(crate) stream: Option<StreamFastGm>,
+    /// BagMinHash "binary tree of maxima" stop-bound tracker.
+    pub(crate) bag_tracker: Option<MaxTracker>,
+    /// Times [`SketchScratch::begin_use`] was called (coordinator metric).
+    pub(crate) uses: u64,
+}
+
+impl SketchScratch {
+    pub fn new() -> SketchScratch {
+        SketchScratch::default()
+    }
+
+    /// Record one use; returns `true` when the scratch is being *reused*
+    /// (i.e. this is not its first sketch). The coordinator feeds this into
+    /// its `scratch.reuse` / `scratch.alloc` counters.
+    pub fn begin_use(&mut self) -> bool {
+        let reused = self.uses > 0;
+        self.uses += 1;
+        reused
+    }
+
+    /// Total sketches computed through this scratch.
+    pub fn uses(&self) -> u64 {
+        self.uses
+    }
+
+    /// Diagnostic: element-race slots currently pooled (including inside
+    /// per-shard sub-scratches). Non-zero after a FastGM-family sketch ran
+    /// through this scratch — the observable proof that `sketch_into`
+    /// actually used the passed arena instead of allocating its own.
+    pub fn pooled_races(&self) -> usize {
+        self.races.len() + self.shard_scratches.iter().map(|s| s.pooled_races()).sum::<usize>()
+    }
+
+    /// The streaming state, reset to `(k, seed)` (created on first use).
+    pub(crate) fn stream_mut(&mut self, k: usize, seed: u64) -> &mut StreamFastGm {
+        if let Some(st) = self.stream.as_mut() {
+            st.reset(k, seed);
+        } else {
+            self.stream = Some(StreamFastGm::new(k, seed));
+        }
+        self.stream.as_mut().expect("stream state just ensured")
+    }
+
+    /// The BagMinHash max tracker, reset to `n` leaves of `init` (recreated
+    /// only when the register count changes).
+    pub(crate) fn bag_tracker_mut(&mut self, n: usize, init: f64) -> &mut MaxTracker {
+        let reusable = matches!(&self.bag_tracker, Some(t) if t.len() == n);
+        if reusable {
+            let t = self.bag_tracker.as_mut().expect("tracker checked above");
+            t.reset(init);
+        } else {
+            self.bag_tracker = Some(MaxTracker::new(n, init));
+        }
+        self.bag_tracker.as_mut().expect("tracker just ensured")
+    }
+}
+
+/// Every sketch algorithm constructible by name through the registry.
+///
+/// These are the names accepted by the coordinator's config key
+/// `sketch.algo`, the wire protocol's optional `algo` request field, and
+/// the `fastgm sketch --algo` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlgorithmId {
+    /// FastGM, the paper's Algorithm 1 (`fastgm`).
+    FastGm,
+    /// WWW'20 conference baseline, prune-only (`fastgm-c`).
+    FastGmC,
+    /// FastGM over weight-balanced shards, §2.3 merge (`sharded`).
+    Sharded,
+    /// One-pass Stream-FastGM driven in batch mode (`stream`).
+    Stream,
+    /// O(k·n⁺) P-MinHash, Direct family (`pminhash`).
+    PMinHash,
+    /// Lemiesz's weighted-cardinality sketch, Direct family (`lemiesz`).
+    Lemiesz,
+    /// Improved Consistent Weighted Sampling (`icws`).
+    Icws,
+    /// BagMinHash weighted-Jaccard baseline (`bagminhash`).
+    BagMinHash,
+    /// Classic binary MinHash over the support set (`minhash`).
+    MinHash,
+}
+
+impl AlgorithmId {
+    /// Every registered algorithm — tests iterate this so new entries are
+    /// covered automatically.
+    pub const ALL: [AlgorithmId; 9] = [
+        AlgorithmId::FastGm,
+        AlgorithmId::FastGmC,
+        AlgorithmId::Sharded,
+        AlgorithmId::Stream,
+        AlgorithmId::PMinHash,
+        AlgorithmId::Lemiesz,
+        AlgorithmId::Icws,
+        AlgorithmId::BagMinHash,
+        AlgorithmId::MinHash,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgorithmId::FastGm => "fastgm",
+            AlgorithmId::FastGmC => "fastgm-c",
+            AlgorithmId::Sharded => "sharded",
+            AlgorithmId::Stream => "stream",
+            AlgorithmId::PMinHash => "pminhash",
+            AlgorithmId::Lemiesz => "lemiesz",
+            AlgorithmId::Icws => "icws",
+            AlgorithmId::BagMinHash => "bagminhash",
+            AlgorithmId::MinHash => "minhash",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<AlgorithmId> {
+        AlgorithmId::ALL
+            .into_iter()
+            .find(|id| id.name() == s)
+            .ok_or_else(|| {
+                let known: Vec<&str> = AlgorithmId::ALL.iter().map(|id| id.name()).collect();
+                anyhow::anyhow!("unknown sketch algorithm '{s}' (known: {})", known.join(", "))
+            })
+    }
+
+    /// RNG family the algorithm's sketches belong to.
+    pub fn family(self) -> Family {
+        match self {
+            AlgorithmId::FastGm
+            | AlgorithmId::FastGmC
+            | AlgorithmId::Sharded
+            | AlgorithmId::Stream => Family::Ordered,
+            AlgorithmId::PMinHash | AlgorithmId::Lemiesz => Family::Direct,
+            AlgorithmId::Icws => Family::Icws,
+            AlgorithmId::BagMinHash => Family::Bag,
+            AlgorithmId::MinHash => Family::MinHash,
+        }
+    }
+}
+
+/// Construction parameters shared by every registry entry.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineParams {
+    pub k: usize,
+    pub seed: u64,
+    /// Shard team size for [`AlgorithmId::Sharded`] (ignored elsewhere).
+    pub shards: usize,
+    /// FastSearch budget step override for [`AlgorithmId::FastGm`].
+    pub delta: Option<usize>,
+}
+
+impl EngineParams {
+    pub fn new(k: usize, seed: u64) -> EngineParams {
+        EngineParams { k, seed, shards: 4, delta: None }
+    }
+
+    pub fn with_shards(mut self, shards: usize) -> EngineParams {
+        self.shards = shards.max(1);
+        self
+    }
+
+    pub fn with_delta(mut self, delta: usize) -> EngineParams {
+        self.delta = Some(delta);
+        self
+    }
+}
+
+/// Build a sketcher from the registry.
+pub fn build(id: AlgorithmId, p: EngineParams) -> Box<dyn Sketcher> {
+    match id {
+        AlgorithmId::FastGm => {
+            let fg = FastGm::new(p.k, p.seed);
+            Box::new(match p.delta {
+                Some(d) => fg.with_delta(d),
+                None => fg,
+            })
+        }
+        AlgorithmId::FastGmC => Box::new(FastGmConference::new(p.k, p.seed)),
+        AlgorithmId::Sharded => Box::new(ShardedSketcher::new(p.k, p.seed, p.shards.max(1))),
+        AlgorithmId::Stream => Box::new(StreamSketcher::new(p.k, p.seed)),
+        AlgorithmId::PMinHash => Box::new(PMinHash::new(p.k, p.seed)),
+        AlgorithmId::Lemiesz => Box::new(Lemiesz::new(p.k, p.seed)),
+        AlgorithmId::Icws => Box::new(Icws::new(p.k, p.seed)),
+        AlgorithmId::BagMinHash => Box::new(BagMinHash::new(p.k, p.seed)),
+        AlgorithmId::MinHash => Box::new(MinHash::new(p.k, p.seed)),
+    }
+}
+
+/// Build a sketcher by registry name (config / protocol `algo` values).
+pub fn build_named(name: &str, p: EngineParams) -> anyhow::Result<Box<dyn Sketcher>> {
+    Ok(build(AlgorithmId::from_name(name)?, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip_and_match_built_sketchers() {
+        for id in AlgorithmId::ALL {
+            assert_eq!(AlgorithmId::from_name(id.name()).unwrap(), id);
+            let s = build(id, EngineParams::new(8, 7));
+            assert_eq!(s.name(), id.name(), "registry name drifted for {id:?}");
+            assert_eq!(s.family(), id.family());
+            assert_eq!(s.k(), 8);
+            assert_eq!(s.seed(), 7);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_an_error_listing_known_names() {
+        let err = build_named("quantum", EngineParams::new(8, 1)).unwrap_err().to_string();
+        assert!(err.contains("unknown sketch algorithm 'quantum'"), "{err}");
+        assert!(err.contains("fastgm"), "{err}");
+    }
+
+    #[test]
+    fn scratch_counts_uses() {
+        let mut s = SketchScratch::new();
+        assert_eq!(s.uses(), 0);
+        assert!(!s.begin_use());
+        assert!(s.begin_use());
+        assert_eq!(s.uses(), 2);
+    }
+}

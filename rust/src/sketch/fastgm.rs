@@ -18,6 +18,7 @@
 //! ([`order_stats::oracle_registers`]) — early termination is lossless, not
 //! approximate. The property test below locks that in.
 
+use super::engine::SketchScratch;
 use super::order_stats::ElementRace;
 use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
 
@@ -63,20 +64,43 @@ impl FastGm {
 
     /// Sketch with work counters (used by the complexity experiments).
     pub fn sketch_counted(&self, v: &SparseVector) -> (GumbelMaxSketch, FastGmStats) {
+        let mut scratch = SketchScratch::new();
+        let mut out = GumbelMaxSketch::empty(Family::Ordered, self.seed, self.k);
+        let stats = self.sketch_counted_into(v, &mut scratch, &mut out);
+        (out, stats)
+    }
+
+    /// The allocation-free core: sketch `v` into `out` reusing `scratch`'s
+    /// race queues and worklists. Bit-identical to [`FastGm::sketch_counted`]
+    /// regardless of scratch state.
+    pub fn sketch_counted_into(
+        &self,
+        v: &SparseVector,
+        scratch: &mut SketchScratch,
+        out: &mut GumbelMaxSketch,
+    ) -> FastGmStats {
         let k = self.k;
-        let mut out = GumbelMaxSketch::empty(Family::Ordered, self.seed, k);
+        out.reset(Family::Ordered, self.seed, k);
         let mut stats = FastGmStats::default();
 
-        let elements: Vec<(u64, f64)> = v.positive().collect();
-        if elements.is_empty() {
-            return (out, stats);
+        scratch.elements.clear();
+        scratch.elements.extend(v.positive());
+        if scratch.elements.is_empty() {
+            return stats;
         }
-        let total_w: f64 = elements.iter().map(|(_, w)| w).sum();
+        let n = scratch.elements.len();
+        let total_w: f64 = scratch.elements.iter().map(|(_, w)| w).sum();
 
-        let mut races: Vec<ElementRace> = elements
-            .iter()
-            .map(|&(id, w)| ElementRace::new(self.seed, id, w, k))
-            .collect();
+        // Re-arm the pooled races in place; grow the pool only on demand.
+        for (idx, &(id, w)) in scratch.elements.iter().enumerate() {
+            if idx < scratch.races.len() {
+                scratch.races[idx].reset(self.seed, id, w, k);
+            } else {
+                scratch.races.push(ElementRace::new(self.seed, id, w, k));
+            }
+        }
+        let elements = &scratch.elements[..n];
+        let races = &mut scratch.races[..n];
 
         // ------------------------------------------------------- FastSearch
         let mut unfilled = k;
@@ -114,11 +138,14 @@ impl FastGm {
         // j* = argmax_j y_j; a queue whose next arrival exceeds y_{j*} can
         // never improve any register.
         let mut jstar = argmax(&out.y);
-        let mut alive: Vec<usize> = (0..races.len()).filter(|&i| !races[i].exhausted()).collect();
+        let alive = &mut scratch.alive;
+        let next_alive = &mut scratch.next_alive;
+        alive.clear();
+        alive.extend((0..n).filter(|&i| !races[i].exhausted()));
         while !alive.is_empty() {
             budget += self.delta as f64;
-            let mut next_alive = Vec::with_capacity(alive.len());
-            'queues: for idx in alive {
+            next_alive.clear();
+            'queues: for &idx in alive.iter() {
                 let (id, w) = elements[idx];
                 let race = &mut races[idx];
                 // At least one release per round: a feather-weight element
@@ -147,10 +174,10 @@ impl FastGm {
                     next_alive.push(idx);
                 }
             }
-            alive = next_alive;
+            std::mem::swap(alive, next_alive);
         }
 
-        (out, stats)
+        stats
     }
 }
 
@@ -177,8 +204,12 @@ impl Sketcher for FastGm {
         self.k
     }
 
-    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
-        self.sketch_counted(v).0
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn sketch_into(&self, v: &SparseVector, scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        self.sketch_counted_into(v, scratch, out);
     }
 }
 

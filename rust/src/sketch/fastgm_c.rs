@@ -14,7 +14,7 @@
 //! The output registers are identical to FastGM's (both are lossless early
 //! terminations of the same Ordered-family race), which the test asserts.
 
-use super::stream_fastgm::StreamFastGm;
+use super::engine::SketchScratch;
 use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
 
 #[derive(Debug, Clone)]
@@ -31,11 +31,26 @@ impl FastGmConference {
 
     /// Sketch and return the number of exponential variables generated.
     pub fn sketch_counted(&self, v: &SparseVector) -> (GumbelMaxSketch, u64) {
-        let mut st = StreamFastGm::new(self.k, self.seed);
+        let mut scratch = SketchScratch::new();
+        let mut out = GumbelMaxSketch::empty(Family::Ordered, self.seed, self.k);
+        let released = self.sketch_counted_into(v, &mut scratch, &mut out);
+        (out, released)
+    }
+
+    /// Allocation-free core: drive the scratch's streaming state over `v`'s
+    /// positive entries in input order (the conference schedule).
+    pub fn sketch_counted_into(
+        &self,
+        v: &SparseVector,
+        scratch: &mut SketchScratch,
+        out: &mut GumbelMaxSketch,
+    ) -> u64 {
+        let st = scratch.stream_mut(self.k, self.seed);
         for (id, w) in v.positive() {
             st.push(id, w);
         }
-        (st.sketch(), st.released)
+        st.write_into(out);
+        st.released
     }
 }
 
@@ -52,8 +67,12 @@ impl Sketcher for FastGmConference {
         self.k
     }
 
-    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
-        self.sketch_counted(v).0
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn sketch_into(&self, v: &SparseVector, scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        self.sketch_counted_into(v, scratch, out);
     }
 }
 

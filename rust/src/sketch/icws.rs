@@ -17,39 +17,44 @@
 //! strongly correlated weight changes, which one of the tests demonstrates.
 
 use crate::util::rng::{fmix64, SplitMix64};
-use super::{SparseVector, EMPTY_REGISTER};
+use super::engine::SketchScratch;
+use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
 
 const ICWS_SALT: u64 = 0x1C75_5EED_0FF1_CE00;
 
+/// Full ICWS signature: a view over the common Gumbel-Max registers
+/// (`base.y` holds the minimal `a` values, `base.s` the argmin ids, family
+/// [`Family::Icws`]) plus the quantized weight level `t` of each winner —
+/// the extra coordinate the unbiased `(id, t)` estimator needs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IcwsSketch {
-    pub seed: u64,
-    /// Minimal `a` values per register.
-    pub a: Vec<f64>,
-    /// Argmin element ids per register.
-    pub s: Vec<u64>,
-    /// Quantized weight level `t` of the argmin element.
+    pub base: GumbelMaxSketch,
+    /// Quantized weight level `t` of the argmin element, per register.
     pub t: Vec<f64>,
 }
 
 impl IcwsSketch {
+    pub fn seed(&self) -> u64 {
+        self.base.seed
+    }
+
     /// Estimate weighted Jaccard from the full `(id, t)` signature —
     /// unbiased (consistency theorem).
     pub fn estimate_jw(&self, other: &IcwsSketch) -> f64 {
-        assert_eq!(self.seed, other.seed, "ICWS seeds must match");
-        assert_eq!(self.a.len(), other.a.len());
-        let k = self.s.len();
+        assert_eq!(self.base.seed, other.base.seed, "ICWS seeds must match");
+        assert_eq!(self.base.k(), other.base.k());
+        let k = self.base.k();
         let m = (0..k)
-            .filter(|&j| self.s[j] == other.s[j] && self.t[j] == other.t[j])
+            .filter(|&j| self.base.s[j] == other.base.s[j] && self.t[j] == other.t[j])
             .count();
         m as f64 / k as f64
     }
 
     /// 0-bit variant: match on element id only (biased but register-free).
     pub fn estimate_jw_0bit(&self, other: &IcwsSketch) -> f64 {
-        assert_eq!(self.seed, other.seed);
-        let k = self.s.len();
-        let m = (0..k).filter(|&j| self.s[j] == other.s[j]).count();
+        assert_eq!(self.base.seed, other.base.seed);
+        let k = self.base.k();
+        let m = (0..k).filter(|&j| self.base.s[j] == other.base.s[j]).count();
         m as f64 / k as f64
     }
 }
@@ -66,11 +71,9 @@ impl Icws {
         Icws { k, seed }
     }
 
-    pub fn sketch(&self, v: &SparseVector) -> IcwsSketch {
+    /// Shared core: fill `out`'s registers and, when given, the `t` levels.
+    fn fill(&self, v: &SparseVector, out: &mut GumbelMaxSketch, mut t_out: Option<&mut [f64]>) {
         let k = self.k;
-        let mut a = vec![f64::INFINITY; k];
-        let mut s = vec![EMPTY_REGISTER; k];
-        let mut t_out = vec![0.0f64; k];
         for (id, w) in v.positive() {
             let ln_w = w.ln();
             // One deterministic stream per (element, register): consistency
@@ -84,14 +87,46 @@ impl Icws {
                 let t = (ln_w / r + beta).floor();
                 let ln_y = r * (t - beta);
                 let a_ij = c * (-ln_y - r).exp();
-                if a_ij < a[j] {
-                    a[j] = a_ij;
-                    s[j] = id;
-                    t_out[j] = t;
+                if a_ij < out.y[j] {
+                    out.y[j] = a_ij;
+                    out.s[j] = id;
+                    if let Some(ts) = t_out.as_deref_mut() {
+                        ts[j] = t;
+                    }
                 }
             }
         }
-        IcwsSketch { seed: self.seed, a, s, t: t_out }
+    }
+
+    /// Full signature including the `t` levels (the unbiased estimator).
+    pub fn sketch_full(&self, v: &SparseVector) -> IcwsSketch {
+        let mut base = GumbelMaxSketch::empty(Family::Icws, self.seed, self.k);
+        let mut t = vec![0.0f64; self.k];
+        self.fill(v, &mut base, Some(&mut t));
+        IcwsSketch { base, t }
+    }
+}
+
+impl Sketcher for Icws {
+    fn name(&self) -> &'static str {
+        "icws"
+    }
+
+    fn family(&self) -> Family {
+        Family::Icws
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn sketch_into(&self, v: &SparseVector, _scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        out.reset(Family::Icws, self.seed, self.k);
+        self.fill(v, out, None);
     }
 }
 
@@ -99,21 +134,29 @@ impl Icws {
 mod tests {
     use super::*;
     use crate::estimate::jaccard::weighted_jaccard;
+    use crate::sketch::EMPTY_REGISTER;
     use crate::util::stats::OnlineStats;
 
     #[test]
     fn deterministic_and_consistent() {
         let v = SparseVector::new(vec![3, 5, 9], vec![0.2, 2.0, 1.0]);
-        let a = Icws::new(32, 1).sketch(&v);
-        let b = Icws::new(32, 1).sketch(&v);
+        let a = Icws::new(32, 1).sketch_full(&v);
+        let b = Icws::new(32, 1).sketch_full(&v);
         assert_eq!(a, b);
-        assert!(a.s.iter().all(|&x| x != EMPTY_REGISTER));
+        assert!(a.base.s.iter().all(|&x| x != EMPTY_REGISTER));
+    }
+
+    #[test]
+    fn trait_registers_equal_full_signature_base() {
+        let v = SparseVector::new(vec![3, 5, 9], vec![0.2, 2.0, 1.0]);
+        let icws = Icws::new(32, 1);
+        assert_eq!(icws.sketch(&v), icws.sketch_full(&v).base);
     }
 
     #[test]
     fn identical_vectors_match_fully() {
         let v = SparseVector::new(vec![1, 2], vec![1.5, 0.5]);
-        let a = Icws::new(64, 7).sketch(&v);
+        let a = Icws::new(64, 7).sketch_full(&v);
         assert_eq!(a.estimate_jw(&a), 1.0);
     }
 
@@ -127,7 +170,7 @@ mod tests {
         let mut stats = OnlineStats::new();
         for seed in 0..60u64 {
             let icws = Icws::new(128, seed);
-            stats.push(icws.sketch(&u).estimate_jw(&icws.sketch(&v)));
+            stats.push(icws.sketch_full(&u).estimate_jw(&icws.sketch_full(&v)));
         }
         assert!(
             (stats.mean() - truth).abs() < 0.02,
@@ -147,7 +190,7 @@ mod tests {
         let mut zbit = OnlineStats::new();
         for seed in 0..60u64 {
             let icws = Icws::new(128, seed);
-            let (su, sv) = (icws.sketch(&u), icws.sketch(&v2));
+            let (su, sv) = (icws.sketch_full(&u), icws.sketch_full(&v2));
             full.push(su.estimate_jw(&sv));
             zbit.push(su.estimate_jw_0bit(&sv));
         }

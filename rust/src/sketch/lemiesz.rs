@@ -8,12 +8,15 @@
 //! (see `estimate::cardinality`).
 
 use crate::util::rng::direct_exp;
+use super::engine::SketchScratch;
 use super::{fold_id, Family, GumbelMaxSketch, Sketcher, SparseVector, EMPTY_REGISTER};
 
-/// Incremental Lemiesz sketch over a stream.
+/// Incremental Lemiesz sketch over a stream. Seed is the unified `u64`,
+/// folded with [`fold_id`] into the 32-bit Direct-RNG space (seeds < 2^32
+/// are unchanged by the fold).
 #[derive(Debug, Clone)]
 pub struct LemieszSketch {
-    seed: u32,
+    seed: u64,
     y: Vec<f64>,
     s: Vec<u64>,
     /// Work counter: exponential variables generated (k per element).
@@ -21,7 +24,7 @@ pub struct LemieszSketch {
 }
 
 impl LemieszSketch {
-    pub fn new(k: usize, seed: u32) -> Self {
+    pub fn new(k: usize, seed: u64) -> Self {
         assert!(k >= 1);
         LemieszSketch {
             seed,
@@ -41,22 +44,13 @@ impl LemieszSketch {
         if weight <= 0.0 || !weight.is_finite() {
             return;
         }
-        let i = fold_id(id);
-        let inv_w = 1.0 / weight;
-        for j in 0..self.y.len() {
-            let b = direct_exp(self.seed, i, j as u32) as f64 * inv_w;
-            self.released += 1;
-            if b < self.y[j] {
-                self.y[j] = b;
-                self.s[j] = id;
-            }
-        }
+        self.released += update_registers(fold_id(self.seed), id, weight, &mut self.y, &mut self.s);
     }
 
     pub fn sketch(&self) -> GumbelMaxSketch {
         GumbelMaxSketch {
             family: Family::Direct,
-            seed: self.seed as u64,
+            seed: self.seed,
             y: self.y.clone(),
             s: self.s.clone(),
         }
@@ -67,11 +61,11 @@ impl LemieszSketch {
 #[derive(Debug, Clone)]
 pub struct Lemiesz {
     pub k: usize,
-    pub seed: u32,
+    pub seed: u64,
 }
 
 impl Lemiesz {
-    pub fn new(k: usize, seed: u32) -> Self {
+    pub fn new(k: usize, seed: u64) -> Self {
         Lemiesz { k, seed }
     }
 }
@@ -89,13 +83,35 @@ impl Sketcher for Lemiesz {
         self.k
     }
 
-    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
-        let mut st = LemieszSketch::new(self.k, self.seed);
-        for (id, w) in v.positive() {
-            st.push(id, w);
-        }
-        st.sketch()
+    fn seed(&self) -> u64 {
+        self.seed
     }
+
+    fn sketch_into(&self, v: &SparseVector, _scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        out.reset(Family::Direct, self.seed, self.k);
+        let rng_seed = fold_id(self.seed);
+        for (id, w) in v.positive() {
+            update_registers(rng_seed, id, w, &mut out.y, &mut out.s);
+        }
+    }
+}
+
+/// One object's register updates — the single definition shared by the
+/// incremental [`LemieszSketch::push`] and the batch [`Sketcher`] path, so
+/// the two can never drift. Returns the exponentials drawn (= k).
+#[inline]
+fn update_registers(rng_seed: u32, id: u64, w: f64, y: &mut [f64], s: &mut [u64]) -> u64 {
+    debug_assert!(w > 0.0 && w.is_finite());
+    let i = fold_id(id);
+    let inv_w = 1.0 / w;
+    for j in 0..y.len() {
+        let b = direct_exp(rng_seed, i, j as u32) as f64 * inv_w;
+        if b < y[j] {
+            y[j] = b;
+            s[j] = id;
+        }
+    }
+    y.len() as u64
 }
 
 #[cfg(test)]

@@ -3,6 +3,8 @@
 //! by the LSH tests as the binary-vector special case.
 
 use crate::util::rng::{fmix64, SplitMix64};
+use super::engine::SketchScratch;
+use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
 
 const MINHASH_SALT: u64 = 0x3141_5926_5358_9793;
 
@@ -49,7 +51,7 @@ impl MinHash {
         MinHash { k, seed }
     }
 
-    pub fn sketch<'a>(&self, ids: impl IntoIterator<Item = &'a u64>) -> MinHashSketch {
+    pub fn sketch_ids<'a>(&self, ids: impl IntoIterator<Item = &'a u64>) -> MinHashSketch {
         let mut h = vec![u64::MAX; self.k];
         let mut s = vec![u64::MAX; self.k];
         for &id in ids {
@@ -67,6 +69,43 @@ impl MinHash {
     }
 }
 
+impl Sketcher for MinHash {
+    fn name(&self) -> &'static str {
+        "minhash"
+    }
+
+    fn family(&self) -> Family {
+        Family::MinHash
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Binary MinHash over the *support set* of `v` (positive-weight ids;
+    /// weights are otherwise ignored). Register hashes land in `y` projected
+    /// to `[0, 1)` via their top 53 bits, so match-fraction estimation over
+    /// the common registers behaves exactly like [`MinHashSketch`] (ties in
+    /// the low 11 bits are the only — astronomically rare — divergence).
+    fn sketch_into(&self, v: &SparseVector, _scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        out.reset(Family::MinHash, self.seed, self.k);
+        for (id, _w) in v.positive() {
+            let mut rng = SplitMix64::new(fmix64(id ^ MINHASH_SALT) ^ self.seed);
+            for j in 0..self.k {
+                let y = (rng.next_u64() >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0);
+                if y < out.y[j] {
+                    out.y[j] = y;
+                    out.s[j] = id;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,7 +119,7 @@ mod tests {
         let mut stats = OnlineStats::new();
         for seed in 0..100u64 {
             let mh = MinHash::new(64, seed);
-            stats.push(mh.sketch(&a).resemblance(&mh.sketch(&b)));
+            stats.push(mh.sketch_ids(&a).resemblance(&mh.sketch_ids(&b)));
         }
         assert!((stats.mean() - 0.5).abs() < 0.02, "mean={}", stats.mean());
     }
@@ -91,7 +130,7 @@ mod tests {
         let a = vec![1u64, 2];
         let b = vec![3u64, 4];
         let ab = vec![1u64, 2, 3, 4];
-        assert_eq!(mh.sketch(&a).merge(&mh.sketch(&b)), mh.sketch(&ab));
+        assert_eq!(mh.sketch_ids(&a).merge(&mh.sketch_ids(&b)), mh.sketch_ids(&ab));
     }
 
     #[test]
@@ -99,6 +138,6 @@ mod tests {
         let mh = MinHash::new(256, 1);
         let a: Vec<u64> = (0..50).collect();
         let b: Vec<u64> = (100..150).collect();
-        assert!(mh.sketch(&a).resemblance(&mh.sketch(&b)) < 0.05);
+        assert!(mh.sketch_ids(&a).resemblance(&mh.sketch_ids(&b)) < 0.05);
     }
 }

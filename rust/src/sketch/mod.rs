@@ -10,7 +10,8 @@
 //! with `a_ij ~ UNI(0,1)` shared across vectors. [`GumbelMaxSketch`] holds
 //! both parts; `x_j = -ln y_j` recovers the literal Gumbel-Max variable.
 //!
-//! Implementations:
+//! Implementations (all constructible by name via [`engine`], the
+//! zero-allocation registry; see [`Sketcher::sketch_into`]):
 //! * [`fastgm`] — the paper's contribution, `O(k ln k + n⁺)` (Algorithm 1).
 //! * [`sharded`] — FastGM fanned out over weight-balanced shards and merged
 //!   (§2.3 union property): bit-identical, multi-core.
@@ -26,6 +27,7 @@
 //!   generator both FastGM variants and BagMinHash build on.
 
 pub mod order_stats;
+pub mod engine;
 pub mod fastgm;
 pub mod sharded;
 pub mod stream_fastgm;
@@ -37,6 +39,8 @@ pub mod icws;
 pub mod minhash;
 pub mod hyperloglog;
 
+pub use engine::{AlgorithmId, EngineParams, SketchScratch};
+
 use crate::util::json::Value;
 
 /// RNG family backing a sketch (see [`crate::util::rng`] and README.md
@@ -45,11 +49,19 @@ use crate::util::json::Value;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Family {
     /// SplitMix64 per-element streams through the order-statistics
-    /// construction (FastGM, Stream-FastGM, FastGM-c, BagMinHash).
+    /// construction (FastGM, Stream-FastGM, FastGM-c, sharded).
     Ordered,
     /// Stateless counter RNG `direct_bits(seed, i, j)`, mirrored by the
     /// Pallas kernels (P-MinHash, Lemiesz, dense accelerator).
     Direct,
+    /// ICWS race values (Ioffe '10): estimates J_W, comparable only with
+    /// other ICWS sketches.
+    Icws,
+    /// BagMinHash Poisson-point races (Ertl '18): estimates J_W, comparable
+    /// only with other BagMinHash sketches.
+    Bag,
+    /// Classic binary MinHash over the support set (unweighted).
+    MinHash,
 }
 
 impl Family {
@@ -57,6 +69,9 @@ impl Family {
         match self {
             Family::Ordered => "ordered",
             Family::Direct => "direct",
+            Family::Icws => "icws",
+            Family::Bag => "bagminhash",
+            Family::MinHash => "minhash",
         }
     }
 
@@ -64,8 +79,20 @@ impl Family {
         match s {
             "ordered" => Ok(Family::Ordered),
             "direct" => Ok(Family::Direct),
+            "icws" => Ok(Family::Icws),
+            "bagminhash" => Ok(Family::Bag),
+            "minhash" => Ok(Family::MinHash),
             _ => anyhow::bail!("unknown sketch family '{s}'"),
         }
+    }
+
+    /// Whether this family's `y` registers are `EXP(Σw)` Gumbel-Max races —
+    /// the precondition of the cardinality algebra (Theorem 2 / Lemiesz)
+    /// and of the `J_P` ArgMax-match estimator. ICWS and BagMinHash
+    /// registers race different variables (their dedicated `estimate_jw`
+    /// views apply); MinHash `y` holds uniform hash projections.
+    pub fn has_exponential_registers(self) -> bool {
+        matches!(self, Family::Ordered | Family::Direct)
     }
 }
 
@@ -153,6 +180,16 @@ pub enum MergeError {
     SeedMismatch(u64, u64),
     #[error("sketch length mismatch: {0} vs {1}")]
     LengthMismatch(usize, usize),
+    /// The sketches are mutually compatible but the requested estimator is
+    /// not defined for their family (e.g. cardinality algebra on MinHash
+    /// registers, `J_P` on ICWS races). Failing loudly here keeps the new
+    /// per-request `algo` surface from silently returning biased numbers.
+    #[error("no {estimator} estimator for '{family}' sketches ({hint})")]
+    EstimatorUnsupported {
+        estimator: &'static str,
+        family: &'static str,
+        hint: &'static str,
+    },
 }
 
 impl GumbelMaxSketch {
@@ -163,6 +200,19 @@ impl GumbelMaxSketch {
             y: vec![f64::INFINITY; k],
             s: vec![EMPTY_REGISTER; k],
         }
+    }
+
+    /// Re-initialize in place to the empty sketch of `(family, seed, k)`,
+    /// reusing the register allocations. Every [`Sketcher::sketch_into`]
+    /// implementation starts with this, so a dirty output buffer can never
+    /// leak into a result.
+    pub fn reset(&mut self, family: Family, seed: u64, k: usize) {
+        self.family = family;
+        self.seed = seed;
+        self.y.clear();
+        self.y.resize(k, f64::INFINITY);
+        self.s.clear();
+        self.s.resize(k, EMPTY_REGISTER);
     }
 
     pub fn k(&self) -> usize {
@@ -293,11 +343,35 @@ impl GumbelMaxSketch {
 }
 
 /// Anything that turns a [`SparseVector`] into a [`GumbelMaxSketch`].
+///
+/// The trait is object-safe and uniform across all algorithms (`u64` seeds
+/// everywhere): the engine registry ([`engine::build_named`]) hands out
+/// `Box<dyn Sketcher>` by algorithm name, and the coordinator's worker pool
+/// drives every request through [`Sketcher::sketch_into`] with a per-worker
+/// [`SketchScratch`] so the hot path allocates nothing per request.
+///
+/// Contract: `sketch_into` must (a) fully re-initialize `out` (start with
+/// [`GumbelMaxSketch::reset`]) and (b) be **bit-identical** to a fresh
+/// [`Sketcher::sketch`] call no matter how dirty `scratch` is — scratch
+/// reuse is an allocation optimization, never an approximation. The
+/// registry-wide property suite in `rust/tests/engine_props.rs` enforces
+/// this for every registered algorithm.
 pub trait Sketcher: Send + Sync {
     fn name(&self) -> &'static str;
     fn family(&self) -> Family;
     fn k(&self) -> usize;
-    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch;
+    /// Seed tagged into produced sketches (unified `u64` for every
+    /// algorithm; Direct-family implementations fold it with [`fold_id`]).
+    fn seed(&self) -> u64;
+    /// Sketch `v` into `out`, reusing `scratch`'s buffers.
+    fn sketch_into(&self, v: &SparseVector, scratch: &mut SketchScratch, out: &mut GumbelMaxSketch);
+    /// Convenience allocating wrapper around [`Sketcher::sketch_into`].
+    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
+        let mut scratch = SketchScratch::new();
+        let mut out = GumbelMaxSketch::empty(self.family(), self.seed(), self.k());
+        self.sketch_into(v, &mut scratch, &mut out);
+        out
+    }
 }
 
 #[cfg(test)]

@@ -104,6 +104,7 @@ impl U32Map {
             }
         }
     }
+
 }
 
 /// Inline capacity before spilling to the heap map. Under FastPrune most
@@ -178,6 +179,19 @@ impl LazyPerm {
     pub fn touched(&self) -> usize {
         self.inline_len + self.spill.as_ref().map(|m| m.len).unwrap_or(0)
     }
+
+    /// Back to the identity permutation. A spill map is *dropped*, not
+    /// kept: retaining it would disable the inline fast path for the rest
+    /// of the slot's lifetime (`set` only uses the inline array while no
+    /// spill exists) and cost an `EMPTY_KEY` fill across the grown
+    /// capacity on every reset. Spilling is the rare case (> INLINE_CAP
+    /// overrides in one race), so re-allocating on the next spill is
+    /// cheaper than poisoning every small reuse. A cleared [`LazyPerm`] is
+    /// indistinguishable from a new one.
+    pub fn clear(&mut self) {
+        self.inline_len = 0;
+        self.spill = None;
+    }
 }
 
 impl Default for LazyPerm {
@@ -211,6 +225,20 @@ impl ElementRace {
             b: 0.0,
             perm: LazyPerm::new(),
         }
+    }
+
+    /// Re-arm this race for a new `(seed, id, w, k)` in place, reusing the
+    /// permutation's buffers. After `reset` the race is bit-identical to
+    /// `ElementRace::new(seed, id, w, k)` — the engine property suite
+    /// (`rust/tests/engine_props.rs`) locks that in across every sketcher.
+    pub fn reset(&mut self, seed: u64, id: u64, w: f64, k: usize) {
+        debug_assert!(w > 0.0 && w.is_finite());
+        self.rng = SplitMix64::for_element(seed, id);
+        self.inv_w = 1.0 / w;
+        self.k = k as u32;
+        self.z = 0;
+        self.b = 0.0;
+        self.perm.clear();
     }
 
     pub fn exhausted(&self) -> bool {
@@ -385,6 +413,42 @@ mod tests {
                     Ok(())
                 } else {
                     Err(format!("dense {picks_dense:?} != lazy {picks_lazy:?}"))
+                }
+            },
+        );
+    }
+
+    /// A reset race must replay exactly the stream of a fresh one, even
+    /// after the previous use spilled the permutation to the heap map.
+    #[test]
+    fn reset_race_equals_fresh_race() {
+        forall_explain(
+            50,
+            |r| {
+                (
+                    r.next_u64(),
+                    r.next_u64(),
+                    r.next_f64() + 0.01,
+                    r.next_range(1, 96),
+                    r.next_u64(),
+                    r.next_range(1, 96),
+                )
+            },
+            |&(seed, id, w, k, id2, k2)| {
+                // Dirty the race on (id2, k2) first — fully drained so the
+                // lazy permutation accumulates overrides (and may spill).
+                let mut race = ElementRace::new(seed ^ 1, id2, 0.5, k2);
+                while race.next().is_some() {}
+                race.reset(seed, id, w, k);
+                let mut reused = Vec::new();
+                while let Some(t) = race.next() {
+                    reused.push(t);
+                }
+                let fresh = ElementRace::new(seed, id, w, k).drain();
+                if reused == fresh {
+                    Ok(())
+                } else {
+                    Err(format!("reset race diverged from fresh at k={k}"))
                 }
             },
         );

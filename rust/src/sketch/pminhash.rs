@@ -9,18 +9,28 @@
 //! rounding; the runtime integration test checks that).
 
 use crate::util::rng::direct_exp;
+use super::engine::SketchScratch;
 use super::{fold_id, Family, GumbelMaxSketch, Sketcher, SparseVector};
 
 #[derive(Debug, Clone)]
 pub struct PMinHash {
     pub k: usize,
-    pub seed: u32,
+    /// Unified `u64` seed (like every other sketcher); folded with
+    /// [`fold_id`] into the 32-bit Direct-RNG index space, exactly as
+    /// element ids are. Seeds below 2^32 fold to themselves, so existing
+    /// sketches and the Pallas kernels are unaffected.
+    pub seed: u64,
 }
 
 impl PMinHash {
-    pub fn new(k: usize, seed: u32) -> Self {
+    pub fn new(k: usize, seed: u64) -> Self {
         assert!(k >= 1);
         PMinHash { k, seed }
+    }
+
+    /// The 32-bit seed actually fed to the Direct counter RNG.
+    pub fn rng_seed(&self) -> u32 {
+        fold_id(self.seed)
     }
 }
 
@@ -37,20 +47,24 @@ impl Sketcher for PMinHash {
         self.k
     }
 
-    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
-        let mut out = GumbelMaxSketch::empty(Family::Direct, self.seed as u64, self.k);
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn sketch_into(&self, v: &SparseVector, _scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        out.reset(Family::Direct, self.seed, self.k);
+        let rng_seed = self.rng_seed();
         for (id, w) in v.positive() {
             let i32id = fold_id(id);
             let inv_w = 1.0 / w;
             for j in 0..self.k {
-                let b = direct_exp(self.seed, i32id, j as u32) as f64 * inv_w;
+                let b = direct_exp(rng_seed, i32id, j as u32) as f64 * inv_w;
                 if b < out.y[j] {
                     out.y[j] = b;
                     out.s[j] = id;
                 }
             }
         }
-        out
     }
 }
 
@@ -106,7 +120,7 @@ mod tests {
     fn y_mean_matches_exponential_total_weight() {
         let mut r = SplitMix64::new(4);
         let mut stats = OnlineStats::new();
-        for seed in 0..60u32 {
+        for seed in 0..60u64 {
             let v = SparseVector::new(
                 (0..20u64).collect(),
                 (0..20).map(|_| r.next_f64() + 0.1).collect(),
@@ -124,5 +138,22 @@ mod tests {
     fn empty_vector() {
         let sk = PMinHash::new(8, 1).sketch(&SparseVector::default());
         assert!(sk.y.iter().all(|y| y.is_infinite()));
+    }
+
+    /// Seeds ≥ 2^32 fold into the Direct RNG like element ids do, while the
+    /// sketch keeps the full u64 seed tag (so merge discipline still sees
+    /// distinct seeds as distinct).
+    #[test]
+    fn u64_seed_folds_for_rng_but_tags_losslessly() {
+        let v = SparseVector::new(vec![1, 2, 3], vec![0.5, 1.0, 0.25]);
+        let big = (7u64 << 32) | 7; // fold_id(big) == 0
+        let a = PMinHash::new(32, big).sketch(&v);
+        let b = PMinHash::new(32, 0).sketch(&v);
+        assert_eq!(a.y, b.y, "folded seeds must drive identical registers");
+        assert_eq!(a.s, b.s);
+        assert_eq!(a.seed, big, "seed tag must stay the full u64");
+        assert!(a.merge(&b).is_err(), "distinct u64 seeds must not merge");
+        // Small seeds fold to themselves: the pre-unification behaviour.
+        assert_eq!(PMinHash::new(32, 7).rng_seed(), 7);
     }
 }

@@ -22,9 +22,10 @@
 //! into the same bounded pool can deadlock once every worker blocks waiting
 //! for shard jobs that sit behind it in the queue. Scoped threads keep the
 //! fan-out strictly nested and deadlock-free; the coordinator routes only
-//! large requests here (see `coordinator::router::Router::route_sketch`),
+//! large requests here (see `coordinator::router::Router::plan_sketch`),
 //! where the per-shard `O(k ln k)` FastSearch overhead amortizes.
 
+use super::engine::SketchScratch;
 use super::fastgm::FastGm;
 use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
 
@@ -49,61 +50,68 @@ impl ShardedSketcher {
     /// weight-balanced parts (empty parts are dropped; non-positive entries
     /// are ignored, exactly as every sketcher does).
     pub fn partition(v: &SparseVector, shards: usize) -> Vec<SparseVector> {
+        let mut parts = Vec::new();
+        let used = Self::partition_into(v, shards, &mut parts);
+        parts.truncate(used);
+        parts
+    }
+
+    /// Allocation-reusing partition: writes the parts into `parts[..n]`
+    /// (clearing and reusing existing buffers, growing the pool on demand)
+    /// and returns `n`. Placement is identical to [`Self::partition`].
+    pub fn partition_into(
+        v: &SparseVector,
+        shards: usize,
+        parts: &mut Vec<SparseVector>,
+    ) -> usize {
         assert!(shards >= 1);
         let total: f64 = v.total_weight();
         if total <= 0.0 {
-            return Vec::new();
+            return 0;
         }
         let target = total / shards as f64;
-        let mut parts: Vec<SparseVector> = Vec::with_capacity(shards);
-        let mut cur = SparseVector::default();
+        let mut used = 0usize; // 1-based index of the part being filled
         let mut load = 0.0f64;
         for (id, w) in v.positive() {
-            cur.push(id, w);
+            if used == 0 {
+                used = 1;
+                clear_part(parts, 0);
+            }
+            parts[used - 1].push(id, w);
             load += w;
-            if load >= target && parts.len() + 1 < shards {
-                parts.push(std::mem::take(&mut cur));
+            if load >= target && used < shards {
+                used += 1;
+                clear_part(parts, used - 1);
                 load = 0.0;
             }
         }
-        if !cur.ids.is_empty() {
-            parts.push(cur);
+        // A part opened after the final element stays empty — drop it.
+        if used > 0 && parts[used - 1].ids.is_empty() {
+            used -= 1;
         }
-        parts
+        used
     }
 
     /// Sketch `v` across the shard team. Bit-identical to
     /// `FastGm::new(k, seed).sketch(v)` (the property test and
     /// `rust/tests/sharding.rs` lock this).
     pub fn sketch_sharded(&self, v: &SparseVector) -> GumbelMaxSketch {
-        let parts = Self::partition(v, self.shards);
-        match parts.len() {
-            0 => GumbelMaxSketch::empty(Family::Ordered, self.inner.seed, self.inner.k),
-            1 => self.inner.sketch(&parts[0]),
-            _ => {
-                let results: Vec<GumbelMaxSketch> = std::thread::scope(|scope| {
-                    let handles: Vec<_> = parts[1..]
-                        .iter()
-                        .map(|p| scope.spawn(move || self.inner.sketch(p)))
-                        .collect();
-                    // The calling thread takes the first shard itself.
-                    let mut out = Vec::with_capacity(parts.len());
-                    out.push(self.inner.sketch(&parts[0]));
-                    for h in handles {
-                        out.push(h.join().expect("shard thread panicked"));
-                    }
-                    out
-                });
-                GumbelMaxSketch::merge_all(results.iter())
-                    .expect("shard sketches share family/seed/k")
-            }
-        }
+        self.sketch(v)
+    }
+}
+
+fn clear_part(parts: &mut Vec<SparseVector>, idx: usize) {
+    if parts.len() <= idx {
+        parts.push(SparseVector::default());
+    } else {
+        parts[idx].ids.clear();
+        parts[idx].weights.clear();
     }
 }
 
 impl Sketcher for ShardedSketcher {
     fn name(&self) -> &'static str {
-        "sharded-fastgm"
+        "sharded"
     }
 
     fn family(&self) -> Family {
@@ -114,8 +122,52 @@ impl Sketcher for ShardedSketcher {
         self.inner.k
     }
 
-    fn sketch(&self, v: &SparseVector) -> GumbelMaxSketch {
-        self.sketch_sharded(v)
+    fn seed(&self) -> u64 {
+        self.inner.seed
+    }
+
+    /// Partition into `scratch.parts`, sketch each shard with its own
+    /// per-shard sub-scratch (reused across requests), and merge. The shard
+    /// team runs on scoped threads exactly as before; only the allocations
+    /// are pooled.
+    fn sketch_into(&self, v: &SparseVector, scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        let (k, seed) = (self.inner.k, self.inner.seed);
+        // Disjoint field borrows: parts (read by shard threads), per-shard
+        // scratches and outputs (one &mut each per thread).
+        let SketchScratch { parts, shard_scratches, shard_outs, .. } = scratch;
+        let nparts = Self::partition_into(v, self.shards, parts);
+        match nparts {
+            0 => out.reset(Family::Ordered, seed, k),
+            1 => {
+                if shard_scratches.is_empty() {
+                    shard_scratches.push(SketchScratch::new());
+                }
+                self.inner.sketch_counted_into(&parts[0], &mut shard_scratches[0], out);
+            }
+            _ => {
+                while shard_scratches.len() < nparts {
+                    shard_scratches.push(SketchScratch::new());
+                }
+                while shard_outs.len() < nparts - 1 {
+                    shard_outs.push(GumbelMaxSketch::empty(Family::Ordered, seed, k));
+                }
+                let (first_scratch, rest_scratches) = shard_scratches.split_at_mut(1);
+                std::thread::scope(|scope| {
+                    for ((p, sc), o) in parts[1..nparts]
+                        .iter()
+                        .zip(rest_scratches[..nparts - 1].iter_mut())
+                        .zip(shard_outs[..nparts - 1].iter_mut())
+                    {
+                        scope.spawn(move || self.inner.sketch_counted_into(p, sc, o));
+                    }
+                    // The calling thread takes the first shard itself.
+                    self.inner.sketch_counted_into(&parts[0], &mut first_scratch[0], out);
+                });
+                for o in &shard_outs[..nparts - 1] {
+                    out.merge_in_place(o).expect("shard sketches share family/seed/k");
+                }
+            }
+        }
     }
 }
 

@@ -11,8 +11,9 @@
 //! oracle sketch of the stream's de-duplicated weighted vector — the
 //! equivalence test below locks that in.
 
+use super::engine::SketchScratch;
 use super::order_stats::ElementRace;
-use super::{Family, GumbelMaxSketch, EMPTY_REGISTER};
+use super::{Family, GumbelMaxSketch, Sketcher, SparseVector, EMPTY_REGISTER};
 
 /// Incremental Stream-FastGM state. Feed elements with [`push`](Self::push);
 /// read the sketch at any time with [`sketch`](Self::sketch).
@@ -48,6 +49,22 @@ impl StreamFastGm {
 
     pub fn k(&self) -> usize {
         self.k
+    }
+
+    /// Re-initialize in place to a fresh `(k, seed)` state, keeping the
+    /// register allocations (scratch reuse). Equivalent to
+    /// `*self = StreamFastGm::new(k, seed)` without the allocation.
+    pub fn reset(&mut self, k: usize, seed: u64) {
+        self.k = k;
+        self.seed = seed;
+        self.y.clear();
+        self.y.resize(k, f64::INFINITY);
+        self.s.clear();
+        self.s.resize(k, EMPTY_REGISTER);
+        self.unfilled = k;
+        self.jstar = 0;
+        self.processed = 0;
+        self.released = 0;
     }
 
     /// Process one stream element `(id, weight)`. Weight must be the fixed
@@ -110,6 +127,60 @@ impl StreamFastGm {
             y: self.y.clone(),
             s: self.s.clone(),
         }
+    }
+
+    /// Copy the current registers into `out`, reusing its allocations.
+    pub fn write_into(&self, out: &mut GumbelMaxSketch) {
+        out.family = Family::Ordered;
+        out.seed = self.seed;
+        out.y.clear();
+        out.y.extend_from_slice(&self.y);
+        out.s.clear();
+        out.s.extend_from_slice(&self.s);
+    }
+}
+
+/// Batch adapter driving [`StreamFastGm`] over a [`SparseVector`]'s positive
+/// entries — the `stream` registry entry. Registers are identical to FastGM's
+/// (both are lossless early terminations of the same Ordered-family races),
+/// so this is chiefly useful for exercising the streaming path under the
+/// uniform [`Sketcher`] API.
+#[derive(Debug, Clone)]
+pub struct StreamSketcher {
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl StreamSketcher {
+    pub fn new(k: usize, seed: u64) -> Self {
+        assert!(k >= 1);
+        StreamSketcher { k, seed }
+    }
+}
+
+impl Sketcher for StreamSketcher {
+    fn name(&self) -> &'static str {
+        "stream"
+    }
+
+    fn family(&self) -> Family {
+        Family::Ordered
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn sketch_into(&self, v: &SparseVector, scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+        let st = scratch.stream_mut(self.k, self.seed);
+        for (id, w) in v.positive() {
+            st.push(id, w);
+        }
+        st.write_into(out);
     }
 }
 
@@ -211,6 +282,35 @@ mod tests {
             sf.released,
             n * k as u64
         );
+    }
+
+    #[test]
+    fn stream_sketcher_adapter_matches_fastgm() {
+        let mut r = SplitMix64::new(17);
+        let v = SparseVector::new(
+            (0..40u64).map(|i| i * 11 + 3).collect(),
+            (0..40).map(|_| r.next_exp() + 0.01).collect(),
+        );
+        let a = StreamSketcher::new(32, 9).sketch(&v);
+        let b = FastGm::new(32, 9).sketch(&v);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn reset_state_equals_fresh_state() {
+        let mut dirty = StreamFastGm::new(48, 1);
+        for id in 0..200u64 {
+            dirty.push(id, 0.5 + (id % 7) as f64);
+        }
+        dirty.reset(16, 5);
+        let mut fresh = StreamFastGm::new(16, 5);
+        for (id, w) in [(3u64, 0.5), (9, 2.0), (12, 0.25)] {
+            dirty.push(id, w);
+            fresh.push(id, w);
+        }
+        assert_eq!(dirty.sketch(), fresh.sketch());
+        assert_eq!(dirty.processed, fresh.processed);
+        assert_eq!(dirty.released, fresh.released);
     }
 
     #[test]

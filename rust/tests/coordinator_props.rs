@@ -70,7 +70,7 @@ fn protocol_roundtrip_property() {
                 ids.iter().map(|_| (r.next_f64() * 8.0).round() / 8.0).collect();
             let v = SparseVector::new(ids, weights);
             match r.next_range(0, 4) {
-                0 => Request::Sketch { name: format!("n{}", r.next_u32()), vector: v },
+                0 => Request::Sketch { name: format!("n{}", r.next_u32()), vector: v, algo: None },
                 1 => Request::Push {
                     stream: format!("s{}", r.next_range(0, 5)),
                     items: (0..r.next_range(0, 6))

@@ -1,0 +1,204 @@
+//! Engine-layer conformance: scratch reuse is lossless for EVERY registered
+//! algorithm, the registry round-trips names, and unknown `algo` values are
+//! clean error paths at the protocol/service boundary.
+//!
+//! The core suite iterates [`AlgorithmId::ALL`], so registering a new
+//! algorithm automatically subjects it to the bit-identical-reuse property —
+//! no test edit required (and an algorithm that misses the registry shows up
+//! as a name-coverage failure below).
+
+use fastgm::coordinator::protocol::{decode_request, Request, Response};
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::sketch::engine::{self, AlgorithmId, EngineParams, SketchScratch};
+use fastgm::sketch::{GumbelMaxSketch, Sketcher, SparseVector};
+use fastgm::util::rng::SplitMix64;
+
+fn random_vector(r: &mut SplitMix64, max_n: usize) -> SparseVector {
+    let n = r.next_range(1, max_n);
+    let mut v = SparseVector::default();
+    for _ in 0..n {
+        // Mix in non-positive weights: every sketcher must skip them.
+        let w = if r.next_f64() < 0.1 {
+            -r.next_f64()
+        } else {
+            r.next_exp() * 10f64.powi(r.next_range(0, 3) as i32 - 1)
+        };
+        v.push(r.next_u64(), w);
+    }
+    v
+}
+
+/// THE engine property: `sketch_into` with a dirty, shared, reused scratch
+/// is bit-identical to a fresh `sketch()` for every registered algorithm.
+/// One scratch is shared across all algorithms, k values, seeds and rounds —
+/// the worst-case cross-contamination a coordinator worker can see.
+#[test]
+fn scratch_reuse_is_bit_identical_for_every_algorithm() {
+    let mut r = SplitMix64::new(0xE2612E);
+    let mut scratch = SketchScratch::new();
+    let mut out = GumbelMaxSketch::empty(fastgm::sketch::Family::Ordered, 0, 1);
+    for round in 0..12 {
+        let k = [1usize, 2, 8, 33, 64][r.next_range(0, 4)];
+        let seed = r.next_u64();
+        let shards = r.next_range(1, 6);
+        let v = random_vector(&mut r, 60);
+        for id in AlgorithmId::ALL {
+            let s = engine::build(id, EngineParams::new(k, seed).with_shards(shards));
+            let fresh = s.sketch(&v);
+            assert_eq!(fresh.family, id.family());
+            assert_eq!(fresh.seed, seed);
+            assert_eq!(fresh.k(), k);
+            s.sketch_into(&v, &mut scratch, &mut out);
+            assert_eq!(
+                out,
+                fresh,
+                "algo '{}' diverged under scratch reuse (round {round}, k={k})",
+                s.name()
+            );
+        }
+    }
+    // The scratch really was used, not silently replaced by per-call
+    // allocations: the race pool (top level or inside shard sub-scratches)
+    // must have accumulated state from the FastGM-family rounds above.
+    assert!(
+        scratch.pooled_races() > 0,
+        "sketch_into never touched the shared scratch's race pool"
+    );
+}
+
+/// Same property under repeated reuse of ONE algorithm (the steady-state
+/// serving pattern), including empty and all-nonpositive vectors.
+#[test]
+fn steady_state_reuse_matches_fresh_for_edge_vectors() {
+    for id in AlgorithmId::ALL {
+        let s = engine::build(id, EngineParams::new(16, 7).with_shards(3));
+        let mut scratch = SketchScratch::new();
+        let mut out = GumbelMaxSketch::empty(s.family(), s.seed(), s.k());
+        let vectors = [
+            SparseVector::new((0..50).collect(), (0..50).map(|i| 0.1 + i as f64).collect()),
+            SparseVector::default(),
+            SparseVector::new(vec![1, 2], vec![0.0, -3.0]),
+            SparseVector::new(vec![9], vec![2.5]),
+            SparseVector::new((0..200).collect(), vec![0.5; 200]),
+        ];
+        for v in &vectors {
+            s.sketch_into(v, &mut scratch, &mut out);
+            assert_eq!(out, s.sketch(v), "algo '{}' diverged on edge vector", s.name());
+        }
+    }
+}
+
+#[test]
+fn registry_covers_every_algorithm_name() {
+    for id in AlgorithmId::ALL {
+        assert_eq!(AlgorithmId::from_name(id.name()).unwrap(), id);
+        let built = engine::build_named(id.name(), EngineParams::new(4, 1)).unwrap();
+        assert_eq!(built.name(), id.name());
+        assert_eq!(built.family(), id.family());
+    }
+    assert!(engine::build_named("not-an-algo", EngineParams::new(4, 1)).is_err());
+}
+
+/// Unknown `algo` at the protocol layer: the wire accepts the string (no
+/// schema validation on decode), the service resolves it through the
+/// registry and answers with an error response naming the bad algorithm.
+#[test]
+fn unknown_algo_is_a_protocol_error_response() {
+    let line = r#"{"op":"sketch","name":"d","vector":{"ids":[1,2],"weights":[1,0.5]},"algo":"quantum"}"#;
+    let req = decode_request(line).expect("decode must not validate algo names");
+    let c = Coordinator::new(CoordinatorConfig {
+        k: 16,
+        workers: 1,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let resp = c.call(req);
+    let Response::Error { message } = resp else {
+        panic!("unknown algo must yield an error response, got {resp:?}")
+    };
+    assert!(message.contains("unknown sketch algorithm 'quantum'"), "{message}");
+    // Known names on the same wire shape succeed.
+    let ok = decode_request(
+        r#"{"op":"sketch","name":"d","vector":{"ids":[1,2],"weights":[1,0.5]},"algo":"icws"}"#,
+    )
+    .unwrap();
+    assert!(matches!(c.call(ok), Response::Sketch { .. }));
+    c.shutdown();
+}
+
+/// The per-request `algo` field makes non-race families storable, so the
+/// estimators those sketches cannot serve must fail loudly (not return
+/// silently biased numbers), and the LSH index must reject sketches its
+/// default-algo query path could never match.
+#[test]
+fn estimators_and_lsh_fail_loudly_for_incompatible_families() {
+    let c = Coordinator::new(CoordinatorConfig {
+        k: 16,
+        workers: 1,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let v = SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+    for name in ["icws", "bagminhash"] {
+        for reg in ["a", "b"] {
+            c.call(Request::Sketch {
+                name: format!("{name}-{reg}"),
+                vector: v.clone(),
+                algo: Some(name.to_string()),
+            });
+        }
+        let wj =
+            c.call(Request::WeightedJaccard { a: format!("{name}-a"), b: format!("{name}-b") });
+        let Response::Error { message } = wj else { panic!("J_W on {name} must error: {wj:?}") };
+        assert!(message.contains("cardinality"), "{message}");
+        let jp = c.call(Request::Jaccard { a: format!("{name}-a"), b: format!("{name}-b") });
+        assert!(matches!(jp, Response::Error { .. }), "J_P on {name} must error: {jp:?}");
+        // Default-algo LshQuery could never match these — reject at insert.
+        let ins = c.call(Request::LshInsert { name: format!("{name}-a") });
+        assert!(matches!(ins, Response::Error { .. }), "LshInsert of {name} must error: {ins:?}");
+    }
+    c.shutdown();
+
+    // A coordinator whose DEFAULT algo is a non-race family cannot serve
+    // LSH at all (the query scorer is J_P): both ends refuse up front with
+    // one clear message instead of erroring candidate-by-candidate.
+    let mh = Coordinator::new(CoordinatorConfig {
+        k: 16,
+        workers: 1,
+        algo: "minhash".into(),
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    mh.call(Request::Sketch { name: "m".into(), vector: v.clone(), algo: None });
+    let ins = mh.call(Request::LshInsert { name: "m".into() });
+    let Response::Error { message } = ins else { panic!("minhash LshInsert must error: {ins:?}") };
+    assert!(message.contains("LSH requires"), "{message}");
+    let q = mh.call(Request::LshQuery { vector: v, limit: 1 });
+    assert!(matches!(q, Response::Error { .. }), "minhash LshQuery must error: {q:?}");
+    mh.shutdown();
+}
+
+/// Requests may pick any registry algorithm per call; the stored sketch
+/// matches a direct registry build at the coordinator's (k, seed).
+#[test]
+fn every_algorithm_is_reachable_through_the_coordinator() {
+    let c = Coordinator::new(CoordinatorConfig {
+        k: 32,
+        workers: 2,
+        ..CoordinatorConfig::default()
+    })
+    .unwrap();
+    let v = SparseVector::new(vec![3, 5, 8, 13], vec![1.0, 0.25, 2.0, 0.5]);
+    for id in AlgorithmId::ALL {
+        let Response::Sketch { sketch, .. } = c.call(Request::Sketch {
+            name: id.name().to_string(),
+            vector: v.clone(),
+            algo: Some(id.name().to_string()),
+        }) else {
+            panic!("algo '{}' unreachable through the coordinator", id.name())
+        };
+        let want = engine::build(id, EngineParams::new(32, 42).with_shards(4)).sketch(&v);
+        assert_eq!(sketch, want, "coordinator result diverged for '{}'", id.name());
+    }
+    c.shutdown();
+}

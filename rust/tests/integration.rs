@@ -157,6 +157,7 @@ fn config_file_drives_coordinator() {
     let Response::Sketch { sketch, .. } = coord.call(Request::Sketch {
         name: "x".into(),
         vector: SparseVector::new(vec![1], vec![1.0]),
+        algo: None,
     }) else {
         panic!("expected sketch")
     };
@@ -250,7 +251,7 @@ fn coordinator_sheds_under_overload_but_survives() {
     // Flood with CPU-heavy sketches.
     let v = SparseVector::new((0..3000u64).collect(), vec![1.0; 3000]);
     let rxs: Vec<_> = (0..64)
-        .map(|i| coord.submit(Request::Sketch { name: format!("x{i}"), vector: v.clone() }))
+        .map(|i| coord.submit(Request::Sketch { name: format!("x{i}"), vector: v.clone(), algo: None }))
         .collect();
     let mut ok = 0;
     let mut shed = 0;

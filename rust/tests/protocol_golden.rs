@@ -99,11 +99,18 @@ fn golden_responses_cover_every_type() {
 #[test]
 fn golden_values_decode_losslessly() {
     let lines = golden_lines(REQUESTS);
-    let Request::Sketch { name, vector } = decode_request(lines[0]).unwrap() else {
+    let Request::Sketch { name, vector, algo } = decode_request(lines[0]).unwrap() else {
         panic!("first golden line must be a sketch request")
     };
     assert_eq!(name, "doc1");
     assert_eq!(vector, SparseVector::new(vec![1, 5, u64::MAX], vec![0.5, 2.0, 1.25]));
+    assert_eq!(algo, None, "algo-less golden must decode to the default");
+
+    // The last golden line carries an explicit engine-registry algo.
+    let Request::Sketch { algo, .. } = decode_request(lines[lines.len() - 1]).unwrap() else {
+        panic!("last golden line must be the algo-bearing sketch request")
+    };
+    assert_eq!(algo.as_deref(), Some("pminhash"));
 
     let Request::Push { stream, items } = decode_request(lines[3]).unwrap() else {
         panic!("fourth golden line must be a push request")

@@ -81,7 +81,7 @@ fn coordinator_shard_routing_is_transparent() {
     let single_coord = mk(1, usize::MAX);
     let get = |c: &Coordinator| -> fastgm::sketch::GumbelMaxSketch {
         let Response::Sketch { sketch, .. } =
-            c.call(Request::Sketch { name: "v".into(), vector: v.clone() })
+            c.call(Request::Sketch { name: "v".into(), vector: v.clone(), algo: None })
         else {
             panic!("expected sketch response")
         };
@@ -112,7 +112,7 @@ fn concurrent_sharded_requests_are_correct() {
         .iter()
         .enumerate()
         .map(|(i, v)| {
-            c.submit(Request::Sketch { name: format!("v{i}"), vector: v.clone() })
+            c.submit(Request::Sketch { name: format!("v{i}"), vector: v.clone(), algo: None })
         })
         .collect();
     let fg = FastGm::new(32, 42); // coordinator default seed
