@@ -1,0 +1,166 @@
+//! SIMILARITY SERVING, END TO END: the keyed sketch store over the wire.
+//!
+//!   1. start the coordinator + TCP server, `upsert` a document corpus
+//!      (each vector sketched on the worker pool, LSH-indexed on arrival),
+//!   2. answer `topk` near-duplicate queries (band probe + `estimate_jp`
+//!      re-rank) and record the results,
+//!   3. `snapshot` the store, **stop the server completely**, start a
+//!      fresh one, `restore` — and verify the restored store answers the
+//!      exact same queries with the exact same rankings (warm restart
+//!      without recomputing a single sketch),
+//!   4. report throughput, self-recall, and the sub-linear candidate rate
+//!      from the server's own metrics.
+//!
+//! Runs offline in seconds; CI uses it as the serving-path smoke test.
+//!
+//! ```bash
+//! cargo run --release --example similarity_serve
+//! ```
+
+use fastgm::coordinator::client::Client;
+use fastgm::coordinator::protocol::{Request, Response};
+use fastgm::coordinator::server::Server;
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::data::corpus::Corpus;
+use fastgm::sketch::SparseVector;
+use fastgm::util::rng::SplitMix64;
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_DOCS: usize = 400;
+const K: usize = 128;
+const SEED: u64 = 42;
+const QUERIES: usize = 25;
+const LIMIT: usize = 5;
+
+fn config() -> CoordinatorConfig {
+    CoordinatorConfig { k: K, seed: SEED, workers: 4, ..Default::default() }
+}
+
+/// Keep ~`keep` of the doc's mass, replace the rest with fresh ids.
+fn perturb(rng: &mut SplitMix64, v: &SparseVector, keep: f64) -> SparseVector {
+    let mut out = SparseVector::default();
+    for (id, w) in v.positive() {
+        if rng.next_f64() < keep {
+            out.push(id, w);
+        } else {
+            out.push(rng.next_u64() | (1 << 63), w);
+        }
+    }
+    out
+}
+
+fn counter(snapshot: &fastgm::util::json::Value, name: &str) -> f64 {
+    snapshot
+        .get("counters")
+        .and_then(|c| c.get(name))
+        .and_then(|v| v.as_f64())
+        .unwrap_or(0.0)
+}
+
+fn main() -> anyhow::Result<()> {
+    fastgm::util::logger::init();
+
+    // ---- Phase 1: serve + ingest via `upsert`. --------------------------
+    let coordinator = Arc::new(Coordinator::new(config())?);
+    let server = Server::start(coordinator.clone(), "127.0.0.1:0")?;
+    let corpus = Corpus::by_name("real-sim", 7).expect("real-sim corpus analog");
+    let docs: Vec<SparseVector> = corpus.vectors(N_DOCS);
+    let mut client = Client::connect(&server.addr.to_string())?;
+    let t0 = Instant::now();
+    for (base, chunk) in docs.chunks(64).enumerate().map(|(i, c)| (i * 64, c)) {
+        let reqs: Vec<Request> = chunk
+            .iter()
+            .enumerate()
+            .map(|(j, d)| Request::Upsert { key: format!("doc{}", base + j), vector: d.clone() })
+            .collect();
+        for r in client.call_pipelined(&reqs)? {
+            anyhow::ensure!(matches!(r, Response::Ack { .. }), "upsert failed: {r:?}");
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "upserted {N_DOCS} docs in {dt:.2}s ({:.0} docs/s over TCP, sketch+index, k={K})",
+        N_DOCS as f64 / dt
+    );
+    let stats = client.store_stats()?;
+    println!("store stats: {stats}");
+    anyhow::ensure!(
+        stats.get("size").and_then(|v| v.as_f64()) == Some(N_DOCS as f64),
+        "store size drifted: {stats}"
+    );
+
+    // ---- Phase 2: top-k queries against the live store. -----------------
+    let mut rng = SplitMix64::new(2024);
+    let targets: Vec<usize> = (0..QUERIES).map(|_| rng.next_range(0, N_DOCS - 1)).collect();
+    let query_vecs: Vec<SparseVector> =
+        targets.iter().map(|&t| perturb(&mut rng, &docs[t], 0.9)).collect();
+    let t0 = Instant::now();
+    let mut live_hits = Vec::with_capacity(QUERIES);
+    for q in &query_vecs {
+        live_hits.push(client.topk(q.clone(), LIMIT)?);
+    }
+    let qdt = t0.elapsed().as_secs_f64();
+    let self_recall = targets
+        .iter()
+        .zip(&live_hits)
+        .filter(|(t, hits)| hits.first().map(|h| h.0 == format!("doc{t}")) == Some(true))
+        .count();
+    println!(
+        "{QUERIES} top-{LIMIT} queries in {:.1} ms ({:.2} ms each), self-recall {}/{QUERIES}",
+        qdt * 1e3,
+        qdt * 1e3 / QUERIES as f64,
+        self_recall
+    );
+
+    // ---- Phase 3: snapshot → full server restart → restore. -------------
+    let snap_path =
+        std::env::temp_dir().join(format!("fastgm-similarity-{}.fgms", std::process::id()));
+    let snap_str = snap_path.to_string_lossy().to_string();
+    println!("{}", client.snapshot(&snap_str)?);
+    drop(client);
+    server.stop();
+    // stop() joined every connection, so this Arc is the last one standing.
+    match Arc::try_unwrap(coordinator) {
+        Ok(c) => c.shutdown(),
+        Err(_) => anyhow::bail!("server.stop() left a coordinator reference alive"),
+    }
+
+    let coordinator = Arc::new(Coordinator::new(config())?);
+    let server = Server::start(coordinator.clone(), "127.0.0.1:0")?;
+    let mut client = Client::connect(&server.addr.to_string())?;
+    println!("{}", client.restore(&snap_str)?);
+    let mut restored_hits = Vec::with_capacity(QUERIES);
+    for q in &query_vecs {
+        restored_hits.push(client.topk(q.clone(), LIMIT)?);
+    }
+    anyhow::ensure!(
+        live_hits == restored_hits,
+        "restored store ranked neighbors differently than the live store"
+    );
+    println!("restored store reproduces all {QUERIES} rankings exactly ✓");
+
+    // ---- Phase 4: candidate rate + mutation sanity. ---------------------
+    let Response::MetricsDump { snapshot } = client.call(&Request::Metrics)? else {
+        anyhow::bail!("bad metrics response")
+    };
+    let probes = counter(&snapshot, "ops.topk").max(1.0);
+    let avg_candidates = counter(&snapshot, "topk.candidates") / probes;
+    println!(
+        "avg LSH candidates per query: {avg_candidates:.1} of {N_DOCS} stored ({:.1}%)",
+        100.0 * avg_candidates / N_DOCS as f64
+    );
+    println!("{}", client.delete("doc0")?);
+    let stats = client.store_stats()?;
+    anyhow::ensure!(
+        stats.get("size").and_then(|v| v.as_f64()) == Some((N_DOCS - 1) as f64),
+        "delete did not shrink the store: {stats}"
+    );
+
+    server.stop();
+    std::fs::remove_file(&snap_path).ok();
+    anyhow::ensure!(self_recall as f64 / QUERIES as f64 > 0.9, "self-recall too low");
+    anyhow::ensure!(avg_candidates < N_DOCS as f64 / 2.0, "probing is not sub-linear");
+    println!("\nsimilarity_serve OK");
+    Ok(())
+}

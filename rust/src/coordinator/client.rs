@@ -1,8 +1,13 @@
 //! Blocking TCP client for the JSON-lines protocol — used by the CLI
-//! (`fastgm client`), the examples and the load generator in
-//! `examples/serve_e2e.rs`.
+//! (`fastgm client` / `store` / `topk` / `snapshot`), the examples and the
+//! load generators in `examples/serve_e2e.rs` and
+//! `examples/similarity_serve.rs`. The typed helpers below unwrap the
+//! expected response variant and turn server-side `error` replies into
+//! `Err`, so callers don't re-match every response.
 
 use super::protocol::{self, Request, Response};
+use crate::sketch::SparseVector;
+use crate::util::json::Value;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
@@ -47,6 +52,59 @@ impl Client {
         }
         Ok(out)
     }
+
+    /// Call and expect an `ack`; server-side errors become `Err`.
+    fn call_ack(&mut self, req: &Request) -> anyhow::Result<String> {
+        match self.call(req)? {
+            Response::Ack { info } => Ok(info),
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected ack, got {other:?}"),
+        }
+    }
+
+    // -- typed keyed-store helpers ---------------------------------------
+
+    /// Upsert `vector` into the keyed store under `key`.
+    pub fn upsert(&mut self, key: &str, vector: SparseVector) -> anyhow::Result<String> {
+        self.call_ack(&Request::Upsert { key: key.to_string(), vector })
+    }
+
+    /// Delete `key` from the keyed store (idempotent).
+    pub fn delete(&mut self, key: &str) -> anyhow::Result<String> {
+        self.call_ack(&Request::Delete { key: key.to_string() })
+    }
+
+    /// Top-`limit` store entries most similar to `vector`.
+    pub fn topk(
+        &mut self,
+        vector: SparseVector,
+        limit: usize,
+    ) -> anyhow::Result<Vec<(String, f64)>> {
+        match self.call(&Request::TopK { vector, limit })? {
+            Response::TopK { hits } => Ok(hits),
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected topk, got {other:?}"),
+        }
+    }
+
+    /// Keyed-store statistics (size, shard occupancy, index shape).
+    pub fn store_stats(&mut self) -> anyhow::Result<Value> {
+        match self.call(&Request::StoreStats)? {
+            Response::Stats { stats } => Ok(stats),
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected stats, got {other:?}"),
+        }
+    }
+
+    /// Freeze the server's keyed store to `path` (server-side file).
+    pub fn snapshot(&mut self, path: &str) -> anyhow::Result<String> {
+        self.call_ack(&Request::Snapshot { path: path.to_string() })
+    }
+
+    /// Replace the server's keyed store from the snapshot at `path`.
+    pub fn restore(&mut self, path: &str) -> anyhow::Result<String> {
+        self.call_ack(&Request::Restore { path: path.to_string() })
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +140,25 @@ mod tests {
     #[test]
     fn connect_failure_is_clean_error() {
         assert!(Client::connect("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn typed_store_helpers_roundtrip() {
+        let coord = Arc::new(
+            Coordinator::new(CoordinatorConfig { k: 32, workers: 2, ..Default::default() })
+                .unwrap(),
+        );
+        let server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let v = SparseVector::new(vec![1, 2], vec![1.0, 0.5]);
+        assert!(client.upsert("a", v.clone()).unwrap().contains("upserted"));
+        let hits = client.topk(v, 1).unwrap();
+        assert_eq!(hits[0].0, "a");
+        let stats = client.store_stats().unwrap();
+        assert_eq!(stats.get("size").and_then(|x| x.as_f64()), Some(1.0));
+        assert!(client.delete("a").unwrap().contains("deleted"));
+        // Server-side error replies surface as Err, not as a panic.
+        assert!(client.restore("/no/such/file.fgms").is_err());
+        server.stop();
     }
 }

@@ -5,8 +5,16 @@
 use crate::util::json::Value;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
+
+/// Lock `m`, recovering the data if a panicking holder poisoned it. A
+/// worker that panics mid-update must not wedge every later `/metrics`
+/// read and counter bump — the maps only ever hold plain counters/gauges,
+/// so the pre-panic value is always safe to keep serving.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Latency histogram with power-of-two microsecond buckets (1µs … ~17min).
 #[derive(Debug, Default)]
@@ -80,26 +88,24 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, delta: u64) {
-        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += delta;
+        *lock_unpoisoned(&self.counters).entry(name.to_string()).or_insert(0) += delta;
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+        lock_unpoisoned(&self.counters).get(name).copied().unwrap_or(0)
     }
 
     /// Set a last-value-wins gauge (e.g. `queue_depth`).
     pub fn gauge_set(&self, name: &str, value: f64) {
-        self.gauges.lock().unwrap().insert(name.to_string(), value);
+        lock_unpoisoned(&self.gauges).insert(name.to_string(), value);
     }
 
     pub fn gauge(&self, name: &str) -> f64 {
-        self.gauges.lock().unwrap().get(name).copied().unwrap_or(0.0)
+        lock_unpoisoned(&self.gauges).get(name).copied().unwrap_or(0.0)
     }
 
     pub fn hist(&self, name: &str) -> std::sync::Arc<LatencyHist> {
-        self.latencies
-            .lock()
-            .unwrap()
+        lock_unpoisoned(&self.latencies)
             .entry(name.to_string())
             .or_default()
             .clone()
@@ -112,17 +118,17 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> Value {
-        let counters = self.counters.lock().unwrap();
+        let counters = lock_unpoisoned(&self.counters);
         let mut items: Vec<(String, Value)> = counters
             .iter()
             .map(|(k, v)| (k.clone(), Value::num(*v as f64)))
             .collect();
         items.sort_by(|a, b| a.0.cmp(&b.0));
-        let gauges = self.gauges.lock().unwrap();
+        let gauges = lock_unpoisoned(&self.gauges);
         let mut gauge_items: Vec<(String, Value)> =
             gauges.iter().map(|(k, v)| (k.clone(), Value::num(*v))).collect();
         gauge_items.sort_by(|a, b| a.0.cmp(&b.0));
-        let lat = self.latencies.lock().unwrap();
+        let lat = lock_unpoisoned(&self.latencies);
         let mut lat_items: Vec<(String, Value)> = lat
             .iter()
             .map(|(k, h)| {
@@ -190,6 +196,42 @@ mod tests {
         assert_eq!(
             v.get("gauges").unwrap().get("queue_depth").unwrap().as_f64(),
             Some(3.0)
+        );
+    }
+
+    /// A caught panic while the metrics mutexes are held poisons them;
+    /// every later counter bump, gauge update, histogram record and
+    /// snapshot must keep working on the pre-panic data instead of
+    /// panicking on `PoisonError` and wedging `/metrics` for good.
+    #[test]
+    fn poisoned_mutexes_recover() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.gauge_set("g", 7.0);
+        m.observe("op", 0.001);
+        // Poison all three maps at once: hold the raw locks across a panic.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _c = m.counters.lock().unwrap();
+            let _g = m.gauges.lock().unwrap();
+            let _l = m.latencies.lock().unwrap();
+            panic!("worker panicked mid-update");
+        }));
+        assert!(caught.is_err());
+        assert!(m.counters.is_poisoned(), "test setup must actually poison");
+        // Every metrics surface still works, with pre-panic data intact.
+        m.incr("a");
+        m.gauge_set("g", 9.0);
+        m.observe("op", 0.002);
+        assert_eq!(m.counter("a"), 2);
+        assert_eq!(m.gauge("g"), 9.0);
+        let snap = m.snapshot();
+        assert_eq!(
+            snap.get("counters").unwrap().get("ops.op").unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert_eq!(
+            snap.get("latency").unwrap().get("latency.op").unwrap().get("count").unwrap().as_f64(),
+            Some(2.0)
         );
     }
 

@@ -14,6 +14,10 @@
 //! * [`backpressure`] — per-worker bounded admission with shed-or-block
 //!   policy and queue-depth gauges.
 //! * [`registry`] — named sketch & stream state store.
+//! * [`store`] — the keyed similarity-serving store: sharded key→sketch
+//!   map with an incrementally maintained LSH index, top-k queries
+//!   (band-probe or brute-scan, router's choice) and versioned binary
+//!   snapshot/restore via [`crate::sketch::codec`].
 //! * [`merger`] — distributed-site sketch merge (§2.3 mergeability).
 //! * [`metrics`] — counters + latency histograms, surfaced over the wire.
 //! * [`server`] / [`client`] — TCP JSON-lines transport.
@@ -25,6 +29,7 @@ pub mod protocol;
 pub mod metrics;
 pub mod backpressure;
 pub mod registry;
+pub mod store;
 pub mod router;
 pub mod worker;
 pub mod batcher;

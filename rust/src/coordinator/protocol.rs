@@ -35,6 +35,21 @@ pub enum Request {
     LshInsert { name: String },
     /// Query the LSH index with a fresh vector.
     LshQuery { vector: SparseVector, limit: usize },
+    /// Sketch a vector (default algo) and upsert it into the keyed store
+    /// under `key`, keeping the store's LSH index in sync.
+    Upsert { key: String, vector: SparseVector },
+    /// Remove `key` from the keyed store and its LSH index (idempotent).
+    Delete { key: String },
+    /// Top-`limit` most similar store entries to a fresh vector:
+    /// band-probe + full-sketch re-rank (or a brute scan on small stores).
+    TopK { vector: SparseVector, limit: usize },
+    /// Keyed-store statistics (size, shard occupancy, index shape).
+    StoreStats,
+    /// Freeze the keyed store to `path` in the versioned binary snapshot
+    /// format (`sketch::codec`).
+    Snapshot { path: String },
+    /// Replace the keyed store contents from the snapshot at `path`.
+    Restore { path: String },
     /// Metrics snapshot.
     Metrics,
     Ping,
@@ -47,6 +62,8 @@ pub enum Response {
     Estimate { value: f64 },
     TopK { hits: Vec<(String, f64)> },
     MetricsDump { snapshot: Value },
+    /// Keyed-store statistics (the `store_stats` op's reply).
+    Stats { stats: Value },
     Error { message: String },
     Pong,
 }
@@ -146,6 +163,29 @@ impl Request {
                 ("vector", vector_to_json(vector)),
                 ("limit", Value::num(*limit as f64)),
             ]),
+            Request::Upsert { key, vector } => Value::obj(vec![
+                ("op", Value::str("upsert")),
+                ("key", Value::str(key.clone())),
+                ("vector", vector_to_json(vector)),
+            ]),
+            Request::Delete { key } => Value::obj(vec![
+                ("op", Value::str("delete")),
+                ("key", Value::str(key.clone())),
+            ]),
+            Request::TopK { vector, limit } => Value::obj(vec![
+                ("op", Value::str("topk")),
+                ("vector", vector_to_json(vector)),
+                ("limit", Value::num(*limit as f64)),
+            ]),
+            Request::StoreStats => Value::obj(vec![("op", Value::str("store_stats"))]),
+            Request::Snapshot { path } => Value::obj(vec![
+                ("op", Value::str("snapshot")),
+                ("path", Value::str(path.clone())),
+            ]),
+            Request::Restore { path } => Value::obj(vec![
+                ("op", Value::str("restore")),
+                ("path", Value::str(path.clone())),
+            ]),
             Request::Metrics => Value::obj(vec![("op", Value::str("metrics"))]),
             Request::Ping => Value::obj(vec![("op", Value::str("ping"))]),
         }
@@ -224,6 +264,18 @@ impl Request {
                 vector: vector_from_json(v.req("vector")?)?,
                 limit: v.req_usize("limit")?,
             },
+            "upsert" => Request::Upsert {
+                key: v.req_str("key")?.to_string(),
+                vector: vector_from_json(v.req("vector")?)?,
+            },
+            "delete" => Request::Delete { key: v.req_str("key")?.to_string() },
+            "topk" => Request::TopK {
+                vector: vector_from_json(v.req("vector")?)?,
+                limit: v.req_usize("limit")?,
+            },
+            "store_stats" => Request::StoreStats,
+            "snapshot" => Request::Snapshot { path: v.req_str("path")?.to_string() },
+            "restore" => Request::Restore { path: v.req_str("path")?.to_string() },
             "metrics" => Request::Metrics,
             "ping" => Request::Ping,
             other => anyhow::bail!("unknown op '{other}'"),
@@ -243,6 +295,12 @@ impl Request {
             Request::Merge { .. } => "merge",
             Request::LshInsert { .. } => "lsh_insert",
             Request::LshQuery { .. } => "lsh_query",
+            Request::Upsert { .. } => "upsert",
+            Request::Delete { .. } => "delete",
+            Request::TopK { .. } => "topk",
+            Request::StoreStats => "store_stats",
+            Request::Snapshot { .. } => "snapshot",
+            Request::Restore { .. } => "restore",
             Request::Metrics => "metrics",
             Request::Ping => "ping",
         }
@@ -287,6 +345,11 @@ impl Response {
                 ("type", Value::str("metrics")),
                 ("snapshot", snapshot.clone()),
             ]),
+            Response::Stats { stats } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("stats")),
+                ("stats", stats.clone()),
+            ]),
             Response::Error { message } => Value::obj(vec![
                 ("ok", Value::Bool(false)),
                 ("type", Value::str("error")),
@@ -327,6 +390,7 @@ impl Response {
                     .collect::<anyhow::Result<_>>()?,
             },
             "metrics" => Response::MetricsDump { snapshot: v.req("snapshot")?.clone() },
+            "stats" => Response::Stats { stats: v.req("stats")?.clone() },
             "error" => Response::Error { message: v.req_str("message")?.to_string() },
             "pong" => Response::Pong,
             other => anyhow::bail!("unknown response type '{other}'"),
@@ -385,7 +449,13 @@ mod tests {
         roundtrip_req(Request::WeightedJaccard { a: "x".into(), b: "y".into() });
         roundtrip_req(Request::Merge { names: vec!["a".into(), "b".into()], out: "u".into() });
         roundtrip_req(Request::LshInsert { name: "doc1".into() });
-        roundtrip_req(Request::LshQuery { vector: v, limit: 10 });
+        roundtrip_req(Request::LshQuery { vector: v.clone(), limit: 10 });
+        roundtrip_req(Request::Upsert { key: "doc1".into(), vector: v.clone() });
+        roundtrip_req(Request::Delete { key: "doc1".into() });
+        roundtrip_req(Request::TopK { vector: v, limit: 5 });
+        roundtrip_req(Request::StoreStats);
+        roundtrip_req(Request::Snapshot { path: "/tmp/fgm.snap".into() });
+        roundtrip_req(Request::Restore { path: "/tmp/fgm.snap".into() });
         roundtrip_req(Request::Metrics);
         roundtrip_req(Request::Ping);
     }
@@ -399,8 +469,31 @@ mod tests {
         roundtrip_resp(Response::Ack { info: "stored".into() });
         roundtrip_resp(Response::Estimate { value: 3.5 });
         roundtrip_resp(Response::TopK { hits: vec![("a".into(), 0.9), ("b".into(), 0.5)] });
+        roundtrip_resp(Response::Stats {
+            stats: Value::obj(vec![
+                ("size", Value::num(3.0)),
+                ("shards", Value::num(8.0)),
+            ]),
+        });
         roundtrip_resp(Response::Error { message: "nope".into() });
         roundtrip_resp(Response::Pong);
+    }
+
+    #[test]
+    fn store_requests_require_their_fields() {
+        assert!(decode_request(r#"{"op":"upsert","key":"a"}"#).is_err()); // no vector
+        assert!(decode_request(r#"{"op":"delete"}"#).is_err()); // no key
+        assert!(
+            decode_request(r#"{"op":"topk","vector":{"ids":[1],"weights":[1]}}"#).is_err(),
+            "topk without a limit must not decode"
+        );
+        assert!(decode_request(r#"{"op":"snapshot"}"#).is_err()); // no path
+        assert!(decode_request(r#"{"op":"restore"}"#).is_err()); // no path
+        let ok = decode_request(
+            r#"{"op":"upsert","key":"a","vector":{"ids":[1],"weights":[0.5]}}"#,
+        )
+        .unwrap();
+        assert_eq!(ok.op(), "upsert");
     }
 
     #[test]

@@ -27,6 +27,16 @@ pub enum SketchPlan {
     ShardedFastGm,
 }
 
+/// Execution plan for a keyed-store `topk` request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TopKPlan {
+    /// Score every stored entry (exact; wins while the store is small —
+    /// banding overhead plus imperfect recall buy nothing at that size).
+    FullScan,
+    /// Banded LSH candidate probe, then full-sketch re-rank (sub-linear).
+    BandProbe,
+}
+
 #[derive(Debug, Clone, Copy)]
 pub struct RouterConfig {
     /// Largest dense length any compiled bucket accepts (0 = accel off).
@@ -38,6 +48,9 @@ pub struct RouterConfig {
     /// Smallest n⁺ routed to the shard team: each shard re-pays FastGM's
     /// `O(k ln k)` FastSearch term, so small vectors stay single-threaded.
     pub shard_min_nplus: usize,
+    /// Largest store size answered by a brute-force scan; bigger stores go
+    /// through the banded LSH probe.
+    pub topk_scan_max: usize,
 }
 
 impl Default for RouterConfig {
@@ -47,6 +60,7 @@ impl Default for RouterConfig {
             min_density: 0.25,
             shards: 1,
             shard_min_nplus: 4096,
+            topk_scan_max: 64,
         }
     }
 }
@@ -72,6 +86,15 @@ impl Router {
             SketchPlan::ShardedFastGm
         } else {
             SketchPlan::Engine(algo)
+        }
+    }
+
+    /// Plan a keyed-store `topk` request from the current store size.
+    pub fn plan_topk(&self, store_len: usize) -> TopKPlan {
+        if store_len <= self.cfg.topk_scan_max {
+            TopKPlan::FullScan
+        } else {
+            TopKPlan::BandProbe
         }
     }
 
@@ -178,6 +201,19 @@ mod tests {
             }
             assert_eq!(r.plan_sketch(algo, 1_000_000), SketchPlan::Engine(algo));
         }
+    }
+
+    #[test]
+    fn topk_plans_by_store_size() {
+        let r = Router::new(RouterConfig { topk_scan_max: 64, ..RouterConfig::default() });
+        assert_eq!(r.plan_topk(0), TopKPlan::FullScan);
+        assert_eq!(r.plan_topk(64), TopKPlan::FullScan);
+        assert_eq!(r.plan_topk(65), TopKPlan::BandProbe);
+        assert_eq!(r.plan_topk(1_000_000), TopKPlan::BandProbe);
+        // scan_max = 0 probes everything non-empty.
+        let always = Router::new(RouterConfig { topk_scan_max: 0, ..RouterConfig::default() });
+        assert_eq!(always.plan_topk(1), TopKPlan::BandProbe);
+        assert_eq!(always.plan_topk(0), TopKPlan::FullScan);
     }
 
     #[test]

@@ -1,18 +1,38 @@
 //! TCP JSON-lines server: one accept loop, one thread per connection, each
 //! line a [`protocol::Request`], each reply a single JSON line. Shutdown is
-//! cooperative: a flag plus a self-connection to unblock `accept`.
+//! cooperative AND fully joined: a flag plus a self-connection unblock
+//! `accept`, per-connection read timeouts let idle connections observe the
+//! flag, and [`Server::stop`] joins every live connection thread — it can
+//! never return while a request is still being processed or a response is
+//! mid-write.
 
 use super::protocol::{self, Response};
 use super::service::Coordinator;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often a blocked connection read/write re-checks the shutdown flag.
+/// Bounds how long [`Server::stop`] waits on connections with no traffic.
+const IDLE_POLL: Duration = Duration::from_millis(50);
+
+/// After shutdown is signalled, how many more write polls a non-draining
+/// client gets to accept an in-flight response before the connection is
+/// dropped (`IDLE_POLL` each — ~2s total). Slow-but-alive clients are
+/// never torn during normal operation: write timeouts just retry.
+const SHUTDOWN_DRAIN_POLLS: u32 = 40;
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
-    handle: Option<std::thread::JoinHandle<()>>,
+    handle: Option<JoinHandle<()>>,
+    /// Live per-connection threads, joined by [`Server::stop`]. The
+    /// acceptor reaps finished entries as new connections arrive, so the
+    /// vector tracks open connections, not connection history.
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl Server {
@@ -22,7 +42,9 @@ impl Server {
             .map_err(|e| anyhow::anyhow!("cannot bind '{addr}': {e}"))?;
         let local = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let flag = shutdown.clone();
+        let conn_reg = conns.clone();
         let handle = std::thread::Builder::new()
             .name("fastgm-acceptor".into())
             .spawn(move || {
@@ -33,22 +55,40 @@ impl Server {
                     }
                     match conn {
                         Ok(stream) => {
+                            // The timeouts turn blocking reads/writes into
+                            // periodic shutdown-flag checks — see
+                            // read_line_shutdown_aware / write_all_
+                            // shutdown_aware below.
+                            let _ = stream.set_read_timeout(Some(IDLE_POLL));
+                            let _ = stream.set_write_timeout(Some(IDLE_POLL));
                             let coord = coordinator.clone();
                             let cflag = flag.clone();
-                            let _ = std::thread::Builder::new()
+                            match std::thread::Builder::new()
                                 .name("fastgm-conn".into())
-                                .spawn(move || serve_connection(coord, stream, cflag));
+                                .spawn(move || serve_connection(coord, stream, cflag))
+                            {
+                                Ok(h) => {
+                                    let mut live = conn_reg
+                                        .lock()
+                                        .unwrap_or_else(|e| e.into_inner());
+                                    live.retain(|c| !c.is_finished());
+                                    live.push(h);
+                                }
+                                Err(e) => log::warn!("spawn connection thread: {e}"),
+                            }
                         }
                         Err(e) => log::warn!("accept error: {e}"),
                     }
                 }
                 log::info!("acceptor stopped");
             })?;
-        Ok(Server { addr: local, shutdown, handle: Some(handle) })
+        Ok(Server { addr: local, shutdown, handle: Some(handle), conns })
     }
 
-    /// Stop accepting and join the acceptor (in-flight connections finish
-    /// their current request and then see EOF behaviour from clients).
+    /// Stop accepting, then join the acceptor AND every live connection
+    /// thread. In-flight requests finish and their responses are fully
+    /// written before this returns, so callers can tear down the
+    /// coordinator (or rebind the port) without racing a connection.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         // Unblock accept.
@@ -56,7 +96,75 @@ impl Server {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+        // The acceptor is gone, so no new handles can appear: drain.
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap_or_else(|e| e.into_inner()));
+        for h in handles {
+            let _ = h.join();
+        }
     }
+}
+
+/// Retryable read/write errors: timeouts (how the shutdown flag gets
+/// polled) and EINTR.
+fn is_retryable(kind: ErrorKind) -> bool {
+    matches!(kind, ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted)
+}
+
+/// Read one line's raw bytes, retrying timeouts until data or shutdown.
+/// Deliberately byte-level (`read_until`, not `read_line`): `read_line`'s
+/// UTF-8 guard DISCARDS everything a call appended when it returns an
+/// error while the accumulated bytes end mid multi-byte character, so a
+/// read timeout could silently eat part of a request. `read_until` keeps
+/// partial reads in `buf` across retries — a slow writer is never torn.
+/// Returns `None` on EOF, broken connection or shutdown.
+fn read_line_shutdown_aware(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+    shutdown: &AtomicBool,
+) -> Option<()> {
+    buf.clear();
+    loop {
+        match reader.read_until(b'\n', buf) {
+            Ok(0) => return None, // EOF (any half line at EOF is dropped)
+            Ok(_) => return Some(()),
+            Err(e) if is_retryable(e.kind()) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return None;
+                }
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+/// Write a whole response line, retrying timeouts so a slow-but-alive
+/// client never receives a torn line (a pipelined client legitimately
+/// stalls the reply direction while it is still writing requests). After
+/// shutdown is signalled, a non-draining client gets a bounded grace
+/// period and is then dropped. Returns `false` when the connection should
+/// close.
+fn write_all_shutdown_aware(
+    writer: &mut TcpStream,
+    mut buf: &[u8],
+    shutdown: &AtomicBool,
+) -> bool {
+    let mut drain_polls = 0u32;
+    while !buf.is_empty() {
+        match writer.write(buf) {
+            Ok(0) => return false,
+            Ok(n) => buf = &buf[n..],
+            Err(e) if is_retryable(e.kind()) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    drain_polls += 1;
+                    if drain_polls > SHUTDOWN_DRAIN_POLLS {
+                        return false;
+                    }
+                }
+            }
+            Err(_) => return false,
+        }
+    }
+    true
 }
 
 fn serve_connection(coord: Arc<Coordinator>, stream: TcpStream, shutdown: Arc<AtomicBool>) {
@@ -65,24 +173,29 @@ fn serve_connection(coord: Arc<Coordinator>, stream: TcpStream, shutdown: Arc<At
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    while read_line_shutdown_aware(&mut reader, &mut buf, &shutdown).is_some() {
         if shutdown.load(Ordering::SeqCst) {
             break;
         }
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = match protocol::decode_request(&line) {
-            Ok(req) => coord.call(req),
-            Err(e) => Response::err(format!("bad request: {e}")),
+        // Strict UTF-8: a lossy conversion would silently mangle keys
+        // (distinct invalid byte sequences collapse to U+FFFD and collide),
+        // so invalid bytes are rejected as a bad request instead.
+        let resp = match std::str::from_utf8(&buf) {
+            Err(e) => Response::err(format!("bad request: invalid UTF-8: {e}")),
+            Ok(line) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match protocol::decode_request(line) {
+                    Ok(req) => coord.call(req),
+                    Err(e) => Response::err(format!("bad request: {e}")),
+                }
+            }
         };
         let out = protocol::encode_line(&resp.to_json());
-        if writer.write_all(out.as_bytes()).is_err() {
+        if !write_all_shutdown_aware(&mut writer, out.as_bytes(), &shutdown) {
             break;
         }
     }
@@ -158,6 +271,89 @@ mod tests {
         let mut client = Client::connect(&addr).unwrap();
         let resp = client.call(&Request::Cardinality { stream: "s0".into() }).unwrap();
         assert!(matches!(resp, Response::Estimate { .. }));
+        server.stop();
+    }
+
+    /// Regression (leaky shutdown): `stop()` used to detach per-connection
+    /// threads, so it could return while a pipelined request was still
+    /// being processed — and while the connection thread still held the
+    /// coordinator. Now it joins: after `stop()` the test's Arc is the only
+    /// coordinator reference left, and everything the server wrote is
+    /// complete JSON lines (never a torn half-response).
+    #[test]
+    fn stop_joins_inflight_pipelined_connections() {
+        let (server, coord) = start_server();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        let mut burst = String::new();
+        for i in 0..64u64 {
+            burst.push_str(&protocol::encode_line(
+                &Request::Push { stream: "p".into(), items: vec![(i, 1.0)] }.to_json(),
+            ));
+        }
+        stream.write_all(burst.as_bytes()).unwrap();
+        // Stop while the server is (very likely) mid-pipeline.
+        server.stop();
+        assert_eq!(
+            Arc::strong_count(&coord),
+            1,
+            "stop() returned while a connection thread still held the coordinator"
+        );
+        // Drain whatever was answered before shutdown: every line must parse.
+        stream.shutdown(std::net::Shutdown::Write).ok();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        let mut replies = 0usize;
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {
+                    protocol::decode_response(&line)
+                        .unwrap_or_else(|e| panic!("torn response line {line:?}: {e}"));
+                    replies += 1;
+                }
+            }
+        }
+        assert!(replies <= 64);
+    }
+
+    /// An idle (no traffic) connection must not block `stop()` forever —
+    /// the read-timeout poll lets it observe the shutdown flag.
+    #[test]
+    fn stop_returns_with_an_idle_connection_open() {
+        let (server, coord) = start_server();
+        let _idle = TcpStream::connect(server.addr).unwrap();
+        // Give the acceptor a beat to register the connection.
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+        server.stop();
+        assert_eq!(Arc::strong_count(&coord), 1);
+    }
+
+    /// A request trickling in across read-timeout boundaries — split in
+    /// the middle of a multi-byte UTF-8 character — must still be
+    /// reassembled intact (`read_line`'s UTF-8 guard would have discarded
+    /// the partial bytes; the byte-level reader keeps them).
+    #[test]
+    fn slow_writes_split_inside_utf8_are_not_torn() {
+        let (server, _coord) = start_server();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        let line = "{\"op\":\"get_sketch\",\"name\":\"βeta\"}\n".as_bytes();
+        // Split one byte into the two-byte 'β' (0xCE 0xB2).
+        let split = line.iter().position(|&b| b == 0xCE).unwrap() + 1;
+        stream.write_all(&line[..split]).unwrap();
+        // Several read-timeout periods pass with the character half-sent.
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        stream.write_all(&line[split..]).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        let resp = protocol::decode_response(&reply).unwrap();
+        // The name survived intact: a "no sketch named 'βeta'" error —
+        // NOT a bad-request parse failure from dropped bytes.
+        let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+        assert!(message.contains("βeta"), "request was torn: {message}");
+        assert!(!message.contains("bad request"), "request was torn: {message}");
         server.stop();
     }
 

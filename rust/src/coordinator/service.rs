@@ -15,7 +15,8 @@ use super::merger::merge_tree;
 use super::metrics::Metrics;
 use super::protocol::{Request, Response};
 use super::registry::Registry;
-use super::router::{Router, RouterConfig, SketchPlan};
+use super::router::{Router, RouterConfig, SketchPlan, TopKPlan};
+use super::store::SketchStore;
 use super::worker::{WorkerContext, WorkerPool};
 use crate::estimate::cardinality::{estimate_cardinality, estimate_weighted_jaccard};
 use crate::estimate::jaccard::estimate_jp;
@@ -50,6 +51,11 @@ pub struct CoordinatorConfig {
     /// Default engine-registry algorithm for `sketch` requests that carry
     /// no `algo` field (config key `sketch.algo`).
     pub algo: String,
+    /// Lock shards of the keyed sketch store (config key `store.shards`).
+    pub store_shards: usize,
+    /// Largest store size a `topk` answers by brute-force scan instead of
+    /// the LSH band probe (config key `store.topk_scan_max`).
+    pub topk_scan_max: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -67,6 +73,8 @@ impl Default for CoordinatorConfig {
             shards: 4,
             shard_min_nplus: 4096,
             algo: "fastgm".to_string(),
+            store_shards: 8,
+            topk_scan_max: 64,
         }
     }
 }
@@ -97,6 +105,8 @@ impl CoordinatorConfig {
             shards: cfg.usize("sketch.shards", d.shards),
             shard_min_nplus: cfg.usize("sketch.shard_min_nplus", d.shard_min_nplus),
             algo: cfg.str("sketch.algo", &d.algo),
+            store_shards: cfg.usize("store.shards", d.store_shards),
+            topk_scan_max: cfg.usize("store.topk_scan_max", d.topk_scan_max),
         }
     }
 }
@@ -109,6 +119,8 @@ struct Inner {
     batcher: DenseBatcher,
     lsh: RwLock<LshIndex>,
     lsh_names: RwLock<HashMap<u64, String>>,
+    /// Keyed similarity-serving store (upsert/delete/topk/snapshot ops).
+    store: SketchStore,
     accel_on: bool,
     /// Resolved `cfg.algo` (validated at construction time).
     default_algo: AlgorithmId,
@@ -185,18 +197,21 @@ impl Coordinator {
                 .entry(id)
                 .or_insert_with(|| Arc::from(engine::build(id, engine_params)));
         }
+        let lsh_params = LshParams::for_threshold(cfg.k, cfg.lsh_threshold);
         let inner = Arc::new(Inner {
             router: Router::new(RouterConfig {
                 accel_max_len,
                 min_density: 0.25,
                 shards: cfg.shards.max(1),
                 shard_min_nplus: cfg.shard_min_nplus,
+                topk_scan_max: cfg.topk_scan_max,
             }),
             registry: Registry::new(),
             metrics: Metrics::new(),
             batcher,
-            lsh: RwLock::new(LshIndex::new(LshParams::for_threshold(cfg.k, cfg.lsh_threshold))),
+            lsh: RwLock::new(LshIndex::new(lsh_params)),
             lsh_names: RwLock::new(HashMap::new()),
+            store: SketchStore::new(lsh_params, cfg.store_shards.max(1)),
             accel_on,
             default_algo,
             engine_params,
@@ -319,20 +334,30 @@ impl Inner {
         Ok(out)
     }
 
-    /// LSH scores candidates with `estimate_jp`, which is only defined for
-    /// EXP-register families — with a `sketch.algo` default of icws /
-    /// bagminhash / minhash, both `lsh_insert` and `lsh_query` refuse up
-    /// front with one clear message instead of erroring candidate-by-
-    /// candidate mid-query.
+    /// LSH banding and the keyed store score candidates with
+    /// `estimate_jp`, which is only defined for EXP-register families —
+    /// with a `sketch.algo` default of icws / bagminhash / minhash, the
+    /// similarity-serving ops (`lsh_insert`, `lsh_query`, `upsert`, `topk`,
+    /// `restore`) refuse up front with one clear message instead of
+    /// erroring candidate-by-candidate mid-query.
     fn ensure_lsh_capable(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.default_algo.family().has_exponential_registers(),
-            "LSH requires an EXP-register default algo (ordered/direct families); \
-             configured sketch.algo '{}' is family '{}'",
+            "similarity serving (LSH / store top-k) requires an EXP-register default algo \
+             (ordered/direct families); configured sketch.algo '{}' is family '{}'",
             self.default_algo.name(),
             self.default_algo.family().name(),
         );
         Ok(())
+    }
+
+    /// Refresh the store gauges. Sampled only when a `metrics` request is
+    /// served (same policy as `queue_depth`): refreshing after every
+    /// upsert/delete would re-scan every shard lock per mutation, purely
+    /// to update a gauge only the metrics snapshot reads.
+    fn observe_store(&self) {
+        self.metrics.gauge_set("store.size", self.store.len() as f64);
+        self.metrics.gauge_set("store.lsh_size", self.store.lsh_len() as f64);
     }
 
     fn handle(&self, req: Request, ctx: &mut WorkerContext) -> Response {
@@ -349,9 +374,11 @@ impl Inner {
         Ok(match req {
             Request::Ping => Response::Pong,
             Request::Metrics => {
+                self.observe_store();
                 let mut snap = self.metrics.snapshot();
                 snap.set("sketches", crate::util::json::Value::num(self.registry.sketch_count() as f64));
                 snap.set("streams", crate::util::json::Value::num(self.registry.stream_count() as f64));
+                snap.set("store", self.store.stats());
                 snap.set("accel", crate::util::json::Value::Bool(self.accel_on));
                 snap.set("shards", crate::util::json::Value::num(self.cfg.shards as f64));
                 snap.set("algo", crate::util::json::Value::str(self.default_algo.name()));
@@ -476,6 +503,97 @@ impl Inner {
                         })
                         .collect(),
                 }
+            }
+            Request::Upsert { key, vector } => {
+                // The store is queried with default-algo probes, so every
+                // entry is sketched with the default algo — the store can
+                // never hold a sketch a `topk` could not score.
+                self.ensure_lsh_capable()?;
+                // The snapshot codec refuses oversized keys on decode;
+                // enforcing the same bound here means every acked upsert
+                // is guaranteed snapshot-and-restorable.
+                anyhow::ensure!(
+                    key.len() <= crate::sketch::codec::MAX_KEY_LEN,
+                    "store keys are limited to {} bytes (got {})",
+                    crate::sketch::codec::MAX_KEY_LEN,
+                    key.len(),
+                );
+                let sk = self.sketch_sparse(&vector, None, ctx)?;
+                self.store.upsert(&key, sk);
+                self.metrics.incr("store.upsert");
+                Response::Ack { info: format!("upserted '{key}'") }
+            }
+            Request::Delete { key } => {
+                let existed = self.store.delete(&key);
+                self.metrics.incr("store.delete");
+                Response::Ack {
+                    info: if existed {
+                        format!("deleted '{key}'")
+                    } else {
+                        format!("no entry '{key}'")
+                    },
+                }
+            }
+            Request::TopK { vector, limit } => {
+                self.ensure_lsh_capable()?;
+                let query = self.sketch_sparse(&vector, None, ctx)?;
+                let (hits, stats) = match self.router.plan_topk(self.store.len()) {
+                    TopKPlan::FullScan => {
+                        self.metrics.incr("path.topk.scan");
+                        self.store.scan_topk(&query, limit)?
+                    }
+                    TopKPlan::BandProbe => {
+                        self.metrics.incr("path.topk.probe");
+                        self.store.probe_topk(&query, limit)?
+                    }
+                };
+                self.metrics.add("topk.candidates", stats.candidates as u64);
+                self.metrics.add("topk.reranked", stats.reranked as u64);
+                Response::TopK { hits }
+            }
+            Request::StoreStats => Response::Stats { stats: self.store.stats() },
+            Request::Snapshot { path } => {
+                let (bytes, entries) = self.store.snapshot_bytes();
+                // Write-then-rename so a crash or full disk mid-write can
+                // never destroy an existing good snapshot at `path`; the
+                // temp name is unique per request so concurrent snapshots
+                // to the same path cannot interleave into a corrupt file.
+                static SNAP_SEQ: std::sync::atomic::AtomicU64 =
+                    std::sync::atomic::AtomicU64::new(0);
+                let seq = SNAP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let tmp = format!("{path}.tmp.{}.{seq}", std::process::id());
+                // write + fsync + rename: without the fsync the rename can
+                // survive a crash whose page-cache data did not, replacing
+                // the old good snapshot with a truncated file.
+                let write_synced = || -> std::io::Result<()> {
+                    use std::io::Write as _;
+                    let mut f = std::fs::File::create(&tmp)?;
+                    f.write_all(&bytes)?;
+                    f.sync_all()
+                };
+                write_synced().map_err(|e| {
+                    let _ = std::fs::remove_file(&tmp);
+                    anyhow::anyhow!("cannot write snapshot '{tmp}': {e}")
+                })?;
+                std::fs::rename(&tmp, &path).map_err(|e| {
+                    let _ = std::fs::remove_file(&tmp);
+                    anyhow::anyhow!("cannot finalize snapshot '{path}': {e}")
+                })?;
+                self.metrics.incr("store.snapshot");
+                Response::Ack {
+                    info: format!("snapshot '{path}': {entries} entries, {} bytes", bytes.len()),
+                }
+            }
+            Request::Restore { path } => {
+                self.ensure_lsh_capable()?;
+                let bytes = std::fs::read(&path)
+                    .map_err(|e| anyhow::anyhow!("cannot read snapshot '{path}': {e}"))?;
+                let n = self.store.restore_bytes(
+                    &bytes,
+                    Some((self.default_algo.family(), self.cfg.seed, self.cfg.k)),
+                )?;
+                self.metrics.incr("store.restore");
+                Response::Ack { info: format!("restored {n} entries from '{path}'") }
             }
         })
     }
@@ -702,6 +820,163 @@ mod tests {
     }
 
     #[test]
+    fn store_upsert_topk_delete_flow() {
+        // scan threshold 1 → the second upsert already exercises the probe.
+        let c = Coordinator::new(CoordinatorConfig {
+            k: 128,
+            workers: 2,
+            topk_scan_max: 1,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let (u, v) = vecs();
+        for (key, vec) in [("u", &u), ("v", &v)] {
+            assert!(matches!(
+                c.call(Request::Upsert { key: key.into(), vector: vec.clone() }),
+                Response::Ack { .. }
+            ));
+        }
+        let Response::TopK { hits } = c.call(Request::TopK { vector: u.clone(), limit: 2 })
+        else {
+            panic!("expected topk")
+        };
+        assert_eq!(hits[0].0, "u");
+        assert!((hits[0].1 - 1.0).abs() < 1e-9);
+        // Stats reflect the two entries.
+        let Response::Stats { stats } = c.call(Request::StoreStats) else {
+            panic!("expected stats")
+        };
+        assert_eq!(stats.get("size").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(stats.get("lsh_size").and_then(|v| v.as_f64()), Some(2.0));
+        // Delete is idempotent and updates the index.
+        let Response::Ack { info } = c.call(Request::Delete { key: "u".into() }) else {
+            panic!("expected ack")
+        };
+        assert!(info.contains("deleted"));
+        let Response::Ack { info } = c.call(Request::Delete { key: "u".into() }) else {
+            panic!("expected ack")
+        };
+        assert!(info.contains("no entry"));
+        let Response::TopK { hits } = c.call(Request::TopK { vector: u, limit: 2 }) else {
+            panic!("expected topk")
+        };
+        assert!(hits.iter().all(|h| h.0 != "u"), "deleted key still served: {hits:?}");
+        // Metrics carry the store gauges and top-k counters.
+        let Response::MetricsDump { snapshot } = c.call(Request::Metrics) else {
+            panic!("expected metrics")
+        };
+        let gauge = |name: &str| {
+            snapshot.get("gauges").and_then(|g| g.get(name)).and_then(|v| v.as_f64())
+        };
+        assert_eq!(gauge("store.size"), Some(1.0), "{snapshot}");
+        assert_eq!(gauge("store.lsh_size"), Some(1.0), "{snapshot}");
+        let counter = |name: &str| {
+            snapshot
+                .get("counters")
+                .and_then(|c| c.get(name))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        assert!(counter("topk.candidates") >= 1.0, "{snapshot}");
+        assert!(counter("path.topk.probe") >= 1.0, "{snapshot}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn store_snapshot_restores_across_coordinators() {
+        let path = std::env::temp_dir().join(format!(
+            "fastgm-service-snap-{}.fgms",
+            std::process::id()
+        ));
+        let path_str = path.to_string_lossy().to_string();
+        let cfg = CoordinatorConfig { k: 64, workers: 2, ..CoordinatorConfig::default() };
+        let (u, v) = vecs();
+        let c = Coordinator::new(cfg.clone()).unwrap();
+        c.call(Request::Upsert { key: "u".into(), vector: u.clone() });
+        c.call(Request::Upsert { key: "v".into(), vector: v });
+        let Response::Ack { info } = c.call(Request::Snapshot { path: path_str.clone() })
+        else {
+            panic!("expected ack")
+        };
+        assert!(info.contains("2 entries"), "{info}");
+        let Response::TopK { hits: before } =
+            c.call(Request::TopK { vector: u.clone(), limit: 2 })
+        else {
+            panic!("expected topk")
+        };
+        c.shutdown();
+
+        // A fresh coordinator (cold store) warm-restarts from the snapshot.
+        let c2 = Coordinator::new(cfg).unwrap();
+        let Response::Ack { info } = c2.call(Request::Restore { path: path_str.clone() })
+        else {
+            panic!("expected ack, restore failed")
+        };
+        assert!(info.contains("restored 2 entries"), "{info}");
+        let Response::TopK { hits: after } = c2.call(Request::TopK { vector: u, limit: 2 })
+        else {
+            panic!("expected topk")
+        };
+        assert_eq!(before, after, "restored store must answer identically");
+        // A mismatched config refuses the snapshot cleanly.
+        let c3 = Coordinator::new(CoordinatorConfig {
+            k: 32,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let resp = c3.call(Request::Restore { path: path_str });
+        assert!(matches!(resp, Response::Error { .. }), "got {resp:?}");
+        c3.shutdown();
+        c2.shutdown();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn oversized_store_keys_are_refused_at_upsert() {
+        let c = Coordinator::new(CoordinatorConfig {
+            k: 32,
+            workers: 1,
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let (u, _) = vecs();
+        let giant = "k".repeat(crate::sketch::codec::MAX_KEY_LEN + 1);
+        let resp = c.call(Request::Upsert { key: giant, vector: u.clone() });
+        let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+        assert!(message.contains("limited to"), "{message}");
+        // At the bound itself, the upsert is accepted and snapshottable.
+        let exact = "k".repeat(crate::sketch::codec::MAX_KEY_LEN);
+        assert!(matches!(
+            c.call(Request::Upsert { key: exact, vector: u }),
+            Response::Ack { .. }
+        ));
+        c.shutdown();
+    }
+
+    #[test]
+    fn store_ops_refuse_non_race_default_algos() {
+        let c = Coordinator::new(CoordinatorConfig {
+            k: 32,
+            workers: 1,
+            algo: "minhash".into(),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap();
+        let (u, _) = vecs();
+        for req in [
+            Request::Upsert { key: "u".into(), vector: u.clone() },
+            Request::TopK { vector: u, limit: 1 },
+            Request::Restore { path: "/nonexistent".into() },
+        ] {
+            let resp = c.call(req);
+            let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+            assert!(message.contains("EXP-register"), "{message}");
+        }
+        c.shutdown();
+    }
+
+    #[test]
     fn errors_are_responses_not_panics() {
         let c = coord();
         assert!(matches!(
@@ -714,6 +989,15 @@ mod tests {
         ));
         assert!(matches!(
             c.call(Request::Merge { names: vec![], out: "x".into() }),
+            Response::Error { .. }
+        ));
+        // Store persistence I/O failures are error responses too.
+        assert!(matches!(
+            c.call(Request::Restore { path: "/definitely/not/here.fgms".into() }),
+            Response::Error { .. }
+        ));
+        assert!(matches!(
+            c.call(Request::Snapshot { path: "/definitely/not/here/snap.fgms".into() }),
             Response::Error { .. }
         ));
         c.shutdown();

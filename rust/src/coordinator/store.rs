@@ -1,0 +1,511 @@
+//! Keyed sketch store: the coordinator's first stateful subsystem.
+//!
+//! A sharded in-memory map from string keys to [`GumbelMaxSketch`]es with
+//! an **incrementally maintained** [`LshIndex`] (upserts and deletes keep
+//! the band tables in sync — no rebuilds), answering top-k similarity
+//! queries two ways:
+//!
+//! * [`SketchStore::probe_topk`] — banded LSH candidate probe, then a
+//!   full-sketch `estimate_jp` re-rank of the (sub-linear) candidate set.
+//! * [`SketchStore::scan_topk`] — brute-force re-rank of every entry; the
+//!   router picks this for small stores where probing cannot win.
+//!
+//! Persistence goes through [`crate::sketch::codec`]: `snapshot_bytes`
+//! freezes the whole store into the versioned binary format (keys sorted,
+//! so equal state ⇒ identical bytes) and `restore_bytes` atomically
+//! replaces the store contents from a snapshot — the warm-restart path
+//! that skips recomputing every sketch.
+//!
+//! Locking: keys are sharded over independent `RwLock<HashMap>`s so
+//! concurrent upserts on different shards don't serialize; the LSH index
+//! and the id→name map are single locks (band updates are cheap). An
+//! outer swap `gate` is held shared by every keyed op and exclusively by
+//! `restore`/`clear`, so a snapshot replacement is atomic as observed by
+//! concurrent requests. Writers hold their key's shard lock across the
+//! lsh/names updates (fixed order gate → shard → lsh → names) so the
+//! map and index can never desync on same-key races; readers hold at
+//! most one inner lock at a time — no cycle is possible.
+//!
+//! Memory trade-off: each sketch's registers live both in the shard map
+//! (the source of truth for `get`/`scan`/`snapshot`) and inside the
+//! [`LshIndex`] (whose standalone `query` API re-ranks from its own
+//! copy). A bands-only index mode would halve that; it is a known
+//! follow-up, not a correctness issue.
+
+use crate::estimate::jaccard::estimate_jp;
+use crate::lsh::{LshIndex, LshParams};
+use crate::sketch::codec;
+use crate::sketch::{Family, GumbelMaxSketch, MergeError};
+use crate::util::hash::token_id;
+use crate::util::json::Value;
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// What a top-k query cost, for the coordinator's metrics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopKStats {
+    /// Entries that survived the LSH band probe (store size when scanning).
+    pub candidates: usize,
+    /// Candidates re-ranked with the full-sketch estimator.
+    pub reranked: usize,
+    /// True when the brute-force scan path answered the query.
+    pub scanned: bool,
+}
+
+pub struct SketchStore {
+    lsh_params: LshParams,
+    /// Swap gate: shared by every keyed op, exclusive for `restore`/`clear`
+    /// — no request can ever observe a half-replaced store.
+    gate: RwLock<()>,
+    shards: Vec<RwLock<HashMap<String, GumbelMaxSketch>>>,
+    lsh: RwLock<LshIndex>,
+    /// LSH ids are `token_id(key)`; this maps them back for responses.
+    names: RwLock<HashMap<u64, String>>,
+}
+
+impl SketchStore {
+    pub fn new(lsh_params: LshParams, shards: usize) -> SketchStore {
+        let shards = shards.max(1);
+        SketchStore {
+            lsh_params,
+            gate: RwLock::new(()),
+            shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
+            lsh: RwLock::new(LshIndex::new(lsh_params)),
+            names: RwLock::new(HashMap::new()),
+        }
+    }
+
+    pub fn lsh_params(&self) -> LshParams {
+        self.lsh_params
+    }
+
+    fn shard_of(&self, key: &str) -> usize {
+        (token_id(key) % self.shards.len() as u64) as usize
+    }
+
+    /// Insert or replace `key`'s sketch; the LSH index is updated in place.
+    pub fn upsert(&self, key: &str, sk: GumbelMaxSketch) {
+        let _gate = self.gate.read().expect("store gate");
+        self.upsert_inner(key, sk);
+    }
+
+    /// Gate-free body shared by [`SketchStore::upsert`] and the restore
+    /// loop (which already holds the gate exclusively). The shard lock is
+    /// held across the lsh/names updates so a same-key delete racing this
+    /// upsert serializes with the whole triple — the map and index can
+    /// never end up disagreeing about the key.
+    fn upsert_inner(&self, key: &str, sk: GumbelMaxSketch) {
+        let id = token_id(key);
+        let mut shard = self.shards[self.shard_of(key)].write().expect("store shard lock");
+        shard.insert(key.to_string(), sk.clone());
+        self.lsh.write().expect("store lsh lock").upsert(id, sk);
+        self.names.write().expect("store names lock").insert(id, key.to_string());
+    }
+
+    /// Remove `key`; returns whether it existed. Shard lock held across
+    /// the index updates for the same reason as [`Self::upsert_inner`].
+    pub fn delete(&self, key: &str) -> bool {
+        let _gate = self.gate.read().expect("store gate");
+        let mut shard = self.shards[self.shard_of(key)].write().expect("store shard lock");
+        let existed = shard.remove(key).is_some();
+        if existed {
+            let id = token_id(key);
+            self.lsh.write().expect("store lsh lock").remove(id);
+            self.names.write().expect("store names lock").remove(&id);
+        }
+        existed
+    }
+
+    pub fn get(&self, key: &str) -> Option<GumbelMaxSketch> {
+        let _gate = self.gate.read().expect("store gate");
+        self.shards[self.shard_of(key)]
+            .read()
+            .expect("store shard lock")
+            .get(key)
+            .cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        let _gate = self.gate.read().expect("store gate");
+        self.shard_sizes_inner().iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        let _gate = self.gate.read().expect("store gate");
+        self.shards.iter().all(|s| s.read().expect("store shard lock").is_empty())
+    }
+
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        let _gate = self.gate.read().expect("store gate");
+        self.shard_sizes_inner()
+    }
+
+    fn shard_sizes_inner(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.read().expect("store shard lock").len()).collect()
+    }
+
+    /// Entries indexed for banded probing (tracks `len` by construction).
+    pub fn lsh_len(&self) -> usize {
+        let _gate = self.gate.read().expect("store gate");
+        self.lsh.read().expect("store lsh lock").len()
+    }
+
+    fn rank(mut scored: Vec<(String, f64)>, limit: usize) -> Vec<(String, f64)> {
+        // Deterministic order: score desc, then key asc — matches what a
+        // brute-force scan produces, so probe and scan agree on ties.
+        scored.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).expect("estimates are never NaN").then(a.0.cmp(&b.0))
+        });
+        scored.truncate(limit);
+        scored
+    }
+
+    /// Top-`limit` via the banded LSH probe + full-sketch re-rank. The
+    /// re-rank reads each candidate's registers in place under its shard
+    /// lock (no clones); the sketch copy inside the LSH index is only used
+    /// for band maintenance here.
+    pub fn probe_topk(
+        &self,
+        query: &GumbelMaxSketch,
+        limit: usize,
+    ) -> Result<(Vec<(String, f64)>, TopKStats), MergeError> {
+        let _gate = self.gate.read().expect("store gate");
+        let candidate_ids = self.lsh.read().expect("store lsh lock").candidates(query);
+        // Resolve every candidate under ONE names read guard, then score
+        // under one shard guard at a time. Never two inner locks at once:
+        // writers nest shard → lsh → names, so holding names while taking
+        // a shard lock here could cycle. A candidate can vanish between
+        // these steps (racing delete) — skip it, don't error the query.
+        let resolved: Vec<String> = {
+            let names = self.names.read().expect("store names lock");
+            candidate_ids.iter().filter_map(|id| names.get(id).cloned()).collect()
+        };
+        let mut scored = Vec::with_capacity(resolved.len());
+        for name in resolved {
+            let shard = self.shards[self.shard_of(&name)].read().expect("store shard lock");
+            let Some(sk) = shard.get(&name) else { continue };
+            let score = estimate_jp(query, sk)?;
+            drop(shard);
+            scored.push((name, score));
+        }
+        let stats = TopKStats {
+            candidates: candidate_ids.len(),
+            reranked: scored.len(),
+            scanned: false,
+        };
+        Ok((Self::rank(scored, limit), stats))
+    }
+
+    /// Top-`limit` by scoring every stored entry (exact, linear).
+    pub fn scan_topk(
+        &self,
+        query: &GumbelMaxSketch,
+        limit: usize,
+    ) -> Result<(Vec<(String, f64)>, TopKStats), MergeError> {
+        let _gate = self.gate.read().expect("store gate");
+        let mut scored = Vec::new();
+        for shard in &self.shards {
+            for (name, sk) in shard.read().expect("store shard lock").iter() {
+                scored.push((name.clone(), estimate_jp(query, sk)?));
+            }
+        }
+        let stats = TopKStats {
+            candidates: scored.len(),
+            reranked: scored.len(),
+            scanned: true,
+        };
+        Ok((Self::rank(scored, limit), stats))
+    }
+
+    /// Freeze the store into the versioned binary snapshot format,
+    /// returning the bytes and the number of entries they hold (counted in
+    /// the same gated pass, so the two can never disagree). Keys are
+    /// sorted, so two stores with equal contents snapshot to identical
+    /// bytes (the round-trip property tests rely on this).
+    pub fn snapshot_bytes(&self) -> (Vec<u8>, usize) {
+        let _gate = self.gate.read().expect("store gate");
+        let mut entries: Vec<(String, GumbelMaxSketch)> = Vec::new();
+        for shard in &self.shards {
+            for (key, sk) in shard.read().expect("store shard lock").iter() {
+                entries.push((key.clone(), sk.clone()));
+            }
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        let n = entries.len();
+        (codec::encode_store(&entries), n)
+    }
+
+    /// Replace the store contents from snapshot `bytes`. All entries are
+    /// validated *before* any mutation (mutual compatibility, fit with the
+    /// band layout, and — when `expect` is given — the serving config's
+    /// `(family, seed, k)`), so a bad snapshot leaves the store untouched;
+    /// the swap itself runs under the exclusive gate, so concurrent
+    /// requests see either the old store or the fully restored one.
+    pub fn restore_bytes(
+        &self,
+        bytes: &[u8],
+        expect: Option<(Family, u64, usize)>,
+    ) -> anyhow::Result<usize> {
+        let entries = codec::decode_store(bytes)?;
+        if let Some((first_key, first)) = entries.first() {
+            for (key, sk) in &entries {
+                if let Some((family, seed, k)) = expect {
+                    anyhow::ensure!(
+                        sk.family == family && sk.seed == seed && sk.k() == k,
+                        "snapshot entry '{key}' (family '{}', seed {}, k {}) does not match \
+                         the serving config (family '{}', seed {seed}, k {k})",
+                        sk.family.name(),
+                        sk.seed,
+                        sk.k(),
+                        family.name(),
+                    );
+                }
+                anyhow::ensure!(
+                    (self.lsh_params.bands - 1) * self.lsh_params.rows < sk.k(),
+                    "snapshot entry '{key}' has k={} but the index needs {}x{} bands",
+                    sk.k(),
+                    self.lsh_params.bands,
+                    self.lsh_params.rows,
+                );
+                first.check_compatible(sk).map_err(|e| {
+                    anyhow::anyhow!("snapshot entries '{first_key}' and '{key}' disagree: {e}")
+                })?;
+            }
+        }
+        let n = entries.len();
+        let _gate = self.gate.write().expect("store gate");
+        self.clear_inner();
+        for (key, sk) in entries {
+            self.upsert_inner(&key, sk);
+        }
+        Ok(n)
+    }
+
+    /// Drop every entry and reset the LSH index.
+    pub fn clear(&self) {
+        let _gate = self.gate.write().expect("store gate");
+        self.clear_inner();
+    }
+
+    fn clear_inner(&self) {
+        for shard in &self.shards {
+            shard.write().expect("store shard lock").clear();
+        }
+        *self.lsh.write().expect("store lsh lock") = LshIndex::new(self.lsh_params);
+        self.names.write().expect("store names lock").clear();
+    }
+
+    /// Stats for the `store_stats` op: size, shard occupancy, index shape.
+    pub fn stats(&self) -> Value {
+        let _gate = self.gate.read().expect("store gate");
+        let sizes = self.shard_sizes_inner();
+        let total: usize = sizes.iter().sum();
+        Value::obj(vec![
+            ("size", Value::num(total as f64)),
+            ("shards", Value::num(sizes.len() as f64)),
+            ("shard_min", Value::num(sizes.iter().copied().min().unwrap_or(0) as f64)),
+            ("shard_max", Value::num(sizes.iter().copied().max().unwrap_or(0) as f64)),
+            (
+                "lsh_size",
+                Value::num(self.lsh.read().expect("store lsh lock").len() as f64),
+            ),
+            ("bands", Value::num(self.lsh_params.bands as f64)),
+            ("rows", Value::num(self.lsh_params.rows as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::fastgm::FastGm;
+    use crate::sketch::{Sketcher, SparseVector};
+    use crate::util::rng::SplitMix64;
+
+    const K: usize = 64;
+
+    fn store() -> SketchStore {
+        SketchStore::new(LshParams::for_threshold(K, 0.5), 4)
+    }
+
+    fn sketcher() -> FastGm {
+        FastGm::new(K, 42)
+    }
+
+    fn random_vec(r: &mut SplitMix64, n: usize) -> SparseVector {
+        SparseVector::new(
+            (0..n).map(|_| r.next_u64()).collect(),
+            (0..n).map(|_| r.next_f64() + 0.1).collect(),
+        )
+    }
+
+    #[test]
+    fn upsert_get_delete_roundtrip() {
+        let st = store();
+        let f = sketcher();
+        let v = SparseVector::new(vec![1, 2, 3], vec![1.0, 2.0, 0.5]);
+        assert!(st.is_empty());
+        st.upsert("a", f.sketch(&v));
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.lsh_len(), 1);
+        assert_eq!(st.get("a").unwrap(), f.sketch(&v));
+        assert!(st.get("b").is_none());
+        assert!(st.delete("a"));
+        assert!(!st.delete("a"));
+        assert!(st.is_empty());
+        assert_eq!(st.lsh_len(), 0);
+    }
+
+    #[test]
+    fn upsert_replaces_in_store_and_index() {
+        let st = store();
+        let f = sketcher();
+        let v1 = SparseVector::new(vec![1, 2], vec![1.0, 1.0]);
+        let v2 = SparseVector::new(vec![8, 9], vec![1.0, 1.0]);
+        st.upsert("a", f.sketch(&v1));
+        st.upsert("a", f.sketch(&v2));
+        assert_eq!(st.len(), 1);
+        assert_eq!(st.lsh_len(), 1);
+        // Probing with v2 finds the replacement at similarity 1.
+        let (hits, _) = st.probe_topk(&f.sketch(&v2), 1).unwrap();
+        assert_eq!(hits, vec![("a".to_string(), 1.0)]);
+    }
+
+    #[test]
+    fn probe_and_scan_agree_on_ranking() {
+        let st = store();
+        let f = sketcher();
+        let mut r = SplitMix64::new(5);
+        let base = random_vec(&mut r, 30);
+        st.upsert("base", f.sketch(&base));
+        // Near-duplicate: shares most of base's mass.
+        let mut near = base.clone();
+        near.weights[0] += 0.05;
+        st.upsert("near", f.sketch(&near));
+        for i in 0..20 {
+            st.upsert(&format!("far{i}"), f.sketch(&random_vec(&mut r, 30)));
+        }
+        let q = f.sketch(&base);
+        let (scan, scan_stats) = st.scan_topk(&q, 2).unwrap();
+        let (probe, probe_stats) = st.probe_topk(&q, 2).unwrap();
+        assert_eq!(scan[0].0, "base");
+        assert_eq!(scan[0].1, 1.0);
+        assert_eq!(probe, scan, "probe and scan must agree on the top hits");
+        assert!(scan_stats.scanned && !probe_stats.scanned);
+        assert_eq!(scan_stats.candidates, 22);
+        assert!(
+            probe_stats.candidates < 22,
+            "probe should be sub-linear: {probe_stats:?}"
+        );
+        assert_eq!(probe_stats.reranked, probe_stats.candidates);
+    }
+
+    #[test]
+    fn snapshot_restore_is_bit_identical() {
+        let st = store();
+        let f = sketcher();
+        let mut r = SplitMix64::new(9);
+        for i in 0..25 {
+            st.upsert(&format!("doc{i}"), f.sketch(&random_vec(&mut r, 12)));
+        }
+        let (bytes, n) = st.snapshot_bytes();
+        assert_eq!(n, 25);
+        let st2 = store();
+        st2.upsert("stale", f.sketch(&random_vec(&mut r, 3))); // must be dropped
+        let n = st2.restore_bytes(&bytes, None).unwrap();
+        assert_eq!(n, 25);
+        assert_eq!(st2.len(), 25);
+        assert!(st2.get("stale").is_none());
+        assert_eq!(st2.lsh_len(), 25);
+        assert_eq!(st2.snapshot_bytes().0, bytes, "snapshot of restore must be identical");
+        // The restored index answers queries like the original.
+        let q = f.sketch(&random_vec(&mut r, 12));
+        assert_eq!(st.probe_topk(&q, 5).unwrap(), st2.probe_topk(&q, 5).unwrap());
+    }
+
+    #[test]
+    fn restore_validates_before_mutating() {
+        let st = store();
+        let f = sketcher();
+        st.upsert("keep", f.sketch(&SparseVector::new(vec![1], vec![1.0])));
+        // Wrong k for the expected config.
+        let other = FastGm::new(32, 42).sketch(&SparseVector::new(vec![1], vec![1.0]));
+        let bytes = codec::encode_store(&[("x".into(), other)]);
+        let err = st
+            .restore_bytes(&bytes, Some((Family::Ordered, 42, K)))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match"), "{err}");
+        // Failed restore left the store untouched.
+        assert_eq!(st.len(), 1);
+        assert!(st.get("keep").is_some());
+        // Corrupt bytes are also clean errors.
+        assert!(st.restore_bytes(b"garbage", None).is_err());
+        assert_eq!(st.len(), 1);
+    }
+
+    /// Restore swaps the store atomically: requests racing a restore see
+    /// either the old state or the fully restored one, and the store/index
+    /// pair can never diverge (the bug the swap gate exists to prevent —
+    /// an upsert interleaved into the clear-and-refill loop used to leave
+    /// an LSH entry whose shard-map twin had just been wiped).
+    #[test]
+    fn restore_is_atomic_under_concurrent_ops() {
+        let st = std::sync::Arc::new(store());
+        let f = sketcher();
+        let mut r = SplitMix64::new(17);
+        for i in 0..20 {
+            st.upsert(&format!("doc{i}"), f.sketch(&random_vec(&mut r, 8)));
+        }
+        let (snapshot, _) = st.snapshot_bytes();
+        let probe = f.sketch(&random_vec(&mut r, 8));
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let st = st.clone();
+            let f = sketcher();
+            let probe = probe.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut r = SplitMix64::new(100 + t);
+                for i in 0..50 {
+                    let key = format!("doc{}", r.next_range(0, 25));
+                    if i % 3 == 0 {
+                        st.delete(&key);
+                    } else {
+                        st.upsert(&key, f.sketch(&random_vec(&mut r, 8)));
+                    }
+                    // Queries racing the restores must never error or see
+                    // a half-swapped store larger than both states.
+                    let (hits, stats) = st.probe_topk(&probe, 5).unwrap();
+                    assert!(hits.len() <= 5);
+                    assert!(stats.candidates <= 26);
+                }
+            }));
+        }
+        for _ in 0..10 {
+            assert_eq!(st.restore_bytes(&snapshot, None).unwrap(), 20);
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Whatever interleaving happened, store and index agree exactly.
+        assert_eq!(st.len(), st.lsh_len());
+        st.probe_topk(&probe, 5).unwrap();
+        st.scan_topk(&probe, 5).unwrap();
+    }
+
+    #[test]
+    fn stats_report_shape_and_occupancy() {
+        let st = store();
+        let f = sketcher();
+        for i in 0..10 {
+            st.upsert(&format!("k{i}"), f.sketch(&SparseVector::new(vec![i], vec![1.0])));
+        }
+        let stats = st.stats();
+        assert_eq!(stats.get("size").unwrap().as_f64(), Some(10.0));
+        assert_eq!(stats.get("shards").unwrap().as_f64(), Some(4.0));
+        assert_eq!(stats.get("lsh_size").unwrap().as_f64(), Some(10.0));
+        let params = st.lsh_params();
+        assert_eq!(stats.get("bands").unwrap().as_f64(), Some(params.bands as f64));
+        assert_eq!(stats.get("rows").unwrap().as_f64(), Some(params.rows as f64));
+    }
+}

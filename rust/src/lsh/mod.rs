@@ -14,7 +14,7 @@ use crate::util::hash::hash_u64s;
 use std::collections::HashMap;
 
 /// Banding parameters.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LshParams {
     pub bands: usize,
     pub rows: usize,
@@ -22,18 +22,17 @@ pub struct LshParams {
 
 impl LshParams {
     /// Choose (bands, rows) for sketch length k targeting threshold `t`:
-    /// the S-curve midpoint is ≈ (1/b)^(1/r); scan divisors of k for the
-    /// closest fit.
+    /// the S-curve midpoint is ≈ (1/b)^(1/r). Every row count 1..=k is
+    /// considered with `bands = ⌈k/rows⌉` — the trailing band may be ragged
+    /// (shorter than `rows`), so a prime k still gets a real multi-row
+    /// layout instead of degenerating to `bands=k, rows=1`.
     pub fn for_threshold(k: usize, t: f64) -> LshParams {
         assert!(k >= 1);
         let t = t.clamp(0.01, 0.99);
         let mut best = LshParams { bands: k, rows: 1 };
         let mut best_err = f64::INFINITY;
         for rows in 1..=k {
-            if k % rows != 0 {
-                continue;
-            }
-            let bands = k / rows;
+            let bands = k.div_ceil(rows);
             let mid = (1.0 / bands as f64).powf(1.0 / rows as f64);
             let err = (mid - t).abs();
             if err < best_err {
@@ -45,8 +44,11 @@ impl LshParams {
     }
 
     /// Collision probability of the banding scheme at similarity `j`.
+    /// Computed with `powf` so large band/row counts can never overflow an
+    /// `i32` exponent cast.
     pub fn candidate_probability(&self, j: f64) -> f64 {
-        1.0 - (1.0 - j.powi(self.rows as i32)).powi(self.bands as i32)
+        let j = j.clamp(0.0, 1.0);
+        1.0 - (1.0 - j.powf(self.rows as f64)).powf(self.bands as f64)
     }
 }
 
@@ -84,14 +86,20 @@ impl LshIndex {
 
     fn band_keys(&self, sk: &GumbelMaxSketch) -> Vec<u64> {
         let LshParams { bands, rows } = self.params;
+        assert!(bands >= 1 && rows >= 1, "degenerate band layout {bands}x{rows}");
         assert!(
-            bands * rows <= sk.k(),
-            "bands*rows ({}) exceeds sketch length {}",
-            bands * rows,
+            (bands - 1) * rows < sk.k(),
+            "band layout {bands}x{rows} exceeds sketch length {}",
             sk.k()
         );
         (0..bands)
-            .map(|b| hash_u64s(&sk.s[b * rows..(b + 1) * rows], self.seed ^ b as u64))
+            .map(|b| {
+                // The final band may be ragged (shorter than `rows`) when
+                // rows does not divide k — see LshParams::for_threshold.
+                let start = b * rows;
+                let end = (start + rows).min(sk.k());
+                hash_u64s(&sk.s[start..end], self.seed ^ b as u64)
+            })
             .collect()
     }
 
@@ -104,6 +112,13 @@ impl LshIndex {
             self.tables[b].entry(key).or_default().push(id);
         }
         self.sketches.insert(id, sk);
+    }
+
+    /// Explicit replace-or-insert (what [`LshIndex::insert`] already does;
+    /// named for call sites that maintain the index incrementally, e.g.
+    /// [`crate::coordinator::store::SketchStore`]).
+    pub fn upsert(&mut self, id: u64, sk: GumbelMaxSketch) {
+        self.insert(id, sk);
     }
 
     pub fn remove(&mut self, id: u64) -> bool {
@@ -143,15 +158,37 @@ impl LshIndex {
         query: &GumbelMaxSketch,
         limit: usize,
     ) -> Result<Vec<(u64, f64)>, MergeError> {
-        let mut scored = Vec::new();
-        for id in self.candidates(query) {
+        self.query_stats(query, limit).map(|(hits, _)| hits)
+    }
+
+    /// [`LshIndex::query`] plus probe statistics (candidate set size and
+    /// how many candidates were re-ranked with the full-sketch estimator) —
+    /// what the coordinator's top-k metrics report.
+    pub fn query_stats(
+        &self,
+        query: &GumbelMaxSketch,
+        limit: usize,
+    ) -> Result<(Vec<(u64, f64)>, QueryStats), MergeError> {
+        let candidates = self.candidates(query);
+        let stats = QueryStats { candidates: candidates.len(), reranked: candidates.len() };
+        let mut scored = Vec::with_capacity(candidates.len());
+        for id in candidates {
             let sk = &self.sketches[&id];
             scored.push((id, estimate_jp(query, sk)?));
         }
         scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         scored.truncate(limit);
-        Ok(scored)
+        Ok((scored, stats))
     }
+}
+
+/// Probe statistics from [`LshIndex::query_stats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueryStats {
+    /// Unique ids colliding with the query in ≥ 1 band.
+    pub candidates: usize,
+    /// Candidates scored with the full-sketch estimator.
+    pub reranked: usize,
 }
 
 #[cfg(test)]
@@ -174,14 +211,82 @@ mod tests {
         v
     }
 
+    /// (bands, rows) tile the k registers: every band starts in range and
+    /// only the last may be ragged.
+    fn assert_covers(p: LshParams, k: usize) {
+        assert!((p.bands - 1) * p.rows < k, "{p:?} over-runs k={k}");
+        assert!(p.bands * p.rows >= k, "{p:?} under-covers k={k}");
+    }
+
     #[test]
     fn params_for_threshold_are_sane() {
         let p = LshParams::for_threshold(256, 0.5);
-        assert_eq!(p.bands * p.rows, 256);
+        assert_covers(p, 256);
         assert!(p.candidate_probability(0.9) > 0.95);
         assert!(p.candidate_probability(0.05) < 0.35);
         // S-curve monotone.
         assert!(p.candidate_probability(0.6) > p.candidate_probability(0.4));
+    }
+
+    /// Prime k must not degenerate to `bands=k, rows=1` (which makes every
+    /// sketch a candidate regardless of threshold) — the ragged trailing
+    /// band keeps the S-curve midpoint near the requested threshold.
+    #[test]
+    fn prime_and_small_k_hit_the_threshold() {
+        for k in [2usize, 3, 7, 13, 31, 127, 251] {
+            for t in [0.3, 0.5, 0.8] {
+                let p = LshParams::for_threshold(k, t);
+                assert_covers(p, k);
+                let mid = (1.0 / p.bands as f64).powf(1.0 / p.rows as f64);
+                // The best achievable midpoint over all (⌈k/r⌉, r) layouts;
+                // for k ≥ 31 that is always within 0.15 of the target.
+                if k >= 31 {
+                    assert!(
+                        (mid - t).abs() < 0.15,
+                        "k={k} t={t}: got {p:?} with midpoint {mid:.3}"
+                    );
+                    assert!(p.rows > 1, "k={k} t={t} degenerated to rows=1: {p:?}");
+                }
+            }
+        }
+        // The fix's concrete shape: 127 registers at t=0.5 get a real
+        // multi-row layout with a ragged last band.
+        let p = LshParams::for_threshold(127, 0.5);
+        assert!(p.rows > 1 && p.bands > 1 && p.bands < 127, "{p:?}");
+        assert!(p.bands * p.rows > 127, "expected a ragged trailing band: {p:?}");
+    }
+
+    /// Huge band/row counts must not overflow (the old `as i32` cast UB
+    /// territory); probabilities stay in [0, 1].
+    #[test]
+    fn candidate_probability_is_safe_for_extreme_params() {
+        let p = LshParams { bands: usize::MAX / 2, rows: usize::MAX / 2 };
+        for j in [0.0, 1e-9, 0.5, 1.0 - 1e-9, 1.0] {
+            let c = p.candidate_probability(j);
+            assert!((0.0..=1.0).contains(&c), "j={j} -> {c}");
+        }
+        assert_eq!(p.candidate_probability(1.0), 1.0);
+        assert_eq!(p.candidate_probability(0.0), 0.0);
+    }
+
+    /// A ragged layout indexes and queries correctly end to end.
+    #[test]
+    fn ragged_band_layout_round_trips() {
+        let k = 127; // prime
+        let f = FastGm::new(k, 9);
+        let params = LshParams::for_threshold(k, 0.5);
+        let mut index = LshIndex::new(params);
+        let v1 = SparseVector::new(vec![1, 2, 3], vec![1.0, 2.0, 0.5]);
+        let v2 = SparseVector::new(vec![50, 60], vec![1.0, 1.0]);
+        index.upsert(1, f.sketch(&v1));
+        index.upsert(2, f.sketch(&v2));
+        let (hits, stats) = index.query_stats(&f.sketch(&v1), 2).unwrap();
+        assert_eq!(hits[0].0, 1);
+        assert_eq!(hits[0].1, 1.0);
+        assert!(stats.candidates >= 1);
+        assert_eq!(stats.reranked, stats.candidates);
+        assert!(index.remove(1));
+        assert!(index.query(&f.sketch(&v1), 2).unwrap().iter().all(|h| h.0 != 1));
     }
 
     #[test]

@@ -3,6 +3,9 @@
 //! ```text
 //! fastgm serve    [--config cfg.toml] [--addr host:port] [--set k=v ...]
 //! fastgm client   [--addr host:port] (--ping | --metrics | --json '{...}')
+//! fastgm store    [--addr host:port] (--upsert KEY --vec "id:w,..." | --delete KEY | --stats)
+//! fastgm topk     [--addr host:port] --vec "id:w,..." [--limit N]
+//! fastgm snapshot [--addr host:port] (--save PATH | --restore PATH)
 //! fastgm sketch   [--dataset NAME|path:FILE|synthetic] [--k K] [--algo A] [--count N]
 //! fastgm exp      <table1|fig4|...|ablation-delta|ablation-accel|all> [--out DIR] [--full]
 //! fastgm simnet   [--depth D] [--packets N] [--k K]
@@ -50,6 +53,9 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
     match cmd.as_str() {
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
+        "store" => cmd_store(rest),
+        "topk" => cmd_topk(rest),
+        "snapshot" => cmd_snapshot(rest),
         "sketch" => cmd_sketch(rest),
         "exp" => cmd_exp(rest),
         "simnet" => cmd_simnet(rest),
@@ -66,12 +72,15 @@ fn top_help() -> String {
     "fastgm — Fast Gumbel-Max Sketch service (paper reproduction)\n\n\
      USAGE: fastgm <COMMAND> [OPTIONS]\n\n\
      COMMANDS:\n\
-       serve    run the sketching coordinator (TCP JSON-lines)\n\
-       client   talk to a running coordinator\n\
-       sketch   sketch a dataset locally and report timing\n\
-       exp      regenerate a paper table/figure (or 'all')\n\
-       simnet   run the braided-chain sensor network simulation\n\
-       info     environment, corpora and artifact status\n\n\
+       serve     run the sketching coordinator (TCP JSON-lines)\n\
+       client    talk to a running coordinator\n\
+       store     upsert/delete keys in the server's similarity store\n\
+       topk      top-k similarity query against the server's store\n\
+       snapshot  save/restore the server's store (binary snapshot)\n\
+       sketch    sketch a dataset locally and report timing\n\
+       exp       regenerate a paper table/figure (or 'all')\n\
+       simnet    run the braided-chain sensor network simulation\n\
+       info      environment, corpora and artifact status\n\n\
      Each command accepts --help."
         .to_string()
 }
@@ -125,6 +134,82 @@ fn cmd_client(argv: &[String]) -> anyhow::Result<()> {
     };
     let resp = client.call(&req)?;
     println!("{}", encode_line(&resp.to_json()).trim());
+    Ok(())
+}
+
+/// Parse a sparse vector spec of the form `id:weight,id:weight,...`.
+fn parse_vec(spec: &str) -> anyhow::Result<SparseVector> {
+    let mut v = SparseVector::default();
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (id, w) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad vector entry '{part}' (want id:weight)"))?;
+        v.push(
+            id.trim().parse().map_err(|e| anyhow::anyhow!("bad id '{id}': {e}"))?,
+            w.trim().parse().map_err(|e| anyhow::anyhow!("bad weight '{w}': {e}"))?,
+        );
+    }
+    anyhow::ensure!(!v.ids.is_empty(), "empty vector spec (want id:weight,id:weight,...)");
+    Ok(v)
+}
+
+fn cmd_store(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("store", "upsert/delete keys in the server's similarity store")
+        .opt("addr", "127.0.0.1:7878", "server address")
+        .opt("upsert", "", "key to upsert (requires --vec)")
+        .opt("vec", "", "sparse vector as id:w,id:w,...")
+        .opt("delete", "", "key to delete")
+        .flag("stats", "fetch store statistics");
+    let args = spec.parse(argv)?;
+    let mut client = Client::connect(&args.str("addr"))?;
+    if !args.str("upsert").is_empty() {
+        let v = parse_vec(&args.str("vec"))?;
+        println!("{}", client.upsert(&args.str("upsert"), v)?);
+    } else if !args.str("delete").is_empty() {
+        println!("{}", client.delete(&args.str("delete"))?);
+    } else if args.flag("stats") {
+        println!("{}", client.store_stats()?);
+    } else {
+        anyhow::bail!(
+            "one of --upsert KEY --vec ... | --delete KEY | --stats required\n\n{}",
+            spec.help_text()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_topk(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("topk", "top-k similarity query against the server's store")
+        .opt("addr", "127.0.0.1:7878", "server address")
+        .opt("vec", "", "query vector as id:w,id:w,...")
+        .opt("limit", "10", "number of neighbors");
+    let args = spec.parse(argv)?;
+    let v = parse_vec(&args.str("vec"))?;
+    let mut client = Client::connect(&args.str("addr"))?;
+    let hits = client.topk(v, args.usize("limit")?)?;
+    if hits.is_empty() {
+        println!("(no hits)");
+    }
+    for (rank, (key, score)) in hits.iter().enumerate() {
+        println!("{:>3}. {key}  J_P≈{score:.4}", rank + 1);
+    }
+    Ok(())
+}
+
+fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("snapshot", "save/restore the server's store (binary snapshot)")
+        .opt("addr", "127.0.0.1:7878", "server address")
+        .opt("save", "", "write the store to this server-side path")
+        .opt("restore", "", "replace the store from this server-side path");
+    let args = spec.parse(argv)?;
+    let mut client = Client::connect(&args.str("addr"))?;
+    if !args.str("save").is_empty() {
+        println!("{}", client.snapshot(&args.str("save"))?);
+    } else if !args.str("restore").is_empty() {
+        println!("{}", client.restore(&args.str("restore"))?);
+    } else {
+        anyhow::bail!("one of --save PATH | --restore PATH required\n\n{}", spec.help_text());
+    }
     Ok(())
 }
 

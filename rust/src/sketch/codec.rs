@@ -1,0 +1,308 @@
+//! Versioned binary snapshot codec for keyed sketch collections — the
+//! persistence format behind [`crate::coordinator::store::SketchStore`]'s
+//! `snapshot` / `restore` ops, so a server warm-restarts without
+//! recomputing a single sketch.
+//!
+//! Format v1, little-endian, with a trailing integrity checksum:
+//!
+//! ```text
+//! magic "FGMS" | version u16 | flags u16 (0) | count u64
+//! per entry:
+//!   key_len u32 | key (UTF-8) |
+//!   family u8 | seed u64 | k u64 | y[k] (f64 bit patterns) | s[k] u64
+//! fnv1a64(checksum of every preceding byte) u64
+//! ```
+//!
+//! Register values round-trip via raw bit patterns, so restore is
+//! **bit-identical** for every family — including `+inf` / EMPTY_REGISTER
+//! sentinels in untouched registers.
+//!
+//! Versioning rules: the version is bumped on any layout change; decoders
+//! read exactly the versions they know and refuse the rest loudly (no
+//! best-effort parsing of future layouts). Decoding is strict — bad magic,
+//! unknown version or family tag, truncation anywhere, trailing garbage
+//! and checksum mismatches are all clean `Err`s, never panics and never
+//! partial state.
+
+use super::{Family, GumbelMaxSketch};
+use crate::util::hash::fnv1a64;
+
+pub const MAGIC: [u8; 4] = *b"FGMS";
+pub const VERSION: u16 = 1;
+
+/// Largest key the snapshot format accepts. Public so writers (the
+/// coordinator's `upsert` op) can refuse oversized keys up front — an
+/// acked upsert must never produce a snapshot that cannot be restored.
+/// Also the decode-side allocation guard: a corrupt length field must not
+/// ask the allocator for gigabytes before the inevitable truncation error.
+pub const MAX_KEY_LEN: usize = 1 << 20;
+const MAX_K: u64 = 1 << 28;
+
+fn family_tag(f: Family) -> u8 {
+    match f {
+        Family::Ordered => 0,
+        Family::Direct => 1,
+        Family::Icws => 2,
+        Family::Bag => 3,
+        Family::MinHash => 4,
+    }
+}
+
+fn family_from_tag(t: u8) -> anyhow::Result<Family> {
+    Ok(match t {
+        0 => Family::Ordered,
+        1 => Family::Direct,
+        2 => Family::Icws,
+        3 => Family::Bag,
+        4 => Family::MinHash,
+        other => anyhow::bail!("snapshot has unknown family tag {other}"),
+    })
+}
+
+fn push_u16(out: &mut Vec<u8>, x: u16) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Encode `entries` (already in the order the caller wants frozen — the
+/// store sorts by key so snapshots of equal state are byte-identical).
+pub fn encode_store(entries: &[(String, GumbelMaxSketch)]) -> Vec<u8> {
+    let payload: usize = entries
+        .iter()
+        .map(|(key, sk)| 4 + key.len() + 1 + 8 + 8 + 16 * sk.k())
+        .sum();
+    let mut out = Vec::with_capacity(16 + payload + 8);
+    out.extend_from_slice(&MAGIC);
+    push_u16(&mut out, VERSION);
+    push_u16(&mut out, 0); // flags, reserved
+    push_u64(&mut out, entries.len() as u64);
+    for (key, sk) in entries {
+        push_u32(&mut out, key.len() as u32);
+        out.extend_from_slice(key.as_bytes());
+        out.push(family_tag(sk.family));
+        push_u64(&mut out, sk.seed);
+        push_u64(&mut out, sk.k() as u64);
+        for &y in &sk.y {
+            push_u64(&mut out, y.to_bits());
+        }
+        for &s in &sk.s {
+            push_u64(&mut out, s);
+        }
+    }
+    let checksum = fnv1a64(&out);
+    push_u64(&mut out, checksum);
+    out
+}
+
+/// Strict little-endian reader over the snapshot body.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len());
+        let Some(end) = end else {
+            anyhow::bail!(
+                "snapshot truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.bytes.len() - self.pos
+            );
+        };
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+}
+
+/// Decode a snapshot produced by [`encode_store`].
+pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, GumbelMaxSketch)>> {
+    anyhow::ensure!(
+        bytes.len() >= MAGIC.len() + 2 + 2 + 8 + 8,
+        "snapshot too short ({} bytes) to be a FastGM snapshot",
+        bytes.len()
+    );
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let want = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+    anyhow::ensure!(
+        fnv1a64(body) == want,
+        "snapshot checksum mismatch (file is corrupt or truncated)"
+    );
+    let mut r = Reader { bytes: body, pos: 0 };
+    anyhow::ensure!(r.take(4)? == MAGIC, "not a FastGM snapshot (bad magic)");
+    let version = r.u16()?;
+    anyhow::ensure!(
+        version == VERSION,
+        "unsupported snapshot version {version} (this build reads v{VERSION})"
+    );
+    let _flags = r.u16()?;
+    let count = r.u64()?;
+    let mut out = Vec::new();
+    for i in 0..count {
+        let key_len = r.u32()? as usize;
+        anyhow::ensure!(key_len <= MAX_KEY_LEN, "entry {i}: key length {key_len} too large");
+        let key = std::str::from_utf8(r.take(key_len)?)
+            .map_err(|e| anyhow::anyhow!("entry {i}: key is not UTF-8: {e}"))?
+            .to_string();
+        let family = family_from_tag(r.u8()?)?;
+        let seed = r.u64()?;
+        let k = r.u64()?;
+        anyhow::ensure!(k <= MAX_K, "entry '{key}': register count {k} too large");
+        // Checked in u64 so `16 * k` cannot wrap on 32-bit targets and
+        // bypass the allocation guard.
+        anyhow::ensure!(
+            r.remaining() as u64 >= 16 * k,
+            "entry '{key}': truncated register arrays (k={k})"
+        );
+        let k = k as usize;
+        let mut y = Vec::with_capacity(k);
+        for j in 0..k {
+            let v = f64::from_bits(r.u64()?);
+            anyhow::ensure!(!v.is_nan(), "entry '{key}': register y[{j}] is NaN");
+            y.push(v);
+        }
+        let mut s = Vec::with_capacity(k);
+        for _ in 0..k {
+            s.push(r.u64()?);
+        }
+        out.push((key, GumbelMaxSketch { family, seed, y, s }));
+    }
+    anyhow::ensure!(
+        r.remaining() == 0,
+        "snapshot has {} trailing bytes after {count} entries",
+        r.remaining()
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::{SparseVector, EMPTY_REGISTER};
+
+    fn sample() -> Vec<(String, GumbelMaxSketch)> {
+        let mut a = GumbelMaxSketch::empty(Family::Ordered, 42, 4);
+        a.y[1] = 0.125;
+        a.s[1] = u64::MAX - 1; // above 2^53: binary stays exact
+        let b = crate::sketch::fastgm::FastGm::new(8, 7)
+            .sketch(&SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]));
+        vec![("alpha".into(), a), ("βeta".into(), b)]
+    }
+
+    /// Patch bytes and keep the trailing checksum consistent, so structural
+    /// errors (not the checksum) are what the decoder reports.
+    fn with_checksum_refreshed(mut bytes: Vec<u8>) -> Vec<u8> {
+        let n = bytes.len();
+        let sum = fnv1a64(&bytes[..n - 8]);
+        bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
+    #[test]
+    fn roundtrip_is_bit_identical() {
+        let entries = sample();
+        let bytes = encode_store(&entries);
+        let back = decode_store(&bytes).unwrap();
+        assert_eq!(back, entries);
+        // Untouched registers survive exactly.
+        assert!(back[0].1.y[0].is_infinite());
+        assert_eq!(back[0].1.s[0], EMPTY_REGISTER);
+        // Deterministic encoding.
+        assert_eq!(bytes, encode_store(&back));
+    }
+
+    #[test]
+    fn empty_store_roundtrips() {
+        let bytes = encode_store(&[]);
+        assert_eq!(decode_store(&bytes).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn every_truncation_is_a_clean_error() {
+        let bytes = encode_store(&sample());
+        for len in 0..bytes.len() {
+            assert!(
+                decode_store(&bytes[..len]).is_err(),
+                "prefix of {len}/{} bytes decoded",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_detected() {
+        let bytes = encode_store(&sample());
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            assert!(decode_store(&bad).is_err(), "flip at byte {i} went unnoticed");
+        }
+    }
+
+    #[test]
+    fn version_and_magic_mismatches_are_named() {
+        let bytes = encode_store(&sample());
+        let mut wrong_version = bytes.clone();
+        wrong_version[4] = 99; // version lives after the 4-byte magic
+        let err = decode_store(&with_checksum_refreshed(wrong_version)).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] = b'X';
+        let err = decode_store(&with_checksum_refreshed(wrong_magic)).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        let mut bad_family = bytes;
+        // First entry: 16 header bytes, 4-byte key length, "alpha" (5 bytes).
+        let fam_off = 16 + 4 + 5;
+        bad_family[fam_off] = 42;
+        let err = decode_store(&with_checksum_refreshed(bad_family)).unwrap_err();
+        assert!(err.to_string().contains("family tag 42"), "{err}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut bytes = encode_store(&sample());
+        let tail_at = bytes.len() - 8;
+        bytes.splice(tail_at..tail_at, [0u8; 3]);
+        let err = decode_store(&with_checksum_refreshed(bytes)).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn oversized_length_fields_do_not_allocate() {
+        // count claims entries the buffer cannot hold → truncation error,
+        // not an attempted huge allocation.
+        let mut bytes = encode_store(&[]);
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_store(&with_checksum_refreshed(bytes)).is_err());
+    }
+}

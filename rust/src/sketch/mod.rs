@@ -25,8 +25,12 @@
 //! * [`hyperloglog`] — HLL for unweighted cardinality (ablation baseline).
 //! * [`order_stats`] — the ascending-exponential + streamed-Fisher–Yates
 //!   generator both FastGM variants and BagMinHash build on.
+//!
+//! [`codec`] is not an algorithm: it is the versioned binary snapshot
+//! format the coordinator's keyed sketch store persists through.
 
 pub mod order_stats;
+pub mod codec;
 pub mod engine;
 pub mod fastgm;
 pub mod sharded;

@@ -172,7 +172,7 @@ fn estimators_and_lsh_fail_loudly_for_incompatible_families() {
     mh.call(Request::Sketch { name: "m".into(), vector: v.clone(), algo: None });
     let ins = mh.call(Request::LshInsert { name: "m".into() });
     let Response::Error { message } = ins else { panic!("minhash LshInsert must error: {ins:?}") };
-    assert!(message.contains("LSH requires"), "{message}");
+    assert!(message.contains("requires an EXP-register default algo"), "{message}");
     let q = mh.call(Request::LshQuery { vector: v, limit: 1 });
     assert!(matches!(q, Response::Error { .. }), "minhash LshQuery must error: {q:?}");
     mh.shutdown();

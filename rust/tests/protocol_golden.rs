@@ -29,13 +29,19 @@ const ALL_REQUEST_OPS: &[&str] = &[
     "merge",
     "lsh_insert",
     "lsh_query",
+    "upsert",
+    "delete",
+    "topk",
+    "store_stats",
+    "snapshot",
+    "restore",
     "metrics",
     "ping",
 ];
 
 /// Every response type. Same rule as [`ALL_REQUEST_OPS`].
 const ALL_RESPONSE_TYPES: &[&str] =
-    &["sketch", "ack", "estimate", "topk", "metrics", "error", "pong"];
+    &["sketch", "ack", "estimate", "topk", "metrics", "stats", "error", "pong"];
 
 fn golden_lines(text: &str) -> Vec<&str> {
     text.lines().map(str::trim).filter(|l| !l.is_empty()).collect()
@@ -117,6 +123,21 @@ fn golden_values_decode_losslessly() {
     };
     assert_eq!(stream, "s");
     assert_eq!(items, vec![(3, 0.5), ((1u64 << 53) + 1, 1.0)]);
+
+    // The keyed-store ops sit between ping and the algo-bearing sketch.
+    let Request::Upsert { key, vector } = decode_request(lines[12]).unwrap() else {
+        panic!("golden line 12 must be an upsert request")
+    };
+    assert_eq!(key, "doc1");
+    assert_eq!(vector, SparseVector::new(vec![1, 5], vec![0.5, 2.0]));
+    let Request::TopK { limit, .. } = decode_request(lines[14]).unwrap() else {
+        panic!("golden line 14 must be a topk request")
+    };
+    assert_eq!(limit, 5);
+    let Request::Snapshot { path } = decode_request(lines[16]).unwrap() else {
+        panic!("golden line 16 must be a snapshot request")
+    };
+    assert_eq!(path, "/tmp/fgm.fgms");
 
     let resp_lines = golden_lines(RESPONSES);
     let Response::Sketch { sketch, .. } = decode_response(resp_lines[0]).unwrap() else {

@@ -1,0 +1,130 @@
+//! Black-box round-trip property tests for the snapshot codec
+//! (`fastgm::sketch::codec`) across **every** registered algorithm family,
+//! plus clean-error coverage for corrupt, truncated and version-mismatched
+//! inputs. The in-module unit tests cover byte-level details; these lock
+//! the public contract the coordinator's snapshot/restore ops rely on.
+
+use fastgm::sketch::codec::{decode_store, encode_store, MAGIC, VERSION};
+use fastgm::sketch::engine::{build, AlgorithmId, EngineParams};
+use fastgm::sketch::{Family, GumbelMaxSketch, Sketcher, SparseVector, EMPTY_REGISTER};
+use fastgm::util::hash::fnv1a64;
+use fastgm::util::rng::SplitMix64;
+
+fn random_vec(r: &mut SplitMix64, n: usize) -> SparseVector {
+    SparseVector::new(
+        (0..n).map(|_| r.next_u64()).collect(),
+        (0..n).map(|_| r.next_f64() + 0.05).collect(),
+    )
+}
+
+/// One sketch per registered algorithm — iterating the registry keeps a
+/// newly added algorithm covered automatically.
+fn entries_across_all_families() -> Vec<(String, GumbelMaxSketch)> {
+    let mut r = SplitMix64::new(11);
+    let mut entries: Vec<(String, GumbelMaxSketch)> = AlgorithmId::ALL
+        .into_iter()
+        .map(|id| {
+            let sk = build(id, EngineParams::new(32, 7)).sketch(&random_vec(&mut r, 20));
+            (format!("doc-{}", id.name()), sk)
+        })
+        .collect();
+    // Plus a mostly-empty sketch: +inf / EMPTY_REGISTER sentinels and a
+    // >2^53 id must survive bit-for-bit.
+    let mut sparse = GumbelMaxSketch::empty(Family::Ordered, 7, 32);
+    sparse.y[3] = 0.5;
+    sparse.s[3] = u64::MAX - 7;
+    entries.push(("nearly-empty".into(), sparse));
+    entries
+}
+
+fn refresh_checksum(mut bytes: Vec<u8>) -> Vec<u8> {
+    let n = bytes.len();
+    let sum = fnv1a64(&bytes[..n - 8]);
+    bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+    bytes
+}
+
+#[test]
+fn every_algorithm_family_roundtrips_bit_identically() {
+    let entries = entries_across_all_families();
+    let bytes = encode_store(&entries);
+    let back = decode_store(&bytes).unwrap();
+    assert_eq!(back.len(), entries.len());
+    for ((ka, a), (kb, b)) in entries.iter().zip(&back) {
+        assert_eq!(ka, kb);
+        assert_eq!(a.family, b.family, "{ka}");
+        assert_eq!(a.seed, b.seed, "{ka}");
+        assert_eq!(a.s, b.s, "{ka}");
+        // Bit-level equality, stricter than f64 PartialEq.
+        for (x, y) in a.y.iter().zip(&b.y) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ka}: y register drifted");
+        }
+    }
+    // Sentinels survived.
+    let (_, sparse) = back.last().unwrap();
+    assert!(sparse.y[0].is_infinite());
+    assert_eq!(sparse.s[0], EMPTY_REGISTER);
+    assert_eq!(sparse.s[3], u64::MAX - 7);
+    // Deterministic encoding: re-encoding the decode is byte-identical.
+    assert_eq!(encode_store(&back), bytes);
+}
+
+#[test]
+fn random_stores_roundtrip() {
+    let mut r = SplitMix64::new(99);
+    for round in 0..20 {
+        let n = r.next_range(0, 12);
+        let entries: Vec<(String, GumbelMaxSketch)> = (0..n)
+            .map(|i| {
+                let f = fastgm::sketch::fastgm::FastGm::new(16, round as u64);
+                (format!("k{i}"), f.sketch(&random_vec(&mut r, 1 + i)))
+            })
+            .collect();
+        let bytes = encode_store(&entries);
+        assert_eq!(decode_store(&bytes).unwrap(), entries, "round {round}");
+    }
+}
+
+#[test]
+fn truncated_inputs_are_clean_errors() {
+    let bytes = encode_store(&entries_across_all_families());
+    // Every strict prefix must fail to decode — never panic, never succeed.
+    for len in (0..bytes.len()).step_by(7).chain([bytes.len() - 1]) {
+        let err = decode_store(&bytes[..len]);
+        assert!(err.is_err(), "prefix of {len}/{} bytes decoded", bytes.len());
+    }
+}
+
+#[test]
+fn corrupt_inputs_are_clean_errors() {
+    let bytes = encode_store(&entries_across_all_families());
+    let mut r = SplitMix64::new(5);
+    for _ in 0..200 {
+        let mut bad = bytes.clone();
+        let at = r.next_range(0, bad.len() - 1);
+        bad[at] ^= 1 << r.next_range(0, 7);
+        assert!(decode_store(&bad).is_err(), "flip at byte {at} went unnoticed");
+    }
+    assert!(decode_store(b"").is_err());
+    assert!(decode_store(b"FGMS").is_err());
+    assert!(decode_store(&[0u8; 64]).is_err());
+}
+
+#[test]
+fn version_mismatch_is_a_named_clean_error() {
+    let bytes = encode_store(&entries_across_all_families());
+    assert_eq!(&bytes[..4], &MAGIC, "layout assumption: magic first");
+    let mut future = bytes.clone();
+    let next = VERSION + 1;
+    future[4..6].copy_from_slice(&next.to_le_bytes());
+    let err = decode_store(&refresh_checksum(future)).unwrap_err().to_string();
+    assert!(
+        err.contains(&format!("version {next}")),
+        "version mismatch must name the version: {err}"
+    );
+    // And the magic check still guards non-snapshots with valid length.
+    let mut not_ours = bytes;
+    not_ours[..4].copy_from_slice(b"ELFY");
+    let err = decode_store(&refresh_checksum(not_ours)).unwrap_err().to_string();
+    assert!(err.contains("bad magic"), "{err}");
+}

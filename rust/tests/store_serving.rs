@@ -1,0 +1,182 @@
+//! End-to-end acceptance test for the keyed similarity store: a client
+//! `upsert`s N vectors over TCP, snapshots, the server fully restarts
+//! (stop + coordinator teardown), restores, and a `topk` query returns
+//! exactly the neighbors a brute-force `estimate_jp` scan ranks first —
+//! with the LSH probe touching fewer than N candidates (verified through
+//! the server's own metrics).
+
+use fastgm::coordinator::client::Client;
+use fastgm::coordinator::protocol::{Request, Response};
+use fastgm::coordinator::server::Server;
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::estimate::jaccard::estimate_jp;
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::{Sketcher, SparseVector};
+use fastgm::util::rng::SplitMix64;
+use std::sync::Arc;
+
+const K: usize = 128;
+const SEED: u64 = 42;
+/// Above the default `topk_scan_max` (64), so `topk` takes the band probe.
+const N: usize = 120;
+const LIMIT: usize = 5;
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig { k: K, seed: SEED, workers: 2, ..Default::default() }
+}
+
+/// doc000 = the query itself, doc001..doc004 near-duplicates (exactly 3 of
+/// 40 entries replaced each, so J_P ≈ 0.9 deterministically — far above the
+/// 0.5 banding threshold), the rest unrelated with disjoint id spaces — so
+/// the brute-force top-5 is exactly {doc000..doc004} with strictly positive
+/// scores, and everything else scores exactly 0 (no ambiguous tail).
+fn corpus() -> (SparseVector, Vec<SparseVector>) {
+    let mut r = SplitMix64::new(31);
+    let base = SparseVector::new(
+        (0..40u64).map(|i| i * 31 + 5).collect(),
+        (0..40).map(|_| r.next_f64() + 0.1).collect(),
+    );
+    let mut docs = Vec::with_capacity(N);
+    docs.push(base.clone());
+    for j in 1..5u64 {
+        // Replace a fixed, per-duplicate set of 3 entries with fresh ids.
+        let swapped = [j - 1, j + 9, j + 19];
+        let mut near = SparseVector::default();
+        for (idx, (id, w)) in base.positive().enumerate() {
+            if swapped.contains(&(idx as u64)) {
+                near.push(r.next_u64() | (1 << 63), w);
+            } else {
+                near.push(id, w);
+            }
+        }
+        docs.push(near);
+    }
+    for i in 5..N {
+        docs.push(SparseVector::new(
+            (0..40u64).map(|j| (i as u64) * 100_000 + j).collect(),
+            (0..40).map(|_| r.next_f64() + 0.1).collect(),
+        ));
+    }
+    (base, docs)
+}
+
+#[test]
+fn upsert_snapshot_restart_restore_topk_matches_bruteforce() {
+    let (query, docs) = corpus();
+
+    // ---- Serve + pipelined ingest over TCP. -----------------------------
+    let coordinator = Arc::new(Coordinator::new(cfg()).unwrap());
+    let server = Server::start(coordinator.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let reqs: Vec<Request> = docs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| Request::Upsert { key: format!("doc{i:03}"), vector: d.clone() })
+        .collect();
+    for chunk in reqs.chunks(32) {
+        for r in client.call_pipelined(chunk).unwrap() {
+            assert!(matches!(r, Response::Ack { .. }), "upsert failed: {r:?}");
+        }
+    }
+
+    // ---- Snapshot, then a REAL restart: stop + tear down everything. ----
+    let path =
+        std::env::temp_dir().join(format!("fastgm-store-serving-{}.fgms", std::process::id()));
+    let path_str = path.to_string_lossy().to_string();
+    client.snapshot(&path_str).unwrap();
+    drop(client);
+    server.stop();
+    let Ok(coord) = Arc::try_unwrap(coordinator) else {
+        panic!("Server::stop must join every connection thread");
+    };
+    coord.shutdown();
+
+    // ---- Fresh server, cold store: restore from the snapshot. -----------
+    let coordinator = Arc::new(Coordinator::new(cfg()).unwrap());
+    let server = Server::start(coordinator.clone(), "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let info = client.restore(&path_str).unwrap();
+    assert!(info.contains(&format!("restored {N} entries")), "{info}");
+
+    // ---- topk over the wire vs a local brute-force estimate_jp scan. ----
+    let hits = client.topk(query.clone(), LIMIT).unwrap();
+    let f = FastGm::new(K, SEED);
+    let qsk = f.sketch(&query);
+    let mut brute: Vec<(String, f64)> = docs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| (format!("doc{i:03}"), estimate_jp(&qsk, &f.sketch(d)).unwrap()))
+        .collect();
+    brute.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    brute.truncate(LIMIT);
+    assert_eq!(hits, brute, "band-probe top-k must equal the brute-force ranking");
+    assert_eq!(hits[0].0, "doc000");
+    assert!((hits[0].1 - 1.0).abs() < 1e-12, "self-similarity must be 1: {hits:?}");
+    assert!(
+        hits.iter().all(|h| h.1 > 0.4),
+        "near-duplicates should fill the whole top set: {hits:?}"
+    );
+
+    // ---- Probe cost is sub-linear and reported via metrics. -------------
+    let Response::MetricsDump { snapshot } = client.call(&Request::Metrics).unwrap() else {
+        panic!("expected metrics")
+    };
+    let counter = |name: &str| {
+        snapshot
+            .get("counters")
+            .and_then(|c| c.get(name))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    let candidates = counter("topk.candidates");
+    assert!(candidates >= LIMIT as f64, "probe missed expected hits: {snapshot}");
+    assert!(
+        candidates < N as f64,
+        "probe candidate count must be sub-linear in the store size: {snapshot}"
+    );
+    assert!(counter("path.topk.probe") >= 1.0, "topk did not take the probe path: {snapshot}");
+    assert_eq!(counter("store.restore"), 1.0, "{snapshot}");
+    let store_size = snapshot
+        .get("gauges")
+        .and_then(|g| g.get("store.size"))
+        .and_then(|v| v.as_f64());
+    assert_eq!(store_size, Some(N as f64), "{snapshot}");
+
+    server.stop();
+    std::fs::remove_file(&path).ok();
+}
+
+/// The snapshot file itself is the versioned binary format — a corrupted
+/// file is refused over the wire with a clean error and the store keeps
+/// its current contents.
+#[test]
+fn corrupt_snapshot_is_refused_over_the_wire() {
+    let (query, docs) = corpus();
+    let coordinator = Arc::new(Coordinator::new(cfg()).unwrap());
+    let server = Server::start(coordinator, "127.0.0.1:0").unwrap();
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    for (i, d) in docs.iter().take(8).enumerate() {
+        client.upsert(&format!("doc{i:03}"), d.clone()).unwrap();
+    }
+    let path =
+        std::env::temp_dir().join(format!("fastgm-store-corrupt-{}.fgms", std::process::id()));
+    let path_str = path.to_string_lossy().to_string();
+    client.snapshot(&path_str).unwrap();
+    // Flip one byte mid-file: restore must refuse and leave the store be.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = client.restore(&path_str).unwrap_err().to_string();
+    assert!(
+        err.contains("checksum") || err.contains("truncated") || err.contains("snapshot"),
+        "unexpected error: {err}"
+    );
+    let stats = client.store_stats().unwrap();
+    assert_eq!(stats.get("size").and_then(|v| v.as_f64()), Some(8.0), "{stats}");
+    // And the store still serves.
+    let hits = client.topk(query, 1).unwrap();
+    assert_eq!(hits[0].0, "doc000");
+    server.stop();
+    std::fs::remove_file(&path).ok();
+}
