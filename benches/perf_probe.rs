@@ -4,6 +4,11 @@
 //! `shard_min_nplus` threshold guards against) is visible per run, plus the
 //! engine's scratch-reuse path next to fresh-allocation sketching so the
 //! zero-allocation win is measured on every run.
+//!
+//! `cargo bench --bench perf_probe -- --json BENCH_perf.json` additionally
+//! writes a machine-readable summary (name → ns/op + ops/s) so runs
+//! accumulate a diffable perf trajectory; default stdout output is
+//! unchanged.
 use fastgm::data::synthetic::{dense_vector, WeightDist};
 use fastgm::data::stream::generate;
 use fastgm::sketch::fastgm::FastGm;
@@ -15,7 +20,35 @@ use fastgm::sketch::{Family, GumbelMaxSketch, SketchScratch, Sketcher};
 use fastgm::util::bench::{Bencher, Suite};
 use fastgm::util::rng::SplitMix64;
 
+/// `--json <path>` / `--json=<path>` from the post-`--` bench args.
+/// A `--json` with no path is an error, not a silent no-op — the caller
+/// asked for a summary file and must not discover at diff time that none
+/// was ever written.
+fn json_path(argv: &[String]) -> Result<Option<String>, String> {
+    let mut it = argv.iter();
+    while let Some(arg) = it.next() {
+        if arg == "--json" {
+            return match it.next() {
+                Some(path) => Ok(Some(path.clone())),
+                None => Err("--json requires a path (e.g. --json BENCH_perf.json)".into()),
+            };
+        }
+        if let Some(path) = arg.strip_prefix("--json=") {
+            return Ok(Some(path.to_string()));
+        }
+    }
+    Ok(None)
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let json = match json_path(&argv) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
     let b = Bencher { budget: 0.6, samples: 9, warmup: 0.08 };
     let mut suite = Suite::new();
     let mut rng = SplitMix64::new(42);
@@ -79,5 +112,15 @@ fn main() {
             for &(id, w) in &stream.events { s.push(id, w); }
             s.sketch()
         }));
+    }
+
+    if let Some(path) = json {
+        match suite.write_json(&path) {
+            Ok(()) => println!("  -> wrote {} results to {path}", suite.results.len()),
+            Err(e) => {
+                eprintln!("cannot write bench summary '{path}': {e}");
+                std::process::exit(1);
+            }
+        }
     }
 }

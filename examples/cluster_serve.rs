@@ -1,0 +1,184 @@
+//! CLUSTER-SHARDED SERVING, END TO END: three real nodes, one client.
+//!
+//!   1. spawn a 3-node local cluster (real TCP on loopback), connect the
+//!      scatter-gather `ClusterClient` (hello handshake: protocol, node
+//!      ids, shared sketch config),
+//!   2. ingest a corpus through the rendezvous partitioner (every key
+//!      routed to its owning node) and answer `topk` queries by
+//!      scatter → per-node LSH candidates → codec `sketch_fetch` →
+//!      central `estimate_jp` re-rank → global k,
+//!   3. snapshot every node, **kill one**, show the failure domain: `topk`
+//!      keeps serving (degraded coverage, never a panic) while an `upsert`
+//!      to the dead partition fails with a typed `NodeDown` error,
+//!   4. restart the node cold, `restore` its snapshot (epoch bumps) — and
+//!      verify the cluster answers every query with the exact rankings it
+//!      gave before the failure,
+//!   5. cluster-wide weighted cardinality: stream pushes partitioned by
+//!      element id, per-site sketches merged centrally (§2.3).
+//!
+//! Runs offline in seconds; CI uses it as the cluster smoke test.
+//!
+//! ```bash
+//! cargo run --release --example cluster_serve
+//! ```
+
+use fastgm::coordinator::cluster::{ClusterClient, ClusterError, LocalCluster};
+use fastgm::coordinator::service::CoordinatorConfig;
+use fastgm::data::corpus::Corpus;
+use fastgm::sketch::SparseVector;
+use fastgm::util::rng::SplitMix64;
+use std::time::Instant;
+
+const NODES: usize = 3;
+const N_DOCS: usize = 240;
+const K: usize = 128;
+const SEED: u64 = 42;
+const QUERIES: usize = 20;
+const LIMIT: usize = 5;
+
+fn config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        k: K,
+        seed: SEED,
+        workers: 2,
+        node_id: "site".into(),
+        ..Default::default()
+    }
+}
+
+/// Keep ~`keep` of the doc's mass, replace the rest with fresh ids.
+fn perturb(rng: &mut SplitMix64, v: &SparseVector, keep: f64) -> SparseVector {
+    let mut out = SparseVector::default();
+    for (id, w) in v.positive() {
+        if rng.next_f64() < keep {
+            out.push(id, w);
+        } else {
+            out.push(rng.next_u64() | (1 << 63), w);
+        }
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    fastgm::util::logger::init();
+
+    // ---- Phase 1: spawn the cluster, handshake. -------------------------
+    let mut cluster = LocalCluster::start(NODES, &config())?;
+    let mut cc = ClusterClient::connect(&cluster.addrs())?;
+    println!("cluster up: {} nodes", cc.nodes());
+    for i in 0..cc.nodes() {
+        let h = cc.hello(i);
+        println!("  {} @ {} (protocol v{}, epoch {})", h.node, cc.addr(i), h.protocol, h.epoch);
+    }
+
+    // ---- Phase 2: partitioned ingest + scatter-gather topk. -------------
+    let corpus = Corpus::by_name("real-sim", 7).expect("real-sim corpus analog");
+    let docs: Vec<SparseVector> = corpus.vectors(N_DOCS);
+    let t0 = Instant::now();
+    for (i, d) in docs.iter().enumerate() {
+        cc.upsert(&format!("doc{i:03}"), d.clone())?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let sizes = cc.store_sizes();
+    println!(
+        "upserted {N_DOCS} docs in {dt:.2}s ({:.0} docs/s routed), occupancy: {:?}",
+        N_DOCS as f64 / dt,
+        sizes
+    );
+    let total: f64 = sizes.iter().filter_map(|(_, s)| *s).sum();
+    anyhow::ensure!(total == N_DOCS as f64, "partitioned sizes must sum to the corpus");
+    anyhow::ensure!(
+        sizes.iter().all(|(_, s)| s.unwrap_or(0.0) > 0.0),
+        "rendezvous partitioning left a node empty: {sizes:?}"
+    );
+
+    let mut rng = SplitMix64::new(2024);
+    let targets: Vec<usize> = (0..QUERIES).map(|_| rng.next_range(0, N_DOCS - 1)).collect();
+    let query_vecs: Vec<SparseVector> =
+        targets.iter().map(|&t| perturb(&mut rng, &docs[t], 0.9)).collect();
+    let t0 = Instant::now();
+    let mut before = Vec::with_capacity(QUERIES);
+    for q in &query_vecs {
+        let (hits, stats) = cc.topk(q, LIMIT)?;
+        anyhow::ensure!(stats.live == NODES, "all nodes should answer: {stats:?}");
+        before.push(hits);
+    }
+    let qdt = t0.elapsed().as_secs_f64();
+    let self_recall = targets
+        .iter()
+        .zip(&before)
+        .filter(|(t, hits)| hits.first().map(|h| h.0 == format!("doc{t:03}")) == Some(true))
+        .count();
+    println!(
+        "{QUERIES} scatter-gather top-{LIMIT} in {:.1} ms ({:.2} ms each), self-recall {self_recall}/{QUERIES}",
+        qdt * 1e3,
+        qdt * 1e3 / QUERIES as f64,
+    );
+    anyhow::ensure!(self_recall as f64 / QUERIES as f64 > 0.9, "self-recall too low");
+
+    // ---- Phase 3: snapshot all, kill one, degrade. ----------------------
+    let snap_dir = std::env::temp_dir();
+    let mut snaps = Vec::new();
+    for i in 0..NODES {
+        let path = snap_dir
+            .join(format!("fastgm-cluster-{}-{i}.fgms", std::process::id()))
+            .to_string_lossy()
+            .to_string();
+        println!("{}", cc.snapshot_node(i, &path)?);
+        snaps.push(path);
+    }
+    const VICTIM: usize = 1;
+    println!("killing {} ...", cc.node_id(VICTIM));
+    cluster.kill(VICTIM);
+    // topk keeps serving — degraded coverage, never a panic.
+    let (degraded, stats) = cc.topk(&query_vecs[0], LIMIT)?;
+    println!(
+        "degraded topk answered with {}/{} nodes live, {} hits",
+        stats.live,
+        stats.nodes,
+        degraded.len()
+    );
+    anyhow::ensure!(stats.live == NODES - 1, "exactly one node should be down");
+    // A write to the dead partition is a typed error.
+    let dead_key = (0..)
+        .map(|i| format!("probe{i}"))
+        .find(|k| cc.owner(k) == VICTIM)
+        .expect("some key lands on the victim");
+    match cc.upsert(&dead_key, docs[0].clone()) {
+        Err(ClusterError::NodeDown { node, .. }) => {
+            println!("upsert '{dead_key}' → typed NodeDown({node}) ✓")
+        }
+        other => anyhow::bail!("expected NodeDown for '{dead_key}', got {other:?}"),
+    }
+
+    // ---- Phase 4: restart cold, restore, identical rankings. ------------
+    cluster.restart(VICTIM)?;
+    cc.reconnect(VICTIM, cluster.addr(VICTIM))?;
+    println!("{}", cc.restore_node(VICTIM, &snaps[VICTIM])?);
+    cc.reconnect(VICTIM, cluster.addr(VICTIM))?; // refresh hello: epoch bumped
+    anyhow::ensure!(cc.hello(VICTIM).epoch == 1, "restore must bump the node epoch");
+    let mut after = Vec::with_capacity(QUERIES);
+    for q in &query_vecs {
+        after.push(cc.topk(q, LIMIT)?.0);
+    }
+    anyhow::ensure!(
+        before == after,
+        "restored cluster ranked neighbors differently than before the failure"
+    );
+    println!("restored cluster reproduces all {QUERIES} rankings exactly ✓");
+
+    // ---- Phase 5: §2.3 cardinality across sites. ------------------------
+    let items: Vec<(u64, f64)> = (0..2000u64).map(|i| (i, 1.0)).collect();
+    cc.push("pkts", &items)?;
+    let est = cc.cardinality("pkts")?;
+    let rel = (est - 2000.0).abs() / 2000.0;
+    println!("cluster cardinality: {est:.1} (truth 2000, rel err {:.1}%)", rel * 100.0);
+    anyhow::ensure!(rel < 0.3, "cardinality estimate out of bounds");
+
+    cluster.stop();
+    for p in snaps {
+        std::fs::remove_file(p).ok();
+    }
+    println!("\ncluster_serve OK");
+    Ok(())
+}

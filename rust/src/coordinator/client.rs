@@ -5,8 +5,8 @@
 //! expected response variant and turn server-side `error` replies into
 //! `Err`, so callers don't re-match every response.
 
-use super::protocol::{self, Request, Response};
-use crate::sketch::SparseVector;
+use super::protocol::{self, HelloInfo, Request, Response, SketchSource};
+use crate::sketch::{codec, GumbelMaxSketch, SparseVector};
 use crate::util::json::Value;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -25,32 +25,59 @@ impl Client {
         Ok(Client { writer: stream, reader })
     }
 
-    /// Send one request and wait for its response line.
-    pub fn call(&mut self, req: &Request) -> anyhow::Result<Response> {
-        let line = protocol::encode_line(&req.to_json());
-        self.writer.write_all(line.as_bytes())?;
-        let mut reply = String::new();
-        let n = self.reader.read_line(&mut reply)?;
-        anyhow::ensure!(n > 0, "server closed the connection");
-        protocol::decode_response(&reply)
+    /// Bound how long any read OR write waits for the server (`None` =
+    /// forever, the default). A timed-out operation errors out of
+    /// `call`/`send_batch`/`recv_batch` possibly mid-line, so after a
+    /// timeout the connection must be discarded, not reused — the cluster
+    /// layer does exactly that (timeout ⇒ node marked down), turning a
+    /// hung-but-connected node (even one with a full receive buffer that
+    /// would block writes forever) into the same typed degradation as a
+    /// dead one.
+    pub fn set_io_timeout(&mut self, timeout: Option<std::time::Duration>) -> anyhow::Result<()> {
+        // Socket-level options: the reader half is a clone of the same
+        // socket, so setting them on the writer covers both directions.
+        self.writer.set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
     }
 
-    /// Pipeline many requests, then collect all responses (cuts RTT for
-    /// bulk ingestion).
-    pub fn call_pipelined(&mut self, reqs: &[Request]) -> anyhow::Result<Vec<Response>> {
+    /// Phase 1 of a split-phase exchange: write `reqs` as one buffer
+    /// without reading anything. Pair with [`Client::recv_batch`]. The
+    /// cluster fan-out uses this to put requests on EVERY node's wire
+    /// before reading any reply, so per-node server work overlaps and a
+    /// scatter costs ~max(RTT) instead of sum(RTT).
+    pub fn send_batch(&mut self, reqs: &[Request]) -> anyhow::Result<()> {
         let mut buf = String::new();
         for r in reqs {
             buf.push_str(&protocol::encode_line(&r.to_json()));
         }
         self.writer.write_all(buf.as_bytes())?;
-        let mut out = Vec::with_capacity(reqs.len());
-        for _ in reqs {
+        Ok(())
+    }
+
+    /// Phase 2: read `n` in-order response lines.
+    pub fn recv_batch(&mut self, n: usize) -> anyhow::Result<Vec<Response>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
             let mut reply = String::new();
-            let n = self.reader.read_line(&mut reply)?;
-            anyhow::ensure!(n > 0, "server closed mid-pipeline");
+            let got = self.reader.read_line(&mut reply)?;
+            anyhow::ensure!(got > 0, "server closed the connection mid-batch");
             out.push(protocol::decode_response(&reply)?);
         }
         Ok(out)
+    }
+
+    /// Send one request and wait for its response line.
+    pub fn call(&mut self, req: &Request) -> anyhow::Result<Response> {
+        self.send_batch(std::slice::from_ref(req))?;
+        Ok(self.recv_batch(1)?.pop().expect("recv_batch(1) yields one reply"))
+    }
+
+    /// Pipeline many requests, then collect all responses (cuts RTT for
+    /// bulk ingestion).
+    pub fn call_pipelined(&mut self, reqs: &[Request]) -> anyhow::Result<Vec<Response>> {
+        self.send_batch(reqs)?;
+        self.recv_batch(reqs.len())
     }
 
     /// Call and expect an `ack`; server-side errors become `Err`.
@@ -105,6 +132,39 @@ impl Client {
     pub fn restore(&mut self, path: &str) -> anyhow::Result<String> {
         self.call_ack(&Request::Restore { path: path.to_string() })
     }
+
+    // -- cluster handshake & gather helpers -------------------------------
+
+    /// Version/identity handshake: protocol version, node id, state epoch
+    /// and supported algorithms.
+    pub fn hello(&mut self) -> anyhow::Result<HelloInfo> {
+        match self.call(&Request::Hello)? {
+            Response::Hello { info } => Ok(info),
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected hello, got {other:?}"),
+        }
+    }
+
+    /// Fetch one sketch from `source` as a codec blob and decode it —
+    /// checksum-verified, bit-identical to the server's registers.
+    pub fn sketch_fetch(
+        &mut self,
+        name: &str,
+        source: SketchSource,
+    ) -> anyhow::Result<GumbelMaxSketch> {
+        match self.call(&Request::SketchFetch { name: name.to_string(), source })? {
+            Response::SketchBlob { name: got, data } => {
+                let (key, sk) = codec::decode_sketch_hex(&data)?;
+                anyhow::ensure!(
+                    got == name && key == name,
+                    "sketch_fetch for '{name}' answered with '{got}' (blob key '{key}')"
+                );
+                Ok(sk)
+            }
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected sketch_blob, got {other:?}"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -112,6 +172,7 @@ mod tests {
     use super::*;
     use crate::coordinator::server::Server;
     use crate::coordinator::service::{Coordinator, CoordinatorConfig};
+    use crate::sketch::Sketcher;
     use std::sync::Arc;
 
     #[test]
@@ -140,6 +201,38 @@ mod tests {
     #[test]
     fn connect_failure_is_clean_error() {
         assert!(Client::connect("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn hello_and_sketch_fetch_roundtrip() {
+        let coord = Arc::new(
+            Coordinator::new(CoordinatorConfig {
+                k: 32,
+                workers: 2,
+                node_id: "unit-node".into(),
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let server = Server::start(coord, "127.0.0.1:0").unwrap();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        let hello = client.hello().unwrap();
+        assert_eq!(hello.protocol, protocol::PROTOCOL_VERSION);
+        assert_eq!(hello.node, "unit-node");
+        assert_eq!(hello.epoch, 0);
+        assert_eq!(hello.k, 32);
+        assert_eq!(hello.algo, "fastgm");
+        assert!(hello.algos.iter().any(|a| a == "fastgm"));
+        // A stored sketch fetches back bit-identically through the codec.
+        let v = SparseVector::new(vec![1, 2], vec![1.0, 0.5]);
+        client.upsert("doc", v.clone()).unwrap();
+        let fetched = client.sketch_fetch("doc", SketchSource::Store).unwrap();
+        assert_eq!(fetched, crate::sketch::fastgm::FastGm::new(32, 42).sketch(&v));
+        // Missing keys are clean errors on every source.
+        for source in [SketchSource::Store, SketchSource::Registry, SketchSource::Stream] {
+            assert!(client.sketch_fetch("ghost", source).is_err());
+        }
+        server.stop();
     }
 
     #[test]

@@ -1,0 +1,624 @@
+//! The scatter-gather cluster router.
+//!
+//! A [`ClusterClient`] holds one JSON-lines connection per node plus the
+//! rendezvous [`Partitioner`] built from the node ids the `hello`
+//! handshake reported. Reads and writes split by op:
+//!
+//! * **writes** (`upsert`, `delete`, stream `push`) go to the partition
+//!   owner only — a dead owner is a typed [`ClusterError::NodeDown`], not
+//!   a silent reroute (re-homing keys would desync the partitioner and
+//!   make restarts ambiguous);
+//! * **`topk`** scatters to every live node (split-phase: all requests on
+//!   the wire before any reply is read), gathers the per-node LSH
+//!   candidate sets, fetches each candidate's sketch from the node that
+//!   reported it as a codec blob and re-ranks centrally with
+//!   `estimate_jp` — the partition-then-reduce shape (per-partition
+//!   candidates, central exact re-rank, global k). Dead nodes shrink
+//!   coverage, never the answer.
+//! * **cardinality** fetches every live node's stream sketch and
+//!   `merge_tree`s them (§2.3): the merged sketch is bit-identical to
+//!   sketching the concatenated stream, because stream pushes are
+//!   partitioned by element id.
+//!
+//! Liveness is observed, not configured: the first I/O error on a node's
+//! connection marks it down; [`ClusterClient::reconnect`] re-attaches
+//! (e.g. after a restart-from-snapshot, on whatever address the node came
+//! back on — identity is the node id, not the socket).
+
+use super::partitioner::Partitioner;
+use crate::coordinator::client::Client;
+use crate::coordinator::merger::merge_tree;
+use crate::coordinator::protocol::{HelloInfo, Request, Response, SketchSource, PROTOCOL_VERSION};
+use crate::estimate::cardinality::estimate_cardinality;
+use crate::estimate::jaccard::estimate_jp;
+use crate::sketch::engine::{self, EngineParams};
+use crate::sketch::{AlgorithmId, GumbelMaxSketch, Sketcher, SparseVector};
+use std::collections::BTreeMap;
+
+/// How long a gather waits on any single node read before treating the
+/// node as down. Without this, a hung-but-connected node (silent
+/// partition, stop-the-world pause) would wedge every gather forever —
+/// only cleanly closed sockets would degrade. Generous: normal ops answer
+/// in microseconds-to-milliseconds on a healthy node.
+const NODE_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Typed cluster-layer failures. Per-node faults carry the node identity
+/// so callers can alert on the *site*, not just the operation.
+#[derive(Debug, thiserror::Error)]
+pub enum ClusterError {
+    /// The node owning the touched partition is unreachable. Writes to its
+    /// keys fail with this until it returns; gathers simply skip it.
+    #[error("node '{node}' ({addr}) is down: {reason}")]
+    NodeDown { node: String, addr: String, reason: String },
+    /// Every node is down — there is nothing left to scatter to.
+    #[error("no live nodes in the cluster")]
+    NoLiveNodes,
+    /// A live node answered with a protocol-level error.
+    #[error("node '{node}' rejected the request: {message}")]
+    Remote { node: String, message: String },
+    /// The gather itself failed (merge/estimator error across sites).
+    #[error("cluster gather failed: {0}")]
+    Gather(String),
+}
+
+/// What a scatter-gather `topk` cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GatherStats {
+    /// Cluster size (configured membership).
+    pub nodes: usize,
+    /// Nodes that *responded* to the scatter — including ones that
+    /// answered with a protocol-level refusal (alive but contributing
+    /// nothing). Only unreachable nodes are excluded.
+    pub live: usize,
+    /// Distinct candidates returned by the per-node probes.
+    pub candidates: usize,
+    /// Candidates whose sketches were fetched and centrally re-ranked.
+    pub reranked: usize,
+}
+
+struct NodeSlot {
+    addr: String,
+    hello: HelloInfo,
+    /// `None` = observed down (I/O error) until a `reconnect`.
+    conn: Option<Client>,
+}
+
+/// The sketch config every member must serve (frozen at `connect`);
+/// `reconnect` re-checks it so a node rejoining with a changed config is
+/// refused exactly like it would have been at formation time.
+#[derive(Debug, Clone, PartialEq)]
+struct ClusterSketchConfig {
+    k: usize,
+    seed: u64,
+    algo: String,
+}
+
+impl ClusterSketchConfig {
+    fn matches(&self, h: &HelloInfo) -> bool {
+        h.k == self.k && h.seed == self.seed && h.algo == self.algo
+    }
+}
+
+pub struct ClusterClient {
+    slots: Vec<NodeSlot>,
+    partitioner: Partitioner,
+    expect: ClusterSketchConfig,
+    /// Central sketcher at the cluster's (algo, k, seed) — what queries
+    /// and re-rank probes are sketched with. Bit-identical to every node's
+    /// default sketch path.
+    sketcher: Box<dyn Sketcher>,
+}
+
+impl ClusterClient {
+    /// Connect to every node, handshake, and verify the cluster is
+    /// coherent: same protocol version, same `(k, seed)`, same default
+    /// algorithm (an EXP-register one — the re-rank needs `estimate_jp`),
+    /// distinct node ids.
+    ///
+    /// All nodes must be reachable to *form* the client: membership
+    /// identity (the node ids the partitioner hashes on) comes from the
+    /// handshake itself, so a dead node would leave the keyspace
+    /// unroutable. Once formed, any member may die and the client degrades
+    /// per-op — which means degraded reads belong to long-lived clients;
+    /// a fresh client (e.g. a CLI invocation) cannot form against a
+    /// cluster with a member down.
+    pub fn connect(addrs: &[String]) -> anyhow::Result<ClusterClient> {
+        anyhow::ensure!(!addrs.is_empty(), "cluster needs at least one node address");
+        let mut slots = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let mut conn = Client::connect(addr)?;
+            conn.set_io_timeout(Some(NODE_IO_TIMEOUT))?;
+            let hello = conn
+                .hello()
+                .map_err(|e| anyhow::anyhow!("hello to '{addr}' failed: {e}"))?;
+            anyhow::ensure!(
+                hello.protocol == PROTOCOL_VERSION,
+                "node '{}' ({addr}) speaks protocol v{}, this client v{PROTOCOL_VERSION}",
+                hello.node,
+                hello.protocol,
+            );
+            slots.push(NodeSlot { addr: addr.clone(), hello, conn: Some(conn) });
+        }
+        let first = &slots[0].hello;
+        for s in &slots[1..] {
+            let h = &s.hello;
+            anyhow::ensure!(
+                h.k == first.k && h.seed == first.seed && h.algo == first.algo,
+                "cluster config mismatch: node '{}' serves (k={}, seed={}, algo={}) but \
+                 node '{}' serves (k={}, seed={}, algo={})",
+                first.node,
+                first.k,
+                first.seed,
+                first.algo,
+                h.node,
+                h.k,
+                h.seed,
+                h.algo,
+            );
+        }
+        let algo = AlgorithmId::from_name(&first.algo)?;
+        anyhow::ensure!(
+            algo.family().has_exponential_registers(),
+            "cluster default algo '{}' has no J_P estimator — scatter-gather topk \
+             cannot re-rank (use an ordered/direct-family default)",
+            first.algo,
+        );
+        let sketcher = engine::build(algo, EngineParams::new(first.k, first.seed));
+        let expect = ClusterSketchConfig {
+            k: first.k,
+            seed: first.seed,
+            algo: first.algo.clone(),
+        };
+        let node_ids: Vec<String> = slots.iter().map(|s| s.hello.node.clone()).collect();
+        let partitioner = Partitioner::new(&node_ids)?;
+        Ok(ClusterClient { slots, partitioner, expect, sketcher })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn live_nodes(&self) -> usize {
+        self.slots.iter().filter(|s| s.conn.is_some()).count()
+    }
+
+    pub fn node_id(&self, i: usize) -> &str {
+        &self.slots[i].hello.node
+    }
+
+    pub fn addr(&self, i: usize) -> &str {
+        &self.slots[i].addr
+    }
+
+    /// The node index owning `key` (stable; dead nodes keep ownership).
+    pub fn owner(&self, key: &str) -> usize {
+        self.partitioner.owner(key)
+    }
+
+    /// Last handshake each node answered (epoch shows snapshot restores).
+    pub fn hello(&self, i: usize) -> &HelloInfo {
+        &self.slots[i].hello
+    }
+
+    /// Re-attach node `i` on `addr` (it may have come back on a different
+    /// port). The node must present the same id — a different identity on
+    /// the same slot would silently re-partition the keyspace — AND the
+    /// same protocol/sketch config the cluster was formed with: a node
+    /// rejoining after a config change must be refused here exactly like
+    /// [`ClusterClient::connect`] would have refused it, not discovered
+    /// query-by-query as gather errors.
+    pub fn reconnect(&mut self, i: usize, addr: &str) -> anyhow::Result<()> {
+        let mut conn = Client::connect(addr)?;
+        conn.set_io_timeout(Some(NODE_IO_TIMEOUT))?;
+        let hello = conn.hello()?;
+        anyhow::ensure!(
+            hello.node == self.slots[i].hello.node,
+            "slot {i} expects node '{}' but '{addr}' answered as '{}'",
+            self.slots[i].hello.node,
+            hello.node,
+        );
+        anyhow::ensure!(
+            hello.protocol == PROTOCOL_VERSION,
+            "node '{}' rejoined speaking protocol v{}, this client v{PROTOCOL_VERSION}",
+            hello.node,
+            hello.protocol,
+        );
+        anyhow::ensure!(
+            self.expect.matches(&hello),
+            "node '{}' rejoined with (k={}, seed={}, algo={}) but the cluster was formed \
+             with (k={}, seed={}, algo={})",
+            hello.node,
+            hello.k,
+            hello.seed,
+            hello.algo,
+            self.expect.k,
+            self.expect.seed,
+            self.expect.algo,
+        );
+        self.slots[i] = NodeSlot { addr: addr.to_string(), hello, conn: Some(conn) };
+        Ok(())
+    }
+
+    /// The typed down-error for slot `i` (does not change liveness).
+    fn down_err(&self, i: usize, reason: &str) -> ClusterError {
+        ClusterError::NodeDown {
+            node: self.slots[i].hello.node.clone(),
+            addr: self.slots[i].addr.clone(),
+            reason: reason.to_string(),
+        }
+    }
+
+    /// Mark slot `i` down after an observed I/O failure.
+    fn mark_down(&mut self, i: usize, reason: &str) -> ClusterError {
+        self.slots[i].conn = None;
+        self.down_err(i, reason)
+    }
+
+    /// Phase 1: write `reqs` to node `i` without reading replies. I/O
+    /// failure marks the node down. All slot traffic funnels through
+    /// this + [`Self::slot_recv`], so down-marking lives in one place.
+    fn slot_send(&mut self, i: usize, reqs: &[Request]) -> Result<(), ClusterError> {
+        if self.slots[i].conn.is_none() {
+            return Err(self.down_err(i, "previously observed down"));
+        }
+        let sent = self.slots[i].conn.as_mut().expect("checked live above").send_batch(reqs);
+        sent.map_err(|e| self.mark_down(i, &e.to_string()))
+    }
+
+    /// Phase 2: read `n` in-order replies from node `i`. I/O failure (or
+    /// a connection closed mid-batch) marks the node down.
+    fn slot_recv(&mut self, i: usize, n: usize) -> Result<Vec<Response>, ClusterError> {
+        if self.slots[i].conn.is_none() {
+            return Err(self.down_err(i, "previously observed down"));
+        }
+        let resps = self.slots[i].conn.as_mut().expect("checked live above").recv_batch(n);
+        resps.map_err(|e| self.mark_down(i, &e.to_string()))
+    }
+
+    /// One synchronous call on node `i` (send + recv).
+    fn slot_call(&mut self, i: usize, req: &Request) -> Result<Response, ClusterError> {
+        self.slot_send(i, std::slice::from_ref(req))?;
+        Ok(self.slot_recv(i, 1)?.pop().expect("slot_recv(1) yields one reply"))
+    }
+
+    fn remote_err(&self, i: usize, message: String) -> ClusterError {
+        ClusterError::Remote { node: self.slots[i].hello.node.clone(), message }
+    }
+
+    /// Unwrap the `ack` every write-path op expects from node `i`;
+    /// protocol-level refusals become [`ClusterError::Remote`].
+    fn expect_ack(&self, i: usize, resp: Response) -> Result<String, ClusterError> {
+        match resp {
+            Response::Ack { info } => Ok(info),
+            Response::Error { message } => Err(self.remote_err(i, message)),
+            other => Err(self.remote_err(i, format!("expected ack, got {other:?}"))),
+        }
+    }
+
+    /// Upsert `key` on its owning node. Dead owner ⇒ typed error (the
+    /// write's partition is down; re-homing would desync the partitioner).
+    pub fn upsert(&mut self, key: &str, vector: SparseVector) -> Result<String, ClusterError> {
+        let i = self.partitioner.owner(key);
+        let resp = self.slot_call(i, &Request::Upsert { key: key.to_string(), vector })?;
+        self.expect_ack(i, resp)
+    }
+
+    /// Delete `key` on its owning node (idempotent there).
+    pub fn delete(&mut self, key: &str) -> Result<String, ClusterError> {
+        let i = self.partitioner.owner(key);
+        let resp = self.slot_call(i, &Request::Delete { key: key.to_string() })?;
+        self.expect_ack(i, resp)
+    }
+
+    /// Scatter-gather top-k: per-node candidates, central exact re-rank.
+    ///
+    /// 1. scatter `topk(vector, limit)` to every live node — the request
+    ///    goes onto EVERY wire before any reply is read, so the per-node
+    ///    probe work overlaps and the scatter costs ~max(RTT), not the
+    ///    sum; each node answers from its own partition (LSH band probe
+    ///    or scan, its router's call), and the global top-k is always
+    ///    contained in the union of the per-partition top-k's;
+    /// 2. fetch the distinct candidates' sketches as checksummed codec
+    ///    blobs (`sketch_fetch`), one pipelined batch per *reporting*
+    ///    node — the one place each candidate is guaranteed to exist,
+    ///    even if ownership has drifted (membership change, mis-homed
+    ///    restore);
+    /// 3. re-rank everything centrally with `estimate_jp` against a query
+    ///    sketch computed here at the shared `(algo, k, seed)` — the same
+    ///    deterministic scores every node computes, so the gather ranks
+    ///    exactly like a single node holding the union store would. The
+    ///    nodes' own scores are deliberately NOT trusted: the central
+    ///    estimator is the authority (a stale, buggy or differently-built
+    ///    node can report candidates but never distort the ranking), at
+    ///    the cost of transferring one codec blob per candidate;
+    /// 4. sort (score desc, key asc — the store's tie rule) and truncate.
+    ///
+    /// Nodes that die mid-gather only shrink coverage. Zero responding
+    /// nodes is [`ClusterError::NoLiveNodes`].
+    pub fn topk(
+        &mut self,
+        vector: &SparseVector,
+        limit: usize,
+    ) -> Result<(Vec<(String, f64)>, GatherStats), ClusterError> {
+        let query = self.sketcher.sketch(vector);
+        // Scatter phase 1: the same request onto every live wire.
+        let req = Request::TopK { vector: vector.clone(), limit };
+        let mut awaiting: Vec<usize> = Vec::new();
+        for i in 0..self.slots.len() {
+            match self.slot_send(i, std::slice::from_ref(&req)) {
+                Ok(()) => awaiting.push(i),
+                Err(ClusterError::NodeDown { node, reason, .. }) => {
+                    log::warn!("topk scatter: node '{node}' down ({reason}), degrading");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Scatter phase 2: collect replies. Candidates remember which
+        // node reported them (BTreeMap keeps the gather deterministic) —
+        // dedup across nodes keeps a mid-rebalance store overlap correct.
+        let mut candidates: BTreeMap<String, usize> = BTreeMap::new();
+        let mut live = 0usize;
+        for i in awaiting {
+            match self.slot_recv(i, 1) {
+                Ok(mut resps) => {
+                    // The node answered: it is live even if it refused
+                    // (e.g. mid-restore config mismatch) — only
+                    // unreachable nodes are excluded from `live`, so an
+                    // all-refusing-but-healthy cluster is a degraded
+                    // answer, never a spurious NoLiveNodes.
+                    live += 1;
+                    match resps.pop().expect("slot_recv(1) yields one reply") {
+                        Response::TopK { hits } => {
+                            for (name, _) in hits {
+                                candidates.entry(name).or_insert(i);
+                            }
+                        }
+                        Response::Error { message } => log::warn!(
+                            "topk scatter: node '{}' rejected: {message}",
+                            self.slots[i].hello.node
+                        ),
+                        other => log::warn!(
+                            "topk scatter: node '{}' answered {other:?}",
+                            self.slots[i].hello.node
+                        ),
+                    }
+                }
+                Err(ClusterError::NodeDown { node, reason, .. }) => {
+                    log::warn!("topk scatter: node '{node}' down ({reason}), degrading");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if live == 0 {
+            return Err(ClusterError::NoLiveNodes);
+        }
+        // Gather: fetch + central re-rank, split-phase again. Candidates
+        // are grouped by the node that REPORTED them and fetched as one
+        // pipelined batch per node (all batches written before any reply
+        // is read), so the gather costs ~one overlapped round-trip. A
+        // candidate whose node died between scatter and fetch (or which
+        // was deleted meanwhile) is skipped, not an error.
+        let n_candidates = candidates.len();
+        let mut by_reporter: Vec<Vec<String>> = vec![Vec::new(); self.slots.len()];
+        for (name, reporter) in candidates {
+            by_reporter[reporter].push(name);
+        }
+        let mut fetching: Vec<(usize, Vec<String>)> = Vec::new();
+        for (i, names) in by_reporter.into_iter().enumerate() {
+            if names.is_empty() {
+                continue;
+            }
+            let reqs: Vec<Request> = names
+                .iter()
+                .map(|name| Request::SketchFetch {
+                    name: name.clone(),
+                    source: SketchSource::Store,
+                })
+                .collect();
+            match self.slot_send(i, &reqs) {
+                Ok(()) => fetching.push((i, names)),
+                Err(ClusterError::NodeDown { node, .. }) => {
+                    log::warn!(
+                        "gather: node '{node}' holding {} candidates died mid-gather",
+                        names.len()
+                    );
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let mut scored: Vec<(String, f64)> = Vec::with_capacity(n_candidates);
+        for (i, names) in fetching {
+            let resps = match self.slot_recv(i, names.len()) {
+                Ok(resps) => resps,
+                Err(ClusterError::NodeDown { node, .. }) => {
+                    log::warn!(
+                        "gather: node '{node}' holding {} candidates died mid-gather",
+                        names.len()
+                    );
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            for (name, resp) in names.into_iter().zip(resps) {
+                let sk = match resp {
+                    Response::SketchBlob { name: got, data } => {
+                        match crate::sketch::codec::decode_sketch_hex(&data) {
+                            // The central re-rank is the trust boundary:
+                            // a blob answering for the wrong key must be
+                            // a loud error, never scored under `name`.
+                            Ok((key, sk)) if got == name && key == name => sk,
+                            Ok((key, _)) => {
+                                return Err(ClusterError::Gather(format!(
+                                    "candidate '{name}': node '{}' answered with '{got}' \
+                                     (blob key '{key}')",
+                                    self.slots[i].hello.node
+                                )))
+                            }
+                            Err(e) => {
+                                return Err(ClusterError::Gather(format!(
+                                    "candidate '{name}': corrupt sketch blob: {e}"
+                                )))
+                            }
+                        }
+                    }
+                    Response::Error { message } => {
+                        log::debug!("gather: candidate '{name}' gone: {message}");
+                        continue;
+                    }
+                    other => {
+                        return Err(ClusterError::Gather(format!(
+                            "candidate '{name}': expected sketch_blob, got {other:?}"
+                        )))
+                    }
+                };
+                let score = estimate_jp(&query, &sk)
+                    .map_err(|e| ClusterError::Gather(format!("candidate '{name}': {e}")))?;
+                scored.push((name, score));
+            }
+        }
+        let reranked = scored.len();
+        scored.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).expect("estimates are never NaN").then(a.0.cmp(&b.0))
+        });
+        scored.truncate(limit);
+        Ok((
+            scored,
+            GatherStats {
+                nodes: self.slots.len(),
+                live,
+                candidates: n_candidates,
+                reranked,
+            },
+        ))
+    }
+
+    /// Push stream items, partitioned by element id so every element lives
+    /// on exactly one site (the §2.3 disjoint-support case). Returns the
+    /// number of items routed. Any dead owner fails the whole push —
+    /// silently dropping a partition would bias the cardinality estimate.
+    /// Owners already known down are refused before anything is sent; a
+    /// push that fails mid-way is safe to RETRY VERBATIM once the owner
+    /// returns: Stream-FastGM element races are deterministic per
+    /// `(seed, id)`, so re-pushing the same `(id, weight)` items is
+    /// idempotent, never double-counted.
+    pub fn push(&mut self, stream: &str, items: &[(u64, f64)]) -> Result<usize, ClusterError> {
+        let mut parts: Vec<Vec<(u64, f64)>> = vec![Vec::new(); self.slots.len()];
+        for &(id, w) in items {
+            parts[self.partitioner.owner_of_id(id)].push((id, w));
+        }
+        for (i, part) in parts.iter().enumerate() {
+            if !part.is_empty() && self.slots[i].conn.is_none() {
+                return Err(self.down_err(i, "previously observed down"));
+            }
+        }
+        for (i, part) in parts.into_iter().enumerate() {
+            if part.is_empty() {
+                continue;
+            }
+            let resp =
+                self.slot_call(i, &Request::Push { stream: stream.to_string(), items: part })?;
+            self.expect_ack(i, resp)?;
+        }
+        Ok(items.len())
+    }
+
+    /// The cluster-wide sketch of `stream`: every live site's stream sketch
+    /// fetched as a codec blob and merged (§2.3). Sites that never saw the
+    /// stream contribute nothing (they are still live); dead sites degrade
+    /// coverage (logged). Zero *responding* sites is
+    /// [`ClusterError::NoLiveNodes`]; responding sites but zero holders of
+    /// the stream is a [`ClusterError::Gather`] naming the stream — a
+    /// typo'd stream on a healthy cluster must not read as an outage.
+    pub fn merged_stream_sketch(&mut self, stream: &str) -> Result<GumbelMaxSketch, ClusterError> {
+        // Split-phase like `topk`: the fetch goes onto every live wire
+        // before any (potentially large) sketch blob is read back, so the
+        // per-site encoding work overlaps.
+        let req = Request::SketchFetch { name: stream.to_string(), source: SketchSource::Stream };
+        let mut awaiting: Vec<usize> = Vec::new();
+        for i in 0..self.slots.len() {
+            match self.slot_send(i, std::slice::from_ref(&req)) {
+                Ok(()) => awaiting.push(i),
+                Err(ClusterError::NodeDown { node, .. }) => {
+                    log::warn!("cardinality gather: node '{node}' down, degrading");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let mut sketches = Vec::with_capacity(awaiting.len());
+        let mut responded = 0usize;
+        for i in awaiting {
+            match self.slot_recv(i, 1) {
+                Ok(mut resps) => match resps.pop().expect("slot_recv(1) yields one reply") {
+                    Response::SketchBlob { data, .. } => {
+                        responded += 1;
+                        let (_, sk) = crate::sketch::codec::decode_sketch_hex(&data)
+                            .map_err(|e| ClusterError::Gather(format!("site sketch: {e}")))?;
+                        sketches.push(sk);
+                    }
+                    Response::Error { message } => {
+                        // This site holds no partition of the stream.
+                        responded += 1;
+                        log::debug!(
+                            "cardinality gather: node '{}' has no '{stream}': {message}",
+                            self.slots[i].hello.node
+                        );
+                    }
+                    other => {
+                        return Err(ClusterError::Gather(format!(
+                            "expected sketch_blob, got {other:?}"
+                        )))
+                    }
+                },
+                Err(ClusterError::NodeDown { node, .. }) => {
+                    log::warn!("cardinality gather: node '{node}' down, degrading");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if sketches.is_empty() {
+            return Err(if responded == 0 {
+                ClusterError::NoLiveNodes
+            } else {
+                ClusterError::Gather(format!(
+                    "stream '{stream}' not found on any of the {responded} responding nodes"
+                ))
+            });
+        }
+        merge_tree(&sketches, 4).map_err(|e| ClusterError::Gather(e.to_string()))
+    }
+
+    /// Cluster-wide weighted cardinality of `stream` via the merged sketch.
+    pub fn cardinality(&mut self, stream: &str) -> Result<f64, ClusterError> {
+        Ok(estimate_cardinality(&self.merged_stream_sketch(stream)?))
+    }
+
+    /// Per-node `(node id, store size)` from `store_stats`, skipping dead
+    /// nodes — the CLI's occupancy report.
+    pub fn store_sizes(&mut self) -> Vec<(String, Option<f64>)> {
+        (0..self.slots.len())
+            .map(|i| {
+                let id = self.slots[i].hello.node.clone();
+                let size = match self.slot_call(i, &Request::StoreStats) {
+                    Ok(Response::Stats { stats }) => {
+                        stats.get("size").and_then(|v| v.as_f64())
+                    }
+                    _ => None,
+                };
+                (id, size)
+            })
+            .collect()
+    }
+
+    /// Snapshot node `i`'s store to a node-local `path`.
+    pub fn snapshot_node(&mut self, i: usize, path: &str) -> Result<String, ClusterError> {
+        let resp = self.slot_call(i, &Request::Snapshot { path: path.to_string() })?;
+        self.expect_ack(i, resp)
+    }
+
+    /// Restore node `i`'s store from a node-local `path` (bumps its epoch;
+    /// refresh with [`ClusterClient::reconnect`] to observe it).
+    pub fn restore_node(&mut self, i: usize, path: &str) -> Result<String, ClusterError> {
+        let resp = self.slot_call(i, &Request::Restore { path: path.to_string() })?;
+        self.expect_ack(i, resp)
+    }
+}

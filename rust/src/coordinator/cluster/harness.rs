@@ -1,0 +1,169 @@
+//! In-process cluster harness: N real nodes (coordinator + TCP server)
+//! on loopback, each with its own worker pool, store and snapshot files —
+//! real sockets, real protocol, one process. Drives `fastgm cluster
+//! serve`, `examples/cluster_serve.rs` and the acceptance tests.
+
+use crate::coordinator::server::Server;
+use crate::coordinator::service::{Coordinator, CoordinatorConfig};
+use std::sync::Arc;
+
+struct LocalNode {
+    cfg: CoordinatorConfig,
+    addr: String,
+    /// `None` after [`LocalCluster::kill`].
+    running: Option<(Server, Arc<Coordinator>)>,
+}
+
+pub struct LocalCluster {
+    nodes: Vec<LocalNode>,
+}
+
+impl LocalCluster {
+    /// Start `n` nodes on ephemeral loopback ports. Each node gets
+    /// `base`'s config with a unique, stable id `"<base id>-<i>"` — the
+    /// identity the partitioner keys on.
+    pub fn start(n: usize, base: &CoordinatorConfig) -> anyhow::Result<LocalCluster> {
+        let addrs = vec!["127.0.0.1:0".to_string(); n];
+        LocalCluster::start_on(&addrs, base)
+    }
+
+    /// Start one node per bind address (the CLI's fixed-port path).
+    pub fn start_on(addrs: &[String], base: &CoordinatorConfig) -> anyhow::Result<LocalCluster> {
+        anyhow::ensure!(!addrs.is_empty(), "cluster needs at least one node");
+        let mut nodes = Vec::with_capacity(addrs.len());
+        for (i, bind) in addrs.iter().enumerate() {
+            let cfg = CoordinatorConfig {
+                node_id: format!("{}-{i}", base.node_id),
+                ..base.clone()
+            };
+            let (server, coordinator) = spawn(&cfg, bind)?;
+            nodes.push(LocalNode {
+                cfg,
+                addr: server.addr.to_string(),
+                running: Some((server, coordinator)),
+            });
+        }
+        Ok(LocalCluster { nodes })
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Current serve addresses, cluster order (a restarted node may have
+    /// moved to a fresh ephemeral port).
+    pub fn addrs(&self) -> Vec<String> {
+        self.nodes.iter().map(|n| n.addr.clone()).collect()
+    }
+
+    pub fn addr(&self, i: usize) -> &str {
+        &self.nodes[i].addr
+    }
+
+    pub fn node_id(&self, i: usize) -> &str {
+        &self.nodes[i].cfg.node_id
+    }
+
+    pub fn is_up(&self, i: usize) -> bool {
+        self.nodes[i].running.is_some()
+    }
+
+    /// Stop node `i` completely: the server joins every connection thread,
+    /// then the coordinator (pool + node core) is torn down. Its partition
+    /// goes dark; the rest of the cluster keeps serving.
+    pub fn kill(&mut self, i: usize) {
+        if let Some((server, coordinator)) = self.nodes[i].running.take() {
+            server.stop();
+            match Arc::try_unwrap(coordinator) {
+                Ok(c) => c.shutdown(),
+                Err(_) => log::warn!(
+                    "node '{}' still referenced after stop",
+                    self.nodes[i].cfg.node_id
+                ),
+            }
+        }
+    }
+
+    /// Bring node `i` back **cold** (same id and config, empty store) on a
+    /// fresh ephemeral port — rebinding the old port would race the
+    /// kernel's TIME_WAIT connections. State comes back via snapshot
+    /// `restore`; identity (the node id) is what the cluster keys on.
+    pub fn restart(&mut self, i: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.nodes[i].running.is_none(), "node {i} is already running");
+        let (server, coordinator) = spawn(&self.nodes[i].cfg, "127.0.0.1:0")?;
+        self.nodes[i].addr = server.addr.to_string();
+        self.nodes[i].running = Some((server, coordinator));
+        Ok(())
+    }
+
+    /// Tear the whole cluster down (joins everything).
+    pub fn stop(mut self) {
+        for i in 0..self.nodes.len() {
+            self.kill(i);
+        }
+    }
+}
+
+fn spawn(cfg: &CoordinatorConfig, bind: &str) -> anyhow::Result<(Server, Arc<Coordinator>)> {
+    let coordinator = Arc::new(Coordinator::new(cfg.clone())?);
+    let server = Server::start(coordinator.clone(), bind)?;
+    Ok((server, coordinator))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::client::Client;
+    use crate::coordinator::protocol::Request;
+
+    fn base() -> CoordinatorConfig {
+        CoordinatorConfig { k: 32, workers: 1, node_id: "t".into(), ..Default::default() }
+    }
+
+    #[test]
+    fn nodes_get_distinct_ids_and_addresses() {
+        let cluster = LocalCluster::start(3, &base()).unwrap();
+        assert_eq!(cluster.len(), 3);
+        let addrs = cluster.addrs();
+        let mut uniq = addrs.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 3, "addresses must be distinct: {addrs:?}");
+        for i in 0..3 {
+            assert_eq!(cluster.node_id(i), format!("t-{i}"));
+            let mut c = Client::connect(cluster.addr(i)).unwrap();
+            let hello = c.hello().unwrap();
+            assert_eq!(hello.node, format!("t-{i}"));
+        }
+        cluster.stop();
+    }
+
+    #[test]
+    fn kill_and_restart_cycle() {
+        let mut cluster = LocalCluster::start(2, &base()).unwrap();
+        let old_addr = cluster.addr(1).to_string();
+        cluster.kill(1);
+        assert!(!cluster.is_up(1));
+        assert!(cluster.is_up(0), "killing one node must not touch the others");
+        assert!(Client::connect(&old_addr).is_err(), "dead node still accepting");
+        // Double-kill is a no-op.
+        cluster.kill(1);
+        cluster.restart(1).unwrap();
+        assert!(cluster.is_up(1));
+        // Same identity, cold state, possibly new port.
+        let mut c = Client::connect(cluster.addr(1)).unwrap();
+        let hello = c.hello().unwrap();
+        assert_eq!(hello.node, "t-1");
+        assert_eq!(hello.epoch, 0, "restart is cold until a restore");
+        assert!(matches!(
+            c.call(&Request::Ping).unwrap(),
+            crate::coordinator::protocol::Response::Pong
+        ));
+        assert!(cluster.restart(1).is_err(), "restarting a live node must fail");
+        cluster.stop();
+    }
+}

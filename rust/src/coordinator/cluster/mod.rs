@@ -1,0 +1,37 @@
+//! Cluster-sharded serving: the fan-out layer on top of the node core.
+//!
+//! The paper's §2.3 mergeability is what makes Gumbel-Max sketches
+//! distributable: per-site sketches merge register-wise into exactly the
+//! sketch of the union, bit for bit. This module turns that property into
+//! a serving topology — the many-sites/central-estimator deployment of
+//! Qi et al. (WWW'20) and the partition-then-reduce retrieval of Mussmann
+//! et al. (2017):
+//!
+//! * [`Partitioner`] — rendezvous (highest-random-weight) hashing from
+//!   store keys / stream element ids to node indices. Stable under node-set
+//!   changes: removing one node only remaps the keys it owned.
+//! * [`ClusterClient`] — the scatter-gather router. Routes `upsert`/
+//!   `delete` to the owning node, fans `topk` out to every live node
+//!   (per-node LSH candidates → central `estimate_jp` re-rank over
+//!   codec-fetched sketches → global k), partitions stream pushes by
+//!   element id, and computes cluster-wide weighted cardinality by
+//!   `merge_tree`-ing per-site stream sketches fetched through
+//!   [`crate::sketch::codec`].
+//! * [`LocalCluster`] — an in-process harness spawning N real TCP nodes on
+//!   loopback (the `fastgm cluster serve` CLI, `examples/cluster_serve.rs`
+//!   and the acceptance tests all drive it).
+//!
+//! Failure domains: every node is its own. A dead node degrades `topk`
+//! coverage (its partition's candidates vanish, the gather still answers)
+//! and fails *writes to its partition* with a typed
+//! [`ClusterError::NodeDown`] — it never wedges or panics the gather, and
+//! a gather over zero live nodes is [`ClusterError::NoLiveNodes`], backed
+//! by [`crate::sketch::MergeError::EmptyMerge`] at the merge layer.
+
+mod client;
+mod harness;
+mod partitioner;
+
+pub use client::{ClusterClient, ClusterError, GatherStats};
+pub use harness::LocalCluster;
+pub use partitioner::Partitioner;

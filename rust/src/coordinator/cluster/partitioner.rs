@@ -1,0 +1,134 @@
+//! Rendezvous (highest-random-weight) partitioning of keys onto nodes.
+//!
+//! Every key is owned by the node whose `(node, key)` hash is largest.
+//! Unlike modulo partitioning, membership changes are minimal: removing a
+//! node only remaps the keys that node owned, and adding one steals an
+//! ~`1/(n+1)` fraction from everyone — no ring maintenance, no
+//! virtual-node bookkeeping, deterministic from the node-id list alone
+//! (every client that knows the same ids computes the same owners).
+
+use crate::util::hash::{mix2, token_id};
+
+#[derive(Debug, Clone)]
+pub struct Partitioner {
+    /// `token_id` of each node id, in cluster order.
+    node_tokens: Vec<u64>,
+}
+
+impl Partitioner {
+    /// Build from the cluster's node ids (order defines the index space).
+    /// Duplicate ids would make ownership ambiguous and are rejected.
+    pub fn new(node_ids: &[String]) -> anyhow::Result<Partitioner> {
+        anyhow::ensure!(!node_ids.is_empty(), "partitioner needs at least one node");
+        let node_tokens: Vec<u64> = node_ids.iter().map(|id| token_id(id)).collect();
+        for (i, id) in node_ids.iter().enumerate() {
+            anyhow::ensure!(
+                !node_ids[..i].contains(id),
+                "duplicate node id '{id}' in the cluster"
+            );
+        }
+        Ok(Partitioner { node_tokens })
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.node_tokens.len()
+    }
+
+    /// Owning node index for a store key.
+    pub fn owner(&self, key: &str) -> usize {
+        self.owner_of_id(token_id(key))
+    }
+
+    /// Owning node index for a stream element id. Routing streams by
+    /// element id keeps every occurrence of an element on one site, which
+    /// is exactly the disjoint-support case of §2.3: the per-site stream
+    /// sketches merge bit-identically to the sketch of the whole stream.
+    pub fn owner_of_id(&self, id: u64) -> usize {
+        let mut best = 0usize;
+        let mut best_w = u64::MIN;
+        for (i, &tok) in self.node_tokens.iter().enumerate() {
+            let w = mix2(tok, id);
+            // Strict '>' keeps the lowest index on (astronomically rare)
+            // ties, so every client breaks them identically.
+            if i == 0 || w > best_w {
+                best = i;
+                best_w = w;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("node-{i}")).collect()
+    }
+
+    #[test]
+    fn ownership_is_deterministic_and_total() {
+        let p = Partitioner::new(&ids(3)).unwrap();
+        let q = Partitioner::new(&ids(3)).unwrap();
+        for i in 0..500 {
+            let key = format!("doc{i}");
+            let o = p.owner(&key);
+            assert!(o < 3);
+            assert_eq!(o, q.owner(&key), "owners must agree across clients");
+            assert_eq!(o, p.owner(&key), "owner must be stable");
+        }
+    }
+
+    #[test]
+    fn keys_spread_over_every_node() {
+        let p = Partitioner::new(&ids(4)).unwrap();
+        let mut counts = [0usize; 4];
+        for i in 0..2000 {
+            counts[p.owner(&format!("doc{i:04}"))] += 1;
+        }
+        // Rendezvous over 4 nodes: expect ~500 each; very loose bounds so
+        // the test only catches broken hashing, not statistical noise.
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 250 && c < 750, "node {i} owns {c}/2000 keys: {counts:?}");
+        }
+    }
+
+    /// HRW's minimal-disruption property: dropping one node remaps only the
+    /// keys that node owned; everything else keeps its owner (by node id).
+    #[test]
+    fn removing_a_node_only_remaps_its_keys() {
+        let all = ids(4);
+        let p4 = Partitioner::new(&all).unwrap();
+        let survivors: Vec<String> =
+            all.iter().filter(|id| *id != "node-2").cloned().collect();
+        let p3 = Partitioner::new(&survivors).unwrap();
+        for i in 0..1000 {
+            let key = format!("doc{i:04}");
+            let before = &all[p4.owner(&key)];
+            let after = &survivors[p3.owner(&key)];
+            if before != "node-2" {
+                assert_eq!(before, after, "'{key}' moved needlessly");
+            } else {
+                assert_ne!(after, "node-2");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_ids_partition_like_keys() {
+        let p = Partitioner::new(&ids(3)).unwrap();
+        for id in 0..1000u64 {
+            let o = p.owner_of_id(id);
+            assert!(o < 3);
+            assert_eq!(o, p.owner_of_id(id));
+        }
+    }
+
+    #[test]
+    fn rejects_empty_and_duplicate_node_sets() {
+        assert!(Partitioner::new(&[]).is_err());
+        assert!(Partitioner::new(&["a".into(), "b".into(), "a".into()]).is_err());
+        assert_eq!(Partitioner::new(&ids(1)).unwrap().owner("anything"), 0);
+    }
+}

@@ -2,13 +2,18 @@
 //! over per-site sketches. Merging is associative/commutative, so the tree
 //! shape only affects parallelism; the parallel variant splits across
 //! threads for large fan-in (the central-site role in the paper's
-//! weighted-cardinality setting).
+//! weighted-cardinality setting — and the gather half of
+//! [`super::cluster`]'s scatter-gather).
+//!
+//! Empty input is a [`MergeError::EmptyMerge`], not a panic: a cluster
+//! gather over zero live sites is an expected failure mode and must degrade
+//! into an error response, never crash the caller.
 
 use crate::sketch::{GumbelMaxSketch, MergeError};
 
-/// Sequential fold (small fan-in).
+/// Sequential fold (small fan-in). Empty input is
+/// [`MergeError::EmptyMerge`], straight from [`GumbelMaxSketch::merge_all`].
 pub fn merge_sequential(sketches: &[GumbelMaxSketch]) -> Result<GumbelMaxSketch, MergeError> {
-    assert!(!sketches.is_empty());
     GumbelMaxSketch::merge_all(sketches.iter())
 }
 
@@ -17,7 +22,9 @@ pub fn merge_tree(
     sketches: &[GumbelMaxSketch],
     threads: usize,
 ) -> Result<GumbelMaxSketch, MergeError> {
-    assert!(!sketches.is_empty());
+    if sketches.is_empty() {
+        return Err(MergeError::EmptyMerge);
+    }
     if sketches.len() < 4 || threads <= 1 {
         return merge_sequential(sketches);
     }
@@ -71,5 +78,15 @@ mod tests {
     fn single_site_is_identity() {
         let a = site_sketch(16, 1, 0..10);
         assert_eq!(merge_tree(std::slice::from_ref(&a), 8).unwrap(), a);
+    }
+
+    /// A gather over zero live sites is an error, not a crash (both
+    /// entry points, every thread count).
+    #[test]
+    fn empty_merge_is_a_typed_error() {
+        assert_eq!(merge_sequential(&[]).unwrap_err(), MergeError::EmptyMerge);
+        for threads in [1, 2, 8] {
+            assert_eq!(merge_tree(&[], threads).unwrap_err(), MergeError::EmptyMerge);
+        }
     }
 }

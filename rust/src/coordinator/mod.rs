@@ -1,15 +1,36 @@
-//! The serving coordinator — Layer 3 of the stack.
+//! The serving coordinator — Layer 3 of the stack, itself split into three
+//! explicit serving layers:
 //!
-//! A request-path framework in the shape of a sketching analytics service:
+//! ```text
+//!   ┌──────────────────────────────────────────────────────────────┐
+//!   │ cluster   Partitioner · ClusterClient · LocalCluster harness │
+//!   │           (rendezvous key routing, scatter-gather topk,      │
+//!   │            §2.3 merged cardinality across sites)             │
+//!   ├──────────────────────────────────────────────────────────────┤
+//!   │ transport server / client (TCP JSON-lines) · worker pool ·   │
+//!   │           backpressure · batcher  — the Coordinator shell    │
+//!   ├──────────────────────────────────────────────────────────────┤
+//!   │ node      Node::execute(Request) -> Response                 │
+//!   │           registry · store · LSH · router · merger · metrics │
+//!   └──────────────────────────────────────────────────────────────┘
+//! ```
 //!
-//! * [`protocol`] — JSON-lines wire requests/responses.
-//! * [`service`] — the [`service::Coordinator`]: routes sparse vectors to
-//!   CPU FastGM workers, dense batches to the AOT accelerator, streams to
-//!   Stream-FastGM states; owns the sketch registry and LSH index.
+//! * [`node`] — the transport-agnostic execution core: every op (sketch,
+//!   estimate, store, snapshot, hello, fetch) behind one typed
+//!   [`node::Node::execute`] API. Embed this for in-process serving.
+//! * [`service`] — the [`service::Coordinator`]: a worker pool (per-worker
+//!   bounded queues + reusable [`crate::sketch::SketchScratch`]) around a
+//!   [`node::Node`].
+//! * [`cluster`] — the fan-out layer: a rendezvous [`cluster::Partitioner`]
+//!   mapping store keys to nodes, a [`cluster::ClusterClient`] that routes
+//!   upserts, scatter-gathers `topk` and merges per-site sketches for
+//!   cluster-wide cardinality (§2.3), and a [`cluster::LocalCluster`]
+//!   process harness.
+//! * [`protocol`] — JSON-lines wire requests/responses (incl. the `hello`
+//!   handshake and the codec-blob `sketch_fetch` the gather path uses).
 //! * [`router`] — the sparse/dense/stream routing decision, including the
 //!   engine-registry `algo` plan ([`router::SketchPlan`]).
-//! * [`worker`] — the CPU worker pool: one bounded queue and one reusable
-//!   [`crate::sketch::SketchScratch`] per worker (round-robin dispatch).
+//! * [`worker`] — the CPU worker pool (round-robin dispatch).
 //! * [`batcher`] — size/deadline dynamic batching for the accelerator.
 //! * [`backpressure`] — per-worker bounded admission with shed-or-block
 //!   policy and queue-depth gauges.
@@ -18,7 +39,8 @@
 //!   map with an incrementally maintained LSH index, top-k queries
 //!   (band-probe or brute-scan, router's choice) and versioned binary
 //!   snapshot/restore via [`crate::sketch::codec`].
-//! * [`merger`] — distributed-site sketch merge (§2.3 mergeability).
+//! * [`merger`] — distributed-site sketch merge (§2.3 mergeability; empty
+//!   merges are typed errors, the zero-live-sites failure mode).
 //! * [`metrics`] — counters + latency histograms, surfaced over the wire.
 //! * [`server`] / [`client`] — TCP JSON-lines transport.
 //!
@@ -34,6 +56,8 @@ pub mod router;
 pub mod worker;
 pub mod batcher;
 pub mod merger;
+pub mod node;
 pub mod service;
 pub mod server;
 pub mod client;
+pub mod cluster;

@@ -1,0 +1,759 @@
+//! The transport-agnostic node core: everything that *executes* requests.
+//!
+//! [`Node::execute`] is the single typed entry point — `Request` in,
+//! `Response` out, no socket, no worker pool, no transport anywhere in the
+//! signature. The TCP server, the CLI, the cluster layer and the tests are
+//! all thin callers:
+//!
+//! ```text
+//!   TCP server ──┐
+//!   CLI ─────────┼──► Coordinator (worker pool) ──► Node::execute
+//!   tests ───────┘                                      ▲
+//!   library embedders ──────────────────────────────────┘
+//! ```
+//!
+//! A `Node` owns the engine registry, the named sketch/stream registry, the
+//! keyed similarity store, the LSH index, the dense batcher and the
+//! metrics — the full request-execution state of one site in the paper's
+//! §2.3 many-sites deployment. What it deliberately does NOT own: threads
+//! (the [`super::service::Coordinator`] wraps it in a worker pool) and
+//! transports (the [`super::server::Server`] speaks TCP on top of the
+//! coordinator; [`super::cluster`] fans out across many nodes).
+//!
+//! Family discipline (README.md §RNG-families): the `sketch` op always
+//! produces **Ordered**-family FastGM sketches; `sketch_dense` always
+//! produces **Direct**-family sketches (accelerator or CPU P-MinHash
+//! fallback — identical semantics). Estimators reject cross-family pairs,
+//! so a mis-routed comparison fails loudly instead of silently biasing.
+
+use super::batcher::{BatcherConfig, DenseBatcher};
+use super::merger::merge_tree;
+use super::metrics::Metrics;
+use super::protocol::{HelloInfo, Request, Response, SketchSource, PROTOCOL_VERSION};
+use super::registry::Registry;
+use super::router::{Router, RouterConfig, SketchPlan, TopKPlan};
+use super::store::SketchStore;
+use crate::estimate::cardinality::{estimate_cardinality, estimate_weighted_jaccard};
+use crate::estimate::jaccard::estimate_jp;
+use crate::lsh::{LshIndex, LshParams};
+use crate::sketch::engine::{self, EngineParams};
+use crate::sketch::{codec, AlgorithmId, GumbelMaxSketch, SketchScratch, Sketcher, SparseVector};
+use crate::util::config::Config;
+use crate::util::hash::token_id;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub k: usize,
+    pub seed: u64,
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub shed: bool,
+    /// Artifact directory; None (or missing manifest) disables the
+    /// accelerator — everything runs on CPU with identical semantics.
+    pub artifacts_dir: Option<String>,
+    pub batch_max: usize,
+    pub batch_deadline: Duration,
+    pub lsh_threshold: f64,
+    /// Shard team size for large sparse `sketch` requests (§2.3 parallel
+    /// shard-merge; 1 disables). The sharded result is bit-identical to
+    /// single-threaded FastGM.
+    pub shards: usize,
+    /// Smallest n⁺ routed to the shard team.
+    pub shard_min_nplus: usize,
+    /// Default engine-registry algorithm for `sketch` requests that carry
+    /// no `algo` field (config key `sketch.algo`).
+    pub algo: String,
+    /// Lock shards of the keyed sketch store (config key `store.shards`).
+    pub store_shards: usize,
+    /// Largest store size a `topk` answers by brute-force scan instead of
+    /// the LSH band probe (config key `store.topk_scan_max`).
+    pub topk_scan_max: usize,
+    /// This node's identity in a cluster (config key `node.id`), reported
+    /// by the `hello` handshake and used by the rendezvous partitioner —
+    /// it must be unique and stable across restarts of the same site.
+    pub node_id: String,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            k: 256,
+            seed: 42,
+            workers: 4,
+            queue_capacity: 1024,
+            shed: false,
+            artifacts_dir: None,
+            batch_max: 8,
+            batch_deadline: Duration::from_millis(2),
+            lsh_threshold: 0.5,
+            shards: 4,
+            shard_min_nplus: 4096,
+            algo: "fastgm".to_string(),
+            store_shards: 8,
+            topk_scan_max: 64,
+            node_id: "node-0".to_string(),
+        }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Read from a parsed TOML-subset [`Config`] (the launcher path).
+    pub fn from_config(cfg: &Config) -> CoordinatorConfig {
+        let d = CoordinatorConfig::default();
+        CoordinatorConfig {
+            k: cfg.usize("sketch.k", d.k),
+            seed: cfg.u64("sketch.seed", d.seed),
+            workers: cfg.usize("server.workers", d.workers),
+            queue_capacity: cfg.usize("server.queue_capacity", d.queue_capacity),
+            shed: cfg.bool("server.shed", d.shed),
+            artifacts_dir: {
+                let dir = cfg.str("accel.artifacts_dir", "artifacts");
+                if dir.is_empty() || dir == "off" {
+                    None
+                } else {
+                    Some(dir)
+                }
+            },
+            batch_max: cfg.usize("accel.max_batch", d.batch_max),
+            batch_deadline: Duration::from_micros(
+                (cfg.f64("accel.deadline_ms", 2.0) * 1000.0) as u64,
+            ),
+            lsh_threshold: cfg.f64("lsh.threshold", d.lsh_threshold),
+            shards: cfg.usize("sketch.shards", d.shards),
+            shard_min_nplus: cfg.usize("sketch.shard_min_nplus", d.shard_min_nplus),
+            algo: cfg.str("sketch.algo", &d.algo),
+            store_shards: cfg.usize("store.shards", d.store_shards),
+            topk_scan_max: cfg.usize("store.topk_scan_max", d.topk_scan_max),
+            node_id: cfg.str("node.id", &d.node_id),
+        }
+    }
+}
+
+pub struct Node {
+    cfg: CoordinatorConfig,
+    registry: Registry,
+    metrics: Metrics,
+    router: Router,
+    batcher: DenseBatcher,
+    lsh: RwLock<LshIndex>,
+    lsh_names: RwLock<HashMap<u64, String>>,
+    /// Keyed similarity-serving store (upsert/delete/topk/snapshot ops).
+    store: SketchStore,
+    accel_on: bool,
+    /// Resolved `cfg.algo` (validated at construction time).
+    default_algo: AlgorithmId,
+    /// Engine-registry construction parameters shared by all algorithms.
+    engine_params: EngineParams,
+    /// Registry sketchers, shared across callers (stateless; all
+    /// per-request state lives in the caller's scratch). The ONLY
+    /// construction path for sketchers — pre-seeded with the hot entries,
+    /// lazily extended per requested `algo` — so (k, seed, shards) can
+    /// never diverge between the default path and per-request overrides.
+    engines: RwLock<HashMap<AlgorithmId, Arc<dyn Sketcher>>>,
+    /// State epoch: bumped on every successful snapshot `restore`, so a
+    /// cluster client can tell "same node, same state" from "same node,
+    /// state replaced" across a warm restart. Reported by `hello`.
+    epoch: AtomicU64,
+}
+
+impl Node {
+    pub fn new(cfg: CoordinatorConfig) -> anyhow::Result<Node> {
+        // Bucket metadata comes from the manifest WITHOUT touching PJRT
+        // (the xla wrapper types are !Send); the batcher thread owns the
+        // actual runtime.
+        let (accel_dir, accel_max_len) = match &cfg.artifacts_dir {
+            // Without the `accel` feature a manifest may parse but can never
+            // be loaded: report the accelerator as off (accel_enabled(),
+            // metrics, router max_len) instead of advertising a path that
+            // cannot exist. Dense requests still flow through the batcher's
+            // CPU fallback.
+            Some(dir) if !cfg!(feature = "accel") => {
+                log::warn!("accel.artifacts_dir '{dir}' ignored: built without the `accel` feature");
+                (None, 0)
+            }
+            Some(dir) => match crate::runtime::read_manifest(dir) {
+                Ok(specs) => {
+                    let max_len = specs
+                        .iter()
+                        .filter(|s| {
+                            s.name.starts_with("sketch_b")
+                                && s.outputs.first().map(|o| o.shape[1]) == Some(cfg.k)
+                        })
+                        .map(|s| s.inputs[1].shape[1])
+                        .max()
+                        .unwrap_or(0);
+                    (Some(dir.clone()), max_len)
+                }
+                Err(e) => {
+                    log::warn!("accelerator disabled: {e}");
+                    (None, 0)
+                }
+            },
+            None => (None, 0),
+        };
+        // A misconfigured default algorithm fails loudly at startup instead
+        // of per request (checked before any thread is spawned).
+        let default_algo = AlgorithmId::from_name(&cfg.algo)?;
+        let accel_on = accel_dir.is_some();
+        let batcher = DenseBatcher::new(
+            BatcherConfig {
+                max_batch: cfg.batch_max,
+                deadline: cfg.batch_deadline,
+                k: cfg.k,
+                seed: cfg.seed,
+            },
+            accel_dir,
+        );
+        let engine_params =
+            EngineParams::new(cfg.k, cfg.seed).with_shards(cfg.shards.max(1));
+        // Pre-seed the hot registry entries (default algo + both routed
+        // FastGM paths) so steady-state requests never take the write lock.
+        let mut engines: HashMap<AlgorithmId, Arc<dyn Sketcher>> = HashMap::new();
+        for id in [default_algo, AlgorithmId::FastGm, AlgorithmId::Sharded] {
+            engines
+                .entry(id)
+                .or_insert_with(|| Arc::from(engine::build(id, engine_params)));
+        }
+        let lsh_params = LshParams::for_threshold(cfg.k, cfg.lsh_threshold);
+        Ok(Node {
+            router: Router::new(RouterConfig {
+                accel_max_len,
+                min_density: 0.25,
+                shards: cfg.shards.max(1),
+                shard_min_nplus: cfg.shard_min_nplus,
+                topk_scan_max: cfg.topk_scan_max,
+            }),
+            registry: Registry::new(),
+            metrics: Metrics::new(),
+            batcher,
+            lsh: RwLock::new(LshIndex::new(lsh_params)),
+            lsh_names: RwLock::new(HashMap::new()),
+            store: SketchStore::new(lsh_params, cfg.store_shards.max(1)),
+            accel_on,
+            default_algo,
+            engine_params,
+            engines: RwLock::new(engines),
+            epoch: AtomicU64::new(0),
+            cfg,
+        })
+    }
+
+    /// Execute one request against this node's state. This is the typed,
+    /// transport-agnostic API everything else is a wrapper around: errors
+    /// become [`Response::Error`], never panics. `scratch` is the caller's
+    /// reusable sketch arena (the worker pool passes its per-worker one);
+    /// reuse is bit-invisible, so any scratch — however dirty — is fine.
+    pub fn execute(&self, req: Request, scratch: &mut SketchScratch) -> Response {
+        match self.execute_inner(req, scratch) {
+            Ok(resp) => resp,
+            Err(e) => {
+                self.metrics.incr("errors");
+                Response::err(e)
+            }
+        }
+    }
+
+    /// [`Node::execute`] with a throwaway scratch — the convenience path
+    /// for embedders and tests that don't manage worker state.
+    pub fn execute_alloc(&self, req: Request) -> Response {
+        self.execute(req, &mut SketchScratch::new())
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    pub fn id(&self) -> &str {
+        &self.cfg.node_id
+    }
+
+    /// Snapshot-restore count (see the `epoch` field).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    pub fn accel_enabled(&self) -> bool {
+        self.accel_on
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn metrics_snapshot(&self) -> crate::util::json::Value {
+        self.metrics.snapshot()
+    }
+
+    /// The `hello` handshake payload (also reachable without the wire).
+    pub fn hello(&self) -> HelloInfo {
+        HelloInfo {
+            protocol: PROTOCOL_VERSION,
+            node: self.cfg.node_id.clone(),
+            epoch: self.epoch(),
+            k: self.cfg.k,
+            seed: self.cfg.seed,
+            algo: self.default_algo.name().to_string(),
+            algos: AlgorithmId::ALL.iter().map(|a| a.name().to_string()).collect(),
+        }
+    }
+
+    /// Drain the batcher thread. Called by the owning coordinator once the
+    /// worker pool is down (or directly by pool-less embedders).
+    pub fn shutdown(self) {
+        self.batcher.shutdown();
+    }
+
+    /// The shared registry sketcher for `id`, built on first use.
+    fn engine(&self, id: AlgorithmId) -> Arc<dyn Sketcher> {
+        if let Some(e) = self.engines.read().unwrap().get(&id) {
+            return e.clone();
+        }
+        let built: Arc<dyn Sketcher> = Arc::from(engine::build(id, self.engine_params));
+        self.engines.write().unwrap().entry(id).or_insert(built).clone()
+    }
+
+    /// Sparse sketch through the engine registry. `algo` is the request's
+    /// override (validated here — unknown names become error responses);
+    /// `None` means the configured default. Plain FastGM may be upgraded to
+    /// the §2.3 shard team by the router — identical output either way (the
+    /// router only decides parallelism, never the algorithm). The caller's
+    /// scratch is reused across requests; `sketch_into` is bit-identical to
+    /// a fresh sketch, so reuse is invisible to callers.
+    fn sketch_sparse(
+        &self,
+        v: &SparseVector,
+        algo: Option<&str>,
+        scratch: &mut SketchScratch,
+    ) -> anyhow::Result<GumbelMaxSketch> {
+        let id = match algo {
+            Some(name) => AlgorithmId::from_name(name)?,
+            None => self.default_algo,
+        };
+        if scratch.begin_use() {
+            self.metrics.incr("scratch.reuse");
+        } else {
+            self.metrics.incr("scratch.alloc");
+        }
+        let mut out = GumbelMaxSketch::empty(id.family(), self.cfg.seed, self.cfg.k);
+        match self.router.plan_sketch(id, v.n_plus()) {
+            SketchPlan::ShardedFastGm => {
+                self.metrics.incr("path.sketch.sharded");
+                self.engine(AlgorithmId::Sharded).sketch_into(v, scratch, &mut out);
+            }
+            SketchPlan::Engine(AlgorithmId::FastGm) => {
+                self.metrics.incr("path.sketch.single");
+                self.engine(AlgorithmId::FastGm).sketch_into(v, scratch, &mut out);
+            }
+            SketchPlan::Engine(other) => {
+                self.metrics.incr(&format!("path.sketch.engine.{}", other.name()));
+                self.engine(other).sketch_into(v, scratch, &mut out);
+            }
+        }
+        Ok(out)
+    }
+
+    /// LSH banding and the keyed store score candidates with
+    /// `estimate_jp`, which is only defined for EXP-register families —
+    /// with a `sketch.algo` default of icws / bagminhash / minhash, the
+    /// similarity-serving ops (`lsh_insert`, `lsh_query`, `upsert`, `topk`,
+    /// `restore`) refuse up front with one clear message instead of
+    /// erroring candidate-by-candidate mid-query.
+    fn ensure_lsh_capable(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.default_algo.family().has_exponential_registers(),
+            "similarity serving (LSH / store top-k) requires an EXP-register default algo \
+             (ordered/direct families); configured sketch.algo '{}' is family '{}'",
+            self.default_algo.name(),
+            self.default_algo.family().name(),
+        );
+        Ok(())
+    }
+
+    /// Refresh the store gauges. Sampled only when a `metrics` request is
+    /// served (same policy as `queue_depth`): refreshing after every
+    /// upsert/delete would re-scan every shard lock per mutation, purely
+    /// to update a gauge only the metrics snapshot reads.
+    fn observe_store(&self) {
+        self.metrics.gauge_set("store.size", self.store.len() as f64);
+        self.metrics.gauge_set("store.lsh_size", self.store.lsh_len() as f64);
+    }
+
+    fn execute_inner(
+        &self,
+        req: Request,
+        scratch: &mut SketchScratch,
+    ) -> anyhow::Result<Response> {
+        Ok(match req {
+            Request::Ping => Response::Pong,
+            Request::Hello => Response::Hello { info: self.hello() },
+            Request::Metrics => {
+                self.observe_store();
+                let mut snap = self.metrics.snapshot();
+                snap.set("sketches", crate::util::json::Value::num(self.registry.sketch_count() as f64));
+                snap.set("streams", crate::util::json::Value::num(self.registry.stream_count() as f64));
+                snap.set("store", self.store.stats());
+                snap.set("accel", crate::util::json::Value::Bool(self.accel_on));
+                snap.set("shards", crate::util::json::Value::num(self.cfg.shards as f64));
+                snap.set("algo", crate::util::json::Value::str(self.default_algo.name()));
+                snap.set("node", crate::util::json::Value::str(self.cfg.node_id.clone()));
+                snap.set("epoch", crate::util::json::Value::num(self.epoch() as f64));
+                snap.set(
+                    "batch_flushes",
+                    crate::util::json::Value::num(
+                        self.batcher.flushes.load(std::sync::atomic::Ordering::Relaxed) as f64,
+                    ),
+                );
+                Response::MetricsDump { snapshot: snap }
+            }
+            Request::Sketch { name, vector, algo } => {
+                let sk = self.sketch_sparse(&vector, algo.as_deref(), scratch)?;
+                self.registry.put_sketch(&name, sk.clone());
+                Response::Sketch { name, sketch: sk }
+            }
+            Request::SketchDense { name, weights } => {
+                // Router decides engine; both produce Direct-family
+                // sketches via the batcher (accel or CPU fallback).
+                let _path = self.router.route_dense(weights.len());
+                let rx = self.batcher.submit(weights);
+                let sk = rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("batcher dropped request"))??;
+                self.registry.put_sketch(&name, sk.clone());
+                Response::Sketch { name, sketch: sk }
+            }
+            Request::GetSketch { name } => {
+                let sk = self
+                    .registry
+                    .get_sketch(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{name}'"))?;
+                Response::Sketch { name, sketch: sk }
+            }
+            Request::SketchFetch { name, source } => {
+                let sk = match source {
+                    SketchSource::Store => self.store.get(&name),
+                    SketchSource::Registry => self.registry.get_sketch(&name),
+                    SketchSource::Stream => self.registry.stream_sketch(&name),
+                }
+                .ok_or_else(|| {
+                    anyhow::anyhow!("no {} sketch named '{name}'", source.name())
+                })?;
+                self.metrics.incr("store.fetch");
+                let data = codec::encode_sketch_hex(&name, &sk);
+                Response::SketchBlob { name, data }
+            }
+            Request::Push { stream, items } => {
+                let n = self.registry.stream_push(&stream, self.cfg.k, self.cfg.seed, &items);
+                Response::Ack { info: format!("stream '{stream}' processed {n}") }
+            }
+            Request::Cardinality { stream } => {
+                let sk = self
+                    .registry
+                    .stream_sketch(&stream)
+                    .ok_or_else(|| anyhow::anyhow!("no stream named '{stream}'"))?;
+                Response::Estimate { value: estimate_cardinality(&sk) }
+            }
+            Request::Jaccard { a, b } => {
+                let sa = self
+                    .registry
+                    .get_sketch(&a)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{a}'"))?;
+                let sb = self
+                    .registry
+                    .get_sketch(&b)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{b}'"))?;
+                Response::Estimate { value: estimate_jp(&sa, &sb)? }
+            }
+            Request::WeightedJaccard { a, b } => {
+                let sa = self
+                    .registry
+                    .get_sketch(&a)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{a}'"))?;
+                let sb = self
+                    .registry
+                    .get_sketch(&b)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{b}'"))?;
+                Response::Estimate { value: estimate_weighted_jaccard(&sa, &sb)? }
+            }
+            Request::Merge { names, out } => {
+                anyhow::ensure!(!names.is_empty(), "merge needs at least one sketch");
+                let sketches: Vec<_> = names
+                    .iter()
+                    .map(|n| {
+                        self.registry
+                            .get_sketch(n)
+                            .ok_or_else(|| anyhow::anyhow!("no sketch named '{n}'"))
+                    })
+                    .collect::<anyhow::Result<_>>()?;
+                let merged = merge_tree(&sketches, 4)?;
+                self.registry.put_sketch(&out, merged.clone());
+                Response::Sketch { name: out, sketch: merged }
+            }
+            Request::LshInsert { name } => {
+                let sk = self
+                    .registry
+                    .get_sketch(&name)
+                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{name}'"))?;
+                // LshQuery always sketches the probe with the *default*
+                // algo, so an index entry from any other family/seed/k can
+                // never legitimately match — reject at insert instead of
+                // silently never returning it (or erroring mid-query).
+                let want = self.default_algo.family();
+                self.ensure_lsh_capable()?;
+                anyhow::ensure!(
+                    sk.family == want && sk.seed == self.cfg.seed && sk.k() == self.cfg.k,
+                    "LSH index accepts only default-algo sketches \
+                     (family '{}', seed {}, k {}); '{name}' is family '{}', seed {}, k {}",
+                    want.name(),
+                    self.cfg.seed,
+                    self.cfg.k,
+                    sk.family.name(),
+                    sk.seed,
+                    sk.k(),
+                );
+                let key = token_id(&name);
+                self.lsh.write().unwrap().insert(key, sk);
+                self.lsh_names.write().unwrap().insert(key, name.clone());
+                Response::Ack { info: format!("indexed '{name}'") }
+            }
+            Request::LshQuery { vector, limit } => {
+                self.ensure_lsh_capable()?;
+                let query = self.sketch_sparse(&vector, None, scratch)?;
+                let hits = self.lsh.read().unwrap().query(&query, limit)?;
+                let names = self.lsh_names.read().unwrap();
+                Response::TopK {
+                    hits: hits
+                        .into_iter()
+                        .map(|(key, score)| {
+                            (
+                                names.get(&key).cloned().unwrap_or_else(|| format!("#{key}")),
+                                score,
+                            )
+                        })
+                        .collect(),
+                }
+            }
+            Request::Upsert { key, vector } => {
+                // The store is queried with default-algo probes, so every
+                // entry is sketched with the default algo — the store can
+                // never hold a sketch a `topk` could not score.
+                self.ensure_lsh_capable()?;
+                // The snapshot codec refuses oversized keys on decode;
+                // enforcing the same bound here means every acked upsert
+                // is guaranteed snapshot-and-restorable.
+                anyhow::ensure!(
+                    key.len() <= codec::MAX_KEY_LEN,
+                    "store keys are limited to {} bytes (got {})",
+                    codec::MAX_KEY_LEN,
+                    key.len(),
+                );
+                let sk = self.sketch_sparse(&vector, None, scratch)?;
+                self.store.upsert(&key, sk);
+                self.metrics.incr("store.upsert");
+                Response::Ack { info: format!("upserted '{key}'") }
+            }
+            Request::Delete { key } => {
+                let existed = self.store.delete(&key);
+                self.metrics.incr("store.delete");
+                Response::Ack {
+                    info: if existed {
+                        format!("deleted '{key}'")
+                    } else {
+                        format!("no entry '{key}'")
+                    },
+                }
+            }
+            Request::TopK { vector, limit } => {
+                self.ensure_lsh_capable()?;
+                let query = self.sketch_sparse(&vector, None, scratch)?;
+                let (hits, stats) = match self.router.plan_topk(self.store.len()) {
+                    TopKPlan::FullScan => {
+                        self.metrics.incr("path.topk.scan");
+                        self.store.scan_topk(&query, limit)?
+                    }
+                    TopKPlan::BandProbe => {
+                        self.metrics.incr("path.topk.probe");
+                        self.store.probe_topk(&query, limit)?
+                    }
+                };
+                self.metrics.add("topk.candidates", stats.candidates as u64);
+                self.metrics.add("topk.reranked", stats.reranked as u64);
+                Response::TopK { hits }
+            }
+            Request::StoreStats => Response::Stats { stats: self.store.stats() },
+            Request::Snapshot { path } => {
+                let (bytes, entries) = self.store.snapshot_bytes();
+                // Write-then-rename so a crash or full disk mid-write can
+                // never destroy an existing good snapshot at `path`; the
+                // temp name is unique per request so concurrent snapshots
+                // to the same path cannot interleave into a corrupt file.
+                static SNAP_SEQ: AtomicU64 = AtomicU64::new(0);
+                let seq = SNAP_SEQ.fetch_add(1, Ordering::Relaxed);
+                let tmp = format!("{path}.tmp.{}.{seq}", std::process::id());
+                // write + fsync + rename: without the fsync the rename can
+                // survive a crash whose page-cache data did not, replacing
+                // the old good snapshot with a truncated file.
+                let write_synced = || -> std::io::Result<()> {
+                    use std::io::Write as _;
+                    let mut f = std::fs::File::create(&tmp)?;
+                    f.write_all(&bytes)?;
+                    f.sync_all()
+                };
+                write_synced().map_err(|e| {
+                    let _ = std::fs::remove_file(&tmp);
+                    anyhow::anyhow!("cannot write snapshot '{tmp}': {e}")
+                })?;
+                std::fs::rename(&tmp, &path).map_err(|e| {
+                    let _ = std::fs::remove_file(&tmp);
+                    anyhow::anyhow!("cannot finalize snapshot '{path}': {e}")
+                })?;
+                self.metrics.incr("store.snapshot");
+                Response::Ack {
+                    info: format!("snapshot '{path}': {entries} entries, {} bytes", bytes.len()),
+                }
+            }
+            Request::Restore { path } => {
+                self.ensure_lsh_capable()?;
+                let bytes = std::fs::read(&path)
+                    .map_err(|e| anyhow::anyhow!("cannot read snapshot '{path}': {e}"))?;
+                let n = self.store.restore_bytes(
+                    &bytes,
+                    Some((self.default_algo.family(), self.cfg.seed, self.cfg.k)),
+                )?;
+                self.metrics.incr("store.restore");
+                // State replaced: a new epoch, visible through `hello`.
+                self.epoch.fetch_add(1, Ordering::SeqCst);
+                Response::Ack { info: format!("restored {n} entries from '{path}'") }
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::Family;
+
+    fn node() -> Node {
+        Node::new(CoordinatorConfig {
+            k: 64,
+            node_id: "n-test".into(),
+            ..CoordinatorConfig::default()
+        })
+        .unwrap()
+    }
+
+    fn vec1() -> SparseVector {
+        SparseVector::new(vec![1, 2, 3, 4], vec![1.0, 0.5, 2.0, 1.0])
+    }
+
+    /// The whole request surface is reachable with no socket, no worker
+    /// pool and no transport — the refactor's reason to exist.
+    #[test]
+    fn node_executes_requests_without_any_transport() {
+        let n = node();
+        assert_eq!(n.execute_alloc(Request::Ping), Response::Pong);
+        let Response::Sketch { sketch, .. } = n.execute_alloc(Request::Sketch {
+            name: "u".into(),
+            vector: vec1(),
+            algo: None,
+        }) else {
+            panic!("expected sketch")
+        };
+        assert_eq!(sketch.family, Family::Ordered);
+        assert_eq!(sketch.k(), 64);
+        // Errors are responses, not panics — same contract as the service.
+        assert!(matches!(
+            n.execute_alloc(Request::GetSketch { name: "ghost".into() }),
+            Response::Error { .. }
+        ));
+        n.shutdown();
+    }
+
+    #[test]
+    fn hello_reports_identity_config_and_epoch() {
+        let n = node();
+        let Response::Hello { info } = n.execute_alloc(Request::Hello) else {
+            panic!("expected hello")
+        };
+        assert_eq!(info.protocol, PROTOCOL_VERSION);
+        assert_eq!(info.node, "n-test");
+        assert_eq!(info.epoch, 0);
+        assert_eq!(info.k, 64);
+        assert_eq!(info.seed, 42);
+        assert_eq!(info.algo, "fastgm");
+        let want: Vec<String> =
+            AlgorithmId::ALL.iter().map(|a| a.name().to_string()).collect();
+        assert_eq!(info.algos, want);
+        assert_eq!(info, n.hello(), "wire hello and typed hello must agree");
+        n.shutdown();
+    }
+
+    #[test]
+    fn restore_bumps_the_epoch() {
+        let path = std::env::temp_dir().join(format!(
+            "fastgm-node-epoch-{}.fgms",
+            std::process::id()
+        ));
+        let path_str = path.to_string_lossy().to_string();
+        let n = node();
+        n.execute_alloc(Request::Upsert { key: "a".into(), vector: vec1() });
+        assert!(matches!(
+            n.execute_alloc(Request::Snapshot { path: path_str.clone() }),
+            Response::Ack { .. }
+        ));
+        assert_eq!(n.epoch(), 0);
+        for round in 1..=2u64 {
+            assert!(matches!(
+                n.execute_alloc(Request::Restore { path: path_str.clone() }),
+                Response::Ack { .. }
+            ));
+            assert_eq!(n.epoch(), round);
+        }
+        // A failed restore does not bump the epoch.
+        assert!(matches!(
+            n.execute_alloc(Request::Restore { path: "/no/such.fgms".into() }),
+            Response::Error { .. }
+        ));
+        assert_eq!(n.epoch(), 2);
+        n.shutdown();
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn sketch_fetch_serves_all_three_sources_bit_identically() {
+        let n = node();
+        let v = vec1();
+        // store / registry / stream each get a sketch under the same name.
+        n.execute_alloc(Request::Upsert { key: "x".into(), vector: v.clone() });
+        n.execute_alloc(Request::Sketch { name: "x".into(), vector: v.clone(), algo: None });
+        n.execute_alloc(Request::Push {
+            stream: "x".into(),
+            items: v.ids.iter().zip(&v.weights).map(|(&i, &w)| (i, w)).collect(),
+        });
+        for source in [SketchSource::Store, SketchSource::Registry, SketchSource::Stream] {
+            let Response::SketchBlob { name, data } =
+                n.execute_alloc(Request::SketchFetch { name: "x".into(), source })
+            else {
+                panic!("expected blob for {source:?}")
+            };
+            assert_eq!(name, "x");
+            let (key, sk) = codec::decode_sketch_hex(&data).unwrap();
+            assert_eq!(key, "x");
+            assert_eq!(sk.k(), 64);
+            assert_eq!(sk.seed, 42);
+            assert_eq!(sk.family, Family::Ordered);
+        }
+        // Unknown names are per-source errors.
+        let resp = n.execute_alloc(Request::SketchFetch {
+            name: "nope".into(),
+            source: SketchSource::Stream,
+        });
+        let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+        assert!(message.contains("no stream sketch named 'nope'"), "{message}");
+        n.shutdown();
+    }
+}

@@ -7,6 +7,59 @@
 use crate::sketch::{GumbelMaxSketch, SparseVector};
 use crate::util::json::{self, Value};
 
+/// Wire protocol version, answered by the `hello` op. Bumped whenever an
+/// existing encoding changes shape (adding a new op does not bump it —
+/// unknown ops already fail loudly).
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Which server-side collection a `sketch_fetch` reads from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchSource {
+    /// The keyed similarity store (`upsert` entries).
+    Store,
+    /// The named sketch registry (`sketch` / `merge` results).
+    Registry,
+    /// A live stream state's current sketch (`push` accumulations).
+    Stream,
+}
+
+impl SketchSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            SketchSource::Store => "store",
+            SketchSource::Registry => "registry",
+            SketchSource::Stream => "stream",
+        }
+    }
+
+    pub fn from_name(s: &str) -> anyhow::Result<SketchSource> {
+        Ok(match s {
+            "store" => SketchSource::Store,
+            "registry" => SketchSource::Registry,
+            "stream" => SketchSource::Stream,
+            other => anyhow::bail!(
+                "unknown sketch_fetch source '{other}' (known: store, registry, stream)"
+            ),
+        })
+    }
+}
+
+/// The `hello` handshake reply: enough for a cluster client to verify it is
+/// talking to a compatible node (protocol + sketch config) and to identify
+/// the node across restarts (`node` id; `epoch` counts snapshot restores).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HelloInfo {
+    pub protocol: u64,
+    pub node: String,
+    pub epoch: u64,
+    pub k: usize,
+    pub seed: u64,
+    /// The node's default sketch algorithm (what `upsert`/`topk` probe with).
+    pub algo: String,
+    /// Every engine-registry algorithm the node serves.
+    pub algos: Vec<String>,
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Sketch a sparse vector and store it. `algo` selects the engine-
@@ -50,6 +103,13 @@ pub enum Request {
     Snapshot { path: String },
     /// Replace the keyed store contents from the snapshot at `path`.
     Restore { path: String },
+    /// Version/identity handshake: the server answers protocol version,
+    /// node id, state epoch and supported algorithms ([`HelloInfo`]).
+    Hello,
+    /// Fetch one sketch as a codec-encoded blob (`sketch::codec`, hex) —
+    /// the cluster gather path's transfer op (§2.3 sketches move between
+    /// sites in the same versioned, checksummed format they persist in).
+    SketchFetch { name: String, source: SketchSource },
     /// Metrics snapshot.
     Metrics,
     Ping,
@@ -64,6 +124,11 @@ pub enum Response {
     MetricsDump { snapshot: Value },
     /// Keyed-store statistics (the `store_stats` op's reply).
     Stats { stats: Value },
+    /// The `hello` handshake reply.
+    Hello { info: HelloInfo },
+    /// One codec-encoded sketch (`sketch_fetch`'s reply); `data` is the hex
+    /// blob [`crate::sketch::codec::decode_sketch_hex`] reads.
+    SketchBlob { name: String, data: String },
     Error { message: String },
     Pong,
 }
@@ -186,6 +251,12 @@ impl Request {
                 ("op", Value::str("restore")),
                 ("path", Value::str(path.clone())),
             ]),
+            Request::Hello => Value::obj(vec![("op", Value::str("hello"))]),
+            Request::SketchFetch { name, source } => Value::obj(vec![
+                ("op", Value::str("sketch_fetch")),
+                ("name", Value::str(name.clone())),
+                ("source", Value::str(source.name())),
+            ]),
             Request::Metrics => Value::obj(vec![("op", Value::str("metrics"))]),
             Request::Ping => Value::obj(vec![("op", Value::str("ping"))]),
         }
@@ -276,6 +347,19 @@ impl Request {
             "store_stats" => Request::StoreStats,
             "snapshot" => Request::Snapshot { path: v.req_str("path")?.to_string() },
             "restore" => Request::Restore { path: v.req_str("path")?.to_string() },
+            "hello" => Request::Hello,
+            "sketch_fetch" => Request::SketchFetch {
+                name: v.req_str("name")?.to_string(),
+                // Optional on the wire (raw-JSON CLI convenience); the
+                // keyed store is the overwhelmingly common source.
+                source: match v.get("source") {
+                    None => SketchSource::Store,
+                    Some(s) => SketchSource::from_name(
+                        s.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("field 'source' not a string"))?,
+                    )?,
+                },
+            },
             "metrics" => Request::Metrics,
             "ping" => Request::Ping,
             other => anyhow::bail!("unknown op '{other}'"),
@@ -301,6 +385,8 @@ impl Request {
             Request::StoreStats => "store_stats",
             Request::Snapshot { .. } => "snapshot",
             Request::Restore { .. } => "restore",
+            Request::Hello => "hello",
+            Request::SketchFetch { .. } => "sketch_fetch",
             Request::Metrics => "metrics",
             Request::Ping => "ping",
         }
@@ -350,6 +436,26 @@ impl Response {
                 ("type", Value::str("stats")),
                 ("stats", stats.clone()),
             ]),
+            Response::Hello { info } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("hello")),
+                ("protocol", Value::num(info.protocol as f64)),
+                ("node", Value::str(info.node.clone())),
+                ("epoch", Value::num(info.epoch as f64)),
+                ("k", Value::num(info.k as f64)),
+                ("seed", Value::u64(info.seed)),
+                ("algo", Value::str(info.algo.clone())),
+                (
+                    "algos",
+                    Value::Arr(info.algos.iter().map(|a| Value::str(a.clone())).collect()),
+                ),
+            ]),
+            Response::SketchBlob { name, data } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("sketch_blob")),
+                ("name", Value::str(name.clone())),
+                ("data", Value::str(data.clone())),
+            ]),
             Response::Error { message } => Value::obj(vec![
                 ("ok", Value::Bool(false)),
                 ("type", Value::str("error")),
@@ -391,6 +497,40 @@ impl Response {
             },
             "metrics" => Response::MetricsDump { snapshot: v.req("snapshot")?.clone() },
             "stats" => Response::Stats { stats: v.req("stats")?.clone() },
+            "hello" => Response::Hello {
+                info: HelloInfo {
+                    protocol: v
+                        .req("protocol")?
+                        .as_u64_lossless()
+                        .ok_or_else(|| anyhow::anyhow!("bad protocol version"))?,
+                    node: v.req_str("node")?.to_string(),
+                    epoch: v
+                        .req("epoch")?
+                        .as_u64_lossless()
+                        .ok_or_else(|| anyhow::anyhow!("bad epoch"))?,
+                    k: v.req_usize("k")?,
+                    seed: v
+                        .req("seed")?
+                        .as_u64_lossless()
+                        .ok_or_else(|| anyhow::anyhow!("bad seed"))?,
+                    algo: v.req_str("algo")?.to_string(),
+                    algos: v
+                        .req("algos")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("algos not an array"))?
+                        .iter()
+                        .map(|a| {
+                            a.as_str()
+                                .map(str::to_string)
+                                .ok_or_else(|| anyhow::anyhow!("bad algo name"))
+                        })
+                        .collect::<anyhow::Result<_>>()?,
+                },
+            },
+            "sketch_blob" => Response::SketchBlob {
+                name: v.req_str("name")?.to_string(),
+                data: v.req_str("data")?.to_string(),
+            },
             "error" => Response::Error { message: v.req_str("message")?.to_string() },
             "pong" => Response::Pong,
             other => anyhow::bail!("unknown response type '{other}'"),
@@ -456,6 +596,10 @@ mod tests {
         roundtrip_req(Request::StoreStats);
         roundtrip_req(Request::Snapshot { path: "/tmp/fgm.snap".into() });
         roundtrip_req(Request::Restore { path: "/tmp/fgm.snap".into() });
+        roundtrip_req(Request::Hello);
+        for source in [SketchSource::Store, SketchSource::Registry, SketchSource::Stream] {
+            roundtrip_req(Request::SketchFetch { name: "doc1".into(), source });
+        }
         roundtrip_req(Request::Metrics);
         roundtrip_req(Request::Ping);
     }
@@ -476,7 +620,61 @@ mod tests {
             ]),
         });
         roundtrip_resp(Response::Error { message: "nope".into() });
+        roundtrip_resp(Response::Hello {
+            info: HelloInfo {
+                protocol: PROTOCOL_VERSION,
+                node: "node-0".into(),
+                epoch: 2,
+                k: 256,
+                seed: u64::MAX, // survives via the lossless string encoding
+                algo: "fastgm".into(),
+                algos: vec!["fastgm".into(), "pminhash".into()],
+            },
+        });
+        roundtrip_resp(Response::SketchBlob { name: "doc1".into(), data: "46474d53".into() });
         roundtrip_resp(Response::Pong);
+    }
+
+    #[test]
+    fn sketch_fetch_source_is_optional_but_validated() {
+        // Missing source defaults to the keyed store.
+        let req = decode_request(r#"{"op":"sketch_fetch","name":"a"}"#).unwrap();
+        assert_eq!(
+            req,
+            Request::SketchFetch { name: "a".into(), source: SketchSource::Store }
+        );
+        // Every named source decodes.
+        for (text, want) in [
+            ("store", SketchSource::Store),
+            ("registry", SketchSource::Registry),
+            ("stream", SketchSource::Stream),
+        ] {
+            let req = decode_request(&format!(
+                r#"{{"op":"sketch_fetch","name":"a","source":"{text}"}}"#
+            ))
+            .unwrap();
+            assert_eq!(req, Request::SketchFetch { name: "a".into(), source: want });
+        }
+        // Unknown or non-string sources are rejected; so is a missing name.
+        assert!(decode_request(r#"{"op":"sketch_fetch","name":"a","source":"disk"}"#).is_err());
+        assert!(decode_request(r#"{"op":"sketch_fetch","name":"a","source":7}"#).is_err());
+        assert!(decode_request(r#"{"op":"sketch_fetch"}"#).is_err());
+    }
+
+    #[test]
+    fn hello_reply_requires_its_fields() {
+        assert!(decode_response(r#"{"ok":true,"type":"hello","protocol":1}"#).is_err());
+        assert!(decode_response(
+            r#"{"ok":true,"type":"hello","protocol":1,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":"fastgm"}"#
+        )
+        .is_err(), "algos must be an array");
+        let ok = decode_response(
+            r#"{"ok":true,"type":"hello","protocol":1,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
+        )
+        .unwrap();
+        let Response::Hello { info } = ok else { panic!("expected hello") };
+        assert_eq!(info.protocol, PROTOCOL_VERSION);
+        assert_eq!(info.algos, vec!["fastgm".to_string()]);
     }
 
     #[test]

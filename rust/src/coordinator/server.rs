@@ -1,10 +1,15 @@
 //! TCP JSON-lines server: one accept loop, one thread per connection, each
-//! line a [`protocol::Request`], each reply a single JSON line. Shutdown is
-//! cooperative AND fully joined: a flag plus a self-connection unblock
-//! `accept`, per-connection read timeouts let idle connections observe the
-//! flag, and [`Server::stop`] joins every live connection thread — it can
-//! never return while a request is still being processed or a response is
-//! mid-write.
+//! line a [`protocol::Request`], each reply a single JSON line. The server
+//! is pure transport — it decodes lines and hands typed requests to the
+//! [`Coordinator`] (whose pool runs [`super::node::Node::execute`]); no
+//! request logic lives here, so everything it serves is equally reachable
+//! without a socket.
+//!
+//! Shutdown is cooperative AND fully joined: a flag plus a self-connection
+//! unblock `accept`, per-connection read timeouts let idle connections
+//! observe the flag, and [`Server::stop`] joins every live connection
+//! thread — it can never return while a request is still being processed
+//! or a response is mid-write.
 
 use super::protocol::{self, Response};
 use super::service::Coordinator;

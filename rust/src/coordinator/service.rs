@@ -1,230 +1,49 @@
-//! The coordinator service: wires registry, router, worker pool, batcher,
-//! LSH index, metrics and (optionally) the PJRT accelerator into one
-//! request handler. This is what the TCP server, the CLI and the examples
-//! all drive.
+//! The pooled coordinator: a thin concurrency shell around the
+//! transport-agnostic [`Node`] core.
 //!
-//! Family discipline (README.md §RNG-families): the `sketch` op always produces
-//! **Ordered**-family FastGM sketches; `sketch_dense` always produces
-//! **Direct**-family sketches (accelerator or CPU P-MinHash fallback —
-//! identical semantics). Estimators reject cross-family pairs, so a
-//! mis-routed comparison fails loudly instead of silently biasing.
+//! All request *execution* lives in [`super::node`] — this module only adds
+//! the worker pool (per-worker bounded queues + reusable
+//! [`crate::sketch::SketchScratch`]), admission/backpressure, and the
+//! latency/queue-depth observation that only makes sense once requests
+//! queue. The TCP server, the CLI and the cluster layer all drive a
+//! `Coordinator`; library embedders that want single-threaded, in-process
+//! execution can drive a [`Node`] directly via [`Node::execute`].
 
 use super::backpressure::Policy;
-use super::batcher::{BatcherConfig, DenseBatcher};
-use super::merger::merge_tree;
-use super::metrics::Metrics;
+use super::node::Node;
 use super::protocol::{Request, Response};
-use super::registry::Registry;
-use super::router::{Router, RouterConfig, SketchPlan, TopKPlan};
-use super::store::SketchStore;
 use super::worker::{WorkerContext, WorkerPool};
-use crate::estimate::cardinality::{estimate_cardinality, estimate_weighted_jaccard};
-use crate::estimate::jaccard::estimate_jp;
-use crate::lsh::{LshIndex, LshParams};
-use crate::sketch::engine::{self, EngineParams};
-use crate::sketch::{AlgorithmId, GumbelMaxSketch, Sketcher, SparseVector};
-use crate::util::config::Config;
-use crate::util::hash::token_id;
-use std::collections::HashMap;
-use std::sync::{Arc, RwLock};
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Instant;
 
-#[derive(Debug, Clone)]
-pub struct CoordinatorConfig {
-    pub k: usize,
-    pub seed: u64,
-    pub workers: usize,
-    pub queue_capacity: usize,
-    pub shed: bool,
-    /// Artifact directory; None (or missing manifest) disables the
-    /// accelerator — everything runs on CPU with identical semantics.
-    pub artifacts_dir: Option<String>,
-    pub batch_max: usize,
-    pub batch_deadline: Duration,
-    pub lsh_threshold: f64,
-    /// Shard team size for large sparse `sketch` requests (§2.3 parallel
-    /// shard-merge; 1 disables). The sharded result is bit-identical to
-    /// single-threaded FastGM.
-    pub shards: usize,
-    /// Smallest n⁺ routed to the shard team.
-    pub shard_min_nplus: usize,
-    /// Default engine-registry algorithm for `sketch` requests that carry
-    /// no `algo` field (config key `sketch.algo`).
-    pub algo: String,
-    /// Lock shards of the keyed sketch store (config key `store.shards`).
-    pub store_shards: usize,
-    /// Largest store size a `topk` answers by brute-force scan instead of
-    /// the LSH band probe (config key `store.topk_scan_max`).
-    pub topk_scan_max: usize,
-}
-
-impl Default for CoordinatorConfig {
-    fn default() -> Self {
-        CoordinatorConfig {
-            k: 256,
-            seed: 42,
-            workers: 4,
-            queue_capacity: 1024,
-            shed: false,
-            artifacts_dir: None,
-            batch_max: 8,
-            batch_deadline: Duration::from_millis(2),
-            lsh_threshold: 0.5,
-            shards: 4,
-            shard_min_nplus: 4096,
-            algo: "fastgm".to_string(),
-            store_shards: 8,
-            topk_scan_max: 64,
-        }
-    }
-}
-
-impl CoordinatorConfig {
-    /// Read from a parsed TOML-subset [`Config`] (the launcher path).
-    pub fn from_config(cfg: &Config) -> CoordinatorConfig {
-        let d = CoordinatorConfig::default();
-        CoordinatorConfig {
-            k: cfg.usize("sketch.k", d.k),
-            seed: cfg.u64("sketch.seed", d.seed),
-            workers: cfg.usize("server.workers", d.workers),
-            queue_capacity: cfg.usize("server.queue_capacity", d.queue_capacity),
-            shed: cfg.bool("server.shed", d.shed),
-            artifacts_dir: {
-                let dir = cfg.str("accel.artifacts_dir", "artifacts");
-                if dir.is_empty() || dir == "off" {
-                    None
-                } else {
-                    Some(dir)
-                }
-            },
-            batch_max: cfg.usize("accel.max_batch", d.batch_max),
-            batch_deadline: Duration::from_micros(
-                (cfg.f64("accel.deadline_ms", 2.0) * 1000.0) as u64,
-            ),
-            lsh_threshold: cfg.f64("lsh.threshold", d.lsh_threshold),
-            shards: cfg.usize("sketch.shards", d.shards),
-            shard_min_nplus: cfg.usize("sketch.shard_min_nplus", d.shard_min_nplus),
-            algo: cfg.str("sketch.algo", &d.algo),
-            store_shards: cfg.usize("store.shards", d.store_shards),
-            topk_scan_max: cfg.usize("store.topk_scan_max", d.topk_scan_max),
-        }
-    }
-}
-
-struct Inner {
-    cfg: CoordinatorConfig,
-    registry: Registry,
-    metrics: Metrics,
-    router: Router,
-    batcher: DenseBatcher,
-    lsh: RwLock<LshIndex>,
-    lsh_names: RwLock<HashMap<u64, String>>,
-    /// Keyed similarity-serving store (upsert/delete/topk/snapshot ops).
-    store: SketchStore,
-    accel_on: bool,
-    /// Resolved `cfg.algo` (validated at construction time).
-    default_algo: AlgorithmId,
-    /// Engine-registry construction parameters shared by all algorithms.
-    engine_params: EngineParams,
-    /// Registry sketchers, shared across workers (stateless; all
-    /// per-request state lives in the per-worker scratch). The ONLY
-    /// construction path for sketchers — pre-seeded with the hot entries,
-    /// lazily extended per requested `algo` — so (k, seed, shards) can
-    /// never diverge between the default path and per-request overrides.
-    engines: RwLock<HashMap<AlgorithmId, Arc<dyn Sketcher>>>,
-}
+// Re-exported so existing `service::CoordinatorConfig` callers keep
+// working; the config lives with the node core it configures.
+pub use super::node::CoordinatorConfig;
 
 pub struct Coordinator {
-    inner: Arc<Inner>,
+    node: Arc<Node>,
     pool: WorkerPool,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
-        // Bucket metadata comes from the manifest WITHOUT touching PJRT
-        // (the xla wrapper types are !Send); the batcher thread owns the
-        // actual runtime.
-        let (accel_dir, accel_max_len) = match &cfg.artifacts_dir {
-            // Without the `accel` feature a manifest may parse but can never
-            // be loaded: report the accelerator as off (accel_enabled(),
-            // metrics, router max_len) instead of advertising a path that
-            // cannot exist. Dense requests still flow through the batcher's
-            // CPU fallback.
-            Some(dir) if !cfg!(feature = "accel") => {
-                log::warn!("accel.artifacts_dir '{dir}' ignored: built without the `accel` feature");
-                (None, 0)
-            }
-            Some(dir) => match crate::runtime::read_manifest(dir) {
-                Ok(specs) => {
-                    let max_len = specs
-                        .iter()
-                        .filter(|s| {
-                            s.name.starts_with("sketch_b")
-                                && s.outputs.first().map(|o| o.shape[1]) == Some(cfg.k)
-                        })
-                        .map(|s| s.inputs[1].shape[1])
-                        .max()
-                        .unwrap_or(0);
-                    (Some(dir.clone()), max_len)
-                }
-                Err(e) => {
-                    log::warn!("accelerator disabled: {e}");
-                    (None, 0)
-                }
-            },
-            None => (None, 0),
-        };
-        // A misconfigured default algorithm fails loudly at startup instead
-        // of per request (checked before any thread is spawned).
-        let default_algo = AlgorithmId::from_name(&cfg.algo)?;
-        let accel_on = accel_dir.is_some();
-        let batcher = DenseBatcher::new(
-            BatcherConfig {
-                max_batch: cfg.batch_max,
-                deadline: cfg.batch_deadline,
-                k: cfg.k,
-                seed: cfg.seed,
-            },
-            accel_dir,
-        );
-        let engine_params =
-            EngineParams::new(cfg.k, cfg.seed).with_shards(cfg.shards.max(1));
-        // Pre-seed the hot registry entries (default algo + both routed
-        // FastGM paths) so steady-state requests never take the write lock.
-        let mut engines: HashMap<AlgorithmId, Arc<dyn Sketcher>> = HashMap::new();
-        for id in [default_algo, AlgorithmId::FastGm, AlgorithmId::Sharded] {
-            engines
-                .entry(id)
-                .or_insert_with(|| Arc::from(engine::build(id, engine_params)));
-        }
-        let lsh_params = LshParams::for_threshold(cfg.k, cfg.lsh_threshold);
-        let inner = Arc::new(Inner {
-            router: Router::new(RouterConfig {
-                accel_max_len,
-                min_density: 0.25,
-                shards: cfg.shards.max(1),
-                shard_min_nplus: cfg.shard_min_nplus,
-                topk_scan_max: cfg.topk_scan_max,
-            }),
-            registry: Registry::new(),
-            metrics: Metrics::new(),
-            batcher,
-            lsh: RwLock::new(LshIndex::new(lsh_params)),
-            lsh_names: RwLock::new(HashMap::new()),
-            store: SketchStore::new(lsh_params, cfg.store_shards.max(1)),
-            accel_on,
-            default_algo,
-            engine_params,
-            engines: RwLock::new(engines),
-            cfg: cfg.clone(),
-        });
-        let handler = {
-            let inner = inner.clone();
-            Arc::new(move |req: Request, ctx: &mut WorkerContext| inner.handle(req, ctx))
-        };
         let policy = if cfg.shed { Policy::Shed } else { Policy::Block };
-        let pool = WorkerPool::new(cfg.workers, cfg.queue_capacity, policy, handler);
-        Ok(Coordinator { inner, pool })
+        let (workers, queue_capacity) = (cfg.workers, cfg.queue_capacity);
+        let node = Arc::new(Node::new(cfg)?);
+        let handler = {
+            let node = node.clone();
+            Arc::new(move |req: Request, ctx: &mut WorkerContext| {
+                node.execute(req, &mut ctx.scratch)
+            })
+        };
+        let pool = WorkerPool::new(workers, queue_capacity, policy, handler);
+        Ok(Coordinator { node, pool })
+    }
+
+    /// The transport-agnostic execution core. Hand this to embedders that
+    /// need typed, pool-less access to the same state the pool serves.
+    pub fn node(&self) -> &Arc<Node> {
+        &self.node
     }
 
     /// Synchronous request (used by CLI / examples / per-connection loops).
@@ -235,13 +54,13 @@ impl Coordinator {
             self.observe_queue_depth();
         }
         let resp = self.pool.call(req);
-        self.inner.metrics.observe(op, t0.elapsed().as_secs_f64());
+        self.node.metrics().observe(op, t0.elapsed().as_secs_f64());
         resp
     }
 
     /// Async submit (load generators).
     pub fn submit(&self, req: Request) -> std::sync::mpsc::Receiver<Response> {
-        self.inner.metrics.incr(&format!("submit.{}", req.op()));
+        self.node.metrics().incr(&format!("submit.{}", req.op()));
         if matches!(req, Request::Metrics) {
             self.observe_queue_depth();
         }
@@ -254,7 +73,7 @@ impl Coordinator {
     /// will describe) instead of locking the gauge map on every request —
     /// the sketch hot path stays free of metrics-side mutexes.
     fn observe_queue_depth(&self) {
-        self.inner.metrics.gauge_set("queue_depth", self.pool.queue_depth() as f64);
+        self.node.metrics().gauge_set("queue_depth", self.pool.queue_depth() as f64);
     }
 
     /// Current depth across the per-worker queues.
@@ -263,345 +82,33 @@ impl Coordinator {
     }
 
     pub fn accel_enabled(&self) -> bool {
-        self.inner.accel_on
+        self.node.accel_enabled()
     }
 
     pub fn metrics_snapshot(&self) -> crate::util::json::Value {
-        self.inner.metrics.snapshot()
+        self.node.metrics_snapshot()
     }
 
     pub fn config(&self) -> &CoordinatorConfig {
-        &self.inner.cfg
+        self.node.config()
     }
 
     pub fn shutdown(self) {
         self.pool.shutdown();
-        // inner.batcher shut down on drop of last Arc: explicit drain here.
-        match Arc::try_unwrap(self.inner) {
-            Ok(inner) => inner.batcher.shutdown(),
-            Err(_) => log::warn!("coordinator inner still referenced at shutdown"),
+        // The node (and its batcher thread) drains once the last Arc drops:
+        // make that explicit here.
+        match Arc::try_unwrap(self.node) {
+            Ok(node) => node.shutdown(),
+            Err(_) => log::warn!("coordinator node still referenced at shutdown"),
         }
-    }
-}
-
-impl Inner {
-    /// The shared registry sketcher for `id`, built on first use.
-    fn engine(&self, id: AlgorithmId) -> Arc<dyn Sketcher> {
-        if let Some(e) = self.engines.read().unwrap().get(&id) {
-            return e.clone();
-        }
-        let built: Arc<dyn Sketcher> = Arc::from(engine::build(id, self.engine_params));
-        self.engines.write().unwrap().entry(id).or_insert(built).clone()
-    }
-
-    /// Sparse sketch through the engine registry. `algo` is the request's
-    /// override (validated here — unknown names become error responses);
-    /// `None` means the configured default. Plain FastGM may be upgraded to
-    /// the §2.3 shard team by the router — identical output either way (the
-    /// router only decides parallelism, never the algorithm). The worker's
-    /// scratch is reused across requests; `sketch_into` is bit-identical to
-    /// a fresh sketch, so reuse is invisible to callers.
-    fn sketch_sparse(
-        &self,
-        v: &SparseVector,
-        algo: Option<&str>,
-        ctx: &mut WorkerContext,
-    ) -> anyhow::Result<GumbelMaxSketch> {
-        let id = match algo {
-            Some(name) => AlgorithmId::from_name(name)?,
-            None => self.default_algo,
-        };
-        if ctx.scratch.begin_use() {
-            self.metrics.incr("scratch.reuse");
-        } else {
-            self.metrics.incr("scratch.alloc");
-        }
-        let mut out = GumbelMaxSketch::empty(id.family(), self.cfg.seed, self.cfg.k);
-        match self.router.plan_sketch(id, v.n_plus()) {
-            SketchPlan::ShardedFastGm => {
-                self.metrics.incr("path.sketch.sharded");
-                self.engine(AlgorithmId::Sharded).sketch_into(v, &mut ctx.scratch, &mut out);
-            }
-            SketchPlan::Engine(AlgorithmId::FastGm) => {
-                self.metrics.incr("path.sketch.single");
-                self.engine(AlgorithmId::FastGm).sketch_into(v, &mut ctx.scratch, &mut out);
-            }
-            SketchPlan::Engine(other) => {
-                self.metrics.incr(&format!("path.sketch.engine.{}", other.name()));
-                self.engine(other).sketch_into(v, &mut ctx.scratch, &mut out);
-            }
-        }
-        Ok(out)
-    }
-
-    /// LSH banding and the keyed store score candidates with
-    /// `estimate_jp`, which is only defined for EXP-register families —
-    /// with a `sketch.algo` default of icws / bagminhash / minhash, the
-    /// similarity-serving ops (`lsh_insert`, `lsh_query`, `upsert`, `topk`,
-    /// `restore`) refuse up front with one clear message instead of
-    /// erroring candidate-by-candidate mid-query.
-    fn ensure_lsh_capable(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            self.default_algo.family().has_exponential_registers(),
-            "similarity serving (LSH / store top-k) requires an EXP-register default algo \
-             (ordered/direct families); configured sketch.algo '{}' is family '{}'",
-            self.default_algo.name(),
-            self.default_algo.family().name(),
-        );
-        Ok(())
-    }
-
-    /// Refresh the store gauges. Sampled only when a `metrics` request is
-    /// served (same policy as `queue_depth`): refreshing after every
-    /// upsert/delete would re-scan every shard lock per mutation, purely
-    /// to update a gauge only the metrics snapshot reads.
-    fn observe_store(&self) {
-        self.metrics.gauge_set("store.size", self.store.len() as f64);
-        self.metrics.gauge_set("store.lsh_size", self.store.lsh_len() as f64);
-    }
-
-    fn handle(&self, req: Request, ctx: &mut WorkerContext) -> Response {
-        match self.handle_inner(req, ctx) {
-            Ok(resp) => resp,
-            Err(e) => {
-                self.metrics.incr("errors");
-                Response::err(e)
-            }
-        }
-    }
-
-    fn handle_inner(&self, req: Request, ctx: &mut WorkerContext) -> anyhow::Result<Response> {
-        Ok(match req {
-            Request::Ping => Response::Pong,
-            Request::Metrics => {
-                self.observe_store();
-                let mut snap = self.metrics.snapshot();
-                snap.set("sketches", crate::util::json::Value::num(self.registry.sketch_count() as f64));
-                snap.set("streams", crate::util::json::Value::num(self.registry.stream_count() as f64));
-                snap.set("store", self.store.stats());
-                snap.set("accel", crate::util::json::Value::Bool(self.accel_on));
-                snap.set("shards", crate::util::json::Value::num(self.cfg.shards as f64));
-                snap.set("algo", crate::util::json::Value::str(self.default_algo.name()));
-                snap.set(
-                    "batch_flushes",
-                    crate::util::json::Value::num(
-                        self.batcher.flushes.load(std::sync::atomic::Ordering::Relaxed) as f64,
-                    ),
-                );
-                Response::MetricsDump { snapshot: snap }
-            }
-            Request::Sketch { name, vector, algo } => {
-                let sk = self.sketch_sparse(&vector, algo.as_deref(), ctx)?;
-                self.registry.put_sketch(&name, sk.clone());
-                Response::Sketch { name, sketch: sk }
-            }
-            Request::SketchDense { name, weights } => {
-                // Router decides engine; both produce Direct-family
-                // sketches via the batcher (accel or CPU fallback).
-                let _path = self.router.route_dense(weights.len());
-                let rx = self.batcher.submit(weights);
-                let sk = rx
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("batcher dropped request"))??;
-                self.registry.put_sketch(&name, sk.clone());
-                Response::Sketch { name, sketch: sk }
-            }
-            Request::GetSketch { name } => {
-                let sk = self
-                    .registry
-                    .get_sketch(&name)
-                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{name}'"))?;
-                Response::Sketch { name, sketch: sk }
-            }
-            Request::Push { stream, items } => {
-                let n = self.registry.stream_push(&stream, self.cfg.k, self.cfg.seed, &items);
-                Response::Ack { info: format!("stream '{stream}' processed {n}") }
-            }
-            Request::Cardinality { stream } => {
-                let sk = self
-                    .registry
-                    .stream_sketch(&stream)
-                    .ok_or_else(|| anyhow::anyhow!("no stream named '{stream}'"))?;
-                Response::Estimate { value: estimate_cardinality(&sk) }
-            }
-            Request::Jaccard { a, b } => {
-                let sa = self
-                    .registry
-                    .get_sketch(&a)
-                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{a}'"))?;
-                let sb = self
-                    .registry
-                    .get_sketch(&b)
-                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{b}'"))?;
-                Response::Estimate { value: estimate_jp(&sa, &sb)? }
-            }
-            Request::WeightedJaccard { a, b } => {
-                let sa = self
-                    .registry
-                    .get_sketch(&a)
-                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{a}'"))?;
-                let sb = self
-                    .registry
-                    .get_sketch(&b)
-                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{b}'"))?;
-                Response::Estimate { value: estimate_weighted_jaccard(&sa, &sb)? }
-            }
-            Request::Merge { names, out } => {
-                anyhow::ensure!(!names.is_empty(), "merge needs at least one sketch");
-                let sketches: Vec<_> = names
-                    .iter()
-                    .map(|n| {
-                        self.registry
-                            .get_sketch(n)
-                            .ok_or_else(|| anyhow::anyhow!("no sketch named '{n}'"))
-                    })
-                    .collect::<anyhow::Result<_>>()?;
-                let merged = merge_tree(&sketches, 4)?;
-                self.registry.put_sketch(&out, merged.clone());
-                Response::Sketch { name: out, sketch: merged }
-            }
-            Request::LshInsert { name } => {
-                let sk = self
-                    .registry
-                    .get_sketch(&name)
-                    .ok_or_else(|| anyhow::anyhow!("no sketch named '{name}'"))?;
-                // LshQuery always sketches the probe with the *default*
-                // algo, so an index entry from any other family/seed/k can
-                // never legitimately match — reject at insert instead of
-                // silently never returning it (or erroring mid-query).
-                let want = self.default_algo.family();
-                self.ensure_lsh_capable()?;
-                anyhow::ensure!(
-                    sk.family == want && sk.seed == self.cfg.seed && sk.k() == self.cfg.k,
-                    "LSH index accepts only default-algo sketches \
-                     (family '{}', seed {}, k {}); '{name}' is family '{}', seed {}, k {}",
-                    want.name(),
-                    self.cfg.seed,
-                    self.cfg.k,
-                    sk.family.name(),
-                    sk.seed,
-                    sk.k(),
-                );
-                let key = token_id(&name);
-                self.lsh.write().unwrap().insert(key, sk);
-                self.lsh_names.write().unwrap().insert(key, name.clone());
-                Response::Ack { info: format!("indexed '{name}'") }
-            }
-            Request::LshQuery { vector, limit } => {
-                self.ensure_lsh_capable()?;
-                let query = self.sketch_sparse(&vector, None, ctx)?;
-                let hits = self.lsh.read().unwrap().query(&query, limit)?;
-                let names = self.lsh_names.read().unwrap();
-                Response::TopK {
-                    hits: hits
-                        .into_iter()
-                        .map(|(key, score)| {
-                            (
-                                names.get(&key).cloned().unwrap_or_else(|| format!("#{key}")),
-                                score,
-                            )
-                        })
-                        .collect(),
-                }
-            }
-            Request::Upsert { key, vector } => {
-                // The store is queried with default-algo probes, so every
-                // entry is sketched with the default algo — the store can
-                // never hold a sketch a `topk` could not score.
-                self.ensure_lsh_capable()?;
-                // The snapshot codec refuses oversized keys on decode;
-                // enforcing the same bound here means every acked upsert
-                // is guaranteed snapshot-and-restorable.
-                anyhow::ensure!(
-                    key.len() <= crate::sketch::codec::MAX_KEY_LEN,
-                    "store keys are limited to {} bytes (got {})",
-                    crate::sketch::codec::MAX_KEY_LEN,
-                    key.len(),
-                );
-                let sk = self.sketch_sparse(&vector, None, ctx)?;
-                self.store.upsert(&key, sk);
-                self.metrics.incr("store.upsert");
-                Response::Ack { info: format!("upserted '{key}'") }
-            }
-            Request::Delete { key } => {
-                let existed = self.store.delete(&key);
-                self.metrics.incr("store.delete");
-                Response::Ack {
-                    info: if existed {
-                        format!("deleted '{key}'")
-                    } else {
-                        format!("no entry '{key}'")
-                    },
-                }
-            }
-            Request::TopK { vector, limit } => {
-                self.ensure_lsh_capable()?;
-                let query = self.sketch_sparse(&vector, None, ctx)?;
-                let (hits, stats) = match self.router.plan_topk(self.store.len()) {
-                    TopKPlan::FullScan => {
-                        self.metrics.incr("path.topk.scan");
-                        self.store.scan_topk(&query, limit)?
-                    }
-                    TopKPlan::BandProbe => {
-                        self.metrics.incr("path.topk.probe");
-                        self.store.probe_topk(&query, limit)?
-                    }
-                };
-                self.metrics.add("topk.candidates", stats.candidates as u64);
-                self.metrics.add("topk.reranked", stats.reranked as u64);
-                Response::TopK { hits }
-            }
-            Request::StoreStats => Response::Stats { stats: self.store.stats() },
-            Request::Snapshot { path } => {
-                let (bytes, entries) = self.store.snapshot_bytes();
-                // Write-then-rename so a crash or full disk mid-write can
-                // never destroy an existing good snapshot at `path`; the
-                // temp name is unique per request so concurrent snapshots
-                // to the same path cannot interleave into a corrupt file.
-                static SNAP_SEQ: std::sync::atomic::AtomicU64 =
-                    std::sync::atomic::AtomicU64::new(0);
-                let seq = SNAP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                let tmp = format!("{path}.tmp.{}.{seq}", std::process::id());
-                // write + fsync + rename: without the fsync the rename can
-                // survive a crash whose page-cache data did not, replacing
-                // the old good snapshot with a truncated file.
-                let write_synced = || -> std::io::Result<()> {
-                    use std::io::Write as _;
-                    let mut f = std::fs::File::create(&tmp)?;
-                    f.write_all(&bytes)?;
-                    f.sync_all()
-                };
-                write_synced().map_err(|e| {
-                    let _ = std::fs::remove_file(&tmp);
-                    anyhow::anyhow!("cannot write snapshot '{tmp}': {e}")
-                })?;
-                std::fs::rename(&tmp, &path).map_err(|e| {
-                    let _ = std::fs::remove_file(&tmp);
-                    anyhow::anyhow!("cannot finalize snapshot '{path}': {e}")
-                })?;
-                self.metrics.incr("store.snapshot");
-                Response::Ack {
-                    info: format!("snapshot '{path}': {entries} entries, {} bytes", bytes.len()),
-                }
-            }
-            Request::Restore { path } => {
-                self.ensure_lsh_capable()?;
-                let bytes = std::fs::read(&path)
-                    .map_err(|e| anyhow::anyhow!("cannot read snapshot '{path}': {e}"))?;
-                let n = self.store.restore_bytes(
-                    &bytes,
-                    Some((self.default_algo.family(), self.cfg.seed, self.cfg.k)),
-                )?;
-                self.metrics.incr("store.restore");
-                Response::Ack { info: format!("restored {n} entries from '{path}'") }
-            }
-        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sketch::engine::{self, EngineParams};
+    use crate::sketch::{AlgorithmId, Sketcher, SparseVector};
 
     fn coord() -> Coordinator {
         Coordinator::new(CoordinatorConfig {
@@ -1017,6 +524,33 @@ mod tests {
             .and_then(|v| v.as_f64())
             .unwrap();
         assert!(pings >= 2.0);
+        c.shutdown();
+    }
+
+    /// The pooled path and the bare node path execute identically — the
+    /// coordinator adds concurrency, never semantics.
+    #[test]
+    fn pooled_and_direct_node_execution_agree() {
+        let c = coord();
+        let (u, _) = vecs();
+        let Response::Sketch { sketch: pooled, .. } =
+            c.call(Request::Sketch { name: "u".into(), vector: u.clone(), algo: None })
+        else {
+            panic!("expected sketch")
+        };
+        let Response::Sketch { sketch: direct, .. } = c.node().execute_alloc(Request::Sketch {
+            name: "u2".into(),
+            vector: u,
+            algo: None,
+        }) else {
+            panic!("expected sketch")
+        };
+        assert_eq!(pooled, direct);
+        // Both wrote into the same shared registry.
+        assert!(matches!(
+            c.call(Request::GetSketch { name: "u2".into() }),
+            Response::Sketch { .. }
+        ));
         c.shutdown();
     }
 }

@@ -6,6 +6,13 @@
 //! fastgm store    [--addr host:port] (--upsert KEY --vec "id:w,..." | --delete KEY | --stats)
 //! fastgm topk     [--addr host:port] --vec "id:w,..." [--limit N]
 //! fastgm snapshot [--addr host:port] (--save PATH | --restore PATH)
+//! fastgm cluster  serve  [--nodes N] [--host H] [--base-port P] [--config cfg] [--set k=v ...]
+//! fastgm cluster  info   --addrs a:p,b:p,...
+//! fastgm cluster  upsert --addrs ... --key K --vec "id:w,..."
+//! fastgm cluster  delete --addrs ... --key K
+//! fastgm cluster  topk   --addrs ... --vec "id:w,..." [--limit N]
+//! fastgm cluster  push   --addrs ... --stream S --items "id:w,..."
+//! fastgm cluster  card   --addrs ... --stream S
 //! fastgm sketch   [--dataset NAME|path:FILE|synthetic] [--k K] [--algo A] [--count N]
 //! fastgm exp      <table1|fig4|...|ablation-delta|ablation-accel|all> [--out DIR] [--full]
 //! fastgm simnet   [--depth D] [--packets N] [--k K]
@@ -16,6 +23,7 @@
 #![allow(clippy::needless_range_loop)]
 
 use fastgm::coordinator::client::Client;
+use fastgm::coordinator::cluster::{ClusterClient, LocalCluster};
 use fastgm::coordinator::protocol::{decode_request, encode_line, Request};
 use fastgm::coordinator::server::Server;
 use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
@@ -56,6 +64,7 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
         "store" => cmd_store(rest),
         "topk" => cmd_topk(rest),
         "snapshot" => cmd_snapshot(rest),
+        "cluster" => cmd_cluster(rest),
         "sketch" => cmd_sketch(rest),
         "exp" => cmd_exp(rest),
         "simnet" => cmd_simnet(rest),
@@ -77,6 +86,7 @@ fn top_help() -> String {
        store     upsert/delete keys in the server's similarity store\n\
        topk      top-k similarity query against the server's store\n\
        snapshot  save/restore the server's store (binary snapshot)\n\
+       cluster   run/drive an N-node sharded cluster (scatter-gather)\n\
        sketch    sketch a dataset locally and report timing\n\
        exp       regenerate a paper table/figure (or 'all')\n\
        simnet    run the braided-chain sensor network simulation\n\
@@ -210,6 +220,193 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
     } else {
         anyhow::bail!("one of --save PATH | --restore PATH required\n\n{}", spec.help_text());
     }
+    Ok(())
+}
+
+fn cluster_help() -> String {
+    "fastgm cluster — run/drive an N-node sharded serving cluster\n\n\
+     USAGE: fastgm cluster <ACTION> [OPTIONS]\n\n\
+     ACTIONS:\n\
+       serve   spawn N local nodes (one port each) and serve until killed\n\
+       info    hello + store occupancy for every node\n\
+       upsert  route an upsert to the key's owning node\n\
+       delete  route a delete to the key's owning node\n\
+       topk    scatter-gather top-k across all live nodes\n\
+       push    push stream items, partitioned by element id\n\
+       card    cluster-wide weighted cardinality (merged §2.3 sketches)\n\n\
+     Every driving action takes --addrs host:port,host:port,...\n\
+     Each action accepts --help."
+        .to_string()
+}
+
+fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
+    let Some(action) = argv.first() else {
+        anyhow::bail!(cluster_help());
+    };
+    let rest = &argv[1..];
+    match action.as_str() {
+        "serve" => cluster_serve(rest),
+        "info" => cluster_info(rest),
+        "upsert" => cluster_upsert(rest),
+        "delete" => cluster_delete(rest),
+        "topk" => cluster_topk(rest),
+        "push" => cluster_push(rest),
+        "card" => cluster_card(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", cluster_help());
+            Ok(())
+        }
+        other => anyhow::bail!("unknown cluster action '{other}'\n\n{}", cluster_help()),
+    }
+}
+
+fn cluster_serve(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("cluster serve", "spawn N local nodes and serve")
+        .opt("nodes", "3", "number of nodes")
+        .opt("host", "127.0.0.1", "bind host")
+        .opt("base-port", "7900", "first node's port (node i gets port+i)")
+        .opt("config", "", "TOML config file (shared by every node)")
+        .multi("set", "config override key=value");
+    let args = spec.parse(argv)?;
+    let n = args.usize("nodes")?;
+    anyhow::ensure!(n >= 1, "--nodes must be at least 1");
+    let mut cfg = if args.str("config").is_empty() {
+        Config::new()
+    } else {
+        Config::from_file(&args.str("config"))?
+    };
+    for s in args.all("set") {
+        cfg.set_override(&s)?;
+    }
+    let base = CoordinatorConfig::from_config(&cfg);
+    let host = args.str("host");
+    let base_port = args.usize("base-port")?;
+    let addrs: Vec<String> = (0..n).map(|i| format!("{host}:{}", base_port + i)).collect();
+    let cluster = LocalCluster::start_on(&addrs, &base)?;
+    println!("fastgm cluster: {n} nodes (k={}, seed={}, algo={})", base.k, base.seed, base.algo);
+    for i in 0..cluster.len() {
+        println!("  {}  {}", cluster.node_id(i), cluster.addr(i));
+    }
+    println!("drive it with: fastgm cluster topk --addrs {}", cluster.addrs().join(","));
+    // Serve until killed.
+    loop {
+        std::thread::park();
+    }
+}
+
+fn parse_addrs(spec: &str) -> anyhow::Result<Vec<String>> {
+    let addrs: Vec<String> = spec
+        .split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .map(str::to_string)
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--addrs needs at least one host:port");
+    Ok(addrs)
+}
+
+/// Parse stream items `id:w,id:w,...` (numeric ids, unlike store vectors).
+fn parse_items(spec: &str) -> anyhow::Result<Vec<(u64, f64)>> {
+    let v = parse_vec(spec)?;
+    Ok(v.ids.into_iter().zip(v.weights).collect())
+}
+
+fn cluster_connect(args: &fastgm::util::argparse::Args) -> anyhow::Result<ClusterClient> {
+    ClusterClient::connect(&parse_addrs(&args.str("addrs"))?)
+}
+
+fn cluster_info(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("cluster info", "hello + occupancy for every node")
+        .opt("addrs", "", "comma-separated node addresses");
+    let args = spec.parse(argv)?;
+    let mut cc = cluster_connect(&args)?;
+    let sizes = cc.store_sizes();
+    println!("{} nodes, {} live", cc.nodes(), cc.live_nodes());
+    for (i, (id, size)) in sizes.iter().enumerate() {
+        let h = cc.hello(i);
+        println!(
+            "  {id:<12} {}  protocol v{}  epoch {}  k={} seed={} algo={}  store={}",
+            cc.addr(i),
+            h.protocol,
+            h.epoch,
+            h.k,
+            h.seed,
+            h.algo,
+            size.map(|s| s.to_string()).unwrap_or_else(|| "?".into()),
+        );
+    }
+    Ok(())
+}
+
+fn cluster_upsert(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("cluster upsert", "route an upsert to the owning node")
+        .opt("addrs", "", "comma-separated node addresses")
+        .opt("key", "", "store key")
+        .opt("vec", "", "sparse vector as id:w,id:w,...");
+    let args = spec.parse(argv)?;
+    anyhow::ensure!(!args.str("key").is_empty(), "--key required");
+    let v = parse_vec(&args.str("vec"))?;
+    let mut cc = cluster_connect(&args)?;
+    let key = args.str("key");
+    let owner = cc.owner(&key);
+    println!("{} (owner: {})", cc.upsert(&key, v)?, cc.node_id(owner));
+    Ok(())
+}
+
+fn cluster_delete(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("cluster delete", "route a delete to the owning node")
+        .opt("addrs", "", "comma-separated node addresses")
+        .opt("key", "", "store key");
+    let args = spec.parse(argv)?;
+    anyhow::ensure!(!args.str("key").is_empty(), "--key required");
+    let mut cc = cluster_connect(&args)?;
+    println!("{}", cc.delete(&args.str("key"))?);
+    Ok(())
+}
+
+fn cluster_topk(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("cluster topk", "scatter-gather top-k across live nodes")
+        .opt("addrs", "", "comma-separated node addresses")
+        .opt("vec", "", "query vector as id:w,id:w,...")
+        .opt("limit", "10", "number of neighbors");
+    let args = spec.parse(argv)?;
+    let v = parse_vec(&args.str("vec"))?;
+    let mut cc = cluster_connect(&args)?;
+    let (hits, stats) = cc.topk(&v, args.usize("limit")?)?;
+    if hits.is_empty() {
+        println!("(no hits)");
+    }
+    for (rank, (key, score)) in hits.iter().enumerate() {
+        println!("{:>3}. {key}  J_P≈{score:.4}", rank + 1);
+    }
+    println!(
+        "({}/{} nodes answered, {} candidates, {} re-ranked)",
+        stats.live, stats.nodes, stats.candidates, stats.reranked
+    );
+    Ok(())
+}
+
+fn cluster_push(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("cluster push", "push stream items, partitioned by element id")
+        .opt("addrs", "", "comma-separated node addresses")
+        .opt("stream", "s", "stream name")
+        .opt("items", "", "items as id:w,id:w,...");
+    let args = spec.parse(argv)?;
+    let items = parse_items(&args.str("items"))?;
+    let mut cc = cluster_connect(&args)?;
+    let n = cc.push(&args.str("stream"), &items)?;
+    println!("routed {n} items into stream '{}'", args.str("stream"));
+    Ok(())
+}
+
+fn cluster_card(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new("cluster card", "cluster-wide weighted cardinality")
+        .opt("addrs", "", "comma-separated node addresses")
+        .opt("stream", "s", "stream name");
+    let args = spec.parse(argv)?;
+    let mut cc = cluster_connect(&args)?;
+    let est = cc.cardinality(&args.str("stream"))?;
+    println!("cluster cardinality of '{}': {est:.1}", args.str("stream"));
     Ok(())
 }
 

@@ -74,15 +74,24 @@ fn push_u64(out: &mut Vec<u8>, x: u64) {
 /// Encode `entries` (already in the order the caller wants frozen — the
 /// store sorts by key so snapshots of equal state are byte-identical).
 pub fn encode_store(entries: &[(String, GumbelMaxSketch)]) -> Vec<u8> {
-    let payload: usize = entries
-        .iter()
-        .map(|(key, sk)| 4 + key.len() + 1 + 8 + 8 + 16 * sk.k())
-        .sum();
+    encode_entries(entries.iter().map(|(k, sk)| (k.as_str(), sk)))
+}
+
+/// Borrow-based encoding core shared by [`encode_store`] and the
+/// single-sketch wire path — no key/register clones required.
+fn encode_entries<'a>(
+    entries: impl Iterator<Item = (&'a str, &'a GumbelMaxSketch)> + Clone,
+) -> Vec<u8> {
+    let (count, payload) = entries
+        .clone()
+        .fold((0u64, 0usize), |(n, bytes), (key, sk)| {
+            (n + 1, bytes + 4 + key.len() + 1 + 8 + 8 + 16 * sk.k())
+        });
     let mut out = Vec::with_capacity(16 + payload + 8);
     out.extend_from_slice(&MAGIC);
     push_u16(&mut out, VERSION);
     push_u16(&mut out, 0); // flags, reserved
-    push_u64(&mut out, entries.len() as u64);
+    push_u64(&mut out, count);
     for (key, sk) in entries {
         push_u32(&mut out, key.len() as u32);
         out.extend_from_slice(key.as_bytes());
@@ -203,6 +212,64 @@ pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, GumbelMaxSketch
     Ok(out)
 }
 
+// -- single-sketch wire transfer (the cluster gather path) -----------------
+//
+// `sketch_fetch` responses carry one codec-encoded sketch inside a JSON
+// string, so the binary snapshot format — checksum, strict decode and all —
+// is also the cross-node transfer format (§2.3 sketches move between sites
+// exactly as they are persisted). Hex keeps the encoding dependency-free.
+
+/// Lowercase hex of `bytes`.
+pub fn to_hex(bytes: &[u8]) -> String {
+    const DIGITS: &[u8; 16] = b"0123456789abcdef";
+    let mut out = String::with_capacity(bytes.len() * 2);
+    for &b in bytes {
+        out.push(DIGITS[(b >> 4) as usize] as char);
+        out.push(DIGITS[(b & 0xF) as usize] as char);
+    }
+    out
+}
+
+/// Strict inverse of [`to_hex`] (accepts upper/lower case, rejects odd
+/// length and non-hex bytes).
+pub fn from_hex(text: &str) -> anyhow::Result<Vec<u8>> {
+    let bytes = text.as_bytes();
+    anyhow::ensure!(bytes.len() % 2 == 0, "hex text has odd length {}", bytes.len());
+    let nibble = |c: u8| -> anyhow::Result<u8> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            other => anyhow::bail!("invalid hex byte 0x{other:02x}"),
+        }
+    };
+    let mut out = Vec::with_capacity(bytes.len() / 2);
+    for pair in bytes.chunks_exact(2) {
+        out.push((nibble(pair[0])? << 4) | nibble(pair[1])?);
+    }
+    Ok(out)
+}
+
+/// Encode one `(key, sketch)` pair as a hex codec blob (a one-entry store
+/// snapshot — checksum and versioning included for free). Borrow-based:
+/// this sits on the per-candidate path of every cluster gather, so it
+/// must not clone k registers just to encode them.
+pub fn encode_sketch_hex(key: &str, sk: &GumbelMaxSketch) -> String {
+    to_hex(&encode_entries(std::iter::once((key, sk))))
+}
+
+/// Decode a blob produced by [`encode_sketch_hex`]; refuses blobs that do
+/// not hold exactly one entry.
+pub fn decode_sketch_hex(text: &str) -> anyhow::Result<(String, GumbelMaxSketch)> {
+    let mut entries = decode_store(&from_hex(text)?)?;
+    anyhow::ensure!(
+        entries.len() == 1,
+        "expected exactly one sketch in the blob, got {}",
+        entries.len()
+    );
+    Ok(entries.pop().expect("one entry"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +362,46 @@ mod tests {
         bytes.splice(tail_at..tail_at, [0u8; 3]);
         let err = decode_store(&with_checksum_refreshed(bytes)).unwrap_err();
         assert!(err.to_string().contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn sketch_hex_roundtrips_bit_identically() {
+        for (key, sk) in sample() {
+            let blob = encode_sketch_hex(&key, &sk);
+            assert!(blob.bytes().all(|b| b.is_ascii_hexdigit()));
+            assert!(blob.starts_with(&to_hex(&MAGIC)), "blob must open with the magic");
+            let (back_key, back) = decode_sketch_hex(&blob).unwrap();
+            assert_eq!(back_key, key);
+            assert_eq!(back, sk);
+        }
+    }
+
+    #[test]
+    fn sketch_hex_rejects_garbage_and_multi_entry_blobs() {
+        assert!(decode_sketch_hex("zz").is_err()); // non-hex
+        assert!(decode_sketch_hex("abc").is_err()); // odd length
+        assert!(decode_sketch_hex("deadbeef").is_err()); // not a snapshot
+        // A two-entry store snapshot is valid codec but not a single-sketch
+        // blob.
+        let blob = to_hex(&encode_store(&sample()));
+        let err = decode_sketch_hex(&blob).unwrap_err().to_string();
+        assert!(err.contains("exactly one sketch"), "{err}");
+        // A corrupted blob fails the checksum, not the hex layer.
+        let mut bad = encode_sketch_hex("a", &sample()[0].1);
+        let flip = bad.len() / 2;
+        let orig = bad.as_bytes()[flip];
+        bad.replace_range(flip..flip + 1, if orig == b'0' { "1" } else { "0" });
+        assert!(decode_sketch_hex(&bad).is_err());
+    }
+
+    #[test]
+    fn hex_roundtrip_and_case_insensitivity() {
+        let bytes: Vec<u8> = (0..=255u8).collect();
+        let hex = to_hex(&bytes);
+        assert_eq!(from_hex(&hex).unwrap(), bytes);
+        assert_eq!(from_hex(&hex.to_uppercase()).unwrap(), bytes);
+        assert_eq!(to_hex(&[]), "");
+        assert_eq!(from_hex("").unwrap(), Vec::<u8>::new());
     }
 
     #[test]

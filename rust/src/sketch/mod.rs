@@ -194,6 +194,12 @@ pub enum MergeError {
         family: &'static str,
         hint: &'static str,
     },
+    /// A merge was asked to combine zero sketches. There is no meaningful
+    /// identity element (the empty sketch of *which* family/seed/k?), and
+    /// the cluster gather path reaches this exact case when every site is
+    /// down — it must surface as an error, never a panic.
+    #[error("cannot merge an empty set of sketches")]
+    EmptyMerge,
 }
 
 impl GumbelMaxSketch {
@@ -261,12 +267,14 @@ impl GumbelMaxSketch {
         Ok(())
     }
 
-    /// Merge many sketches (e.g. the per-site sketches of §2.3).
+    /// Merge many sketches (e.g. the per-site sketches of §2.3). Zero
+    /// sketches is [`MergeError::EmptyMerge`] — there is no identity
+    /// element to return.
     pub fn merge_all<'a>(
         sketches: impl IntoIterator<Item = &'a GumbelMaxSketch>,
     ) -> Result<GumbelMaxSketch, MergeError> {
         let mut it = sketches.into_iter();
-        let first = it.next().expect("merge_all requires at least one sketch");
+        let first = it.next().ok_or(MergeError::EmptyMerge)?;
         let mut acc = first.clone();
         for s in it {
             acc.merge_in_place(s)?;
@@ -419,6 +427,14 @@ mod tests {
         assert!(matches!(a.merge(&c), Err(MergeError::SeedMismatch(1, 2))));
         let d = GumbelMaxSketch::empty(Family::Ordered, 1, 8);
         assert!(matches!(a.merge(&d), Err(MergeError::LengthMismatch(4, 8))));
+    }
+
+    #[test]
+    fn merge_all_of_nothing_is_a_typed_error() {
+        assert_eq!(
+            GumbelMaxSketch::merge_all(std::iter::empty()).unwrap_err(),
+            MergeError::EmptyMerge
+        );
     }
 
     #[test]

@@ -159,6 +159,41 @@ impl Suite {
     pub fn speedup(&self, a: &str, b: &str) -> Option<f64> {
         Some(self.get(a)?.median / self.get(b)?.median)
     }
+
+    /// The whole suite as one JSON object: benchmark name → `ns_per_op`
+    /// (median) + `ops_per_s` throughput (+ spread and sample counts).
+    /// This is the machine-readable summary `perf_probe --json` writes so
+    /// perf trajectories can be diffed across commits.
+    pub fn to_json(&self) -> crate::util::json::Value {
+        use crate::util::json::Value;
+        Value::Obj(
+            self.results
+                .iter()
+                .map(|r| {
+                    (
+                        r.name.clone(),
+                        Value::obj(vec![
+                            ("ns_per_op", Value::num(r.median * 1e9)),
+                            (
+                                "ops_per_s",
+                                Value::num(if r.median > 0.0 { 1.0 / r.median } else { 0.0 }),
+                            ),
+                            ("p10_ns", Value::num(r.p10 * 1e9)),
+                            ("p90_ns", Value::num(r.p90 * 1e9)),
+                            ("iters", Value::num(r.iters as f64)),
+                            ("samples", Value::num(r.samples as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Write [`Suite::to_json`] to `path` (overwriting — each run is one
+    /// self-contained summary, unlike the appending JSONL stream).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +231,24 @@ mod tests {
         }));
         let sp = suite.speedup("slow", "fast").unwrap();
         assert!(sp > 1.0, "speedup={sp}");
+    }
+
+    #[test]
+    fn json_summary_maps_name_to_ns_and_throughput() {
+        let b = Bencher { budget: 0.02, samples: 2, warmup: 0.005 };
+        let mut suite = Suite::new();
+        suite.record(b.run("alpha", || 1u8));
+        let path = std::env::temp_dir().join("fastgm_bench_summary_test.json");
+        suite.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        let entry = v.get("alpha").expect("bench keyed by name");
+        let ns = entry.get("ns_per_op").unwrap().as_f64().unwrap();
+        let ops = entry.get("ops_per_s").unwrap().as_f64().unwrap();
+        assert!(ns > 0.0 && ops > 0.0);
+        // ns/op and ops/s are consistent inverses.
+        assert!((ns * ops / 1e9 - 1.0).abs() < 1e-9, "ns={ns} ops={ops}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! End-to-end acceptance + partition-correctness property tests for the
+//! cluster layer (ISSUE 4):
+//!
+//! * a 3-node local cluster ingests 200+ keys through the cluster client,
+//!   scatter-gather `topk` ranks exactly like a brute-force single-store
+//!   `estimate_jp` scan, cluster-wide cardinality lands within the
+//!   single-node estimator's error bound, and killing one node leaves
+//!   `topk` serving (degraded, non-panicking) while `upsert` to the dead
+//!   partition returns a typed error;
+//! * property (a): scatter-gather `topk` over an M-node cluster equals
+//!   single-node `topk` on the union store, for several M;
+//! * property (b): cluster-wide cardinality sketches — per-site stream
+//!   sketches moved through `sketch::codec` and merged — are bit-identical
+//!   to sketching the concatenated stream (§2.3 across the wire).
+
+use fastgm::coordinator::cluster::{ClusterClient, ClusterError, LocalCluster};
+use fastgm::coordinator::protocol::{Request, Response};
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::estimate::cardinality::cardinality_rel_std;
+use fastgm::estimate::jaccard::estimate_jp;
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::stream_fastgm::StreamFastGm;
+use fastgm::sketch::{Sketcher, SparseVector};
+use fastgm::util::rng::SplitMix64;
+
+const K: usize = 128;
+const SEED: u64 = 42;
+const N: usize = 210;
+const LIMIT: usize = 5;
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        k: K,
+        seed: SEED,
+        workers: 2,
+        node_id: "acc".into(),
+        // Exact per-partition answers: every node brute-scans its shard, so
+        // the gather's claim ("equals a brute-force scan of the union") is
+        // deterministic. The probe path's recall is covered by
+        // store_serving.rs; this suite pins the *distribution* logic.
+        topk_scan_max: 100_000,
+        ..Default::default()
+    }
+}
+
+fn random_vec(r: &mut SplitMix64, n: usize, span: u64) -> SparseVector {
+    SparseVector::new(
+        (0..n).map(|_| r.next_u64() % span).collect(),
+        (0..n).map(|_| r.next_f64() + 0.1).collect(),
+    )
+}
+
+/// `base` + near-duplicates + unrelated docs (disjoint id spaces), so the
+/// brute-force top-5 is the near-duplicate family with strictly positive
+/// scores.
+fn corpus(n: usize) -> (SparseVector, Vec<SparseVector>) {
+    let mut r = SplitMix64::new(31);
+    let base = SparseVector::new(
+        (0..40u64).map(|i| i * 31 + 5).collect(),
+        (0..40).map(|_| r.next_f64() + 0.1).collect(),
+    );
+    let mut docs = Vec::with_capacity(n);
+    docs.push(base.clone());
+    for j in 1..5u64 {
+        let swapped = [j - 1, j + 9, j + 19];
+        let mut near = SparseVector::default();
+        for (idx, (id, w)) in base.positive().enumerate() {
+            if swapped.contains(&(idx as u64)) {
+                near.push(r.next_u64() | (1 << 63), w);
+            } else {
+                near.push(id, w);
+            }
+        }
+        docs.push(near);
+    }
+    for i in 5..n {
+        docs.push(SparseVector::new(
+            (0..40u64).map(|j| (i as u64) * 100_000 + j).collect(),
+            (0..40).map(|_| r.next_f64() + 0.1).collect(),
+        ));
+    }
+    (base, docs)
+}
+
+fn brute_force_topk(
+    query: &SparseVector,
+    docs: &[SparseVector],
+    limit: usize,
+) -> Vec<(String, f64)> {
+    let f = FastGm::new(K, SEED);
+    let qsk = f.sketch(query);
+    let mut scored: Vec<(String, f64)> = docs
+        .iter()
+        .enumerate()
+        .map(|(i, d)| (format!("doc{i:03}"), estimate_jp(&qsk, &f.sketch(d)).unwrap()))
+        .collect();
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+    scored.truncate(limit);
+    scored
+}
+
+#[test]
+fn three_node_cluster_serves_degrades_and_errors_typed() {
+    let (query, docs) = corpus(N);
+
+    // ---- 3 nodes, 200+ keys ingested via the cluster client. ------------
+    let mut cluster = LocalCluster::start(3, &cfg()).unwrap();
+    let mut cc = ClusterClient::connect(&cluster.addrs()).unwrap();
+    assert_eq!(cc.nodes(), 3);
+    for (i, d) in docs.iter().enumerate() {
+        cc.upsert(&format!("doc{i:03}"), d.clone()).unwrap();
+    }
+    // Every key landed on its rendezvous owner and nowhere else.
+    let sizes = cc.store_sizes();
+    let total: f64 = sizes.iter().map(|(_, s)| s.unwrap()).sum();
+    assert_eq!(total, N as f64, "partition sizes must sum to the corpus: {sizes:?}");
+    assert!(
+        sizes.iter().all(|(_, s)| s.unwrap() > 0.0),
+        "every node should own part of the corpus: {sizes:?}"
+    );
+
+    // ---- scatter-gather == brute-force single-store scan. ---------------
+    let brute = brute_force_topk(&query, &docs, LIMIT);
+    let (hits, stats) = cc.topk(&query, LIMIT).unwrap();
+    assert_eq!(hits, brute, "scatter-gather must rank exactly like a brute scan");
+    assert_eq!(hits[0].0, "doc000");
+    assert!((hits[0].1 - 1.0).abs() < 1e-12, "self-similarity must be 1: {hits:?}");
+    assert_eq!(stats.nodes, 3);
+    assert_eq!(stats.live, 3);
+    assert!(stats.candidates >= LIMIT && stats.reranked >= LIMIT, "{stats:?}");
+
+    // ---- cluster cardinality within the estimator's error bound. --------
+    let truth = 1500.0;
+    let items: Vec<(u64, f64)> = (0..truth as u64).map(|i| (i * 977 + 13, 1.0)).collect();
+    cc.push("pkts", &items).unwrap();
+    let est = cc.cardinality("pkts").unwrap();
+    // 5σ of the k-register estimator — generous but still meaningful.
+    let bound = 5.0 * cardinality_rel_std(K);
+    assert!(
+        (est - truth).abs() / truth < bound,
+        "cluster cardinality {est} vs truth {truth} (bound {bound})"
+    );
+
+    // ---- kill one node: typed write errors, degraded (non-panicking)
+    // ---- reads.
+    const VICTIM: usize = 2;
+    let victim_id = cc.node_id(VICTIM).to_string();
+    cluster.kill(VICTIM);
+    // A write routed to the dead partition is a typed NodeDown, naming it.
+    let dead_key = (0..)
+        .map(|i| format!("probe{i}"))
+        .find(|k| cc.owner(k) == VICTIM)
+        .unwrap();
+    match cc.upsert(&dead_key, docs[0].clone()) {
+        Err(ClusterError::NodeDown { node, .. }) => assert_eq!(node, victim_id),
+        other => panic!("expected NodeDown, got {other:?}"),
+    }
+    // Reads keep serving with degraded coverage: the surviving partitions'
+    // brute ranking, which is the full ranking minus the dead node's keys.
+    let (degraded, stats) = cc.topk(&query, LIMIT).unwrap();
+    assert_eq!(stats.live, 2, "{stats:?}");
+    let survivors: Vec<(String, f64)> = {
+        let f = FastGm::new(K, SEED);
+        let qsk = f.sketch(&query);
+        let mut scored: Vec<(String, f64)> = docs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| (format!("doc{i:03}"), estimate_jp(&qsk, &f.sketch(d)).unwrap()))
+            .filter(|(key, _)| cc.owner(key) != VICTIM)
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        scored.truncate(LIMIT);
+        scored
+    };
+    assert_eq!(degraded, survivors, "degraded gather must equal the surviving union");
+    // Writes to live partitions still work.
+    let live_key = (0..)
+        .map(|i| format!("alive{i}"))
+        .find(|k| cc.owner(k) != VICTIM)
+        .unwrap();
+    cc.upsert(&live_key, docs[0].clone()).unwrap();
+    // Cardinality degrades (some partitions dark) but still answers.
+    let est = cc.cardinality("pkts").unwrap();
+    assert!(est > 0.0 && est < truth, "degraded estimate should undercount: {est}");
+
+    cluster.stop();
+}
+
+/// Property (a): scatter-gather over M nodes == single-node topk on the
+/// union store, hit-for-hit and score-for-score (both f64-exact — the
+/// central re-rank recomputes the identical deterministic estimator).
+#[test]
+fn scatter_gather_equals_single_node_union_topk() {
+    let mut r = SplitMix64::new(7);
+    let docs: Vec<SparseVector> = (0..60).map(|_| random_vec(&mut r, 25, 4000)).collect();
+    let queries: Vec<SparseVector> = (0..6).map(|_| random_vec(&mut r, 25, 4000)).collect();
+
+    // Reference: one node holding the whole corpus.
+    let single = Coordinator::new(cfg()).unwrap();
+    for (i, d) in docs.iter().enumerate() {
+        let resp = single.call(Request::Upsert {
+            key: format!("doc{i:03}"),
+            vector: d.clone(),
+        });
+        assert!(matches!(resp, Response::Ack { .. }), "{resp:?}");
+    }
+
+    for m in [1usize, 2, 3, 5] {
+        let cluster = LocalCluster::start(m, &cfg()).unwrap();
+        let mut cc = ClusterClient::connect(&cluster.addrs()).unwrap();
+        for (i, d) in docs.iter().enumerate() {
+            cc.upsert(&format!("doc{i:03}"), d.clone()).unwrap();
+        }
+        for (qi, q) in queries.iter().enumerate() {
+            let Response::TopK { hits: want } =
+                single.call(Request::TopK { vector: q.clone(), limit: 8 })
+            else {
+                panic!("expected topk")
+            };
+            let (got, stats) = cc.topk(q, 8).unwrap();
+            assert_eq!(
+                got, want,
+                "query {qi} over {m} nodes diverged from the union store ({stats:?})"
+            );
+        }
+        cluster.stop();
+    }
+    single.shutdown();
+}
+
+/// Property (b): the merged cluster sketch — per-site stream sketches
+/// fetched as codec blobs and merge_tree'd — is bit-identical to one
+/// Stream-FastGM run over the concatenated stream (§2.3 across the wire).
+#[test]
+fn merged_cluster_stream_sketch_is_bit_identical_to_concatenated_stream() {
+    let mut r = SplitMix64::new(99);
+    for m in [1usize, 2, 4] {
+        let cluster = LocalCluster::start(m, &cfg()).unwrap();
+        let mut cc = ClusterClient::connect(&cluster.addrs()).unwrap();
+        // Unique element ids with varied weights; pushed in chunks so
+        // per-site streams interleave arbitrarily.
+        let items: Vec<(u64, f64)> =
+            (0..800u64).map(|i| (i * 6_364_136 + 11, r.next_f64() + 0.05)).collect();
+        for chunk in items.chunks(97) {
+            cc.push("s", chunk).unwrap();
+        }
+        let merged = cc.merged_stream_sketch("s").unwrap();
+        let mut reference = StreamFastGm::new(K, SEED);
+        for &(id, w) in &items {
+            reference.push(id, w);
+        }
+        assert_eq!(
+            merged,
+            reference.sketch(),
+            "merge over {m} sites must be bit-identical to the concatenated stream"
+        );
+        cluster.stop();
+    }
+}
+
+/// A typo'd stream on a healthy cluster is a gather error naming the
+/// stream — not a spurious "no live nodes" outage report.
+#[test]
+fn unknown_stream_on_healthy_cluster_is_not_an_outage() {
+    let cluster = LocalCluster::start(2, &cfg()).unwrap();
+    let mut cc = ClusterClient::connect(&cluster.addrs()).unwrap();
+    let err = cc.cardinality("nope").unwrap_err();
+    assert!(matches!(err, ClusterError::Gather(_)), "got {err:?}");
+    assert!(err.to_string().contains("'nope' not found"), "{err}");
+    cluster.stop();
+}
+
+/// The handshake refuses to form a cluster out of incompatible nodes.
+#[test]
+fn connect_rejects_mismatched_node_configs() {
+    let a = LocalCluster::start(1, &cfg()).unwrap();
+    let b = LocalCluster::start(
+        1,
+        &CoordinatorConfig { k: 64, node_id: "other".into(), ..cfg() },
+    )
+    .unwrap();
+    let addrs: Vec<String> = a.addrs().into_iter().chain(b.addrs()).collect();
+    let err = ClusterClient::connect(&addrs).unwrap_err().to_string();
+    assert!(err.contains("config mismatch"), "{err}");
+    // And duplicate identities are rejected even with matching configs.
+    let c = LocalCluster::start(1, &cfg()).unwrap();
+    let dup: Vec<String> = a.addrs().into_iter().chain(c.addrs()).collect();
+    let err = ClusterClient::connect(&dup).unwrap_err().to_string();
+    assert!(err.contains("duplicate node id"), "{err}");
+
+    // reconnect() re-checks the formation config: a node rejoining under
+    // the same identity but a changed sketch config is refused up front,
+    // not discovered query-by-query as gather errors.
+    let mut cc = ClusterClient::connect(&a.addrs()).unwrap();
+    let imposter = LocalCluster::start(
+        1,
+        &CoordinatorConfig { k: 64, ..cfg() }, // same "acc-0" id, different k
+    )
+    .unwrap();
+    let err = cc.reconnect(0, imposter.addr(0)).unwrap_err().to_string();
+    assert!(err.contains("rejoined with"), "{err}");
+    // A same-config rejoin is accepted (here: the original node itself).
+    cc.reconnect(0, a.addr(0)).unwrap();
+    imposter.stop();
+    a.stop();
+    b.stop();
+    c.stop();
+}

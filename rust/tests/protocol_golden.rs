@@ -35,13 +35,25 @@ const ALL_REQUEST_OPS: &[&str] = &[
     "store_stats",
     "snapshot",
     "restore",
+    "hello",
+    "sketch_fetch",
     "metrics",
     "ping",
 ];
 
 /// Every response type. Same rule as [`ALL_REQUEST_OPS`].
-const ALL_RESPONSE_TYPES: &[&str] =
-    &["sketch", "ack", "estimate", "topk", "metrics", "stats", "error", "pong"];
+const ALL_RESPONSE_TYPES: &[&str] = &[
+    "sketch",
+    "ack",
+    "estimate",
+    "topk",
+    "metrics",
+    "stats",
+    "hello",
+    "sketch_blob",
+    "error",
+    "pong",
+];
 
 fn golden_lines(text: &str) -> Vec<&str> {
     text.lines().map(str::trim).filter(|l| !l.is_empty()).collect()
@@ -138,6 +150,15 @@ fn golden_values_decode_losslessly() {
         panic!("golden line 16 must be a snapshot request")
     };
     assert_eq!(path, "/tmp/fgm.fgms");
+
+    // The cluster handshake/gather ops sit just before the trailing
+    // algo-bearing sketch line.
+    assert_eq!(decode_request(lines[18]).unwrap(), Request::Hello);
+    let Request::SketchFetch { name, source } = decode_request(lines[19]).unwrap() else {
+        panic!("golden line 19 must be a sketch_fetch request")
+    };
+    assert_eq!(name, "doc1");
+    assert_eq!(source, fastgm::coordinator::protocol::SketchSource::Store);
 
     let resp_lines = golden_lines(RESPONSES);
     let Response::Sketch { sketch, .. } = decode_response(resp_lines[0]).unwrap() else {
