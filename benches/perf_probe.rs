@@ -100,6 +100,53 @@ fn main() {
         }
     }
 
+    // Cluster routing hot path: every upsert/delete/push/gather computes
+    // HRW owners. The Partitioner hashes each node-id string exactly once
+    // at construction and only mixes the precomputed 64-bit digests per
+    // call; `cluster.owner_naive_ns` is the rehash-per-call strawman
+    // (token_id over every node-id string on every owner() call) that a
+    // straightforward implementation would ship, kept here so the win
+    // stays visible in every `--json` summary.
+    {
+        use fastgm::coordinator::cluster::Partitioner;
+        use fastgm::util::hash::{mix2, token_id};
+        let node_ids: Vec<String> = (0..8).map(|i| format!("site-{i}")).collect();
+        let p = Partitioner::new(&node_ids).unwrap();
+        let keys: Vec<String> = (0..256).map(|i| format!("doc{i:05}")).collect();
+        let mut at = 0usize;
+        suite.record(b.run("cluster.owner_ns", || {
+            at = (at + 1) % keys.len();
+            p.owner(&keys[at])
+        }));
+        let naive_owner = |key: &str| -> usize {
+            let id = token_id(key);
+            let mut best = 0usize;
+            let mut best_w = u64::MIN;
+            for (i, node) in node_ids.iter().enumerate() {
+                let w = mix2(token_id(node), id);
+                if i == 0 || w > best_w {
+                    best = i;
+                    best_w = w;
+                }
+            }
+            best
+        };
+        let mut at2 = 0usize;
+        suite.record(b.run("cluster.owner_naive_ns", || {
+            at2 = (at2 + 1) % keys.len();
+            naive_owner(&keys[at2])
+        }));
+        // Replica sets pay a small top-R selection on top of the mixes.
+        let mut at3 = 0usize;
+        suite.record(b.run("cluster.owners_r2_ns", || {
+            at3 = (at3 + 1) % keys.len();
+            p.owners(&keys[at3], 2)
+        }));
+        if let Some(sp) = suite.speedup("cluster.owner_naive_ns", "cluster.owner_ns") {
+            println!("  -> precomputed node digests vs rehash-per-call at 8 nodes: {sp:.2}x");
+        }
+    }
+
     let stream = generate(&mut rng, 1000, 1.0, WeightDist::Uniform01, 0);
     for k in [256usize, 1024] {
         suite.record(b.run(&format!("stream-fastgm/n1000/k{k}"), || {

@@ -1,0 +1,230 @@
+//! REPLICATED CLUSTER SERVING, END TO END: three real nodes, R=2, one
+//! client — the "one dead node is invisible" story.
+//!
+//!   1. spawn a 3-node local cluster (real TCP on loopback), connect the
+//!      `ClusterClient` at replication R=2, write quorum W=1: every key
+//!      and stream partition lives on its HRW top-2 owners,
+//!   2. ingest a corpus (each upsert acks from both replicas) and a
+//!      weighted stream; record the exact `topk` rankings and the merged
+//!      cardinality sketch of the healthy cluster,
+//!   3. **kill one node** and show replication at work: `topk` rankings
+//!      and the merged stream sketch are IDENTICAL to the healthy
+//!      cluster's — not degraded — while quorum writes keep landing on
+//!      the surviving replicas (and a W=2 quorum correctly reports
+//!      `QuorumLost`, naming the dead node),
+//!   4. restart the node **cold** (empty store, empty streams) and run
+//!      `cluster repair`: the anti-entropy walk diffs `(key, version)`
+//!      pages across the replica sets, streams codec blobs onto the cold
+//!      node (last-writer-wins), and §2.3-merges the stream states,
+//!   5. verify convergence: every key's version and registers are
+//!      bit-identical across its replica set, the downtime writes
+//!      included, and the cluster again answers with the exact healthy
+//!      rankings at full quorum.
+//!
+//! Runs offline in seconds; CI uses it as the replication smoke test.
+//!
+//! ```bash
+//! cargo run --release --example replicated_serve
+//! ```
+
+use fastgm::coordinator::client::Client;
+use fastgm::coordinator::cluster::{ClusterClient, ClusterError, LocalCluster, ReplicaConfig};
+use fastgm::coordinator::protocol::SketchSource;
+use fastgm::coordinator::service::CoordinatorConfig;
+use fastgm::data::corpus::Corpus;
+use fastgm::sketch::SparseVector;
+use fastgm::util::rng::SplitMix64;
+use std::time::Instant;
+
+const NODES: usize = 3;
+const N_DOCS: usize = 180;
+const K: usize = 128;
+const SEED: u64 = 42;
+const QUERIES: usize = 12;
+const LIMIT: usize = 5;
+const STREAM_N: u64 = 1500;
+
+fn config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        k: K,
+        seed: SEED,
+        workers: 2,
+        node_id: "site".into(),
+        ..Default::default()
+    }
+}
+
+/// Keep ~`keep` of the doc's mass, replace the rest with fresh ids.
+fn perturb(rng: &mut SplitMix64, v: &SparseVector, keep: f64) -> SparseVector {
+    let mut out = SparseVector::default();
+    for (id, w) in v.positive() {
+        if rng.next_f64() < keep {
+            out.push(id, w);
+        } else {
+            out.push(rng.next_u64() | (1 << 63), w);
+        }
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    fastgm::util::logger::init();
+
+    // ---- Phase 1: spawn, connect at R=2 W=1. ----------------------------
+    let mut cluster = LocalCluster::start(NODES, &config())?;
+    let mut cc = ClusterClient::connect_with(
+        &cluster.addrs(),
+        ReplicaConfig { replication: 2, write_quorum: 1 },
+    )?;
+    println!(
+        "cluster up: {} nodes, replication R={} write-quorum W={}",
+        cc.nodes(),
+        cc.replication().replication,
+        cc.replication().write_quorum,
+    );
+    for i in 0..cc.nodes() {
+        let h = cc.hello(i);
+        println!("  {} @ {} (protocol v{}, epoch {})", h.node, cc.addr(i), h.protocol, h.epoch);
+    }
+
+    // ---- Phase 2: replicated ingest + healthy baselines. ----------------
+    let corpus = Corpus::by_name("real-sim", 7).expect("real-sim corpus analog");
+    let docs: Vec<SparseVector> = corpus.vectors(N_DOCS);
+    let t0 = Instant::now();
+    for (i, d) in docs.iter().enumerate() {
+        let info = cc.upsert(&format!("doc{i:03}"), d.clone())?;
+        anyhow::ensure!(info.contains("(2/2 replicas)"), "healthy ack: {info}");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let sizes = cc.store_sizes();
+    let total: f64 = sizes.iter().filter_map(|(_, s)| *s).sum();
+    println!(
+        "upserted {N_DOCS} docs x2 replicas in {dt:.2}s ({:.0} docs/s), occupancy: {sizes:?}",
+        N_DOCS as f64 / dt,
+    );
+    anyhow::ensure!(
+        total == (2 * N_DOCS) as f64,
+        "R=2 must store every key exactly twice: {total} vs {}",
+        2 * N_DOCS
+    );
+    let items: Vec<(u64, f64)> = (0..STREAM_N).map(|i| (i * 977 + 13, 1.0)).collect();
+    cc.push("pkts", &items)?;
+
+    let mut rng = SplitMix64::new(2024);
+    let query_vecs: Vec<SparseVector> = (0..QUERIES)
+        .map(|_| {
+            let t = rng.next_range(0, N_DOCS - 1);
+            perturb(&mut rng, &docs[t], 0.9)
+        })
+        .collect();
+    let mut healthy = Vec::with_capacity(QUERIES);
+    for q in &query_vecs {
+        healthy.push(cc.topk(q, LIMIT)?.0);
+    }
+    let healthy_sketch = cc.merged_stream_sketch("pkts")?;
+    let healthy_card = cc.cardinality("pkts")?;
+    println!(
+        "healthy baselines: {QUERIES} top-{LIMIT} rankings, cardinality {healthy_card:.1} \
+         (truth {STREAM_N})"
+    );
+
+    // ---- Phase 3: kill one node — reads stay IDENTICAL. -----------------
+    const VICTIM: usize = 1;
+    let victim_id = cc.node_id(VICTIM).to_string();
+    println!("killing {victim_id} ...");
+    cluster.kill(VICTIM);
+    for (qi, q) in query_vecs.iter().enumerate() {
+        let (hits, stats) = cc.topk(q, LIMIT)?;
+        anyhow::ensure!(stats.live == NODES - 1, "{stats:?}");
+        anyhow::ensure!(hits == healthy[qi], "query {qi}: rankings drifted with one node down");
+    }
+    anyhow::ensure!(
+        cc.merged_stream_sketch("pkts")? == healthy_sketch,
+        "merged stream sketch must be bit-identical with one replica down"
+    );
+    println!("one node down: all {QUERIES} rankings + cardinality sketch IDENTICAL ✓");
+
+    // Writes: W=1 keeps the cluster writable through the outage ...
+    let downtime_key = (0..)
+        .map(|i| format!("downtime{i}"))
+        .find(|k| cc.owners(k).contains(&VICTIM))
+        .expect("some key owned by the victim");
+    let filler = SparseVector::new(
+        (0..12u64).map(|j| 900_000_000_000 + j).collect(),
+        (0..12).map(|_| 1.0).collect(),
+    );
+    let info = cc.upsert(&downtime_key, filler.clone())?;
+    anyhow::ensure!(info.contains("(1/2 replicas)"), "degraded ack: {info}");
+    println!("downtime write '{downtime_key}' → {info} ✓");
+    // ... while a W=2 quorum correctly refuses, naming the dead node.
+    cc.set_write_quorum(2)?;
+    match cc.upsert(&downtime_key, filler) {
+        Err(ClusterError::QuorumLost { acked, want, down, .. }) => {
+            anyhow::ensure!(down == vec![victim_id.clone()], "down list: {down:?}");
+            println!("W=2 write → typed QuorumLost ({acked}/{want}, down: {down:?}) ✓");
+        }
+        other => anyhow::bail!("expected QuorumLost at W=2, got {other:?}"),
+    }
+    cc.set_write_quorum(1)?;
+
+    // ---- Phase 4: cold restart + anti-entropy repair. -------------------
+    cluster.restart(VICTIM)?;
+    cc.reconnect(VICTIM, cluster.addr(VICTIM))?;
+    let t0 = Instant::now();
+    let report = cc.repair(&["pkts".to_string()])?;
+    println!(
+        "repair in {:.0} ms: {} keys scanned, {} replica installs, {} skipped, {} stream merges",
+        t0.elapsed().as_secs_f64() * 1e3,
+        report.keys_scanned,
+        report.keys_healed,
+        report.keys_skipped,
+        report.stream_merges,
+    );
+    anyhow::ensure!(report.keys_healed > 0, "a cold node must need healing");
+
+    // ---- Phase 5: convergence, bit for bit. -----------------------------
+    let mut direct: Vec<Client> = (0..NODES)
+        .map(|i| Client::connect(cluster.addr(i)))
+        .collect::<anyhow::Result<_>>()?;
+    let mut checked = 0usize;
+    for i in 0..NODES {
+        for (key, version) in cc.node_keys(i)? {
+            let owners = cc.owners(&key);
+            let copies: Vec<_> = owners
+                .iter()
+                .map(|&o| direct[o].sketch_fetch_versioned(&key, SketchSource::Store))
+                .collect::<anyhow::Result<_>>()?;
+            for (v, sk) in &copies[1..] {
+                anyhow::ensure!(
+                    (*v, sk) == (copies[0].0, &copies[0].1),
+                    "'{key}' (v{version}) diverged across its replica set"
+                );
+            }
+            checked += 1;
+        }
+    }
+    println!("verified {checked} (key, replica-set) version+register convergences ✓");
+    for d in direct.iter_mut() {
+        anyhow::ensure!(
+            d.sketch_fetch("pkts", SketchSource::Stream)? == healthy_sketch,
+            "stream state did not converge to the §2.3 union"
+        );
+    }
+    // The downtime write reached the healed node too.
+    let (v_down, _) = direct[VICTIM].sketch_fetch_versioned(&downtime_key, SketchSource::Store)?;
+    println!("downtime write '{downtime_key}' healed onto {victim_id} @v{v_down} ✓");
+
+    // Healthy answers, full quorum, all over again.
+    for (qi, q) in query_vecs.iter().enumerate() {
+        let (hits, stats) = cc.topk(q, LIMIT)?;
+        anyhow::ensure!(stats.live == NODES && hits == healthy[qi], "query {qi} after repair");
+    }
+    cc.set_write_quorum(2)?;
+    let info = cc.upsert("post-repair", docs[0].clone())?;
+    anyhow::ensure!(info.contains("(2/2 replicas)"), "{info}");
+    println!("post-repair: rankings identical, W=2 writes back ({info}) ✓");
+
+    cluster.stop();
+    println!("\nreplicated_serve OK");
+    Ok(())
+}

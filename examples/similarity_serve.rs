@@ -72,7 +72,11 @@ fn main() -> anyhow::Result<()> {
         let reqs: Vec<Request> = chunk
             .iter()
             .enumerate()
-            .map(|(j, d)| Request::Upsert { key: format!("doc{}", base + j), vector: d.clone() })
+            .map(|(j, d)| Request::Upsert {
+                key: format!("doc{}", base + j),
+                vector: d.clone(),
+                version: None,
+            })
             .collect();
         for r in client.call_pipelined(&reqs)? {
             anyhow::ensure!(matches!(r, Response::Ack { .. }), "upsert failed: {r:?}");

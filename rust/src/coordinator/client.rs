@@ -91,9 +91,46 @@ impl Client {
 
     // -- typed keyed-store helpers ---------------------------------------
 
-    /// Upsert `vector` into the keyed store under `key`.
+    /// Upsert `vector` into the keyed store under `key` (store-assigned
+    /// next version).
     pub fn upsert(&mut self, key: &str, vector: SparseVector) -> anyhow::Result<String> {
-        self.call_ack(&Request::Upsert { key: key.to_string(), vector })
+        self.call_ack(&Request::Upsert { key: key.to_string(), vector, version: None })
+    }
+
+    /// Upsert at an explicit write version: installs iff strictly newer
+    /// than the held copy (last-writer-wins), acks "kept" otherwise.
+    pub fn upsert_versioned(
+        &mut self,
+        key: &str,
+        vector: SparseVector,
+        version: u64,
+    ) -> anyhow::Result<String> {
+        self.call_ack(&Request::Upsert { key: key.to_string(), vector, version: Some(version) })
+    }
+
+    /// One `(key, version)` page of the store's sorted key walk — pass the
+    /// last key back as `after` to continue.
+    pub fn store_keys(
+        &mut self,
+        after: Option<&str>,
+        limit: usize,
+    ) -> anyhow::Result<Vec<(String, u64)>> {
+        let req = Request::StoreKeys { after: after.map(str::to_string), limit };
+        match self.call(&req)? {
+            Response::Keys { keys } => Ok(keys),
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected keys, got {other:?}"),
+        }
+    }
+
+    /// Install a codec blob (key + version inside) under last-writer-wins.
+    pub fn store_put(&mut self, data: &str) -> anyhow::Result<String> {
+        self.call_ack(&Request::StorePut { data: data.to_string() })
+    }
+
+    /// Merge a codec blob into the named live stream state (§2.3 repair).
+    pub fn stream_merge(&mut self, stream: &str, data: &str) -> anyhow::Result<String> {
+        self.call_ack(&Request::StreamMerge { stream: stream.to_string(), data: data.to_string() })
     }
 
     /// Delete `key` from the keyed store (idempotent).
@@ -152,14 +189,24 @@ impl Client {
         name: &str,
         source: SketchSource,
     ) -> anyhow::Result<GumbelMaxSketch> {
+        Ok(self.sketch_fetch_versioned(name, source)?.1)
+    }
+
+    /// [`Client::sketch_fetch`] keeping the blob's write version (store
+    /// source; 0 for registry/stream sketches).
+    pub fn sketch_fetch_versioned(
+        &mut self,
+        name: &str,
+        source: SketchSource,
+    ) -> anyhow::Result<(u64, GumbelMaxSketch)> {
         match self.call(&Request::SketchFetch { name: name.to_string(), source })? {
             Response::SketchBlob { name: got, data } => {
-                let (key, sk) = codec::decode_sketch_hex(&data)?;
+                let (key, version, sk) = codec::decode_sketch_hex(&data)?;
                 anyhow::ensure!(
                     got == name && key == name,
                     "sketch_fetch for '{name}' answered with '{got}' (blob key '{key}')"
                 );
-                Ok(sk)
+                Ok((version, sk))
             }
             Response::Error { message } => anyhow::bail!("{message}"),
             other => anyhow::bail!("expected sketch_blob, got {other:?}"),
@@ -245,10 +292,19 @@ mod tests {
         let mut client = Client::connect(&server.addr.to_string()).unwrap();
         let v = SparseVector::new(vec![1, 2], vec![1.0, 0.5]);
         assert!(client.upsert("a", v.clone()).unwrap().contains("upserted"));
-        let hits = client.topk(v, 1).unwrap();
+        let hits = client.topk(v.clone(), 1).unwrap();
         assert_eq!(hits[0].0, "a");
         let stats = client.store_stats().unwrap();
         assert_eq!(stats.get("size").and_then(|x| x.as_f64()), Some(1.0));
+        // The repair surface: key walk, LWW versioned writes, blob install.
+        assert_eq!(client.store_keys(None, 10).unwrap(), vec![("a".to_string(), 1)]);
+        assert!(client.upsert_versioned("a", v.clone(), 7).unwrap().contains("@v7"));
+        assert!(client.upsert_versioned("a", v, 3).unwrap().contains("kept"));
+        let (version, sk) = client.sketch_fetch_versioned("a", SketchSource::Store).unwrap();
+        assert_eq!(version, 7);
+        let blob = codec::encode_sketch_hex("a", 12, &sk);
+        assert!(client.store_put(&blob).unwrap().contains("installed 'a' @v12"));
+        assert_eq!(client.store_keys(Some("a"), 10).unwrap(), vec![]);
         assert!(client.delete("a").unwrap().contains("deleted"));
         // Server-side error replies surface as Err, not as a panic.
         assert!(client.restore("/no/such/file.fgms").is_err());

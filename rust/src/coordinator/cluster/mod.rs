@@ -1,37 +1,48 @@
-//! Cluster-sharded serving: the fan-out layer on top of the node core.
+//! Replicated cluster serving: the fan-out layer on top of the node core.
 //!
 //! The paper's §2.3 mergeability is what makes Gumbel-Max sketches
-//! distributable: per-site sketches merge register-wise into exactly the
-//! sketch of the union, bit for bit. This module turns that property into
-//! a serving topology — the many-sites/central-estimator deployment of
-//! Qi et al. (WWW'20) and the partition-then-reduce retrieval of Mussmann
-//! et al. (2017):
+//! distributable AND replicable: per-site sketches merge register-wise
+//! into exactly the sketch of the union, bit for bit, and replays are
+//! idempotent — so replicas converge by merge with no coordination. This
+//! module turns that property into a serving topology — the many-sites/
+//! central-estimator deployment of Qi et al. (WWW'20) and the
+//! partition-then-reduce retrieval of Mussmann et al. (2017), hardened
+//! with HRW replica sets:
 //!
 //! * [`Partitioner`] — rendezvous (highest-random-weight) hashing from
-//!   store keys / stream element ids to node indices. Stable under node-set
-//!   changes: removing one node only remaps the keys it owned.
-//! * [`ClusterClient`] — the scatter-gather router. Routes `upsert`/
-//!   `delete` to the owning node, fans `topk` out to every live node
-//!   (per-node LSH candidates → central `estimate_jp` re-rank over
-//!   codec-fetched sketches → global k), partitions stream pushes by
-//!   element id, and computes cluster-wide weighted cardinality by
-//!   `merge_tree`-ing per-site stream sketches fetched through
-//!   [`crate::sketch::codec`].
+//!   store keys / stream element ids to **replica sets** (`owners(key,
+//!   r)`: the top-R of each key's HRW ranking — prefix-stable in R,
+//!   minimal-disruption under node-set changes: removing one node only
+//!   promotes each affected key's standby).
+//! * [`ClusterClient`] — the replication-aware scatter-gather router.
+//!   Fans `upsert`/`delete`/stream `push` out to all R owners under a
+//!   configurable write quorum W ([`ReplicaConfig`]; under-quorum writes
+//!   are a typed [`ClusterError::QuorumLost`] naming the down nodes),
+//!   answers `topk` by per-node LSH candidates → highest-**version**
+//!   codec blob per candidate → central `estimate_jp` re-rank → global k
+//!   (with failover to surviving replicas), computes cluster-wide
+//!   weighted cardinality by `merge_tree`-ing per-site stream sketches,
+//!   and heals diverged replicas with [`ClusterClient::repair`] — the
+//!   anti-entropy walk (`store_keys` version diff → `store_put` blob
+//!   streaming → `stream_merge` union merges).
 //! * [`LocalCluster`] — an in-process harness spawning N real TCP nodes on
-//!   loopback (the `fastgm cluster serve` CLI, `examples/cluster_serve.rs`
-//!   and the acceptance tests all drive it).
+//!   loopback (the `fastgm cluster serve` CLI, the examples and the
+//!   acceptance tests all drive it).
 //!
-//! Failure domains: every node is its own. A dead node degrades `topk`
-//! coverage (its partition's candidates vanish, the gather still answers)
-//! and fails *writes to its partition* with a typed
-//! [`ClusterError::NodeDown`] — it never wedges or panics the gather, and
-//! a gather over zero live nodes is [`ClusterError::NoLiveNodes`], backed
-//! by [`crate::sketch::MergeError::EmptyMerge`] at the merge layer.
+//! Failure domains: every node is its own. At R ≥ 2, W = 1, one dead
+//! node is **invisible**: reads and writes keep their exact healthy-
+//! cluster answers (every partition has a live replica, and §2.3 merges
+//! make replicated stream coverage bit-identical). At R = 1 a dead node
+//! degrades `topk` coverage and fails writes to its partition with a
+//! typed [`ClusterError::NodeDown`] — it never wedges or panics the
+//! gather, and a gather over zero live nodes is
+//! [`ClusterError::NoLiveNodes`], backed by
+//! [`crate::sketch::MergeError::EmptyMerge`] at the merge layer.
 
 mod client;
 mod harness;
 mod partitioner;
 
-pub use client::{ClusterClient, ClusterError, GatherStats};
+pub use client::{ClusterClient, ClusterError, GatherStats, RepairReport, ReplicaConfig};
 pub use harness::LocalCluster;
 pub use partitioner::Partitioner;

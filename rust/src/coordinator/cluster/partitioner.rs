@@ -1,17 +1,35 @@
-//! Rendezvous (highest-random-weight) partitioning of keys onto nodes.
+//! Rendezvous (highest-random-weight) partitioning of keys onto nodes,
+//! generalized to **replica sets**: the R owners of a key are the R nodes
+//! with the largest `(node, key)` hashes — the prefix of the key's full
+//! HRW ranking.
 //!
-//! Every key is owned by the node whose `(node, key)` hash is largest.
 //! Unlike modulo partitioning, membership changes are minimal: removing a
 //! node only remaps the keys that node owned, and adding one steals an
 //! ~`1/(n+1)` fraction from everyone — no ring maintenance, no
 //! virtual-node bookkeeping, deterministic from the node-id list alone
 //! (every client that knows the same ids computes the same owners).
+//!
+//! Replica sets inherit both properties *for free* from the ranking view:
+//!
+//! * **prefix stability** — `owners(key, r)` is literally the first `r`
+//!   entries of one fixed ranking, so raising R only *appends* owners
+//!   (no existing replica ever moves), and `owner()` is `owners(_, 1)`;
+//! * **standby promotion** — removing a node deletes it from every
+//!   ranking it appears in without reordering the survivors, so a key
+//!   only changes its replica set if the removed node was in it, and the
+//!   only change is its standby (the old rank-R+1 node) stepping in.
+//!
+//! Node-id strings are hashed exactly once, at construction; every
+//! `owner`/`owners` call afterwards only mixes the precomputed per-node
+//! digest with the key hash (`benches/perf_probe.rs` tracks this as
+//! `cluster.owner_ns` next to a rehash-per-call baseline).
 
 use crate::util::hash::{mix2, token_id};
 
 #[derive(Debug, Clone)]
 pub struct Partitioner {
-    /// `token_id` of each node id, in cluster order.
+    /// Precomputed 64-bit digest (`token_id`) of each node id, in cluster
+    /// order — the only thing `owners_of_id` ever touches per call.
     node_tokens: Vec<u64>,
 }
 
@@ -34,15 +52,12 @@ impl Partitioner {
         self.node_tokens.len()
     }
 
-    /// Owning node index for a store key.
+    /// Primary owner of a store key (`owners(key, 1)[0]`).
     pub fn owner(&self, key: &str) -> usize {
         self.owner_of_id(token_id(key))
     }
 
-    /// Owning node index for a stream element id. Routing streams by
-    /// element id keeps every occurrence of an element on one site, which
-    /// is exactly the disjoint-support case of §2.3: the per-site stream
-    /// sketches merge bit-identically to the sketch of the whole stream.
+    /// Primary owner for a stream element id.
     pub fn owner_of_id(&self, id: u64) -> usize {
         let mut best = 0usize;
         let mut best_w = u64::MIN;
@@ -56,6 +71,38 @@ impl Partitioner {
             }
         }
         best
+    }
+
+    /// The replica set of a store key: the top-`r` node indices of the
+    /// key's HRW ranking (weight desc, index asc on ties). `r` is clamped
+    /// to the cluster size; `r == 0` is rejected as a caller bug.
+    pub fn owners(&self, key: &str, r: usize) -> Vec<usize> {
+        self.owners_of_id(token_id(key), r)
+    }
+
+    /// Replica set for a stream element id. Routing streams by element id
+    /// keeps every occurrence of an element on the same `r` sites, which
+    /// is exactly the §2.3 merge-friendly layout: per-site stream sketches
+    /// of any covering subset of replicas merge bit-identically to the
+    /// sketch of the whole stream (re-occurrences are idempotent).
+    pub fn owners_of_id(&self, id: u64, r: usize) -> Vec<usize> {
+        assert!(r >= 1, "replica sets need at least one owner");
+        let r = r.min(self.node_tokens.len());
+        // Insertion-sorted top-r: n and r are both small (cluster sizes,
+        // replication factors), so this beats sorting the full ranking.
+        let mut top: Vec<(u64, usize)> = Vec::with_capacity(r + 1);
+        for (i, &tok) in self.node_tokens.iter().enumerate() {
+            let w = mix2(tok, id);
+            // `>=` places an equal weight AFTER the ones already kept:
+            // indices ascend during the scan, so ties rank index-asc —
+            // the same deterministic order every client computes.
+            let pos = top.partition_point(|&(tw, _)| tw >= w);
+            if pos < r {
+                top.insert(pos, (w, i));
+                top.truncate(r);
+            }
+        }
+        top.into_iter().map(|(_, i)| i).collect()
     }
 }
 
@@ -130,5 +177,76 @@ mod tests {
         assert!(Partitioner::new(&[]).is_err());
         assert!(Partitioner::new(&["a".into(), "b".into(), "a".into()]).is_err());
         assert_eq!(Partitioner::new(&ids(1)).unwrap().owner("anything"), 0);
+    }
+
+    #[test]
+    fn replica_sets_are_distinct_and_led_by_the_owner() {
+        let p = Partitioner::new(&ids(5)).unwrap();
+        for i in 0..500 {
+            let key = format!("doc{i}");
+            for r in 1..=5 {
+                let owners = p.owners(&key, r);
+                assert_eq!(owners.len(), r);
+                let mut uniq = owners.clone();
+                uniq.sort_unstable();
+                uniq.dedup();
+                assert_eq!(uniq.len(), r, "'{key}' r={r}: duplicate owners {owners:?}");
+                assert_eq!(owners[0], p.owner(&key), "rank 1 must be the primary");
+            }
+        }
+    }
+
+    #[test]
+    fn replica_sets_are_prefix_stable_in_r() {
+        let p = Partitioner::new(&ids(5)).unwrap();
+        for i in 0..500 {
+            let key = format!("doc{i}");
+            let full = p.owners(&key, 5);
+            for r in 1..5 {
+                assert_eq!(
+                    p.owners(&key, r),
+                    full[..r],
+                    "'{key}': owners({r}) is not a prefix of owners(5)"
+                );
+            }
+        }
+    }
+
+    /// Removing a node from the membership only promotes its standby into
+    /// the replica sets it was part of — survivors never reshuffle.
+    #[test]
+    fn removing_a_node_only_promotes_its_standby() {
+        const R: usize = 2;
+        let all = ids(4);
+        let p4 = Partitioner::new(&all).unwrap();
+        let survivors: Vec<String> =
+            all.iter().filter(|id| *id != "node-1").cloned().collect();
+        let p3 = Partitioner::new(&survivors).unwrap();
+        for i in 0..1000 {
+            let key = format!("doc{i:04}");
+            let before: Vec<&String> = p4.owners(&key, R).into_iter().map(|o| &all[o]).collect();
+            let after: Vec<&String> =
+                p3.owners(&key, R).into_iter().map(|o| &survivors[o]).collect();
+            if !before.contains(&&"node-1".to_string()) {
+                assert_eq!(before, after, "'{key}' reshuffled without cause");
+            } else {
+                // The new set is the old rank-(R+1) ranking minus node-1,
+                // order preserved: survivors keep their ranks, the standby
+                // fills the vacated slot.
+                let want: Vec<&String> = p4
+                    .owners(&key, R + 1)
+                    .into_iter()
+                    .map(|o| &all[o])
+                    .filter(|id| *id != "node-1")
+                    .collect();
+                assert_eq!(after, want[..R], "'{key}' promoted the wrong standby");
+            }
+        }
+    }
+
+    #[test]
+    fn owners_clamps_r_to_the_cluster() {
+        let p = Partitioner::new(&ids(2)).unwrap();
+        assert_eq!(p.owners("x", 9).len(), 2);
     }
 }

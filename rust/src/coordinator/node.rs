@@ -433,16 +433,21 @@ impl Node {
                 Response::Sketch { name, sketch: sk }
             }
             Request::SketchFetch { name, source } => {
-                let sk = match source {
-                    SketchSource::Store => self.store.get(&name),
-                    SketchSource::Registry => self.registry.get_sketch(&name),
-                    SketchSource::Stream => self.registry.stream_sketch(&name),
+                // Store blobs carry the key's write version (the LWW
+                // tiebreaker replicas converge by); registry and stream
+                // sketches have no write history — their blobs say 0.
+                let (version, sk) = match source {
+                    SketchSource::Store => self.store.get_versioned(&name),
+                    SketchSource::Registry => self.registry.get_sketch(&name).map(|s| (0, s)),
+                    SketchSource::Stream => {
+                        self.registry.stream_sketch(&name).map(|s| (0, s))
+                    }
                 }
                 .ok_or_else(|| {
                     anyhow::anyhow!("no {} sketch named '{name}'", source.name())
                 })?;
                 self.metrics.incr("store.fetch");
-                let data = codec::encode_sketch_hex(&name, &sk);
+                let data = codec::encode_sketch_hex(&name, version, &sk);
                 Response::SketchBlob { name, data }
             }
             Request::Push { stream, items } => {
@@ -536,7 +541,7 @@ impl Node {
                         .collect(),
                 }
             }
-            Request::Upsert { key, vector } => {
+            Request::Upsert { key, vector, version } => {
                 // The store is queried with default-algo probes, so every
                 // entry is sketched with the default algo — the store can
                 // never hold a sketch a `topk` could not score.
@@ -551,9 +556,72 @@ impl Node {
                     key.len(),
                 );
                 let sk = self.sketch_sparse(&vector, None, scratch)?;
-                self.store.upsert(&key, sk);
                 self.metrics.incr("store.upsert");
-                Response::Ack { info: format!("upserted '{key}'") }
+                match version {
+                    None => {
+                        let v = self.store.upsert(&key, sk);
+                        Response::Ack { info: format!("upserted '{key}' @v{v}") }
+                    }
+                    Some(v) => match self.store.put_versioned(&key, v, sk) {
+                        Some(v) => Response::Ack { info: format!("upserted '{key}' @v{v}") },
+                        // Stale-by-version is a SUCCESSFUL no-op, not an
+                        // error: LWW means the write is superseded, and a
+                        // replica replaying old traffic must not alarm.
+                        None => Response::Ack {
+                            info: format!(
+                                "kept '{key}' @v{} (stale write v{v})",
+                                self.store.version_of(&key).unwrap_or(0),
+                            ),
+                        },
+                    },
+                }
+            }
+            Request::StoreKeys { after, limit } => {
+                anyhow::ensure!(limit >= 1, "store_keys needs a limit of at least 1");
+                self.metrics.incr("store.keys");
+                Response::Keys { keys: self.store.keys_page(after.as_deref(), limit) }
+            }
+            Request::StorePut { data } => {
+                self.ensure_lsh_capable()?;
+                let (key, version, sk) = codec::decode_sketch_hex(&data)?;
+                anyhow::ensure!(
+                    key.len() <= codec::MAX_KEY_LEN,
+                    "store keys are limited to {} bytes (got {})",
+                    codec::MAX_KEY_LEN,
+                    key.len(),
+                );
+                // Same gate as `restore`: only blobs at the serving
+                // config can enter the store (a repair peer at another
+                // (family, seed, k) must fail loudly, not index garbage).
+                anyhow::ensure!(
+                    sk.family == self.default_algo.family()
+                        && sk.seed == self.cfg.seed
+                        && sk.k() == self.cfg.k,
+                    "store_put blob '{key}' (family '{}', seed {}, k {}) does not match \
+                     the serving config (family '{}', seed {}, k {})",
+                    sk.family.name(),
+                    sk.seed,
+                    sk.k(),
+                    self.default_algo.family().name(),
+                    self.cfg.seed,
+                    self.cfg.k,
+                );
+                self.metrics.incr("store.put");
+                match self.store.put_versioned(&key, version, sk) {
+                    Some(v) => Response::Ack { info: format!("installed '{key}' @v{v}") },
+                    None => Response::Ack {
+                        info: format!(
+                            "kept '{key}' @v{} (stale blob v{version})",
+                            self.store.version_of(&key).unwrap_or(0),
+                        ),
+                    },
+                }
+            }
+            Request::StreamMerge { stream, data } => {
+                let (_, _, sk) = codec::decode_sketch_hex(&data)?;
+                self.registry.stream_merge(&stream, self.cfg.k, self.cfg.seed, &sk)?;
+                self.metrics.incr("stream.merge");
+                Response::Ack { info: format!("merged into stream '{stream}'") }
             }
             Request::Delete { key } => {
                 let existed = self.store.delete(&key);
@@ -700,7 +768,7 @@ mod tests {
         ));
         let path_str = path.to_string_lossy().to_string();
         let n = node();
-        n.execute_alloc(Request::Upsert { key: "a".into(), vector: vec1() });
+        n.execute_alloc(Request::Upsert { key: "a".into(), vector: vec1(), version: None });
         assert!(matches!(
             n.execute_alloc(Request::Snapshot { path: path_str.clone() }),
             Response::Ack { .. }
@@ -728,7 +796,7 @@ mod tests {
         let n = node();
         let v = vec1();
         // store / registry / stream each get a sketch under the same name.
-        n.execute_alloc(Request::Upsert { key: "x".into(), vector: v.clone() });
+        n.execute_alloc(Request::Upsert { key: "x".into(), vector: v.clone(), version: None });
         n.execute_alloc(Request::Sketch { name: "x".into(), vector: v.clone(), algo: None });
         n.execute_alloc(Request::Push {
             stream: "x".into(),
@@ -741,8 +809,11 @@ mod tests {
                 panic!("expected blob for {source:?}")
             };
             assert_eq!(name, "x");
-            let (key, sk) = codec::decode_sketch_hex(&data).unwrap();
+            let (key, version, sk) = codec::decode_sketch_hex(&data).unwrap();
             assert_eq!(key, "x");
+            // Store blobs carry the write version; the other sources say 0.
+            let want_version = if source == SketchSource::Store { 1 } else { 0 };
+            assert_eq!(version, want_version, "{source:?}");
             assert_eq!(sk.k(), 64);
             assert_eq!(sk.seed, 42);
             assert_eq!(sk.family, Family::Ordered);
@@ -754,6 +825,114 @@ mod tests {
         });
         let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
         assert!(message.contains("no stream sketch named 'nope'"), "{message}");
+        n.shutdown();
+    }
+
+    /// The anti-entropy surface end to end on one node: versioned upserts,
+    /// the key walk, LWW blob installs and stream merges.
+    #[test]
+    fn repair_ops_walk_install_and_merge() {
+        let n = node();
+        let v = vec1();
+        // Two writes → version 2; an explicit stale write is a kept-ack.
+        for want in ["@v1", "@v2"] {
+            let Response::Ack { info } = n.execute_alloc(Request::Upsert {
+                key: "a".into(),
+                vector: v.clone(),
+                version: None,
+            }) else {
+                panic!("expected ack")
+            };
+            assert!(info.contains(want), "{info}");
+        }
+        let Response::Ack { info } = n.execute_alloc(Request::Upsert {
+            key: "a".into(),
+            vector: v.clone(),
+            version: Some(1),
+        }) else {
+            panic!("expected ack")
+        };
+        assert!(info.contains("kept 'a' @v2"), "{info}");
+        n.execute_alloc(Request::Upsert { key: "b".into(), vector: v.clone(), version: None });
+        // The key walk pages in order with versions.
+        let Response::Keys { keys } =
+            n.execute_alloc(Request::StoreKeys { after: None, limit: 10 })
+        else {
+            panic!("expected keys")
+        };
+        assert_eq!(keys, vec![("a".to_string(), 2), ("b".to_string(), 1)]);
+        let Response::Keys { keys } =
+            n.execute_alloc(Request::StoreKeys { after: Some("a".into()), limit: 10 })
+        else {
+            panic!("expected keys")
+        };
+        assert_eq!(keys, vec![("b".to_string(), 1)]);
+        assert!(matches!(
+            n.execute_alloc(Request::StoreKeys { after: None, limit: 0 }),
+            Response::Error { .. }
+        ));
+        // store_put: a newer blob installs, a stale one is kept, a blob at
+        // the wrong sketch config is a loud error.
+        let Response::SketchBlob { data, .. } = n.execute_alloc(Request::SketchFetch {
+            name: "a".into(),
+            source: SketchSource::Store,
+        }) else {
+            panic!("expected blob")
+        };
+        let (_, _, sk) = codec::decode_sketch_hex(&data).unwrap();
+        let newer = codec::encode_sketch_hex("a", 9, &sk);
+        let Response::Ack { info } = n.execute_alloc(Request::StorePut { data: newer }) else {
+            panic!("expected ack")
+        };
+        assert!(info.contains("installed 'a' @v9"), "{info}");
+        let stale = codec::encode_sketch_hex("a", 3, &sk);
+        let Response::Ack { info } = n.execute_alloc(Request::StorePut { data: stale }) else {
+            panic!("expected ack")
+        };
+        assert!(info.contains("kept 'a' @v9"), "{info}");
+        let wrong_cfg = codec::encode_sketch_hex(
+            "a",
+            99,
+            &crate::sketch::fastgm::FastGm::new(32, 42).sketch(&v),
+        );
+        let resp = n.execute_alloc(Request::StorePut { data: wrong_cfg });
+        let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+        assert!(message.contains("does not match"), "{message}");
+        assert!(matches!(
+            n.execute_alloc(Request::StorePut { data: "zz".into() }),
+            Response::Error { .. }
+        ));
+        // stream_merge: a peer's stream sketch is absorbed (§2.3), so the
+        // merged stream equals the union stream bit-identically.
+        n.execute_alloc(Request::Push { stream: "s".into(), items: vec![(1, 0.5)] });
+        let mut peer = crate::sketch::stream_fastgm::StreamFastGm::new(64, 42);
+        peer.push(2, 1.5);
+        let blob = codec::encode_sketch_hex("s", 0, &peer.sketch());
+        assert!(matches!(
+            n.execute_alloc(Request::StreamMerge { stream: "s".into(), data: blob }),
+            Response::Ack { .. }
+        ));
+        let Response::SketchBlob { data, .. } = n.execute_alloc(Request::SketchFetch {
+            name: "s".into(),
+            source: SketchSource::Stream,
+        }) else {
+            panic!("expected blob")
+        };
+        let (_, _, merged) = codec::decode_sketch_hex(&data).unwrap();
+        let mut union = crate::sketch::stream_fastgm::StreamFastGm::new(64, 42);
+        union.push(1, 0.5);
+        union.push(2, 1.5);
+        assert_eq!(merged, union.sketch());
+        // A mismatched-seed stream blob is refused.
+        let bad = codec::encode_sketch_hex(
+            "s",
+            0,
+            &crate::sketch::stream_fastgm::StreamFastGm::new(64, 7).sketch(),
+        );
+        assert!(matches!(
+            n.execute_alloc(Request::StreamMerge { stream: "s".into(), data: bad }),
+            Response::Error { .. }
+        ));
         n.shutdown();
     }
 }

@@ -10,7 +10,13 @@ use crate::util::json::{self, Value};
 /// Wire protocol version, answered by the `hello` op. Bumped whenever an
 /// existing encoding changes shape (adding a new op does not bump it —
 /// unknown ops already fail loudly).
-pub const PROTOCOL_VERSION: u64 = 1;
+///
+/// v2: `upsert` gained the optional, semantics-bearing `version` field.
+/// A v1 node would silently IGNORE it (its decoder drops unknown fields)
+/// and assign its own version, corrupting last-writer-wins ordering —
+/// exactly the class of skew the bump exists to catch: the cluster
+/// handshake refuses to form across protocol versions, loudly.
+pub const PROTOCOL_VERSION: u64 = 2;
 
 /// Which server-side collection a `sketch_fetch` reads from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,10 +95,28 @@ pub enum Request {
     /// Query the LSH index with a fresh vector.
     LshQuery { vector: SparseVector, limit: usize },
     /// Sketch a vector (default algo) and upsert it into the keyed store
-    /// under `key`, keeping the store's LSH index in sync.
-    Upsert { key: String, vector: SparseVector },
+    /// under `key`, keeping the store's LSH index in sync. `version` is
+    /// the optional explicit write version: `None` lets the store assign
+    /// the next per-key version (`previous + 1`); `Some(v)` installs at
+    /// exactly `v` if strictly newer than the held copy and is otherwise
+    /// a refused-as-stale ack — the deterministic last-writer-wins rule
+    /// replicated writes converge by.
+    Upsert { key: String, vector: SparseVector, version: Option<u64> },
     /// Remove `key` from the keyed store and its LSH index (idempotent).
     Delete { key: String },
+    /// One page of the keyed store's `(key, version)` range walk: up to
+    /// `limit` pairs with `key > after`, sorted — the anti-entropy repair
+    /// path diffs replica states range by range through this.
+    StoreKeys { after: Option<String>, limit: usize },
+    /// Install one codec blob (`sketch::codec` hex, key + version inside)
+    /// into the keyed store under last-writer-wins: strictly newer
+    /// versions replace, stale ones are acked as kept — how repair
+    /// streams a healthy replica's entries onto a rejoined/cold node.
+    StorePut { data: String },
+    /// Merge one codec blob into the named live stream state (creating it
+    /// if absent). Merging — never overwriting — is the §2.3-safe repair
+    /// for streams: local pushes are kept, missed ones absorbed.
+    StreamMerge { stream: String, data: String },
     /// Top-`limit` most similar store entries to a fresh vector:
     /// band-probe + full-sketch re-rank (or a brute scan on small stores).
     TopK { vector: SparseVector, limit: usize },
@@ -124,6 +148,8 @@ pub enum Response {
     MetricsDump { snapshot: Value },
     /// Keyed-store statistics (the `store_stats` op's reply).
     Stats { stats: Value },
+    /// One `(key, version)` page of the store's range walk (`store_keys`).
+    Keys { keys: Vec<(String, u64)> },
     /// The `hello` handshake reply.
     Hello { info: HelloInfo },
     /// One codec-encoded sketch (`sketch_fetch`'s reply); `data` is the hex
@@ -228,14 +254,37 @@ impl Request {
                 ("vector", vector_to_json(vector)),
                 ("limit", Value::num(*limit as f64)),
             ]),
-            Request::Upsert { key, vector } => Value::obj(vec![
-                ("op", Value::str("upsert")),
-                ("key", Value::str(key.clone())),
-                ("vector", vector_to_json(vector)),
-            ]),
+            Request::Upsert { key, vector, version } => {
+                let mut fields = vec![
+                    ("op", Value::str("upsert")),
+                    ("key", Value::str(key.clone())),
+                    ("vector", vector_to_json(vector)),
+                ];
+                if let Some(v) = version {
+                    fields.push(("version", Value::u64(*v)));
+                }
+                Value::obj(fields)
+            }
             Request::Delete { key } => Value::obj(vec![
                 ("op", Value::str("delete")),
                 ("key", Value::str(key.clone())),
+            ]),
+            Request::StoreKeys { after, limit } => {
+                let mut fields = vec![("op", Value::str("store_keys"))];
+                if let Some(a) = after {
+                    fields.push(("after", Value::str(a.clone())));
+                }
+                fields.push(("limit", Value::num(*limit as f64)));
+                Value::obj(fields)
+            }
+            Request::StorePut { data } => Value::obj(vec![
+                ("op", Value::str("store_put")),
+                ("data", Value::str(data.clone())),
+            ]),
+            Request::StreamMerge { stream, data } => Value::obj(vec![
+                ("op", Value::str("stream_merge")),
+                ("stream", Value::str(stream.clone())),
+                ("data", Value::str(data.clone())),
             ]),
             Request::TopK { vector, limit } => Value::obj(vec![
                 ("op", Value::str("topk")),
@@ -338,8 +387,31 @@ impl Request {
             "upsert" => Request::Upsert {
                 key: v.req_str("key")?.to_string(),
                 vector: vector_from_json(v.req("vector")?)?,
+                version: match v.get("version") {
+                    None => None,
+                    Some(x) => Some(
+                        x.as_u64_lossless()
+                            .ok_or_else(|| anyhow::anyhow!("field 'version' not a u64"))?,
+                    ),
+                },
             },
             "delete" => Request::Delete { key: v.req_str("key")?.to_string() },
+            "store_keys" => Request::StoreKeys {
+                after: match v.get("after") {
+                    None => None,
+                    Some(a) => Some(
+                        a.as_str()
+                            .ok_or_else(|| anyhow::anyhow!("field 'after' not a string"))?
+                            .to_string(),
+                    ),
+                },
+                limit: v.req_usize("limit")?,
+            },
+            "store_put" => Request::StorePut { data: v.req_str("data")?.to_string() },
+            "stream_merge" => Request::StreamMerge {
+                stream: v.req_str("stream")?.to_string(),
+                data: v.req_str("data")?.to_string(),
+            },
             "topk" => Request::TopK {
                 vector: vector_from_json(v.req("vector")?)?,
                 limit: v.req_usize("limit")?,
@@ -381,6 +453,9 @@ impl Request {
             Request::LshQuery { .. } => "lsh_query",
             Request::Upsert { .. } => "upsert",
             Request::Delete { .. } => "delete",
+            Request::StoreKeys { .. } => "store_keys",
+            Request::StorePut { .. } => "store_put",
+            Request::StreamMerge { .. } => "stream_merge",
             Request::TopK { .. } => "topk",
             Request::StoreStats => "store_stats",
             Request::Snapshot { .. } => "snapshot",
@@ -435,6 +510,20 @@ impl Response {
                 ("ok", Value::Bool(true)),
                 ("type", Value::str("stats")),
                 ("stats", stats.clone()),
+            ]),
+            Response::Keys { keys } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("keys")),
+                (
+                    "keys",
+                    Value::Arr(
+                        keys.iter()
+                            .map(|(k, v)| {
+                                Value::Arr(vec![Value::str(k.clone()), Value::u64(*v)])
+                            })
+                            .collect(),
+                    ),
+                ),
             ]),
             Response::Hello { info } => Value::obj(vec![
                 ("ok", Value::Bool(true)),
@@ -497,6 +586,25 @@ impl Response {
             },
             "metrics" => Response::MetricsDump { snapshot: v.req("snapshot")?.clone() },
             "stats" => Response::Stats { stats: v.req("stats")?.clone() },
+            "keys" => Response::Keys {
+                keys: v
+                    .req("keys")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("keys not an array"))?
+                    .iter()
+                    .map(|pair| {
+                        let k = pair
+                            .idx(0)
+                            .and_then(|x| x.as_str())
+                            .ok_or_else(|| anyhow::anyhow!("bad key name"))?;
+                        let ver = pair
+                            .idx(1)
+                            .and_then(|x| x.as_u64_lossless())
+                            .ok_or_else(|| anyhow::anyhow!("bad key version"))?;
+                        Ok((k.to_string(), ver))
+                    })
+                    .collect::<anyhow::Result<_>>()?,
+            },
             "hello" => Response::Hello {
                 info: HelloInfo {
                     protocol: v
@@ -590,8 +698,17 @@ mod tests {
         roundtrip_req(Request::Merge { names: vec!["a".into(), "b".into()], out: "u".into() });
         roundtrip_req(Request::LshInsert { name: "doc1".into() });
         roundtrip_req(Request::LshQuery { vector: v.clone(), limit: 10 });
-        roundtrip_req(Request::Upsert { key: "doc1".into(), vector: v.clone() });
+        roundtrip_req(Request::Upsert { key: "doc1".into(), vector: v.clone(), version: None });
+        roundtrip_req(Request::Upsert {
+            key: "doc1".into(),
+            vector: v.clone(),
+            version: Some(u64::MAX - 5), // lossless through the string path
+        });
         roundtrip_req(Request::Delete { key: "doc1".into() });
+        roundtrip_req(Request::StoreKeys { after: None, limit: 100 });
+        roundtrip_req(Request::StoreKeys { after: Some("doc1".into()), limit: 64 });
+        roundtrip_req(Request::StorePut { data: "46474d53".into() });
+        roundtrip_req(Request::StreamMerge { stream: "s".into(), data: "46474d53".into() });
         roundtrip_req(Request::TopK { vector: v, limit: 5 });
         roundtrip_req(Request::StoreStats);
         roundtrip_req(Request::Snapshot { path: "/tmp/fgm.snap".into() });
@@ -619,6 +736,10 @@ mod tests {
                 ("shards", Value::num(8.0)),
             ]),
         });
+        roundtrip_resp(Response::Keys {
+            keys: vec![("doc1".into(), 3), ("doc2".into(), u64::MAX - 1)],
+        });
+        roundtrip_resp(Response::Keys { keys: vec![] });
         roundtrip_resp(Response::Error { message: "nope".into() });
         roundtrip_resp(Response::Hello {
             info: HelloInfo {
@@ -663,18 +784,49 @@ mod tests {
 
     #[test]
     fn hello_reply_requires_its_fields() {
-        assert!(decode_response(r#"{"ok":true,"type":"hello","protocol":1}"#).is_err());
+        assert!(decode_response(r#"{"ok":true,"type":"hello","protocol":2}"#).is_err());
         assert!(decode_response(
-            r#"{"ok":true,"type":"hello","protocol":1,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":"fastgm"}"#
+            r#"{"ok":true,"type":"hello","protocol":2,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":"fastgm"}"#
         )
         .is_err(), "algos must be an array");
         let ok = decode_response(
-            r#"{"ok":true,"type":"hello","protocol":1,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
+            r#"{"ok":true,"type":"hello","protocol":2,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
         )
         .unwrap();
         let Response::Hello { info } = ok else { panic!("expected hello") };
         assert_eq!(info.protocol, PROTOCOL_VERSION);
         assert_eq!(info.algos, vec!["fastgm".to_string()]);
+    }
+
+    /// `upsert.version` is optional, but when present it must be a u64 —
+    /// and the repair/walk ops validate their fields strictly.
+    #[test]
+    fn versioned_upsert_and_repair_ops_validate_fields() {
+        let versioned = decode_request(
+            r#"{"op":"upsert","key":"a","vector":{"ids":[1],"weights":[1]},"version":7}"#,
+        )
+        .unwrap();
+        assert!(matches!(versioned, Request::Upsert { version: Some(7), .. }));
+        assert!(decode_request(
+            r#"{"op":"upsert","key":"a","vector":{"ids":[1],"weights":[1]},"version":"x"}"#
+        )
+        .is_err());
+        assert!(decode_request(
+            r#"{"op":"upsert","key":"a","vector":{"ids":[1],"weights":[1]},"version":-3}"#
+        )
+        .is_err());
+        // store_keys: limit required, after optional-but-string.
+        assert!(decode_request(r#"{"op":"store_keys"}"#).is_err());
+        assert!(decode_request(r#"{"op":"store_keys","after":7,"limit":10}"#).is_err());
+        let page = decode_request(r#"{"op":"store_keys","limit":10}"#).unwrap();
+        assert_eq!(page, Request::StoreKeys { after: None, limit: 10 });
+        // store_put / stream_merge need their payloads.
+        assert!(decode_request(r#"{"op":"store_put"}"#).is_err());
+        assert!(decode_request(r#"{"op":"stream_merge","stream":"s"}"#).is_err());
+        assert!(decode_request(r#"{"op":"stream_merge","data":"ab"}"#).is_err());
+        // keys responses reject malformed pairs.
+        assert!(decode_response(r#"{"ok":true,"type":"keys","keys":[["a"]]}"#).is_err());
+        assert!(decode_response(r#"{"ok":true,"type":"keys","keys":[[1,2]]}"#).is_err());
     }
 
     #[test]

@@ -42,6 +42,28 @@ impl Registry {
         st.processed
     }
 
+    /// Merge a peer's stream sketch into the named live stream state,
+    /// creating it at `(k, seed)` on first touch — the anti-entropy repair
+    /// op. Merging (never overwriting) is what §2.3 licenses: local
+    /// history is kept, missed history is absorbed, and repeating the
+    /// merge is a no-op. Incompatible sketches are refused untouched.
+    pub fn stream_merge(
+        &self,
+        name: &str,
+        k: usize,
+        seed: u64,
+        sk: &GumbelMaxSketch,
+    ) -> Result<(), crate::sketch::MergeError> {
+        // Validate against the serving (k, seed) BEFORE touching the map:
+        // a refused merge must not leave an empty stream state behind.
+        StreamFastGm::new(k, seed).merge_sketch(sk)?;
+        let mut streams = self.streams.write().unwrap();
+        let st = streams
+            .entry(name.to_string())
+            .or_insert_with(|| StreamFastGm::new(k, seed));
+        st.merge_sketch(sk)
+    }
+
     pub fn stream_sketch(&self, name: &str) -> Option<GumbelMaxSketch> {
         self.streams.read().unwrap().get(name).map(|s| s.sketch())
     }
@@ -82,6 +104,26 @@ mod tests {
         assert_eq!(r.stream_count(), 1);
         let sk = r.stream_sketch("s").unwrap();
         assert!(sk.y.iter().any(|y| y.is_finite()));
+    }
+
+    #[test]
+    fn stream_merge_absorbs_missed_history() {
+        let r = Registry::new();
+        r.stream_push("s", 16, 7, &[(1, 0.5), (2, 1.0)]);
+        // A peer that also saw element 3.
+        let peer = Registry::new();
+        peer.stream_push("s", 16, 7, &[(2, 1.0), (3, 0.25)]);
+        r.stream_merge("s", 16, 7, &peer.stream_sketch("s").unwrap()).unwrap();
+        let full = Registry::new();
+        full.stream_push("s", 16, 7, &[(1, 0.5), (2, 1.0), (3, 0.25)]);
+        assert_eq!(r.stream_sketch("s"), full.stream_sketch("s"));
+        // Merging into an absent stream creates it; a refused merge does
+        // not (no empty stream left behind).
+        let cold = Registry::new();
+        cold.stream_merge("t", 16, 7, &peer.stream_sketch("s").unwrap()).unwrap();
+        assert_eq!(cold.stream_sketch("t"), peer.stream_sketch("s"));
+        assert!(cold.stream_merge("u", 16, 99, &peer.stream_sketch("s").unwrap()).is_err());
+        assert_eq!(cold.stream_count(), 1, "refused merge must not create 'u'");
     }
 
     #[test]

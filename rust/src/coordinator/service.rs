@@ -339,7 +339,7 @@ mod tests {
         let (u, v) = vecs();
         for (key, vec) in [("u", &u), ("v", &v)] {
             assert!(matches!(
-                c.call(Request::Upsert { key: key.into(), vector: vec.clone() }),
+                c.call(Request::Upsert { key: key.into(), vector: vec.clone(), version: None }),
                 Response::Ack { .. }
             ));
         }
@@ -399,8 +399,8 @@ mod tests {
         let cfg = CoordinatorConfig { k: 64, workers: 2, ..CoordinatorConfig::default() };
         let (u, v) = vecs();
         let c = Coordinator::new(cfg.clone()).unwrap();
-        c.call(Request::Upsert { key: "u".into(), vector: u.clone() });
-        c.call(Request::Upsert { key: "v".into(), vector: v });
+        c.call(Request::Upsert { key: "u".into(), vector: u.clone(), version: None });
+        c.call(Request::Upsert { key: "v".into(), vector: v, version: None });
         let Response::Ack { info } = c.call(Request::Snapshot { path: path_str.clone() })
         else {
             panic!("expected ack")
@@ -449,13 +449,13 @@ mod tests {
         .unwrap();
         let (u, _) = vecs();
         let giant = "k".repeat(crate::sketch::codec::MAX_KEY_LEN + 1);
-        let resp = c.call(Request::Upsert { key: giant, vector: u.clone() });
+        let resp = c.call(Request::Upsert { key: giant, vector: u.clone(), version: None });
         let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
         assert!(message.contains("limited to"), "{message}");
         // At the bound itself, the upsert is accepted and snapshottable.
         let exact = "k".repeat(crate::sketch::codec::MAX_KEY_LEN);
         assert!(matches!(
-            c.call(Request::Upsert { key: exact, vector: u }),
+            c.call(Request::Upsert { key: exact, vector: u, version: None }),
             Response::Ack { .. }
         ));
         c.shutdown();
@@ -472,7 +472,7 @@ mod tests {
         .unwrap();
         let (u, _) = vecs();
         for req in [
-            Request::Upsert { key: "u".into(), vector: u.clone() },
+            Request::Upsert { key: "u".into(), vector: u.clone(), version: None },
             Request::TopK { vector: u, limit: 1 },
             Request::Restore { path: "/nonexistent".into() },
         ] {

@@ -1,20 +1,31 @@
 //! Keyed sketch store: the coordinator's first stateful subsystem.
 //!
-//! A sharded in-memory map from string keys to [`GumbelMaxSketch`]es with
-//! an **incrementally maintained** [`LshIndex`] (upserts and deletes keep
-//! the band tables in sync — no rebuilds), answering top-k similarity
-//! queries two ways:
+//! A sharded in-memory map from string keys to **versioned**
+//! [`GumbelMaxSketch`]es with an **incrementally maintained** [`LshIndex`]
+//! (upserts and deletes keep the band tables in sync — no rebuilds),
+//! answering top-k similarity queries two ways:
 //!
 //! * [`SketchStore::probe_topk`] — banded LSH candidate probe, then a
 //!   full-sketch `estimate_jp` re-rank of the (sub-linear) candidate set.
 //! * [`SketchStore::scan_topk`] — brute-force re-rank of every entry; the
 //!   router picks this for small stores where probing cannot win.
 //!
+//! Every key carries a monotonic write version: [`SketchStore::upsert`]
+//! assigns `previous + 1`, [`SketchStore::put_versioned`] installs an
+//! explicit version if (and only if) it is newer than what is held. The
+//! version is what makes replicated serving deterministic — two replicas
+//! of a key can always agree which copy is last-writer by comparing
+//! versions, so the cluster's anti-entropy repair converges without
+//! coordination. Deletes drop the version with the entry (no tombstones:
+//! a repair can resurrect a key deleted on one replica while its peer was
+//! down — documented in README §Replication).
+//!
 //! Persistence goes through [`crate::sketch::codec`]: `snapshot_bytes`
 //! freezes the whole store into the versioned binary format (keys sorted,
-//! so equal state ⇒ identical bytes) and `restore_bytes` atomically
-//! replaces the store contents from a snapshot — the warm-restart path
-//! that skips recomputing every sketch.
+//! so equal state ⇒ identical bytes, versions included) and
+//! `restore_bytes` atomically replaces the store contents from a snapshot
+//! — the warm-restart path that skips recomputing every sketch. v1
+//! snapshots (pre-versioning) restore with every version at 0.
 //!
 //! Locking: keys are sharded over independent `RwLock<HashMap>`s so
 //! concurrent upserts on different shards don't serialize; the LSH index
@@ -52,12 +63,19 @@ pub struct TopKStats {
     pub scanned: bool,
 }
 
+/// A stored sketch plus its monotonic write version.
+#[derive(Debug, Clone, PartialEq)]
+struct VersionedSketch {
+    version: u64,
+    sketch: GumbelMaxSketch,
+}
+
 pub struct SketchStore {
     lsh_params: LshParams,
     /// Swap gate: shared by every keyed op, exclusive for `restore`/`clear`
     /// — no request can ever observe a half-replaced store.
     gate: RwLock<()>,
-    shards: Vec<RwLock<HashMap<String, GumbelMaxSketch>>>,
+    shards: Vec<RwLock<HashMap<String, VersionedSketch>>>,
     lsh: RwLock<LshIndex>,
     /// LSH ids are `token_id(key)`; this maps them back for responses.
     names: RwLock<HashMap<u64, String>>,
@@ -83,23 +101,46 @@ impl SketchStore {
         (token_id(key) % self.shards.len() as u64) as usize
     }
 
-    /// Insert or replace `key`'s sketch; the LSH index is updated in place.
-    pub fn upsert(&self, key: &str, sk: GumbelMaxSketch) {
+    /// Insert or replace `key`'s sketch at the next write version
+    /// (`previous + 1`, or 1 for a fresh key); the LSH index is updated in
+    /// place. Returns the version assigned.
+    pub fn upsert(&self, key: &str, sk: GumbelMaxSketch) -> u64 {
         let _gate = self.gate.read().expect("store gate");
-        self.upsert_inner(key, sk);
+        self.upsert_inner(key, None, sk).expect("next-version upsert always installs")
     }
 
-    /// Gate-free body shared by [`SketchStore::upsert`] and the restore
-    /// loop (which already holds the gate exclusively). The shard lock is
-    /// held across the lsh/names updates so a same-key delete racing this
+    /// Install `key` at exactly `version` if it is strictly newer than the
+    /// held copy (or the key is absent) — the deterministic last-writer-
+    /// wins rule replicas converge by. Returns the installed version, or
+    /// `None` (with the store untouched) when the put is stale.
+    pub fn put_versioned(&self, key: &str, version: u64, sk: GumbelMaxSketch) -> Option<u64> {
+        let _gate = self.gate.read().expect("store gate");
+        self.upsert_inner(key, Some(version), sk)
+    }
+
+    /// Gate-free body shared by the public writers and the restore loop
+    /// (which already holds the gate exclusively). The shard lock is held
+    /// across the lsh/names updates so a same-key delete racing this
     /// upsert serializes with the whole triple — the map and index can
-    /// never end up disagreeing about the key.
-    fn upsert_inner(&self, key: &str, sk: GumbelMaxSketch) {
+    /// never end up disagreeing about the key. `version: None` assigns
+    /// `previous + 1`; `Some(v)` installs iff strictly newer.
+    fn upsert_inner(&self, key: &str, version: Option<u64>, sk: GumbelMaxSketch) -> Option<u64> {
         let id = token_id(key);
         let mut shard = self.shards[self.shard_of(key)].write().expect("store shard lock");
-        shard.insert(key.to_string(), sk.clone());
+        let held = shard.get(key).map(|v| v.version);
+        let install = match version {
+            None => held.map_or(1, |h| h + 1),
+            Some(v) => {
+                if held.is_some_and(|h| h >= v) {
+                    return None; // stale: deterministic LWW keeps the held copy
+                }
+                v
+            }
+        };
+        shard.insert(key.to_string(), VersionedSketch { version: install, sketch: sk.clone() });
         self.lsh.write().expect("store lsh lock").upsert(id, sk);
         self.names.write().expect("store names lock").insert(id, key.to_string());
+        Some(install)
     }
 
     /// Remove `key`; returns whether it existed. Shard lock held across
@@ -117,12 +158,62 @@ impl SketchStore {
     }
 
     pub fn get(&self, key: &str) -> Option<GumbelMaxSketch> {
+        self.get_versioned(key).map(|(_, sk)| sk)
+    }
+
+    /// `key`'s `(version, sketch)` pair — what the cluster's gather and
+    /// repair paths move between sites.
+    pub fn get_versioned(&self, key: &str) -> Option<(u64, GumbelMaxSketch)> {
         let _gate = self.gate.read().expect("store gate");
         self.shards[self.shard_of(key)]
             .read()
             .expect("store shard lock")
             .get(key)
-            .cloned()
+            .map(|v| (v.version, v.sketch.clone()))
+    }
+
+    /// `key`'s current write version, without cloning registers.
+    pub fn version_of(&self, key: &str) -> Option<u64> {
+        let _gate = self.gate.read().expect("store gate");
+        self.shards[self.shard_of(key)]
+            .read()
+            .expect("store shard lock")
+            .get(key)
+            .map(|v| v.version)
+    }
+
+    /// One page of the key range walk behind the `store_keys` op: up to
+    /// `limit` `(key, version)` pairs with `key > after`, sorted by key —
+    /// so a client pages the whole store with the last key as the next
+    /// cursor, and two replicas can diff versions range by range.
+    ///
+    /// Bounded selection, not a full sort: only the `limit` smallest
+    /// qualifying keys are ever held (a max-heap on the key), so one page
+    /// over an N-key store costs O(N log limit) time and O(limit) clones
+    /// — a full walk stays O(N²/limit · log limit) instead of cloning and
+    /// sorting the whole remaining store once per page.
+    pub fn keys_page(&self, after: Option<&str>, limit: usize) -> Vec<(String, u64)> {
+        use std::collections::BinaryHeap;
+        let _gate = self.gate.read().expect("store gate");
+        // Max-heap ordered by key: the top is the LARGEST kept key, so a
+        // smaller qualifying key evicts it once the page is full.
+        let mut top: BinaryHeap<(String, u64)> = BinaryHeap::with_capacity(limit + 1);
+        for shard in &self.shards {
+            for (key, v) in shard.read().expect("store shard lock").iter() {
+                if !after.map_or(true, |a| key.as_str() > a) {
+                    continue;
+                }
+                if top.len() < limit {
+                    top.push((key.clone(), v.version));
+                } else if top.peek().is_some_and(|(worst, _)| key < worst) {
+                    top.pop();
+                    top.push((key.clone(), v.version));
+                }
+            }
+        }
+        let mut page = top.into_vec();
+        page.sort_by(|a, b| a.0.cmp(&b.0));
+        page
     }
 
     pub fn len(&self) -> usize {
@@ -183,8 +274,8 @@ impl SketchStore {
         let mut scored = Vec::with_capacity(resolved.len());
         for name in resolved {
             let shard = self.shards[self.shard_of(&name)].read().expect("store shard lock");
-            let Some(sk) = shard.get(&name) else { continue };
-            let score = estimate_jp(query, sk)?;
+            let Some(v) = shard.get(&name) else { continue };
+            let score = estimate_jp(query, &v.sketch)?;
             drop(shard);
             scored.push((name, score));
         }
@@ -205,8 +296,8 @@ impl SketchStore {
         let _gate = self.gate.read().expect("store gate");
         let mut scored = Vec::new();
         for shard in &self.shards {
-            for (name, sk) in shard.read().expect("store shard lock").iter() {
-                scored.push((name.clone(), estimate_jp(query, sk)?));
+            for (name, v) in shard.read().expect("store shard lock").iter() {
+                scored.push((name.clone(), estimate_jp(query, &v.sketch)?));
             }
         }
         let stats = TopKStats {
@@ -220,14 +311,15 @@ impl SketchStore {
     /// Freeze the store into the versioned binary snapshot format,
     /// returning the bytes and the number of entries they hold (counted in
     /// the same gated pass, so the two can never disagree). Keys are
-    /// sorted, so two stores with equal contents snapshot to identical
-    /// bytes (the round-trip property tests rely on this).
+    /// sorted, so two stores with equal contents — versions included —
+    /// snapshot to identical bytes (the round-trip property tests and the
+    /// repair-convergence acceptance test rely on this).
     pub fn snapshot_bytes(&self) -> (Vec<u8>, usize) {
         let _gate = self.gate.read().expect("store gate");
-        let mut entries: Vec<(String, GumbelMaxSketch)> = Vec::new();
+        let mut entries: Vec<(String, u64, GumbelMaxSketch)> = Vec::new();
         for shard in &self.shards {
-            for (key, sk) in shard.read().expect("store shard lock").iter() {
-                entries.push((key.clone(), sk.clone()));
+            for (key, v) in shard.read().expect("store shard lock").iter() {
+                entries.push((key.clone(), v.version, v.sketch.clone()));
             }
         }
         entries.sort_by(|a, b| a.0.cmp(&b.0));
@@ -241,14 +333,15 @@ impl SketchStore {
     /// `(family, seed, k)`), so a bad snapshot leaves the store untouched;
     /// the swap itself runs under the exclusive gate, so concurrent
     /// requests see either the old store or the fully restored one.
+    /// Per-key versions restore with the registers (v1 snapshots: all 0).
     pub fn restore_bytes(
         &self,
         bytes: &[u8],
         expect: Option<(Family, u64, usize)>,
     ) -> anyhow::Result<usize> {
         let entries = codec::decode_store(bytes)?;
-        if let Some((first_key, first)) = entries.first() {
-            for (key, sk) in &entries {
+        if let Some((first_key, _, first)) = entries.first() {
+            for (key, _, sk) in &entries {
                 if let Some((family, seed, k)) = expect {
                     anyhow::ensure!(
                         sk.family == family && sk.seed == seed && sk.k() == k,
@@ -275,8 +368,8 @@ impl SketchStore {
         let n = entries.len();
         let _gate = self.gate.write().expect("store gate");
         self.clear_inner();
-        for (key, sk) in entries {
-            self.upsert_inner(&key, sk);
+        for (key, version, sk) in entries {
+            self.upsert_inner(&key, Some(version), sk);
         }
         Ok(n)
     }
@@ -345,10 +438,11 @@ mod tests {
         let f = sketcher();
         let v = SparseVector::new(vec![1, 2, 3], vec![1.0, 2.0, 0.5]);
         assert!(st.is_empty());
-        st.upsert("a", f.sketch(&v));
+        assert_eq!(st.upsert("a", f.sketch(&v)), 1);
         assert_eq!(st.len(), 1);
         assert_eq!(st.lsh_len(), 1);
         assert_eq!(st.get("a").unwrap(), f.sketch(&v));
+        assert_eq!(st.get_versioned("a").unwrap().0, 1);
         assert!(st.get("b").is_none());
         assert!(st.delete("a"));
         assert!(!st.delete("a"));
@@ -362,13 +456,64 @@ mod tests {
         let f = sketcher();
         let v1 = SparseVector::new(vec![1, 2], vec![1.0, 1.0]);
         let v2 = SparseVector::new(vec![8, 9], vec![1.0, 1.0]);
-        st.upsert("a", f.sketch(&v1));
-        st.upsert("a", f.sketch(&v2));
+        assert_eq!(st.upsert("a", f.sketch(&v1)), 1);
+        assert_eq!(st.upsert("a", f.sketch(&v2)), 2, "versions count writes");
         assert_eq!(st.len(), 1);
         assert_eq!(st.lsh_len(), 1);
         // Probing with v2 finds the replacement at similarity 1.
         let (hits, _) = st.probe_topk(&f.sketch(&v2), 1).unwrap();
         assert_eq!(hits, vec![("a".to_string(), 1.0)]);
+    }
+
+    /// The deterministic LWW rule: explicit versions install iff strictly
+    /// newer, and versionless upserts continue the per-key sequence.
+    #[test]
+    fn versioned_puts_are_last_writer_wins() {
+        let st = store();
+        let f = sketcher();
+        let old = f.sketch(&SparseVector::new(vec![1], vec![1.0]));
+        let new = f.sketch(&SparseVector::new(vec![2], vec![1.0]));
+        assert_eq!(st.put_versioned("a", 5, old.clone()), Some(5));
+        // Stale and equal versions are refused, store untouched.
+        assert_eq!(st.put_versioned("a", 5, new.clone()), None);
+        assert_eq!(st.put_versioned("a", 3, new.clone()), None);
+        assert_eq!(st.get_versioned("a").unwrap(), (5, old));
+        // A newer version replaces.
+        assert_eq!(st.put_versioned("a", 9, new.clone()), Some(9));
+        assert_eq!(st.get_versioned("a").unwrap(), (9, new.clone()));
+        // Versionless upsert continues after the explicit version.
+        assert_eq!(st.upsert("a", new.clone()), 10);
+        // Delete drops the version: the next write restarts at 1.
+        assert!(st.delete("a"));
+        assert_eq!(st.version_of("a"), None);
+        assert_eq!(st.upsert("a", new), 1);
+    }
+
+    #[test]
+    fn keys_page_walks_the_store_in_order() {
+        let st = store();
+        let f = sketcher();
+        for i in 0..10 {
+            st.upsert(&format!("doc{i}"), f.sketch(&SparseVector::new(vec![i], vec![1.0])));
+        }
+        st.upsert("doc3", f.sketch(&SparseVector::new(vec![99], vec![1.0]))); // v2
+        // Page through with a cursor of 4.
+        let mut seen: Vec<(String, u64)> = Vec::new();
+        let mut after: Option<String> = None;
+        loop {
+            let page = st.keys_page(after.as_deref(), 4);
+            if page.is_empty() {
+                break;
+            }
+            assert!(page.len() <= 4);
+            after = Some(page.last().unwrap().0.clone());
+            seen.extend(page);
+        }
+        let want: Vec<(String, u64)> =
+            (0..10).map(|i| (format!("doc{i}"), if i == 3 { 2 } else { 1 })).collect();
+        assert_eq!(seen, want, "pages must cover every key exactly once, sorted");
+        // A cursor past the end is an empty page, not an error.
+        assert!(st.keys_page(Some("zzz"), 4).is_empty());
     }
 
     #[test]
@@ -408,6 +553,7 @@ mod tests {
         for i in 0..25 {
             st.upsert(&format!("doc{i}"), f.sketch(&random_vec(&mut r, 12)));
         }
+        st.upsert("doc7", f.sketch(&random_vec(&mut r, 12))); // version 2
         let (bytes, n) = st.snapshot_bytes();
         assert_eq!(n, 25);
         let st2 = store();
@@ -418,6 +564,9 @@ mod tests {
         assert!(st2.get("stale").is_none());
         assert_eq!(st2.lsh_len(), 25);
         assert_eq!(st2.snapshot_bytes().0, bytes, "snapshot of restore must be identical");
+        // Versions survive the round trip.
+        assert_eq!(st2.version_of("doc7"), Some(2));
+        assert_eq!(st2.version_of("doc8"), Some(1));
         // The restored index answers queries like the original.
         let q = f.sketch(&random_vec(&mut r, 12));
         assert_eq!(st.probe_topk(&q, 5).unwrap(), st2.probe_topk(&q, 5).unwrap());
@@ -430,7 +579,7 @@ mod tests {
         st.upsert("keep", f.sketch(&SparseVector::new(vec![1], vec![1.0])));
         // Wrong k for the expected config.
         let other = FastGm::new(32, 42).sketch(&SparseVector::new(vec![1], vec![1.0]));
-        let bytes = codec::encode_store(&[("x".into(), other)]);
+        let bytes = codec::encode_store(&[("x".into(), 1, other)]);
         let err = st
             .restore_bytes(&bytes, Some((Family::Ordered, 42, K)))
             .unwrap_err()

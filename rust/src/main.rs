@@ -7,12 +7,14 @@
 //! fastgm topk     [--addr host:port] --vec "id:w,..." [--limit N]
 //! fastgm snapshot [--addr host:port] (--save PATH | --restore PATH)
 //! fastgm cluster  serve  [--nodes N] [--host H] [--base-port P] [--config cfg] [--set k=v ...]
-//! fastgm cluster  info   --addrs a:p,b:p,...
-//! fastgm cluster  upsert --addrs ... --key K --vec "id:w,..."
-//! fastgm cluster  delete --addrs ... --key K
-//! fastgm cluster  topk   --addrs ... --vec "id:w,..." [--limit N]
-//! fastgm cluster  push   --addrs ... --stream S --items "id:w,..."
+//! fastgm cluster  info   --addrs a:p,b:p,... [--replication R] [--write-quorum W]
+//! fastgm cluster  upsert --addrs ... --key K --vec "id:w,..." [--replication R] [--write-quorum W]
+//! fastgm cluster  delete --addrs ... --key K [--replication R] [--write-quorum W]
+//! fastgm cluster  topk   --addrs ... --vec "id:w,..." [--limit N] [--replication R]
+//! fastgm cluster  get    --addrs ... --key K [--replication R]
+//! fastgm cluster  push   --addrs ... --stream S --items "id:w,..." [--replication R] [--write-quorum W]
 //! fastgm cluster  card   --addrs ... --stream S
+//! fastgm cluster  repair --addrs ... [--streams S1,S2] [--replication R]
 //! fastgm sketch   [--dataset NAME|path:FILE|synthetic] [--k K] [--algo A] [--count N]
 //! fastgm exp      <table1|fig4|...|ablation-delta|ablation-accel|all> [--out DIR] [--full]
 //! fastgm simnet   [--depth D] [--packets N] [--k K]
@@ -23,7 +25,7 @@
 #![allow(clippy::needless_range_loop)]
 
 use fastgm::coordinator::client::Client;
-use fastgm::coordinator::cluster::{ClusterClient, LocalCluster};
+use fastgm::coordinator::cluster::{ClusterClient, LocalCluster, ReplicaConfig};
 use fastgm::coordinator::protocol::{decode_request, encode_line, Request};
 use fastgm::coordinator::server::Server;
 use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
@@ -86,7 +88,7 @@ fn top_help() -> String {
        store     upsert/delete keys in the server's similarity store\n\
        topk      top-k similarity query against the server's store\n\
        snapshot  save/restore the server's store (binary snapshot)\n\
-       cluster   run/drive an N-node sharded cluster (scatter-gather)\n\
+       cluster   run/drive an N-node replicated cluster (scatter-gather)\n\
        sketch    sketch a dataset locally and report timing\n\
        exp       regenerate a paper table/figure (or 'all')\n\
        simnet    run the braided-chain sensor network simulation\n\
@@ -224,18 +226,21 @@ fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
 }
 
 fn cluster_help() -> String {
-    "fastgm cluster — run/drive an N-node sharded serving cluster\n\n\
+    "fastgm cluster — run/drive an N-node replicated serving cluster\n\n\
      USAGE: fastgm cluster <ACTION> [OPTIONS]\n\n\
      ACTIONS:\n\
        serve   spawn N local nodes (one port each) and serve until killed\n\
        info    hello + store occupancy for every node\n\
-       upsert  route an upsert to the key's owning node\n\
-       delete  route a delete to the key's owning node\n\
+       upsert  fan an upsert out to the key's replica set (W-quorum)\n\
+       delete  fan a delete out to the key's replica set (W-quorum)\n\
        topk    scatter-gather top-k across all live nodes\n\
-       push    push stream items, partitioned by element id\n\
-       card    cluster-wide weighted cardinality (merged §2.3 sketches)\n\n\
-     Every driving action takes --addrs host:port,host:port,...\n\
-     Each action accepts --help."
+       get     read one key from its replica set (highest version wins)\n\
+       push    push stream items to each element's replica set\n\
+       card    cluster-wide weighted cardinality (merged §2.3 sketches)\n\
+       repair  anti-entropy: converge replica versions + merge streams\n\n\
+     Every driving action takes --addrs host:port,host:port,... and the\n\
+     replication shape --replication R (default 1) --write-quorum W\n\
+     (default 1). Each action accepts --help."
         .to_string()
 }
 
@@ -250,8 +255,10 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         "upsert" => cluster_upsert(rest),
         "delete" => cluster_delete(rest),
         "topk" => cluster_topk(rest),
+        "get" => cluster_get(rest),
         "push" => cluster_push(rest),
         "card" => cluster_card(rest),
+        "repair" => cluster_repair(rest),
         "--help" | "-h" | "help" => {
             println!("{}", cluster_help());
             Ok(())
@@ -311,13 +318,27 @@ fn parse_items(spec: &str) -> anyhow::Result<Vec<(u64, f64)>> {
     Ok(v.ids.into_iter().zip(v.weights).collect())
 }
 
+/// The options every cluster-driving action shares: membership + the
+/// replication shape the client routes and quorum-checks with.
+fn cluster_spec(name: &'static str, about: &'static str) -> ArgSpec {
+    ArgSpec::new(name, about)
+        .opt("addrs", "", "comma-separated node addresses")
+        .opt("replication", "1", "replica set size R (HRW top-R owners per key)")
+        .opt("write-quorum", "1", "owner acks required per write (1..=R)")
+}
+
 fn cluster_connect(args: &fastgm::util::argparse::Args) -> anyhow::Result<ClusterClient> {
-    ClusterClient::connect(&parse_addrs(&args.str("addrs"))?)
+    ClusterClient::connect_with(
+        &parse_addrs(&args.str("addrs"))?,
+        ReplicaConfig {
+            replication: args.usize("replication")?,
+            write_quorum: args.usize("write-quorum")?,
+        },
+    )
 }
 
 fn cluster_info(argv: &[String]) -> anyhow::Result<()> {
-    let spec = ArgSpec::new("cluster info", "hello + occupancy for every node")
-        .opt("addrs", "", "comma-separated node addresses");
+    let spec = cluster_spec("cluster info", "hello + occupancy for every node");
     let args = spec.parse(argv)?;
     let mut cc = cluster_connect(&args)?;
     let sizes = cc.store_sizes();
@@ -339,8 +360,7 @@ fn cluster_info(argv: &[String]) -> anyhow::Result<()> {
 }
 
 fn cluster_upsert(argv: &[String]) -> anyhow::Result<()> {
-    let spec = ArgSpec::new("cluster upsert", "route an upsert to the owning node")
-        .opt("addrs", "", "comma-separated node addresses")
+    let spec = cluster_spec("cluster upsert", "fan an upsert out to the key's replica set")
         .opt("key", "", "store key")
         .opt("vec", "", "sparse vector as id:w,id:w,...");
     let args = spec.parse(argv)?;
@@ -354,8 +374,7 @@ fn cluster_upsert(argv: &[String]) -> anyhow::Result<()> {
 }
 
 fn cluster_delete(argv: &[String]) -> anyhow::Result<()> {
-    let spec = ArgSpec::new("cluster delete", "route a delete to the owning node")
-        .opt("addrs", "", "comma-separated node addresses")
+    let spec = cluster_spec("cluster delete", "fan a delete out to the key's replica set")
         .opt("key", "", "store key");
     let args = spec.parse(argv)?;
     anyhow::ensure!(!args.str("key").is_empty(), "--key required");
@@ -365,8 +384,7 @@ fn cluster_delete(argv: &[String]) -> anyhow::Result<()> {
 }
 
 fn cluster_topk(argv: &[String]) -> anyhow::Result<()> {
-    let spec = ArgSpec::new("cluster topk", "scatter-gather top-k across live nodes")
-        .opt("addrs", "", "comma-separated node addresses")
+    let spec = cluster_spec("cluster topk", "scatter-gather top-k across live nodes")
         .opt("vec", "", "query vector as id:w,id:w,...")
         .opt("limit", "10", "number of neighbors");
     let args = spec.parse(argv)?;
@@ -386,9 +404,27 @@ fn cluster_topk(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cluster_get(argv: &[String]) -> anyhow::Result<()> {
+    let spec = cluster_spec("cluster get", "read one key from its replica set")
+        .opt("key", "", "store key");
+    let args = spec.parse(argv)?;
+    anyhow::ensure!(!args.str("key").is_empty(), "--key required");
+    let mut cc = cluster_connect(&args)?;
+    let key = args.str("key");
+    match cc.fetch_key(&key)? {
+        Some((version, sk)) => println!(
+            "'{key}' @v{version}: family {}, k={}, seed={}",
+            sk.family.name(),
+            sk.k(),
+            sk.seed
+        ),
+        None => println!("'{key}' not held by any live owner"),
+    }
+    Ok(())
+}
+
 fn cluster_push(argv: &[String]) -> anyhow::Result<()> {
-    let spec = ArgSpec::new("cluster push", "push stream items, partitioned by element id")
-        .opt("addrs", "", "comma-separated node addresses")
+    let spec = cluster_spec("cluster push", "push stream items to each element's replica set")
         .opt("stream", "s", "stream name")
         .opt("items", "", "items as id:w,id:w,...");
     let args = spec.parse(argv)?;
@@ -400,13 +436,35 @@ fn cluster_push(argv: &[String]) -> anyhow::Result<()> {
 }
 
 fn cluster_card(argv: &[String]) -> anyhow::Result<()> {
-    let spec = ArgSpec::new("cluster card", "cluster-wide weighted cardinality")
-        .opt("addrs", "", "comma-separated node addresses")
+    let spec = cluster_spec("cluster card", "cluster-wide weighted cardinality")
         .opt("stream", "s", "stream name");
     let args = spec.parse(argv)?;
     let mut cc = cluster_connect(&args)?;
     let est = cc.cardinality(&args.str("stream"))?;
     println!("cluster cardinality of '{}': {est:.1}", args.str("stream"));
+    Ok(())
+}
+
+fn cluster_repair(argv: &[String]) -> anyhow::Result<()> {
+    let spec = cluster_spec(
+        "cluster repair",
+        "anti-entropy: diff replica versions, stream blobs onto stale owners, merge streams",
+    )
+    .opt("streams", "", "comma-separated stream names to converge (optional)");
+    let args = spec.parse(argv)?;
+    let streams: Vec<String> = args
+        .str("streams")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let mut cc = cluster_connect(&args)?;
+    let report = cc.repair(&streams)?;
+    println!(
+        "repair: {} keys scanned, {} replica installs, {} skipped, {} stream merges",
+        report.keys_scanned, report.keys_healed, report.keys_skipped, report.stream_merges
+    );
     Ok(())
 }
 

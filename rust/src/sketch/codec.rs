@@ -1,34 +1,44 @@
 //! Versioned binary snapshot codec for keyed sketch collections — the
 //! persistence format behind [`crate::coordinator::store::SketchStore`]'s
 //! `snapshot` / `restore` ops, so a server warm-restarts without
-//! recomputing a single sketch.
+//! recomputing a single sketch, and the cross-node transfer format of the
+//! cluster gather / anti-entropy repair paths.
 //!
-//! Format v1, little-endian, with a trailing integrity checksum:
+//! Format v2, little-endian, with a trailing integrity checksum:
 //!
 //! ```text
 //! magic "FGMS" | version u16 | flags u16 (0) | count u64
 //! per entry:
-//!   key_len u32 | key (UTF-8) |
+//!   key_len u32 | key (UTF-8) | entry_version u64 |
 //!   family u8 | seed u64 | k u64 | y[k] (f64 bit patterns) | s[k] u64
 //! fnv1a64(checksum of every preceding byte) u64
 //! ```
+//!
+//! v2 added the per-entry `entry_version` — the keyed store's monotonic
+//! per-key write version, what makes last-writer-wins deterministic when
+//! replicas of a key diff their states during `cluster repair`. v1 (no
+//! per-entry version field) still decodes: its entries surface with
+//! version 0, which any post-upgrade write (version ≥ 1) supersedes.
 //!
 //! Register values round-trip via raw bit patterns, so restore is
 //! **bit-identical** for every family — including `+inf` / EMPTY_REGISTER
 //! sentinels in untouched registers.
 //!
-//! Versioning rules: the version is bumped on any layout change; decoders
-//! read exactly the versions they know and refuse the rest loudly (no
-//! best-effort parsing of future layouts). Decoding is strict — bad magic,
-//! unknown version or family tag, truncation anywhere, trailing garbage
-//! and checksum mismatches are all clean `Err`s, never panics and never
-//! partial state.
+//! Versioning rules: the container version is bumped on any layout change;
+//! decoders read exactly the versions they know and refuse the rest loudly
+//! (no best-effort parsing of future layouts). Encoders always write the
+//! newest version. Decoding is strict — bad magic, unknown version or
+//! family tag, truncation anywhere, trailing garbage and checksum
+//! mismatches are all clean `Err`s, never panics and never partial state.
 
 use super::{Family, GumbelMaxSketch};
 use crate::util::hash::fnv1a64;
 
 pub const MAGIC: [u8; 4] = *b"FGMS";
-pub const VERSION: u16 = 1;
+/// Container version encoders write.
+pub const VERSION: u16 = 2;
+/// Oldest container version decoders still read (entry versions = 0).
+pub const MIN_VERSION: u16 = 1;
 
 /// Largest key the snapshot format accepts. Public so writers (the
 /// coordinator's `upsert` op) can refuse oversized keys up front — an
@@ -71,30 +81,32 @@ fn push_u64(out: &mut Vec<u8>, x: u64) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
-/// Encode `entries` (already in the order the caller wants frozen — the
-/// store sorts by key so snapshots of equal state are byte-identical).
-pub fn encode_store(entries: &[(String, GumbelMaxSketch)]) -> Vec<u8> {
-    encode_entries(entries.iter().map(|(k, sk)| (k.as_str(), sk)))
+/// Encode `(key, entry version, sketch)` entries (already in the order the
+/// caller wants frozen — the store sorts by key so snapshots of equal
+/// state are byte-identical).
+pub fn encode_store(entries: &[(String, u64, GumbelMaxSketch)]) -> Vec<u8> {
+    encode_entries(entries.iter().map(|(k, v, sk)| (k.as_str(), *v, sk)))
 }
 
 /// Borrow-based encoding core shared by [`encode_store`] and the
 /// single-sketch wire path — no key/register clones required.
 fn encode_entries<'a>(
-    entries: impl Iterator<Item = (&'a str, &'a GumbelMaxSketch)> + Clone,
+    entries: impl Iterator<Item = (&'a str, u64, &'a GumbelMaxSketch)> + Clone,
 ) -> Vec<u8> {
     let (count, payload) = entries
         .clone()
-        .fold((0u64, 0usize), |(n, bytes), (key, sk)| {
-            (n + 1, bytes + 4 + key.len() + 1 + 8 + 8 + 16 * sk.k())
+        .fold((0u64, 0usize), |(n, bytes), (key, _, sk)| {
+            (n + 1, bytes + 4 + key.len() + 8 + 1 + 8 + 8 + 16 * sk.k())
         });
     let mut out = Vec::with_capacity(16 + payload + 8);
     out.extend_from_slice(&MAGIC);
     push_u16(&mut out, VERSION);
     push_u16(&mut out, 0); // flags, reserved
     push_u64(&mut out, count);
-    for (key, sk) in entries {
+    for (key, version, sk) in entries {
         push_u32(&mut out, key.len() as u32);
         out.extend_from_slice(key.as_bytes());
+        push_u64(&mut out, version);
         out.push(family_tag(sk.family));
         push_u64(&mut out, sk.seed);
         push_u64(&mut out, sk.k() as u64);
@@ -152,8 +164,9 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Decode a snapshot produced by [`encode_store`].
-pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, GumbelMaxSketch)>> {
+/// Decode a snapshot produced by [`encode_store`] (v2) or by a pre-version
+/// build (v1 — entries surface with version 0).
+pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, u64, GumbelMaxSketch)>> {
     anyhow::ensure!(
         bytes.len() >= MAGIC.len() + 2 + 2 + 8 + 8,
         "snapshot too short ({} bytes) to be a FastGM snapshot",
@@ -169,8 +182,8 @@ pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, GumbelMaxSketch
     anyhow::ensure!(r.take(4)? == MAGIC, "not a FastGM snapshot (bad magic)");
     let version = r.u16()?;
     anyhow::ensure!(
-        version == VERSION,
-        "unsupported snapshot version {version} (this build reads v{VERSION})"
+        (MIN_VERSION..=VERSION).contains(&version),
+        "unsupported snapshot version {version} (this build reads v{MIN_VERSION}..v{VERSION})"
     );
     let _flags = r.u16()?;
     let count = r.u64()?;
@@ -181,6 +194,9 @@ pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, GumbelMaxSketch
         let key = std::str::from_utf8(r.take(key_len)?)
             .map_err(|e| anyhow::anyhow!("entry {i}: key is not UTF-8: {e}"))?
             .to_string();
+        // v1 predates per-entry versions: everything decodes as version 0,
+        // which any post-upgrade write (version >= 1) supersedes.
+        let entry_version = if version >= 2 { r.u64()? } else { 0 };
         let family = family_from_tag(r.u8()?)?;
         let seed = r.u64()?;
         let k = r.u64()?;
@@ -202,7 +218,7 @@ pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, GumbelMaxSketch
         for _ in 0..k {
             s.push(r.u64()?);
         }
-        out.push((key, GumbelMaxSketch { family, seed, y, s }));
+        out.push((key, entry_version, GumbelMaxSketch { family, seed, y, s }));
     }
     anyhow::ensure!(
         r.remaining() == 0,
@@ -212,12 +228,13 @@ pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, GumbelMaxSketch
     Ok(out)
 }
 
-// -- single-sketch wire transfer (the cluster gather path) -----------------
+// -- single-sketch wire transfer (cluster gather + repair paths) -----------
 //
-// `sketch_fetch` responses carry one codec-encoded sketch inside a JSON
-// string, so the binary snapshot format — checksum, strict decode and all —
-// is also the cross-node transfer format (§2.3 sketches move between sites
-// exactly as they are persisted). Hex keeps the encoding dependency-free.
+// `sketch_fetch` responses and `store_put` requests carry one
+// codec-encoded sketch inside a JSON string, so the binary snapshot format
+// — per-key version, checksum, strict decode and all — is also the
+// cross-node transfer format (§2.3 sketches move between sites exactly as
+// they are persisted). Hex keeps the encoding dependency-free.
 
 /// Lowercase hex of `bytes`.
 pub fn to_hex(bytes: &[u8]) -> String {
@@ -250,17 +267,18 @@ pub fn from_hex(text: &str) -> anyhow::Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Encode one `(key, sketch)` pair as a hex codec blob (a one-entry store
-/// snapshot — checksum and versioning included for free). Borrow-based:
-/// this sits on the per-candidate path of every cluster gather, so it
-/// must not clone k registers just to encode them.
-pub fn encode_sketch_hex(key: &str, sk: &GumbelMaxSketch) -> String {
-    to_hex(&encode_entries(std::iter::once((key, sk))))
+/// Encode one `(key, version, sketch)` triple as a hex codec blob (a
+/// one-entry store snapshot — checksum and versioning included for free).
+/// Borrow-based: this sits on the per-candidate path of every cluster
+/// gather, so it must not clone k registers just to encode them. Sources
+/// without a write version (registry, stream sketches) pass 0.
+pub fn encode_sketch_hex(key: &str, version: u64, sk: &GumbelMaxSketch) -> String {
+    to_hex(&encode_entries(std::iter::once((key, version, sk))))
 }
 
 /// Decode a blob produced by [`encode_sketch_hex`]; refuses blobs that do
 /// not hold exactly one entry.
-pub fn decode_sketch_hex(text: &str) -> anyhow::Result<(String, GumbelMaxSketch)> {
+pub fn decode_sketch_hex(text: &str) -> anyhow::Result<(String, u64, GumbelMaxSketch)> {
     let mut entries = decode_store(&from_hex(text)?)?;
     anyhow::ensure!(
         entries.len() == 1,
@@ -275,13 +293,14 @@ mod tests {
     use super::*;
     use crate::sketch::{SparseVector, EMPTY_REGISTER};
 
-    fn sample() -> Vec<(String, GumbelMaxSketch)> {
+    fn sample() -> Vec<(String, u64, GumbelMaxSketch)> {
         let mut a = GumbelMaxSketch::empty(Family::Ordered, 42, 4);
         a.y[1] = 0.125;
         a.s[1] = u64::MAX - 1; // above 2^53: binary stays exact
         let b = crate::sketch::fastgm::FastGm::new(8, 7)
             .sketch(&SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]));
-        vec![("alpha".into(), a), ("βeta".into(), b)]
+        // One pre-versioning entry (0) and one with a large write version.
+        vec![("alpha".into(), 0, a), ("βeta".into(), u64::MAX - 3, b)]
     }
 
     /// Patch bytes and keep the trailing checksum consistent, so structural
@@ -293,15 +312,43 @@ mod tests {
         bytes
     }
 
+    /// Hand-rolled v1 layout (no per-entry version field) — what pre-v2
+    /// builds wrote. Kept here so v1 decode compatibility is tested against
+    /// the real byte layout, not against this build's encoder.
+    fn encode_v1(entries: &[(String, GumbelMaxSketch)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        push_u16(&mut out, 1);
+        push_u16(&mut out, 0);
+        push_u64(&mut out, entries.len() as u64);
+        for (key, sk) in entries {
+            push_u32(&mut out, key.len() as u32);
+            out.extend_from_slice(key.as_bytes());
+            out.push(family_tag(sk.family));
+            push_u64(&mut out, sk.seed);
+            push_u64(&mut out, sk.k() as u64);
+            for &y in &sk.y {
+                push_u64(&mut out, y.to_bits());
+            }
+            for &s in &sk.s {
+                push_u64(&mut out, s);
+            }
+        }
+        let checksum = fnv1a64(&out);
+        push_u64(&mut out, checksum);
+        out
+    }
+
     #[test]
     fn roundtrip_is_bit_identical() {
         let entries = sample();
         let bytes = encode_store(&entries);
         let back = decode_store(&bytes).unwrap();
         assert_eq!(back, entries);
-        // Untouched registers survive exactly.
-        assert!(back[0].1.y[0].is_infinite());
-        assert_eq!(back[0].1.s[0], EMPTY_REGISTER);
+        // Untouched registers survive exactly; versions too.
+        assert!(back[0].2.y[0].is_infinite());
+        assert_eq!(back[0].2.s[0], EMPTY_REGISTER);
+        assert_eq!(back[1].1, u64::MAX - 3);
         // Deterministic encoding.
         assert_eq!(bytes, encode_store(&back));
     }
@@ -310,6 +357,26 @@ mod tests {
     fn empty_store_roundtrips() {
         let bytes = encode_store(&[]);
         assert_eq!(decode_store(&bytes).unwrap(), vec![]);
+    }
+
+    /// A v1 snapshot (pre-versioning layout) still decodes; entries come
+    /// back with version 0, superseded by any v2-era write.
+    #[test]
+    fn v1_snapshots_decode_with_version_zero() {
+        let v1_entries: Vec<(String, GumbelMaxSketch)> =
+            sample().into_iter().map(|(k, _, sk)| (k, sk)).collect();
+        let bytes = encode_v1(&v1_entries);
+        let back = decode_store(&bytes).unwrap();
+        assert_eq!(back.len(), v1_entries.len());
+        for ((k1, sk1), (k2, v2, sk2)) in v1_entries.iter().zip(&back) {
+            assert_eq!(k1, k2);
+            assert_eq!(*v2, 0, "v1 entries must surface as version 0");
+            assert_eq!(sk1, sk2, "v1 registers must round-trip bit-identically");
+        }
+        // v1 is as strictly checked as v2: every truncation fails clean.
+        for len in 0..bytes.len() {
+            assert!(decode_store(&bytes[..len]).is_err(), "v1 prefix {len} decoded");
+        }
     }
 
     #[test]
@@ -342,14 +409,19 @@ mod tests {
         let err = decode_store(&with_checksum_refreshed(wrong_version)).unwrap_err();
         assert!(err.to_string().contains("version 99"), "{err}");
 
+        let mut too_old = bytes.clone();
+        too_old[4] = 0; // v0 never existed; below MIN_VERSION
+        assert!(decode_store(&with_checksum_refreshed(too_old)).is_err());
+
         let mut wrong_magic = bytes.clone();
         wrong_magic[0] = b'X';
         let err = decode_store(&with_checksum_refreshed(wrong_magic)).unwrap_err();
         assert!(err.to_string().contains("bad magic"), "{err}");
 
         let mut bad_family = bytes;
-        // First entry: 16 header bytes, 4-byte key length, "alpha" (5 bytes).
-        let fam_off = 16 + 4 + 5;
+        // First entry: 16 header bytes, 4-byte key length, "alpha"
+        // (5 bytes), 8-byte entry version.
+        let fam_off = 16 + 4 + 5 + 8;
         bad_family[fam_off] = 42;
         let err = decode_store(&with_checksum_refreshed(bad_family)).unwrap_err();
         assert!(err.to_string().contains("family tag 42"), "{err}");
@@ -366,12 +438,13 @@ mod tests {
 
     #[test]
     fn sketch_hex_roundtrips_bit_identically() {
-        for (key, sk) in sample() {
-            let blob = encode_sketch_hex(&key, &sk);
+        for (key, version, sk) in sample() {
+            let blob = encode_sketch_hex(&key, version, &sk);
             assert!(blob.bytes().all(|b| b.is_ascii_hexdigit()));
             assert!(blob.starts_with(&to_hex(&MAGIC)), "blob must open with the magic");
-            let (back_key, back) = decode_sketch_hex(&blob).unwrap();
+            let (back_key, back_version, back) = decode_sketch_hex(&blob).unwrap();
             assert_eq!(back_key, key);
+            assert_eq!(back_version, version);
             assert_eq!(back, sk);
         }
     }
@@ -387,7 +460,7 @@ mod tests {
         let err = decode_sketch_hex(&blob).unwrap_err().to_string();
         assert!(err.contains("exactly one sketch"), "{err}");
         // A corrupted blob fails the checksum, not the hex layer.
-        let mut bad = encode_sketch_hex("a", &sample()[0].1);
+        let mut bad = encode_sketch_hex("a", 3, &sample()[0].2);
         let flip = bad.len() / 2;
         let orig = bad.as_bytes()[flip];
         bad.replace_range(flip..flip + 1, if orig == b'0' { "1" } else { "0" });

@@ -13,7 +13,7 @@
 
 use super::engine::SketchScratch;
 use super::order_stats::ElementRace;
-use super::{Family, GumbelMaxSketch, Sketcher, SparseVector, EMPTY_REGISTER};
+use super::{Family, GumbelMaxSketch, MergeError, Sketcher, SparseVector, EMPTY_REGISTER};
 
 /// Incremental Stream-FastGM state. Feed elements with [`push`](Self::push);
 /// read the sketch at any time with [`sketch`](Self::sketch).
@@ -117,6 +117,41 @@ impl StreamFastGm {
                 }
             }
         }
+    }
+
+    /// Merge another Ordered-family sketch's registers into this live
+    /// stream state (per register: keep the smaller `y` and its `s`) —
+    /// the anti-entropy repair primitive. §2.3 makes this safe: the
+    /// resulting registers equal what this state would hold had it also
+    /// seen every element behind `other`, because races are deterministic
+    /// per `(seed, element)` and re-occurrences are idempotent — so
+    /// repair *merges* missed history in, never overwrites local history,
+    /// and repeating the merge is a no-op. Future `push`es behave exactly
+    /// as if the union stream had been consumed here: the fill/prune
+    /// bookkeeping (`unfilled`, `jstar`) is recomputed from the merged
+    /// registers. `processed`/`released` stay local-only counters (the
+    /// merge cannot know how long the remote stream was).
+    pub fn merge_sketch(&mut self, other: &GumbelMaxSketch) -> Result<(), MergeError> {
+        if other.family != Family::Ordered {
+            return Err(MergeError::FamilyMismatch(Family::Ordered.name(), other.family.name()));
+        }
+        if other.seed != self.seed {
+            return Err(MergeError::SeedMismatch(self.seed, other.seed));
+        }
+        if other.k() != self.k {
+            return Err(MergeError::LengthMismatch(self.k, other.k()));
+        }
+        for j in 0..self.k {
+            if other.y[j] < self.y[j] {
+                self.y[j] = other.y[j];
+                self.s[j] = other.s[j];
+            }
+        }
+        self.unfilled = self.s.iter().filter(|&&s| s == EMPTY_REGISTER).count();
+        if self.unfilled == 0 {
+            self.jstar = argmax(&self.y);
+        }
+        Ok(())
     }
 
     /// Current sketch (clones the registers).
@@ -311,6 +346,61 @@ mod tests {
         assert_eq!(dirty.sketch(), fresh.sketch());
         assert_eq!(dirty.processed, fresh.processed);
         assert_eq!(dirty.released, fresh.released);
+    }
+
+    /// Repair semantics: merging a peer's sketch into a partial stream
+    /// state yields exactly the state of the union stream — including the
+    /// fill/prune bookkeeping, so subsequent pushes stay bit-identical.
+    #[test]
+    fn merge_sketch_equals_union_stream_state() {
+        let mut r = SplitMix64::new(23);
+        for k in [4usize, 32, 96] {
+            let all: Vec<(u64, f64)> =
+                (0..150u64).map(|i| (i * 13 + 2, r.next_f64() + 0.01)).collect();
+            let (left, right) = all.split_at(60);
+            let mut a = StreamFastGm::new(k, 9);
+            for &(id, w) in left {
+                a.push(id, w);
+            }
+            let mut b = StreamFastGm::new(k, 9);
+            for &(id, w) in right {
+                b.push(id, w);
+            }
+            // a absorbs b's registers; overlap with its own history is
+            // idempotent (merge in b's view of the FULL stream too).
+            let mut full_view = StreamFastGm::new(k, 9);
+            for &(id, w) in &all {
+                full_view.push(id, w);
+            }
+            a.merge_sketch(&b.sketch()).unwrap();
+            assert_eq!(a.sketch(), full_view.sketch(), "k={k}: merge != union");
+            // Re-merging is a no-op (anti-entropy repair is idempotent).
+            let snap = a.sketch();
+            a.merge_sketch(&b.sketch()).unwrap();
+            a.merge_sketch(&full_view.sketch()).unwrap();
+            assert_eq!(a.sketch(), snap);
+            // Future pushes behave as if `a` had seen the whole stream.
+            let more: Vec<(u64, f64)> =
+                (0..40u64).map(|i| (i * 7 + 5000, r.next_f64() + 0.01)).collect();
+            for &(id, w) in &more {
+                a.push(id, w);
+                full_view.push(id, w);
+            }
+            assert_eq!(a.sketch(), full_view.sketch(), "k={k}: post-merge pushes diverged");
+        }
+    }
+
+    #[test]
+    fn merge_sketch_rejects_incompatible_sketches() {
+        let mut a = StreamFastGm::new(16, 1);
+        a.push(1, 1.0);
+        let wrong_seed = StreamFastGm::new(16, 2).sketch();
+        assert_eq!(a.merge_sketch(&wrong_seed), Err(MergeError::SeedMismatch(1, 2)));
+        let wrong_k = StreamFastGm::new(8, 1).sketch();
+        assert_eq!(a.merge_sketch(&wrong_k), Err(MergeError::LengthMismatch(16, 8)));
+        let mut wrong_family = StreamFastGm::new(16, 1).sketch();
+        wrong_family.family = Family::Direct;
+        assert!(matches!(a.merge_sketch(&wrong_family), Err(MergeError::FamilyMismatch(_, _))));
     }
 
     #[test]

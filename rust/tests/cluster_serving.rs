@@ -1,20 +1,33 @@
 //! End-to-end acceptance + partition-correctness property tests for the
-//! cluster layer (ISSUE 4):
+//! cluster layer (ISSUE 4 + the ISSUE 5 replication refactor):
 //!
 //! * a 3-node local cluster ingests 200+ keys through the cluster client,
 //!   scatter-gather `topk` ranks exactly like a brute-force single-store
 //!   `estimate_jp` scan, cluster-wide cardinality lands within the
 //!   single-node estimator's error bound, and killing one node leaves
 //!   `topk` serving (degraded, non-panicking) while `upsert` to the dead
-//!   partition returns a typed error;
+//!   partition returns a typed error (the R=1 topology);
 //! * property (a): scatter-gather `topk` over an M-node cluster equals
 //!   single-node `topk` on the union store, for several M;
 //! * property (b): cluster-wide cardinality sketches — per-site stream
 //!   sketches moved through `sketch::codec` and merged — are bit-identical
-//!   to sketching the concatenated stream (§2.3 across the wire).
+//!   to sketching the concatenated stream (§2.3 across the wire);
+//! * replica-set properties: `owners(key, r)` prefix-stable in r, node
+//!   removal only promotes standbys;
+//! * the ISSUE 5 acceptance: at R=2 on 3 nodes, killing ANY single node
+//!   leaves `topk`, `card` and quorum-`upsert` fully available with
+//!   rankings/estimates identical to the healthy cluster, and `cluster
+//!   repair` after a cold restart converges every key's version and
+//!   registers bit-identically across its replica set;
+//! * under-quorum writes are typed `QuorumLost` errors naming the down
+//!   nodes, and mid-rebalance version skew resolves to the
+//!   highest-version blob in the `topk` gather (regression).
 
-use fastgm::coordinator::cluster::{ClusterClient, ClusterError, LocalCluster};
-use fastgm::coordinator::protocol::{Request, Response};
+use fastgm::coordinator::client::Client;
+use fastgm::coordinator::cluster::{
+    ClusterClient, ClusterError, LocalCluster, Partitioner, ReplicaConfig,
+};
+use fastgm::coordinator::protocol::{Request, Response, SketchSource};
 use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
 use fastgm::estimate::cardinality::cardinality_rel_std;
 use fastgm::estimate::jaccard::estimate_jp;
@@ -201,6 +214,7 @@ fn scatter_gather_equals_single_node_union_topk() {
         let resp = single.call(Request::Upsert {
             key: format!("doc{i:03}"),
             vector: d.clone(),
+            version: None,
         });
         assert!(matches!(resp, Response::Ack { .. }), "{resp:?}");
     }
@@ -305,4 +319,286 @@ fn connect_rejects_mismatched_node_configs() {
     a.stop();
     b.stop();
     c.stop();
+}
+
+/// Replication shapes the membership cannot carry are refused at connect.
+#[test]
+fn connect_rejects_impossible_replication_shapes() {
+    let cluster = LocalCluster::start(2, &cfg()).unwrap();
+    let addrs = cluster.addrs();
+    for (r, w) in [(3, 1), (0, 0), (2, 3), (1, 0)] {
+        let err = ClusterClient::connect_with(
+            &addrs,
+            ReplicaConfig { replication: r, write_quorum: w },
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("replication") || err.contains("quorum"), "R={r} W={w}: {err}");
+    }
+    let mut cc = ClusterClient::connect_with(
+        &addrs,
+        ReplicaConfig { replication: 2, write_quorum: 2 },
+    )
+    .unwrap();
+    assert!(cc.set_write_quorum(3).is_err());
+    cc.set_write_quorum(1).unwrap();
+    cluster.stop();
+}
+
+/// Replica-set properties of the HRW partitioner, via the public API:
+/// prefix stability in r, and node removal only promoting standbys.
+#[test]
+fn replica_sets_prefix_stable_and_standby_promoting() {
+    let ids: Vec<String> = (0..5).map(|i| format!("site-{i}")).collect();
+    let p = Partitioner::new(&ids).unwrap();
+    for i in 0..400 {
+        let key = format!("doc{i:04}");
+        // Prefix stability: owners(key, r) is the first r of one ranking.
+        let full = p.owners(&key, 5);
+        assert_eq!(full[0], p.owner(&key));
+        for r in 1..5 {
+            assert_eq!(p.owners(&key, r), full[..r], "'{key}' not prefix-stable at r={r}");
+        }
+    }
+    // Removing a node: keys without it in their replica set keep it
+    // verbatim; keys with it only promote their standby (rank R+1).
+    const R: usize = 2;
+    let survivors: Vec<String> = ids.iter().filter(|s| *s != "site-3").cloned().collect();
+    let q = Partitioner::new(&survivors).unwrap();
+    let mut affected = 0usize;
+    for i in 0..400 {
+        let key = format!("doc{i:04}");
+        let before: Vec<&String> = p.owners(&key, R).into_iter().map(|o| &ids[o]).collect();
+        let after: Vec<&String> = q.owners(&key, R).into_iter().map(|o| &survivors[o]).collect();
+        if before.iter().all(|id| *id != "site-3") {
+            assert_eq!(before, after, "'{key}' reshuffled though site-3 did not own it");
+        } else {
+            affected += 1;
+            let want: Vec<&String> = p
+                .owners(&key, R + 1)
+                .into_iter()
+                .map(|o| &ids[o])
+                .filter(|id| *id != "site-3")
+                .collect();
+            assert_eq!(after, want[..R], "'{key}' promoted the wrong standby");
+        }
+    }
+    // ~2/5 of keys have site-3 in their 2-owner set; sanity-check spread.
+    assert!(affected > 80 && affected < 240, "affected={affected}");
+}
+
+/// The ISSUE 5 acceptance: a 3-node cluster at R=2, W=1. Killing ANY
+/// single node leaves `topk` rankings and the merged cardinality sketch
+/// **identical** to the healthy cluster (not merely degraded), and
+/// quorum-upserts keep landing. After a cold restart, `repair` converges
+/// every key's version and registers bit-identically across its replica
+/// set — including the writes made while the node was dead.
+#[test]
+fn replicated_cluster_survives_any_single_kill_and_repairs() {
+    const M: usize = 3;
+    let (query, docs) = corpus(80);
+    let mut cluster = LocalCluster::start(M, &cfg()).unwrap();
+    let mut cc = ClusterClient::connect_with(
+        &cluster.addrs(),
+        ReplicaConfig { replication: 2, write_quorum: 1 },
+    )
+    .unwrap();
+    for (i, d) in docs.iter().enumerate() {
+        let info = cc.upsert(&format!("doc{i:03}"), d.clone()).unwrap();
+        assert!(info.contains("(2/2 replicas)"), "healthy writes hit both owners: {info}");
+    }
+    // Every key lives on exactly its 2 owners: sizes sum to 2N.
+    let total: f64 = cc.store_sizes().iter().map(|(_, s)| s.unwrap()).sum();
+    assert_eq!(total, 2.0 * docs.len() as f64);
+    let items: Vec<(u64, f64)> = (0..900u64).map(|i| (i * 977 + 13, 1.0)).collect();
+    cc.push("pkts", &items).unwrap();
+
+    let (healthy_hits, healthy_stats) = cc.topk(&query, LIMIT).unwrap();
+    assert_eq!(healthy_stats.live, M);
+    assert_eq!(healthy_hits, brute_force_topk(&query, &docs, LIMIT));
+    let healthy_sketch = cc.merged_stream_sketch("pkts").unwrap();
+    // Replicated pushes merge to EXACTLY the concatenated-stream sketch
+    // (§2.3: duplicates across replicas are idempotent).
+    let mut reference = StreamFastGm::new(K, SEED);
+    for &(id, w) in &items {
+        reference.push(id, w);
+    }
+    assert_eq!(healthy_sketch, reference.sketch());
+
+    let mut heal_seq = 0u64;
+    for victim in 0..M {
+        let victim_id = cc.node_id(victim).to_string();
+        cluster.kill(victim);
+
+        // Reads are IDENTICAL, not degraded: every partition still has a
+        // live replica, and §2.3 merges make the stream sketch exact.
+        let (hits, stats) = cc.topk(&query, LIMIT).unwrap();
+        assert_eq!(stats.live, M - 1, "{stats:?}");
+        assert_eq!(hits, healthy_hits, "victim {victim_id}: rankings drifted");
+        assert_eq!(
+            cc.merged_stream_sketch("pkts").unwrap(),
+            healthy_sketch,
+            "victim {victim_id}: merged stream sketch not bit-identical"
+        );
+
+        // Quorum writes stay available at W=1 — including to keys whose
+        // PRIMARY owner is the victim (the standby replica absorbs them).
+        let heal_key = (heal_seq..)
+            .map(|i| format!("heal{i}"))
+            .find(|k| cc.owners(k).contains(&victim))
+            .unwrap();
+        heal_seq += 1;
+        // Disjoint id space: scores 0 against every query, so the
+        // baseline rankings stay untouched.
+        let filler = SparseVector::new(
+            (0..10u64).map(|j| (victim as u64 + 7) * 1_000_000_000 + j).collect(),
+            (0..10).map(|_| 1.0).collect(),
+        );
+        let info = cc.upsert(&heal_key, filler).unwrap();
+        assert!(info.contains("(1/2 replicas)"), "{info}");
+        // Stream pushes replicate too (each element still has a live
+        // owner), and stay exact.
+        cc.push("pkts", &items[..100]).unwrap(); // idempotent replays
+        assert_eq!(cc.merged_stream_sketch("pkts").unwrap(), healthy_sketch);
+
+        // Cold restart: the node comes back EMPTY. Repair rebuilds it
+        // from its peers — store blobs by version, streams by §2.3 merge.
+        cluster.restart(victim).unwrap();
+        cc.reconnect(victim, cluster.addr(victim)).unwrap();
+        let report = cc.repair(&["pkts".to_string()]).unwrap();
+        assert!(report.keys_scanned >= docs.len(), "{report:?}");
+        assert!(report.keys_healed > 0, "cold node must be healed: {report:?}");
+        assert_eq!(report.stream_merges, M, "every live node absorbs the union");
+
+        // Convergence witness: every key's replica set agrees on version
+        // AND registers, bit for bit.
+        let mut union_keys: std::collections::BTreeMap<String, u64> =
+            std::collections::BTreeMap::new();
+        for i in 0..M {
+            for (k, v) in cc.node_keys(i).unwrap() {
+                union_keys.insert(k, v);
+            }
+        }
+        assert!(union_keys.len() >= docs.len());
+        let mut direct: Vec<Client> = (0..M)
+            .map(|i| Client::connect(cluster.addr(i)).unwrap())
+            .collect();
+        for (key, _) in union_keys {
+            let owners = cc.owners(&key);
+            let copies: Vec<(u64, fastgm::sketch::GumbelMaxSketch)> = owners
+                .iter()
+                .map(|&o| {
+                    direct[o]
+                        .sketch_fetch_versioned(&key, SketchSource::Store)
+                        .unwrap_or_else(|e| panic!("'{key}' missing on owner {o}: {e}"))
+                })
+                .collect();
+            for copy in &copies[1..] {
+                assert_eq!(copy, &copies[0], "'{key}' replicas diverged after repair");
+            }
+        }
+        // Stream states converged to the union sketch on every node.
+        for d in direct.iter_mut() {
+            assert_eq!(
+                d.sketch_fetch("pkts", SketchSource::Stream).unwrap(),
+                healthy_sketch,
+                "stream state did not converge"
+            );
+        }
+        // Repair is idempotent: a second pass heals nothing new.
+        let again = cc.repair(&["pkts".to_string()]).unwrap();
+        assert_eq!(again.keys_healed, 0, "{again:?}");
+        // And the healthy-cluster answers are back (heal keys score 0).
+        let (hits, stats) = cc.topk(&query, LIMIT).unwrap();
+        assert_eq!(stats.live, M);
+        assert_eq!(hits, healthy_hits);
+    }
+    cluster.stop();
+}
+
+/// Under-quorum writes are typed `QuorumLost` errors naming the down
+/// owners — for keyed writes and stream pushes alike — and lowering the
+/// quorum restores availability.
+#[test]
+fn under_quorum_writes_are_typed_quorum_lost() {
+    let mut cluster = LocalCluster::start(3, &cfg()).unwrap();
+    let mut cc = ClusterClient::connect_with(
+        &cluster.addrs(),
+        ReplicaConfig { replication: 2, write_quorum: 2 },
+    )
+    .unwrap();
+    const VICTIM: usize = 0;
+    let victim_id = cc.node_id(VICTIM).to_string();
+    cluster.kill(VICTIM);
+    let key = (0..)
+        .map(|i| format!("k{i}"))
+        .find(|k| cc.owners(k).contains(&VICTIM))
+        .unwrap();
+    let v = SparseVector::new(vec![1, 2], vec![1.0, 1.0]);
+    match cc.upsert(&key, v.clone()) {
+        Err(ClusterError::QuorumLost { want, acked, replication, down, .. }) => {
+            assert_eq!((want, acked, replication), (2, 1, 2));
+            assert_eq!(down, vec![victim_id.clone()], "must name the down owner");
+        }
+        other => panic!("expected QuorumLost, got {other:?}"),
+    }
+    // A key whose replica set avoids the victim still writes at W=2.
+    let safe = (0..)
+        .map(|i| format!("safe{i}"))
+        .find(|k| !cc.owners(k).contains(&VICTIM))
+        .unwrap();
+    assert!(cc.upsert(&safe, v.clone()).unwrap().contains("(2/2 replicas)"));
+    // Pushes: find items owned by the victim.
+    let items: Vec<(u64, f64)> = (0..200u64).map(|i| (i, 1.0)).collect();
+    match cc.push("s", &items) {
+        Err(ClusterError::QuorumLost { down, .. }) => {
+            assert_eq!(down, vec![victim_id.clone()]);
+        }
+        other => panic!("expected QuorumLost, got {other:?}"),
+    }
+    // W=1 restores availability for both.
+    cc.set_write_quorum(1).unwrap();
+    assert!(cc.upsert(&key, v).unwrap().contains("(1/2 replicas)"));
+    assert_eq!(cc.push("s", &items).unwrap(), items.len());
+    cluster.stop();
+}
+
+/// Regression (ISSUE 5 bugfix): when two nodes both hold a key — e.g. a
+/// mid-rebalance overlap — the gather must serve the HIGHEST-version
+/// copy, not whichever node happened to answer first. Here the stale
+/// copy sits on slot 0 (the old first-reporter-wins winner) and the live
+/// copy on slot 1; the query must score 1.0 against the NEW vector.
+#[test]
+fn topk_dedup_keeps_the_highest_version_copy() {
+    let cluster = LocalCluster::start(2, &cfg()).unwrap();
+    let mut cc = ClusterClient::connect(&cluster.addrs()).unwrap();
+    // A key whose rendezvous owner is slot 1 — slot 0 holding it is
+    // ownership drift (exactly what a rebalance leaves behind).
+    let key = (0..)
+        .map(|i| format!("doc{i}"))
+        .find(|k| cc.owner(k) == 1)
+        .unwrap();
+    let old_vec = SparseVector::new(vec![1, 2, 3], vec![1.0, 1.0, 1.0]);
+    let new_vec = SparseVector::new(vec![10, 11, 12], vec![1.0, 1.0, 1.0]);
+    // Slot 0: the stale residue at version 1 (written directly, behind
+    // the partitioner's back).
+    let mut direct0 = Client::connect(cluster.addr(0)).unwrap();
+    assert!(direct0.upsert(&key, old_vec.clone()).unwrap().contains("@v1"));
+    // Slot 1 (the real owner): two writes → version 2, new content.
+    let mut direct1 = Client::connect(cluster.addr(1)).unwrap();
+    direct1.upsert(&key, old_vec).unwrap();
+    assert!(direct1.upsert(&key, new_vec.clone()).unwrap().contains("@v2"));
+    // Both nodes report the key; the v2 blob must win the dedup, so the
+    // new vector scores a perfect self-similarity.
+    let (hits, stats) = cc.topk(&new_vec, 1).unwrap();
+    assert_eq!(stats.candidates, 1, "{stats:?}");
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].0, key);
+    assert!((hits[0].1 - 1.0).abs() < 1e-12, "stale v1 blob won the dedup: score {}", hits[0].1);
+    // The single-key read applies the same rule: highest version wins.
+    let (version, sk) = cc.fetch_key(&key).unwrap().expect("key is held");
+    assert_eq!(version, 2);
+    assert_eq!(sk, FastGm::new(K, SEED).sketch(&new_vec));
+    assert_eq!(cc.fetch_key("ghost").unwrap(), None);
+    cluster.stop();
 }

@@ -37,6 +37,9 @@ const ALL_REQUEST_OPS: &[&str] = &[
     "restore",
     "hello",
     "sketch_fetch",
+    "store_keys",
+    "store_put",
+    "stream_merge",
     "metrics",
     "ping",
 ];
@@ -49,6 +52,7 @@ const ALL_RESPONSE_TYPES: &[&str] = &[
     "topk",
     "metrics",
     "stats",
+    "keys",
     "hello",
     "sketch_blob",
     "error",
@@ -137,11 +141,12 @@ fn golden_values_decode_losslessly() {
     assert_eq!(items, vec![(3, 0.5), ((1u64 << 53) + 1, 1.0)]);
 
     // The keyed-store ops sit between ping and the algo-bearing sketch.
-    let Request::Upsert { key, vector } = decode_request(lines[12]).unwrap() else {
+    let Request::Upsert { key, vector, version } = decode_request(lines[12]).unwrap() else {
         panic!("golden line 12 must be an upsert request")
     };
     assert_eq!(key, "doc1");
     assert_eq!(vector, SparseVector::new(vec![1, 5], vec![0.5, 2.0]));
+    assert_eq!(version, None, "version-less golden upsert must decode to None");
     let Request::TopK { limit, .. } = decode_request(lines[14]).unwrap() else {
         panic!("golden line 14 must be a topk request")
     };
@@ -160,6 +165,28 @@ fn golden_values_decode_losslessly() {
     assert_eq!(name, "doc1");
     assert_eq!(source, fastgm::coordinator::protocol::SketchSource::Store);
 
+    // The replication ops (versioned upsert + anti-entropy walk/install).
+    let Request::Upsert { version, .. } = decode_request(lines[20]).unwrap() else {
+        panic!("golden line 20 must be the versioned upsert request")
+    };
+    assert_eq!(version, Some(7));
+    assert_eq!(
+        decode_request(lines[21]).unwrap(),
+        Request::StoreKeys { after: None, limit: 100 }
+    );
+    assert_eq!(
+        decode_request(lines[22]).unwrap(),
+        Request::StoreKeys { after: Some("doc1".into()), limit: 64 }
+    );
+    let Request::StorePut { data } = decode_request(lines[23]).unwrap() else {
+        panic!("golden line 23 must be a store_put request")
+    };
+    assert_eq!(data, "46474d53");
+    let Request::StreamMerge { stream, data } = decode_request(lines[24]).unwrap() else {
+        panic!("golden line 24 must be a stream_merge request")
+    };
+    assert_eq!((stream.as_str(), data.as_str()), ("s", "46474d53"));
+
     let resp_lines = golden_lines(RESPONSES);
     let Response::Sketch { sketch, .. } = decode_response(resp_lines[0]).unwrap() else {
         panic!("first golden response must be a sketch")
@@ -174,4 +201,12 @@ fn golden_values_decode_losslessly() {
     };
     assert_eq!(sketch.seed, u64::MAX);
     assert_eq!(sketch.s[0], (1u64 << 53) + 1);
+
+    // The store_keys page reply carries (key, version) pairs.
+    let Response::Keys { keys } =
+        decode_response(resp_lines[resp_lines.len() - 1]).unwrap()
+    else {
+        panic!("last golden response must be a keys page")
+    };
+    assert_eq!(keys, vec![("doc1".to_string(), 7), ("doc2".to_string(), 1)]);
 }

@@ -1,10 +1,12 @@
 //! Black-box round-trip property tests for the snapshot codec
 //! (`fastgm::sketch::codec`) across **every** registered algorithm family,
 //! plus clean-error coverage for corrupt, truncated and version-mismatched
-//! inputs. The in-module unit tests cover byte-level details; these lock
-//! the public contract the coordinator's snapshot/restore ops rely on.
+//! inputs, and v1 (pre-per-key-version) decode compatibility. The
+//! in-module unit tests cover byte-level details; these lock the public
+//! contract the coordinator's snapshot/restore and the cluster's
+//! repair/gather paths rely on.
 
-use fastgm::sketch::codec::{decode_store, encode_store, MAGIC, VERSION};
+use fastgm::sketch::codec::{decode_store, encode_store, MAGIC, MIN_VERSION, VERSION};
 use fastgm::sketch::engine::{build, AlgorithmId, EngineParams};
 use fastgm::sketch::{Family, GumbelMaxSketch, Sketcher, SparseVector, EMPTY_REGISTER};
 use fastgm::util::hash::fnv1a64;
@@ -18,14 +20,21 @@ fn random_vec(r: &mut SplitMix64, n: usize) -> SparseVector {
 }
 
 /// One sketch per registered algorithm — iterating the registry keeps a
-/// newly added algorithm covered automatically.
-fn entries_across_all_families() -> Vec<(String, GumbelMaxSketch)> {
+/// newly added algorithm covered automatically. Entry versions span the
+/// interesting range (0 = pre-versioning, huge = >2^53 exactness).
+fn entries_across_all_families() -> Vec<(String, u64, GumbelMaxSketch)> {
     let mut r = SplitMix64::new(11);
-    let mut entries: Vec<(String, GumbelMaxSketch)> = AlgorithmId::ALL
+    let mut entries: Vec<(String, u64, GumbelMaxSketch)> = AlgorithmId::ALL
         .into_iter()
-        .map(|id| {
+        .enumerate()
+        .map(|(i, id)| {
             let sk = build(id, EngineParams::new(32, 7)).sketch(&random_vec(&mut r, 20));
-            (format!("doc-{}", id.name()), sk)
+            let version = match i {
+                0 => 0,
+                1 => u64::MAX - 9,
+                i => i as u64,
+            };
+            (format!("doc-{}", id.name()), version, sk)
         })
         .collect();
     // Plus a mostly-empty sketch: +inf / EMPTY_REGISTER sentinels and a
@@ -33,7 +42,7 @@ fn entries_across_all_families() -> Vec<(String, GumbelMaxSketch)> {
     let mut sparse = GumbelMaxSketch::empty(Family::Ordered, 7, 32);
     sparse.y[3] = 0.5;
     sparse.s[3] = u64::MAX - 7;
-    entries.push(("nearly-empty".into(), sparse));
+    entries.push(("nearly-empty".into(), 1, sparse));
     entries
 }
 
@@ -50,8 +59,9 @@ fn every_algorithm_family_roundtrips_bit_identically() {
     let bytes = encode_store(&entries);
     let back = decode_store(&bytes).unwrap();
     assert_eq!(back.len(), entries.len());
-    for ((ka, a), (kb, b)) in entries.iter().zip(&back) {
+    for ((ka, va, a), (kb, vb, b)) in entries.iter().zip(&back) {
         assert_eq!(ka, kb);
+        assert_eq!(va, vb, "{ka}: entry version drifted");
         assert_eq!(a.family, b.family, "{ka}");
         assert_eq!(a.seed, b.seed, "{ka}");
         assert_eq!(a.s, b.s, "{ka}");
@@ -61,7 +71,7 @@ fn every_algorithm_family_roundtrips_bit_identically() {
         }
     }
     // Sentinels survived.
-    let (_, sparse) = back.last().unwrap();
+    let (_, _, sparse) = back.last().unwrap();
     assert!(sparse.y[0].is_infinite());
     assert_eq!(sparse.s[0], EMPTY_REGISTER);
     assert_eq!(sparse.s[3], u64::MAX - 7);
@@ -74,14 +84,70 @@ fn random_stores_roundtrip() {
     let mut r = SplitMix64::new(99);
     for round in 0..20 {
         let n = r.next_range(0, 12);
-        let entries: Vec<(String, GumbelMaxSketch)> = (0..n)
+        let entries: Vec<(String, u64, GumbelMaxSketch)> = (0..n)
             .map(|i| {
                 let f = fastgm::sketch::fastgm::FastGm::new(16, round as u64);
-                (format!("k{i}"), f.sketch(&random_vec(&mut r, 1 + i)))
+                (format!("k{i}"), r.next_u64(), f.sketch(&random_vec(&mut r, 1 + i)))
             })
             .collect();
         let bytes = encode_store(&entries);
         assert_eq!(decode_store(&bytes).unwrap(), entries, "round {round}");
+    }
+}
+
+/// The v1 layout (no per-entry version field, container version 1) still
+/// decodes — registers bit-identical, every entry surfacing as version 0
+/// so any post-upgrade write supersedes it. Built by hand here so the
+/// compatibility contract is against the frozen v1 bytes, not against
+/// whatever this build's encoder writes.
+#[test]
+fn v1_snapshots_decode_as_version_zero() {
+    assert_eq!(MIN_VERSION, 1, "v1 must stay decodable");
+    let entries = entries_across_all_families();
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&MAGIC);
+    bytes.extend_from_slice(&1u16.to_le_bytes()); // container v1
+    bytes.extend_from_slice(&0u16.to_le_bytes()); // flags
+    bytes.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    for (key, _, sk) in &entries {
+        bytes.extend_from_slice(&(key.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(key.as_bytes());
+        // v1 entry: family tag directly after the key (no version field).
+        let tag = match sk.family {
+            Family::Ordered => 0u8,
+            Family::Direct => 1,
+            Family::Icws => 2,
+            Family::Bag => 3,
+            Family::MinHash => 4,
+        };
+        bytes.push(tag);
+        bytes.extend_from_slice(&sk.seed.to_le_bytes());
+        bytes.extend_from_slice(&(sk.k() as u64).to_le_bytes());
+        for &y in &sk.y {
+            bytes.extend_from_slice(&y.to_bits().to_le_bytes());
+        }
+        for &s in &sk.s {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+    }
+    let sum = fnv1a64(&bytes);
+    bytes.extend_from_slice(&sum.to_le_bytes());
+
+    let back = decode_store(&bytes).unwrap();
+    assert_eq!(back.len(), entries.len());
+    for ((ka, _, a), (kb, vb, b)) in entries.iter().zip(&back) {
+        assert_eq!(ka, kb);
+        assert_eq!(*vb, 0, "{ka}: v1 entries must decode as version 0");
+        assert_eq!(a, b, "{ka}: v1 registers must round-trip bit-identically");
+    }
+    // Re-encoding a v1 decode upgrades it to the current container
+    // version (still decodable, versions preserved at 0).
+    let upgraded = encode_store(&back);
+    assert_eq!(upgraded[4], VERSION as u8);
+    assert_eq!(decode_store(&upgraded).unwrap(), back);
+    // v1 is as strictly checked as v2.
+    for len in (0..bytes.len()).step_by(9) {
+        assert!(decode_store(&bytes[..len]).is_err(), "v1 prefix {len} decoded");
     }
 }
 
@@ -122,6 +188,10 @@ fn version_mismatch_is_a_named_clean_error() {
         err.contains(&format!("version {next}")),
         "version mismatch must name the version: {err}"
     );
+    // Below MIN_VERSION is refused too (v0 never existed).
+    let mut ancient = bytes.clone();
+    ancient[4..6].copy_from_slice(&0u16.to_le_bytes());
+    assert!(decode_store(&refresh_checksum(ancient)).is_err());
     // And the magic check still guards non-snapshots with valid length.
     let mut not_ours = bytes;
     not_ours[..4].copy_from_slice(b"ELFY");

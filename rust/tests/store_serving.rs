@@ -71,7 +71,11 @@ fn upsert_snapshot_restart_restore_topk_matches_bruteforce() {
     let reqs: Vec<Request> = docs
         .iter()
         .enumerate()
-        .map(|(i, d)| Request::Upsert { key: format!("doc{i:03}"), vector: d.clone() })
+        .map(|(i, d)| Request::Upsert {
+            key: format!("doc{i:03}"),
+            vector: d.clone(),
+            version: None,
+        })
         .collect();
     for chunk in reqs.chunks(32) {
         for r in client.call_pipelined(chunk).unwrap() {
