@@ -8,17 +8,23 @@
 //! `cargo bench --bench perf_probe -- --json BENCH_perf.json` additionally
 //! writes a machine-readable summary (name → ns/op + ops/s) so runs
 //! accumulate a diffable perf trajectory; default stdout output is
-//! unchanged.
+//! unchanged. `FASTGM_BENCH_BUDGET` (seconds per benchmark) tunes the
+//! wall-clock budget — CI uses a small value, local runs the default.
+//!
+//! The `kernel.*` and `sketch.*` probes come in scalar-vs-SIMD pairs
+//! (`<name>_scalar_ns` vs `<name>_ns`) via `kernels::set_forced`; because
+//! the backends are bit-identical, forcing is purely a measurement knob.
 use fastgm::data::synthetic::{dense_vector, WeightDist};
 use fastgm::data::stream::generate;
 use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::kernels::{self, Backend};
 use fastgm::sketch::lemiesz::LemieszSketch;
 use fastgm::sketch::pminhash::PMinHash;
 use fastgm::sketch::sharded::ShardedSketcher;
 use fastgm::sketch::stream_fastgm::StreamFastGm;
 use fastgm::sketch::{Family, GumbelMaxSketch, SketchScratch, Sketcher};
 use fastgm::util::bench::{Bencher, Suite};
-use fastgm::util::rng::SplitMix64;
+use fastgm::util::rng::{direct_element_hash, SplitMix64};
 
 /// `--json <path>` / `--json=<path>` from the post-`--` bench args.
 /// A `--json` with no path is an error, not a silent no-op — the caller
@@ -49,7 +55,12 @@ fn main() {
             std::process::exit(2);
         }
     };
-    let b = Bencher { budget: 0.6, samples: 9, warmup: 0.08 };
+    let mut b = Bencher { budget: 0.6, samples: 9, warmup: 0.08 };
+    if let Ok(s) = std::env::var("FASTGM_BENCH_BUDGET") {
+        if let Ok(x) = s.parse::<f64>() {
+            b.budget = x.max(0.05);
+        }
+    }
     let mut suite = Suite::new();
     let mut rng = SplitMix64::new(42);
     for (n, k) in [(1000usize, 64usize), (100, 256), (1000, 256), (1000, 1024), (10_000, 1024)] {
@@ -159,6 +170,84 @@ fn main() {
             for &(id, w) in &stream.events { s.push(id, w); }
             s.sketch()
         }));
+    }
+
+    // Kernel-level scalar-vs-SIMD pairs: the same kernel, forced onto each
+    // backend. `<name>_scalar_ns` is the baseline; `<name>_ns` is whatever
+    // the host's best backend delivers (scalar again on non-AVX2 hosts, so
+    // the pair degenerates to noise there rather than lying).
+    {
+        let k = 1024usize;
+        let mut r = SplitMix64::new(7);
+        let ys: Vec<f64> = (0..k).map(|_| r.next_exp()).collect();
+        let oy: Vec<f64> = (0..k).map(|_| r.next_exp()).collect();
+        let os: Vec<u64> = (0..k).map(|_| r.next_u64()).collect();
+        let sa: Vec<u64> = (0..k).map(|_| r.next_range(0, 50) as u64).collect();
+        let sb: Vec<u64> = (0..k).map(|_| r.next_range(0, 50) as u64).collect();
+        let h = direct_element_hash(42, 7);
+        for (suffix, backend) in [("_scalar", Backend::Scalar), ("", kernels::detected())] {
+            let mut stream_rng = SplitMix64::new(1);
+            let mut buf = vec![0.0f64; k];
+            suite.record(b.run(&format!("kernel.uniform_batch{suffix}_ns"), || {
+                kernels::fill_uniform_block_with(backend, &mut stream_rng, &mut buf);
+                buf[0]
+            }));
+            let mut stream_rng2 = SplitMix64::new(1);
+            suite.record(b.run(&format!("kernel.gumbel_batch{suffix}_ns"), || {
+                kernels::fill_exp_block_with(backend, &mut stream_rng2, &mut buf);
+                buf[0]
+            }));
+            suite.record(b.run(&format!("kernel.argmin{suffix}_ns"), || {
+                kernels::argmin_f64_with(backend, &ys)
+            }));
+            let mut my = ys.clone();
+            let mut ms = os.clone();
+            suite.record(b.run(&format!("kernel.merge{suffix}_ns"), || {
+                kernels::merge_min_into_with(backend, &mut my, &mut ms, &oy, &os);
+                my[0]
+            }));
+            suite.record(b.run(&format!("kernel.match{suffix}_ns"), || {
+                kernels::match_count_with(backend, &sa, &sb)
+            }));
+            let mut row = vec![0.0f32; k];
+            suite.record(b.run(&format!("kernel.direct_row{suffix}_ns"), || {
+                kernels::direct_exp_row_with(backend, h, 0, &mut row);
+                row[0]
+            }));
+        }
+        for name in [
+            "kernel.uniform_batch",
+            "kernel.gumbel_batch",
+            "kernel.argmin",
+            "kernel.merge",
+            "kernel.match",
+            "kernel.direct_row",
+        ] {
+            if let Some(sp) = suite.speedup(&format!("{name}_scalar_ns"), &format!("{name}_ns")) {
+                println!("  -> {name} SIMD speedup: {sp:.2}x");
+            }
+        }
+    }
+
+    // End-to-end sketch pairs under a forced backend: what the kernel wins
+    // buy at the algorithm level. `set_forced` is a process-global
+    // measurement knob (backends are bit-identical), reset afterwards.
+    {
+        let v_ord = dense_vector(&mut rng, 10_000, WeightDist::Uniform01);
+        let v_dir = dense_vector(&mut rng, 1000, WeightDist::Uniform01);
+        let fg = FastGm::new(1024, 1);
+        let pm = PMinHash::new(256, 1);
+        for (suffix, backend) in [("_scalar", Backend::Scalar), ("", kernels::detected())] {
+            kernels::set_forced(Some(backend));
+            suite.record(b.run(&format!("sketch.fastgm{suffix}_ns"), || fg.sketch(&v_ord)));
+            suite.record(b.run(&format!("sketch.pminhash{suffix}_ns"), || pm.sketch(&v_dir)));
+        }
+        kernels::set_forced(None);
+        for name in ["sketch.fastgm", "sketch.pminhash"] {
+            if let Some(sp) = suite.speedup(&format!("{name}_scalar_ns"), &format!("{name}_ns")) {
+                println!("  -> {name} end-to-end SIMD speedup: {sp:.2}x");
+            }
+        }
     }
 
     if let Some(path) = json {

@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""CI gate for the perf trajectory: validate a freshly measured perf_probe
+summary and diff its probe-name coverage against the committed BENCH_*.json
+baselines.
+
+    python3 ci/bench_coverage.py <fresh.json> [--repo-root DIR]
+
+Checks (offline, stdlib only):
+
+1. ``fresh.json`` parses and every entry matches the ``Suite::to_json``
+   schema: name -> {ns_per_op, ops_per_s, p10_ns, p90_ns, iters, samples},
+   with positive timings, consistent ns/ops inverses, and p10 <= p90.
+2. Every probe name appearing in any committed ``BENCH_*.json`` also
+   appears in the fresh run — a renamed or dropped probe breaks the
+   trajectory's diffability and must be a deliberate baseline update, not
+   an accident. Extra fresh probes are fine (they are tomorrow's
+   baseline). With no committed baselines yet, the fresh file simply
+   seeds the trajectory.
+
+Absolute timings are deliberately NOT compared: shared CI runners are too
+noisy to gate on; the committed numbers are quiet-box references (see
+README "Kernels & perf trajectory").
+"""
+
+import glob
+import json
+import os
+import sys
+
+REQUIRED = ("ns_per_op", "ops_per_s", "p10_ns", "p90_ns", "iters", "samples")
+
+
+def fail(msg):
+    print(f"bench_coverage: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def validate_schema(path, data):
+    if not isinstance(data, dict) or not data:
+        fail(f"{path}: expected a non-empty name->stats object")
+    for name, stats in data.items():
+        if not isinstance(stats, dict):
+            fail(f"{path}: probe '{name}' is not an object")
+        for key in REQUIRED:
+            if key not in stats:
+                fail(f"{path}: probe '{name}' missing '{key}'")
+            if not isinstance(stats[key], (int, float)):
+                fail(f"{path}: probe '{name}' field '{key}' is not numeric")
+        ns, ops = stats["ns_per_op"], stats["ops_per_s"]
+        if ns <= 0 or ops <= 0:
+            fail(f"{path}: probe '{name}' has non-positive timing ({ns} ns, {ops} ops/s)")
+        if abs(ns * ops / 1e9 - 1.0) > 1e-6:
+            fail(f"{path}: probe '{name}' ns/ops inconsistent ({ns} * {ops} != 1e9)")
+        if stats["p10_ns"] > stats["p90_ns"]:
+            fail(f"{path}: probe '{name}' p10 > p90")
+        if stats["iters"] < 1 or stats["samples"] < 1:
+            fail(f"{path}: probe '{name}' has no measurements")
+
+
+def main():
+    args = sys.argv[1:]
+    root = "."
+    if "--repo-root" in args:
+        i = args.index("--repo-root")
+        root = args[i + 1]
+        del args[i : i + 2]
+    if len(args) != 1:
+        fail("usage: bench_coverage.py <fresh.json> [--repo-root DIR]")
+    fresh_path = args[0]
+
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    validate_schema(fresh_path, fresh)
+    print(f"bench_coverage: {fresh_path}: {len(fresh)} probes, schema OK")
+
+    baselines = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not baselines:
+        print("bench_coverage: no committed baselines yet — fresh run seeds the trajectory")
+        return
+    for bpath in baselines:
+        with open(bpath) as f:
+            base = json.load(f)
+        validate_schema(bpath, base)
+        missing = sorted(set(base) - set(fresh))
+        if missing:
+            fail(
+                f"{bpath}: {len(missing)} probe(s) vanished from the fresh run "
+                f"(rename/drop must be a deliberate baseline update): {missing[:10]}"
+            )
+        print(f"bench_coverage: {bpath}: all {len(base)} probes still measured")
+    print("bench_coverage: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -83,6 +83,11 @@ class SplitMix64:
         span = hi - lo + 1
         return lo + ((self.next_u32() * span) >> 32)
 
+    def next_exp(self):
+        # EXP(1) via inversion; ``log`` is the only libm call, so parity
+        # with Rust's ``-next_f64().ln()`` is 1e-12-relative, not bitwise.
+        return -math.log(self.next_f64())
+
 
 class ElementRace:
     """Queue Q_i: k EXP(w) arrivals in ascending order + register marks."""
@@ -168,6 +173,23 @@ def generate_fixture():
         {"seed": str(seed), "element": str(elem), "first_u64": str(SplitMix64.for_element(seed, elem).next_u64())}
         for (seed, elem) in [(0, 1), (0, 2), (42, 0), (7, MASK64), (MASK64, 12345)]
     ]
+
+    # Batched-variate blocks: the reference stream for the SIMD kernel
+    # layer (rust/src/sketch/kernels.rs). The Rust side fills these via
+    # fill_uniform_block / fill_exp_block on BOTH backends; uniforms are
+    # dyadic (bit-exact across languages), exponentials are 1e-12-relative.
+    # 16 draws straddle the 4-wide AVX2 body and its scalar tail.
+    fix["batched_blocks"] = []
+    for seed in [0, 42, MASK64]:
+        u = SplitMix64(seed)
+        e = SplitMix64(seed)
+        fix["batched_blocks"].append(
+            {
+                "seed": str(seed),
+                "uniform": [repr(u.next_f64()) for _ in range(16)],
+                "exp": [repr(e.next_exp()) for _ in range(16)],
+            }
+        )
 
     fix["element_race"] = []
     for (seed, elem, w, k) in [

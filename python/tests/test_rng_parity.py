@@ -68,6 +68,19 @@ def test_for_element_keying(fixture):
         assert r.next_u64() == int(case["first_u64"])
 
 
+def test_batched_block_streams(fixture):
+    """The reference stream for the Rust SIMD kernel layer: uniforms are
+    dyadic (exact), exponentials go through ``log`` (1e-12 relative)."""
+    for case in fixture["batched_blocks"]:
+        seed = int(case["seed"])
+        u = SplitMix64(seed)
+        for want in case["uniform"]:
+            assert u.next_f64() == float(want)
+        e = SplitMix64(seed)
+        for want in case["exp"]:
+            assert math.isclose(e.next_exp(), float(want), rel_tol=1e-12)
+
+
 def test_element_race_streams(fixture):
     for case in fixture["element_race"]:
         race = ElementRace(
@@ -96,6 +109,11 @@ def test_fixture_is_current():
     for a, b in zip(fresh["element_race"], on_disk["element_race"]):
         assert a["registers"] == b["registers"]
         for x, y in zip(a["arrivals"], b["arrivals"]):
+            assert math.isclose(float(x), float(y), rel_tol=1e-12)
+    for a, b in zip(fresh["batched_blocks"], on_disk["batched_blocks"]):
+        assert a["seed"] == b["seed"]
+        assert a["uniform"] == b["uniform"], "uniform blocks are dyadic-exact"
+        for x, y in zip(a["exp"], b["exp"]):
             assert math.isclose(float(x), float(y), rel_tol=1e-12)
 
 

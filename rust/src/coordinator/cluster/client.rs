@@ -45,7 +45,7 @@ use crate::coordinator::client::Client;
 use crate::coordinator::merger::merge_tree;
 use crate::coordinator::protocol::{HelloInfo, Request, Response, SketchSource, PROTOCOL_VERSION};
 use crate::estimate::cardinality::estimate_cardinality;
-use crate::estimate::jaccard::estimate_jp;
+use crate::estimate::jaccard::{estimate_jp, estimate_jp_batch};
 use crate::sketch::codec;
 use crate::sketch::engine::{self, EngineParams};
 use crate::sketch::{AlgorithmId, GumbelMaxSketch, Sketcher, SparseVector};
@@ -704,12 +704,20 @@ impl ClusterClient {
                 log::warn!("gather: candidate '{name}' unreachable on every replica, skipped");
             }
         }
-        let mut scored: Vec<(String, f64)> = Vec::with_capacity(best.len());
-        for (name, (_, sk)) in best {
-            let score = estimate_jp(&query, &sk)
-                .map_err(|e| ClusterError::Gather(format!("candidate '{name}': {e}")))?;
-            scored.push((name, score));
-        }
+        // Central re-rank of every winning copy in one batched pass (the
+        // per-pair error semantics are preserved by `estimate_jp_batch`:
+        // the first incompatible candidate aborts with the same message
+        // the old per-candidate loop produced).
+        let mut scored: Vec<(String, f64)> =
+            estimate_jp_batch(&query, best.iter().map(|(name, (_, sk))| (name.clone(), sk)))
+                .map_err(|e| {
+                    let name = best
+                        .iter()
+                        .find(|(_, (_, sk))| estimate_jp(&query, sk).is_err())
+                        .map(|(name, _)| name.as_str())
+                        .unwrap_or("?");
+                    ClusterError::Gather(format!("candidate '{name}': {e}"))
+                })?;
         let reranked = scored.len();
         scored.sort_by(|a, b| {
             b.1.partial_cmp(&a.1).expect("estimates are never NaN").then(a.0.cmp(&b.0))

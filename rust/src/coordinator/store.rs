@@ -43,7 +43,7 @@
 //! copy). A bands-only index mode would halve that; it is a known
 //! follow-up, not a correctness issue.
 
-use crate::estimate::jaccard::estimate_jp;
+use crate::estimate::jaccard::estimate_jp_batch;
 use crate::lsh::{LshIndex, LshParams};
 use crate::sketch::codec;
 use crate::sketch::{Family, GumbelMaxSketch, MergeError};
@@ -271,13 +271,26 @@ impl SketchStore {
             let names = self.names.read().expect("store names lock");
             candidate_ids.iter().filter_map(|id| names.get(id).cloned()).collect()
         };
-        let mut scored = Vec::with_capacity(resolved.len());
+        // Group candidates by shard: each shard lock is taken once and its
+        // candidates re-rank in one batched pass (vanished candidates are
+        // skipped by the filter_map, exactly like the old per-key loop).
+        let mut by_shard: Vec<Vec<String>> = vec![Vec::new(); self.shards.len()];
         for name in resolved {
-            let shard = self.shards[self.shard_of(&name)].read().expect("store shard lock");
-            let Some(v) = shard.get(&name) else { continue };
-            let score = estimate_jp(query, &v.sketch)?;
+            let idx = self.shard_of(&name);
+            by_shard[idx].push(name);
+        }
+        let mut scored = Vec::new();
+        for (idx, names) in by_shard.into_iter().enumerate() {
+            if names.is_empty() {
+                continue;
+            }
+            let shard = self.shards[idx].read().expect("store shard lock");
+            let batch = estimate_jp_batch(
+                query,
+                names.into_iter().filter_map(|name| shard.get(&name).map(|v| (name, &v.sketch))),
+            )?;
             drop(shard);
-            scored.push((name, score));
+            scored.extend(batch);
         }
         let stats = TopKStats {
             candidates: candidate_ids.len(),
@@ -296,9 +309,11 @@ impl SketchStore {
         let _gate = self.gate.read().expect("store gate");
         let mut scored = Vec::new();
         for shard in &self.shards {
-            for (name, v) in shard.read().expect("store shard lock").iter() {
-                scored.push((name.clone(), estimate_jp(query, &v.sketch)?));
-            }
+            let guard = shard.read().expect("store shard lock");
+            let batch =
+                estimate_jp_batch(query, guard.iter().map(|(name, v)| (name.clone(), &v.sketch)))?;
+            drop(guard);
+            scored.extend(batch);
         }
         let stats = TopKStats {
             candidates: scored.len(),

@@ -7,7 +7,7 @@
 //! * `J_W(u,v) = Σ min(u_i,v_i) / Σ max(u_i,v_i)` — weighted Jaccard
 //!   (ground truth for BagMinHash/ICWS and the simnet Fig. 10d metric).
 
-use crate::sketch::{GumbelMaxSketch, MergeError, SparseVector, EMPTY_REGISTER};
+use crate::sketch::{kernels, GumbelMaxSketch, MergeError, SparseVector};
 use std::collections::HashMap;
 
 /// Exact probability Jaccard similarity.
@@ -81,10 +81,29 @@ pub fn estimate_jp(
         });
     }
     let k = a.k();
-    let m = (0..k)
-        .filter(|&j| a.s[j] != EMPTY_REGISTER && a.s[j] == b.s[j])
-        .count();
+    let m = kernels::match_count(&a.s, &b.s);
     Ok(m as f64 / k as f64)
+}
+
+/// Estimate `J_P` of one query sketch against many candidates in one pass —
+/// the serving re-rank primitive (`coordinator::store` top-k and the cluster
+/// client's scatter-gather re-rank).
+///
+/// Defined as the per-pair loop over [`estimate_jp`], so estimates, tie
+/// behaviour (order is preserved, ranking stays stable downstream) and
+/// error semantics — including the family-rejection paths — are *identical
+/// by construction* to calling `estimate_jp` per candidate; the SIMD win
+/// lives inside the shared `match_count` kernel. The first failing
+/// candidate aborts the batch, exactly like the historical caller loops.
+pub fn estimate_jp_batch<'a, K>(
+    query: &GumbelMaxSketch,
+    candidates: impl IntoIterator<Item = (K, &'a GumbelMaxSketch)>,
+) -> Result<Vec<(K, f64)>, MergeError> {
+    let mut out = Vec::new();
+    for (key, sk) in candidates {
+        out.push((key, estimate_jp(query, sk)?));
+    }
+    Ok(out)
 }
 
 /// Theoretical standard deviation of the J_P estimator (Theorem 1).

@@ -51,6 +51,10 @@ pub struct SketchScratch {
     pub(crate) stream: Option<StreamFastGm>,
     /// BagMinHash "binary tree of maxima" stop-bound tracker.
     pub(crate) bag_tracker: Option<MaxTracker>,
+    /// Direct-family EXP(1) row staging buffer (`kernels::direct_exp_row`
+    /// output for one element across all k registers), pooled so the
+    /// P-MinHash hot loop stays allocation-free under scratch reuse.
+    pub(crate) direct_row: Vec<f32>,
     /// Times [`SketchScratch::begin_use`] was called (coordinator metric).
     pub(crate) uses: u64,
 }
@@ -90,6 +94,14 @@ impl SketchScratch {
             self.stream = Some(StreamFastGm::new(k, seed));
         }
         self.stream.as_mut().expect("stream state just ensured")
+    }
+
+    /// The pooled Direct-family row buffer, sized to `k` (contents are
+    /// overwritten by `kernels::direct_exp_row` before every read).
+    pub(crate) fn direct_row_mut(&mut self, k: usize) -> &mut [f32] {
+        self.direct_row.clear();
+        self.direct_row.resize(k, 0.0);
+        &mut self.direct_row
     }
 
     /// The BagMinHash max tracker, reset to `n` leaves of `init` (recreated

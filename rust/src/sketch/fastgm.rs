@@ -19,6 +19,7 @@
 //! approximate. The property test below locks that in.
 
 use super::engine::SketchScratch;
+use super::kernels;
 use super::order_stats::ElementRace;
 use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};
 
@@ -137,7 +138,7 @@ impl FastGm {
         // ------------------------------------------------------- FastPrune
         // j* = argmax_j y_j; a queue whose next arrival exceeds y_{j*} can
         // never improve any register.
-        let mut jstar = argmax(&out.y);
+        let mut jstar = kernels::argmax_f64(&out.y);
         let alive = &mut scratch.alive;
         let next_alive = &mut scratch.next_alive;
         alive.clear();
@@ -166,7 +167,7 @@ impl FastGm {
                         out.y[c] = b;
                         out.s[c] = id;
                         if c == jstar {
-                            jstar = argmax(&out.y);
+                            jstar = kernels::argmax_f64(&out.y);
                         }
                     }
                 }
@@ -179,16 +180,6 @@ impl FastGm {
 
         stats
     }
-}
-
-fn argmax(y: &[f64]) -> usize {
-    let mut best = 0;
-    for (j, &v) in y.iter().enumerate() {
-        if v > y[best] {
-            best = j;
-        }
-    }
-    best
 }
 
 impl Sketcher for FastGm {

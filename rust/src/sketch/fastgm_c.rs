@@ -13,6 +13,11 @@
 //!
 //! The output registers are identical to FastGM's (both are lossless early
 //! terminations of the same Ordered-family race), which the test asserts.
+//!
+//! The hot loops live in the shared [`StreamFastGm`](super::stream_fastgm)
+//! core, so this baseline rides the `sketch::kernels` argmax/merge layer
+//! transitively — the FastGM-vs-conference perf comparison stays about the
+//! *schedule*, not about who got vectorized.
 
 use super::engine::SketchScratch;
 use super::{Family, GumbelMaxSketch, Sketcher, SparseVector};

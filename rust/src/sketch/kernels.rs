@@ -1,0 +1,836 @@
+//! SIMD-speed sketch kernels, bit-identical to their scalar twins.
+//!
+//! Every hot inner loop of the sketchers funnels through this module:
+//! batched SplitMix64 / exponential variate generation (Ordered family),
+//! Direct-family per-element rows, register min-merges, argmin/argmax scans
+//! over register arrays, and the match-count at the heart of `estimate_jp`.
+//!
+//! Two backends exist per kernel:
+//!
+//! * **`Backend::Scalar`** — plain Rust, *the* reference semantics. This is
+//!   the code path the property tests pin against and the one every other
+//!   platform runs.
+//! * **`Backend::Simd`** — AVX2 intrinsics behind **runtime** feature
+//!   detection (`is_x86_feature_detected!`), so a single portable binary
+//!   picks the fast path on capable x86-64 hosts and silently falls back to
+//!   scalar elsewhere. No `RUSTFLAGS=-Ctarget-cpu=native` required (see
+//!   README §Kernels).
+//!
+//! The contract — enforced by `rust/tests/kernel_equivalence.rs` — is that
+//! both backends produce **bit-identical** outputs. That is only possible
+//! because each vectorized kernel is built exclusively from operations that
+//! are exact or IEEE-deterministic:
+//!
+//! * integer adds/xors/shifts/multiplies (exact mod 2^64 — the 64-bit `mullo`
+//!   is emulated from `mul_epu32` partial products, which is exact);
+//! * `u64 → f64` via the `OR 0x4330…; subtract 2^52` trick (exact: the
+//!   mantissa is < 2^52) and dyadic `+0.5`, `×2^-52` (exact);
+//! * IEEE `min`/`max`/compares/blends (exact, no reassociation);
+//! * `ln` stays **scalar libm in both backends** — a polynomial vector log
+//!   would diverge in the last ulp, so we never vectorize it.
+//!
+//! Floating-point *sums* are deliberately absent: SIMD reassociation changes
+//! rounding, and nothing here is allowed to change a single output bit.
+//!
+//! NaN note: register arrays never contain NaN by construction (arrivals are
+//! `-ln(u)` with `u ∈ (0,1)` scaled by a positive weight — strictly positive
+//! or `+inf`, never `0·inf`), which the two-pass SIMD argmin/argmax relies
+//! on. The scalar scans are total either way.
+
+use crate::util::rng::{direct_exp_from_hash, SplitMix64};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::EMPTY_REGISTER;
+
+// ---------------------------------------------------------------------------
+// Backend selection.
+// ---------------------------------------------------------------------------
+
+/// Which implementation family a kernel call runs on.
+///
+/// `Simd` means "the widest vectorized path this host supports" — AVX2 on
+/// x86-64 with runtime support, otherwise it degrades to the scalar code.
+/// Because the backends are bit-identical, selection is a pure performance
+/// knob and is safe to flip at any time, even mid-stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Simd,
+}
+
+/// Process-wide override: 0 = auto (use [`detected`]), 1 = scalar, 2 = simd.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+/// Force every auto-dispatched kernel call onto one backend (`None` returns
+/// to auto-detection). Used by `perf_probe` to measure scalar-vs-SIMD pairs
+/// and by the equivalence suite; harmless anywhere because the backends
+/// agree bit-for-bit.
+pub fn set_forced(backend: Option<Backend>) {
+    let v = match backend {
+        None => 0,
+        Some(Backend::Scalar) => 1,
+        Some(Backend::Simd) => 2,
+    };
+    FORCED.store(v, Ordering::Relaxed);
+}
+
+/// The best backend this host supports.
+pub fn detected() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    if cpu_has_avx2() {
+        return Backend::Simd;
+    }
+    Backend::Scalar
+}
+
+/// The backend auto-dispatched calls use right now ([`detected`] unless
+/// overridden by [`set_forced`]).
+pub fn active() -> Backend {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => Backend::Scalar,
+        2 => Backend::Simd,
+        _ => detected(),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn cpu_has_avx2() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| std::arch::is_x86_feature_detected!("avx2"))
+}
+
+/// Whether `backend` resolves to the AVX2 code paths on this host.
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+#[inline]
+fn simd_available(backend: Backend) -> bool {
+    match backend {
+        Backend::Scalar => false,
+        Backend::Simd => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                cpu_has_avx2()
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched Ordered-family variates (SplitMix64 stream).
+// ---------------------------------------------------------------------------
+
+/// Fill `out` with the next `out.len()` draws of `rng`'s `next_u64` stream,
+/// leaving `rng` exactly where the scalar loop would.
+pub fn fill_u64_block(rng: &mut SplitMix64, out: &mut [u64]) {
+    fill_u64_block_with(active(), rng, out)
+}
+
+/// [`fill_u64_block`] on an explicit backend.
+pub fn fill_u64_block_with(backend: Backend, rng: &mut SplitMix64, out: &mut [u64]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        let m = out.len() & !3;
+        if m > 0 {
+            let base = rng.raw_state();
+            // SAFETY: AVX2 support verified at runtime by `simd_available`.
+            unsafe { avx2::fill_u64(base, &mut out[..m]) };
+            let gamma = crate::util::rng::GOLDEN_GAMMA;
+            rng.set_raw_state(base.wrapping_add(gamma.wrapping_mul(m as u64)));
+        }
+        for x in &mut out[m..] {
+            *x = rng.next_u64();
+        }
+        return;
+    }
+    let _ = backend;
+    for x in out.iter_mut() {
+        *x = rng.next_u64();
+    }
+}
+
+/// Fill `out` with the next `out.len()` draws of `rng`'s `next_f64` stream
+/// (uniform in the open unit interval), bit-identical to the scalar loop.
+pub fn fill_uniform_block(rng: &mut SplitMix64, out: &mut [f64]) {
+    fill_uniform_block_with(active(), rng, out)
+}
+
+/// [`fill_uniform_block`] on an explicit backend.
+pub fn fill_uniform_block_with(backend: Backend, rng: &mut SplitMix64, out: &mut [f64]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        let m = out.len() & !3;
+        if m > 0 {
+            let base = rng.raw_state();
+            // SAFETY: AVX2 support verified at runtime by `simd_available`.
+            unsafe { avx2::fill_uniform(base, &mut out[..m]) };
+            let gamma = crate::util::rng::GOLDEN_GAMMA;
+            rng.set_raw_state(base.wrapping_add(gamma.wrapping_mul(m as u64)));
+        }
+        for x in &mut out[m..] {
+            *x = rng.next_f64();
+        }
+        return;
+    }
+    let _ = backend;
+    for x in out.iter_mut() {
+        *x = rng.next_f64();
+    }
+}
+
+/// Fill `out` with the next `out.len()` draws of `rng`'s `next_exp` stream
+/// (the Gumbel-race EXP(1) arrivals), bit-identical to the scalar loop.
+///
+/// The uniform stage is vectorized; the `-ln(u)` stage is scalar libm in
+/// BOTH backends (see module docs), so batching wins exactly the RNG share
+/// of the cost — `perf_probe` tracks both `kernel.uniform_batch_*` and
+/// `kernel.gumbel_batch_*` to keep that split honest.
+pub fn fill_exp_block(rng: &mut SplitMix64, out: &mut [f64]) {
+    fill_exp_block_with(active(), rng, out)
+}
+
+/// [`fill_exp_block`] on an explicit backend.
+pub fn fill_exp_block_with(backend: Backend, rng: &mut SplitMix64, out: &mut [f64]) {
+    fill_uniform_block_with(backend, rng, out);
+    for x in out.iter_mut() {
+        *x = -x.ln();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Direct-family rows (stateless counter RNG).
+// ---------------------------------------------------------------------------
+
+/// Write `out[t] = direct_exp_from_hash(h, j0 + t)` — one element's EXP(1)
+/// row across consecutive registers. `h` is the hoisted
+/// `direct_element_hash(seed, i)`; because the Direct RNG is stateless per
+/// `(h, j)`, callers may produce a long row in chunks at any `j0` split and
+/// get the same bits.
+pub fn direct_exp_row(h: u32, j0: u32, out: &mut [f32]) {
+    direct_exp_row_with(active(), h, j0, out)
+}
+
+/// [`direct_exp_row`] on an explicit backend.
+pub fn direct_exp_row_with(backend: Backend, h: u32, j0: u32, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        // SAFETY: AVX2 support verified at runtime by `simd_available`.
+        unsafe { avx2::direct_exp_row(h, j0, out) };
+        return;
+    }
+    let _ = backend;
+    for (t, slot) in out.iter_mut().enumerate() {
+        *slot = direct_exp_from_hash(h, j0.wrapping_add(t as u32));
+    }
+}
+
+/// Fused register update for the Direct-family sketchers: for each `j`,
+/// `b = row[j] as f64 * inv_w; if b < y[j] { y[j] = b; s[j] = id; }`.
+///
+/// `row` is an EXP(1) row from [`direct_exp_row`]; `inv_w` is `1/w`
+/// (possibly `+inf` for denormal-adjacent weights — the product is then
+/// `+inf`, never NaN, since the row is strictly positive).
+pub fn scaled_min_update(row: &[f32], inv_w: f64, id: u64, y: &mut [f64], s: &mut [u64]) {
+    scaled_min_update_with(active(), row, inv_w, id, y, s)
+}
+
+/// [`scaled_min_update`] on an explicit backend.
+pub fn scaled_min_update_with(
+    backend: Backend,
+    row: &[f32],
+    inv_w: f64,
+    id: u64,
+    y: &mut [f64],
+    s: &mut [u64],
+) {
+    assert!(row.len() == y.len() && y.len() == s.len(), "kernel length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        // SAFETY: lengths checked above; AVX2 verified at runtime.
+        unsafe { avx2::scaled_min_update(row, inv_w, id, y, s) };
+        return;
+    }
+    let _ = backend;
+    for j in 0..y.len() {
+        let b = row[j] as f64 * inv_w;
+        if b < y[j] {
+            y[j] = b;
+            s[j] = id;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Register-array scans.
+// ---------------------------------------------------------------------------
+
+/// Index of the maximum of `xs` (first index on ties — the prune-threshold
+/// scan `y* = max_j y_j` of FastGM/Stream-FastGM). `xs` must be non-empty
+/// and NaN-free.
+pub fn argmax_f64(xs: &[f64]) -> usize {
+    argmax_f64_with(active(), xs)
+}
+
+/// [`argmax_f64`] on an explicit backend.
+pub fn argmax_f64_with(backend: Backend, xs: &[f64]) -> usize {
+    assert!(!xs.is_empty(), "argmax of empty slice");
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        // SAFETY: non-empty checked above; AVX2 verified at runtime.
+        return unsafe { avx2::argmax(xs) };
+    }
+    let _ = backend;
+    let mut best = 0;
+    for (j, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Index of the minimum of `xs` (first index on ties). `xs` must be
+/// non-empty and NaN-free.
+pub fn argmin_f64(xs: &[f64]) -> usize {
+    argmin_f64_with(active(), xs)
+}
+
+/// [`argmin_f64`] on an explicit backend.
+pub fn argmin_f64_with(backend: Backend, xs: &[f64]) -> usize {
+    assert!(!xs.is_empty(), "argmin of empty slice");
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        // SAFETY: non-empty checked above; AVX2 verified at runtime.
+        return unsafe { avx2::argmin(xs) };
+    }
+    let _ = backend;
+    let mut best = 0;
+    for (j, &x) in xs.iter().enumerate() {
+        if x < xs[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+/// Lane-wise min-merge of register pairs: where `oy[j] < y[j]`, take
+/// `(oy[j], os[j])`. Strict `<` keeps the left operand on ties, exactly like
+/// the historical scalar loop in `GumbelMaxSketch::merge_in_place`.
+pub fn merge_min_into(y: &mut [f64], s: &mut [u64], oy: &[f64], os: &[u64]) {
+    merge_min_into_with(active(), y, s, oy, os)
+}
+
+/// [`merge_min_into`] on an explicit backend.
+pub fn merge_min_into_with(backend: Backend, y: &mut [f64], s: &mut [u64], oy: &[f64], os: &[u64]) {
+    assert!(
+        y.len() == s.len() && y.len() == oy.len() && y.len() == os.len(),
+        "kernel length mismatch"
+    );
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        // SAFETY: lengths checked above; AVX2 verified at runtime.
+        unsafe { avx2::merge_min_into(y, s, oy, os) };
+        return;
+    }
+    let _ = backend;
+    for j in 0..y.len() {
+        if oy[j] < y[j] {
+            y[j] = oy[j];
+            s[j] = os[j];
+        }
+    }
+}
+
+/// Number of registers still holding [`EMPTY_REGISTER`].
+pub fn count_empty(s: &[u64]) -> usize {
+    count_empty_with(active(), s)
+}
+
+/// [`count_empty`] on an explicit backend.
+pub fn count_empty_with(backend: Backend, s: &[u64]) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        // SAFETY: AVX2 verified at runtime.
+        return unsafe { avx2::count_empty(s) };
+    }
+    let _ = backend;
+    s.iter().filter(|&&x| x == EMPTY_REGISTER).count()
+}
+
+/// Number of register positions where `a` and `b` agree on a **filled**
+/// register — the numerator of `estimate_jp`. Positions where both sides
+/// are [`EMPTY_REGISTER`] do not count as matches.
+pub fn match_count(a: &[u64], b: &[u64]) -> usize {
+    match_count_with(active(), a, b)
+}
+
+/// [`match_count`] on an explicit backend.
+pub fn match_count_with(backend: Backend, a: &[u64], b: &[u64]) -> usize {
+    assert_eq!(a.len(), b.len(), "kernel length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    if simd_available(backend) {
+        // SAFETY: lengths checked above; AVX2 verified at runtime.
+        return unsafe { avx2::match_count(a, b) };
+    }
+    let _ = backend;
+    let mut n = 0;
+    for j in 0..a.len() {
+        if a[j] != EMPTY_REGISTER && a[j] == b[j] {
+            n += 1;
+        }
+    }
+    n
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend. Compiled on every x86-64 build, entered only behind runtime
+// detection. Every function here mirrors one scalar loop above — see the
+// module docs for why each operation sequence is bit-exact.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::EMPTY_REGISTER;
+    use crate::util::rng::GOLDEN_GAMMA;
+    use std::arch::x86_64::*;
+
+    /// `a * b mod 2^64` per 64-bit lane, from 32×32→64 partial products:
+    /// `lo·lo + ((lo·hi + hi·lo) << 32)`. Exact — the dropped `hi·hi` term
+    /// only feeds bits ≥ 64.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn mullo_epi64(a: __m256i, b: __m256i) -> __m256i {
+        let a_hi = _mm256_srli_epi64(a, 32);
+        let b_hi = _mm256_srli_epi64(b, 32);
+        let ll = _mm256_mul_epu32(a, b);
+        let lh = _mm256_mul_epu32(a, b_hi);
+        let hl = _mm256_mul_epu32(a_hi, b);
+        _mm256_add_epi64(ll, _mm256_slli_epi64(_mm256_add_epi64(lh, hl), 32))
+    }
+
+    /// The SplitMix64 output mix over four pre-advanced counter states.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn splitmix4(state: __m256i) -> __m256i {
+        let m1 = _mm256_set1_epi64x(0xBF58_476D_1CE4_E5B9_u64 as i64);
+        let m2 = _mm256_set1_epi64x(0x94D0_49BB_1331_11EB_u64 as i64);
+        let mut z = state;
+        z = mullo_epi64(_mm256_xor_si256(z, _mm256_srli_epi64(z, 30)), m1);
+        z = mullo_epi64(_mm256_xor_si256(z, _mm256_srli_epi64(z, 27)), m2);
+        _mm256_xor_si256(z, _mm256_srli_epi64(z, 31))
+    }
+
+    /// Counter states for draws `i+1 ..= i+4` from base state `base`.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn counter4(base: u64, i: u64) -> __m256i {
+        let g = GOLDEN_GAMMA;
+        let s = base.wrapping_add(g.wrapping_mul(i));
+        _mm256_setr_epi64x(
+            s.wrapping_add(g) as i64,
+            s.wrapping_add(g.wrapping_mul(2)) as i64,
+            s.wrapping_add(g.wrapping_mul(3)) as i64,
+            s.wrapping_add(g.wrapping_mul(4)) as i64,
+        )
+    }
+
+    /// `out.len()` must be a multiple of 4 (caller handles the tail).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fill_u64(base: u64, out: &mut [u64]) {
+        debug_assert_eq!(out.len() % 4, 0);
+        let mut i = 0;
+        while i < out.len() {
+            let z = splitmix4(counter4(base, i as u64));
+            _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, z);
+            i += 4;
+        }
+    }
+
+    /// u64 → uniform f64 in (0,1): `((z >> 12) + 0.5) * 2^-52`, with the
+    /// integer→double step done exactly via `OR 2^52; subtract 2^52`.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn uniform4(z: __m256i) -> __m256d {
+        const TWO52: f64 = 4_503_599_627_370_496.0;
+        let mant = _mm256_srli_epi64(z, 12);
+        let biased = _mm256_or_si256(mant, _mm256_set1_epi64x(0x4330_0000_0000_0000_u64 as i64));
+        let x = _mm256_sub_pd(_mm256_castsi256_pd(biased), _mm256_set1_pd(TWO52));
+        _mm256_mul_pd(_mm256_add_pd(x, _mm256_set1_pd(0.5)), _mm256_set1_pd(1.0 / TWO52))
+    }
+
+    /// `out.len()` must be a multiple of 4 (caller handles the tail).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fill_uniform(base: u64, out: &mut [f64]) {
+        debug_assert_eq!(out.len() % 4, 0);
+        let mut i = 0;
+        while i < out.len() {
+            let u = uniform4(splitmix4(counter4(base, i as u64)));
+            _mm256_storeu_pd(out.as_mut_ptr().add(i), u);
+            i += 4;
+        }
+    }
+
+    /// Direct-family EXP(1) row: 8 registers per iteration. The two fmix32
+    /// rounds and the `(bits >> 9) + 0.5` scaling are vectorized (integer /
+    /// dyadic — exact); the final `-ln` stays scalar libm.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn direct_exp_row(h: u32, j0: u32, out: &mut [f32]) {
+        let m = out.len() & !7;
+        let hvec = _mm256_set1_epi32(h as i32);
+        let jmul = _mm256_set1_epi32(0x85EB_CA77_u32 as i32);
+        let c1 = _mm256_set1_epi32(0x85EB_CA6B_u32 as i32);
+        let c2 = _mm256_set1_epi32(0xC2B2_AE35_u32 as i32);
+        let lane = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        let half = _mm256_set1_ps(0.5);
+        let scale = _mm256_set1_ps(1.0 / 8_388_608.0);
+        let mut i = 0;
+        let mut buf = [0.0f32; 8];
+        while i < m {
+            let j = _mm256_add_epi32(_mm256_set1_epi32(j0.wrapping_add(i as u32) as i32), lane);
+            // fmix32(h ^ j·0x85EB_CA77), vectorized (wrapping integer ops).
+            let mut x = _mm256_xor_si256(hvec, _mm256_mullo_epi32(j, jmul));
+            x = _mm256_xor_si256(x, _mm256_srli_epi32(x, 16));
+            x = _mm256_mullo_epi32(x, c1);
+            x = _mm256_xor_si256(x, _mm256_srli_epi32(x, 13));
+            x = _mm256_mullo_epi32(x, c2);
+            x = _mm256_xor_si256(x, _mm256_srli_epi32(x, 16));
+            // (bits >> 9) fits in 23 bits → cvtepi32_ps is exact.
+            let u = _mm256_mul_ps(
+                _mm256_add_ps(_mm256_cvtepi32_ps(_mm256_srli_epi32(x, 9)), half),
+                scale,
+            );
+            _mm256_storeu_ps(buf.as_mut_ptr(), u);
+            for (t, &v) in buf.iter().enumerate() {
+                *out.get_unchecked_mut(i + t) = -v.ln();
+            }
+            i += 8;
+        }
+        for t in m..out.len() {
+            out[t] = super::direct_exp_from_hash(h, j0.wrapping_add(t as u32));
+        }
+    }
+
+    /// Fused `b = row[j]·inv_w; if b < y[j] { y[j] = b; s[j] = id }`.
+    /// `cvtps_pd` is exact (f32 ⊂ f64) and the single multiply rounds once,
+    /// exactly like the scalar expression.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scaled_min_update(row: &[f32], inv_w: f64, id: u64, y: &mut [f64], s: &mut [u64]) {
+        let m = y.len() & !3;
+        let wvec = _mm256_set1_pd(inv_w);
+        let idvec = _mm256_set1_epi64x(id as i64);
+        let mut i = 0;
+        while i < m {
+            let r = _mm256_cvtps_pd(_mm_loadu_ps(row.as_ptr().add(i)));
+            let b = _mm256_mul_pd(r, wvec);
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            let lt = _mm256_cmp_pd::<_CMP_LT_OQ>(b, yv);
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_blendv_pd(yv, b, lt));
+            let sv = _mm256_loadu_si256(s.as_ptr().add(i) as *const __m256i);
+            let picked = _mm256_blendv_epi8(sv, idvec, _mm256_castpd_si256(lt));
+            _mm256_storeu_si256(s.as_mut_ptr().add(i) as *mut __m256i, picked);
+            i += 4;
+        }
+        for j in m..y.len() {
+            let b = row[j] as f64 * inv_w;
+            if b < y[j] {
+                y[j] = b;
+                s[j] = id;
+            }
+        }
+    }
+
+    /// Two-pass argmax: fold the maximum value, then find its first index.
+    /// Equivalent to the scalar strict-`>` first-wins scan for NaN-free
+    /// input (IEEE max and `==` are exact; +inf compares normally).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn argmax(xs: &[f64]) -> usize {
+        let m = xs.len() & !3;
+        let mut best = xs[0];
+        if m >= 4 {
+            let mut acc = _mm256_loadu_pd(xs.as_ptr());
+            let mut i = 4;
+            while i < m {
+                acc = _mm256_max_pd(acc, _mm256_loadu_pd(xs.as_ptr().add(i)));
+                i += 4;
+            }
+            let mut lanes = [0.0f64; 4];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+            for &t in &lanes {
+                if t > best {
+                    best = t;
+                }
+            }
+        }
+        for &x in &xs[m..] {
+            if x > best {
+                best = x;
+            }
+        }
+        let needle = _mm256_set1_pd(best);
+        let mut i = 0;
+        while i < m {
+            let eq = _mm256_cmp_pd::<_CMP_EQ_OQ>(_mm256_loadu_pd(xs.as_ptr().add(i)), needle);
+            let mask = _mm256_movemask_pd(eq);
+            if mask != 0 {
+                return i + mask.trailing_zeros() as usize;
+            }
+            i += 4;
+        }
+        for (j, &x) in xs[m..].iter().enumerate() {
+            if x == best {
+                return m + j;
+            }
+        }
+        // Unreachable for NaN-free input; mirror the scalar scan's fallback.
+        0
+    }
+
+    /// Two-pass argmin; see [`argmax`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn argmin(xs: &[f64]) -> usize {
+        let m = xs.len() & !3;
+        let mut best = xs[0];
+        if m >= 4 {
+            let mut acc = _mm256_loadu_pd(xs.as_ptr());
+            let mut i = 4;
+            while i < m {
+                acc = _mm256_min_pd(acc, _mm256_loadu_pd(xs.as_ptr().add(i)));
+                i += 4;
+            }
+            let mut lanes = [0.0f64; 4];
+            _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+            for &t in &lanes {
+                if t < best {
+                    best = t;
+                }
+            }
+        }
+        for &x in &xs[m..] {
+            if x < best {
+                best = x;
+            }
+        }
+        let needle = _mm256_set1_pd(best);
+        let mut i = 0;
+        while i < m {
+            let eq = _mm256_cmp_pd::<_CMP_EQ_OQ>(_mm256_loadu_pd(xs.as_ptr().add(i)), needle);
+            let mask = _mm256_movemask_pd(eq);
+            if mask != 0 {
+                return i + mask.trailing_zeros() as usize;
+            }
+            i += 4;
+        }
+        for (j, &x) in xs[m..].iter().enumerate() {
+            if x == best {
+                return m + j;
+            }
+        }
+        0
+    }
+
+    /// Lane-wise min-merge; strict `<` keeps the left side on ties, exactly
+    /// like the scalar loop.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn merge_min_into(y: &mut [f64], s: &mut [u64], oy: &[f64], os: &[u64]) {
+        let m = y.len() & !3;
+        let mut i = 0;
+        while i < m {
+            let yv = _mm256_loadu_pd(y.as_ptr().add(i));
+            let ov = _mm256_loadu_pd(oy.as_ptr().add(i));
+            let lt = _mm256_cmp_pd::<_CMP_LT_OQ>(ov, yv);
+            _mm256_storeu_pd(y.as_mut_ptr().add(i), _mm256_blendv_pd(yv, ov, lt));
+            let sv = _mm256_loadu_si256(s.as_ptr().add(i) as *const __m256i);
+            let osv = _mm256_loadu_si256(os.as_ptr().add(i) as *const __m256i);
+            let picked = _mm256_blendv_epi8(sv, osv, _mm256_castpd_si256(lt));
+            _mm256_storeu_si256(s.as_mut_ptr().add(i) as *mut __m256i, picked);
+            i += 4;
+        }
+        for j in m..y.len() {
+            if oy[j] < y[j] {
+                y[j] = oy[j];
+                s[j] = os[j];
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn count_empty(s: &[u64]) -> usize {
+        let m = s.len() & !3;
+        let needle = _mm256_set1_epi64x(EMPTY_REGISTER as i64);
+        let mut count = 0usize;
+        let mut i = 0;
+        while i < m {
+            let eq =
+                _mm256_cmpeq_epi64(_mm256_loadu_si256(s.as_ptr().add(i) as *const __m256i), needle);
+            count += _mm256_movemask_pd(_mm256_castsi256_pd(eq)).count_ones() as usize;
+            i += 4;
+        }
+        count + s[m..].iter().filter(|&&x| x == EMPTY_REGISTER).count()
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn match_count(a: &[u64], b: &[u64]) -> usize {
+        let m = a.len() & !3;
+        let empty = _mm256_set1_epi64x(EMPTY_REGISTER as i64);
+        let mut count = 0usize;
+        let mut i = 0;
+        while i < m {
+            let av = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+            let bv = _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i);
+            let eq = _mm256_cmpeq_epi64(av, bv);
+            let is_empty = _mm256_cmpeq_epi64(av, empty);
+            // matched AND NOT empty.
+            let hit = _mm256_andnot_si256(is_empty, eq);
+            count += _mm256_movemask_pd(_mm256_castsi256_pd(hit)).count_ones() as usize;
+            i += 4;
+        }
+        for j in m..a.len() {
+            if a[j] != EMPTY_REGISTER && a[j] == b[j] {
+                count += 1;
+            }
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run `f` on both backends; on hosts without AVX2 the Simd leg simply
+    /// re-exercises the scalar path (still a valid identity).
+    fn both<T: PartialEq + std::fmt::Debug>(f: impl Fn(Backend) -> T) -> T {
+        let a = f(Backend::Scalar);
+        let b = f(Backend::Simd);
+        assert_eq!(a, b, "backends diverged");
+        a
+    }
+
+    #[test]
+    fn u64_block_matches_scalar_stream_and_state() {
+        for len in [0usize, 1, 3, 4, 5, 8, 31, 64, 65] {
+            let mut want = SplitMix64::new(0xFEED);
+            let scalar: Vec<u64> = (0..len).map(|_| want.next_u64()).collect();
+            for backend in [Backend::Scalar, Backend::Simd] {
+                let mut rng = SplitMix64::new(0xFEED);
+                let mut out = vec![0u64; len];
+                fill_u64_block_with(backend, &mut rng, &mut out);
+                assert_eq!(out, scalar, "len {len} backend {backend:?}");
+                // Stream continues exactly where the scalar loop left it.
+                assert_eq!(rng.next_u64(), want.clone().next_u64(), "len {len} continuation");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_and_exp_blocks_are_bit_identical_across_backends() {
+        for len in [1usize, 4, 7, 33] {
+            let bits = both(|backend| {
+                let mut rng = SplitMix64::new(42);
+                let mut out = vec![0.0f64; len];
+                fill_uniform_block_with(backend, &mut rng, &mut out);
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            });
+            let mut want = SplitMix64::new(42);
+            for (i, b) in bits.iter().enumerate() {
+                assert_eq!(*b, want.next_f64().to_bits(), "uniform #{i} of {len}");
+            }
+            let exp_bits = both(|backend| {
+                let mut rng = SplitMix64::new(42);
+                let mut out = vec![0.0f64; len];
+                fill_exp_block_with(backend, &mut rng, &mut out);
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            });
+            let mut want = SplitMix64::new(42);
+            for (i, b) in exp_bits.iter().enumerate() {
+                assert_eq!(*b, want.next_exp().to_bits(), "exp #{i} of {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn direct_rows_and_fused_update_match_scalar() {
+        use crate::util::rng::direct_element_hash;
+        let h = direct_element_hash(99, 1234);
+        for len in [1usize, 7, 8, 9, 100] {
+            let row = both(|backend| {
+                let mut out = vec![0.0f32; len];
+                direct_exp_row_with(backend, h, 5, &mut out);
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            });
+            for (t, b) in row.iter().enumerate() {
+                assert_eq!(*b, direct_exp_from_hash(h, 5 + t as u32).to_bits(), "row[{t}]");
+            }
+            // Chunk-splitting invariance (the lemiesz push pattern).
+            let mut whole = vec![0.0f32; len];
+            direct_exp_row(h, 0, &mut whole);
+            let mut split = vec![0.0f32; len];
+            let cut = len / 2;
+            direct_exp_row(h, 0, &mut split[..cut]);
+            direct_exp_row(h, cut as u32, &mut split[cut..]);
+            assert_eq!(
+                whole.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                split.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            let mut row_f = vec![0.0f32; len];
+            direct_exp_row(h, 0, &mut row_f);
+            both(|backend| {
+                let mut y = vec![0.9f64; len];
+                let mut s = vec![EMPTY_REGISTER; len];
+                scaled_min_update_with(backend, &row_f, 2.0, 77, &mut y, &mut s);
+                (y.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), s)
+            });
+        }
+    }
+
+    #[test]
+    fn scans_agree_with_scalar_reference_on_awkward_shapes() {
+        let mut r = SplitMix64::new(3);
+        for len in [1usize, 2, 3, 4, 5, 7, 8, 9, 63, 64, 65] {
+            let mut xs: Vec<f64> = (0..len).map(|_| r.next_exp()).collect();
+            // Force ties and infinities into the mix.
+            if len >= 4 {
+                xs[len / 2] = xs[0];
+                xs[len - 1] = f64::INFINITY;
+            }
+            both(|backend| argmax_f64_with(backend, &xs));
+            both(|backend| argmin_f64_with(backend, &xs));
+            let a: Vec<u64> = (0..len)
+                .map(|_| {
+                    if r.next_f64() < 0.3 {
+                        EMPTY_REGISTER
+                    } else {
+                        r.next_range(0, 3) as u64
+                    }
+                })
+                .collect();
+            let b: Vec<u64> = a
+                .iter()
+                .map(|&x| if r.next_f64() < 0.5 { x } else { r.next_range(0, 3) as u64 })
+                .collect();
+            both(|backend| count_empty_with(backend, &a));
+            both(|backend| match_count_with(backend, &a, &b));
+            let oy: Vec<f64> = (0..len).map(|_| r.next_exp()).collect();
+            let os: Vec<u64> = (0..len).map(|_| r.next_u64()).collect();
+            both(|backend| {
+                let mut y = xs.clone();
+                let mut s = os.clone();
+                merge_min_into_with(backend, &mut y, &mut s, &oy, &os);
+                (y.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), s)
+            });
+        }
+    }
+
+    #[test]
+    fn forced_backend_round_trips() {
+        let before = active();
+        set_forced(Some(Backend::Scalar));
+        assert_eq!(active(), Backend::Scalar);
+        set_forced(None);
+        assert_eq!(active(), detected());
+        let _ = before;
+    }
+}

@@ -7,8 +7,9 @@
 //! `Σ y_j ~ Γ(k, c)` gives the estimator `ĉ = (k-1)/Σ y_j`
 //! (see `estimate::cardinality`).
 
-use crate::util::rng::direct_exp;
+use crate::util::rng::direct_element_hash;
 use super::engine::SketchScratch;
+use super::kernels;
 use super::{fold_id, Family, GumbelMaxSketch, Sketcher, SparseVector, EMPTY_REGISTER};
 
 /// Incremental Lemiesz sketch over a stream. Seed is the unified `u64`,
@@ -102,14 +103,19 @@ impl Sketcher for Lemiesz {
 #[inline]
 fn update_registers(rng_seed: u32, id: u64, w: f64, y: &mut [f64], s: &mut [u64]) -> u64 {
     debug_assert!(w > 0.0 && w.is_finite());
-    let i = fold_id(id);
+    let h = direct_element_hash(rng_seed, fold_id(id));
     let inv_w = 1.0 / w;
-    for j in 0..y.len() {
-        let b = direct_exp(rng_seed, i, j as u32) as f64 * inv_w;
-        if b < y[j] {
-            y[j] = b;
-            s[j] = id;
-        }
+    // Chunked through a stack row buffer (the incremental push has no
+    // scratch arena). Splitting at any j is lossless because the Direct
+    // RNG is stateless per (h, j) — every chunk draws the same bits the
+    // historical full-row loop drew.
+    let mut row = [0.0f32; 64];
+    let mut j0 = 0usize;
+    while j0 < y.len() {
+        let m = (y.len() - j0).min(row.len());
+        kernels::direct_exp_row(h, j0 as u32, &mut row[..m]);
+        kernels::scaled_min_update(&row[..m], inv_w, id, &mut y[j0..j0 + m], &mut s[j0..j0 + m]);
+        j0 += m;
     }
     y.len() as u64
 }

@@ -32,6 +32,7 @@
 pub mod order_stats;
 pub mod codec;
 pub mod engine;
+pub mod kernels;
 pub mod fastgm;
 pub mod sharded;
 pub mod stream_fastgm;
@@ -258,12 +259,7 @@ impl GumbelMaxSketch {
 
     pub fn merge_in_place(&mut self, other: &GumbelMaxSketch) -> Result<(), MergeError> {
         self.check_compatible(other)?;
-        for j in 0..self.k() {
-            if other.y[j] < self.y[j] {
-                self.y[j] = other.y[j];
-                self.s[j] = other.s[j];
-            }
-        }
+        kernels::merge_min_into(&mut self.y, &mut self.s, &other.y, &other.s);
         Ok(())
     }
 

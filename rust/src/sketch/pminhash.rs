@@ -8,8 +8,9 @@
 //! interchangeable (same family, same seed ⇒ same registers up to f32
 //! rounding; the runtime integration test checks that).
 
-use crate::util::rng::direct_exp;
+use crate::util::rng::direct_element_hash;
 use super::engine::SketchScratch;
+use super::kernels;
 use super::{fold_id, Family, GumbelMaxSketch, Sketcher, SparseVector};
 
 #[derive(Debug, Clone)]
@@ -51,19 +52,18 @@ impl Sketcher for PMinHash {
         self.seed
     }
 
-    fn sketch_into(&self, v: &SparseVector, _scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
+    fn sketch_into(&self, v: &SparseVector, scratch: &mut SketchScratch, out: &mut GumbelMaxSketch) {
         out.reset(Family::Direct, self.seed, self.k);
         let rng_seed = self.rng_seed();
+        // Per element: hoist the j-invariant hash half, stage the EXP(1)
+        // row in the pooled scratch buffer, then run the fused min/argmin
+        // update — both kernel stages are bit-identical to the historical
+        // `direct_exp(seed, i, j) * (1/w)` inner loop.
+        let row = scratch.direct_row_mut(self.k);
         for (id, w) in v.positive() {
-            let i32id = fold_id(id);
-            let inv_w = 1.0 / w;
-            for j in 0..self.k {
-                let b = direct_exp(rng_seed, i32id, j as u32) as f64 * inv_w;
-                if b < out.y[j] {
-                    out.y[j] = b;
-                    out.s[j] = id;
-                }
-            }
+            let h = direct_element_hash(rng_seed, fold_id(id));
+            kernels::direct_exp_row(h, 0, row);
+            kernels::scaled_min_update(row, 1.0 / w, id, &mut out.y, &mut out.s);
         }
     }
 }

@@ -24,6 +24,10 @@
 //! fan-out strictly nested and deadlock-free; the coordinator routes only
 //! large requests here (see `coordinator::router::Router::plan_sketch`),
 //! where the per-shard `O(k ln k)` FastSearch overhead amortizes.
+//!
+//! The shard merges go through `GumbelMaxSketch::merge_in_place`, i.e. the
+//! `sketch::kernels::merge_min_into` lane-wise min kernel — sharding and
+//! vectorization compose, and both are bit-preserving.
 
 use super::engine::SketchScratch;
 use super::fastgm::FastGm;

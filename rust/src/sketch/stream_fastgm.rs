@@ -12,6 +12,7 @@
 //! equivalence test below locks that in.
 
 use super::engine::SketchScratch;
+use super::kernels;
 use super::order_stats::ElementRace;
 use super::{Family, GumbelMaxSketch, MergeError, Sketcher, SparseVector, EMPTY_REGISTER};
 
@@ -86,7 +87,7 @@ impl StreamFastGm {
                     self.s[c] = id;
                     self.unfilled -= 1;
                     if self.unfilled == 0 {
-                        self.jstar = argmax(&self.y);
+                        self.jstar = kernels::argmax_f64(&self.y);
                         // Switch to pruning for the REST of this element.
                         self.drain_pruned(&mut race, id);
                         return;
@@ -113,7 +114,7 @@ impl StreamFastGm {
                 self.y[c] = b;
                 self.s[c] = id;
                 if c == self.jstar {
-                    self.jstar = argmax(&self.y);
+                    self.jstar = kernels::argmax_f64(&self.y);
                 }
             }
         }
@@ -141,15 +142,10 @@ impl StreamFastGm {
         if other.k() != self.k {
             return Err(MergeError::LengthMismatch(self.k, other.k()));
         }
-        for j in 0..self.k {
-            if other.y[j] < self.y[j] {
-                self.y[j] = other.y[j];
-                self.s[j] = other.s[j];
-            }
-        }
-        self.unfilled = self.s.iter().filter(|&&s| s == EMPTY_REGISTER).count();
+        kernels::merge_min_into(&mut self.y, &mut self.s, &other.y, &other.s);
+        self.unfilled = kernels::count_empty(&self.s);
         if self.unfilled == 0 {
-            self.jstar = argmax(&self.y);
+            self.jstar = kernels::argmax_f64(&self.y);
         }
         Ok(())
     }
@@ -217,16 +213,6 @@ impl Sketcher for StreamSketcher {
         }
         st.write_into(out);
     }
-}
-
-fn argmax(y: &[f64]) -> usize {
-    let mut best = 0;
-    for (j, &v) in y.iter().enumerate() {
-        if v > y[best] {
-            best = j;
-        }
-    }
-    best
 }
 
 #[cfg(test)]

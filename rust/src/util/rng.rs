@@ -15,6 +15,13 @@
 //! `python/tests/test_rng.py` pin both implementations to the same
 //! constants so the two layers can never silently diverge.
 
+/// SplitMix64's golden-ratio increment. Public so the batched kernels
+/// (`sketch::kernels`) can derive per-lane counter states: the state after
+/// `t` draws from base state `s` is exactly `s + t·GOLDEN_GAMMA (mod 2^64)`,
+/// which is what makes the stream counter-parallelizable without changing a
+/// single output bit.
+pub const GOLDEN_GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
 /// The murmur3 32-bit finalizer: a cheap, high-quality avalanche function.
 #[inline(always)]
 pub fn fmix32(mut h: u32) -> u32 {
@@ -44,14 +51,30 @@ pub fn fmix64(mut h: u64) -> u64 {
 /// Domain-separation constant folded into the seed (also in `ref.py`).
 pub const DIRECT_SALT: u32 = 0xA076_1D64;
 
+/// First finalizer round of [`direct_bits`]: the `j`-invariant half, mixing
+/// only `(seed, i)`. Hoisting it lets the batched row kernels
+/// (`sketch::kernels::direct_exp_row`) pay for it once per element instead
+/// of once per register — with bit-identical output, since `direct_bits`
+/// itself is defined through this split.
+#[inline(always)]
+pub fn direct_element_hash(seed: u32, i: u32) -> u32 {
+    fmix32(seed ^ DIRECT_SALT ^ i.wrapping_mul(0x9E37_79B1))
+}
+
+/// Second finalizer round of [`direct_bits`], given a precomputed
+/// [`direct_element_hash`].
+#[inline(always)]
+pub fn direct_bits_from_hash(h: u32, j: u32) -> u32 {
+    fmix32(h ^ j.wrapping_mul(0x85EB_CA77))
+}
+
 /// 32 uniform bits for cell `(i, j)` under `seed`.
 ///
 /// Two chained finalizer rounds: the first mixes `(seed, i)`, the second
 /// mixes in `j`. Identical arithmetic (wrapping u32) on the Python side.
 #[inline(always)]
 pub fn direct_bits(seed: u32, i: u32, j: u32) -> u32 {
-    let h = fmix32(seed ^ DIRECT_SALT ^ i.wrapping_mul(0x9E37_79B1));
-    fmix32(h ^ j.wrapping_mul(0x85EB_CA77))
+    direct_bits_from_hash(direct_element_hash(seed, i), j)
 }
 
 /// Uniform in the *open* interval (0, 1) with 23 usable bits.
@@ -60,13 +83,25 @@ pub fn direct_bits(seed: u32, i: u32, j: u32) -> u32 {
 /// strictly positive, finite EXP(1) variable. f32 to match the kernel.
 #[inline(always)]
 pub fn direct_uniform(seed: u32, i: u32, j: u32) -> f32 {
-    ((direct_bits(seed, i, j) >> 9) as f32 + 0.5) * (1.0 / 8_388_608.0)
+    direct_uniform_from_hash(direct_element_hash(seed, i), j)
+}
+
+/// [`direct_uniform`] given a precomputed [`direct_element_hash`].
+#[inline(always)]
+pub fn direct_uniform_from_hash(h: u32, j: u32) -> f32 {
+    ((direct_bits_from_hash(h, j) >> 9) as f32 + 0.5) * (1.0 / 8_388_608.0)
 }
 
 /// A standard exponential EXP(1) draw for cell `(i, j)`.
 #[inline(always)]
 pub fn direct_exp(seed: u32, i: u32, j: u32) -> f32 {
     -direct_uniform(seed, i, j).ln()
+}
+
+/// [`direct_exp`] given a precomputed [`direct_element_hash`].
+#[inline(always)]
+pub fn direct_exp_from_hash(h: u32, j: u32) -> f32 {
+    -direct_uniform_from_hash(h, j).ln()
 }
 
 // ---------------------------------------------------------------------------
@@ -89,12 +124,27 @@ impl SplitMix64 {
     /// across vectors (the Gumbel-Max requirement that *the same* a_{i,j}
     /// back every vector) follows from keying only on `(seed, i)`.
     pub fn for_element(seed: u64, i: u64) -> Self {
-        SplitMix64::new(fmix64(i.wrapping_add(0x9E37_79B9_7F4A_7C15)) ^ seed)
+        SplitMix64::new(fmix64(i.wrapping_add(GOLDEN_GAMMA)) ^ seed)
+    }
+
+    /// The raw counter state, for the batched kernels: lane `t` of a SIMD
+    /// block draws from state `raw_state + t·GOLDEN_GAMMA` and the stream
+    /// resumes at `raw_state + m·GOLDEN_GAMMA` after `m` block draws.
+    #[inline(always)]
+    pub(crate) fn raw_state(&self) -> u64 {
+        self.state
+    }
+
+    /// Counterpart of [`SplitMix64::raw_state`]: fast-forward the stream to
+    /// exactly where a block of scalar `next_u64` calls would have left it.
+    #[inline(always)]
+    pub(crate) fn set_raw_state(&mut self, state: u64) {
+        self.state = state;
     }
 
     #[inline(always)]
     pub fn next_u64(&mut self) -> u64 {
-        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        self.state = self.state.wrapping_add(GOLDEN_GAMMA);
         let mut z = self.state;
         z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
         z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
@@ -192,6 +242,41 @@ mod tests {
         assert_eq!(direct_bits(0, 0, 0), 0x74B4_A163);
         assert_eq!(direct_bits(42, 7, 1023), 0xDEFD_EE35);
         assert_eq!(direct_bits(0xFFFF_FFFF, 123_456, 89), 0x4894_4F12);
+    }
+
+    /// The hoisted two-stage form (`direct_element_hash` +
+    /// `*_from_hash`) is definitionally the same arithmetic; pin it anyway
+    /// so a future "optimization" of either half cannot split the family.
+    #[test]
+    fn direct_hash_split_is_lossless() {
+        for seed in [0u32, 42, 0xFFFF_FFFF] {
+            for i in [0u32, 7, 123_456] {
+                let h = direct_element_hash(seed, i);
+                for j in [0u32, 1, 1023] {
+                    assert_eq!(direct_bits_from_hash(h, j), direct_bits(seed, i, j));
+                    assert_eq!(
+                        direct_exp_from_hash(h, j).to_bits(),
+                        direct_exp(seed, i, j).to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn raw_state_round_trips_the_stream() {
+        let mut a = SplitMix64::new(987);
+        let _ = a.next_u64();
+        let mut b = SplitMix64::new(0);
+        b.set_raw_state(a.raw_state());
+        assert_eq!(a.next_u64(), b.next_u64());
+        // Counter property: m draws advance the state by m·GOLDEN_GAMMA.
+        let mut c = SplitMix64::new(55);
+        let base = c.raw_state();
+        for _ in 0..5 {
+            let _ = c.next_u64();
+        }
+        assert_eq!(c.raw_state(), base.wrapping_add(GOLDEN_GAMMA.wrapping_mul(5)));
     }
 
     #[test]

@@ -1,0 +1,127 @@
+//! Tier-1 lock on the committed perf trajectory: `BENCH_6.json` (the first
+//! tracked baseline, written by `perf_probe --json` / refreshed via
+//! `ci/gen_bench_baseline.py`) must stay parseable by the crate's own JSON
+//! layer, schema-complete, and internally consistent — and its
+//! scalar-vs-SIMD pairs must actually show the kernel layer paying rent.
+//!
+//! Absolute numbers are NOT asserted against the current machine (CI
+//! runners are too noisy; `ci/bench_coverage.py` gates name coverage on
+//! fresh runs instead). What IS asserted: the baseline's own arithmetic,
+//! and the relative claims the PR makes — SIMD never slower than scalar
+//! beyond a generous noise guard, and ≥2x on at least one register-update
+//! kernel.
+
+use fastgm::util::json::{parse, Value};
+
+const BASELINE: &str = include_str!("../../BENCH_6.json");
+
+/// Pairs emitted by `perf_probe`: `<name>_scalar_ns` vs `<name>_ns`.
+const PAIRS: [&str; 8] = [
+    "kernel.uniform_batch",
+    "kernel.gumbel_batch",
+    "kernel.argmin",
+    "kernel.merge",
+    "kernel.match",
+    "kernel.direct_row",
+    "sketch.fastgm",
+    "sketch.pminhash",
+];
+
+/// Register-update kernels where the acceptance bar is a >=2x SIMD win on
+/// at least one (the ln-dominated kernels are exempt by construction —
+/// both backends share scalar libm `ln`).
+const REGISTER_KERNELS: [&str; 4] =
+    ["kernel.uniform_batch", "kernel.argmin", "kernel.merge", "kernel.match"];
+
+fn baseline() -> Value {
+    parse(BASELINE).expect("BENCH_6.json parses with the crate JSON layer")
+}
+
+fn ns(v: &Value, name: &str) -> f64 {
+    v.get(name)
+        .unwrap_or_else(|| panic!("probe '{name}' missing from BENCH_6.json"))
+        .req_f64("ns_per_op")
+        .unwrap()
+}
+
+#[test]
+fn baseline_schema_is_complete_and_consistent() {
+    let v = baseline();
+    let Value::Obj(entries) = &v else { panic!("top level must be a name->stats object") };
+    assert!(entries.len() >= 50, "expected the full probe sweep, got {}", entries.len());
+    for (name, stats) in entries {
+        let ns = stats.req_f64("ns_per_op").unwrap_or_else(|e| panic!("{name}: {e}"));
+        let ops = stats.req_f64("ops_per_s").unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(ns > 0.0 && ops > 0.0, "{name}: non-positive timing");
+        // ns/op and ops/s must be exact float inverses (the Suite::to_json
+        // arithmetic — a hand-edited baseline that breaks this is corrupt).
+        assert!((ns * ops / 1e9 - 1.0).abs() < 1e-9, "{name}: ns={ns} ops={ops}");
+        let p10 = stats.req_f64("p10_ns").unwrap();
+        let p90 = stats.req_f64("p90_ns").unwrap();
+        assert!(p10 <= p90, "{name}: p10 {p10} > p90 {p90}");
+        assert!(stats.req_f64("iters").unwrap() >= 1.0, "{name}: no iterations");
+        assert!(stats.req_f64("samples").unwrap() >= 1.0, "{name}: no samples");
+    }
+}
+
+#[test]
+fn trajectory_keeps_the_historical_probe_families() {
+    let v = baseline();
+    // A sentinel per pre-existing probe family: losing one of these names
+    // silently forks the trajectory (diffs stop lining up across PRs).
+    for name in [
+        "fastgm/n1000/k64",
+        "fastgm/n200000/k1024",
+        "sharded4/n200000/k1024",
+        "pminhash/n1000/k256",
+        "engine-reuse/fastgm/n10000/k1024",
+        "engine-fresh/fastgm/n10000/k1024",
+        "cluster.owner_ns",
+        "cluster.owners_r2_ns",
+        "stream-fastgm/n1000/k1024",
+        "lemiesz/n1000/k1024",
+    ] {
+        assert!(ns(&v, name) > 0.0);
+    }
+}
+
+#[test]
+fn simd_probes_are_not_slower_than_scalar() {
+    let v = baseline();
+    // Generous 1.5x guard: a baseline refreshed on a non-AVX2 box would
+    // show ~1.0x pairs (allowed); a SIMD path that *regressed* past the
+    // guard is a real bug in the dispatch or the kernel.
+    for name in PAIRS {
+        let scalar = ns(&v, &format!("{name}_scalar_ns"));
+        let simd = ns(&v, &format!("{name}_ns"));
+        assert!(
+            simd <= scalar * 1.5,
+            "{name}: SIMD {simd} ns vs scalar {scalar} ns exceeds the noise guard"
+        );
+    }
+}
+
+#[test]
+fn at_least_one_register_kernel_shows_2x() {
+    let v = baseline();
+    let mut best = ("", 0.0f64);
+    for name in REGISTER_KERNELS {
+        let speedup = ns(&v, &format!("{name}_scalar_ns")) / ns(&v, &format!("{name}_ns"));
+        if speedup > best.1 {
+            best = (name, speedup);
+        }
+    }
+    assert!(
+        best.1 >= 2.0,
+        "no register-update kernel reaches 2x in the committed baseline (best: {} at {:.2}x)",
+        best.0,
+        best.1
+    );
+    // The auto-backend sketch probes must agree with their forced-SIMD
+    // twins at the same shape: pminhash/n1000/k256 IS sketch.pminhash_ns
+    // measured through the public path (same backend, same work). 25%
+    // tolerance — separate measurements, same machine.
+    let a = ns(&v, "pminhash/n1000/k256");
+    let b = ns(&v, "sketch.pminhash_ns");
+    assert!((a / b - 1.0).abs() < 0.25, "auto vs forced-SIMD pminhash diverge: {a} vs {b}");
+}

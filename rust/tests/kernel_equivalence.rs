@@ -1,0 +1,245 @@
+//! SIMD/scalar equivalence harness — the enforcement half of the kernel
+//! layer's "bit-identical by construction" contract.
+//!
+//! The flagship test forces each backend in turn (`kernels::set_forced`)
+//! and proves every registered algorithm family produces bit-identical
+//! registers across adversarial shapes: k not a multiple of the SIMD lane
+//! width, n⁺ straddling the lane count, denormal-adjacent weights, and
+//! dirty scratch reuse interleaved across algorithms. All `set_forced`
+//! usage lives in that ONE test — the knob is process-global, and although
+//! a concurrent flip cannot change any result (that is the very property
+//! under test), it could silently make a comparison vacuous (both sides on
+//! the same backend). Every other test uses the explicit `_with(backend)`
+//! kernel APIs, which are race-free.
+//!
+//! Also home of the batched-estimator property (satellite of the same PR):
+//! `estimate_jp_batch` must equal the historical per-pair loop in
+//! estimates, ordering, and error semantics — including the family
+//! rejection paths introduced in PR 2.
+
+use fastgm::estimate::jaccard::{estimate_jp, estimate_jp_batch};
+use fastgm::sketch::engine::{self, AlgorithmId, EngineParams, SketchScratch};
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::kernels::{self, Backend};
+use fastgm::sketch::pminhash::PMinHash;
+use fastgm::sketch::{Family, GumbelMaxSketch, MergeError, Sketcher, SparseVector};
+use fastgm::util::rng::SplitMix64;
+
+/// Positive weights drawn from a pool deliberately stacked with
+/// denormal-adjacent magnitudes: tiny weights stress the `1/w` scaling in
+/// the Direct-family fused update, huge ones stress the normalization in
+/// FastSearch. Non-positive entries are mixed in — every sketcher must
+/// skip them identically on both backends.
+fn adversarial_vector(r: &mut SplitMix64, nplus: usize) -> SparseVector {
+    let mut v = SparseVector::default();
+    for _ in 0..nplus {
+        let w = match r.next_range(0, 7) {
+            0 => 1e-308,
+            1 => f64::MIN_POSITIVE,
+            2 => 1e300,
+            3 => r.next_exp() * 1e-9,
+            _ => r.next_exp(),
+        };
+        v.push(r.next_u64(), w);
+        if r.next_f64() < 0.2 {
+            v.push(r.next_u64(), -r.next_f64());
+        }
+    }
+    if r.next_f64() < 0.3 {
+        v.push(r.next_u64(), 0.0);
+    }
+    v
+}
+
+/// Bit-level sketch comparison: `s` registers are integers (exact), `y`
+/// registers are compared via `to_bits` so `-0.0 != 0.0` and any payload
+/// drift would be caught (plain `==` on f64 is too forgiving).
+fn assert_bit_identical(a: &GumbelMaxSketch, b: &GumbelMaxSketch, ctx: &str) {
+    assert_eq!(a.family, b.family, "{ctx}: family");
+    assert_eq!(a.seed, b.seed, "{ctx}: seed");
+    assert_eq!(a.s, b.s, "{ctx}: argmin ids diverged");
+    assert_eq!(a.y.len(), b.y.len(), "{ctx}: k");
+    for (j, (x, y)) in a.y.iter().zip(&b.y).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: y[{j}] = {x} vs {y}");
+    }
+}
+
+/// THE equivalence property: for every `AlgorithmId`, forcing the scalar
+/// backend and forcing the SIMD backend produce bit-identical sketches.
+/// One dirty scratch per backend is shared across every (algorithm, shape)
+/// combination, so scratch-reuse contamination is part of the adversary.
+/// On hosts without AVX2 the forced-SIMD side falls back to scalar and the
+/// comparison degenerates to a (still valid) self-check.
+#[test]
+fn every_algorithm_is_bit_identical_across_backends() {
+    let mut r = SplitMix64::new(0x51D_E9);
+    let mut scratch_scalar = SketchScratch::new();
+    let mut scratch_simd = SketchScratch::new();
+    let mut out_scalar = GumbelMaxSketch::empty(Family::Ordered, 0, 1);
+    let mut out_simd = GumbelMaxSketch::empty(Family::Ordered, 0, 1);
+    // k straddles the f64 lane width (4) and the f32 row width (8);
+    // n⁺ straddles the lane count including 0 and 1.
+    let ks = [1usize, 2, 7, 8, 9, 33, 64, 65];
+    let nplus = [0usize, 1, 3, 4, 5, 37];
+    for &k in &ks {
+        for &n in &nplus {
+            let seed = r.next_u64();
+            let v = adversarial_vector(&mut r, n);
+            for id in AlgorithmId::ALL {
+                let s = engine::build(id, EngineParams::new(k, seed).with_shards(3));
+                kernels::set_forced(Some(Backend::Scalar));
+                s.sketch_into(&v, &mut scratch_scalar, &mut out_scalar);
+                kernels::set_forced(Some(Backend::Simd));
+                s.sketch_into(&v, &mut scratch_simd, &mut out_simd);
+                kernels::set_forced(None);
+                assert_bit_identical(
+                    &out_scalar,
+                    &out_simd,
+                    &format!("algo '{}' k={k} n⁺={n}", s.name()),
+                );
+            }
+        }
+    }
+}
+
+/// The public kernel wrappers themselves, via the race-free `_with` APIs,
+/// on lengths that exercise every tail-handling branch (0, sub-lane, exact
+/// multiples, one-past).
+#[test]
+fn public_kernels_agree_on_awkward_lengths() {
+    let mut r = SplitMix64::new(99);
+    for len in [0usize, 1, 3, 4, 5, 7, 8, 9, 31, 33] {
+        // Block fills must agree bitwise AND leave the RNG stream at the
+        // same point (checked by drawing one more value).
+        let mut ra = SplitMix64::new(len as u64);
+        let mut rb = SplitMix64::new(len as u64);
+        let mut ua = vec![0u64; len];
+        let mut ub = vec![0u64; len];
+        kernels::fill_u64_block_with(Backend::Scalar, &mut ra, &mut ua);
+        kernels::fill_u64_block_with(Backend::Simd, &mut rb, &mut ub);
+        assert_eq!(ua, ub, "u64 block len={len}");
+        assert_eq!(ra.next_u64(), rb.next_u64(), "stream continuation len={len}");
+        let mut fa = vec![0.0f64; len];
+        let mut fb = vec![0.0f64; len];
+        kernels::fill_exp_block_with(Backend::Scalar, &mut ra, &mut fa);
+        kernels::fill_exp_block_with(Backend::Simd, &mut rb, &mut fb);
+        for (x, y) in fa.iter().zip(&fb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "exp block len={len}");
+        }
+        // Scans and pairwise register kernels.
+        let ys: Vec<f64> = (0..len).map(|_| r.next_exp()).collect();
+        assert_eq!(
+            kernels::argmin_f64_with(Backend::Scalar, &ys),
+            kernels::argmin_f64_with(Backend::Simd, &ys),
+            "argmin len={len}"
+        );
+        assert_eq!(
+            kernels::argmax_f64_with(Backend::Scalar, &ys),
+            kernels::argmax_f64_with(Backend::Simd, &ys),
+            "argmax len={len}"
+        );
+        let oy: Vec<f64> = (0..len).map(|_| r.next_exp()).collect();
+        let os: Vec<u64> = (0..len).map(|_| r.next_u64()).collect();
+        let (mut ya, mut sa) = (ys.clone(), os.clone());
+        let (mut yb, mut sb) = (ys.clone(), os.clone());
+        kernels::merge_min_into_with(Backend::Scalar, &mut ya, &mut sa, &oy, &os);
+        kernels::merge_min_into_with(Backend::Simd, &mut yb, &mut sb, &oy, &os);
+        assert_eq!(sa, sb, "merge ids len={len}");
+        for (x, y) in ya.iter().zip(&yb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "merge y len={len}");
+        }
+        let a: Vec<u64> = (0..len).map(|_| r.next_range(0, 4) as u64).collect();
+        let b: Vec<u64> = (0..len).map(|_| r.next_range(0, 4) as u64).collect();
+        assert_eq!(
+            kernels::match_count_with(Backend::Scalar, &a, &b),
+            kernels::match_count_with(Backend::Simd, &a, &b),
+            "match len={len}"
+        );
+        assert_eq!(
+            kernels::count_empty_with(Backend::Scalar, &a),
+            kernels::count_empty_with(Backend::Simd, &a),
+            "count_empty len={len}"
+        );
+    }
+}
+
+fn random_vector(r: &mut SplitMix64, max_n: usize) -> SparseVector {
+    let n = r.next_range(1, max_n);
+    let mut v = SparseVector::default();
+    for _ in 0..n {
+        v.push(r.next_range(0, 40) as u64, r.next_exp());
+    }
+    v
+}
+
+/// `estimate_jp_batch` == the per-pair loop it replaced: same estimates
+/// (exact f64 equality), same candidate ordering (input order preserved —
+/// what keeps downstream (score desc, key asc) ranking stable across the
+/// refactor), across both EXP-register families.
+#[test]
+fn batched_estimate_matches_per_pair_exactly() {
+    let mut r = SplitMix64::new(0xBA7C4);
+    for round in 0..12 {
+        let k = [8usize, 16, 33, 64][r.next_range(0, 3)];
+        let seed = r.next_u64();
+        let q = random_vector(&mut r, 30);
+        let cands: Vec<SparseVector> = (0..6).map(|_| random_vector(&mut r, 30)).collect();
+        for family in ["ordered", "direct"] {
+            let sk = |v: &SparseVector| -> GumbelMaxSketch {
+                match family {
+                    "ordered" => FastGm::new(k, seed).sketch(v),
+                    _ => PMinHash::new(k, seed).sketch(v),
+                }
+            };
+            let query = sk(&q);
+            let sketches: Vec<(String, GumbelMaxSketch)> =
+                cands.iter().enumerate().map(|(i, v)| (format!("c{i}"), sk(v))).collect();
+            let batch = estimate_jp_batch(
+                &query,
+                sketches.iter().map(|(name, s)| (name.clone(), s)),
+            )
+            .unwrap();
+            assert_eq!(batch.len(), sketches.len());
+            for ((bname, bscore), (name, s)) in batch.iter().zip(&sketches) {
+                assert_eq!(bname, name, "round {round}: batch reordered candidates");
+                let want = estimate_jp(&query, s).unwrap();
+                assert_eq!(*bscore, want, "round {round} {family} {name}");
+            }
+        }
+    }
+}
+
+/// Error semantics: the first failing candidate aborts the batch with
+/// exactly the error the per-pair loop would have hit — mismatched seeds
+/// mid-list, and the PR 2 family-rejection paths (ICWS/BagMinHash/MinHash
+/// must refuse J_P loudly, batched or not).
+#[test]
+fn batched_estimate_preserves_error_semantics() {
+    let v = SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+    let query = FastGm::new(16, 1).sketch(&v);
+    let good = FastGm::new(16, 1).sketch(&v);
+    let bad_seed = FastGm::new(16, 2).sketch(&v);
+    let cands = [("a", &good), ("b", &bad_seed), ("c", &good)];
+    let err = estimate_jp_batch(&query, cands.iter().copied()).unwrap_err();
+    assert_eq!(err, estimate_jp(&query, &bad_seed).unwrap_err());
+    assert!(matches!(err, MergeError::SeedMismatch(1, 2)), "{err}");
+
+    // Family gates: a non-race query fails against its own family exactly
+    // as estimate_jp does, and a race query fails against a non-race
+    // candidate with the per-pair error.
+    for id in [AlgorithmId::Icws, AlgorithmId::BagMinHash, AlgorithmId::MinHash] {
+        let nk = engine::build(id, EngineParams::new(16, 1)).sketch(&v);
+        let batch_err = estimate_jp_batch(&nk, [("x", &nk)]).unwrap_err();
+        assert_eq!(batch_err, estimate_jp(&nk, &nk).unwrap_err(), "{id:?}");
+        assert!(
+            matches!(batch_err, MergeError::EstimatorUnsupported { .. }),
+            "{id:?}: {batch_err}"
+        );
+        let cross = estimate_jp_batch(&query, [("x", &nk)]).unwrap_err();
+        assert_eq!(cross, estimate_jp(&query, &nk).unwrap_err(), "{id:?}");
+    }
+
+    // An empty candidate list is a successful empty batch, not an error.
+    let empty: Vec<(&str, &GumbelMaxSketch)> = Vec::new();
+    assert!(estimate_jp_batch(&query, empty).unwrap().is_empty());
+}

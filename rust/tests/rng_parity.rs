@@ -10,6 +10,7 @@
 //! **exactly**. Exponential arrival times go through `ln` and are compared
 //! to 1e-12 relative — libm rounding is the only divergence allowed.
 
+use fastgm::sketch::kernels::{self, Backend};
 use fastgm::sketch::order_stats::ElementRace;
 use fastgm::util::json::{parse, Value};
 use fastgm::util::rng::{direct_bits, fmix32, fmix64, SplitMix64};
@@ -77,6 +78,63 @@ fn splitmix_streams_match_reference_exactly() {
         for (i, want) in arr(case, "f64").iter().enumerate() {
             let got = r.next_f64();
             assert_eq!(got.to_bits(), f(want).to_bits(), "seed {seed}, f64 #{i}: {got}");
+        }
+    }
+}
+
+/// The batched kernel layer (`sketch::kernels`) against the Python
+/// reference: `fill_u64_block` / `fill_uniform_block` must reproduce the
+/// scalar SplitMix64 stream bit-exactly on BOTH backends (the blocks are
+/// pure integer + dyadic arithmetic), `fill_exp_block` to 1e-12 relative
+/// cross-language and bit-exactly scalar-vs-SIMD (`ln` is scalar libm in
+/// both backends by design). Afterwards the RNG must sit at the same
+/// stream position as if the draws had been made one at a time.
+#[test]
+fn batched_blocks_match_reference_on_both_backends() {
+    let fx = fixture();
+    let cases = arr(&fx, "batched_blocks");
+    assert!(cases.len() >= 3);
+    for case in cases {
+        let seed = u(case.req("seed").unwrap());
+        let uniforms = arr(case, "uniform");
+        let exps = arr(case, "exp");
+        let n = uniforms.len();
+        for backend in [Backend::Scalar, Backend::Simd] {
+            // u64 block == the splitmix64 stream drawn one at a time.
+            let mut r = SplitMix64::new(seed);
+            let mut block = vec![0u64; n];
+            kernels::fill_u64_block_with(backend, &mut r, &mut block);
+            let mut one = SplitMix64::new(seed);
+            for (i, got) in block.iter().enumerate() {
+                assert_eq!(*got, one.next_u64(), "seed {seed} {backend:?} u64 #{i}");
+            }
+            // Stream continuation: block fill left the state where the
+            // one-at-a-time draws did.
+            assert_eq!(r.next_u64(), one.next_u64(), "seed {seed} {backend:?} continuation");
+
+            let mut r = SplitMix64::new(seed);
+            let mut uni = vec![0.0f64; n];
+            kernels::fill_uniform_block_with(backend, &mut r, &mut uni);
+            for (i, (got, want)) in uni.iter().zip(uniforms).enumerate() {
+                assert_eq!(
+                    got.to_bits(),
+                    f(want).to_bits(),
+                    "seed {seed} {backend:?} uniform #{i}: {got}"
+                );
+            }
+        }
+        // Exponentials: scalar-vs-SIMD bitwise, cross-language 1e-12.
+        let mut rs = SplitMix64::new(seed);
+        let mut scalar = vec![0.0f64; n];
+        kernels::fill_exp_block_with(Backend::Scalar, &mut rs, &mut scalar);
+        let mut rv = SplitMix64::new(seed);
+        let mut simd = vec![0.0f64; n];
+        kernels::fill_exp_block_with(Backend::Simd, &mut rv, &mut simd);
+        for (i, ((s, v), want)) in scalar.iter().zip(&simd).zip(exps).enumerate() {
+            assert_eq!(s.to_bits(), v.to_bits(), "seed {seed} exp #{i} backend divergence");
+            let want = f(want);
+            let rel = (s - want).abs() / want.abs().max(f64::MIN_POSITIVE);
+            assert!(rel < 1e-12, "seed {seed} exp #{i}: {s} vs {want} (rel {rel:.3e})");
         }
     }
 }
