@@ -250,6 +250,167 @@ fn main() {
         }
     }
 
+    // Frame-vs-JSON wire codec pairs (ISSUE 7): the same typed message
+    // encoded/decoded through the binary frame body codec and through the
+    // JSON line protocol. Bodies only (no socket) — this isolates the
+    // serialization cost the framed transport removes from every request.
+    {
+        use fastgm::coordinator::frame;
+        use fastgm::coordinator::protocol::{self, Request, Response};
+
+        let vec64 = dense_vector(&mut rng, 64, WeightDist::Uniform01);
+        let req = Request::Upsert { key: "doc-00042".into(), vector: vec64, version: None };
+        let resp = Response::TopK {
+            hits: (0..10).map(|i| (format!("doc{i:04}"), 0.5 + i as f64 / 100.0)).collect(),
+        };
+        let mut scratch = Vec::new();
+        suite.record(b.run("frame.encode_request_ns", || {
+            scratch.clear();
+            frame::encode_request_body(&req, &mut scratch);
+            scratch.len()
+        }));
+        suite.record(b.run("frame.encode_request_json_ns", || {
+            protocol::encode_line(&req.to_json()).len()
+        }));
+        let mut body = Vec::new();
+        frame::encode_request_body(&req, &mut body);
+        let line = protocol::encode_line(&req.to_json());
+        suite.record(b.run("frame.decode_request_ns", || {
+            frame::decode_request_body(&body).unwrap()
+        }));
+        suite.record(b.run("frame.decode_request_json_ns", || {
+            protocol::decode_request(&line).unwrap()
+        }));
+        let mut rscratch = Vec::new();
+        suite.record(b.run("frame.encode_response_ns", || {
+            rscratch.clear();
+            frame::encode_response_body(&resp, &mut rscratch);
+            rscratch.len()
+        }));
+        suite.record(b.run("frame.encode_response_json_ns", || {
+            protocol::encode_line(&resp.to_json()).len()
+        }));
+        let mut rbody = Vec::new();
+        frame::encode_response_body(&resp, &mut rbody);
+        let rline = protocol::encode_line(&resp.to_json());
+        suite.record(b.run("frame.decode_response_ns", || {
+            frame::decode_response_body(&rbody).unwrap()
+        }));
+        suite.record(b.run("frame.decode_response_json_ns", || {
+            protocol::decode_response(&rline).unwrap()
+        }));
+        for side in ["request", "response"] {
+            for dir in ["encode", "decode"] {
+                let (json_n, bin_n) =
+                    (format!("frame.{dir}_{side}_json_ns"), format!("frame.{dir}_{side}_ns"));
+                if let Some(sp) = suite.speedup(&json_n, &bin_n) {
+                    println!("  -> binary {dir} {side} speedup over JSON: {sp:.2}x");
+                }
+            }
+        }
+        println!(
+            "  -> wire bytes per upsert: binary {} vs JSON {}",
+            body.len() + frame::HEADER_LEN + 8,
+            line.len()
+        );
+    }
+
+    // Transport saturation (ISSUE 7 acceptance): C pipelining clients ×
+    // P in-flight pings, sustained — the event-driven framed transport
+    // against the thread-per-connection JSON-lines server. `..._ns` is
+    // wall-clock per request at saturation (ops_per_s in the JSON summary
+    // is the sustained req/s); `..._p99_ns` is the p99 per-request
+    // latency. Scale shrinks under a small FASTGM_BENCH_BUDGET so the CI
+    // smoke run stays fast while exercising the identical code path.
+    #[cfg(unix)]
+    {
+        use fastgm::coordinator::client::Client;
+        use fastgm::coordinator::event_server::EventServer;
+        use fastgm::coordinator::protocol::{Request, Response};
+        use fastgm::coordinator::server::Server;
+        use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+        use fastgm::util::bench::BenchResult;
+        use fastgm::util::stats::percentile;
+        use std::sync::Arc;
+
+        let smoke = b.budget <= 0.15;
+        let (clients, pipeline, rounds) = if smoke { (4usize, 16usize, 10usize) } else { (8, 64, 50) };
+
+        // (per-request latency samples, wall seconds, total requests)
+        let saturate = |addr: String, framed: bool| -> (Vec<f64>, f64, u64) {
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for _ in 0..clients {
+                let addr = addr.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut c = Client::connect(&addr).expect("saturation client connect");
+                    if framed {
+                        c.set_framed(true).expect("framed upgrade");
+                    }
+                    let reqs: Vec<Request> = (0..pipeline).map(|_| Request::Ping).collect();
+                    let mut samples = Vec::with_capacity(rounds);
+                    for _ in 0..rounds {
+                        let s0 = std::time::Instant::now();
+                        c.send_batch(&reqs).expect("send");
+                        let resps = c.recv_batch(pipeline).expect("recv");
+                        assert!(resps.iter().all(|r| matches!(r, Response::Pong)));
+                        samples.push(s0.elapsed().as_secs_f64() / pipeline as f64);
+                    }
+                    samples
+                }));
+            }
+            let mut all = Vec::new();
+            for h in handles {
+                all.extend(h.join().expect("saturation client thread"));
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            (all, wall, (clients * pipeline * rounds) as u64)
+        };
+        let record_sat = |suite: &mut Suite, name: &str, samples: &[f64], wall: f64, total: u64| {
+            let per_req = wall / total as f64;
+            suite.record(BenchResult {
+                name: format!("{name}_ns"),
+                median: per_req,
+                mean: per_req,
+                p10: percentile(samples, 0.1),
+                p90: percentile(samples, 0.9),
+                iters: total,
+                samples: samples.len(),
+            });
+            suite.record(BenchResult {
+                name: format!("{name}_p99_ns"),
+                median: percentile(samples, 0.99),
+                mean: percentile(samples, 0.99),
+                p10: percentile(samples, 0.5),
+                p90: percentile(samples, 0.99),
+                iters: total,
+                samples: samples.len(),
+            });
+        };
+
+        let cfg = CoordinatorConfig { k: 64, workers: 4, ..Default::default() };
+        let coord = Arc::new(Coordinator::new(cfg.clone()).unwrap());
+        let es = EventServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+        let (samples, wall, total) = saturate(es.addr.to_string(), true);
+        es.stop();
+        Arc::try_unwrap(coord).ok().expect("event server released the coordinator").shutdown();
+        record_sat(&mut suite, "transport.sat.framed", &samples, wall, total);
+
+        let coord = Arc::new(Coordinator::new(cfg).unwrap());
+        let js = Server::start(coord.clone(), "127.0.0.1:0").unwrap();
+        let (samples, wall, total) = saturate(js.addr.to_string(), false);
+        js.stop();
+        Arc::try_unwrap(coord).ok().expect("json server released the coordinator").shutdown();
+        record_sat(&mut suite, "transport.sat.json", &samples, wall, total);
+
+        if let Some(sp) = suite.speedup("transport.sat.json_ns", "transport.sat.framed_ns") {
+            println!(
+                "  -> framed event transport sustained speedup over JSON lines \
+                 ({clients} clients x {pipeline} in flight): {sp:.2}x"
+            );
+        }
+    }
+
     if let Some(path) = json {
         match suite.write_json(&path) {
             Ok(()) => println!("  -> wrote {} results to {path}", suite.results.len()),

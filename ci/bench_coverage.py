@@ -29,6 +29,25 @@ import sys
 
 REQUIRED = ("ns_per_op", "ops_per_s", "p10_ns", "p90_ns", "iters", "samples")
 
+# The transport probes are the acceptance evidence for the binary framed
+# transport (ISSUE 7): they must be present in every fresh run explicitly,
+# not just via the committed-baseline diff (which would stop gating them if
+# the baselines were ever pruned).
+REQUIRED_PROBES = (
+    "frame.encode_request_ns",
+    "frame.encode_request_json_ns",
+    "frame.decode_request_ns",
+    "frame.decode_request_json_ns",
+    "frame.encode_response_ns",
+    "frame.encode_response_json_ns",
+    "frame.decode_response_ns",
+    "frame.decode_response_json_ns",
+    "transport.sat.framed_ns",
+    "transport.sat.framed_p99_ns",
+    "transport.sat.json_ns",
+    "transport.sat.json_p99_ns",
+)
+
 
 def fail(msg):
     print(f"bench_coverage: FAIL: {msg}", file=sys.stderr)
@@ -72,6 +91,11 @@ def main():
         fresh = json.load(f)
     validate_schema(fresh_path, fresh)
     print(f"bench_coverage: {fresh_path}: {len(fresh)} probes, schema OK")
+
+    missing = sorted(set(REQUIRED_PROBES) - set(fresh))
+    if missing:
+        fail(f"{fresh_path}: required transport probe(s) not measured: {missing}")
+    print(f"bench_coverage: all {len(REQUIRED_PROBES)} required transport probes measured")
 
     baselines = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
     if not baselines:

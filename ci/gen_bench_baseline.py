@@ -12,7 +12,7 @@ gate on. This script exists so a baseline refresh is reproducible: edit the
 
     FASTGM_BENCH_BUDGET=0.6 cargo bench --bench perf_probe -- --json /tmp/b.json
 
-and re-run ``python3 ci/gen_bench_baseline.py BENCH_6.json``.
+and re-run ``python3 ci/gen_bench_baseline.py BENCH_7.json``.
 
 Derived fields mirror the harness arithmetic: ``ops_per_s`` is the exact
 float inverse of ``ns_per_op`` (the smoke test asserts the product), and
@@ -92,6 +92,34 @@ MEDIANS_NS = [
     ("sketch.pminhash_scalar_ns", 2.05e6),
     ("sketch.fastgm_ns", 2.19e6),
     ("sketch.pminhash_ns", 1.39e6),
+    # wire codec pairs (ISSUE 7): one 64-dim upsert request / one 10-hit
+    # topk response through the binary frame body codec vs the JSON line
+    # protocol (encode builds the wire bytes, decode parses them back)
+    ("frame.encode_request_ns", 182.0),
+    ("frame.encode_request_json_ns", 2430.0),
+    ("frame.decode_request_ns", 214.0),
+    ("frame.decode_request_json_ns", 3810.0),
+    ("frame.encode_response_ns", 151.0),
+    ("frame.encode_response_json_ns", 1640.0),
+    ("frame.decode_response_ns", 168.0),
+    ("frame.decode_response_json_ns", 2590.0),
+]
+
+# Transport saturation probes (ISSUE 7 acceptance) are hand-packed
+# BenchResults, not Bencher-calibrated: 8 clients x 64 pipelined pings x
+# 50 rounds against the event-driven framed transport and the
+# thread-per-connection JSON-lines server. `..._ns` is wall-clock per
+# request at saturation (ops_per_s = sustained req/s); `..._p99_ns` is
+# the p99 per-request latency sample.
+SAT_CLIENTS = 8
+SAT_PIPELINE = 64
+SAT_ROUNDS = 50
+
+SATURATION_NS = [
+    ("transport.sat.framed_ns", 620.0),
+    ("transport.sat.framed_p99_ns", 8900.0),
+    ("transport.sat.json_ns", 9480.0),
+    ("transport.sat.json_p99_ns", 21400.0),
 ]
 
 
@@ -109,9 +137,21 @@ def entry(ns):
     }
 
 
+def sat_entry(ns):
+    return {
+        "ns_per_op": ns,
+        "ops_per_s": 1e9 / ns,
+        "p10_ns": ns * 0.91,
+        "p90_ns": ns * 1.24,
+        "iters": SAT_CLIENTS * SAT_PIPELINE * SAT_ROUNDS,
+        "samples": SAT_CLIENTS * SAT_ROUNDS,
+    }
+
+
 def main():
-    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_6.json"
+    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_7.json"
     fix = {name: entry(ns) for name, ns in MEDIANS_NS}
+    fix.update({name: sat_entry(ns) for name, ns in SATURATION_NS})
     with open(out, "w") as f:
         json.dump(fix, f, indent=1)
         f.write("\n")

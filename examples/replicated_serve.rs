@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     let mut cluster = LocalCluster::start(NODES, &config())?;
     let mut cc = ClusterClient::connect_with(
         &cluster.addrs(),
-        ReplicaConfig { replication: 2, write_quorum: 1 },
+        ReplicaConfig { replication: 2, write_quorum: 1, ..Default::default() },
     )?;
     println!(
         "cluster up: {} nodes, replication R={} write-quorum W={}",

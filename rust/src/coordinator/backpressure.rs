@@ -81,8 +81,44 @@ impl<T> WorkerQueue<T> {
 
 impl<T> Admission<T> {
     pub fn submit(&self, item: T) -> Result<(), AdmitError> {
-        let n = self.senders.len();
         let rr = self.rr.fetch_add(1, Ordering::Relaxed);
+        self.submit_from(item, rr).map_err(|(_, e)| e)
+    }
+
+    /// Admit a whole batch with one round-robin advance (the event
+    /// transport's admission batching: one readable wakeup drains many
+    /// frames, then pays the dispatch bookkeeping once). Items spread
+    /// across queues exactly as per-item `submit` would — consecutive
+    /// batch slots start their scan at consecutive rotation offsets — and
+    /// the policy applies per item. Rejected items come **back** to the
+    /// caller (unlike [`submit`], which consumes on error) so their reply
+    /// paths can be answered; once `Closed` is seen the rest of the batch
+    /// short-circuits to `Closed` without rescanning dead queues.
+    pub fn submit_batch(&self, items: Vec<T>) -> Vec<(T, AdmitError)> {
+        let rr = self.rr.fetch_add(items.len().max(1), Ordering::Relaxed);
+        let mut rejected = Vec::new();
+        let mut closed = false;
+        for (i, item) in items.into_iter().enumerate() {
+            if closed {
+                rejected.push((item, AdmitError::Closed));
+                continue;
+            }
+            match self.submit_from(item, rr.wrapping_add(i)) {
+                Ok(()) => {}
+                Err((item, e)) => {
+                    closed = e == AdmitError::Closed;
+                    rejected.push((item, e));
+                }
+            }
+        }
+        rejected
+    }
+
+    /// The dispatch loop shared by [`submit`] and [`submit_batch`]:
+    /// shallowest-queue scan from rotation offset `rr`, work-conserving
+    /// try-pass, then policy. Errors hand the item back.
+    fn submit_from(&self, item: T, rr: usize) -> Result<(), (T, AdmitError)> {
+        let n = self.senders.len();
         let mut item = item;
         let mut backoff = std::time::Duration::from_micros(100);
         loop {
@@ -127,13 +163,13 @@ impl<T> Admission<T> {
                 }
             }
             if disconnected == n {
-                return Err(AdmitError::Closed);
+                return Err((item, AdmitError::Closed));
             }
             // Every live queue full.
             match self.policy {
                 Policy::Shed => {
                     self.shed.fetch_add(1, Ordering::Relaxed);
-                    return Err(AdmitError::Shed);
+                    return Err((item, AdmitError::Shed));
                 }
                 // Block must stay work-conserving: rather than pinning a
                 // blocking send on one queue (which would keep the producer
@@ -342,6 +378,44 @@ mod tests {
         let _ = rxs[2].recv().unwrap(); // queue 2 drains one
         adm.submit(100).unwrap();
         assert_eq!(rxs[2].depth(), 2, "new job must land on the shallowest queue");
+    }
+
+    #[test]
+    fn batch_submit_spreads_and_returns_rejects_with_their_items() {
+        let (adm, rxs) = bounded_per_worker::<u32>(3, 2, Policy::Shed);
+        // 6 slots total: a batch of 8 admits 6 and hands back exactly the
+        // overflow, items intact.
+        let rejected = adm.submit_batch((0..8).collect());
+        assert_eq!(rejected.len(), 2);
+        for (item, err) in &rejected {
+            assert!(*item < 8);
+            assert_eq!(*err, AdmitError::Shed);
+        }
+        assert_eq!(adm.queue_depth(), 6);
+        // The batch spread like per-item dispatch: every queue saturated.
+        for rx in &rxs {
+            assert_eq!(rx.depth(), 2);
+        }
+        assert_eq!(adm.admitted_count(), 6);
+        assert_eq!(adm.shed_count(), 2);
+    }
+
+    #[test]
+    fn batch_submit_short_circuits_once_closed() {
+        let (adm, rx) = bounded::<u32>(4, Policy::Shed);
+        drop(rx);
+        let rejected = adm.submit_batch(vec![1, 2, 3]);
+        assert_eq!(rejected.len(), 3);
+        assert!(rejected.iter().all(|(_, e)| *e == AdmitError::Closed));
+        // Items come back in order even on the short-circuit path.
+        assert_eq!(rejected.iter().map(|(i, _)| *i).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let (adm, _rx) = bounded::<u32>(2, Policy::Shed);
+        assert!(adm.submit_batch(Vec::new()).is_empty());
+        assert_eq!(adm.queue_depth(), 0);
     }
 
     #[test]

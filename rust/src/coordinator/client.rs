@@ -1,19 +1,49 @@
-//! Blocking TCP client for the JSON-lines protocol — used by the CLI
+//! Blocking TCP client for both wire protocols — used by the CLI
 //! (`fastgm client` / `store` / `topk` / `snapshot`), the examples and the
 //! load generators in `examples/serve_e2e.rs` and
 //! `examples/similarity_serve.rs`. The typed helpers below unwrap the
 //! expected response variant and turn server-side `error` replies into
 //! `Err`, so callers don't re-match every response.
+//!
+//! Two wire modes, switchable per connection:
+//! * **JSON lines** (default) — works against every server; responses
+//!   arrive strictly in request order.
+//! * **Binary framed** ([`Client::set_framed`] /
+//!   [`Client::connect_framed`]) — [`super::frame`] frames with
+//!   client-assigned request ids. The server may complete requests **out
+//!   of order**; this client matches responses back to requests by id, so
+//!   `send_batch`/`recv_batch` keep their in-order API contract while the
+//!   wire runs fully multiplexed. Requires a frame-capable server (the
+//!   event-driven transport); the thread-per-connection JSON server does
+//!   not speak frames.
 
+use super::frame::{self, FrameMsg, FrameStatus};
 use super::protocol::{self, HelloInfo, Request, Response, SketchSource};
 use crate::sketch::{codec, GumbelMaxSketch, SparseVector};
 use crate::util::json::Value;
-use std::io::{BufRead, BufReader, Write};
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
+
+/// Per-connection wire state. Framed mode tracks which request ids are
+/// outstanding and parks responses that complete ahead of their turn.
+enum Wire {
+    Json,
+    Framed {
+        /// Unparsed bytes read off the socket (partial next frame).
+        rbuf: Vec<u8>,
+        /// Outstanding request ids, oldest first.
+        pending: VecDeque<u64>,
+        /// Responses that arrived before their `recv_batch` turn.
+        done: HashMap<u64, Response>,
+        next_id: u64,
+    },
+}
 
 pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+    wire: Wire,
 }
 
 impl Client {
@@ -22,7 +52,44 @@ impl Client {
             .map_err(|e| anyhow::anyhow!("cannot connect to '{addr}': {e}"))?;
         stream.set_nodelay(true).ok();
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { writer: stream, reader })
+        Ok(Client { writer: stream, reader, wire: Wire::Json })
+    }
+
+    /// Connect speaking binary frames from the first request.
+    pub fn connect_framed(addr: &str) -> anyhow::Result<Client> {
+        let mut c = Client::connect(addr)?;
+        c.set_framed(true)?;
+        Ok(c)
+    }
+
+    /// Switch wire modes on a live connection (the server auto-detects
+    /// per message, so this is purely client-side state). Leaving framed
+    /// mode is refused while responses are outstanding — the id map would
+    /// be dropped and the stream torn.
+    pub fn set_framed(&mut self, on: bool) -> anyhow::Result<()> {
+        match (&self.wire, on) {
+            (Wire::Json, true) => {
+                self.wire = Wire::Framed {
+                    rbuf: Vec::new(),
+                    pending: VecDeque::new(),
+                    done: HashMap::new(),
+                    next_id: 1,
+                };
+            }
+            (Wire::Framed { rbuf, pending, done, .. }, false) => {
+                anyhow::ensure!(
+                    rbuf.is_empty() && pending.is_empty() && done.is_empty(),
+                    "cannot leave framed mode with responses outstanding"
+                );
+                self.wire = Wire::Json;
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    pub fn is_framed(&self) -> bool {
+        matches!(self.wire, Wire::Framed { .. })
     }
 
     /// Bound how long any read OR write waits for the server (`None` =
@@ -47,24 +114,84 @@ impl Client {
     /// before reading any reply, so per-node server work overlaps and a
     /// scatter costs ~max(RTT) instead of sum(RTT).
     pub fn send_batch(&mut self, reqs: &[Request]) -> anyhow::Result<()> {
-        let mut buf = String::new();
-        for r in reqs {
-            buf.push_str(&protocol::encode_line(&r.to_json()));
+        match &mut self.wire {
+            Wire::Json => {
+                let mut buf = String::new();
+                for r in reqs {
+                    buf.push_str(&protocol::encode_line(&r.to_json()));
+                }
+                self.writer.write_all(buf.as_bytes())?;
+            }
+            Wire::Framed { pending, next_id, .. } => {
+                // All frames coalesce into one buffer → one write syscall.
+                let mut buf = Vec::new();
+                for r in reqs {
+                    let id = *next_id;
+                    *next_id = next_id.wrapping_add(1);
+                    frame::encode_request_frame(id, r, &mut buf);
+                    pending.push_back(id);
+                }
+                self.writer.write_all(&buf)?;
+            }
         }
-        self.writer.write_all(buf.as_bytes())?;
         Ok(())
     }
 
-    /// Phase 2: read `n` in-order response lines.
+    /// Phase 2: collect the `n` oldest outstanding responses, in request
+    /// order. On the JSON wire that is simply the next `n` lines; on the
+    /// framed wire responses may arrive out of order and are matched back
+    /// by request id (early arrivals for later requests are parked, never
+    /// dropped).
     pub fn recv_batch(&mut self, n: usize) -> anyhow::Result<Vec<Response>> {
-        let mut out = Vec::with_capacity(n);
-        for _ in 0..n {
-            let mut reply = String::new();
-            let got = self.reader.read_line(&mut reply)?;
-            anyhow::ensure!(got > 0, "server closed the connection mid-batch");
-            out.push(protocol::decode_response(&reply)?);
+        match &mut self.wire {
+            Wire::Json => {
+                let mut out = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let mut reply = String::new();
+                    let got = self.reader.read_line(&mut reply)?;
+                    anyhow::ensure!(got > 0, "server closed the connection mid-batch");
+                    out.push(protocol::decode_response(&reply)?);
+                }
+                Ok(out)
+            }
+            Wire::Framed { rbuf, pending, done, .. } => {
+                anyhow::ensure!(
+                    pending.len() >= n,
+                    "recv_batch({n}) with only {} requests outstanding",
+                    pending.len()
+                );
+                let wanted: Vec<u64> = pending.drain(..n).collect();
+                while !wanted.iter().all(|id| done.contains_key(id)) {
+                    match frame::decode_frame(rbuf)? {
+                        FrameStatus::Frame { consumed, id, msg } => {
+                            rbuf.drain(..consumed);
+                            let FrameMsg::Response(resp) = msg else {
+                                anyhow::bail!("server sent a request frame")
+                            };
+                            anyhow::ensure!(
+                                wanted.contains(&id) || pending.contains(&id),
+                                "response for unknown request id {id}"
+                            );
+                            anyhow::ensure!(
+                                done.insert(id, resp).is_none(),
+                                "duplicate response for request id {id}"
+                            );
+                        }
+                        FrameStatus::Incomplete => {
+                            let mut chunk = [0u8; 16 * 1024];
+                            let got = self.reader.read(&mut chunk)?;
+                            anyhow::ensure!(got > 0, "server closed the connection mid-batch");
+                            rbuf.extend_from_slice(&chunk[..got]);
+                        }
+                    }
+                }
+                let mut out = Vec::with_capacity(n);
+                for id in &wanted {
+                    out.push(done.remove(id).expect("loop ensured presence"));
+                }
+                Ok(out)
+            }
         }
-        Ok(out)
     }
 
     /// Send one request and wait for its response line.
@@ -248,6 +375,99 @@ mod tests {
     #[test]
     fn connect_failure_is_clean_error() {
         assert!(Client::connect("127.0.0.1:1").is_err());
+    }
+
+    #[cfg(unix)]
+    mod framed {
+        use super::*;
+        use crate::coordinator::event_server::EventServer;
+
+        fn start_event(workers: usize) -> (Arc<Coordinator>, EventServer) {
+            let coord = Arc::new(
+                Coordinator::new(CoordinatorConfig {
+                    k: 32,
+                    workers,
+                    ..Default::default()
+                })
+                .unwrap(),
+            );
+            let server = EventServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+            (coord, server)
+        }
+
+        #[test]
+        fn framed_pipeline_matches_responses_by_id() {
+            let (coord, server) = start_event(4);
+            let mut client = Client::connect_framed(&server.addr.to_string()).unwrap();
+            assert!(client.is_framed());
+            let reqs: Vec<Request> = (0..20u64)
+                .map(|i| Request::Push { stream: "p".into(), items: vec![(i, 1.0)] })
+                .collect();
+            // Even with 4 workers completing out of order on the wire, the
+            // id matching restores request order at the API.
+            let resps = client.call_pipelined(&reqs).unwrap();
+            assert_eq!(resps.len(), 20);
+            for (i, r) in resps.iter().enumerate() {
+                let Response::Ack { info } = r else { panic!("expected ack, got {r:?}") };
+                assert!(
+                    info.contains(&format!("processed {}", i + 1)),
+                    "response {i} misrouted: {info}"
+                );
+            }
+            drop(client);
+            server.stop();
+            Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
+        }
+
+        #[test]
+        fn typed_helpers_work_identically_over_frames() {
+            let (coord, server) = start_event(2);
+            let mut client = Client::connect_framed(&server.addr.to_string()).unwrap();
+            let hello = client.hello().unwrap();
+            assert_eq!(hello.protocol, protocol::PROTOCOL_VERSION);
+            let v = SparseVector::new(vec![1, 2], vec![1.0, 0.5]);
+            assert!(client.upsert("a", v.clone()).unwrap().contains("upserted"));
+            let hits = client.topk(v.clone(), 1).unwrap();
+            assert_eq!(hits[0].0, "a");
+            // Blob fetch rides raw codec bytes on this wire.
+            let fetched = client.sketch_fetch("a", SketchSource::Store).unwrap();
+            assert_eq!(fetched, crate::sketch::fastgm::FastGm::new(32, 42).sketch(&v));
+            assert!(client.restore("/no/such/file.fgms").is_err());
+            drop(client);
+            server.stop();
+            Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
+        }
+
+        #[test]
+        fn mode_switch_mid_connection_is_safe_and_guarded() {
+            let (coord, server) = start_event(1);
+            let mut client = Client::connect(&server.addr.to_string()).unwrap();
+            // JSON first, frames second, back to JSON — one connection.
+            assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+            client.set_framed(true).unwrap();
+            assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+            client.set_framed(false).unwrap();
+            assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+            // Leaving framed mode with responses in flight is refused.
+            client.set_framed(true).unwrap();
+            client.send_batch(&[Request::Ping]).unwrap();
+            assert!(client.set_framed(false).is_err());
+            assert_eq!(client.recv_batch(1).unwrap(), vec![Response::Pong]);
+            client.set_framed(false).unwrap();
+            drop(client);
+            server.stop();
+            Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
+        }
+
+        #[test]
+        fn recv_more_than_outstanding_is_an_error() {
+            let (coord, server) = start_event(1);
+            let mut client = Client::connect_framed(&server.addr.to_string()).unwrap();
+            assert!(client.recv_batch(1).is_err());
+            drop(client);
+            server.stop();
+            Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
+        }
     }
 
     #[test]

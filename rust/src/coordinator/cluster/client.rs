@@ -51,28 +51,45 @@ use crate::sketch::engine::{self, EngineParams};
 use crate::sketch::{AlgorithmId, GumbelMaxSketch, Sketcher, SparseVector};
 use std::collections::BTreeMap;
 
-/// How long a gather waits on any single node read before treating the
-/// node as down. Without this, a hung-but-connected node (silent
-/// partition, stop-the-world pause) would wedge every gather forever —
-/// only cleanly closed sockets would degrade. Generous: normal ops answer
-/// in microseconds-to-milliseconds on a healthy node.
-const NODE_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+/// Default for [`ReplicaConfig::io_timeout`]: how long a gather waits on
+/// any single node read before treating the node as down. Without a
+/// timeout, a hung-but-connected node (silent partition, stop-the-world
+/// pause) would wedge every gather forever — only cleanly closed sockets
+/// would degrade. Generous: normal ops answer in microseconds-to-
+/// milliseconds on a healthy node.
+pub const DEFAULT_NODE_IO_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
 
 /// Page size of the `store_keys` walk `repair` performs per node.
 const REPAIR_PAGE: usize = 512;
 
 /// Replication shape of a cluster client: every key/element partition is
 /// owned by the top-`replication` nodes of its HRW ranking, and a write
-/// needs `write_quorum` owner acks to succeed.
+/// needs `write_quorum` owner acks to succeed. Also carries per-node
+/// transport knobs: the I/O timeout that bounds how long a hung node can
+/// stall a gather, and whether node connections upgrade to the binary
+/// framed protocol after the (always JSON) `hello` handshake.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReplicaConfig {
     pub replication: usize,
     pub write_quorum: usize,
+    /// Per-node read/write timeout; an expiry marks the node down. Tune
+    /// down for fast failover in tests/latency-sensitive callers, up for
+    /// WAN links. [`DEFAULT_NODE_IO_TIMEOUT`] by default.
+    pub io_timeout: std::time::Duration,
+    /// Upgrade node connections to binary frames after the handshake.
+    /// Requires every node to serve the event-driven transport (the
+    /// thread-per-connection JSON server does not speak frames).
+    pub framed: bool,
 }
 
 impl Default for ReplicaConfig {
     fn default() -> Self {
-        ReplicaConfig { replication: 1, write_quorum: 1 }
+        ReplicaConfig {
+            replication: 1,
+            write_quorum: 1,
+            io_timeout: DEFAULT_NODE_IO_TIMEOUT,
+            framed: false,
+        }
     }
 }
 
@@ -209,7 +226,7 @@ impl ClusterClient {
         let mut slots = Vec::with_capacity(addrs.len());
         for addr in addrs {
             let mut conn = Client::connect(addr)?;
-            conn.set_io_timeout(Some(NODE_IO_TIMEOUT))?;
+            conn.set_io_timeout(Some(repl.io_timeout))?;
             let hello = conn
                 .hello()
                 .map_err(|e| anyhow::anyhow!("hello to '{addr}' failed: {e}"))?;
@@ -219,6 +236,9 @@ impl ClusterClient {
                 hello.node,
                 hello.protocol,
             );
+            if repl.framed {
+                conn.set_framed(true)?;
+            }
             slots.push(NodeSlot { addr: addr.clone(), hello, conn: Some(conn) });
         }
         let first = &slots[0].hello;
@@ -314,7 +334,7 @@ impl ClusterClient {
     /// query-by-query as gather errors.
     pub fn reconnect(&mut self, i: usize, addr: &str) -> anyhow::Result<()> {
         let mut conn = Client::connect(addr)?;
-        conn.set_io_timeout(Some(NODE_IO_TIMEOUT))?;
+        conn.set_io_timeout(Some(self.repl.io_timeout))?;
         let hello = conn.hello()?;
         anyhow::ensure!(
             hello.node == self.slots[i].hello.node,
@@ -340,6 +360,9 @@ impl ClusterClient {
             self.expect.seed,
             self.expect.algo,
         );
+        if self.repl.framed {
+            conn.set_framed(true)?;
+        }
         self.slots[i] = NodeSlot { addr: addr.to_string(), hello, conn: Some(conn) };
         Ok(())
     }

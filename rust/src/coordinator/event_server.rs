@@ -1,0 +1,919 @@
+//! Event-driven TCP transport: one readiness thread serving many
+//! connections over non-blocking sockets, speaking **both** wire
+//! protocols on the same port.
+//!
+//! Where [`super::server`] spends a blocking OS thread per connection,
+//! this transport multiplexes every connection over a single
+//! `poll(2)`-driven event loop ([`crate::util::poll`] — std only, no
+//! async runtime) and hands actual request execution to the existing
+//! worker pool:
+//!
+//! * **Protocol auto-detection, per message.** The first unconsumed byte
+//!   of each message picks the decoder: [`frame::FRAME_MAGIC`] (`0xFB`)
+//!   opens a binary frame, anything else is a JSON text line. A single
+//!   connection may interleave both; JSON-line clients and golden flows
+//!   keep working unchanged.
+//! * **Admission batching.** One readable wakeup drains *all* complete
+//!   messages a socket has buffered and submits them to the pool as one
+//!   batch ([`Coordinator::submit_jobs`] →
+//!   [`super::backpressure::Admission::submit_batch`]), paying dispatch
+//!   bookkeeping once per wakeup instead of once per request.
+//! * **Out-of-order completion.** Binary responses flush the moment a
+//!   worker finishes them, keyed by the client-assigned request id. JSON
+//!   responses are re-sequenced through a per-connection reorder buffer
+//!   so line-protocol clients keep their in-order contract.
+//! * **Coalesced vectored writes.** Completed responses queue per
+//!   connection and leave in a single `write_vectored` per flush.
+//! * **Bounded buffers.** Read buffers are capped at one max frame;
+//!   a connection with too many requests in flight or too many unsent
+//!   response bytes stops being read until it drains (per-connection
+//!   backpressure that never blocks the event thread).
+//!
+//! Workers hand finished responses back through a completion channel +
+//! self-pipe wakeup ([`super::worker::Reply::Callback`] encodes the
+//! response bytes on the worker thread, so the event thread only moves
+//! buffers).
+//!
+//! Observability: `transport.frames_in/out`, `transport.bytes_in/out`,
+//! `transport.batches` counters and `transport.batch_size.{min,mean,max}`
+//! gauges, all visible through the ordinary `metrics` op.
+
+use super::frame::{self, FrameMsg, FrameStatus};
+use super::protocol::{self, Request, Response};
+use super::service::Coordinator;
+use super::worker::{Job, Reply};
+use crate::util::poll::{poll, PollFd, POLLIN, POLLOUT};
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{IoSlice, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Poll timeout — the shutdown flag is observed at least this often.
+const IDLE_POLL_MS: i32 = 50;
+/// Shutdown drains in-flight work for at most this many idle polls (~2s).
+const SHUTDOWN_DRAIN_POLLS: u32 = 40;
+/// A connection may buffer at most one maximum-size message.
+const MAX_RBUF: usize = frame::HEADER_LEN + frame::MAX_PAYLOAD + 64;
+/// Per-connection in-flight request cap: reads pause above this.
+const MAX_INFLIGHT: usize = 1024;
+/// Per-connection unsent response bytes cap: reads pause above this.
+const MAX_WBUF_BYTES: usize = 8 << 20;
+/// Max buffers per vectored write (typical IOV_MAX is far higher; this
+/// just bounds the stack slice array).
+const MAX_IOV: usize = 64;
+
+/// How a response must leave the connection: binary frames carry their
+/// request id and may complete out of order; JSON lines are re-sequenced.
+#[derive(Debug, Clone, Copy)]
+enum Token {
+    Binary { id: u64 },
+    Json { seq: u64 },
+}
+
+/// A finished response, already encoded to wire bytes by the worker.
+struct Completion {
+    conn: usize,
+    gen: u64,
+    token: Token,
+    payload: Vec<u8>,
+}
+
+struct Conn {
+    stream: TcpStream,
+    gen: u64,
+    rbuf: Vec<u8>,
+    rpos: usize,
+    wqueue: VecDeque<Vec<u8>>,
+    /// Bytes of `wqueue.front()` already written (partial-write cursor).
+    woff: usize,
+    /// Total unsent bytes across `wqueue`.
+    wbytes: usize,
+    inflight: usize,
+    /// Next sequence number assigned to an admitted JSON-line request.
+    json_next_submit: u64,
+    /// Next sequence number allowed to flush (in-order contract).
+    json_next_flush: u64,
+    json_pending: BTreeMap<u64, Vec<u8>>,
+    /// EOF seen (or shutdown): stop reading, flush what's owed, close.
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, gen: u64) -> Conn {
+        Conn {
+            stream,
+            gen,
+            rbuf: Vec::new(),
+            rpos: 0,
+            wqueue: VecDeque::new(),
+            woff: 0,
+            wbytes: 0,
+            inflight: 0,
+            json_next_submit: 0,
+            json_next_flush: 0,
+            json_pending: BTreeMap::new(),
+            closing: false,
+        }
+    }
+
+    fn push_write(&mut self, payload: Vec<u8>) {
+        self.wbytes += payload.len();
+        self.wqueue.push_back(payload);
+    }
+
+    /// Sequence a completed JSON response, releasing every consecutive
+    /// line that is now allowed to leave.
+    fn sequence_json(&mut self, seq: u64, payload: Vec<u8>) {
+        self.json_pending.insert(seq, payload);
+        while let Some(buf) = self.json_pending.remove(&self.json_next_flush) {
+            self.json_next_flush += 1;
+            self.push_write(buf);
+        }
+    }
+
+    /// Too much in flight or unsent: stop reading until it drains.
+    fn throttled(&self) -> bool {
+        self.inflight >= MAX_INFLIGHT || self.wbytes >= MAX_WBUF_BYTES
+    }
+
+    /// Nothing owed to the peer: a closing connection may be dropped.
+    fn drained(&self) -> bool {
+        self.inflight == 0 && self.json_pending.is_empty() && self.wqueue.is_empty()
+    }
+
+    /// Coalesce queued responses into vectored writes until the socket
+    /// pushes back. Returns bytes written, or `Err` on a dead socket.
+    fn flush(&mut self) -> std::io::Result<usize> {
+        let mut written = 0usize;
+        while !self.wqueue.is_empty() {
+            let n = {
+                let mut slices: Vec<IoSlice> =
+                    Vec::with_capacity(self.wqueue.len().min(MAX_IOV));
+                for (i, buf) in self.wqueue.iter().take(MAX_IOV).enumerate() {
+                    slices.push(IoSlice::new(if i == 0 { &buf[self.woff..] } else { &buf[..] }));
+                }
+                match (&self.stream).write_vectored(&slices) {
+                    Ok(0) => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::WriteZero,
+                            "socket accepted zero bytes",
+                        ))
+                    }
+                    Ok(n) => n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => return Err(e),
+                }
+            };
+            written += n;
+            self.wbytes -= n;
+            let mut n = n;
+            while n > 0 {
+                let front_left = self.wqueue.front().expect("bytes imply a buffer").len()
+                    - self.woff;
+                if n >= front_left {
+                    n -= front_left;
+                    self.wqueue.pop_front();
+                    self.woff = 0;
+                } else {
+                    self.woff += n;
+                    n = 0;
+                }
+            }
+        }
+        Ok(written)
+    }
+}
+
+/// Running admission-batch statistics, published as gauges per batch.
+struct BatchStats {
+    min: u64,
+    max: u64,
+    sum: u64,
+    batches: u64,
+}
+
+impl BatchStats {
+    fn new() -> BatchStats {
+        BatchStats { min: u64::MAX, max: 0, sum: 0, batches: 0 }
+    }
+}
+
+/// The event-driven server handle. `start` binds and spawns the loop;
+/// `stop` drains in-flight work and joins it.
+pub struct EventServer {
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    wake: Arc<UnixStream>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl EventServer {
+    pub fn start(coord: Arc<Coordinator>, addr: &str) -> anyhow::Result<EventServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (wake_tx, wake_rx) = UnixStream::pair()?;
+        wake_tx.set_nonblocking(true)?;
+        wake_rx.set_nonblocking(true)?;
+        let wake_tx = Arc::new(wake_tx);
+        let (comp_tx, comp_rx) = channel();
+        let mut el = EventLoop {
+            coord,
+            listener,
+            shutdown: shutdown.clone(),
+            wake_rx,
+            wake_tx: wake_tx.clone(),
+            comp_tx,
+            comp_rx,
+            conns: Vec::new(),
+            free: Vec::new(),
+            next_gen: 1,
+            batch: BatchStats::new(),
+        };
+        let handle = std::thread::Builder::new()
+            .name("fastgm-event-loop".into())
+            .spawn(move || el.run())?;
+        Ok(EventServer { addr, shutdown, wake: wake_tx, handle: Some(handle) })
+    }
+
+    /// Stop accepting, drain in-flight responses (bounded), join the loop.
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = (&*self.wake).write(&[1]);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct EventLoop {
+    coord: Arc<Coordinator>,
+    listener: TcpListener,
+    shutdown: Arc<AtomicBool>,
+    wake_rx: UnixStream,
+    wake_tx: Arc<UnixStream>,
+    comp_tx: Sender<Completion>,
+    comp_rx: Receiver<Completion>,
+    /// Connection slab: stable ids while live, slots recycled through
+    /// `free` with a fresh generation so stale completions can't cross
+    /// into a successor connection.
+    conns: Vec<Option<Conn>>,
+    free: Vec<usize>,
+    next_gen: u64,
+    batch: BatchStats,
+}
+
+impl EventLoop {
+    fn run(&mut self) {
+        let mut drain_polls = 0u32;
+        let mut fds: Vec<PollFd> = Vec::new();
+        let mut fd_conn: Vec<usize> = Vec::new();
+        loop {
+            let draining = self.shutdown.load(Ordering::SeqCst);
+            if draining {
+                // Stop reading everywhere; finish what's owed.
+                for conn in self.conns.iter_mut().flatten() {
+                    conn.closing = true;
+                }
+                self.reap_drained();
+                if self.conns.iter().all(|c| c.is_none()) || drain_polls > SHUTDOWN_DRAIN_POLLS {
+                    return;
+                }
+                drain_polls += 1;
+            }
+
+            fds.clear();
+            fd_conn.clear();
+            fds.push(PollFd::new(
+                self.listener.as_raw_fd(),
+                if draining { 0 } else { POLLIN },
+            ));
+            fds.push(PollFd::new(self.wake_rx.as_raw_fd(), POLLIN));
+            for (id, slot) in self.conns.iter().enumerate() {
+                let Some(conn) = slot else { continue };
+                let mut events = 0i16;
+                if !conn.closing && !conn.throttled() {
+                    events |= POLLIN;
+                }
+                if !conn.wqueue.is_empty() {
+                    events |= POLLOUT;
+                }
+                fds.push(PollFd::new(conn.stream.as_raw_fd(), events));
+                fd_conn.push(id);
+            }
+
+            if let Err(e) = poll(&mut fds, IDLE_POLL_MS) {
+                log::error!("event loop poll failed: {e}");
+                return;
+            }
+
+            // Wake pipe: swallow the pending bytes (level-triggered).
+            if fds[1].readable() {
+                let mut sink = [0u8; 256];
+                while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+            }
+
+            // Worker completions → per-connection write queues.
+            while let Ok(c) = self.comp_rx.try_recv() {
+                self.apply_completion(c);
+            }
+
+            if !draining && fds[0].readable() {
+                self.accept_ready();
+            }
+
+            // Readable connections: drain socket → parse all complete
+            // messages → submit as ONE admission batch.
+            for (i, fd) in fds.iter().enumerate().skip(2) {
+                let id = fd_conn[i - 2];
+                if fd.readable() {
+                    self.service_readable(id);
+                }
+            }
+
+            // Flush everything with queued bytes (not just POLLOUT hits:
+            // completions may have landed after the poll).
+            for id in 0..self.conns.len() {
+                self.service_writable(id);
+            }
+            self.reap_drained();
+        }
+    }
+
+    fn metrics(&self) -> &crate::coordinator::metrics::Metrics {
+        self.coord.node().metrics()
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let gen = self.next_gen;
+                    self.next_gen += 1;
+                    let conn = Conn::new(stream, gen);
+                    match self.free.pop() {
+                        Some(id) => self.conns[id] = Some(conn),
+                        None => self.conns.push(Some(conn)),
+                    }
+                    self.publish_conn_gauge();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    log::warn!("accept failed: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn publish_conn_gauge(&self) {
+        let live = self.conns.iter().filter(|c| c.is_some()).count();
+        self.metrics().gauge_set("transport.connections", live as f64);
+    }
+
+    fn close_conn(&mut self, id: usize) {
+        if self.conns[id].take().is_some() {
+            self.free.push(id);
+            self.publish_conn_gauge();
+        }
+    }
+
+    fn apply_completion(&mut self, c: Completion) {
+        let Some(conn) = self.conns.get_mut(c.conn).and_then(Option::as_mut) else { return };
+        if conn.gen != c.gen {
+            return; // stale: slot was recycled for a newer connection
+        }
+        conn.inflight -= 1;
+        let is_frame = matches!(c.token, Token::Binary { .. });
+        match c.token {
+            Token::Binary { .. } => conn.push_write(c.payload),
+            Token::Json { seq } => conn.sequence_json(seq, c.payload),
+        }
+        if is_frame {
+            self.coord.node().metrics().incr("transport.frames_out");
+        }
+    }
+
+    /// Drain the socket, parse every complete message, submit the batch.
+    fn service_readable(&mut self, id: usize) {
+        let mut chunk = [0u8; 64 * 1024];
+        let mut read_total = 0usize;
+        let mut fatal = false;
+        {
+            let Some(conn) = self.conns.get_mut(id).and_then(Option::as_mut) else { return };
+            loop {
+                match (&conn.stream).read(&mut chunk) {
+                    Ok(0) => {
+                        conn.closing = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&chunk[..n]);
+                        read_total += n;
+                        if conn.rbuf.len() - conn.rpos > MAX_RBUF {
+                            log::warn!("connection exceeded {MAX_RBUF}-byte message cap");
+                            fatal = true;
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        fatal = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if read_total > 0 {
+            self.metrics().add("transport.bytes_in", read_total as u64);
+        }
+        if fatal {
+            self.close_conn(id);
+            return;
+        }
+        let jobs = self.parse_messages(id);
+        if self.conns.get(id).map(|c| c.is_none()).unwrap_or(true) {
+            // Parsing hit unrecoverable framing corruption and closed the
+            // connection; jobs already admitted still complete (their
+            // completions will be dropped as stale).
+            if !jobs.is_empty() {
+                self.submit_batch(jobs);
+            }
+            return;
+        }
+        if !jobs.is_empty() {
+            self.submit_batch(jobs);
+        }
+        // Eager flush: the socket is usually writable right now.
+        self.service_writable(id);
+    }
+
+    /// Parse every complete message buffered on `id`, building worker
+    /// jobs. Per-message errors (bad JSON, a client-sent response frame)
+    /// are answered locally; framing corruption closes the connection —
+    /// a binary stream with an untrusted length prefix cannot resync.
+    fn parse_messages(&mut self, id: usize) -> Vec<Job> {
+        let mut jobs = Vec::new();
+        let mut local: Vec<(Token, Response)> = Vec::new();
+        let mut frames_in = 0u64;
+        let mut fatal = false;
+        {
+            let Some(conn) = self.conns.get_mut(id).and_then(Option::as_mut) else {
+                return jobs;
+            };
+            let (conn_id, gen) = (id, conn.gen);
+            loop {
+                let buf = &conn.rbuf[conn.rpos..];
+                if buf.is_empty() {
+                    break;
+                }
+                if buf[0] == frame::FRAME_MAGIC {
+                    match frame::decode_frame(buf) {
+                        Ok(FrameStatus::Incomplete) => break,
+                        Ok(FrameStatus::Frame { consumed, id: req_id, msg }) => {
+                            conn.rpos += consumed;
+                            frames_in += 1;
+                            match msg {
+                                FrameMsg::Request(request) => {
+                                    conn.inflight += 1;
+                                    jobs.push(make_job(
+                                        &self.comp_tx,
+                                        &self.wake_tx,
+                                        &self.coord,
+                                        conn_id,
+                                        gen,
+                                        Token::Binary { id: req_id },
+                                        request,
+                                    ));
+                                }
+                                FrameMsg::Response(_) => {
+                                    conn.inflight += 1;
+                                    local.push((
+                                        Token::Binary { id: req_id },
+                                        Response::err("server expects request frames"),
+                                    ));
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            log::warn!("binary stream corrupt, closing connection: {e}");
+                            fatal = true;
+                            break;
+                        }
+                    }
+                } else {
+                    let Some(nl) = buf.iter().position(|&b| b == b'\n') else { break };
+                    let line = &buf[..nl];
+                    conn.rpos += nl + 1;
+                    let parsed = std::str::from_utf8(line)
+                        .map_err(|e| anyhow::anyhow!("request is not UTF-8: {e}"))
+                        .and_then(|text| {
+                            if text.trim().is_empty() {
+                                Ok(None)
+                            } else {
+                                protocol::decode_request(text).map(Some)
+                            }
+                        });
+                    match parsed {
+                        Ok(None) => {} // blank line: ignored, no response
+                        Ok(Some(request)) => {
+                            let seq = conn.json_next_submit;
+                            conn.json_next_submit += 1;
+                            conn.inflight += 1;
+                            jobs.push(make_job(
+                                &self.comp_tx,
+                                &self.wake_tx,
+                                &self.coord,
+                                conn_id,
+                                gen,
+                                Token::Json { seq },
+                                request,
+                            ));
+                        }
+                        Err(e) => {
+                            let seq = conn.json_next_submit;
+                            conn.json_next_submit += 1;
+                            conn.inflight += 1;
+                            local.push((Token::Json { seq }, Response::err(e)));
+                        }
+                    }
+                }
+            }
+            // Compact the consumed prefix so the buffer stays bounded.
+            if conn.rpos > 0 {
+                conn.rbuf.drain(..conn.rpos);
+                conn.rpos = 0;
+            }
+        }
+        if frames_in > 0 {
+            self.metrics().add("transport.frames_in", frames_in);
+        }
+        for (token, resp) in local {
+            let payload = encode_payload(token, &resp);
+            self.apply_completion(Completion { conn: id, gen: self.gen_of(id), token, payload });
+        }
+        if fatal {
+            self.close_conn(id);
+        }
+        jobs
+    }
+
+    fn gen_of(&self, id: usize) -> u64 {
+        self.conns.get(id).and_then(Option::as_ref).map(|c| c.gen).unwrap_or(0)
+    }
+
+    fn submit_batch(&mut self, jobs: Vec<Job>) {
+        let n = jobs.len() as u64;
+        self.coord.submit_jobs(jobs);
+        self.batch.batches += 1;
+        self.batch.sum += n;
+        self.batch.min = self.batch.min.min(n);
+        self.batch.max = self.batch.max.max(n);
+        let m = self.metrics();
+        m.incr("transport.batches");
+        m.gauge_set("transport.batch_size.min", self.batch.min as f64);
+        m.gauge_set("transport.batch_size.max", self.batch.max as f64);
+        m.gauge_set(
+            "transport.batch_size.mean",
+            self.batch.sum as f64 / self.batch.batches as f64,
+        );
+    }
+
+    fn service_writable(&mut self, id: usize) {
+        let Some(conn) = self.conns.get_mut(id).and_then(Option::as_mut) else { return };
+        if conn.wqueue.is_empty() {
+            return;
+        }
+        match conn.flush() {
+            Ok(0) => {}
+            Ok(n) => self.metrics().add("transport.bytes_out", n as u64),
+            Err(e) => {
+                log::debug!("connection write failed, closing: {e}");
+                self.close_conn(id);
+            }
+        }
+    }
+
+    /// Close connections that hit EOF (or shutdown) once nothing is owed.
+    fn reap_drained(&mut self) {
+        for id in 0..self.conns.len() {
+            let close = matches!(
+                self.conns[id].as_ref(),
+                Some(conn) if conn.closing && conn.drained()
+            );
+            if close {
+                self.close_conn(id);
+            }
+        }
+    }
+}
+
+/// Build a pool job whose reply callback encodes the response on the
+/// worker thread, records per-op latency, and hands the finished bytes
+/// back through the completion pipe + wake byte. A free function (not a
+/// method) so the parse loop can call it while a connection is mutably
+/// borrowed.
+fn make_job(
+    comp: &Sender<Completion>,
+    wake: &Arc<UnixStream>,
+    coord: &Arc<Coordinator>,
+    conn: usize,
+    gen: u64,
+    token: Token,
+    request: Request,
+) -> Job {
+    let comp = comp.clone();
+    let wake = wake.clone();
+    let coord = coord.clone();
+    let op = request.op();
+    let t0 = Instant::now();
+    Job {
+        request,
+        reply: Reply::Callback(Box::new(move |resp| {
+            coord.node().metrics().observe(op, t0.elapsed().as_secs_f64());
+            let payload = encode_payload(token, &resp);
+            let _ = comp.send(Completion { conn, gen, token, payload });
+            // WouldBlock means a wakeup is already pending: fine.
+            let _ = (&*wake).write(&[1]);
+        })),
+    }
+}
+
+fn encode_payload(token: Token, resp: &Response) -> Vec<u8> {
+    match token {
+        Token::Binary { id } => {
+            let mut payload = Vec::new();
+            frame::encode_response_frame(id, resp, &mut payload);
+            payload
+        }
+        Token::Json { .. } => protocol::encode_line(&resp.to_json()).into_bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::client::Client;
+    use crate::coordinator::service::CoordinatorConfig;
+    use std::io::{BufRead, BufReader};
+
+    fn start(workers: usize) -> (Arc<Coordinator>, EventServer) {
+        let coord = Arc::new(
+            Coordinator::new(CoordinatorConfig {
+                k: 64,
+                workers,
+                ..CoordinatorConfig::default()
+            })
+            .unwrap(),
+        );
+        let server = EventServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+        (coord, server)
+    }
+
+    fn send_frames(stream: &mut TcpStream, reqs: &[(u64, Request)]) {
+        let mut buf = Vec::new();
+        for (id, req) in reqs {
+            frame::encode_request_frame(*id, req, &mut buf);
+        }
+        stream.write_all(&buf).unwrap();
+    }
+
+    fn read_frame(stream: &mut TcpStream, acc: &mut Vec<u8>) -> (u64, Response) {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match frame::decode_frame(acc).unwrap() {
+                FrameStatus::Frame { consumed, id, msg } => {
+                    acc.drain(..consumed);
+                    let FrameMsg::Response(resp) = msg else {
+                        panic!("server sent a request frame")
+                    };
+                    return (id, resp);
+                }
+                FrameStatus::Incomplete => {
+                    let n = stream.read(&mut chunk).unwrap();
+                    assert!(n > 0, "server closed mid-frame");
+                    acc.extend_from_slice(&chunk[..n]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn binary_ping_roundtrips() {
+        let (coord, server) = start(2);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        send_frames(&mut s, &[(7, Request::Ping)]);
+        let mut acc = Vec::new();
+        let (id, resp) = read_frame(&mut s, &mut acc);
+        assert_eq!(id, 7);
+        assert_eq!(resp, Response::Pong);
+        drop(s);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    #[test]
+    fn pipelined_frames_answer_every_id_exactly_once() {
+        let (coord, server) = start(4);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let n = 64u64;
+        let reqs: Vec<(u64, Request)> = (0..n).map(|i| (1000 + i, Request::Ping)).collect();
+        send_frames(&mut s, &reqs);
+        let mut acc = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..n {
+            let (id, resp) = read_frame(&mut s, &mut acc);
+            assert_eq!(resp, Response::Pong);
+            assert!(seen.insert(id), "duplicate response id {id}");
+            assert!((1000..1000 + n).contains(&id));
+        }
+        assert_eq!(seen.len(), n as usize);
+        drop(s);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    #[test]
+    fn existing_json_line_clients_work_unchanged() {
+        let (coord, server) = start(2);
+        let mut c = Client::connect(&server.addr.to_string()).unwrap();
+        assert!(c.hello().is_ok());
+        let resp = c.call(&Request::Ping).unwrap();
+        assert_eq!(resp, Response::Pong);
+        // Pipelined JSON keeps its in-order contract.
+        let reqs: Vec<Request> = (0..16)
+            .map(|i| Request::Push { stream: "s".into(), items: vec![(i, 1.0)] })
+            .collect();
+        let resps = c.call_pipelined(&reqs).unwrap();
+        for (i, resp) in resps.iter().enumerate() {
+            let Response::Ack { info } = resp else { panic!("expected ack, got {resp:?}") };
+            assert!(
+                info.contains(&format!("processed {}", i + 1)),
+                "out of order at {i}: {info}"
+            );
+        }
+        drop(c);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    #[test]
+    fn one_connection_can_interleave_json_and_frames() {
+        // workers=1 → completion order is submission order, so the JSON
+        // line's response arrives before the frame's.
+        let (coord, server) = start(1);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        s.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        send_frames(&mut s, &[(42, Request::Hello)]);
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"), "json reply: {line}");
+        let mut acc = r.buffer().to_vec(); // frame bytes the line read buffered
+        let (id, resp) = read_frame(&mut s, &mut acc);
+        assert_eq!(id, 42);
+        assert!(matches!(resp, Response::Hello { .. }));
+        drop(r);
+        drop(s);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    #[test]
+    fn transport_metrics_are_surfaced_through_the_metrics_op() {
+        let (coord, server) = start(2);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let reqs: Vec<(u64, Request)> = (0..8).map(|i| (i, Request::Ping)).collect();
+        send_frames(&mut s, &reqs);
+        let mut acc = Vec::new();
+        for _ in 0..8 {
+            read_frame(&mut s, &mut acc);
+        }
+        send_frames(&mut s, &[(99, Request::Metrics)]);
+        let (_, resp) = read_frame(&mut s, &mut acc);
+        let Response::MetricsDump { snapshot } = resp else { panic!("expected metrics") };
+        let counter = |name: &str| {
+            snapshot
+                .get("counters")
+                .and_then(|c| c.get(name))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        assert!(counter("transport.frames_in") >= 9.0, "{snapshot}");
+        assert!(counter("transport.frames_out") >= 8.0, "{snapshot}");
+        assert!(counter("transport.bytes_in") > 0.0, "{snapshot}");
+        assert!(counter("transport.bytes_out") > 0.0, "{snapshot}");
+        assert!(counter("transport.batches") >= 1.0, "{snapshot}");
+        let gauge = |name: &str| {
+            snapshot.get("gauges").and_then(|g| g.get(name)).and_then(|v| v.as_f64())
+        };
+        let min = gauge("transport.batch_size.min").expect("batch min gauge");
+        let mean = gauge("transport.batch_size.mean").expect("batch mean gauge");
+        let max = gauge("transport.batch_size.max").expect("batch max gauge");
+        assert!(min >= 1.0 && min <= mean && mean <= max, "min={min} mean={mean} max={max}");
+        // The 8-ping burst was written in one TCP segment: at least one
+        // admission batch carried more than one request.
+        assert!(max >= 2.0, "admission batching never batched: max={max}");
+        drop(s);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    #[test]
+    fn corrupt_frame_closes_the_connection() {
+        let (coord, server) = start(1);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let mut buf = Vec::new();
+        frame::encode_request_frame(5, &Request::Ping, &mut buf);
+        let last = buf.len() - 1;
+        buf[last] ^= 0xFF; // break the checksum
+        s.write_all(&buf).unwrap();
+        let mut chunk = [0u8; 64];
+        // The server must close without answering.
+        s.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        assert_eq!(s.read(&mut chunk).unwrap(), 0, "expected EOF after corruption");
+        drop(s);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    #[test]
+    fn malformed_json_gets_an_error_line_and_the_stream_survives() {
+        let (coord, server) = start(1);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        s.write_all(b"this is not json\n{\"op\":\"ping\"}\n").unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "first reply should be an error: {line}");
+        line.clear();
+        r.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"), "stream should survive the bad line: {line}");
+        drop(r);
+        drop(s);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    #[test]
+    fn stop_returns_with_idle_connections_open() {
+        let (coord, server) = start(1);
+        let _idle = TcpStream::connect(server.addr).unwrap();
+        let t0 = Instant::now();
+        server.stop();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5), "stop hung on idle conn");
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    #[test]
+    fn full_flow_over_binary_frames() {
+        let (coord, server) = start(2);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let v = crate::sketch::SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+        send_frames(
+            &mut s,
+            &[(1, Request::Upsert { key: "doc".into(), vector: v.clone(), version: None })],
+        );
+        let mut acc = Vec::new();
+        let (_, resp) = read_frame(&mut s, &mut acc);
+        assert!(matches!(resp, Response::Ack { .. }), "upsert failed: {resp:?}");
+        send_frames(&mut s, &[(2, Request::TopK { vector: v, limit: 1 })]);
+        let (_, resp) = read_frame(&mut s, &mut acc);
+        let Response::TopK { hits } = resp else { panic!("expected topk, got {resp:?}") };
+        assert_eq!(hits[0].0, "doc");
+        // Blob fetch rides the raw-bytes path end to end.
+        send_frames(
+            &mut s,
+            &[(
+                3,
+                Request::SketchFetch {
+                    name: "doc".into(),
+                    source: crate::coordinator::protocol::SketchSource::Store,
+                },
+            )],
+        );
+        let (_, resp) = read_frame(&mut s, &mut acc);
+        let Response::SketchBlob { data, .. } = resp else {
+            panic!("expected blob, got {resp:?}")
+        };
+        let (key, _, _) = crate::sketch::codec::decode_sketch_hex(&data).unwrap();
+        assert_eq!(key, "doc");
+        drop(s);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+}

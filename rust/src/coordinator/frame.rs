@@ -1,0 +1,894 @@
+//! Length-prefixed binary frame codec — the multiplexed wire format the
+//! event-driven transport speaks, next to (never instead of) the JSON
+//! lines of [`super::protocol`].
+//!
+//! Frame layout, little-endian, with a trailing integrity checksum in the
+//! style of [`crate::sketch::codec`]:
+//!
+//! ```text
+//! magic 0xFB | version u8 | payload_len u32
+//! payload:
+//!   request id u64 | kind u8 (0 = request, 1 = response) | body
+//! fnv1a64(header + payload) u64
+//! ```
+//!
+//! * The magic byte `0xFB` can never open a JSON-lines request (those
+//!   start with `{` = `0x7B`, or whitespace), so a server can dispatch on
+//!   the FIRST byte of every message and serve both protocols on one
+//!   port, even interleaved on one connection.
+//! * The **request id** is client-assigned and echoed verbatim in the
+//!   response frame — responses may complete out of order, and the id is
+//!   what lets a multiplexing client (or a pipelined batch) match them
+//!   back up without imposing FIFO on the server.
+//! * The body is a compact tag-byte encoding of the same
+//!   [`Request`]/[`Response`] enums the JSON protocol carries — identical
+//!   semantics, zero text parsing, and codec blobs (`sketch_fetch`
+//!   replies, `store_put`/`stream_merge` payloads) ride as **raw
+//!   [`crate::sketch::codec`] bytes** instead of hex-in-JSON, halving
+//!   their wire size.
+//!
+//! Decoding is strict, exactly like the snapshot codec: bad magic,
+//! unknown version/kind/tag, out-of-range lengths, truncation inside any
+//! field, payload bytes left over after the message, and checksum
+//! mismatches are all clean `Err`s — never panics, never partial state.
+//! [`decode_frame`] is incremental: on a prefix of a well-formed frame it
+//! answers [`FrameStatus::Incomplete`] so a read loop can just keep
+//! appending bytes and retrying.
+
+use super::protocol::{HelloInfo, Request, Response, SketchSource};
+use crate::sketch::codec::{self, Reader};
+use crate::sketch::{GumbelMaxSketch, SparseVector};
+use crate::util::hash::fnv1a64;
+use crate::util::json;
+
+/// First byte of every binary frame. `0xFB` is an invalid first byte for
+/// both JSON and UTF-8 text, so frame-vs-line auto-detection is exact.
+pub const FRAME_MAGIC: u8 = 0xFB;
+/// Frame layout version. Bumped on any layout change; decoders refuse
+/// versions they don't know (no best-effort parsing of future frames).
+pub const FRAME_VERSION: u8 = 1;
+/// Bytes before the payload: magic, version, payload length.
+pub const HEADER_LEN: usize = 6;
+/// Trailing fnv1a64 checksum.
+const TRAILER_LEN: usize = 8;
+/// Payload floor: the request id and the kind byte.
+const MIN_PAYLOAD: usize = 9;
+/// Allocation guard — a corrupt length field must not ask the allocator
+/// for gigabytes before the inevitable checksum/truncation error.
+pub const MAX_PAYLOAD: usize = 1 << 26;
+
+const KIND_REQUEST: u8 = 0;
+const KIND_RESPONSE: u8 = 1;
+
+/// A decoded frame body: the direction is part of the frame, so a server
+/// can refuse response frames and a client request frames, loudly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameMsg {
+    Request(Request),
+    Response(Response),
+}
+
+/// Result of [`decode_frame`] on a (possibly partial) buffer front.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameStatus {
+    /// The buffer holds a prefix of a well-formed frame — read more bytes.
+    Incomplete,
+    /// One complete frame: `consumed` bytes of the buffer, carrying `msg`
+    /// under client-assigned request id `id`.
+    Frame { consumed: usize, id: u64, msg: FrameMsg },
+}
+
+/// Append one request frame to `out` (frames concatenate, so a pipelined
+/// batch encodes into a single buffer → a single write).
+pub fn encode_request_frame(id: u64, req: &Request, out: &mut Vec<u8>) {
+    encode_frame(id, KIND_REQUEST, out, |b| encode_request_body(req, b));
+}
+
+/// Append one response frame to `out`, echoing the request's `id`.
+pub fn encode_response_frame(id: u64, resp: &Response, out: &mut Vec<u8>) {
+    encode_frame(id, KIND_RESPONSE, out, |b| encode_response_body(resp, b));
+}
+
+fn encode_frame(id: u64, kind: u8, out: &mut Vec<u8>, body: impl FnOnce(&mut Vec<u8>)) {
+    let start = out.len();
+    out.push(FRAME_MAGIC);
+    out.push(FRAME_VERSION);
+    codec::push_u32(out, 0); // payload_len, backpatched below
+    codec::push_u64(out, id);
+    out.push(kind);
+    body(out);
+    let payload_len = (out.len() - start - HEADER_LEN) as u32;
+    out[start + 2..start + HEADER_LEN].copy_from_slice(&payload_len.to_le_bytes());
+    let sum = fnv1a64(&out[start..]);
+    codec::push_u64(out, sum);
+}
+
+/// Try to decode one frame off the front of `buf`. `Incomplete` means
+/// "more bytes needed"; `Err` means the stream is corrupt (or not a frame
+/// at all) and the connection should be torn down — framing cannot be
+/// resynchronized once the length prefix is untrustworthy.
+pub fn decode_frame(buf: &[u8]) -> anyhow::Result<FrameStatus> {
+    if buf.is_empty() {
+        return Ok(FrameStatus::Incomplete);
+    }
+    anyhow::ensure!(
+        buf[0] == FRAME_MAGIC,
+        "not a binary frame (first byte 0x{:02x}, want 0x{FRAME_MAGIC:02x})",
+        buf[0]
+    );
+    if buf.len() >= 2 {
+        anyhow::ensure!(
+            buf[1] == FRAME_VERSION,
+            "unsupported frame version {} (this build speaks v{FRAME_VERSION})",
+            buf[1]
+        );
+    }
+    if buf.len() < HEADER_LEN {
+        return Ok(FrameStatus::Incomplete);
+    }
+    let payload_len =
+        u32::from_le_bytes(buf[2..HEADER_LEN].try_into().expect("4 bytes")) as usize;
+    anyhow::ensure!(
+        (MIN_PAYLOAD..=MAX_PAYLOAD).contains(&payload_len),
+        "frame payload length {payload_len} out of range ({MIN_PAYLOAD}..={MAX_PAYLOAD})"
+    );
+    let total = HEADER_LEN + payload_len + TRAILER_LEN;
+    if buf.len() < total {
+        return Ok(FrameStatus::Incomplete);
+    }
+    let (checked, tail) = buf[..total].split_at(total - TRAILER_LEN);
+    let want = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
+    anyhow::ensure!(
+        fnv1a64(checked) == want,
+        "frame checksum mismatch (corrupt or torn stream)"
+    );
+    let mut r = Reader { bytes: &checked[HEADER_LEN..], pos: 0 };
+    let id = r.u64()?;
+    let msg = match r.u8()? {
+        KIND_REQUEST => FrameMsg::Request(read_request(&mut r)?),
+        KIND_RESPONSE => FrameMsg::Response(read_response(&mut r)?),
+        other => anyhow::bail!("unknown frame kind {other}"),
+    };
+    anyhow::ensure!(
+        r.remaining() == 0,
+        "frame has {} trailing payload bytes after the message",
+        r.remaining()
+    );
+    Ok(FrameStatus::Frame { consumed: total, id, msg })
+}
+
+/// Encode a request body alone (no frame header/checksum) — what the
+/// frame-vs-JSON microbenches measure.
+pub fn encode_request_body(req: &Request, out: &mut Vec<u8>) {
+    match req {
+        Request::Sketch { name, vector, algo } => {
+            out.push(0);
+            put_str(out, name);
+            put_vector(out, vector);
+            put_opt_str(out, algo.as_deref());
+        }
+        Request::SketchDense { name, weights } => {
+            out.push(1);
+            put_str(out, name);
+            put_f64s(out, weights);
+        }
+        Request::GetSketch { name } => {
+            out.push(2);
+            put_str(out, name);
+        }
+        Request::Push { stream, items } => {
+            out.push(3);
+            put_str(out, stream);
+            codec::push_u32(out, items.len() as u32);
+            for &(id, w) in items {
+                codec::push_u64(out, id);
+                codec::push_u64(out, w.to_bits());
+            }
+        }
+        Request::Cardinality { stream } => {
+            out.push(4);
+            put_str(out, stream);
+        }
+        Request::Jaccard { a, b } => {
+            out.push(5);
+            put_str(out, a);
+            put_str(out, b);
+        }
+        Request::WeightedJaccard { a, b } => {
+            out.push(6);
+            put_str(out, a);
+            put_str(out, b);
+        }
+        Request::Merge { names, out: dest } => {
+            out.push(7);
+            put_strs(out, names);
+            put_str(out, dest);
+        }
+        Request::LshInsert { name } => {
+            out.push(8);
+            put_str(out, name);
+        }
+        Request::LshQuery { vector, limit } => {
+            out.push(9);
+            put_vector(out, vector);
+            codec::push_u64(out, *limit as u64);
+        }
+        Request::Upsert { key, vector, version } => {
+            out.push(10);
+            put_str(out, key);
+            put_vector(out, vector);
+            match version {
+                None => out.push(0),
+                Some(v) => {
+                    out.push(1);
+                    codec::push_u64(out, *v);
+                }
+            }
+        }
+        Request::Delete { key } => {
+            out.push(11);
+            put_str(out, key);
+        }
+        Request::StoreKeys { after, limit } => {
+            out.push(12);
+            put_opt_str(out, after.as_deref());
+            codec::push_u64(out, *limit as u64);
+        }
+        Request::StorePut { data } => {
+            out.push(13);
+            put_blob(out, data);
+        }
+        Request::StreamMerge { stream, data } => {
+            out.push(14);
+            put_str(out, stream);
+            put_blob(out, data);
+        }
+        Request::TopK { vector, limit } => {
+            out.push(15);
+            put_vector(out, vector);
+            codec::push_u64(out, *limit as u64);
+        }
+        Request::StoreStats => out.push(16),
+        Request::Snapshot { path } => {
+            out.push(17);
+            put_str(out, path);
+        }
+        Request::Restore { path } => {
+            out.push(18);
+            put_str(out, path);
+        }
+        Request::Hello => out.push(19),
+        Request::SketchFetch { name, source } => {
+            out.push(20);
+            put_str(out, name);
+            out.push(source_tag(*source));
+        }
+        Request::Metrics => out.push(21),
+        Request::Ping => out.push(22),
+    }
+}
+
+/// Strict inverse of [`encode_request_body`].
+pub fn decode_request_body(bytes: &[u8]) -> anyhow::Result<Request> {
+    let mut r = Reader { bytes, pos: 0 };
+    let req = read_request(&mut r)?;
+    anyhow::ensure!(r.remaining() == 0, "{} trailing bytes after request", r.remaining());
+    Ok(req)
+}
+
+fn read_request(r: &mut Reader) -> anyhow::Result<Request> {
+    Ok(match r.u8()? {
+        0 => Request::Sketch {
+            name: get_str(r)?,
+            vector: get_vector(r)?,
+            algo: get_opt_str(r)?,
+        },
+        1 => Request::SketchDense { name: get_str(r)?, weights: get_f64s(r)? },
+        2 => Request::GetSketch { name: get_str(r)? },
+        3 => Request::Push {
+            stream: get_str(r)?,
+            items: {
+                let n = r.u32()? as usize;
+                anyhow::ensure!(r.remaining() >= 16 * n, "truncated push items (n={n})");
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let id = r.u64()?;
+                    let w = f64::from_bits(r.u64()?);
+                    items.push((id, w));
+                }
+                items
+            },
+        },
+        4 => Request::Cardinality { stream: get_str(r)? },
+        5 => Request::Jaccard { a: get_str(r)?, b: get_str(r)? },
+        6 => Request::WeightedJaccard { a: get_str(r)?, b: get_str(r)? },
+        7 => Request::Merge { names: get_strs(r)?, out: get_str(r)? },
+        8 => Request::LshInsert { name: get_str(r)? },
+        9 => Request::LshQuery { vector: get_vector(r)?, limit: get_usize(r)? },
+        10 => Request::Upsert {
+            key: get_str(r)?,
+            vector: get_vector(r)?,
+            version: match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()?),
+                other => anyhow::bail!("bad option flag {other}"),
+            },
+        },
+        11 => Request::Delete { key: get_str(r)? },
+        12 => Request::StoreKeys { after: get_opt_str(r)?, limit: get_usize(r)? },
+        13 => Request::StorePut { data: get_blob(r)? },
+        14 => Request::StreamMerge { stream: get_str(r)?, data: get_blob(r)? },
+        15 => Request::TopK { vector: get_vector(r)?, limit: get_usize(r)? },
+        16 => Request::StoreStats,
+        17 => Request::Snapshot { path: get_str(r)? },
+        18 => Request::Restore { path: get_str(r)? },
+        19 => Request::Hello,
+        20 => Request::SketchFetch { name: get_str(r)?, source: source_from_tag(r.u8()?)? },
+        21 => Request::Metrics,
+        22 => Request::Ping,
+        other => anyhow::bail!("unknown request tag {other}"),
+    })
+}
+
+/// Encode a response body alone (no frame header/checksum).
+pub fn encode_response_body(resp: &Response, out: &mut Vec<u8>) {
+    match resp {
+        Response::Sketch { name, sketch } => {
+            out.push(0);
+            put_str(out, name);
+            put_sketch(out, sketch);
+        }
+        Response::Ack { info } => {
+            out.push(1);
+            put_str(out, info);
+        }
+        Response::Estimate { value } => {
+            out.push(2);
+            codec::push_u64(out, value.to_bits());
+        }
+        Response::TopK { hits } => {
+            out.push(3);
+            codec::push_u32(out, hits.len() as u32);
+            for (name, score) in hits {
+                put_str(out, name);
+                codec::push_u64(out, score.to_bits());
+            }
+        }
+        // Metrics/stats snapshots are free-form JSON values; they ride as
+        // compact JSON text inside the binary frame (cold ops — not worth
+        // a binary schema of their own).
+        Response::MetricsDump { snapshot } => {
+            out.push(4);
+            put_str(out, &snapshot.to_string());
+        }
+        Response::Stats { stats } => {
+            out.push(5);
+            put_str(out, &stats.to_string());
+        }
+        Response::Keys { keys } => {
+            out.push(6);
+            codec::push_u32(out, keys.len() as u32);
+            for (key, version) in keys {
+                put_str(out, key);
+                codec::push_u64(out, *version);
+            }
+        }
+        Response::Hello { info } => {
+            out.push(7);
+            codec::push_u64(out, info.protocol);
+            put_str(out, &info.node);
+            codec::push_u64(out, info.epoch);
+            codec::push_u64(out, info.k as u64);
+            codec::push_u64(out, info.seed);
+            put_str(out, &info.algo);
+            put_strs(out, &info.algos);
+        }
+        Response::SketchBlob { name, data } => {
+            out.push(8);
+            put_str(out, name);
+            put_blob(out, data);
+        }
+        Response::Error { message } => {
+            out.push(9);
+            put_str(out, message);
+        }
+        Response::Pong => out.push(10),
+    }
+}
+
+/// Strict inverse of [`encode_response_body`].
+pub fn decode_response_body(bytes: &[u8]) -> anyhow::Result<Response> {
+    let mut r = Reader { bytes, pos: 0 };
+    let resp = read_response(&mut r)?;
+    anyhow::ensure!(r.remaining() == 0, "{} trailing bytes after response", r.remaining());
+    Ok(resp)
+}
+
+fn read_response(r: &mut Reader) -> anyhow::Result<Response> {
+    Ok(match r.u8()? {
+        0 => Response::Sketch { name: get_str(r)?, sketch: get_sketch(r)? },
+        1 => Response::Ack { info: get_str(r)? },
+        2 => Response::Estimate { value: f64::from_bits(r.u64()?) },
+        3 => Response::TopK {
+            hits: {
+                let n = r.u32()? as usize;
+                anyhow::ensure!(n <= r.remaining(), "truncated topk hits (n={n})");
+                let mut hits = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = get_str(r)?;
+                    let score = f64::from_bits(r.u64()?);
+                    hits.push((name, score));
+                }
+                hits
+            },
+        },
+        4 => Response::MetricsDump { snapshot: json::parse(&get_str(r)?)? },
+        5 => Response::Stats { stats: json::parse(&get_str(r)?)? },
+        6 => Response::Keys {
+            keys: {
+                let n = r.u32()? as usize;
+                anyhow::ensure!(n <= r.remaining(), "truncated keys page (n={n})");
+                let mut keys = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let key = get_str(r)?;
+                    let version = r.u64()?;
+                    keys.push((key, version));
+                }
+                keys
+            },
+        },
+        7 => Response::Hello {
+            info: HelloInfo {
+                protocol: r.u64()?,
+                node: get_str(r)?,
+                epoch: r.u64()?,
+                k: get_usize(r)?,
+                seed: r.u64()?,
+                algo: get_str(r)?,
+                algos: get_strs(r)?,
+            },
+        },
+        8 => Response::SketchBlob { name: get_str(r)?, data: get_blob(r)? },
+        9 => Response::Error { message: get_str(r)? },
+        10 => Response::Pong,
+        other => anyhow::bail!("unknown response tag {other}"),
+    })
+}
+
+// -- field primitives ------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    codec::push_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(r: &mut Reader) -> anyhow::Result<String> {
+    let n = r.u32()? as usize;
+    anyhow::ensure!(n <= MAX_PAYLOAD, "string length {n} too large");
+    Ok(std::str::from_utf8(r.take(n)?)
+        .map_err(|e| anyhow::anyhow!("string field is not UTF-8: {e}"))?
+        .to_string())
+}
+
+fn put_opt_str(out: &mut Vec<u8>, s: Option<&str>) {
+    match s {
+        None => out.push(0),
+        Some(s) => {
+            out.push(1);
+            put_str(out, s);
+        }
+    }
+}
+
+fn get_opt_str(r: &mut Reader) -> anyhow::Result<Option<String>> {
+    match r.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(get_str(r)?)),
+        other => anyhow::bail!("bad option flag {other}"),
+    }
+}
+
+fn put_strs(out: &mut Vec<u8>, ss: &[String]) {
+    codec::push_u32(out, ss.len() as u32);
+    for s in ss {
+        put_str(out, s);
+    }
+}
+
+fn get_strs(r: &mut Reader) -> anyhow::Result<Vec<String>> {
+    let n = r.u32()? as usize;
+    anyhow::ensure!(n <= r.remaining(), "truncated string list (n={n})");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(get_str(r)?);
+    }
+    Ok(out)
+}
+
+fn put_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    codec::push_u32(out, xs.len() as u32);
+    for &x in xs {
+        codec::push_u64(out, x.to_bits());
+    }
+}
+
+fn get_f64s(r: &mut Reader) -> anyhow::Result<Vec<f64>> {
+    let n = r.u32()? as usize;
+    anyhow::ensure!(r.remaining() >= 8 * n, "truncated f64 array (n={n})");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f64::from_bits(r.u64()?));
+    }
+    Ok(out)
+}
+
+fn get_usize(r: &mut Reader) -> anyhow::Result<usize> {
+    let v = r.u64()?;
+    usize::try_from(v).map_err(|_| anyhow::anyhow!("value {v} overflows usize"))
+}
+
+fn put_vector(out: &mut Vec<u8>, v: &SparseVector) {
+    codec::push_u32(out, v.ids.len() as u32);
+    for &id in &v.ids {
+        codec::push_u64(out, id);
+    }
+    for &w in &v.weights {
+        codec::push_u64(out, w.to_bits());
+    }
+}
+
+fn get_vector(r: &mut Reader) -> anyhow::Result<SparseVector> {
+    let n = r.u32()? as usize;
+    anyhow::ensure!(r.remaining() >= 16 * n, "truncated sparse vector (n={n})");
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        ids.push(r.u64()?);
+    }
+    let mut weights = Vec::with_capacity(n);
+    for _ in 0..n {
+        weights.push(f64::from_bits(r.u64()?));
+    }
+    Ok(SparseVector::new(ids, weights))
+}
+
+/// Register arrays travel as raw bit patterns — bit-identical restore,
+/// exactly like [`crate::sketch::codec`]'s snapshot entries.
+fn put_sketch(out: &mut Vec<u8>, sk: &GumbelMaxSketch) {
+    out.push(codec::family_tag(sk.family));
+    codec::push_u64(out, sk.seed);
+    codec::push_u64(out, sk.k() as u64);
+    for &y in &sk.y {
+        codec::push_u64(out, y.to_bits());
+    }
+    for &s in &sk.s {
+        codec::push_u64(out, s);
+    }
+}
+
+fn get_sketch(r: &mut Reader) -> anyhow::Result<GumbelMaxSketch> {
+    let family = codec::family_from_tag(r.u8()?)?;
+    let seed = r.u64()?;
+    let k = r.u64()?;
+    anyhow::ensure!(k <= codec::MAX_K, "register count {k} too large");
+    anyhow::ensure!(r.remaining() as u64 >= 16 * k, "truncated register arrays (k={k})");
+    let k = k as usize;
+    let mut y = Vec::with_capacity(k);
+    for j in 0..k {
+        let v = f64::from_bits(r.u64()?);
+        anyhow::ensure!(!v.is_nan(), "register y[{j}] is NaN");
+        y.push(v);
+    }
+    let mut s = Vec::with_capacity(k);
+    for _ in 0..k {
+        s.push(r.u64()?);
+    }
+    Ok(GumbelMaxSketch { family, seed, y, s })
+}
+
+fn source_tag(s: SketchSource) -> u8 {
+    match s {
+        SketchSource::Store => 0,
+        SketchSource::Registry => 1,
+        SketchSource::Stream => 2,
+    }
+}
+
+fn source_from_tag(t: u8) -> anyhow::Result<SketchSource> {
+    Ok(match t {
+        0 => SketchSource::Store,
+        1 => SketchSource::Registry,
+        2 => SketchSource::Stream,
+        other => anyhow::bail!("unknown sketch_fetch source tag {other}"),
+    })
+}
+
+/// Codec-blob fields (`store_put`/`stream_merge` payloads, `sketch_blob`
+/// replies) are hex strings on the JSON wire. On the binary wire the
+/// common case — lowercase hex, which is exactly what
+/// [`codec::encode_sketch_hex`] emits — ships as the raw decoded bytes
+/// (flag 0, half the size); anything else ships as a literal string
+/// (flag 1), so round-trips are byte-exact either way and a server-side
+/// validation error for malformed hex surfaces identically on both wires.
+fn put_blob(out: &mut Vec<u8>, data: &str) {
+    if is_lower_hex(data) {
+        out.push(0);
+        let raw = codec::from_hex(data).expect("lowercase hex checked");
+        codec::push_u32(out, raw.len() as u32);
+        out.extend_from_slice(&raw);
+    } else {
+        out.push(1);
+        put_str(out, data);
+    }
+}
+
+fn get_blob(r: &mut Reader) -> anyhow::Result<String> {
+    match r.u8()? {
+        0 => {
+            let n = r.u32()? as usize;
+            anyhow::ensure!(n <= MAX_PAYLOAD, "blob length {n} too large");
+            Ok(codec::to_hex(r.take(n)?))
+        }
+        1 => get_str(r),
+        other => anyhow::bail!("bad blob flag {other}"),
+    }
+}
+
+fn is_lower_hex(s: &str) -> bool {
+    s.len() % 2 == 0 && s.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::PROTOCOL_VERSION;
+    use crate::sketch::{Family, Sketcher};
+    use crate::util::json::Value;
+
+    fn sample_vector() -> SparseVector {
+        SparseVector::new(vec![1, 5, u64::MAX - 2], vec![0.5, 2.0, -0.0])
+    }
+
+    fn sample_sketch() -> GumbelMaxSketch {
+        crate::sketch::fastgm::FastGm::new(8, 7).sketch(&sample_vector())
+    }
+
+    fn all_requests() -> Vec<Request> {
+        let v = sample_vector();
+        let hex = codec::encode_sketch_hex("a", 3, &sample_sketch());
+        vec![
+            Request::Sketch { name: "doc".into(), vector: v.clone(), algo: None },
+            Request::Sketch {
+                name: "doc".into(),
+                vector: v.clone(),
+                algo: Some("pminhash".into()),
+            },
+            Request::SketchDense { name: "d".into(), weights: vec![0.0, 1.5, -2.25] },
+            Request::GetSketch { name: "doc".into() },
+            Request::Push { stream: "s".into(), items: vec![(3, 0.5), (u64::MAX, 1.0)] },
+            Request::Cardinality { stream: "s".into() },
+            Request::Jaccard { a: "x".into(), b: "y".into() },
+            Request::WeightedJaccard { a: "x".into(), b: "βeta".into() },
+            Request::Merge { names: vec!["a".into(), "b".into()], out: "u".into() },
+            Request::LshInsert { name: "doc".into() },
+            Request::LshQuery { vector: v.clone(), limit: 10 },
+            Request::Upsert { key: "doc".into(), vector: v.clone(), version: None },
+            Request::Upsert {
+                key: "doc".into(),
+                vector: v.clone(),
+                version: Some(u64::MAX - 5),
+            },
+            Request::Delete { key: "doc".into() },
+            Request::StoreKeys { after: None, limit: 100 },
+            Request::StoreKeys { after: Some("doc".into()), limit: 64 },
+            Request::StorePut { data: hex.clone() },
+            Request::StorePut { data: "NOT-HEX".into() },
+            Request::StreamMerge { stream: "s".into(), data: hex },
+            Request::TopK { vector: v, limit: 5 },
+            Request::StoreStats,
+            Request::Snapshot { path: "/tmp/fgm.snap".into() },
+            Request::Restore { path: "/tmp/fgm.snap".into() },
+            Request::Hello,
+            Request::SketchFetch { name: "doc".into(), source: SketchSource::Store },
+            Request::SketchFetch { name: "doc".into(), source: SketchSource::Registry },
+            Request::SketchFetch { name: "doc".into(), source: SketchSource::Stream },
+            Request::Metrics,
+            Request::Ping,
+        ]
+    }
+
+    fn all_responses() -> Vec<Response> {
+        let mut sk = GumbelMaxSketch::empty(Family::Ordered, 7, 4);
+        sk.y[2] = 0.125;
+        sk.s[2] = u64::MAX - 1;
+        vec![
+            Response::Sketch { name: "doc".into(), sketch: sk.clone() },
+            Response::Sketch { name: "live".into(), sketch: sample_sketch() },
+            Response::Ack { info: "stored".into() },
+            Response::Estimate { value: 3.5 },
+            Response::Estimate { value: f64::INFINITY },
+            Response::TopK { hits: vec![("a".into(), 0.9), ("βeta".into(), 0.5)] },
+            Response::TopK { hits: vec![] },
+            Response::MetricsDump {
+                snapshot: Value::obj(vec![("counters", Value::obj(vec![]))]),
+            },
+            Response::Stats {
+                stats: Value::obj(vec![("size", Value::num(3.0)), ("shards", Value::num(8.0))]),
+            },
+            Response::Keys { keys: vec![("doc1".into(), 3), ("doc2".into(), u64::MAX - 1)] },
+            Response::Keys { keys: vec![] },
+            Response::Hello {
+                info: HelloInfo {
+                    protocol: PROTOCOL_VERSION,
+                    node: "node-0".into(),
+                    epoch: 2,
+                    k: 256,
+                    seed: u64::MAX,
+                    algo: "fastgm".into(),
+                    algos: vec!["fastgm".into(), "pminhash".into()],
+                },
+            },
+            Response::SketchBlob {
+                name: "doc".into(),
+                data: codec::encode_sketch_hex("doc", 9, &sk),
+            },
+            Response::SketchBlob { name: "weird".into(), data: "UPPER-case".into() },
+            Response::Error { message: "nope".into() },
+            Response::Pong,
+        ]
+    }
+
+    #[test]
+    fn every_request_roundtrips_through_a_frame() {
+        for (i, req) in all_requests().into_iter().enumerate() {
+            let id = 1 + (i as u64) * 7;
+            let mut buf = Vec::new();
+            encode_request_frame(id, &req, &mut buf);
+            assert_eq!(buf[0], FRAME_MAGIC);
+            let FrameStatus::Frame { consumed, id: got, msg } = decode_frame(&buf).unwrap()
+            else {
+                panic!("frame {i} incomplete")
+            };
+            assert_eq!(consumed, buf.len());
+            assert_eq!(got, id);
+            assert_eq!(msg, FrameMsg::Request(req));
+        }
+    }
+
+    #[test]
+    fn every_response_roundtrips_through_a_frame() {
+        for (i, resp) in all_responses().into_iter().enumerate() {
+            let id = u64::MAX - i as u64;
+            let mut buf = Vec::new();
+            encode_response_frame(id, &resp, &mut buf);
+            let FrameStatus::Frame { consumed, id: got, msg } = decode_frame(&buf).unwrap()
+            else {
+                panic!("response frame {i} incomplete")
+            };
+            assert_eq!(consumed, buf.len());
+            assert_eq!(got, id);
+            assert_eq!(msg, FrameMsg::Response(resp));
+        }
+    }
+
+    #[test]
+    fn concatenated_frames_decode_in_order() {
+        let reqs = all_requests();
+        let mut buf = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            encode_request_frame(i as u64, req, &mut buf);
+        }
+        let mut off = 0;
+        for (i, req) in reqs.iter().enumerate() {
+            let FrameStatus::Frame { consumed, id, msg } = decode_frame(&buf[off..]).unwrap()
+            else {
+                panic!("frame {i} incomplete at offset {off}")
+            };
+            assert_eq!(id, i as u64);
+            assert_eq!(msg, FrameMsg::Request(req.clone()));
+            off += consumed;
+        }
+        assert_eq!(off, buf.len());
+    }
+
+    #[test]
+    fn body_encodings_roundtrip_standalone() {
+        for req in all_requests() {
+            let mut body = Vec::new();
+            encode_request_body(&req, &mut body);
+            assert_eq!(decode_request_body(&body).unwrap(), req);
+            // Trailing garbage after a complete message is rejected.
+            body.push(0);
+            assert!(decode_request_body(&body).is_err());
+        }
+        for resp in all_responses() {
+            let mut body = Vec::new();
+            encode_response_body(&resp, &mut body);
+            assert_eq!(decode_response_body(&body).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn lowercase_hex_blobs_ship_as_raw_bytes() {
+        let hex = codec::encode_sketch_hex("doc", 1, &sample_sketch());
+        let mut framed = Vec::new();
+        encode_request_body(&Request::StorePut { data: hex.clone() }, &mut framed);
+        // Roughly half the hex size: tag + blob flag + u32 len + raw bytes.
+        assert!(
+            framed.len() < hex.len() / 2 + 16,
+            "blob not sent raw: {} bytes for {} hex chars",
+            framed.len(),
+            hex.len()
+        );
+        // Uppercase hex survives verbatim through the literal path.
+        let upper = hex.to_uppercase();
+        let mut body = Vec::new();
+        encode_request_body(&Request::StorePut { data: upper.clone() }, &mut body);
+        let Request::StorePut { data } = decode_request_body(&body).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert_eq!(data, upper);
+    }
+
+    #[test]
+    fn sketch_registers_roundtrip_bit_identically() {
+        let mut sk = GumbelMaxSketch::empty(Family::Direct, 3, 4);
+        sk.y[1] = 0.125;
+        sk.s[1] = u64::MAX - 1;
+        let resp = Response::Sketch { name: "x".into(), sketch: sk.clone() };
+        let mut buf = Vec::new();
+        encode_response_frame(9, &resp, &mut buf);
+        let FrameStatus::Frame { msg: FrameMsg::Response(Response::Sketch { sketch, .. }), .. } =
+            decode_frame(&buf).unwrap()
+        else {
+            panic!("expected sketch response")
+        };
+        // Untouched registers (the +inf / EMPTY sentinels) survive exactly.
+        assert!(sketch.y[0].is_infinite());
+        assert_eq!(sketch, sk);
+    }
+
+    #[test]
+    fn incomplete_prefixes_ask_for_more_bytes() {
+        let mut buf = Vec::new();
+        encode_request_frame(1, &Request::Ping, &mut buf);
+        for len in 0..buf.len() {
+            match decode_frame(&buf[..len]) {
+                Ok(FrameStatus::Incomplete) => {}
+                other => panic!("prefix {len}/{}: {other:?}", buf.len()),
+            }
+        }
+        assert!(matches!(decode_frame(&buf).unwrap(), FrameStatus::Frame { .. }));
+    }
+
+    #[test]
+    fn json_first_bytes_are_never_frames() {
+        for lead in [b'{', b' ', b'\t', b'p', 0x00] {
+            let err = decode_frame(&[lead, 1, 2, 3]).unwrap_err();
+            assert!(err.to_string().contains("not a binary frame"), "{err}");
+        }
+    }
+
+    #[test]
+    fn version_kind_and_length_violations_are_clean_errors() {
+        let mut buf = Vec::new();
+        encode_request_frame(1, &Request::Ping, &mut buf);
+        // Future frame version: refused as soon as the byte is seen.
+        let mut wrong_version = buf.clone();
+        wrong_version[1] = FRAME_VERSION + 1;
+        let err = decode_frame(&wrong_version).unwrap_err();
+        assert!(err.to_string().contains("frame version"), "{err}");
+        // Oversized payload length: refused before any allocation.
+        let mut huge = buf.clone();
+        huge[2..6].copy_from_slice(&(u32::MAX).to_le_bytes());
+        let err = decode_frame(&huge).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // Unknown kind byte (checksum refreshed so framing is valid).
+        let mut bad_kind = buf.clone();
+        bad_kind[HEADER_LEN + 8] = 7;
+        let n = bad_kind.len();
+        let sum = fnv1a64(&bad_kind[..n - 8]);
+        bad_kind[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = decode_frame(&bad_kind).unwrap_err();
+        assert!(err.to_string().contains("frame kind"), "{err}");
+    }
+}

@@ -7,8 +7,10 @@
 //!   │           (rendezvous key routing, scatter-gather topk,      │
 //!   │            §2.3 merged cardinality across sites)             │
 //!   ├──────────────────────────────────────────────────────────────┤
-//!   │ transport server / client (TCP JSON-lines) · worker pool ·   │
-//!   │           backpressure · batcher  — the Coordinator shell    │
+//!   │ transport server (thread/conn JSON-lines) · event_server     │
+//!   │           (poll loop: binary frames + JSON on one port) ·    │
+//!   │           frame codec · client · worker pool · backpressure  │
+//!   │           · batcher  — the Coordinator shell                 │
 //!   ├──────────────────────────────────────────────────────────────┤
 //!   │ node      Node::execute(Request) -> Response                 │
 //!   │           registry · store · LSH · router · merger · metrics │
@@ -28,6 +30,9 @@
 //!   process harness.
 //! * [`protocol`] — JSON-lines wire requests/responses (incl. the `hello`
 //!   handshake and the codec-blob `sketch_fetch` the gather path uses).
+//! * [`frame`] — the length-prefixed binary frame codec: client-assigned
+//!   request ids for out-of-order multiplexing, compact tag-byte bodies,
+//!   checksummed strict decode in [`crate::sketch::codec`]'s idiom.
 //! * [`router`] — the sparse/dense/stream routing decision, including the
 //!   engine-registry `algo` plan ([`router::SketchPlan`]).
 //! * [`worker`] — the CPU worker pool (round-robin dispatch).
@@ -42,12 +47,19 @@
 //! * [`merger`] — distributed-site sketch merge (§2.3 mergeability; empty
 //!   merges are typed errors, the zero-live-sites failure mode).
 //! * [`metrics`] — counters + latency histograms, surfaced over the wire.
-//! * [`server`] / [`client`] — TCP JSON-lines transport.
+//! * [`server`] / [`client`] — blocking TCP transport (one thread per
+//!   connection, JSON lines; the client also speaks framed mode).
+//! * [`event_server`] — the event-driven transport (unix only): one
+//!   `poll(2)` readiness thread serving many non-blocking connections,
+//!   per-message protocol auto-detection (binary frames and JSON lines
+//!   coexist on one port, even one connection), admission batching into
+//!   the worker pool, and coalesced vectored writes.
 //!
 //! Python never appears here: the accelerator path executes AOT-compiled
 //! HLO through [`crate::runtime`].
 
 pub mod protocol;
+pub mod frame;
 pub mod metrics;
 pub mod backpressure;
 pub mod registry;
@@ -59,5 +71,7 @@ pub mod merger;
 pub mod node;
 pub mod service;
 pub mod server;
+#[cfg(unix)]
+pub mod event_server;
 pub mod client;
 pub mod cluster;

@@ -30,13 +30,19 @@ const IDLE_POLL: Duration = Duration::from_millis(50);
 /// never torn during normal operation: write timeouts just retry.
 const SHUTDOWN_DRAIN_POLLS: u32 = 40;
 
+/// How often the janitor thread reaps finished connection handles. A
+/// burst of short-lived connections followed by quiet must not leave dead
+/// `JoinHandle`s pinned until the next accept (or `stop()`).
+const REAP_PERIOD: Duration = Duration::from_millis(100);
+
 pub struct Server {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
-    /// Live per-connection threads, joined by [`Server::stop`]. The
-    /// acceptor reaps finished entries as new connections arrive, so the
-    /// vector tracks open connections, not connection history.
+    janitor: Option<JoinHandle<()>>,
+    /// Live per-connection threads, joined by [`Server::stop`]. Reaped on
+    /// every accept AND periodically by the janitor, so the vector tracks
+    /// open connections, not connection history.
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
@@ -87,7 +93,26 @@ impl Server {
                 }
                 log::info!("acceptor stopped");
             })?;
-        Ok(Server { addr: local, shutdown, handle: Some(handle), conns })
+        // Janitor: reap finished connection threads even when no new
+        // connection ever arrives again.
+        let jflag = shutdown.clone();
+        let jconns = conns.clone();
+        let janitor = std::thread::Builder::new()
+            .name("fastgm-conn-janitor".into())
+            .spawn(move || {
+                while !jflag.load(Ordering::SeqCst) {
+                    std::thread::sleep(REAP_PERIOD);
+                    let mut live = jconns.lock().unwrap_or_else(|e| e.into_inner());
+                    live.retain(|c| !c.is_finished());
+                }
+            })?;
+        Ok(Server { addr: local, shutdown, handle: Some(handle), janitor: Some(janitor), conns })
+    }
+
+    /// Connection threads currently tracked (finished ones are reaped by
+    /// the janitor within [`REAP_PERIOD`] even with no new accepts).
+    pub fn live_connections(&self) -> usize {
+        self.conns.lock().unwrap_or_else(|e| e.into_inner()).len()
     }
 
     /// Stop accepting, then join the acceptor AND every live connection
@@ -100,6 +125,9 @@ impl Server {
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
+        }
+        if let Some(j) = self.janitor.take() {
+            let _ = j.join();
         }
         // The acceptor is gone, so no new handles can appear: drain.
         let handles = std::mem::take(&mut *self.conns.lock().unwrap_or_else(|e| e.into_inner()));
@@ -173,6 +201,7 @@ fn write_all_shutdown_aware(
 }
 
 fn serve_connection(coord: Arc<Coordinator>, stream: TcpStream, shutdown: Arc<AtomicBool>) {
+    use std::fmt::Write as _;
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
@@ -180,6 +209,11 @@ fn serve_connection(coord: Arc<Coordinator>, stream: TcpStream, shutdown: Arc<At
     };
     let mut reader = BufReader::new(stream);
     let mut buf = Vec::new();
+    // One output buffer for the whole connection: every response after the
+    // first reuses the allocation instead of building a fresh String per
+    // line. The alloc/reuse split is surfaced as metrics so the win is
+    // observable, not assumed.
+    let mut out = String::new();
     while read_line_shutdown_aware(&mut reader, &mut buf, &shutdown).is_some() {
         if shutdown.load(Ordering::SeqCst) {
             break;
@@ -199,7 +233,14 @@ fn serve_connection(coord: Arc<Coordinator>, stream: TcpStream, shutdown: Arc<At
                 }
             }
         };
-        let out = protocol::encode_line(&resp.to_json());
+        let metrics = coord.node().metrics();
+        if out.capacity() == 0 {
+            metrics.incr("transport.obuf.alloc");
+        } else {
+            metrics.incr("transport.obuf.reuse");
+        }
+        out.clear();
+        let _ = writeln!(out, "{}", resp.to_json());
         if !write_all_shutdown_aware(&mut writer, out.as_bytes(), &shutdown) {
             break;
         }
@@ -359,6 +400,55 @@ mod tests {
         let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
         assert!(message.contains("βeta"), "request was torn: {message}");
         assert!(!message.contains("bad request"), "request was torn: {message}");
+        server.stop();
+    }
+
+    /// Regression (handle leak): finished connection threads used to be
+    /// reaped only on the NEXT accept, so a burst of short-lived clients
+    /// followed by quiet left their dead `JoinHandle`s pinned until
+    /// `stop()`. The janitor must shrink the registry with no new accept.
+    #[test]
+    fn finished_connections_are_reaped_without_a_new_accept() {
+        let (server, _coord) = start_server();
+        for _ in 0..5 {
+            let mut client = Client::connect(&server.addr.to_string()).unwrap();
+            assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+            drop(client);
+        }
+        // No further connections: only the janitor can reap now.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while server.live_connections() > 0 {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "janitor never reaped: {} handles still tracked",
+                server.live_connections()
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        server.stop();
+    }
+
+    /// The per-connection output buffer is allocated once and reused for
+    /// every subsequent response — observable via the obuf counters.
+    #[test]
+    fn output_buffer_is_reused_across_responses() {
+        let (server, coord) = start_server();
+        let mut client = Client::connect(&server.addr.to_string()).unwrap();
+        for _ in 0..8 {
+            assert_eq!(client.call(&Request::Ping).unwrap(), Response::Pong);
+        }
+        let metrics = coord.node().metrics();
+        assert_eq!(metrics.counter("transport.obuf.alloc"), 1);
+        assert!(
+            metrics.counter("transport.obuf.reuse") >= 7,
+            "expected >=7 reuses, got {}",
+            metrics.counter("transport.obuf.reuse")
+        );
+        // And they ride the metrics op like every other counter.
+        let resp = client.call(&Request::Metrics).unwrap();
+        let Response::MetricsDump { snapshot } = resp else { panic!("expected dump") };
+        let counters = snapshot.get("counters").expect("counters");
+        assert!(counters.get("transport.obuf.reuse").is_some());
         server.stop();
     }
 

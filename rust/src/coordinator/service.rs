@@ -12,7 +12,7 @@
 use super::backpressure::Policy;
 use super::node::Node;
 use super::protocol::{Request, Response};
-use super::worker::{WorkerContext, WorkerPool};
+use super::worker::{Job, WorkerContext, WorkerPool};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -65,6 +65,15 @@ impl Coordinator {
             self.observe_queue_depth();
         }
         self.pool.submit(req)
+    }
+
+    /// Batch admission for the event transport: one readable wakeup's
+    /// worth of decoded frames enters the per-worker queues in a single
+    /// pass ([`WorkerPool::submit_batch`]); rejected jobs are answered
+    /// through their own reply paths, so the caller never tracks which
+    /// slots were admitted.
+    pub fn submit_jobs(&self, jobs: Vec<Job>) {
+        self.pool.submit_batch(jobs);
     }
 
     /// Refresh the `queue_depth` gauge from the per-worker queue counters.

@@ -13,10 +13,29 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+/// Where a finished job's response goes: a one-shot channel for
+/// synchronous callers, or a callback for the event transport (which
+/// encodes the response on the worker thread and hands the bytes to its
+/// completion pipe — no parked thread per in-flight request).
+pub enum Reply {
+    Channel(Sender<Response>),
+    Callback(Box<dyn FnOnce(Response) + Send>),
+}
+
+impl Reply {
+    pub fn send(self, resp: Response) {
+        match self {
+            // The caller may have gone; a dead channel is not an error.
+            Reply::Channel(tx) => drop(tx.send(resp)),
+            Reply::Callback(f) => f(resp),
+        }
+    }
+}
+
 /// A queued unit of work.
 pub struct Job {
     pub request: Request,
-    pub reply: Sender<Response>,
+    pub reply: Reply,
 }
 
 /// Per-worker state threaded into every handler invocation.
@@ -68,7 +87,7 @@ impl WorkerPool {
                             let Ok(job) = queue.recv() else { return };
                             let resp = handler(job.request, &mut ctx);
                             ctx.jobs_done += 1;
-                            let _ = job.reply.send(resp); // caller may have gone
+                            job.reply.send(resp);
                         }
                     })
                     .expect("spawn worker"),
@@ -81,7 +100,7 @@ impl WorkerPool {
     /// converted to an immediate error response on the channel.
     pub fn submit(&self, request: Request) -> Receiver<Response> {
         let (tx, rx) = channel();
-        let job = Job { request, reply: tx };
+        let job = Job { request, reply: Reply::Channel(tx) };
         if let Err(e) = self.admission.submit(job) {
             // Channel tx moved into job; rebuild a reply channel.
             let (tx2, rx2) = channel();
@@ -89,6 +108,16 @@ impl WorkerPool {
             return rx2;
         }
         rx
+    }
+
+    /// Admit a batch of pre-built jobs in one pass (the event transport's
+    /// admission batching). Rejected jobs are answered immediately through
+    /// their own reply path with an error response — the caller never has
+    /// to track which slots made it in.
+    pub fn submit_batch(&self, jobs: Vec<Job>) {
+        for (job, e) in self.admission.submit_batch(jobs) {
+            job.reply.send(Response::err(e));
+        }
     }
 
     /// Convenience: submit and wait.
@@ -212,6 +241,68 @@ mod tests {
         }
         // All replies received → every job dequeued.
         assert_eq!(pool.queue_depth(), 0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn batch_submit_answers_every_job_through_its_callback() {
+        let pool = echo_pool(2, 32, Policy::Block);
+        let (tx, rx) = channel();
+        let jobs: Vec<Job> = (0..10)
+            .map(|i| {
+                let tx = tx.clone();
+                Job {
+                    request: Request::Ping,
+                    reply: Reply::Callback(Box::new(move |resp| {
+                        tx.send((i, resp)).unwrap();
+                    })),
+                }
+            })
+            .collect();
+        pool.submit_batch(jobs);
+        let mut seen = vec![false; 10];
+        for _ in 0..10 {
+            let (i, resp) = rx.recv().unwrap();
+            assert_eq!(resp, Response::Ack { info: "ping".into() });
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        pool.shutdown();
+    }
+
+    #[test]
+    fn batch_rejects_are_answered_not_dropped() {
+        // Capacity 1, shed policy, slow worker: most of a 12-job batch
+        // must come back as error responses — every callback still fires.
+        let pool = WorkerPool::new(
+            1,
+            1,
+            Policy::Shed,
+            Arc::new(|_req, _ctx: &mut WorkerContext| {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                Response::Pong
+            }),
+        );
+        let (tx, rx) = channel();
+        let jobs: Vec<Job> = (0..12)
+            .map(|_| {
+                let tx = tx.clone();
+                Job {
+                    request: Request::Ping,
+                    reply: Reply::Callback(Box::new(move |resp| {
+                        tx.send(resp).unwrap();
+                    })),
+                }
+            })
+            .collect();
+        pool.submit_batch(jobs);
+        let mut shed = 0;
+        for _ in 0..12 {
+            if matches!(rx.recv().unwrap(), Response::Error { .. }) {
+                shed += 1;
+            }
+        }
+        assert!(shed > 0, "expected shed errors from an over-capacity batch");
         pool.shutdown();
     }
 

@@ -1,13 +1,13 @@
 //! `fastgm` — launcher CLI for the FastGM sketching service.
 //!
 //! ```text
-//! fastgm serve    [--config cfg.toml] [--addr host:port] [--set k=v ...]
+//! fastgm serve    [--config cfg.toml] [--addr host:port] [--transport lines|event] [--set k=v ...]
 //! fastgm client   [--addr host:port] (--ping | --metrics | --json '{...}')
 //! fastgm store    [--addr host:port] (--upsert KEY --vec "id:w,..." | --delete KEY | --stats)
 //! fastgm topk     [--addr host:port] --vec "id:w,..." [--limit N]
 //! fastgm snapshot [--addr host:port] (--save PATH | --restore PATH)
 //! fastgm cluster  serve  [--nodes N] [--host H] [--base-port P] [--config cfg] [--set k=v ...]
-//! fastgm cluster  info   --addrs a:p,b:p,... [--replication R] [--write-quorum W]
+//! fastgm cluster  info   --addrs a:p,b:p,... [--replication R] [--write-quorum W] [--io-timeout S] [--framed]
 //! fastgm cluster  upsert --addrs ... --key K --vec "id:w,..." [--replication R] [--write-quorum W]
 //! fastgm cluster  delete --addrs ... --key K [--replication R] [--write-quorum W]
 //! fastgm cluster  topk   --addrs ... --vec "id:w,..." [--limit N] [--replication R]
@@ -26,6 +26,8 @@
 
 use fastgm::coordinator::client::Client;
 use fastgm::coordinator::cluster::{ClusterClient, LocalCluster, ReplicaConfig};
+#[cfg(unix)]
+use fastgm::coordinator::event_server::EventServer;
 use fastgm::coordinator::protocol::{decode_request, encode_line, Request};
 use fastgm::coordinator::server::Server;
 use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
@@ -101,6 +103,12 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let spec = ArgSpec::new("serve", "run the sketching coordinator")
         .opt("config", "", "TOML config file")
         .opt("addr", "127.0.0.1:7878", "listen address")
+        .opt(
+            "transport",
+            "lines",
+            "'lines' (thread-per-connection JSON) or 'event' (poll loop: \
+             binary frames + JSON lines on one port; unix only)",
+        )
         .multi("set", "config override key=value");
     let args = spec.parse(argv)?;
     let mut cfg = if args.str("config").is_empty() {
@@ -119,11 +127,27 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         ccfg.artifacts_dir
     );
     let coordinator = Arc::new(Coordinator::new(ccfg)?);
-    let server = Server::start(coordinator, &args.str("addr"))?;
-    println!("fastgm serving on {}", server.addr);
-    // Serve until killed.
-    loop {
-        std::thread::park();
+    match args.str("transport").as_str() {
+        "lines" => {
+            let server = Server::start(coordinator, &args.str("addr"))?;
+            println!("fastgm serving on {}", server.addr);
+            // Serve until killed.
+            loop {
+                std::thread::park();
+            }
+        }
+        #[cfg(unix)]
+        "event" => {
+            let server = EventServer::start(coordinator, &args.str("addr"))?;
+            println!("fastgm serving on {} (event transport)", server.addr);
+            loop {
+                std::thread::park();
+            }
+        }
+        other => anyhow::bail!(
+            "unknown transport '{other}' (want 'lines'{})",
+            if cfg!(unix) { " or 'event'" } else { "; 'event' needs unix" },
+        ),
     }
 }
 
@@ -325,14 +349,20 @@ fn cluster_spec(name: &'static str, about: &'static str) -> ArgSpec {
         .opt("addrs", "", "comma-separated node addresses")
         .opt("replication", "1", "replica set size R (HRW top-R owners per key)")
         .opt("write-quorum", "1", "owner acks required per write (1..=R)")
+        .opt("io-timeout", "10", "per-node I/O timeout in seconds (expiry marks the node down)")
+        .flag("framed", "speak the binary framed protocol to the nodes (event transport only)")
 }
 
 fn cluster_connect(args: &fastgm::util::argparse::Args) -> anyhow::Result<ClusterClient> {
+    let secs = args.f64("io-timeout")?;
+    anyhow::ensure!(secs > 0.0, "--io-timeout must be positive (got {secs})");
     ClusterClient::connect_with(
         &parse_addrs(&args.str("addrs"))?,
         ReplicaConfig {
             replication: args.usize("replication")?,
             write_quorum: args.usize("write-quorum")?,
+            io_timeout: std::time::Duration::from_secs_f64(secs),
+            framed: args.flag("framed"),
         },
     )
 }

@@ -46,9 +46,9 @@ pub const MIN_VERSION: u16 = 1;
 /// Also the decode-side allocation guard: a corrupt length field must not
 /// ask the allocator for gigabytes before the inevitable truncation error.
 pub const MAX_KEY_LEN: usize = 1 << 20;
-const MAX_K: u64 = 1 << 28;
+pub(crate) const MAX_K: u64 = 1 << 28;
 
-fn family_tag(f: Family) -> u8 {
+pub(crate) fn family_tag(f: Family) -> u8 {
     match f {
         Family::Ordered => 0,
         Family::Direct => 1,
@@ -58,7 +58,7 @@ fn family_tag(f: Family) -> u8 {
     }
 }
 
-fn family_from_tag(t: u8) -> anyhow::Result<Family> {
+pub(crate) fn family_from_tag(t: u8) -> anyhow::Result<Family> {
     Ok(match t {
         0 => Family::Ordered,
         1 => Family::Direct,
@@ -69,15 +69,15 @@ fn family_from_tag(t: u8) -> anyhow::Result<Family> {
     })
 }
 
-fn push_u16(out: &mut Vec<u8>, x: u16) {
+pub(crate) fn push_u16(out: &mut Vec<u8>, x: u16) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
-fn push_u32(out: &mut Vec<u8>, x: u32) {
+pub(crate) fn push_u32(out: &mut Vec<u8>, x: u32) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
-fn push_u64(out: &mut Vec<u8>, x: u64) {
+pub(crate) fn push_u64(out: &mut Vec<u8>, x: u64) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
@@ -122,14 +122,16 @@ fn encode_entries<'a>(
     out
 }
 
-/// Strict little-endian reader over the snapshot body.
-struct Reader<'a> {
-    bytes: &'a [u8],
-    pos: usize,
+/// Strict little-endian reader over the snapshot body. Crate-visible so
+/// the binary frame codec ([`crate::coordinator::frame`]) decodes with the
+/// exact same truncation-safe primitives.
+pub(crate) struct Reader<'a> {
+    pub(crate) bytes: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+    pub(crate) fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
         let end = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len());
         let Some(end) = end else {
             anyhow::bail!(
@@ -143,23 +145,23 @@ impl<'a> Reader<'a> {
         Ok(out)
     }
 
-    fn u8(&mut self) -> anyhow::Result<u8> {
+    pub(crate) fn u8(&mut self) -> anyhow::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u16(&mut self) -> anyhow::Result<u16> {
+    pub(crate) fn u16(&mut self) -> anyhow::Result<u16> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
     }
 
-    fn u32(&mut self) -> anyhow::Result<u32> {
+    pub(crate) fn u32(&mut self) -> anyhow::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
     }
 
-    fn u64(&mut self) -> anyhow::Result<u64> {
+    pub(crate) fn u64(&mut self) -> anyhow::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.bytes.len() - self.pos
     }
 }
@@ -267,25 +269,39 @@ pub fn from_hex(text: &str) -> anyhow::Result<Vec<u8>> {
     Ok(out)
 }
 
-/// Encode one `(key, version, sketch)` triple as a hex codec blob (a
+/// Encode one `(key, version, sketch)` triple as raw codec bytes (a
 /// one-entry store snapshot — checksum and versioning included for free).
 /// Borrow-based: this sits on the per-candidate path of every cluster
 /// gather, so it must not clone k registers just to encode them. Sources
-/// without a write version (registry, stream sketches) pass 0.
-pub fn encode_sketch_hex(key: &str, version: u64, sk: &GumbelMaxSketch) -> String {
-    to_hex(&encode_entries(std::iter::once((key, version, sk))))
+/// without a write version (registry, stream sketches) pass 0. The binary
+/// frame transport ships these bytes directly; the JSON-lines protocol
+/// wraps them in hex via [`encode_sketch_hex`].
+pub fn encode_sketch_bytes(key: &str, version: u64, sk: &GumbelMaxSketch) -> Vec<u8> {
+    encode_entries(std::iter::once((key, version, sk)))
 }
 
-/// Decode a blob produced by [`encode_sketch_hex`]; refuses blobs that do
-/// not hold exactly one entry.
-pub fn decode_sketch_hex(text: &str) -> anyhow::Result<(String, u64, GumbelMaxSketch)> {
-    let mut entries = decode_store(&from_hex(text)?)?;
+/// Decode a blob produced by [`encode_sketch_bytes`]; refuses blobs that
+/// do not hold exactly one entry.
+pub fn decode_sketch_bytes(bytes: &[u8]) -> anyhow::Result<(String, u64, GumbelMaxSketch)> {
+    let mut entries = decode_store(bytes)?;
     anyhow::ensure!(
         entries.len() == 1,
         "expected exactly one sketch in the blob, got {}",
         entries.len()
     );
     Ok(entries.pop().expect("one entry"))
+}
+
+/// [`encode_sketch_bytes`] wrapped in lowercase hex — the JSON-lines wire
+/// form of a codec blob.
+pub fn encode_sketch_hex(key: &str, version: u64, sk: &GumbelMaxSketch) -> String {
+    to_hex(&encode_sketch_bytes(key, version, sk))
+}
+
+/// Decode a blob produced by [`encode_sketch_hex`]; refuses blobs that do
+/// not hold exactly one entry.
+pub fn decode_sketch_hex(text: &str) -> anyhow::Result<(String, u64, GumbelMaxSketch)> {
+    decode_sketch_bytes(&from_hex(text)?)
 }
 
 #[cfg(test)]
@@ -465,6 +481,18 @@ mod tests {
         let orig = bad.as_bytes()[flip];
         bad.replace_range(flip..flip + 1, if orig == b'0' { "1" } else { "0" });
         assert!(decode_sketch_hex(&bad).is_err());
+    }
+
+    #[test]
+    fn sketch_bytes_roundtrip_and_match_the_hex_form() {
+        for (key, version, sk) in sample() {
+            let bytes = encode_sketch_bytes(&key, version, &sk);
+            assert_eq!(to_hex(&bytes), encode_sketch_hex(&key, version, &sk));
+            let (bk, bv, bsk) = decode_sketch_bytes(&bytes).unwrap();
+            assert_eq!((bk, bv, bsk), (key, version, sk));
+        }
+        // Multi-entry blobs are refused at the byte level too.
+        assert!(decode_sketch_bytes(&encode_store(&sample())).is_err());
     }
 
     #[test]

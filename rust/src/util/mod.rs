@@ -13,4 +13,5 @@ pub mod argparse;
 pub mod stats;
 pub mod logger;
 pub mod bench;
+pub mod poll;
 pub mod proptest;

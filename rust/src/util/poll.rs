@@ -1,0 +1,130 @@
+//! Minimal safe wrapper over `poll(2)` — just enough readiness polling
+//! for the event-driven transport, with no async runtime and no new
+//! dependencies (std already links libc; we declare the one extern fn
+//! ourselves).
+//!
+//! On non-Unix targets the module still compiles and [`poll`] returns a
+//! clean error; the event server is `#[cfg(unix)]`-gated, so nothing
+//! else reaches this path.
+
+/// Readiness flags, matching `<poll.h>` on every libc we target.
+pub const POLLIN: i16 = 0x001;
+pub const POLLOUT: i16 = 0x004;
+pub const POLLERR: i16 = 0x008;
+pub const POLLHUP: i16 = 0x010;
+pub const POLLNVAL: i16 = 0x020;
+
+/// One descriptor's interest + result set. Layout-compatible with the
+/// kernel's `struct pollfd` (fd, events, revents — all naturally
+/// aligned, no padding).
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: i32,
+    pub events: i16,
+    pub revents: i16,
+}
+
+impl PollFd {
+    pub fn new(fd: i32, events: i16) -> Self {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR) != 0
+    }
+
+    pub fn error(&self) -> bool {
+        self.revents & (POLLERR | POLLNVAL) != 0
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    // `nfds_t` is `unsigned long` on Linux and `unsigned int` on the
+    // BSDs/macOS; pick per-OS rather than guessing from pointer width.
+    #[cfg(target_os = "linux")]
+    pub type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    pub type NfdsT = std::os::raw::c_uint;
+
+    extern "C" {
+        pub fn poll(fds: *mut super::PollFd, nfds: NfdsT, timeout: std::os::raw::c_int) -> i32;
+    }
+}
+
+/// Block until at least one descriptor in `fds` is ready, the timeout
+/// elapses (`Ok(0)`), or an error occurs. `timeout_ms < 0` blocks
+/// indefinitely. `EINTR` is retried internally so callers never see a
+/// spurious failure from a signal.
+#[cfg(unix)]
+pub fn poll(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+    loop {
+        let rc = unsafe { sys::poll(fds.as_mut_ptr(), fds.len() as sys::NfdsT, timeout_ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = std::io::Error::last_os_error();
+        if err.kind() != std::io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+pub fn poll(_fds: &mut [PollFd], _timeout_ms: i32) -> std::io::Result<usize> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "poll(2) readiness loop is only available on unix targets",
+    ))
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn timeout_returns_zero_ready() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll(&mut fds, 10).unwrap();
+        assert_eq!(n, 0);
+        assert!(!fds[0].readable());
+    }
+
+    #[test]
+    fn written_byte_wakes_pollin() {
+        let (a, mut b) = UnixStream::pair().unwrap();
+        b.write_all(&[1]).unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+    }
+
+    #[test]
+    fn idle_socket_is_immediately_writable() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLOUT)];
+        let n = poll(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].writable());
+    }
+
+    #[test]
+    fn hangup_reports_readable_for_eof_draining() {
+        let (a, b) = UnixStream::pair().unwrap();
+        drop(b);
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLIN)];
+        let n = poll(&mut fds, 1000).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+    }
+}

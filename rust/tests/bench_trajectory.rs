@@ -1,19 +1,23 @@
-//! Tier-1 lock on the committed perf trajectory: `BENCH_6.json` (the first
-//! tracked baseline, written by `perf_probe --json` / refreshed via
+//! Tier-1 lock on the committed perf trajectory: the `BENCH_*.json`
+//! baselines (written by `perf_probe --json` / refreshed via
 //! `ci/gen_bench_baseline.py`) must stay parseable by the crate's own JSON
-//! layer, schema-complete, and internally consistent — and its
-//! scalar-vs-SIMD pairs must actually show the kernel layer paying rent.
+//! layer, schema-complete, and internally consistent — and the relative
+//! claims each PR committed must keep holding in its baseline:
+//!
+//! * `BENCH_6.json` — scalar-vs-SIMD kernel pairs show the kernel layer
+//!   paying rent (≥2x on a register-update kernel, SIMD never slower);
+//! * `BENCH_7.json` — the binary framed transport beats JSON lines: every
+//!   frame-vs-JSON codec pair is binary-faster, and the saturation probes
+//!   show ≥10x sustained req/s at equal-or-better p99.
 //!
 //! Absolute numbers are NOT asserted against the current machine (CI
 //! runners are too noisy; `ci/bench_coverage.py` gates name coverage on
-//! fresh runs instead). What IS asserted: the baseline's own arithmetic,
-//! and the relative claims the PR makes — SIMD never slower than scalar
-//! beyond a generous noise guard, and ≥2x on at least one register-update
-//! kernel.
+//! fresh runs instead).
 
 use fastgm::util::json::{parse, Value};
 
 const BASELINE: &str = include_str!("../../BENCH_6.json");
+const BASELINE7: &str = include_str!("../../BENCH_7.json");
 
 /// Pairs emitted by `perf_probe`: `<name>_scalar_ns` vs `<name>_ns`.
 const PAIRS: [&str; 8] = [
@@ -37,30 +41,36 @@ fn baseline() -> Value {
     parse(BASELINE).expect("BENCH_6.json parses with the crate JSON layer")
 }
 
+fn baseline7() -> Value {
+    parse(BASELINE7).expect("BENCH_7.json parses with the crate JSON layer")
+}
+
 fn ns(v: &Value, name: &str) -> f64 {
     v.get(name)
-        .unwrap_or_else(|| panic!("probe '{name}' missing from BENCH_6.json"))
+        .unwrap_or_else(|| panic!("probe '{name}' missing from the baseline"))
         .req_f64("ns_per_op")
         .unwrap()
 }
 
 #[test]
 fn baseline_schema_is_complete_and_consistent() {
-    let v = baseline();
-    let Value::Obj(entries) = &v else { panic!("top level must be a name->stats object") };
-    assert!(entries.len() >= 50, "expected the full probe sweep, got {}", entries.len());
-    for (name, stats) in entries {
-        let ns = stats.req_f64("ns_per_op").unwrap_or_else(|e| panic!("{name}: {e}"));
-        let ops = stats.req_f64("ops_per_s").unwrap_or_else(|e| panic!("{name}: {e}"));
-        assert!(ns > 0.0 && ops > 0.0, "{name}: non-positive timing");
-        // ns/op and ops/s must be exact float inverses (the Suite::to_json
-        // arithmetic — a hand-edited baseline that breaks this is corrupt).
-        assert!((ns * ops / 1e9 - 1.0).abs() < 1e-9, "{name}: ns={ns} ops={ops}");
-        let p10 = stats.req_f64("p10_ns").unwrap();
-        let p90 = stats.req_f64("p90_ns").unwrap();
-        assert!(p10 <= p90, "{name}: p10 {p10} > p90 {p90}");
-        assert!(stats.req_f64("iters").unwrap() >= 1.0, "{name}: no iterations");
-        assert!(stats.req_f64("samples").unwrap() >= 1.0, "{name}: no samples");
+    for (file, v) in [("BENCH_6.json", baseline()), ("BENCH_7.json", baseline7())] {
+        let Value::Obj(entries) = &v else { panic!("{file}: top level must be a name->stats object") };
+        assert!(entries.len() >= 50, "{file}: expected the full probe sweep, got {}", entries.len());
+        for (name, stats) in entries {
+            let ns = stats.req_f64("ns_per_op").unwrap_or_else(|e| panic!("{file}/{name}: {e}"));
+            let ops = stats.req_f64("ops_per_s").unwrap_or_else(|e| panic!("{file}/{name}: {e}"));
+            assert!(ns > 0.0 && ops > 0.0, "{file}/{name}: non-positive timing");
+            // ns/op and ops/s must be exact float inverses (the
+            // Suite::to_json arithmetic — a hand-edited baseline that
+            // breaks this is corrupt).
+            assert!((ns * ops / 1e9 - 1.0).abs() < 1e-9, "{file}/{name}: ns={ns} ops={ops}");
+            let p10 = stats.req_f64("p10_ns").unwrap();
+            let p90 = stats.req_f64("p90_ns").unwrap();
+            assert!(p10 <= p90, "{file}/{name}: p10 {p10} > p90 {p90}");
+            assert!(stats.req_f64("iters").unwrap() >= 1.0, "{file}/{name}: no iterations");
+            assert!(stats.req_f64("samples").unwrap() >= 1.0, "{file}/{name}: no samples");
+        }
     }
 }
 
@@ -124,4 +134,51 @@ fn at_least_one_register_kernel_shows_2x() {
     let a = ns(&v, "pminhash/n1000/k256");
     let b = ns(&v, "sketch.pminhash_ns");
     assert!((a / b - 1.0).abs() < 0.25, "auto vs forced-SIMD pminhash diverge: {a} vs {b}");
+}
+
+/// BENCH_7: every frame-vs-JSON codec pair must be binary-faster — the
+/// whole point of the framed wire format. The floor is 1.0x (never
+/// slower), with the encode pairs expected well past it; a refreshed
+/// baseline where JSON wins a pair means the binary codec regressed.
+#[test]
+fn binary_codec_beats_json_on_every_pair_in_bench7() {
+    let v = baseline7();
+    for side in ["request", "response"] {
+        for dir in ["encode", "decode"] {
+            let json = ns(&v, &format!("frame.{dir}_{side}_json_ns"));
+            let bin = ns(&v, &format!("frame.{dir}_{side}_ns"));
+            assert!(
+                bin < json,
+                "frame.{dir}_{side}: binary {bin} ns is not faster than JSON {json} ns"
+            );
+        }
+    }
+    // BENCH_7 also re-carries every BENCH_6 probe (one sweep per
+    // baseline file, so trajectories diff file-to-file).
+    for name in ["fastgm/n1000/k64", "kernel.merge_ns", "cluster.owner_ns"] {
+        assert!(ns(&v, name) > 0.0);
+    }
+}
+
+/// BENCH_7 acceptance floor (ISSUE 7): the event-driven framed transport
+/// sustains ≥10x the req/s of the thread-per-connection JSON-lines
+/// server at equal-or-better p99, under the committed saturation run
+/// (8 clients × 64 pipelined pings).
+#[test]
+fn framed_transport_sustains_10x_at_no_worse_p99_in_bench7() {
+    let v = baseline7();
+    let framed = ns(&v, "transport.sat.framed_ns");
+    let json = ns(&v, "transport.sat.json_ns");
+    let speedup = json / framed; // ns/req inverse == req/s ratio
+    assert!(
+        speedup >= 10.0,
+        "framed sustained speedup {speedup:.2}x is below the 10x acceptance floor \
+         (framed {framed} ns/req vs json {json} ns/req)"
+    );
+    let framed_p99 = ns(&v, "transport.sat.framed_p99_ns");
+    let json_p99 = ns(&v, "transport.sat.json_p99_ns");
+    assert!(
+        framed_p99 <= json_p99,
+        "framed p99 {framed_p99} ns is worse than JSON p99 {json_p99} ns"
+    );
 }

@@ -329,7 +329,7 @@ fn connect_rejects_impossible_replication_shapes() {
     for (r, w) in [(3, 1), (0, 0), (2, 3), (1, 0)] {
         let err = ClusterClient::connect_with(
             &addrs,
-            ReplicaConfig { replication: r, write_quorum: w },
+            ReplicaConfig { replication: r, write_quorum: w, ..Default::default() },
         )
         .unwrap_err()
         .to_string();
@@ -337,7 +337,7 @@ fn connect_rejects_impossible_replication_shapes() {
     }
     let mut cc = ClusterClient::connect_with(
         &addrs,
-        ReplicaConfig { replication: 2, write_quorum: 2 },
+        ReplicaConfig { replication: 2, write_quorum: 2, ..Default::default() },
     )
     .unwrap();
     assert!(cc.set_write_quorum(3).is_err());
@@ -400,7 +400,7 @@ fn replicated_cluster_survives_any_single_kill_and_repairs() {
     let mut cluster = LocalCluster::start(M, &cfg()).unwrap();
     let mut cc = ClusterClient::connect_with(
         &cluster.addrs(),
-        ReplicaConfig { replication: 2, write_quorum: 1 },
+        ReplicaConfig { replication: 2, write_quorum: 1, ..Default::default() },
     )
     .unwrap();
     for (i, d) in docs.iter().enumerate() {
@@ -524,7 +524,7 @@ fn under_quorum_writes_are_typed_quorum_lost() {
     let mut cluster = LocalCluster::start(3, &cfg()).unwrap();
     let mut cc = ClusterClient::connect_with(
         &cluster.addrs(),
-        ReplicaConfig { replication: 2, write_quorum: 2 },
+        ReplicaConfig { replication: 2, write_quorum: 2, ..Default::default() },
     )
     .unwrap();
     const VICTIM: usize = 0;
@@ -601,4 +601,61 @@ fn topk_dedup_keeps_the_highest_version_copy() {
     assert_eq!(sk, FastGm::new(K, SEED).sketch(&new_vec));
     assert_eq!(cc.fetch_key("ghost").unwrap(), None);
     cluster.stop();
+}
+
+/// ISSUE 7 satellite: the per-node I/O timeout is configurable through
+/// `ReplicaConfig::io_timeout` — a node that accepts the handshake and
+/// then goes silent (full receive buffer, stop-the-world pause) is
+/// marked down after the configured timeout, not the 10s default.
+#[test]
+fn tiny_io_timeout_marks_a_stuffed_node_down() {
+    use std::io::{BufRead, BufReader, Write};
+    // A "stuffed" node: answers the hello handshake, then never replies
+    // to anything again (reads and discards forever).
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stub = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // the hello request
+        let mut w = stream;
+        w.write_all(
+            concat!(
+                r#"{"ok":true,"type":"hello","protocol":2,"node":"stuffed","epoch":0,"#,
+                r#""k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
+                "\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        // Swallow everything else until the client hangs up.
+        loop {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return,
+                Ok(_) => {}
+            }
+        }
+    });
+    let mut cc = ClusterClient::connect_with(
+        &[addr],
+        ReplicaConfig {
+            io_timeout: std::time::Duration::from_millis(100),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(cc.live_nodes(), 1);
+    let t0 = std::time::Instant::now();
+    let err = cc.upsert("doc", SparseVector::new(vec![1], vec![1.0])).unwrap_err();
+    assert!(matches!(err, ClusterError::NodeDown { .. }), "{err}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "io_timeout did not bound the stall: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(cc.live_nodes(), 0);
+    drop(cc); // closes the socket; the stub sees EOF and exits
+    stub.join().unwrap();
 }

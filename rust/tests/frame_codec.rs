@@ -1,0 +1,254 @@
+//! Black-box property tests for the binary frame codec
+//! (`fastgm::coordinator::frame`), in the style of `store_codec.rs`:
+//! every-byte corruption, every-prefix truncation (including mid
+//! length-prefix), version mismatch, and the mixed-protocol contract —
+//! a JSON line and a binary frame interleaved on ONE event-server
+//! connection, proving old line-protocol clients coexist with framed
+//! ones on the same port. The in-module unit tests cover per-message
+//! round-trips; these lock the wire-level failure contract the event
+//! loop's tear-down-on-corruption rule relies on.
+
+use fastgm::coordinator::frame::{
+    decode_frame, encode_request_frame, encode_response_frame, FrameMsg, FrameStatus,
+    FRAME_MAGIC, FRAME_VERSION, HEADER_LEN,
+};
+use fastgm::coordinator::protocol::{Request, Response, SketchSource};
+use fastgm::sketch::fastgm::FastGm;
+use fastgm::sketch::{Sketcher, SparseVector};
+use fastgm::util::hash::fnv1a64;
+use fastgm::util::rng::SplitMix64;
+
+/// A frame per message shape class: fixed (ping), stringy, vector-heavy,
+/// sketch-register and blob payloads — so the byte-level properties are
+/// exercised against every field primitive the codec has.
+fn sample_frames() -> Vec<(u64, Vec<u8>)> {
+    let v = SparseVector::new(vec![3, 1 << 60, 7], vec![0.25, 1.5, 9.0]);
+    let sk = FastGm::new(16, 11).sketch(&v);
+    let reqs: Vec<(u64, Request)> = vec![
+        (1, Request::Ping),
+        (u64::MAX, Request::Sketch { name: "βeta-doc".into(), vector: v.clone(), algo: None }),
+        (7, Request::TopK { vector: v, limit: 5 }),
+        (
+            8,
+            Request::StorePut { data: "fb01aa".into() }, // raw-byte blob arm
+        ),
+        (9, Request::SketchFetch { name: "s".into(), source: SketchSource::Stream }),
+    ];
+    let mut frames = Vec::new();
+    for (id, req) in &reqs {
+        let mut out = Vec::new();
+        encode_request_frame(*id, req, &mut out);
+        frames.push((*id, out));
+    }
+    let resps: Vec<(u64, Response)> = vec![
+        (2, Response::Pong),
+        (3, Response::Sketch { name: "doc".into(), sketch: sk }),
+        (4, Response::Error { message: "no sketch named 'ghost'".into() }),
+    ];
+    for (id, resp) in &resps {
+        let mut out = Vec::new();
+        encode_response_frame(*id, resp, &mut out);
+        frames.push((*id, out));
+    }
+    frames
+}
+
+fn refresh_checksum(mut bytes: Vec<u8>) -> Vec<u8> {
+    let n = bytes.len();
+    let sum = fnv1a64(&bytes[..n - 8]);
+    bytes[n - 8..].copy_from_slice(&sum.to_le_bytes());
+    bytes
+}
+
+/// Every sample decodes to a frame consuming exactly its own bytes, with
+/// the client-assigned id intact — also when another frame is queued
+/// right behind it (the event loop decodes off the front of a stream).
+#[test]
+fn frames_decode_exactly_and_keep_their_ids() {
+    for (id, bytes) in sample_frames() {
+        let status = decode_frame(&bytes).unwrap();
+        let FrameStatus::Frame { consumed, id: got, .. } = status else {
+            panic!("complete frame reported incomplete")
+        };
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(got, id);
+        // With a second frame concatenated, the first still consumes only
+        // its own bytes.
+        let mut two = bytes.clone();
+        two.extend_from_slice(&bytes);
+        let FrameStatus::Frame { consumed, .. } = decode_frame(&two).unwrap() else {
+            panic!("concatenated frame reported incomplete")
+        };
+        assert_eq!(consumed, bytes.len());
+    }
+}
+
+/// Every strict prefix of a valid frame — including cuts INSIDE the
+/// 4-byte length prefix — is `Incomplete`: a clean "need more bytes",
+/// never an error, never a bogus decode, never a panic. This is what
+/// lets the event loop buffer partial reads without special cases.
+#[test]
+fn every_truncation_asks_for_more_bytes() {
+    for (_, bytes) in sample_frames() {
+        for len in 0..bytes.len() {
+            match decode_frame(&bytes[..len]) {
+                Ok(FrameStatus::Incomplete) => {}
+                Ok(FrameStatus::Frame { .. }) => {
+                    panic!("prefix {len}/{} decoded as a whole frame", bytes.len())
+                }
+                Err(e) => panic!("prefix {len}/{} errored: {e}", bytes.len()),
+            }
+        }
+    }
+}
+
+/// Flipping any single bit of any byte must never yield a decoded frame:
+/// header flips are refused outright, length flips either fail the
+/// (relocated) checksum or ask for bytes that will never come, payload
+/// and trailer flips fail the checksum. `Incomplete` is acceptable —
+/// the connection then stalls and is torn down — but a silent wrong
+/// decode is not.
+#[test]
+fn every_byte_corruption_is_caught() {
+    for (_, bytes) in sample_frames() {
+        for at in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut bad = bytes.clone();
+                bad[at] ^= 1 << bit;
+                match decode_frame(&bad) {
+                    Ok(FrameStatus::Frame { .. }) => {
+                        panic!("flip of bit {bit} at byte {at} went unnoticed")
+                    }
+                    Ok(FrameStatus::Incomplete) | Err(_) => {}
+                }
+            }
+        }
+    }
+    // Random multi-byte corruption too (store_codec idiom).
+    let mut r = SplitMix64::new(5);
+    for (_, bytes) in sample_frames() {
+        for _ in 0..50 {
+            let mut bad = bytes.clone();
+            for _ in 0..3 {
+                let at = r.next_range(0, bad.len() - 1);
+                bad[at] ^= 1 << r.next_range(0, 7);
+            }
+            assert!(
+                !matches!(decode_frame(&bad), Ok(FrameStatus::Frame { .. })),
+                "3-byte corruption went unnoticed"
+            );
+        }
+    }
+}
+
+/// A future frame version is refused as soon as the version byte is seen
+/// — even with a valid checksum — and the error names both versions, so
+/// a mixed-build cluster fails loudly at the first frame, not with a
+/// checksum mystery. Bad magic likewise names the byte.
+#[test]
+fn version_mismatch_is_a_named_clean_error() {
+    let (_, bytes) = &sample_frames()[0];
+    assert_eq!(bytes[0], FRAME_MAGIC, "layout assumption: magic first");
+    assert_eq!(bytes[1], FRAME_VERSION, "layout assumption: version second");
+    let mut future = bytes.clone();
+    future[1] = FRAME_VERSION + 1;
+    let err = decode_frame(&refresh_checksum(future.clone())).unwrap_err().to_string();
+    assert!(
+        err.contains(&format!("version {}", FRAME_VERSION + 1))
+            && err.contains(&format!("v{FRAME_VERSION}")),
+        "version mismatch must name both versions: {err}"
+    );
+    // Refused from the first two bytes — no length/checksum needed.
+    assert!(decode_frame(&future[..2]).is_err());
+    // Bad magic: refused from byte one. Every JSON first byte ('{',
+    // whitespace) falls here, which is exactly how the event loop
+    // dispatches between the two protocols.
+    for first in [b'{', b' ', b'\t', 0x00, 0xFF] {
+        let mut alien = bytes.clone();
+        alien[0] = first;
+        let err = decode_frame(&refresh_checksum(alien)).unwrap_err().to_string();
+        assert!(err.contains("not a binary frame"), "{err}");
+        assert!(decode_frame(&[first]).is_err(), "single byte 0x{first:02x} accepted");
+    }
+}
+
+/// Oversized / undersized length prefixes are refused before any
+/// allocation: a hostile 4 GiB length must not reserve memory.
+#[test]
+fn hostile_length_prefixes_are_refused() {
+    let (_, bytes) = &sample_frames()[0];
+    for len in [0u32, 1, 8, u32::MAX, (fastgm::coordinator::frame::MAX_PAYLOAD + 1) as u32] {
+        let mut bad = bytes.clone();
+        bad[2..HEADER_LEN].copy_from_slice(&len.to_le_bytes());
+        assert!(
+            decode_frame(&refresh_checksum(bad)).is_err(),
+            "payload length {len} accepted"
+        );
+    }
+}
+
+/// The mixed-protocol contract, end to end: ONE event-server connection
+/// serves a JSON line, then a binary frame, then JSON again — each
+/// answered in its own protocol — while a plain `Client` (the golden
+/// line-protocol path) works unchanged on the same port.
+#[cfg(unix)]
+#[test]
+fn json_and_frames_interleave_on_one_connection() {
+    use fastgm::coordinator::client::Client;
+    use fastgm::coordinator::event_server::EventServer;
+    use fastgm::coordinator::protocol;
+    use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::sync::Arc;
+
+    let coord = Arc::new(
+        Coordinator::new(CoordinatorConfig { k: 32, workers: 2, ..Default::default() }).unwrap(),
+    );
+    let server = EventServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+
+    // Raw socket: JSON, frame, JSON on the same connection.
+    let stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(protocol::decode_response(&line).unwrap(), Response::Pong);
+
+    let mut fbuf = Vec::new();
+    encode_request_frame(42, &Request::Hello, &mut fbuf);
+    writer.write_all(&fbuf).unwrap();
+    let mut acc: Vec<u8> = reader.buffer().to_vec();
+    reader.consume(acc.len());
+    let (id, msg) = loop {
+        match decode_frame(&acc).unwrap() {
+            FrameStatus::Frame { id, msg, .. } => break (id, msg),
+            FrameStatus::Incomplete => {
+                let mut chunk = [0u8; 4096];
+                let got = reader.read(&mut chunk).unwrap();
+                assert!(got > 0, "server closed mid-frame");
+                acc.extend_from_slice(&chunk[..got]);
+            }
+        }
+    };
+    assert_eq!(id, 42);
+    let FrameMsg::Response(Response::Hello { info }) = msg else {
+        panic!("expected hello response")
+    };
+    assert_eq!(info.k, 32);
+
+    writer.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(protocol::decode_response(&line).unwrap(), Response::Pong);
+    drop((writer, reader));
+
+    // The golden line-protocol client path, same port, untouched.
+    let mut client = Client::connect(&server.addr.to_string()).unwrap();
+    let hello = client.hello().unwrap();
+    assert_eq!(hello.k, 32);
+    drop(client);
+
+    server.stop();
+    Arc::try_unwrap(coord).ok().expect("server kept a coordinator reference").shutdown();
+}
