@@ -172,6 +172,41 @@ fn main() {
         }));
     }
 
+    // Query-engine sampling probes (ISSUE 8): serving `sample` is one scan
+    // of the k registers plus O(1) uniform draws — independent of the
+    // ingested vector's size — and `partition` is one pass over the y
+    // registers. The union probe adds the §2.3 merges the store's
+    // multi-key target pays before drawing.
+    {
+        use fastgm::estimate::sample;
+        let v = dense_vector(&mut rng, 10_000, WeightDist::Uniform01);
+        for k in [256usize, 1024] {
+            let sk = FastGm::new(k, 1).sketch(&v);
+            let mut seed = 0u64;
+            suite.record(b.run(&format!("sample.draw32_k{k}_ns"), || {
+                seed = seed.wrapping_add(1);
+                sample::sample_n(&sk, 32, seed).unwrap()
+            }));
+            suite.record(b.run(&format!("partition.total_weight_k{k}_ns"), || {
+                sample::total_weight(&sk).unwrap()
+            }));
+        }
+        let parts: Vec<GumbelMaxSketch> = (0..8)
+            .map(|_| {
+                // Distinct vectors (the rng advances), one shared sketch
+                // seed so the parts are mergeable.
+                let pv = dense_vector(&mut rng, 2000, WeightDist::Uniform01);
+                FastGm::new(256, 1).sketch(&pv)
+            })
+            .collect();
+        let refs: Vec<&GumbelMaxSketch> = parts.iter().collect();
+        let mut seed = 0u64;
+        suite.record(b.run("sample.union8_k256_ns", || {
+            seed = seed.wrapping_add(1);
+            sample::sample_union(&refs, 32, seed).unwrap()
+        }));
+    }
+
     // Kernel-level scalar-vs-SIMD pairs: the same kernel, forced onto each
     // backend. `<name>_scalar_ns` is the baseline; `<name>_ns` is whatever
     // the host's best backend delivers (scalar again on non-AVX2 hosts, so

@@ -30,7 +30,8 @@ import sys
 REQUIRED = ("ns_per_op", "ops_per_s", "p10_ns", "p90_ns", "iters", "samples")
 
 # The transport probes are the acceptance evidence for the binary framed
-# transport (ISSUE 7): they must be present in every fresh run explicitly,
+# transport (ISSUE 7), and the sample/partition probes for the query
+# engine (ISSUE 8): they must be present in every fresh run explicitly,
 # not just via the committed-baseline diff (which would stop gating them if
 # the baselines were ever pruned).
 REQUIRED_PROBES = (
@@ -46,6 +47,11 @@ REQUIRED_PROBES = (
     "transport.sat.framed_p99_ns",
     "transport.sat.json_ns",
     "transport.sat.json_p99_ns",
+    "sample.draw32_k256_ns",
+    "sample.draw32_k1024_ns",
+    "sample.union8_k256_ns",
+    "partition.total_weight_k256_ns",
+    "partition.total_weight_k1024_ns",
 )
 
 

@@ -12,7 +12,7 @@ gate on. This script exists so a baseline refresh is reproducible: edit the
 
     FASTGM_BENCH_BUDGET=0.6 cargo bench --bench perf_probe -- --json /tmp/b.json
 
-and re-run ``python3 ci/gen_bench_baseline.py BENCH_7.json``.
+and re-run ``python3 ci/gen_bench_baseline.py BENCH_8.json``.
 
 Derived fields mirror the harness arithmetic: ``ops_per_s`` is the exact
 float inverse of ``ns_per_op`` (the smoke test asserts the product), and
@@ -71,6 +71,13 @@ MEDIANS_NS = [
     ("lemiesz/n1000/k256", 1.45e6),
     ("stream-fastgm/n1000/k1024", 3.41e6),
     ("lemiesz/n1000/k1024", 5.83e6),
+    # query-engine sampling (ISSUE 8): register scan + O(1) draws, one
+    # y-pass for partition, 8x §2.3 merge ahead of the union draw
+    ("sample.draw32_k256_ns", 640.0),
+    ("partition.total_weight_k256_ns", 215.0),
+    ("sample.draw32_k1024_ns", 2100.0),
+    ("partition.total_weight_k1024_ns", 860.0),
+    ("sample.union8_k256_ns", 3700.0),
     # kernel-level scalar baselines (k = 1024 registers / block elements)
     ("kernel.uniform_batch_scalar_ns", 1850.0),
     ("kernel.gumbel_batch_scalar_ns", 9100.0),
@@ -149,7 +156,7 @@ def sat_entry(ns):
 
 
 def main():
-    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_7.json"
+    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_8.json"
     fix = {name: entry(ns) for name, ns in MEDIANS_NS}
     fix.update({name: sat_entry(ns) for name, ns in SATURATION_NS})
     with open(out, "w") as f:

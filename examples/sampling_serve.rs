@@ -1,0 +1,186 @@
+//! WEIGHTED SAMPLING AS A SERVICE, END TO END: the query engine over the
+//! wire — every register of a Gumbel-Max sketch is an independent weighted
+//! sample, so a server that keeps sketches can answer `sample` and
+//! `partition` queries without ever touching the raw data again.
+//!
+//!   1. start the coordinator + TCP server and `upsert` a catalog of
+//!      category vectors with hand-computable total weights,
+//!   2. `sample` one category: same seed ⇒ the same draws (reproducible
+//!      pipelines), and the empirical frequencies track w_i/Σw,
+//!   3. `sample` a key UNION: merging sketches (§2.3) is bit-identical to
+//!      sketching the concatenated catalog, so the union draws from the
+//!      multi-key target equal the draws from a single pre-merged key,
+//!   4. `partition`: the sum-of-weights estimate for each category and for
+//!      the union lands within the documented √(2/k) error band,
+//!   5. `push` a weighted event stream and sample/estimate it live,
+//!   6. spawn a 3-node cluster at R=2, kill a node, and show `sample` and
+//!      `partition` fail over to the surviving replicas with IDENTICAL
+//!      answers — determinism makes the outage invisible.
+//!
+//! Runs offline in seconds; CI uses it as the sampling-path smoke test.
+//!
+//! ```bash
+//! cargo run --release --example sampling_serve
+//! ```
+
+use fastgm::coordinator::client::Client;
+use fastgm::coordinator::cluster::{ClusterClient, LocalCluster, ReplicaConfig};
+use fastgm::coordinator::protocol::{QueryTarget, Request, Response};
+use fastgm::coordinator::server::Server;
+use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+use fastgm::estimate::sample;
+use fastgm::sketch::SparseVector;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+const CATS: usize = 6;
+const ITEMS: usize = 60;
+const K: usize = 256;
+const SEED: u64 = 42;
+const DRAWS: usize = 2000;
+
+fn config() -> CoordinatorConfig {
+    CoordinatorConfig { k: K, seed: SEED, workers: 2, ..Default::default() }
+}
+
+/// Category `c`: disjoint ids `c*1000 + i` with deterministic weights, so
+/// the true partition function of every target is computable by hand.
+fn category(c: usize) -> SparseVector {
+    let mut v = SparseVector::default();
+    for i in 0..ITEMS {
+        v.push((c * 1000 + i) as u64, 1.0 + ((i * 7 + c) % 5) as f64 * 0.5);
+    }
+    v
+}
+
+fn true_weight(v: &SparseVector) -> f64 {
+    v.weights.iter().sum()
+}
+
+fn main() -> anyhow::Result<()> {
+    fastgm::util::logger::init();
+
+    // ---- Phase 1: serve + ingest the catalog. ---------------------------
+    let coordinator = Arc::new(Coordinator::new(config())?);
+    let server = Server::start(coordinator, "127.0.0.1:0")?;
+    let mut client = Client::connect(&server.addr.to_string())?;
+    let cats: Vec<SparseVector> = (0..CATS).map(category).collect();
+    let mut union_vec = SparseVector::default();
+    for (c, v) in cats.iter().enumerate() {
+        client.upsert(&format!("cat{c}"), v.clone())?;
+        for (id, w) in v.positive() {
+            union_vec.push(id, w);
+        }
+    }
+    // The pre-merged catalog, stored as one key — the §2.3 reference point.
+    client.upsert("catalog", union_vec.clone())?;
+    println!("ingested {CATS} categories + 1 pre-merged catalog key (k={K})");
+
+    // ---- Phase 2: single-key sampling — reproducible and frequency-true.
+    let draws = client.sample(QueryTarget::key("cat0"), DRAWS, 7)?;
+    anyhow::ensure!(
+        draws == client.sample(QueryTarget::key("cat0"), DRAWS, 7)?,
+        "same seed must reproduce the same draws"
+    );
+    anyhow::ensure!(
+        draws != client.sample(QueryTarget::key("cat0"), DRAWS, 8)?,
+        "a different seed should reshuffle the draws"
+    );
+    let mut freq: HashMap<u64, usize> = HashMap::new();
+    for &id in &draws {
+        anyhow::ensure!(id < ITEMS as u64, "cat0 sample outside cat0's id range: {id}");
+        *freq.entry(id).or_default() += 1;
+    }
+    let total0 = true_weight(&cats[0]);
+    let (heavy_id, heavy_w) = cats[0]
+        .positive()
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .expect("non-empty category");
+    let heavy_freq = freq.get(&heavy_id).copied().unwrap_or(0) as f64 / DRAWS as f64;
+    let heavy_share = heavy_w / total0;
+    println!(
+        "cat0: {DRAWS} draws over {} distinct items, heaviest id {heavy_id} drawn {:.1}% \
+         (true share {:.1}%)",
+        freq.len(),
+        100.0 * heavy_freq,
+        100.0 * heavy_share,
+    );
+    // k registers cap the resolution: allow generous register-noise slack
+    // (share std ≈ sqrt(p(1-p)/k) ≈ 1% here; 0.05 is a ~5σ band).
+    anyhow::ensure!(
+        (heavy_freq - heavy_share).abs() < 0.05,
+        "empirical frequency drifted from w_i/Σw: {heavy_freq} vs {heavy_share}"
+    );
+
+    // ---- Phase 3: union sampling == pre-merged key, bit for bit. --------
+    let keys: Vec<String> = (0..CATS).map(|c| format!("cat{c}")).collect();
+    let union_draws = client.sample(QueryTarget::Keys(keys.clone()), 64, 9)?;
+    let merged_draws = client.sample(QueryTarget::key("catalog"), 64, 9)?;
+    anyhow::ensure!(
+        union_draws == merged_draws,
+        "§2.3 merge must make the key union indistinguishable from the pre-merged catalog"
+    );
+    println!("union over {CATS} keys == pre-merged catalog key: 64/64 draws identical ✓");
+
+    // ---- Phase 4: partition-function estimates. -------------------------
+    let rel_std = sample::partition_rel_std(K);
+    for (c, v) in cats.iter().enumerate() {
+        let est = client.partition(QueryTarget::key(format!("cat{c}")))?;
+        let truth = true_weight(v);
+        let rel_err = (est - truth).abs() / truth;
+        println!("  partition(cat{c}) ≈ {est:9.1}  (truth {truth:7.1}, rel err {rel_err:.3})");
+        anyhow::ensure!(rel_err < 6.0 * rel_std, "partition estimate outside the 6σ band");
+    }
+    let union_est = client.partition(QueryTarget::Keys(keys.clone()))?;
+    let union_truth = true_weight(&union_vec);
+    println!(
+        "  partition(union) ≈ {union_est:9.1}  (truth {union_truth:7.1}, documented rel std \
+         √(2/k) = {rel_std:.3})"
+    );
+    anyhow::ensure!((union_est - union_truth).abs() / union_truth < 6.0 * rel_std);
+
+    // ---- Phase 5: streams are targets too. ------------------------------
+    let items: Vec<(u64, f64)> = (0..500u64).map(|i| (i, 1.0 + (i % 3) as f64)).collect();
+    let stream_truth: f64 = items.iter().map(|&(_, w)| w).sum();
+    let resp = client.call(&Request::Push { stream: "events".into(), items })?;
+    anyhow::ensure!(matches!(resp, Response::Ack { .. }), "push failed: {resp:?}");
+    let stream_draws = client.sample(QueryTarget::Stream("events".into()), 32, 11)?;
+    anyhow::ensure!(stream_draws.iter().all(|&id| id < 500), "stream sample outside id range");
+    let stream_est = client.partition(QueryTarget::Stream("events".into()))?;
+    println!(
+        "stream 'events': 32 draws ok, partition ≈ {stream_est:.1} (truth {stream_truth:.1})"
+    );
+    anyhow::ensure!((stream_est - stream_truth).abs() / stream_truth < 6.0 * rel_std);
+    drop(client);
+    server.stop();
+
+    // ---- Phase 6: replicated sampling survives a node kill. -------------
+    let mut cluster = LocalCluster::start(3, &config())?;
+    let mut cc = ClusterClient::connect_with(
+        &cluster.addrs(),
+        ReplicaConfig { replication: 2, write_quorum: 1, ..Default::default() },
+    )?;
+    for (c, v) in cats.iter().enumerate() {
+        cc.upsert(&format!("cat{c}"), v.clone())?;
+    }
+    let healthy_draws = cc.sample(&QueryTarget::Keys(keys.clone()), 64, 9)?;
+    let healthy_part = cc.partition(&QueryTarget::Keys(keys.clone()))?;
+    anyhow::ensure!(
+        healthy_draws == union_draws,
+        "the cluster must draw exactly what the single node drew (same sketches, same seed)"
+    );
+    cluster.kill(1);
+    anyhow::ensure!(
+        cc.sample(&QueryTarget::Keys(keys.clone()), 64, 9)? == healthy_draws,
+        "sample must fail over to live replicas with identical draws"
+    );
+    anyhow::ensure!(
+        cc.partition(&QueryTarget::Keys(keys))? == healthy_part,
+        "partition must fail over to live replicas with an identical estimate"
+    );
+    println!("cluster R=2, one node down: sample + partition answers IDENTICAL ✓");
+    cluster.stop();
+
+    println!("\nsampling_serve OK");
+    Ok(())
+}

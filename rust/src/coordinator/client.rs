@@ -18,7 +18,7 @@
 //!   not speak frames.
 
 use super::frame::{self, FrameMsg, FrameStatus};
-use super::protocol::{self, HelloInfo, Request, Response, SketchSource};
+use super::protocol::{self, HelloInfo, QueryTarget, Request, Response, SketchSource};
 use crate::sketch::{codec, GumbelMaxSketch, SparseVector};
 use crate::util::json::Value;
 use std::collections::{HashMap, VecDeque};
@@ -278,6 +278,33 @@ impl Client {
         }
     }
 
+    /// Draw `n` element ids ∝ weight from the query target's sketch
+    /// (single key, §2.3 key-set union, or live stream) — reproducible:
+    /// the same `(state, target, n, seed)` yields the same ids on every
+    /// node and transport.
+    pub fn sample(
+        &mut self,
+        target: QueryTarget,
+        n: usize,
+        seed: u64,
+    ) -> anyhow::Result<Vec<u64>> {
+        match self.call(&Request::Sample { target, n, seed })? {
+            Response::Samples { ids } => Ok(ids),
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected samples, got {other:?}"),
+        }
+    }
+
+    /// Estimate the target's partition function (total weight
+    /// `Z = Σ_i w_i`) from its sketch registers.
+    pub fn partition(&mut self, target: QueryTarget) -> anyhow::Result<f64> {
+        match self.call(&Request::Partition { target })? {
+            Response::Estimate { value } => Ok(value),
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected estimate, got {other:?}"),
+        }
+    }
+
     /// Keyed-store statistics (size, shard occupancy, index shape).
     pub fn store_stats(&mut self) -> anyhow::Result<Value> {
         match self.call(&Request::StoreStats)? {
@@ -435,6 +462,46 @@ mod tests {
             assert!(client.restore("/no/such/file.fgms").is_err());
             drop(client);
             server.stop();
+            Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
+        }
+
+        /// `sample`/`partition` must answer bit-identically over the JSON
+        /// and framed wires: two servers with equal state (sketching is
+        /// seed-deterministic), one client per wire, same query seeds.
+        #[test]
+        fn sample_and_partition_agree_across_wires() {
+            let (coord, server) = start_event(2);
+            let mut framed = Client::connect_framed(&server.addr.to_string()).unwrap();
+            let json_coord = Arc::new(
+                Coordinator::new(CoordinatorConfig { k: 32, workers: 2, ..Default::default() })
+                    .unwrap(),
+            );
+            let json_server = Server::start(json_coord, "127.0.0.1:0").unwrap();
+            let mut json = Client::connect(&json_server.addr.to_string()).unwrap();
+            let va = SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+            let vb = SparseVector::new(vec![3, 4], vec![1.5, 1.0]);
+            for c in [&mut framed, &mut json] {
+                c.upsert("a", va.clone()).unwrap();
+                c.upsert("b", vb.clone()).unwrap();
+            }
+            let target = || QueryTarget::Keys(vec!["a".into(), "b".into()]);
+            let f_ids = framed.sample(target(), 16, 9).unwrap();
+            assert_eq!(f_ids, json.sample(target(), 16, 9).unwrap());
+            assert!(f_ids.iter().all(|id| *id >= 1 && *id <= 4));
+            assert_eq!(
+                framed.partition(target()).unwrap(),
+                json.partition(target()).unwrap()
+            );
+            // Single-key targets and error replies behave alike per wire.
+            for c in [&mut framed, &mut json] {
+                let ids = c.sample(QueryTarget::key("a"), 4, 1).unwrap();
+                assert!(ids.iter().all(|id| [1, 2, 3].contains(id)));
+                assert!(c.partition(QueryTarget::key("ghost")).is_err());
+            }
+            drop(framed);
+            drop(json);
+            server.stop();
+            json_server.stop();
             Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
         }
 

@@ -43,9 +43,12 @@
 use super::partitioner::Partitioner;
 use crate::coordinator::client::Client;
 use crate::coordinator::merger::merge_tree;
-use crate::coordinator::protocol::{HelloInfo, Request, Response, SketchSource, PROTOCOL_VERSION};
+use crate::coordinator::protocol::{
+    HelloInfo, QueryTarget, Request, Response, SketchSource, PROTOCOL_VERSION,
+};
 use crate::estimate::cardinality::estimate_cardinality;
 use crate::estimate::jaccard::{estimate_jp, estimate_jp_batch};
+use crate::estimate::sample;
 use crate::sketch::codec;
 use crate::sketch::engine::{self, EngineParams};
 use crate::sketch::{AlgorithmId, GumbelMaxSketch, Sketcher, SparseVector};
@@ -970,6 +973,64 @@ impl ClusterClient {
             return Err(ClusterError::NoLiveNodes);
         }
         Ok(best)
+    }
+
+    /// Resolve a query target to one cluster-wide merged sketch. Key
+    /// targets fetch each key from its replica set via
+    /// [`ClusterClient::fetch_key`] — highest-version copy wins, and a
+    /// key whose primary owner is down **fails over** to the next live
+    /// owner instead of erroring — then union-merge centrally (§2.3, so
+    /// the merge is bit-identical to a single store holding every key).
+    /// Stream targets reuse the replicated stream gather.
+    fn target_sketch(&mut self, target: &QueryTarget) -> Result<GumbelMaxSketch, ClusterError> {
+        match target {
+            QueryTarget::Keys(keys) => {
+                if keys.is_empty() {
+                    return Err(ClusterError::Gather(
+                        "sample/partition needs at least one key".to_string(),
+                    ));
+                }
+                let mut acc: Option<GumbelMaxSketch> = None;
+                for key in keys {
+                    let (_, sk) = self.fetch_key(key)?.ok_or_else(|| {
+                        ClusterError::Gather(format!(
+                            "no store entry '{key}' on any live owner"
+                        ))
+                    })?;
+                    match &mut acc {
+                        None => acc = Some(sk),
+                        Some(a) => a
+                            .merge_in_place(&sk)
+                            .map_err(|e| ClusterError::Gather(e.to_string()))?,
+                    }
+                }
+                Ok(acc.expect("non-empty keys imply an accumulator"))
+            }
+            QueryTarget::Stream(stream) => self.merged_stream_sketch(stream),
+        }
+    }
+
+    /// Draw `n` element ids ∝ weight from the target's cluster-wide
+    /// sketch. The draw happens centrally on the merged registers with
+    /// [`crate::estimate::sample::sample_n`], so the same
+    /// `(state, target, n, seed)` yields the same ids as a single node
+    /// holding the union — replica failover (or which owner happened to
+    /// answer) can never change the sample.
+    pub fn sample(
+        &mut self,
+        target: &QueryTarget,
+        n: usize,
+        seed: u64,
+    ) -> Result<Vec<u64>, ClusterError> {
+        let sk = self.target_sketch(target)?;
+        sample::sample_n(&sk, n, seed).map_err(|e| ClusterError::Gather(e.to_string()))
+    }
+
+    /// Estimate the target's cluster-wide partition function (total
+    /// weight `Z = Σ w_i`) from the merged registers.
+    pub fn partition(&mut self, target: &QueryTarget) -> Result<f64, ClusterError> {
+        let sk = self.target_sketch(target)?;
+        sample::total_weight(&sk).map_err(|e| ClusterError::Gather(e.to_string()))
     }
 
     /// Page node `i`'s whole `(key, version)` map through `store_keys`.

@@ -35,7 +35,7 @@
 //! answers [`FrameStatus::Incomplete`] so a read loop can just keep
 //! appending bytes and retrying.
 
-use super::protocol::{HelloInfo, Request, Response, SketchSource};
+use super::protocol::{check_weights, HelloInfo, QueryTarget, Request, Response, SketchSource};
 use crate::sketch::codec::{self, Reader};
 use crate::sketch::{GumbelMaxSketch, SparseVector};
 use crate::util::hash::fnv1a64;
@@ -265,6 +265,16 @@ pub fn encode_request_body(req: &Request, out: &mut Vec<u8>) {
         }
         Request::Metrics => out.push(21),
         Request::Ping => out.push(22),
+        Request::Sample { target, n, seed } => {
+            out.push(23);
+            put_target(out, target);
+            codec::push_u64(out, *n as u64);
+            codec::push_u64(out, *seed);
+        }
+        Request::Partition { target } => {
+            out.push(24);
+            put_target(out, target);
+        }
     }
 }
 
@@ -326,6 +336,12 @@ fn read_request(r: &mut Reader) -> anyhow::Result<Request> {
         20 => Request::SketchFetch { name: get_str(r)?, source: source_from_tag(r.u8()?)? },
         21 => Request::Metrics,
         22 => Request::Ping,
+        23 => Request::Sample {
+            target: get_target(r)?,
+            n: get_usize(r)?,
+            seed: r.u64()?,
+        },
+        24 => Request::Partition { target: get_target(r)? },
         other => anyhow::bail!("unknown request tag {other}"),
     })
 }
@@ -393,6 +409,13 @@ pub fn encode_response_body(resp: &Response, out: &mut Vec<u8>) {
             put_str(out, message);
         }
         Response::Pong => out.push(10),
+        Response::Samples { ids } => {
+            out.push(11);
+            codec::push_u32(out, ids.len() as u32);
+            for &id in ids {
+                codec::push_u64(out, id);
+            }
+        }
     }
 }
 
@@ -451,6 +474,17 @@ fn read_response(r: &mut Reader) -> anyhow::Result<Response> {
         8 => Response::SketchBlob { name: get_str(r)?, data: get_blob(r)? },
         9 => Response::Error { message: get_str(r)? },
         10 => Response::Pong,
+        11 => Response::Samples {
+            ids: {
+                let n = r.u32()? as usize;
+                anyhow::ensure!(r.remaining() >= 8 * n, "truncated sample ids (n={n})");
+                let mut ids = Vec::with_capacity(n);
+                for _ in 0..n {
+                    ids.push(r.u64()?);
+                }
+                ids
+            },
+        },
         other => anyhow::bail!("unknown response tag {other}"),
     })
 }
@@ -548,6 +582,9 @@ fn get_vector(r: &mut Reader) -> anyhow::Result<SparseVector> {
     for _ in 0..n {
         weights.push(f64::from_bits(r.u64()?));
     }
+    // Same ingress guard as the JSON wire — raw f64 bits make NaN/inf
+    // trivially expressible here, so the framed path must reject them too.
+    check_weights(&weights)?;
     Ok(SparseVector::new(ids, weights))
 }
 
@@ -583,6 +620,27 @@ fn get_sketch(r: &mut Reader) -> anyhow::Result<GumbelMaxSketch> {
         s.push(r.u64()?);
     }
     Ok(GumbelMaxSketch { family, seed, y, s })
+}
+
+fn put_target(out: &mut Vec<u8>, t: &QueryTarget) {
+    match t {
+        QueryTarget::Keys(keys) => {
+            out.push(0);
+            put_strs(out, keys);
+        }
+        QueryTarget::Stream(s) => {
+            out.push(1);
+            put_str(out, s);
+        }
+    }
+}
+
+fn get_target(r: &mut Reader) -> anyhow::Result<QueryTarget> {
+    Ok(match r.u8()? {
+        0 => QueryTarget::Keys(get_strs(r)?),
+        1 => QueryTarget::Stream(get_str(r)?),
+        other => anyhow::bail!("unknown query target tag {other}"),
+    })
 }
 
 fn source_tag(s: SketchSource) -> u8 {
@@ -684,6 +742,15 @@ mod tests {
             Request::StorePut { data: "NOT-HEX".into() },
             Request::StreamMerge { stream: "s".into(), data: hex },
             Request::TopK { vector: v, limit: 5 },
+            Request::Sample { target: QueryTarget::key("doc"), n: 8, seed: 7 },
+            Request::Sample {
+                target: QueryTarget::Keys(vec!["doc".into(), "βeta".into()]),
+                n: 3,
+                seed: u64::MAX,
+            },
+            Request::Sample { target: QueryTarget::Stream("pkts".into()), n: 1, seed: 0 },
+            Request::Partition { target: QueryTarget::Keys(vec!["a".into(), "b".into()]) },
+            Request::Partition { target: QueryTarget::Stream("pkts".into()) },
             Request::StoreStats,
             Request::Snapshot { path: "/tmp/fgm.snap".into() },
             Request::Restore { path: "/tmp/fgm.snap".into() },
@@ -734,6 +801,8 @@ mod tests {
             Response::SketchBlob { name: "weird".into(), data: "UPPER-case".into() },
             Response::Error { message: "nope".into() },
             Response::Pong,
+            Response::Samples { ids: vec![3, 17, 3, u64::MAX - 2] },
+            Response::Samples { ids: vec![] },
         ]
     }
 
@@ -858,6 +927,21 @@ mod tests {
             }
         }
         assert!(matches!(decode_frame(&buf).unwrap(), FrameStatus::Frame { .. }));
+    }
+
+    /// The binary wire carries raw f64 bits, so NaN/inf/negative weights
+    /// are trivially expressible — the framed decode must apply the same
+    /// ingress guard as the JSON path (they share `check_weights`).
+    #[test]
+    fn framed_vectors_reject_invalid_weights() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            let v = SparseVector { ids: vec![1, 2], weights: vec![0.5, bad] };
+            let mut body = Vec::new();
+            encode_request_body(&Request::TopK { vector: v, limit: 3 }, &mut body);
+            let err = decode_request_body(&body).unwrap_err().to_string();
+            assert!(err.contains("index 1"), "weight {bad}: {err}");
+            assert!(err.contains("non-negative finite"), "weight {bad}: {err}");
+        }
     }
 
     #[test]

@@ -29,12 +29,13 @@
 use super::batcher::{BatcherConfig, DenseBatcher};
 use super::merger::merge_tree;
 use super::metrics::Metrics;
-use super::protocol::{HelloInfo, Request, Response, SketchSource, PROTOCOL_VERSION};
+use super::protocol::{HelloInfo, QueryTarget, Request, Response, SketchSource, PROTOCOL_VERSION};
 use super::registry::Registry;
-use super::router::{Router, RouterConfig, SketchPlan, TopKPlan};
+use super::router::{QueryPlan, QueryShape, Router, RouterConfig, SketchPlan};
 use super::store::SketchStore;
 use crate::estimate::cardinality::{estimate_cardinality, estimate_weighted_jaccard};
 use crate::estimate::jaccard::estimate_jp;
+use crate::estimate::sample;
 use crate::lsh::{LshIndex, LshParams};
 use crate::sketch::engine::{self, EngineParams};
 use crate::sketch::{codec, AlgorithmId, GumbelMaxSketch, SketchScratch, Sketcher, SparseVector};
@@ -373,6 +374,33 @@ impl Node {
         Ok(())
     }
 
+    /// Resolve a query target to the sketch its estimator runs over — the
+    /// execute half of the plan/execute seam (every store-backed read is
+    /// routed by [`Router::plan_query`], so future access-path policies —
+    /// e.g. cached merges for hot key sets — land in the router, not
+    /// here). Key sets union-merge under the store's shard locks with no
+    /// register clones; stream targets read the live stream state.
+    fn read_query_target(&self, target: &QueryTarget) -> anyhow::Result<GumbelMaxSketch> {
+        let shape = match target {
+            QueryTarget::Keys(_) => QueryShape::Keys,
+            QueryTarget::Stream(_) => QueryShape::Stream,
+        };
+        match (self.router.plan_query(shape), target) {
+            (QueryPlan::MergeKeys, QueryTarget::Keys(keys)) => {
+                self.metrics.incr("path.query.merge_keys");
+                let (sk, _versions) = self.store.merge_keys(keys)?;
+                Ok(sk)
+            }
+            (QueryPlan::StreamSketch, QueryTarget::Stream(name)) => {
+                self.metrics.incr("path.query.stream");
+                self.registry
+                    .stream_sketch(name)
+                    .ok_or_else(|| anyhow::anyhow!("no stream named '{name}'"))
+            }
+            (plan, _) => anyhow::bail!("planner returned {plan:?} for {target:?}"),
+        }
+    }
+
     /// Refresh the store gauges. Sampled only when a `metrics` request is
     /// served (same policy as `queue_depth`): refreshing after every
     /// upsert/delete would re-scan every shard lock per mutation, purely
@@ -637,19 +665,35 @@ impl Node {
             Request::TopK { vector, limit } => {
                 self.ensure_lsh_capable()?;
                 let query = self.sketch_sparse(&vector, None, scratch)?;
-                let (hits, stats) = match self.router.plan_topk(self.store.len()) {
-                    TopKPlan::FullScan => {
+                let shape = QueryShape::Rank { store_len: self.store.len() };
+                let (hits, stats) = match self.router.plan_query(shape) {
+                    QueryPlan::FullScan => {
                         self.metrics.incr("path.topk.scan");
                         self.store.scan_topk(&query, limit)?
                     }
-                    TopKPlan::BandProbe => {
+                    QueryPlan::BandProbe => {
                         self.metrics.incr("path.topk.probe");
                         self.store.probe_topk(&query, limit)?
                     }
+                    plan => anyhow::bail!("planner returned {plan:?} for a ranking query"),
                 };
                 self.metrics.add("topk.candidates", stats.candidates as u64);
                 self.metrics.add("topk.reranked", stats.reranked as u64);
                 Response::TopK { hits }
+            }
+            Request::Sample { target, n, seed } => {
+                anyhow::ensure!(n >= 1, "sample needs n of at least 1");
+                let sk = self.read_query_target(&target)?;
+                let ids = sample::sample_n(&sk, n, seed)?;
+                self.metrics.incr("query.sample");
+                self.metrics.add("sample.draws", ids.len() as u64);
+                Response::Samples { ids }
+            }
+            Request::Partition { target } => {
+                let sk = self.read_query_target(&target)?;
+                let value = sample::total_weight(&sk)?;
+                self.metrics.incr("query.partition");
+                Response::Estimate { value }
             }
             Request::StoreStats => Response::Stats { stats: self.store.stats() },
             Request::Snapshot { path } => {
@@ -826,6 +870,75 @@ mod tests {
         let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
         assert!(message.contains("no stream sketch named 'nope'"), "{message}");
         n.shutdown();
+    }
+
+    /// The query engine's new ops: `sample`/`partition` resolve key-set
+    /// and stream targets through the plan/execute seam, reproduce by
+    /// seed, and match calling the estimators on the merged sketch
+    /// directly (the wire ops are thin shims over `estimate::sample`).
+    #[test]
+    fn sample_and_partition_serve_keys_and_streams() {
+        let nd = node();
+        let va = SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+        let vb = SparseVector::new(vec![3, 4], vec![1.5, 1.0]);
+        nd.execute_alloc(Request::Upsert { key: "a".into(), vector: va, version: None });
+        nd.execute_alloc(Request::Upsert { key: "b".into(), vector: vb, version: None });
+        let draw = |target: QueryTarget, count: usize, seed: u64| -> Vec<u64> {
+            match nd.execute_alloc(Request::Sample { target, n: count, seed }) {
+                Response::Samples { ids } => ids,
+                other => panic!("expected samples, got {other:?}"),
+            }
+        };
+        // Single-key sampling: seed-reproducible, ids from the vector.
+        let one = draw(QueryTarget::key("a"), 16, 7);
+        assert_eq!(one, draw(QueryTarget::key("a"), 16, 7));
+        assert!(one.iter().all(|id| [1, 2, 3].contains(id)));
+        // Key-set sampling equals sampling the §2.3 union directly.
+        let keys = vec!["a".to_string(), "b".to_string()];
+        let (merged, _) = nd.store.merge_keys(&keys).unwrap();
+        assert_eq!(
+            draw(QueryTarget::Keys(keys.clone()), 32, 11),
+            sample::sample_n(&merged, 32, 11).unwrap()
+        );
+        // Partition over the key set equals the estimator on the merge.
+        let Response::Estimate { value } =
+            nd.execute_alloc(Request::Partition { target: QueryTarget::Keys(keys) })
+        else {
+            panic!("expected estimate")
+        };
+        assert_eq!(value, sample::total_weight(&merged).unwrap());
+        assert!(value > 0.0 && value.is_finite());
+        // Stream targets read the live stream state.
+        nd.execute_alloc(Request::Push {
+            stream: "s".into(),
+            items: vec![(10, 1.0), (11, 2.0)],
+        });
+        let s = draw(QueryTarget::Stream("s".into()), 8, 3);
+        assert!(s.iter().all(|id| [10, 11].contains(id)));
+        assert!(matches!(
+            nd.execute_alloc(Request::Partition { target: QueryTarget::Stream("s".into()) }),
+            Response::Estimate { .. }
+        ));
+        // Unknown targets and a zero draw count are loud errors.
+        for (req, want) in [
+            (
+                Request::Sample { target: QueryTarget::key("ghost"), n: 4, seed: 0 },
+                "no store entry 'ghost'",
+            ),
+            (
+                Request::Sample { target: QueryTarget::Stream("ghost".into()), n: 4, seed: 0 },
+                "no stream named 'ghost'",
+            ),
+            (
+                Request::Sample { target: QueryTarget::key("a"), n: 0, seed: 0 },
+                "at least 1",
+            ),
+        ] {
+            let resp = nd.execute_alloc(req);
+            let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+            assert!(message.contains(want), "{message}");
+        }
+        nd.shutdown();
     }
 
     /// The anti-entropy surface end to end on one node: versioned upserts,

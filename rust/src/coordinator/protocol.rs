@@ -16,7 +16,14 @@ use crate::util::json::{self, Value};
 /// and assign its own version, corrupting last-writer-wins ordering —
 /// exactly the class of skew the bump exists to catch: the cluster
 /// handshake refuses to form across protocol versions, loudly.
-pub const PROTOCOL_VERSION: u64 = 2;
+///
+/// v3: the query-engine ops `sample` / `partition` and the `samples`
+/// response. New ops normally ride without a bump, but these are
+/// *scattered by cluster clients*: a mixed cluster where some nodes
+/// cannot serve sampling would fail per-query and per-replica instead of
+/// at connect. Advertising v3 in `hello` lets the handshake refuse the
+/// skew up front, same as v2 did for versioned writes.
+pub const PROTOCOL_VERSION: u64 = 3;
 
 /// Which server-side collection a `sketch_fetch` reads from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -46,6 +53,73 @@ impl SketchSource {
             other => anyhow::bail!(
                 "unknown sketch_fetch source '{other}' (known: store, registry, stream)"
             ),
+        })
+    }
+}
+
+/// What a query-engine op (`sample` / `partition`) reads its sketch from:
+/// one or more keyed-store entries (union-merged via §2.3 when several —
+/// exact, no raw-vector access) or a live stream state. On the wire this
+/// is the `key` | `keys` | `stream` field trio, exactly one present.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryTarget {
+    /// Keyed-store entries; two or more are merged into their exact union
+    /// sketch before the query runs.
+    Keys(Vec<String>),
+    /// A named Stream-FastGM state's current sketch.
+    Stream(String),
+}
+
+impl QueryTarget {
+    pub fn key(k: impl Into<String>) -> QueryTarget {
+        QueryTarget::Keys(vec![k.into()])
+    }
+
+    fn push_json(&self, fields: &mut Vec<(&str, Value)>) {
+        match self {
+            QueryTarget::Keys(keys) if keys.len() == 1 => {
+                fields.push(("key", Value::str(keys[0].clone())));
+            }
+            QueryTarget::Keys(keys) => fields.push((
+                "keys",
+                Value::Arr(keys.iter().map(|k| Value::str(k.clone())).collect()),
+            )),
+            QueryTarget::Stream(s) => fields.push(("stream", Value::str(s.clone()))),
+        }
+    }
+
+    fn from_json(v: &Value) -> anyhow::Result<QueryTarget> {
+        let (key, keys, stream) = (v.get("key"), v.get("keys"), v.get("stream"));
+        let present = [&key, &keys, &stream].iter().filter(|f| f.is_some()).count();
+        anyhow::ensure!(
+            present == 1,
+            "exactly one of 'key', 'keys', 'stream' must be given (got {present})"
+        );
+        Ok(if let Some(k) = key {
+            QueryTarget::Keys(vec![k
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("field 'key' not a string"))?
+                .to_string()])
+        } else if let Some(ks) = keys {
+            QueryTarget::Keys(
+                ks.as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("field 'keys' not an array"))?
+                    .iter()
+                    .map(|k| {
+                        k.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| anyhow::anyhow!("bad key in 'keys'"))
+                    })
+                    .collect::<anyhow::Result<_>>()?,
+            )
+        } else {
+            QueryTarget::Stream(
+                stream
+                    .unwrap()
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("field 'stream' not a string"))?
+                    .to_string(),
+            )
         })
     }
 }
@@ -120,6 +194,14 @@ pub enum Request {
     /// Top-`limit` most similar store entries to a fresh vector:
     /// band-probe + full-sketch re-rank (or a brute scan on small stores).
     TopK { vector: SparseVector, limit: usize },
+    /// Draw `n` element ids ∝ weight from the target's sketch (register-
+    /// as-sample; multiple keys sample the exact §2.3 union). `seed` makes
+    /// the draw reproducible: same `(state, n, seed)` → same ids on every
+    /// node and transport.
+    Sample { target: QueryTarget, n: usize, seed: u64 },
+    /// Estimate the target's total weight `Z = Σ w_i` (partition function)
+    /// from its `y` registers — `(k-1)/Σy`, Balog-style.
+    Partition { target: QueryTarget },
     /// Keyed-store statistics (size, shard occupancy, index shape).
     StoreStats,
     /// Freeze the keyed store to `path` in the versioned binary snapshot
@@ -155,6 +237,8 @@ pub enum Response {
     /// One codec-encoded sketch (`sketch_fetch`'s reply); `data` is the hex
     /// blob [`crate::sketch::codec::decode_sketch_hex`] reads.
     SketchBlob { name: String, data: String },
+    /// The drawn element ids (`sample`'s reply), in draw order.
+    Samples { ids: Vec<u64> },
     Error { message: String },
     Pong,
 }
@@ -182,7 +266,22 @@ fn vector_from_json(v: &Value) -> anyhow::Result<SparseVector> {
         .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("bad weight")))
         .collect::<anyhow::Result<Vec<_>>>()?;
     anyhow::ensure!(ids.len() == weights.len(), "ids/weights length mismatch");
+    check_weights(&weights)?;
     Ok(SparseVector::new(ids, weights))
+}
+
+/// Ingress guard shared with the framed decode path: Gumbel-Max races are
+/// only defined for non-negative finite weights — a NaN/±inf/negative
+/// entry would silently poison every register it touches, so reject it
+/// loudly at the wire, naming the offending index.
+pub(crate) fn check_weights(weights: &[f64]) -> anyhow::Result<()> {
+    for (i, &w) in weights.iter().enumerate() {
+        anyhow::ensure!(
+            w.is_finite() && w >= 0.0,
+            "vector weight at index {i} is {w}: Gumbel-Max requires non-negative finite weights"
+        );
+    }
+    Ok(())
 }
 
 impl Request {
@@ -291,6 +390,18 @@ impl Request {
                 ("vector", vector_to_json(vector)),
                 ("limit", Value::num(*limit as f64)),
             ]),
+            Request::Sample { target, n, seed } => {
+                let mut fields = vec![("op", Value::str("sample"))];
+                target.push_json(&mut fields);
+                fields.push(("n", Value::num(*n as f64)));
+                fields.push(("seed", Value::u64(*seed)));
+                Value::obj(fields)
+            }
+            Request::Partition { target } => {
+                let mut fields = vec![("op", Value::str("partition"))];
+                target.push_json(&mut fields);
+                Value::obj(fields)
+            }
             Request::StoreStats => Value::obj(vec![("op", Value::str("store_stats"))]),
             Request::Snapshot { path } => Value::obj(vec![
                 ("op", Value::str("snapshot")),
@@ -416,6 +527,15 @@ impl Request {
                 vector: vector_from_json(v.req("vector")?)?,
                 limit: v.req_usize("limit")?,
             },
+            "sample" => Request::Sample {
+                target: QueryTarget::from_json(v)?,
+                n: v.req_usize("n")?,
+                seed: v
+                    .req("seed")?
+                    .as_u64_lossless()
+                    .ok_or_else(|| anyhow::anyhow!("field 'seed' not a u64"))?,
+            },
+            "partition" => Request::Partition { target: QueryTarget::from_json(v)? },
             "store_stats" => Request::StoreStats,
             "snapshot" => Request::Snapshot { path: v.req_str("path")?.to_string() },
             "restore" => Request::Restore { path: v.req_str("path")?.to_string() },
@@ -457,6 +577,8 @@ impl Request {
             Request::StorePut { .. } => "store_put",
             Request::StreamMerge { .. } => "stream_merge",
             Request::TopK { .. } => "topk",
+            Request::Sample { .. } => "sample",
+            Request::Partition { .. } => "partition",
             Request::StoreStats => "store_stats",
             Request::Snapshot { .. } => "snapshot",
             Request::Restore { .. } => "restore",
@@ -544,6 +666,12 @@ impl Response {
                 ("type", Value::str("sketch_blob")),
                 ("name", Value::str(name.clone())),
                 ("data", Value::str(data.clone())),
+            ]),
+            Response::Samples { ids } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("samples")),
+                // arr_u64 keeps >2^53 element ids lossless (string form).
+                ("ids", Value::arr_u64(ids)),
             ]),
             Response::Error { message } => Value::obj(vec![
                 ("ok", Value::Bool(false)),
@@ -639,6 +767,17 @@ impl Response {
                 name: v.req_str("name")?.to_string(),
                 data: v.req_str("data")?.to_string(),
             },
+            "samples" => Response::Samples {
+                ids: v
+                    .req("ids")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("ids not an array"))?
+                    .iter()
+                    .map(|x| {
+                        x.as_u64_lossless().ok_or_else(|| anyhow::anyhow!("bad sample id"))
+                    })
+                    .collect::<anyhow::Result<_>>()?,
+            },
             "error" => Response::Error { message: v.req_str("message")?.to_string() },
             "pong" => Response::Pong,
             other => anyhow::bail!("unknown response type '{other}'"),
@@ -710,6 +849,22 @@ mod tests {
         roundtrip_req(Request::StorePut { data: "46474d53".into() });
         roundtrip_req(Request::StreamMerge { stream: "s".into(), data: "46474d53".into() });
         roundtrip_req(Request::TopK { vector: v, limit: 5 });
+        roundtrip_req(Request::Sample { target: QueryTarget::key("doc1"), n: 8, seed: 7 });
+        roundtrip_req(Request::Sample {
+            target: QueryTarget::Keys(vec!["doc1".into(), "doc2".into()]),
+            n: 3,
+            seed: u64::MAX, // lossless through the string path
+        });
+        roundtrip_req(Request::Sample {
+            target: QueryTarget::Stream("pkts".into()),
+            n: 1,
+            seed: 0,
+        });
+        roundtrip_req(Request::Partition { target: QueryTarget::key("doc1") });
+        roundtrip_req(Request::Partition {
+            target: QueryTarget::Keys(vec!["a".into(), "b".into()]),
+        });
+        roundtrip_req(Request::Partition { target: QueryTarget::Stream("pkts".into()) });
         roundtrip_req(Request::StoreStats);
         roundtrip_req(Request::Snapshot { path: "/tmp/fgm.snap".into() });
         roundtrip_req(Request::Restore { path: "/tmp/fgm.snap".into() });
@@ -753,6 +908,8 @@ mod tests {
             },
         });
         roundtrip_resp(Response::SketchBlob { name: "doc1".into(), data: "46474d53".into() });
+        roundtrip_resp(Response::Samples { ids: vec![3, 17, 3, u64::MAX - 2] });
+        roundtrip_resp(Response::Samples { ids: vec![] });
         roundtrip_resp(Response::Pong);
     }
 
@@ -784,13 +941,13 @@ mod tests {
 
     #[test]
     fn hello_reply_requires_its_fields() {
-        assert!(decode_response(r#"{"ok":true,"type":"hello","protocol":2}"#).is_err());
+        assert!(decode_response(r#"{"ok":true,"type":"hello","protocol":3}"#).is_err());
         assert!(decode_response(
-            r#"{"ok":true,"type":"hello","protocol":2,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":"fastgm"}"#
+            r#"{"ok":true,"type":"hello","protocol":3,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":"fastgm"}"#
         )
         .is_err(), "algos must be an array");
         let ok = decode_response(
-            r#"{"ok":true,"type":"hello","protocol":2,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
+            r#"{"ok":true,"type":"hello","protocol":3,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
         )
         .unwrap();
         let Response::Hello { info } = ok else { panic!("expected hello") };
@@ -876,5 +1033,71 @@ mod tests {
             r#"{"op":"sketch","name":"d","vector":{"ids":[],"weights":[]},"algo":7}"#
         )
         .is_err());
+    }
+
+    /// Gumbel-Max is undefined for negative/NaN/inf weights — the ingress
+    /// decode must reject them loudly, naming the offending index, on
+    /// every vector-carrying op (they all share `vector_from_json`).
+    #[test]
+    fn vector_decode_rejects_non_finite_and_negative_weights() {
+        for op in ["sketch\",\"name\":\"d", "upsert\",\"key\":\"d", "topk\",\"limit\":3"] {
+            let line =
+                format!(r#"{{"op":"{op}","vector":{{"ids":[1,2],"weights":[0.5,-1.0]}}}}"#);
+            let err = decode_request(&line).unwrap_err().to_string();
+            assert!(err.contains("index 1"), "for {line}: {err}");
+            assert!(err.contains("non-negative finite"), "{err}");
+        }
+        // lsh_query shares the same decode.
+        assert!(decode_request(
+            r#"{"op":"lsh_query","vector":{"ids":[9],"weights":[-0.25]},"limit":1}"#
+        )
+        .is_err());
+        // Zero weights stay legal (sketchers filter them; replicated
+        // writers send them today).
+        assert!(decode_request(
+            r#"{"op":"upsert","key":"d","vector":{"ids":[1],"weights":[0]}}"#
+        )
+        .is_ok());
+        // The guard itself also stops NaN/inf (reachable via the framed
+        // decode path, which carries raw f64 bits).
+        assert!(check_weights(&[1.0, f64::NAN]).is_err());
+        assert!(check_weights(&[f64::INFINITY]).is_err());
+        assert!(check_weights(&[f64::NEG_INFINITY]).is_err());
+        assert!(check_weights(&[0.0, 1.5]).is_ok());
+    }
+
+    #[test]
+    fn sample_and_partition_targets_are_exactly_one_of_key_keys_stream() {
+        // The single-key convenience form.
+        let one = decode_request(r#"{"op":"sample","key":"a","n":4,"seed":9}"#).unwrap();
+        assert_eq!(
+            one,
+            Request::Sample { target: QueryTarget::key("a"), n: 4, seed: 9 }
+        );
+        // Multi-key union and stream forms.
+        let many =
+            decode_request(r#"{"op":"partition","keys":["a","b"]}"#).unwrap();
+        assert_eq!(
+            many,
+            Request::Partition { target: QueryTarget::Keys(vec!["a".into(), "b".into()]) }
+        );
+        let stream =
+            decode_request(r#"{"op":"sample","stream":"pkts","n":1,"seed":0}"#).unwrap();
+        assert!(matches!(
+            stream,
+            Request::Sample { target: QueryTarget::Stream(_), .. }
+        ));
+        // Zero or two target fields are loud errors.
+        assert!(decode_request(r#"{"op":"sample","n":1,"seed":0}"#).is_err());
+        assert!(decode_request(
+            r#"{"op":"sample","key":"a","stream":"s","n":1,"seed":0}"#
+        )
+        .is_err());
+        assert!(decode_request(r#"{"op":"partition"}"#).is_err());
+        // n and seed are required on sample; bad shapes rejected.
+        assert!(decode_request(r#"{"op":"sample","key":"a","seed":0}"#).is_err());
+        assert!(decode_request(r#"{"op":"sample","key":"a","n":1}"#).is_err());
+        assert!(decode_request(r#"{"op":"sample","keys":"a","n":1,"seed":0}"#).is_err());
+        assert!(decode_request(r#"{"op":"sample","key":7,"n":1,"seed":0}"#).is_err());
     }
 }

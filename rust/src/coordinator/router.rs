@@ -27,14 +27,37 @@ pub enum SketchPlan {
     ShardedFastGm,
 }
 
-/// Execution plan for a keyed-store `topk` request.
+/// What a store-backed query op reads — the router's planning input
+/// (normalized from the wire ops by the node's query engine).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum TopKPlan {
+pub enum QueryShape {
+    /// Similarity ranking of a probe vector against the whole keyed store
+    /// (currently `store_len` entries) — `topk`.
+    Rank { store_len: usize },
+    /// An explicit key set, union-merged into one sketch (§2.3) —
+    /// `sample`/`partition` over `key`/`keys`.
+    Keys,
+    /// A live stream state's current sketch — `sample`/`partition` over
+    /// `stream`.
+    Stream,
+}
+
+/// Execution plan for a store-backed query — the single plan/execute seam
+/// `topk`, `sample`, `partition` and future query ops flow through
+/// (the node's query engine executes the plan, then applies the op's
+/// estimator to what it read).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryPlan {
     /// Score every stored entry (exact; wins while the store is small —
     /// banding overhead plus imperfect recall buy nothing at that size).
     FullScan,
     /// Banded LSH candidate probe, then full-sketch re-rank (sub-linear).
     BandProbe,
+    /// Union-merge the named keys' registers under the shard locks (no
+    /// register clones on the hot path), then estimate on the merge.
+    MergeKeys,
+    /// Read the named live stream state's current sketch.
+    StreamSketch,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -89,13 +112,28 @@ impl Router {
         }
     }
 
-    /// Plan a keyed-store `topk` request from the current store size.
-    pub fn plan_topk(&self, store_len: usize) -> TopKPlan {
-        if store_len <= self.cfg.topk_scan_max {
-            TopKPlan::FullScan
-        } else {
-            TopKPlan::BandProbe
+    /// Plan a store-backed query. Ranking queries pick scan-vs-probe by
+    /// store size (the old `topk` routing, unchanged); key-set and stream
+    /// queries have one access path each today — routed here anyway so
+    /// every query op shares the seam (and future policies, e.g. cached
+    /// merges for hot key sets, land in one place).
+    pub fn plan_query(&self, shape: QueryShape) -> QueryPlan {
+        match shape {
+            QueryShape::Rank { store_len } => {
+                if store_len <= self.cfg.topk_scan_max {
+                    QueryPlan::FullScan
+                } else {
+                    QueryPlan::BandProbe
+                }
+            }
+            QueryShape::Keys => QueryPlan::MergeKeys,
+            QueryShape::Stream => QueryPlan::StreamSketch,
         }
+    }
+
+    /// Plan a keyed-store `topk` request from the current store size.
+    pub fn plan_topk(&self, store_len: usize) -> QueryPlan {
+        self.plan_query(QueryShape::Rank { store_len })
     }
 
     /// Route an explicitly dense request (weights indexed 0..len).
@@ -206,14 +244,23 @@ mod tests {
     #[test]
     fn topk_plans_by_store_size() {
         let r = Router::new(RouterConfig { topk_scan_max: 64, ..RouterConfig::default() });
-        assert_eq!(r.plan_topk(0), TopKPlan::FullScan);
-        assert_eq!(r.plan_topk(64), TopKPlan::FullScan);
-        assert_eq!(r.plan_topk(65), TopKPlan::BandProbe);
-        assert_eq!(r.plan_topk(1_000_000), TopKPlan::BandProbe);
+        assert_eq!(r.plan_topk(0), QueryPlan::FullScan);
+        assert_eq!(r.plan_topk(64), QueryPlan::FullScan);
+        assert_eq!(r.plan_topk(65), QueryPlan::BandProbe);
+        assert_eq!(r.plan_topk(1_000_000), QueryPlan::BandProbe);
         // scan_max = 0 probes everything non-empty.
         let always = Router::new(RouterConfig { topk_scan_max: 0, ..RouterConfig::default() });
-        assert_eq!(always.plan_topk(1), TopKPlan::BandProbe);
-        assert_eq!(always.plan_topk(0), TopKPlan::FullScan);
+        assert_eq!(always.plan_topk(1), QueryPlan::BandProbe);
+        assert_eq!(always.plan_topk(0), QueryPlan::FullScan);
+    }
+
+    #[test]
+    fn every_query_shape_plans_through_the_one_seam() {
+        let r = Router::new(RouterConfig { topk_scan_max: 2, ..RouterConfig::default() });
+        assert_eq!(r.plan_query(QueryShape::Rank { store_len: 1 }), QueryPlan::FullScan);
+        assert_eq!(r.plan_query(QueryShape::Rank { store_len: 3 }), QueryPlan::BandProbe);
+        assert_eq!(r.plan_query(QueryShape::Keys), QueryPlan::MergeKeys);
+        assert_eq!(r.plan_query(QueryShape::Stream), QueryPlan::StreamSketch);
     }
 
     #[test]

@@ -300,6 +300,45 @@ impl SketchStore {
         Ok((Self::rank(scored, limit), stats))
     }
 
+    /// Union-merge the named keys' sketches (§2.3) for the key-set query
+    /// ops (`sample`/`partition`): keys are grouped by shard, each shard
+    /// lock is taken once, and every held sketch is merged in place into
+    /// one accumulator — no register clones on the read path (the
+    /// accumulator starts empty; `EMPTY_REGISTER` races lose every
+    /// register, so the first merge is a plain copy). Returns the merged
+    /// sketch plus each key's write version in **input order** (what a
+    /// cluster client compares replica copies by). A missing key is a loud
+    /// error: estimating over a silently shrunken union would bias the
+    /// sample distribution instead of failing the query.
+    pub fn merge_keys(&self, keys: &[String]) -> anyhow::Result<(GumbelMaxSketch, Vec<u64>)> {
+        anyhow::ensure!(!keys.is_empty(), "merge_keys needs at least one key");
+        let _gate = self.gate.read().expect("store gate");
+        let mut by_shard: Vec<Vec<usize>> = vec![Vec::new(); self.shards.len()];
+        for (i, key) in keys.iter().enumerate() {
+            by_shard[self.shard_of(key)].push(i);
+        }
+        let mut versions = vec![0u64; keys.len()];
+        let mut acc: Option<GumbelMaxSketch> = None;
+        for (idx, members) in by_shard.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let shard = self.shards[idx].read().expect("store shard lock");
+            for &i in members {
+                let key = &keys[i];
+                let v = shard
+                    .get(key)
+                    .ok_or_else(|| anyhow::anyhow!("no store entry '{key}'"))?;
+                versions[i] = v.version;
+                acc.get_or_insert_with(|| {
+                    GumbelMaxSketch::empty(v.sketch.family, v.sketch.seed, v.sketch.k())
+                })
+                .merge_in_place(&v.sketch)?;
+            }
+        }
+        Ok((acc.expect("non-empty keys imply an accumulator"), versions))
+    }
+
     /// Top-`limit` by scoring every stored entry (exact, linear).
     pub fn scan_topk(
         &self,
@@ -558,6 +597,36 @@ mod tests {
             "probe should be sub-linear: {probe_stats:?}"
         );
         assert_eq!(probe_stats.reranked, probe_stats.candidates);
+    }
+
+    /// `merge_keys` must equal merging the individually fetched sketches
+    /// (§2.3 union), report versions in input order, and refuse missing
+    /// keys instead of estimating over a silently shrunken union.
+    #[test]
+    fn merge_keys_is_the_union_with_versions_in_input_order() {
+        let st = store();
+        let f = sketcher();
+        let va = SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+        let vb = SparseVector::new(vec![3, 4], vec![1.5, 1.0]);
+        st.upsert("a", f.sketch(&va));
+        st.upsert("b", f.sketch(&vb));
+        st.upsert("b", f.sketch(&vb)); // bump b to v2
+        let keys = vec!["b".to_string(), "a".to_string()];
+        let (merged, versions) = st.merge_keys(&keys).unwrap();
+        assert_eq!(versions, vec![2, 1], "versions follow input order");
+        let want = st.get("a").unwrap().merge(&st.get("b").unwrap()).unwrap();
+        assert_eq!(merged, want);
+        // A single key is just that key's sketch.
+        let (single, versions) = st.merge_keys(&["a".to_string()]).unwrap();
+        assert_eq!(single, st.get("a").unwrap());
+        assert_eq!(versions, vec![1]);
+        // Duplicate keys are idempotent under union semantics.
+        let (dup, _) = st.merge_keys(&["a".to_string(), "a".to_string()]).unwrap();
+        assert_eq!(dup, st.get("a").unwrap());
+        // Missing keys and empty key sets fail loudly.
+        let err = st.merge_keys(&["ghost".to_string()]).unwrap_err().to_string();
+        assert!(err.contains("no store entry 'ghost'"), "{err}");
+        assert!(st.merge_keys(&[]).is_err());
     }
 
     #[test]

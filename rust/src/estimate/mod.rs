@@ -1,8 +1,11 @@
 //! Estimators over Gumbel-Max sketches: probability/weighted Jaccard
 //! similarity ([`jaccard`]), weighted cardinality and the mergeable set
-//! algebra of Lemiesz ([`cardinality`]), and an RMSE experiment runner
-//! ([`error`]) used by the Fig. 6/7 reproductions.
+//! algebra of Lemiesz ([`cardinality`]), weighted sampling and
+//! partition-function estimation ([`sample`] — the Gumbel-Max Trick's
+//! native workload), and an RMSE experiment runner ([`error`]) used by
+//! the Fig. 6/7 reproductions.
 
 pub mod jaccard;
 pub mod cardinality;
+pub mod sample;
 pub mod error;

@@ -1,0 +1,258 @@
+//! Weighted sampling and partition-function estimation from Gumbel-Max
+//! sketches — the Gumbel-Max Trick's *native* application, served from the
+//! registers the store already holds.
+//!
+//! **Register-as-sample.** Each register `j` of a Gumbel-Max sketch races
+//! every element `i` with an independent `EXP(w_i)` arrival; the winner
+//! `s_j = argmin_i -ln(a_ij)/w_i` is therefore an exact weighted sample,
+//! `P[s_j = i] = w_i / Σw` (the Gumbel-Max Trick, one register = one
+//! draw). So sampling an element ∝ weight from a *stored* sketch costs one
+//! uniform draw over the k registers — no access to the original vector —
+//! and repeated queries amortize to O(1) each, the regime Mussmann et al.
+//! (arxiv 1707.03372) motivate. Registers are mutually independent, but a
+//! sketch holds only k of them: more than k draws necessarily revisit
+//! registers, so distinct-sample diversity saturates at k (pick k ≥ the
+//! needed distinct-draw budget).
+//!
+//! **Union sampling.** §2.3 merging keeps, per register, the globally
+//! smallest race value — the merged sketch *is* the sketch of the
+//! concatenated vector, bit for bit. Sampling from a merge therefore
+//! samples from the exact union distribution, which is what lets the
+//! store/cluster layers sample across keys without touching raw vectors.
+//!
+//! **Partition function.** The same registers' `y_j ~ EXP(Z)` for
+//! `Z = Σ_i w_i` (the log-linear partition function when `w_i = exp φ_i`),
+//! so `Ẑ = (k-1)/Σ_j y_j` is the minimum-variance unbiased estimator of
+//! `Z` with relative standard deviation `≈ sqrt(2/k)` — one member of the
+//! Gumbel-trick estimator family of Balog et al. (arxiv 1706.04161).
+//! `ln Ẑ` estimates the log-partition-function with an `O(1/k)` Jensen
+//! bias (the log of an unbiased estimate is not unbiased); at serving k
+//! (≥ 256) the bias is far below the sampling noise and we document it
+//! rather than correct it.
+//!
+//! Family discipline matches the cardinality algebra: only families whose
+//! `y` registers are true `EXP(Σw)` races (Ordered / Direct) support any
+//! of this; ICWS / BagMinHash / MinHash sketches are rejected loudly.
+
+use crate::sketch::{GumbelMaxSketch, MergeError, EMPTY_REGISTER};
+use crate::util::rng::SplitMix64;
+
+use super::cardinality::estimate_cardinality;
+
+/// Why a sampling request could not be served from a sketch.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SampleError {
+    /// Family gate / merge incompatibility (wraps the estimator algebra's
+    /// error so cluster gathers surface one error type).
+    #[error(transparent)]
+    Merge(#[from] MergeError),
+    /// Every register is [`EMPTY_REGISTER`]: the sketch of an empty vector
+    /// (or an empty union) carries no samples to draw.
+    #[error("cannot sample from an empty sketch (no occupied registers)")]
+    EmptySketch,
+}
+
+/// The shared family gate: register-as-sample and the partition estimators
+/// both require `y_j ~ EXP(Σw)` races (see module docs).
+fn gate(sk: &GumbelMaxSketch, estimator: &'static str) -> Result<(), MergeError> {
+    if !sk.family.has_exponential_registers() {
+        return Err(MergeError::EstimatorUnsupported {
+            estimator,
+            family: sk.family.name(),
+            hint: "register-as-sample needs EXP-register families (ordered/direct)",
+        });
+    }
+    Ok(())
+}
+
+/// The occupied ArgMax registers of `sk` — each one an independent exact
+/// weighted sample. Exposed so callers that sample repeatedly can collect
+/// once and draw many times (the amortized serving path).
+pub fn occupied_registers(sk: &GumbelMaxSketch) -> Vec<u64> {
+    sk.s.iter().copied().filter(|&s| s != EMPTY_REGISTER).collect()
+}
+
+/// Draw one element id ∝ weight from `sk` using `rng` (one uniform draw
+/// over the occupied registers).
+pub fn sample_one(sk: &GumbelMaxSketch, rng: &mut SplitMix64) -> Result<u64, SampleError> {
+    gate(sk, "sample")?;
+    let ids = occupied_registers(sk);
+    if ids.is_empty() {
+        return Err(SampleError::EmptySketch);
+    }
+    Ok(ids[rng.next_range(0, ids.len() - 1)])
+}
+
+/// Draw `n` element ids ∝ weight from `sk`, reproducibly: the same
+/// `(sketch, n, seed)` always yields the same ids, on every node and
+/// transport (the wire ops are thin shims over this function). Draws are
+/// with replacement over the k registers — see the module note on
+/// distinct-sample saturation.
+pub fn sample_n(sk: &GumbelMaxSketch, n: usize, seed: u64) -> Result<Vec<u64>, SampleError> {
+    gate(sk, "sample")?;
+    let ids = occupied_registers(sk);
+    if ids.is_empty() {
+        return Err(SampleError::EmptySketch);
+    }
+    let mut rng = SplitMix64::new(seed);
+    Ok((0..n).map(|_| ids[rng.next_range(0, ids.len() - 1)]).collect())
+}
+
+/// Sample `n` ids from the **union** of the given sketches (§2.3 merge,
+/// then [`sample_n`]): bit-identical to sampling the sketch of the
+/// concatenated vector. Zero sketches is [`MergeError::EmptyMerge`].
+pub fn sample_union(
+    sketches: &[&GumbelMaxSketch],
+    n: usize,
+    seed: u64,
+) -> Result<Vec<u64>, SampleError> {
+    let merged = GumbelMaxSketch::merge_all(sketches.iter().copied())?;
+    sample_n(&merged, n, seed)
+}
+
+/// `Ẑ = (k-1)/Σ y_j`: unbiased estimate of the total weight (partition
+/// function) `Z = Σ_i w_i` of the sketched vector. Relative std
+/// ≈ [`partition_rel_std`]. Returns 0 for an empty sketch.
+pub fn total_weight(sk: &GumbelMaxSketch) -> Result<f64, MergeError> {
+    gate(sk, "partition")?;
+    Ok(estimate_cardinality(sk))
+}
+
+/// `ln Ẑ`: the log-partition-function estimate (`-∞` for an empty
+/// sketch). Carries the `O(1/k)` Jensen bias documented in the module
+/// docs — prefer comparing `log_partition` *differences* (log-odds),
+/// where the bias cancels to first order.
+pub fn log_partition(sk: &GumbelMaxSketch) -> Result<f64, MergeError> {
+    Ok(total_weight(sk)?.ln())
+}
+
+/// Theoretical relative standard deviation of [`total_weight`]
+/// (`Σy ~ Γ(k, Z)` ⇒ `Var(Ẑ/Z) ≈ 2/k`, same algebra as Theorem 2).
+pub fn partition_rel_std(k: usize) -> f64 {
+    (2.0 / k as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::engine::{build, AlgorithmId, EngineParams};
+    use crate::sketch::fastgm::FastGm;
+    use crate::sketch::{Family, Sketcher, SparseVector};
+    use crate::util::stats::OnlineStats;
+
+    fn vocab(n: usize) -> SparseVector {
+        // Zipf-flavored weights so frequencies are genuinely non-uniform.
+        SparseVector::new(
+            (0..n as u64).collect(),
+            (0..n).map(|i| 1.0 / (i + 1) as f64).collect(),
+        )
+    }
+
+    #[test]
+    fn sampling_rejects_non_exponential_families() {
+        let v = SparseVector::new(vec![1, 2], vec![1.0, 2.0]);
+        for id in [AlgorithmId::Icws, AlgorithmId::BagMinHash, AlgorithmId::MinHash] {
+            let sk = build(id, EngineParams::new(16, 1)).sketch(&v);
+            let err = sample_n(&sk, 4, 0).unwrap_err();
+            assert!(
+                matches!(err, SampleError::Merge(MergeError::EstimatorUnsupported { .. })),
+                "{id:?}: {err}"
+            );
+            assert!(matches!(
+                total_weight(&sk),
+                Err(MergeError::EstimatorUnsupported { .. })
+            ));
+        }
+    }
+
+    #[test]
+    fn empty_sketch_is_a_typed_error_and_zero_weight() {
+        let empty = GumbelMaxSketch::empty(Family::Ordered, 7, 16);
+        assert_eq!(sample_n(&empty, 3, 0).unwrap_err(), SampleError::EmptySketch);
+        let mut rng = SplitMix64::new(0);
+        assert_eq!(sample_one(&empty, &mut rng).unwrap_err(), SampleError::EmptySketch);
+        assert_eq!(total_weight(&empty).unwrap(), 0.0);
+        assert_eq!(log_partition(&empty).unwrap(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn sampling_is_seed_reproducible_and_seed_sensitive() {
+        let sk = FastGm::new(64, 42).sketch(&vocab(100));
+        let a = sample_n(&sk, 32, 7).unwrap();
+        let b = sample_n(&sk, 32, 7).unwrap();
+        assert_eq!(a, b);
+        let c = sample_n(&sk, 32, 8).unwrap();
+        assert_ne!(a, c); // 32 draws colliding across seeds: ~impossible
+        // Every sample is a real element of the vector.
+        assert!(a.iter().all(|id| *id < 100));
+    }
+
+    #[test]
+    fn sample_frequencies_track_weights() {
+        // With k registers and heavy-head Zipf weights, the head element
+        // (weight share ~19% at n=50) must dominate the samples.
+        let v = vocab(50);
+        let total: f64 = v.total_weight();
+        let sk = FastGm::new(4096, 1).sketch(&v);
+        let samples = sample_n(&sk, 20_000, 99).unwrap();
+        let head = samples.iter().filter(|&&id| id == 0).count() as f64
+            / samples.len() as f64;
+        let expect = 1.0 / total;
+        assert!(
+            (head - expect).abs() < 0.04,
+            "head frequency {head} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn union_sampling_is_bit_identical_to_concatenated_sketch() {
+        let a = SparseVector::new((0..300).collect(), vec![1.0; 300]);
+        let b = SparseVector::new((200..500).collect(), vec![1.0; 300]);
+        let mut cat = a.clone();
+        for (id, w) in b.positive() {
+            cat.push(id, w);
+        }
+        let f = FastGm::new(128, 3);
+        let (sa, sb, scat) = (f.sketch(&a), f.sketch(&b), f.sketch(&cat));
+        // Duplicate ids keep max weight under union semantics; here all
+        // weights are 1.0 so concat == union element-wise and the merged
+        // sketch equals the concatenated sketch register for register.
+        let merged = sa.merge(&sb).unwrap();
+        assert_eq!(merged, scat);
+        assert_eq!(
+            sample_union(&[&sa, &sb], 64, 11).unwrap(),
+            sample_n(&scat, 64, 11).unwrap()
+        );
+    }
+
+    #[test]
+    fn union_of_nothing_is_empty_merge() {
+        assert_eq!(
+            sample_union(&[], 4, 0).unwrap_err(),
+            SampleError::Merge(MergeError::EmptyMerge)
+        );
+    }
+
+    #[test]
+    fn total_weight_is_unbiased_within_theory() {
+        let v = vocab(200);
+        let truth = v.total_weight();
+        let k = 128;
+        let mut stats = OnlineStats::new();
+        for seed in 0..120u64 {
+            stats.push(total_weight(&FastGm::new(k, seed).sketch(&v)).unwrap());
+        }
+        let rel_err = (stats.mean() - truth).abs() / truth;
+        assert!(rel_err < 0.03, "mean={} truth={truth}", stats.mean());
+        let rel_std = stats.std() / truth;
+        let theo = partition_rel_std(k);
+        assert!(rel_std < 1.5 * theo && rel_std > theo / 1.5, "rel_std={rel_std} theo={theo}");
+    }
+
+    #[test]
+    fn log_partition_is_ln_of_total_weight() {
+        let sk = FastGm::new(256, 5).sketch(&vocab(64));
+        let z = total_weight(&sk).unwrap();
+        assert!((log_partition(&sk).unwrap() - z.ln()).abs() < 1e-12);
+    }
+}

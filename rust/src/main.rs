@@ -5,6 +5,8 @@
 //! fastgm client   [--addr host:port] (--ping | --metrics | --json '{...}')
 //! fastgm store    [--addr host:port] (--upsert KEY --vec "id:w,..." | --delete KEY | --stats)
 //! fastgm topk     [--addr host:port] --vec "id:w,..." [--limit N]
+//! fastgm sample   [--addr host:port] (--key K | --keys K1,K2,... | --stream S) [--n N] [--seed S]
+//! fastgm partition [--addr host:port] (--key K | --keys K1,K2,... | --stream S)
 //! fastgm snapshot [--addr host:port] (--save PATH | --restore PATH)
 //! fastgm cluster  serve  [--nodes N] [--host H] [--base-port P] [--config cfg] [--set k=v ...]
 //! fastgm cluster  info   --addrs a:p,b:p,... [--replication R] [--write-quorum W] [--io-timeout S] [--framed]
@@ -13,6 +15,8 @@
 //! fastgm cluster  topk   --addrs ... --vec "id:w,..." [--limit N] [--replication R]
 //! fastgm cluster  get    --addrs ... --key K [--replication R]
 //! fastgm cluster  push   --addrs ... --stream S --items "id:w,..." [--replication R] [--write-quorum W]
+//! fastgm cluster  sample --addrs ... (--key K | --keys K1,... | --stream S) [--n N] [--seed S] [--replication R]
+//! fastgm cluster  partition --addrs ... (--key K | --keys K1,... | --stream S) [--replication R]
 //! fastgm cluster  card   --addrs ... --stream S
 //! fastgm cluster  repair --addrs ... [--streams S1,S2] [--replication R]
 //! fastgm sketch   [--dataset NAME|path:FILE|synthetic] [--k K] [--algo A] [--count N]
@@ -28,7 +32,7 @@ use fastgm::coordinator::client::Client;
 use fastgm::coordinator::cluster::{ClusterClient, LocalCluster, ReplicaConfig};
 #[cfg(unix)]
 use fastgm::coordinator::event_server::EventServer;
-use fastgm::coordinator::protocol::{decode_request, encode_line, Request};
+use fastgm::coordinator::protocol::{decode_request, encode_line, QueryTarget, Request};
 use fastgm::coordinator::server::Server;
 use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
 use fastgm::data::corpus::{Corpus, CORPORA};
@@ -67,6 +71,8 @@ fn dispatch(argv: &[String]) -> anyhow::Result<()> {
         "client" => cmd_client(rest),
         "store" => cmd_store(rest),
         "topk" => cmd_topk(rest),
+        "sample" => cmd_sample(rest),
+        "partition" => cmd_partition(rest),
         "snapshot" => cmd_snapshot(rest),
         "cluster" => cmd_cluster(rest),
         "sketch" => cmd_sketch(rest),
@@ -89,6 +95,8 @@ fn top_help() -> String {
        client    talk to a running coordinator\n\
        store     upsert/delete keys in the server's similarity store\n\
        topk      top-k similarity query against the server's store\n\
+       sample    draw weighted samples from a key, key union or stream\n\
+       partition sum-of-weights estimate for a key, key union or stream\n\
        snapshot  save/restore the server's store (binary snapshot)\n\
        cluster   run/drive an N-node replicated cluster (scatter-gather)\n\
        sketch    sketch a dataset locally and report timing\n\
@@ -232,6 +240,62 @@ fn cmd_topk(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The query-target trio every sampling op shares: exactly one of a single
+/// key, a comma-separated key union, or a stream.
+fn target_spec(spec: ArgSpec) -> ArgSpec {
+    spec.opt("key", "", "single store key")
+        .opt("keys", "", "comma-separated store keys (queried as their union)")
+        .opt("stream", "", "stream name")
+}
+
+fn parse_target(args: &fastgm::util::argparse::Args) -> anyhow::Result<QueryTarget> {
+    let (key, keys, stream) = (args.str("key"), args.str("keys"), args.str("stream"));
+    match (key.is_empty(), keys.is_empty(), stream.is_empty()) {
+        (false, true, true) => Ok(QueryTarget::key(key)),
+        (true, false, true) => {
+            let keys: Vec<String> = keys
+                .split(',')
+                .map(str::trim)
+                .filter(|k| !k.is_empty())
+                .map(str::to_string)
+                .collect();
+            anyhow::ensure!(!keys.is_empty(), "--keys needs at least one key");
+            Ok(QueryTarget::Keys(keys))
+        }
+        (true, true, false) => Ok(QueryTarget::Stream(stream)),
+        _ => anyhow::bail!("exactly one of --key K | --keys K1,K2,... | --stream S required"),
+    }
+}
+
+fn cmd_sample(argv: &[String]) -> anyhow::Result<()> {
+    let spec = target_spec(
+        ArgSpec::new("sample", "draw weighted samples from a key, key union or stream"),
+    )
+    .opt("addr", "127.0.0.1:7878", "server address")
+    .opt("n", "10", "number of draws")
+    .opt("seed", "1", "draw seed (same seed => same ids)");
+    let args = spec.parse(argv)?;
+    let target = parse_target(&args)?;
+    let mut client = Client::connect(&args.str("addr"))?;
+    let ids = client.sample(target, args.usize("n")?, args.u64("seed")?)?;
+    for id in ids {
+        println!("{id}");
+    }
+    Ok(())
+}
+
+fn cmd_partition(argv: &[String]) -> anyhow::Result<()> {
+    let spec = target_spec(
+        ArgSpec::new("partition", "sum-of-weights estimate for a key, key union or stream"),
+    )
+    .opt("addr", "127.0.0.1:7878", "server address");
+    let args = spec.parse(argv)?;
+    let target = parse_target(&args)?;
+    let mut client = Client::connect(&args.str("addr"))?;
+    println!("{:.6}", client.partition(target)?);
+    Ok(())
+}
+
 fn cmd_snapshot(argv: &[String]) -> anyhow::Result<()> {
     let spec = ArgSpec::new("snapshot", "save/restore the server's store (binary snapshot)")
         .opt("addr", "127.0.0.1:7878", "server address")
@@ -260,6 +324,8 @@ fn cluster_help() -> String {
        topk    scatter-gather top-k across all live nodes\n\
        get     read one key from its replica set (highest version wins)\n\
        push    push stream items to each element's replica set\n\
+       sample  weighted samples from a key, key union or stream (replica failover)\n\
+       partition  sum-of-weights estimate for a key, key union or stream\n\
        card    cluster-wide weighted cardinality (merged §2.3 sketches)\n\
        repair  anti-entropy: converge replica versions + merge streams\n\n\
      Every driving action takes --addrs host:port,host:port,... and the\n\
@@ -281,6 +347,8 @@ fn cmd_cluster(argv: &[String]) -> anyhow::Result<()> {
         "topk" => cluster_topk(rest),
         "get" => cluster_get(rest),
         "push" => cluster_push(rest),
+        "sample" => cluster_sample(rest),
+        "partition" => cluster_partition(rest),
         "card" => cluster_card(rest),
         "repair" => cluster_repair(rest),
         "--help" | "-h" | "help" => {
@@ -462,6 +530,34 @@ fn cluster_push(argv: &[String]) -> anyhow::Result<()> {
     let mut cc = cluster_connect(&args)?;
     let n = cc.push(&args.str("stream"), &items)?;
     println!("routed {n} items into stream '{}'", args.str("stream"));
+    Ok(())
+}
+
+fn cluster_sample(argv: &[String]) -> anyhow::Result<()> {
+    let spec = target_spec(cluster_spec(
+        "cluster sample",
+        "weighted samples from a key, key union or stream (replica failover)",
+    ))
+    .opt("n", "10", "number of draws")
+    .opt("seed", "1", "draw seed (same seed => same ids)");
+    let args = spec.parse(argv)?;
+    let target = parse_target(&args)?;
+    let mut cc = cluster_connect(&args)?;
+    for id in cc.sample(&target, args.usize("n")?, args.u64("seed")?)? {
+        println!("{id}");
+    }
+    Ok(())
+}
+
+fn cluster_partition(argv: &[String]) -> anyhow::Result<()> {
+    let spec = target_spec(cluster_spec(
+        "cluster partition",
+        "sum-of-weights estimate for a key, key union or stream",
+    ));
+    let args = spec.parse(argv)?;
+    let target = parse_target(&args)?;
+    let mut cc = cluster_connect(&args)?;
+    println!("{:.6}", cc.partition(&target)?);
     Ok(())
 }
 

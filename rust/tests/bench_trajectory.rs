@@ -8,7 +8,10 @@
 //!   paying rent (≥2x on a register-update kernel, SIMD never slower);
 //! * `BENCH_7.json` — the binary framed transport beats JSON lines: every
 //!   frame-vs-JSON codec pair is binary-faster, and the saturation probes
-//!   show ≥10x sustained req/s at equal-or-better p99.
+//!   show ≥10x sustained req/s at equal-or-better p99;
+//! * `BENCH_8.json` — the sampling query engine amortizes: serving a
+//!   32-draw `sample` from a stored sketch is far cheaper than sketching
+//!   even a small vector, the regime the register-as-sample design buys.
 //!
 //! Absolute numbers are NOT asserted against the current machine (CI
 //! runners are too noisy; `ci/bench_coverage.py` gates name coverage on
@@ -18,6 +21,7 @@ use fastgm::util::json::{parse, Value};
 
 const BASELINE: &str = include_str!("../../BENCH_6.json");
 const BASELINE7: &str = include_str!("../../BENCH_7.json");
+const BASELINE8: &str = include_str!("../../BENCH_8.json");
 
 /// Pairs emitted by `perf_probe`: `<name>_scalar_ns` vs `<name>_ns`.
 const PAIRS: [&str; 8] = [
@@ -45,6 +49,10 @@ fn baseline7() -> Value {
     parse(BASELINE7).expect("BENCH_7.json parses with the crate JSON layer")
 }
 
+fn baseline8() -> Value {
+    parse(BASELINE8).expect("BENCH_8.json parses with the crate JSON layer")
+}
+
 fn ns(v: &Value, name: &str) -> f64 {
     v.get(name)
         .unwrap_or_else(|| panic!("probe '{name}' missing from the baseline"))
@@ -54,7 +62,11 @@ fn ns(v: &Value, name: &str) -> f64 {
 
 #[test]
 fn baseline_schema_is_complete_and_consistent() {
-    for (file, v) in [("BENCH_6.json", baseline()), ("BENCH_7.json", baseline7())] {
+    for (file, v) in [
+        ("BENCH_6.json", baseline()),
+        ("BENCH_7.json", baseline7()),
+        ("BENCH_8.json", baseline8()),
+    ] {
         let Value::Obj(entries) = &v else { panic!("{file}: top level must be a name->stats object") };
         assert!(entries.len() >= 50, "{file}: expected the full probe sweep, got {}", entries.len());
         for (name, stats) in entries {
@@ -156,6 +168,44 @@ fn binary_codec_beats_json_on_every_pair_in_bench7() {
     // BENCH_7 also re-carries every BENCH_6 probe (one sweep per
     // baseline file, so trajectories diff file-to-file).
     for name in ["fastgm/n1000/k64", "kernel.merge_ns", "cluster.owner_ns"] {
+        assert!(ns(&v, name) > 0.0);
+    }
+}
+
+/// BENCH_8 (ISSUE 8): the sampling query engine's amortization claim —
+/// serving a 32-draw `sample` from a stored sketch (one register scan +
+/// O(1) uniform picks) must be dramatically cheaper than re-sketching
+/// even a small (n=1000) vector at the same k, and the one-pass
+/// `partition` estimate cheaper still than the draw.
+#[test]
+fn sampling_amortizes_over_resketching_in_bench8() {
+    let v = baseline8();
+    for name in [
+        "sample.draw32_k256_ns",
+        "sample.draw32_k1024_ns",
+        "sample.union8_k256_ns",
+        "partition.total_weight_k256_ns",
+        "partition.total_weight_k1024_ns",
+    ] {
+        assert!(ns(&v, name) > 0.0);
+    }
+    for k in [256usize, 1024] {
+        let draw = ns(&v, &format!("sample.draw32_k{k}_ns"));
+        let sketch = ns(&v, &format!("fastgm/n1000/k{k}"));
+        assert!(
+            draw * 20.0 < sketch,
+            "k={k}: a 32-draw sample ({draw} ns) should be >=20x cheaper than \
+             re-sketching n=1000 ({sketch} ns)"
+        );
+        let part = ns(&v, &format!("partition.total_weight_k{k}_ns"));
+        assert!(part < draw, "k={k}: one-pass partition ({part} ns) vs draw ({draw} ns)");
+    }
+    // Even the 8-way §2.3 merge ahead of a union draw stays well under
+    // one fresh sketch of a single small vector.
+    assert!(ns(&v, "sample.union8_k256_ns") * 10.0 < ns(&v, "fastgm/n1000/k256"));
+    // BENCH_8 re-carries every earlier probe (one sweep per baseline
+    // file, so trajectories diff file-to-file).
+    for name in ["fastgm/n1000/k64", "kernel.merge_ns", "transport.sat.framed_ns"] {
         assert!(ns(&v, name) > 0.0);
     }
 }

@@ -516,6 +516,70 @@ fn replicated_cluster_survives_any_single_kill_and_repairs() {
     cluster.stop();
 }
 
+/// ISSUE 8 satellite (S2): cluster `sample`/`partition` on a key whose
+/// primary owner is down must FAIL OVER to the next live owner — not
+/// return `NodeDown` — and, because the draw happens centrally on the
+/// merged registers, the samples and estimates must be bit-identical to
+/// the healthy cluster's. Union (multi-key) targets and stream targets
+/// stay exact too (§2.3: every partition has a surviving replica).
+#[test]
+fn cluster_sample_fails_over_to_live_replica() {
+    use fastgm::coordinator::protocol::QueryTarget;
+    const M: usize = 3;
+    let mut cluster = LocalCluster::start(M, &cfg()).unwrap();
+    let mut cc = ClusterClient::connect_with(
+        &cluster.addrs(),
+        ReplicaConfig { replication: 2, write_quorum: 1, ..Default::default() },
+    )
+    .unwrap();
+    let mut r = SplitMix64::new(13);
+    let keys: Vec<String> = (0..12).map(|i| format!("doc{i:02}")).collect();
+    for key in &keys {
+        cc.upsert(key, random_vec(&mut r, 20, 5000)).unwrap();
+    }
+    let items: Vec<(u64, f64)> = (0..300u64).map(|i| (i * 31 + 7, 1.0)).collect();
+    cc.push("pkts", &items).unwrap();
+
+    // Healthy answers, for every single-key target plus a union target.
+    let healthy: Vec<(Vec<u64>, f64)> = keys
+        .iter()
+        .map(|k| {
+            let t = QueryTarget::key(k.clone());
+            (cc.sample(&t, 16, 9).unwrap(), cc.partition(&t).unwrap())
+        })
+        .collect();
+    let union_target = QueryTarget::Keys(keys.clone());
+    let healthy_union = cc.sample(&union_target, 32, 5).unwrap();
+    let healthy_stream = cc.sample(&QueryTarget::Stream("pkts".into()), 16, 2).unwrap();
+
+    const VICTIM: usize = 1;
+    cluster.kill(VICTIM);
+    // Keys whose PRIMARY owner is the victim are the regression surface:
+    // the fetch must fail over to the standby, not error NodeDown.
+    assert!(
+        keys.iter().any(|k| cc.owner(k) == VICTIM),
+        "corpus must cover the victim's partitions"
+    );
+    for (key, (want_ids, want_z)) in keys.iter().zip(&healthy) {
+        let t = QueryTarget::key(key.clone());
+        let ids = cc
+            .sample(&t, 16, 9)
+            .unwrap_or_else(|e| panic!("sample '{key}' (owner {}): {e}", cc.owner(key)));
+        assert_eq!(&ids, want_ids, "'{key}': failover changed the sample");
+        assert_eq!(cc.partition(&t).unwrap(), *want_z, "'{key}': estimate drifted");
+    }
+    assert_eq!(cc.sample(&union_target, 32, 5).unwrap(), healthy_union);
+    assert_eq!(
+        cc.sample(&QueryTarget::Stream("pkts".into()), 16, 2).unwrap(),
+        healthy_stream
+    );
+    // A key that exists nowhere is a gather error naming it, not an outage.
+    let err = cc.sample(&QueryTarget::key("ghost"), 4, 0).unwrap_err();
+    assert!(matches!(err, ClusterError::Gather(_)), "{err:?}");
+    assert!(err.to_string().contains("'ghost'"), "{err}");
+    cluster.stop();
+}
+
 /// Under-quorum writes are typed `QuorumLost` errors naming the down
 /// owners — for keyed writes and stream pushes alike — and lowering the
 /// quorum restores availability.
@@ -622,7 +686,7 @@ fn tiny_io_timeout_marks_a_stuffed_node_down() {
         let mut w = stream;
         w.write_all(
             concat!(
-                r#"{"ok":true,"type":"hello","protocol":2,"node":"stuffed","epoch":0,"#,
+                r#"{"ok":true,"type":"hello","protocol":3,"node":"stuffed","epoch":0,"#,
                 r#""k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
                 "\n"
             )

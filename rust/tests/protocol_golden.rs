@@ -8,7 +8,7 @@
 //! response type is added.
 
 use fastgm::coordinator::protocol::{
-    decode_request, decode_response, encode_line, Request, Response,
+    decode_request, decode_response, encode_line, QueryTarget, Request, Response,
 };
 use fastgm::sketch::{SparseVector, EMPTY_REGISTER};
 use std::collections::BTreeSet;
@@ -40,6 +40,8 @@ const ALL_REQUEST_OPS: &[&str] = &[
     "store_keys",
     "store_put",
     "stream_merge",
+    "sample",
+    "partition",
     "metrics",
     "ping",
 ];
@@ -55,6 +57,7 @@ const ALL_RESPONSE_TYPES: &[&str] = &[
     "keys",
     "hello",
     "sketch_blob",
+    "samples",
     "error",
     "pong",
 ];
@@ -187,6 +190,32 @@ fn golden_values_decode_losslessly() {
     };
     assert_eq!((stream.as_str(), data.as_str()), ("s", "46474d53"));
 
+    // The query-engine ops: the key|keys|stream target trio for sample and
+    // partition, including the lossless >2^53 seed path.
+    assert_eq!(
+        decode_request(lines[25]).unwrap(),
+        Request::Sample { target: QueryTarget::key("doc1"), n: 8, seed: 7 }
+    );
+    let Request::Sample { target, n, seed } = decode_request(lines[26]).unwrap() else {
+        panic!("golden line 26 must be the multi-key sample request")
+    };
+    assert_eq!(target, QueryTarget::Keys(vec!["doc1".into(), "doc2".into()]));
+    assert_eq!((n, seed), (3, u64::MAX));
+    assert_eq!(
+        decode_request(lines[27]).unwrap(),
+        Request::Sample { target: QueryTarget::Stream("s".into()), n: 4, seed: 1 }
+    );
+    assert_eq!(
+        decode_request(lines[28]).unwrap(),
+        Request::Partition {
+            target: QueryTarget::Keys(vec!["doc1".into(), "doc2".into()])
+        }
+    );
+    assert_eq!(
+        decode_request(lines[29]).unwrap(),
+        Request::Partition { target: QueryTarget::Stream("s".into()) }
+    );
+
     let resp_lines = golden_lines(RESPONSES);
     let Response::Sketch { sketch, .. } = decode_response(resp_lines[0]).unwrap() else {
         panic!("first golden response must be a sketch")
@@ -201,6 +230,14 @@ fn golden_values_decode_losslessly() {
     };
     assert_eq!(sketch.seed, u64::MAX);
     assert_eq!(sketch.s[0], (1u64 << 53) + 1);
+
+    // Sampled register ids survive the >2^53 string encoding round trip.
+    let Response::Samples { ids } =
+        decode_response(resp_lines[resp_lines.len() - 2]).unwrap()
+    else {
+        panic!("second-to-last golden response must be a samples reply")
+    };
+    assert_eq!(ids, vec![3, 17, 3, u64::MAX]);
 
     // The store_keys page reply carries (key, version) pairs.
     let Response::Keys { keys } =
