@@ -207,6 +207,101 @@ fn main() {
         }));
     }
 
+    // Read-path cache probes (ISSUE 9): the node's merged-union cache next
+    // to the §2.3 re-merge a hit elides, plus the top-k result cache. Hit
+    // and miss run the IDENTICAL request through `Node::execute_alloc` —
+    // the miss node simply has the cache disabled — so the delta is
+    // exactly the work a validated hit skips (answers are bit-identical
+    // either way; node.rs property tests pin that).
+    {
+        use fastgm::coordinator::node::Node;
+        use fastgm::coordinator::protocol::{QueryTarget, Request, Response};
+        use fastgm::coordinator::service::CoordinatorConfig;
+
+        let mk_node = |cache_enabled: bool| {
+            Node::new(CoordinatorConfig {
+                k: 256,
+                seed: 1,
+                node_id: "bench".into(),
+                cache_enabled,
+                ..Default::default()
+            })
+            .unwrap()
+        };
+        let hot = mk_node(true);
+        let cold = mk_node(false);
+        let mut r2 = SplitMix64::new(17);
+        let keys: Vec<String> = (0..32).map(|i| format!("doc{i:03}")).collect();
+        for key in &keys {
+            let v = dense_vector(&mut r2, 500, WeightDist::Uniform01);
+            for node in [&hot, &cold] {
+                let resp = node.execute_alloc(Request::Upsert {
+                    key: key.clone(),
+                    vector: v.clone(),
+                    version: None,
+                });
+                assert!(matches!(resp, Response::Ack { .. }), "{resp:?}");
+            }
+        }
+        let target = QueryTarget::Keys(keys.clone());
+        let mut seed = 0u64;
+        suite.record(b.run("cache.merge_keys_hit_ns", || {
+            seed = seed.wrapping_add(1);
+            hot.execute_alloc(Request::Sample { target: target.clone(), n: 16, seed })
+        }));
+        let mut seed = 0u64;
+        suite.record(b.run("cache.merge_keys_miss_ns", || {
+            seed = seed.wrapping_add(1);
+            cold.execute_alloc(Request::Sample { target: target.clone(), n: 16, seed })
+        }));
+        let qv = dense_vector(&mut r2, 200, WeightDist::Uniform01);
+        suite.record(b.run("cache.topk_hit_ns", || {
+            hot.execute_alloc(Request::TopK { vector: qv.clone(), limit: 5 })
+        }));
+        if let Some(sp) = suite.speedup("cache.merge_keys_miss_ns", "cache.merge_keys_hit_ns") {
+            println!("  -> merged-union cache hit speedup over a 32-key re-merge: {sp:.2}x");
+        }
+    }
+
+    // Cluster gather warm-vs-cold (ISSUE 9 tentpole): the same scatter-
+    // gather `topk` against a live 2-node local cluster, once through an
+    // uncached client (every candidate blob re-fetched and re-decoded per
+    // gather) and once through a client whose (key, version) gather-blob
+    // cache is warm (one `store_keys` version walk, zero blob fetches).
+    {
+        use fastgm::coordinator::cluster::{ClusterClient, LocalCluster, ReplicaConfig};
+        use fastgm::coordinator::service::CoordinatorConfig;
+
+        let ccfg = CoordinatorConfig {
+            k: 256,
+            seed: 1,
+            workers: 2,
+            node_id: "bench".into(),
+            topk_scan_max: 100_000,
+            ..Default::default()
+        };
+        let cluster = LocalCluster::start(2, &ccfg).unwrap();
+        let mut cold_cc = ClusterClient::connect(&cluster.addrs()).unwrap();
+        let mut warm_cc = ClusterClient::connect_with(
+            &cluster.addrs(),
+            ReplicaConfig { cache_bytes: 8 << 20, ..Default::default() },
+        )
+        .unwrap();
+        let mut r3 = SplitMix64::new(23);
+        for i in 0..64 {
+            let v = dense_vector(&mut r3, 200, WeightDist::Uniform01);
+            cold_cc.upsert(&format!("doc{i:03}"), v).unwrap();
+        }
+        let q = dense_vector(&mut r3, 200, WeightDist::Uniform01);
+        warm_cc.topk(&q, 8).unwrap(); // fill the gather cache
+        suite.record(b.run("cluster.gather_cold_ns", || cold_cc.topk(&q, 8).unwrap()));
+        suite.record(b.run("cluster.gather_warm_ns", || warm_cc.topk(&q, 8).unwrap()));
+        if let Some(sp) = suite.speedup("cluster.gather_cold_ns", "cluster.gather_warm_ns") {
+            println!("  -> warm (key,version) gather speedup over cold blob fetches: {sp:.2}x");
+        }
+        cluster.stop();
+    }
+
     // Kernel-level scalar-vs-SIMD pairs: the same kernel, forced onto each
     // backend. `<name>_scalar_ns` is the baseline; `<name>_ns` is whatever
     // the host's best backend delivers (scalar again on non-AVX2 hosts, so

@@ -30,10 +30,11 @@ import sys
 REQUIRED = ("ns_per_op", "ops_per_s", "p10_ns", "p90_ns", "iters", "samples")
 
 # The transport probes are the acceptance evidence for the binary framed
-# transport (ISSUE 7), and the sample/partition probes for the query
-# engine (ISSUE 8): they must be present in every fresh run explicitly,
-# not just via the committed-baseline diff (which would stop gating them if
-# the baselines were ever pruned).
+# transport (ISSUE 7), the sample/partition probes for the query engine
+# (ISSUE 8), and the cache.*/cluster.gather_* probes for the versioned
+# read-path cache (ISSUE 9): they must be present in every fresh run
+# explicitly, not just via the committed-baseline diff (which would stop
+# gating them if the baselines were ever pruned).
 REQUIRED_PROBES = (
     "frame.encode_request_ns",
     "frame.encode_request_json_ns",
@@ -52,6 +53,11 @@ REQUIRED_PROBES = (
     "sample.union8_k256_ns",
     "partition.total_weight_k256_ns",
     "partition.total_weight_k1024_ns",
+    "cache.merge_keys_hit_ns",
+    "cache.merge_keys_miss_ns",
+    "cache.topk_hit_ns",
+    "cluster.gather_cold_ns",
+    "cluster.gather_warm_ns",
 )
 
 

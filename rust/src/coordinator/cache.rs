@@ -1,0 +1,371 @@
+//! Versioned read-path cache: byte-bounded, sharded LRU maps for answers
+//! the store can prove are still fresh.
+//!
+//! The store's write metadata makes *exact* invalidation possible without
+//! any write-through coupling:
+//!
+//! * **Merged unions** (the `sample`/`partition` key-set target) are keyed
+//!   by the normalized (sorted, deduped) key set and tagged with the
+//!   per-key version vector `SketchStore::merge_keys` already returns,
+//!   plus the store's version-drop generation. A hit is served only after
+//!   `SketchStore::members_match` re-proves every `(key, version)` against
+//!   the live store — so a cached union is *bit-identical to a fresh §2.3
+//!   merge by construction* (§2.3 merge is idempotent and order-free: ties
+//!   only occur when the same element id drew the same `(y, s)` pair in
+//!   both inputs, so register-wise min is associative/commutative down to
+//!   the bit level).
+//! * **Top-k rankings** are keyed by a digest of the query registers +
+//!   limit and tagged with the per-shard store generation vector; any
+//!   write anywhere invalidates — the right granularity for a query that
+//!   ranked every entry.
+//! * The cluster client reuses [`ByteLruCache`] for its `(key, version)`
+//!   gather-blob cache (versioned codec blobs are immutable, so equality
+//!   of version is equality of registers).
+//!
+//! Bounding is by *bytes*, not entries: register payloads dominate
+//! (`k × 16` bytes per sketch), so an entry's cost is its estimated heap
+//! footprint and eviction walks least-recently-used entries until the new
+//! entry fits. Entries whose validation fails are removed eagerly
+//! (`stale_drop`) — a stale entry can never become valid again, because
+//! versions and generations only move forward.
+//!
+//! Concurrency: the map is sharded by key digest; each shard is a plain
+//! `Mutex`. Validators run under the probed shard's mutex and may take
+//! store *read* locks (`members_match`/`generations`), so cache → store is
+//! a legal lock order; the store never touches the cache, so the combined
+//! ordering stays acyclic — no deadlock is possible. LRU
+//! recency is a per-entry tick from one shared counter; eviction scans its
+//! shard for the minimum tick, which is O(shard entries) but only runs on
+//! insert overflow — hits stay O(1).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Value;
+
+/// One shard's entries: key → (value, byte cost, recency tick).
+struct CacheShard<V> {
+    entries: HashMap<u64, (V, usize, u64)>,
+    bytes: usize,
+}
+
+/// Monotonic counters every probe/insert/evict updates; snapshotted into
+/// `store_stats`/`metrics` and the `cache.*` counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub stale_drops: u64,
+    pub bytes: u64,
+    pub entries: u64,
+    pub max_bytes: u64,
+}
+
+/// A byte-bounded sharded LRU keyed by a caller-computed 64-bit digest.
+///
+/// `get_validated` is the probe-then-prove read: the stored value is
+/// handed to the caller's validator (which typically re-checks versions
+/// against the live store) before it is ever returned; an invalid entry is
+/// removed on the spot (it can never become valid again).
+pub struct ByteLruCache<V> {
+    shards: Vec<Mutex<CacheShard<V>>>,
+    max_bytes_per_shard: usize,
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    stale_drops: AtomicU64,
+}
+
+impl<V: Clone> ByteLruCache<V> {
+    /// `max_bytes` is the total budget, split evenly across `shards`
+    /// (each at least 1 byte so a zero budget still constructs — it just
+    /// refuses every insert).
+    pub fn new(max_bytes: usize, shards: usize) -> ByteLruCache<V> {
+        let shards = shards.max(1);
+        ByteLruCache {
+            max_bytes_per_shard: max_bytes / shards,
+            shards: (0..shards)
+                .map(|_| Mutex::new(CacheShard { entries: HashMap::new(), bytes: 0 }))
+                .collect(),
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            stale_drops: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: u64) -> usize {
+        (key % self.shards.len() as u64) as usize
+    }
+
+    /// Lock a shard, recovering from poison: cache state is only ever a
+    /// performance hint, so a panic mid-update at worst strands some
+    /// entries that validation or eviction will clean up.
+    fn lock(&self, idx: usize) -> std::sync::MutexGuard<'_, CacheShard<V>> {
+        self.shards[idx].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Probe `key`; a present entry is returned only if `valid` accepts
+    /// it. Present-but-invalid entries are removed and counted as
+    /// `stale_drop` (which also counts as a miss: the caller must
+    /// recompute either way).
+    pub fn get_validated(&self, key: u64, valid: impl FnOnce(&V) -> bool) -> Option<V> {
+        let idx = self.shard_of(key);
+        let mut shard = self.lock(idx);
+        let hit = match shard.entries.get(&key) {
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            Some((value, _, _)) => valid(value).then(|| value.clone()),
+        };
+        match hit {
+            Some(out) => {
+                let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+                shard.entries.get_mut(&key).expect("entry just read").2 = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(out)
+            }
+            None => {
+                let (_, cost, _) = shard.entries.remove(&key).expect("entry just read");
+                shard.bytes -= cost;
+                self.stale_drops.fetch_add(1, Ordering::Relaxed);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Install `key → value` at `cost` bytes, evicting least-recently-used
+    /// entries until it fits. A value larger than the whole shard budget
+    /// is refused (returns false) rather than wiping the shard for an
+    /// entry that could never share it.
+    pub fn insert(&self, key: u64, value: V, cost: usize) -> bool {
+        if cost > self.max_bytes_per_shard {
+            return false;
+        }
+        let idx = self.shard_of(key);
+        let mut shard = self.lock(idx);
+        if let Some((_, old_cost, _)) = shard.entries.remove(&key) {
+            shard.bytes -= old_cost;
+        }
+        while shard.bytes + cost > self.max_bytes_per_shard {
+            let Some((&lru, _)) =
+                shard.entries.iter().min_by_key(|(_, (_, _, tick))| *tick)
+            else {
+                break;
+            };
+            let (_, evicted_cost, _) = shard.entries.remove(&lru).expect("lru key just found");
+            shard.bytes -= evicted_cost;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        shard.entries.insert(key, (value, cost, tick));
+        shard.bytes += cost;
+        true
+    }
+
+    /// Drop every entry (restore hygiene — validation would reject them
+    /// all anyway, this just frees the memory now).
+    pub fn clear(&self) {
+        for idx in 0..self.shards.len() {
+            let mut shard = self.lock(idx);
+            shard.entries.clear();
+            shard.bytes = 0;
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut bytes = 0u64;
+        let mut entries = 0u64;
+        for idx in 0..self.shards.len() {
+            let shard = self.lock(idx);
+            bytes += shard.bytes as u64;
+            entries += shard.entries.len() as u64;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            stale_drops: self.stale_drops.load(Ordering::Relaxed),
+            bytes,
+            entries,
+            max_bytes: (self.max_bytes_per_shard * self.shards.len()) as u64,
+        }
+    }
+}
+
+/// Merge two subsystem stat snapshots (node-side merge + top-k caches are
+/// reported as one `cache` object).
+pub fn combine(a: CacheStats, b: CacheStats) -> CacheStats {
+    CacheStats {
+        hits: a.hits + b.hits,
+        misses: a.misses + b.misses,
+        evictions: a.evictions + b.evictions,
+        stale_drops: a.stale_drops + b.stale_drops,
+        bytes: a.bytes + b.bytes,
+        entries: a.entries + b.entries,
+        max_bytes: a.max_bytes + b.max_bytes,
+    }
+}
+
+/// The `cache` JSON object surfaced through `store_stats` and `metrics`.
+pub fn stats_value(enabled: bool, s: CacheStats) -> Value {
+    Value::obj(vec![
+        ("enabled", Value::Bool(enabled)),
+        ("hits", Value::num(s.hits as f64)),
+        ("misses", Value::num(s.misses as f64)),
+        ("evictions", Value::num(s.evictions as f64)),
+        ("stale_drops", Value::num(s.stale_drops as f64)),
+        ("bytes", Value::num(s.bytes as f64)),
+        ("entries", Value::num(s.entries as f64)),
+        ("max_bytes", Value::num(s.max_bytes as f64)),
+    ])
+}
+
+/// FNV-1a over a byte stream — the cache's key digest (collisions are a
+/// correctness non-issue for the merge cache only because the validator
+/// re-proves the member versions; the top-k cache additionally folds the
+/// full register payload in, making a colliding *different* query
+/// astronomically unlikely and bounded to serving a validly-tagged answer
+/// for the wrong query never — the digest covers every register bit).
+pub struct Digest(u64);
+
+impl Digest {
+    pub fn new() -> Digest {
+        Digest(0xcbf29ce484222325)
+    }
+
+    pub fn u64(&mut self, x: u64) -> &mut Digest {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+        self
+    }
+
+    pub fn f64(&mut self, x: f64) -> &mut Digest {
+        self.u64(x.to_bits())
+    }
+
+    pub fn str(&mut self, s: &str) -> &mut Digest {
+        for &b in s.as_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+        // Length-delimit so ["ab","c"] and ["a","bc"] digest differently.
+        self.u64(s.len() as u64)
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Digest {
+    fn default() -> Digest {
+        Digest::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_validate_and_misses_count() {
+        let c: ByteLruCache<u32> = ByteLruCache::new(1024, 2);
+        assert_eq!(c.get_validated(7, |_| true), None);
+        assert!(c.insert(7, 42, 100));
+        assert_eq!(c.get_validated(7, |_| true), Some(42));
+        // A failed validation drops the entry (it can never re-validate).
+        assert_eq!(c.get_validated(7, |_| false), None);
+        assert_eq!(c.get_validated(7, |_| true), None, "stale entry was removed");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.stale_drops), (1, 3, 1));
+        assert_eq!((s.bytes, s.entries), (0, 0));
+    }
+
+    /// The byte bound holds at every step, and eviction removes the
+    /// least-recently-used entry first.
+    #[test]
+    fn eviction_is_lru_and_respects_the_byte_bound() {
+        // One shard so the LRU order is globally observable.
+        let c: ByteLruCache<u32> = ByteLruCache::new(300, 1);
+        assert!(c.insert(1, 10, 100));
+        assert!(c.insert(2, 20, 100));
+        assert!(c.insert(3, 30, 100));
+        assert!(c.stats().bytes <= 300);
+        // Touch 1 so 2 becomes the LRU, then overflow.
+        assert_eq!(c.get_validated(1, |_| true), Some(10));
+        assert!(c.insert(4, 40, 100));
+        let s = c.stats();
+        assert!(s.bytes <= 300, "byte bound violated: {}", s.bytes);
+        assert_eq!(s.evictions, 1);
+        assert_eq!(c.get_validated(2, |_| true), None, "LRU entry must be the one evicted");
+        assert_eq!(c.get_validated(1, |_| true), Some(10));
+        assert_eq!(c.get_validated(3, |_| true), Some(30));
+        assert_eq!(c.get_validated(4, |_| true), Some(40));
+        // An entry bigger than the whole budget is refused outright.
+        assert!(!c.insert(9, 90, 301));
+        assert!(c.stats().bytes <= 300);
+        // Re-inserting an existing key replaces cost, not duplicates it.
+        assert!(c.insert(4, 41, 120));
+        assert!(c.stats().bytes <= 300);
+        assert_eq!(c.get_validated(4, |_| true), Some(41));
+    }
+
+    #[test]
+    fn zero_budget_disables_without_erroring() {
+        let c: ByteLruCache<u32> = ByteLruCache::new(0, 4);
+        assert!(!c.insert(1, 10, 1));
+        assert_eq!(c.get_validated(1, |_| true), None);
+        assert_eq!(c.stats().max_bytes, 0);
+    }
+
+    #[test]
+    fn clear_empties_every_shard() {
+        let c: ByteLruCache<u32> = ByteLruCache::new(4096, 4);
+        for i in 0..32 {
+            assert!(c.insert(i, i as u32, 8));
+        }
+        assert_eq!(c.stats().entries, 32);
+        c.clear();
+        let s = c.stats();
+        assert_eq!((s.bytes, s.entries), (0, 0));
+    }
+
+    #[test]
+    fn digest_is_order_and_boundary_sensitive() {
+        let mut a = Digest::new();
+        a.str("ab").str("c");
+        let mut b = Digest::new();
+        b.str("a").str("bc");
+        assert_ne!(a.finish(), b.finish());
+        let mut c = Digest::new();
+        c.u64(1).u64(2);
+        let mut d = Digest::new();
+        d.u64(2).u64(1);
+        assert_ne!(c.finish(), d.finish());
+        let mut e = Digest::new();
+        e.f64(1.5).u64(7);
+        let mut f = Digest::new();
+        f.f64(1.5).u64(7);
+        assert_eq!(e.finish(), f.finish());
+    }
+
+    #[test]
+    fn stats_value_is_a_json_object_with_every_field() {
+        let v = stats_value(true, CacheStats { hits: 3, misses: 1, ..Default::default() });
+        for field in
+            ["enabled", "hits", "misses", "evictions", "stale_drops", "bytes", "entries", "max_bytes"]
+        {
+            assert!(v.get(field).is_some(), "missing cache stats field '{field}'");
+        }
+        assert_eq!(v.get("hits").unwrap().as_f64(), Some(3.0));
+    }
+}

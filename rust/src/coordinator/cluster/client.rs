@@ -39,8 +39,22 @@
 //! connection marks it down; [`ClusterClient::reconnect`] re-attaches
 //! (e.g. after a restart-from-snapshot, on whatever address the node came
 //! back on — identity is the node id, not the socket).
+//!
+//! With [`ReplicaConfig::cache_bytes`] > 0 the client keeps a
+//! `(key, version)`-keyed **gather-blob cache**: every codec blob a gather
+//! decodes is remembered under its store version, and subsequent
+//! `topk`/`sample`/`partition` gathers first walk the live nodes'
+//! `(key, version)` pages (`store_keys` — the same read-only walk `repair`
+//! phase 1 performs) and skip re-fetching any key whose version has not
+//! advanced. Versioned blobs are immutable under the repair-on-rejoin rule
+//! (README §Replication: version-only diffing is already what `repair` and
+//! the LWW gather trust), so a version match is a register match and the
+//! warm gather stays bit-identical to the cold one. At `cache_bytes == 0`
+//! (the default) the client behaves exactly as before: every gather
+//! re-fetches every blob.
 
 use super::partitioner::Partitioner;
+use crate::coordinator::cache::{ByteLruCache, CacheStats, Digest};
 use crate::coordinator::client::Client;
 use crate::coordinator::merger::merge_tree;
 use crate::coordinator::protocol::{
@@ -53,6 +67,7 @@ use crate::sketch::codec;
 use crate::sketch::engine::{self, EngineParams};
 use crate::sketch::{AlgorithmId, GumbelMaxSketch, Sketcher, SparseVector};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Default for [`ReplicaConfig::io_timeout`]: how long a gather waits on
 /// any single node read before treating the node as down. Without a
@@ -83,6 +98,11 @@ pub struct ReplicaConfig {
     /// Requires every node to serve the event-driven transport (the
     /// thread-per-connection JSON server does not speak frames).
     pub framed: bool,
+    /// Byte budget of the client-side `(key, version)` gather-blob cache.
+    /// 0 (the default) disables it: every gather re-fetches every blob,
+    /// exactly the pre-cache behavior. With a budget, gathers first diff
+    /// versions via `store_keys` pages and only pull keys that changed.
+    pub cache_bytes: usize,
 }
 
 impl Default for ReplicaConfig {
@@ -92,6 +112,7 @@ impl Default for ReplicaConfig {
             write_quorum: 1,
             io_timeout: DEFAULT_NODE_IO_TIMEOUT,
             framed: false,
+            cache_bytes: 0,
         }
     }
 }
@@ -190,6 +211,11 @@ pub struct ClusterClient {
     /// and re-rank probes are sketched with. Bit-identical to every node's
     /// default sketch path.
     sketcher: Box<dyn Sketcher>,
+    /// `(key, version)` gather-blob cache (digest of the key → Arc'd
+    /// `(version, sketch)`); `None` when `cache_bytes == 0`. Entries are
+    /// only served after a `store_keys` version walk proves the key has
+    /// not advanced past the cached version.
+    gather_cache: Option<ByteLruCache<Arc<(u64, GumbelMaxSketch)>>>,
 }
 
 impl ClusterClient {
@@ -276,7 +302,8 @@ impl ClusterClient {
         };
         let node_ids: Vec<String> = slots.iter().map(|s| s.hello.node.clone()).collect();
         let partitioner = Partitioner::new(&node_ids)?;
-        Ok(ClusterClient { slots, partitioner, repl, expect, sketcher })
+        let gather_cache = (repl.cache_bytes > 0).then(|| ByteLruCache::new(repl.cache_bytes, 4));
+        Ok(ClusterClient { slots, partitioner, repl, expect, sketcher, gather_cache })
     }
 
     pub fn nodes(&self) -> usize {
@@ -367,6 +394,13 @@ impl ClusterClient {
             conn.set_framed(true)?;
         }
         self.slots[i] = NodeSlot { addr: addr.to_string(), hello, conn: Some(conn) };
+        // A rejoining node may have been restored from a snapshot, which
+        // can move key versions *backwards* — a regression the forward-only
+        // (key, version) validation cannot see. Drop the gather cache
+        // wholesale; it refills on the next warm gather.
+        if let Some(cache) = &self.gather_cache {
+            cache.clear();
+        }
         Ok(())
     }
 
@@ -539,6 +573,12 @@ impl ClusterClient {
     /// Nodes that die mid-gather only shrink coverage — and with R ≥ 2
     /// they do not even do that, because every partition has a surviving
     /// replica. Zero responding nodes is [`ClusterError::NoLiveNodes`].
+    ///
+    /// With [`ReplicaConfig::cache_bytes`] > 0, step 2 first diffs the
+    /// candidates against a `store_keys` version walk and serves cached
+    /// blobs for every candidate whose version has not advanced — only
+    /// changed keys are re-fetched, and the ranking stays bit-identical
+    /// because a version match pins the registers.
     pub fn topk(
         &mut self,
         vector: &SparseVector,
@@ -598,6 +638,26 @@ impl ClusterClient {
             return Err(ClusterError::NoLiveNodes);
         }
         let n_candidates = candidates.len();
+        // Cached-gather probe: one version walk, then every candidate
+        // whose cached blob still matches the cluster's highest version
+        // goes straight into `best` — its replica fetches are skipped
+        // below. Misses and version advances fall through to the fetch
+        // path unchanged, so a warm gather is bit-identical to a cold one.
+        let mut best: BTreeMap<String, (u64, GumbelMaxSketch)> = BTreeMap::new();
+        let mut cached_names: std::collections::BTreeSet<String> =
+            std::collections::BTreeSet::new();
+        if self.gather_cache.is_some() && n_candidates > 0 {
+            let view = self.version_view()?;
+            let names: Vec<String> = candidates.keys().cloned().collect();
+            for name in names {
+                if let Some(&ver) = view.get(&name) {
+                    if let Some(sk) = self.cached_blob(&name, ver) {
+                        cached_names.insert(name.clone());
+                        best.insert(name, (ver, sk));
+                    }
+                }
+            }
+        }
         // Gather: fetch + central re-rank, split-phase again. Fetches are
         // grouped by reporting node and pipelined (all batches written
         // before any reply is read), so the gather costs ~one overlapped
@@ -607,6 +667,9 @@ impl ClusterClient {
         // replica owners before being skipped.
         let mut by_node: Vec<Vec<String>> = vec![Vec::new(); self.slots.len()];
         for (name, reporters) in &candidates {
+            if cached_names.contains(name) {
+                continue;
+            }
             for &i in reporters {
                 by_node[i].push(name.clone());
             }
@@ -640,7 +703,6 @@ impl ClusterClient {
         // skipped it can diverge at the same version (README
         // §Replication), in which case this tie-break is arbitrary but
         // deterministic.
-        let mut best: BTreeMap<String, (u64, GumbelMaxSketch)> = BTreeMap::new();
         for (i, names) in fetching {
             let resps = match self.slot_recv(i, names.len()) {
                 Ok(resps) => resps,
@@ -728,6 +790,14 @@ impl ClusterClient {
             }
             if !best.contains_key(&name) {
                 log::warn!("gather: candidate '{name}' unreachable on every replica, skipped");
+            }
+        }
+        // Remember every freshly fetched winner under its (key, version)
+        // identity so the next gather can skip re-pulling it while the
+        // version holds.
+        for (name, (version, sk)) in &best {
+            if !cached_names.contains(name) {
+                self.remember_blob(name, *version, sk);
             }
         }
         // Central re-rank of every winning copy in one batched pass (the
@@ -975,6 +1045,70 @@ impl ClusterClient {
         Ok(best)
     }
 
+    /// Live counters of the `(key, version)` gather-blob cache; `None`
+    /// when the cache is disabled (`cache_bytes == 0`).
+    pub fn gather_cache_stats(&self) -> Option<CacheStats> {
+        self.gather_cache.as_ref().map(|c| c.stats())
+    }
+
+    fn blob_digest(key: &str) -> u64 {
+        let mut d = Digest::new();
+        d.str(key);
+        d.finish()
+    }
+
+    /// Probe the gather cache for `key` at exactly `version` (any other
+    /// cached version is a stale drop — versions only move forward).
+    fn cached_blob(&self, key: &str, version: u64) -> Option<GumbelMaxSketch> {
+        let cache = self.gather_cache.as_ref()?;
+        cache
+            .get_validated(Self::blob_digest(key), |e| e.0 == version)
+            .map(|e| e.1.clone())
+    }
+
+    /// Remember a decoded gather blob under its `(key, version)` identity.
+    fn remember_blob(&self, key: &str, version: u64, sk: &GumbelMaxSketch) {
+        if let Some(cache) = &self.gather_cache {
+            let cost = key.len() + sk.k() * 16 + 64;
+            cache.insert(Self::blob_digest(key), Arc::new((version, sk.clone())), cost);
+        }
+    }
+
+    /// `key → highest version across live nodes`: the read-only
+    /// `store_keys` page walk (repair phase 1) the cached gathers diff
+    /// against. Key pages are tiny next to register blobs (`k × 16` bytes
+    /// each), which is the whole trade: one cheap walk decides which
+    /// expensive fetches can be skipped. Dead nodes shrink the view —
+    /// exactly like they shrink a gather.
+    fn version_view(&mut self) -> Result<BTreeMap<String, u64>, ClusterError> {
+        let mut view: BTreeMap<String, u64> = BTreeMap::new();
+        let mut live = 0usize;
+        for i in 0..self.slots.len() {
+            if !self.is_live(i) {
+                continue;
+            }
+            match self.walk_node_keys(i) {
+                Ok(map) => {
+                    live += 1;
+                    for (key, version) in map {
+                        let held = view.get(&key).copied();
+                        if !held.is_some_and(|h| h >= version) {
+                            view.insert(key, version);
+                        }
+                    }
+                }
+                Err(ClusterError::NodeDown { node, .. }) => {
+                    log::warn!("gather cache: node '{node}' died during its version walk");
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if live == 0 {
+            return Err(ClusterError::NoLiveNodes);
+        }
+        Ok(view)
+    }
+
     /// Resolve a query target to one cluster-wide merged sketch. Key
     /// targets fetch each key from its replica set via
     /// [`ClusterClient::fetch_key`] — highest-version copy wins, and a
@@ -982,6 +1116,13 @@ impl ClusterClient {
     /// owner instead of erroring — then union-merge centrally (§2.3, so
     /// the merge is bit-identical to a single store holding every key).
     /// Stream targets reuse the replicated stream gather.
+    ///
+    /// With the gather cache on, one [`ClusterClient::version_view`] walk
+    /// runs first and keys whose cached blob still matches the cluster's
+    /// highest version skip their replica-set fetch entirely; the merged
+    /// result is bit-identical either way because a version match pins the
+    /// registers. Stream targets are never cached (stream sketches have no
+    /// version to validate against).
     fn target_sketch(&mut self, target: &QueryTarget) -> Result<GumbelMaxSketch, ClusterError> {
         match target {
             QueryTarget::Keys(keys) => {
@@ -990,13 +1131,29 @@ impl ClusterClient {
                         "sample/partition needs at least one key".to_string(),
                     ));
                 }
+                let view = if self.gather_cache.is_some() {
+                    Some(self.version_view()?)
+                } else {
+                    None
+                };
                 let mut acc: Option<GumbelMaxSketch> = None;
                 for key in keys {
-                    let (_, sk) = self.fetch_key(key)?.ok_or_else(|| {
-                        ClusterError::Gather(format!(
-                            "no store entry '{key}' on any live owner"
-                        ))
-                    })?;
+                    let cached = view
+                        .as_ref()
+                        .and_then(|v| v.get(key))
+                        .and_then(|&ver| self.cached_blob(key, ver));
+                    let sk = match cached {
+                        Some(sk) => sk,
+                        None => {
+                            let (version, sk) = self.fetch_key(key)?.ok_or_else(|| {
+                                ClusterError::Gather(format!(
+                                    "no store entry '{key}' on any live owner"
+                                ))
+                            })?;
+                            self.remember_blob(key, version, &sk);
+                            sk
+                        }
+                    };
                     match &mut acc {
                         None => acc = Some(sk),
                         Some(a) => a
@@ -1231,10 +1388,19 @@ impl ClusterClient {
     }
 
     /// Restore node `i`'s store from a node-local `path` (bumps its epoch;
-    /// refresh with [`ClusterClient::reconnect`] to observe it).
+    /// refresh with [`ClusterClient::reconnect`] to observe it). Clears
+    /// the gather cache: a restore can move key versions backwards, which
+    /// the forward-only `(key, version)` validation cannot detect. (A
+    /// restore driven by a *different* client leaves this one's cache
+    /// exposed to the same regression until its next `reconnect` — the
+    /// version-only trust `repair` already documents.)
     pub fn restore_node(&mut self, i: usize, path: &str) -> Result<String, ClusterError> {
         let resp = self.slot_call(i, &Request::Restore { path: path.to_string() })?;
-        self.expect_ack(i, resp)
+        let ack = self.expect_ack(i, resp)?;
+        if let Some(cache) = &self.gather_cache {
+            cache.clear();
+        }
+        Ok(ack)
     }
 
     /// Node `i`'s current `(key, version)` map — the convergence witness

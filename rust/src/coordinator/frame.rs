@@ -781,6 +781,26 @@ mod tests {
             Response::Stats {
                 stats: Value::obj(vec![("size", Value::num(3.0)), ("shards", Value::num(8.0))]),
             },
+            // The extended store_stats shape: write generations plus the
+            // nested read-path cache object ride inside the opaque JSON
+            // payload, so the frame body codec needs no schema change.
+            Response::Stats {
+                stats: Value::obj(vec![
+                    ("size", Value::num(2.0)),
+                    ("generation", Value::num(9.0)),
+                    ("delete_generation", Value::num(1.0)),
+                    (
+                        "cache",
+                        Value::obj(vec![
+                            ("enabled", Value::Bool(true)),
+                            ("hits", Value::num(3.0)),
+                            ("stale_drops", Value::num(1.0)),
+                            ("bytes", Value::num(4096.0)),
+                            ("max_bytes", Value::num(8388608.0)),
+                        ]),
+                    ),
+                ]),
+            },
             Response::Keys { keys: vec![("doc1".into(), 3), ("doc2".into(), u64::MAX - 1)] },
             Response::Keys { keys: vec![] },
             Response::Hello {

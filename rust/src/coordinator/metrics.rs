@@ -1,6 +1,14 @@
-//! Service metrics: lock-free counters and log₂-bucketed latency
-//! histograms per operation, snapshotted to JSON for the `metrics` op and
-//! the end-to-end examples' reports.
+//! Service metrics: counters, gauges and log₂-bucketed latency histograms
+//! per operation, snapshotted to JSON for the `metrics` op and the
+//! end-to-end examples' reports.
+//!
+//! Every statically-known counter name is pre-registered in
+//! [`HOT_COUNTERS`] as a plain `AtomicU64` cell, so a hot-path bump is one
+//! `fetch_add` — no mutex, no allocation, no contention with a concurrent
+//! `/metrics` snapshot. Dynamically-named counters (per-engine paths,
+//! per-op `ops.*`) fall back to a mutex-guarded map; the snapshot merges
+//! both sources into one sorted `counters` object, so the wire output is
+//! indistinguishable from the all-map implementation it replaced.
 
 use crate::util::json::Value;
 use std::collections::HashMap;
@@ -64,9 +72,52 @@ impl LatencyHist {
     }
 }
 
+/// Every counter name bumped from a statically-known call site, each
+/// backed by a lock-free atomic cell in [`Metrics::hot`]. MUST stay
+/// sorted and duplicate-free — lookups binary-search it (enforced by a
+/// unit test). Adding a name here is purely an optimization: an unlisted
+/// name silently takes the map path with identical semantics.
+const HOT_COUNTERS: [&str; 31] = [
+    "errors",
+    "path.query.merge_cached",
+    "path.query.merge_keys",
+    "path.query.stream",
+    "path.sketch.sharded",
+    "path.sketch.single",
+    "path.topk.cached",
+    "path.topk.probe",
+    "path.topk.scan",
+    "query.partition",
+    "query.sample",
+    "sample.draws",
+    "scratch.alloc",
+    "scratch.reuse",
+    "store.delete",
+    "store.fetch",
+    "store.keys",
+    "store.put",
+    "store.restore",
+    "store.snapshot",
+    "store.upsert",
+    "stream.merge",
+    "topk.candidates",
+    "topk.reranked",
+    "transport.batches",
+    "transport.bytes_in",
+    "transport.bytes_out",
+    "transport.frames_in",
+    "transport.frames_out",
+    "transport.obuf.alloc",
+    "transport.obuf.reuse",
+];
+
 /// Global metrics registry.
 #[derive(Default)]
 pub struct Metrics {
+    /// Parallel to [`HOT_COUNTERS`]: the lock-free cells.
+    hot: [AtomicU64; HOT_COUNTERS.len()],
+    /// Fallback for dynamically-named counters only — a hot name is never
+    /// inserted here, so the snapshot merge can't double-report.
     counters: Mutex<HashMap<String, u64>>,
     gauges: Mutex<HashMap<String, f64>>,
     latencies: Mutex<HashMap<String, std::sync::Arc<LatencyHist>>>,
@@ -75,12 +126,11 @@ pub struct Metrics {
 
 impl Metrics {
     pub fn new() -> Self {
-        Metrics {
-            counters: Mutex::new(HashMap::new()),
-            gauges: Mutex::new(HashMap::new()),
-            latencies: Mutex::new(HashMap::new()),
-            started: Some(Instant::now()),
-        }
+        Metrics { started: Some(Instant::now()), ..Metrics::default() }
+    }
+
+    fn hot_idx(name: &str) -> Option<usize> {
+        HOT_COUNTERS.binary_search(&name).ok()
     }
 
     pub fn incr(&self, name: &str) {
@@ -88,11 +138,22 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, delta: u64) {
-        *lock_unpoisoned(&self.counters).entry(name.to_string()).or_insert(0) += delta;
+        match Self::hot_idx(name) {
+            Some(i) => {
+                self.hot[i].fetch_add(delta, Ordering::Relaxed);
+            }
+            None => {
+                *lock_unpoisoned(&self.counters).entry(name.to_string()).or_insert(0) +=
+                    delta;
+            }
+        }
     }
 
     pub fn counter(&self, name: &str) -> u64 {
-        lock_unpoisoned(&self.counters).get(name).copied().unwrap_or(0)
+        match Self::hot_idx(name) {
+            Some(i) => self.hot[i].load(Ordering::Relaxed),
+            None => lock_unpoisoned(&self.counters).get(name).copied().unwrap_or(0),
+        }
     }
 
     /// Set a last-value-wins gauge (e.g. `queue_depth`).
@@ -123,6 +184,14 @@ impl Metrics {
             .iter()
             .map(|(k, v)| (k.clone(), Value::num(*v as f64)))
             .collect();
+        // Zero-valued hot cells are omitted: before pre-registration a
+        // counter only existed once bumped, and the output stays that way.
+        for (name, cell) in HOT_COUNTERS.iter().zip(&self.hot) {
+            let v = cell.load(Ordering::Relaxed);
+            if v > 0 {
+                items.push((name.to_string(), Value::num(v as f64)));
+            }
+        }
         items.sort_by(|a, b| a.0.cmp(&b.0));
         let gauges = lock_unpoisoned(&self.gauges);
         let mut gauge_items: Vec<(String, Value)> =
@@ -169,6 +238,55 @@ mod tests {
         assert_eq!(m.counter("a"), 2);
         assert_eq!(m.counter("b"), 5);
         assert_eq!(m.counter("zzz"), 0);
+        // Hot (pre-registered) names behave identically through the same
+        // API, atomic cell or not.
+        m.incr("store.upsert");
+        m.add("store.upsert", 2);
+        assert_eq!(m.counter("store.upsert"), 3);
+    }
+
+    /// The binary-search table must be sorted and duplicate-free, or hot
+    /// lookups silently fall through to the map and split a counter in
+    /// two.
+    #[test]
+    fn hot_counter_table_is_sorted_and_unique() {
+        for w in HOT_COUNTERS.windows(2) {
+            assert!(w[0] < w[1], "HOT_COUNTERS out of order: {:?} then {:?}", w[0], w[1]);
+        }
+        for name in HOT_COUNTERS {
+            assert_eq!(Metrics::hot_idx(name), HOT_COUNTERS.iter().position(|n| *n == name));
+        }
+    }
+
+    /// Hot counters never touch the fallback mutex: bumps and reads keep
+    /// working with the map lock *held* (no deadlock) and after the map
+    /// is poisoned, and the snapshot merges hot and dynamic names into
+    /// one sorted object exactly as the all-map implementation did.
+    #[test]
+    fn hot_counters_bypass_a_held_or_poisoned_map() {
+        let m = Metrics::new();
+        m.incr("custom.dynamic");
+        {
+            let _held = m.counters.lock().unwrap();
+            m.incr("store.upsert");
+            assert_eq!(m.counter("store.upsert"), 1);
+        }
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _c = m.counters.lock().unwrap();
+            panic!("holder panicked mid-update");
+        }));
+        assert!(caught.is_err());
+        assert!(m.counters.is_poisoned(), "test setup must actually poison");
+        m.incr("store.upsert");
+        assert_eq!(m.counter("store.upsert"), 2);
+        let snap = m.snapshot();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.get("store.upsert").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(counters.get("custom.dynamic").and_then(|v| v.as_f64()), Some(1.0));
+        // Merged output is sorted and never reports untouched hot cells.
+        let Value::Obj(items) = counters else { panic!("counters must be an object") };
+        assert!(items.windows(2).all(|w| w[0].0 < w[1].0), "unsorted: {items:?}");
+        assert!(counters.get("store.delete").is_none(), "zero-valued cell leaked");
     }
 
     #[test]

@@ -46,6 +46,11 @@
 //!   snapshot/restore via [`crate::sketch::codec`].
 //! * [`merger`] — distributed-site sketch merge (§2.3 mergeability; empty
 //!   merges are typed errors, the zero-live-sites failure mode).
+//! * [`cache`] — the versioned read-path cache: byte-bounded sharded LRU
+//!   for merged key unions (tagged with per-key write versions — hits are
+//!   bit-identical to fresh merges by construction) and top-k rankings
+//!   (tagged with per-shard store generations); the cluster client reuses
+//!   it for `(key, version)` gather blobs.
 //! * [`metrics`] — counters + latency histograms, surfaced over the wire.
 //! * [`server`] / [`client`] — blocking TCP transport (one thread per
 //!   connection, JSON lines; the client also speaks framed mode).
@@ -64,6 +69,7 @@ pub mod metrics;
 pub mod backpressure;
 pub mod registry;
 pub mod store;
+pub mod cache;
 pub mod router;
 pub mod worker;
 pub mod batcher;

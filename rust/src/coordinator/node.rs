@@ -27,6 +27,7 @@
 //! so a mis-routed comparison fails loudly instead of silently biasing.
 
 use super::batcher::{BatcherConfig, DenseBatcher};
+use super::cache::{self, ByteLruCache, Digest};
 use super::merger::merge_tree;
 use super::metrics::Metrics;
 use super::protocol::{HelloInfo, QueryTarget, Request, Response, SketchSource, PROTOCOL_VERSION};
@@ -77,6 +78,14 @@ pub struct CoordinatorConfig {
     /// by the `hello` handshake and used by the rendezvous partitioner —
     /// it must be unique and stable across restarts of the same site.
     pub node_id: String,
+    /// Read-path cache budget in bytes (config key `cache.max_bytes`, CLI
+    /// `serve --cache-bytes`), split evenly between the merged-union cache
+    /// and the top-k result cache. 0 disables caching entirely.
+    pub cache_max_bytes: usize,
+    /// Master switch for the read-path cache (config key `cache.enabled`);
+    /// off means every key-set query re-runs the §2.3 merge and every
+    /// `topk` re-ranks — PR 8 behavior exactly.
+    pub cache_enabled: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -97,6 +106,8 @@ impl Default for CoordinatorConfig {
             store_shards: 8,
             topk_scan_max: 64,
             node_id: "node-0".to_string(),
+            cache_max_bytes: 8 << 20,
+            cache_enabled: true,
         }
     }
 }
@@ -130,8 +141,28 @@ impl CoordinatorConfig {
             store_shards: cfg.usize("store.shards", d.store_shards),
             topk_scan_max: cfg.usize("store.topk_scan_max", d.topk_scan_max),
             node_id: cfg.str("node.id", &d.node_id),
+            cache_max_bytes: cfg.usize("cache.max_bytes", d.cache_max_bytes),
+            cache_enabled: cfg.bool("cache.enabled", d.cache_enabled),
         }
     }
+}
+
+/// A cached merged union: the §2.3 merge result plus its exact-invalidation
+/// tag — the member `(key, version)` vector `merge_keys` reported and the
+/// store's version-drop generation at merge time. Valid iff
+/// [`SketchStore::members_match`] re-proves both against the live store.
+struct MergeEntry {
+    sketch: GumbelMaxSketch,
+    members: Vec<(String, u64)>,
+    delete_gen: u64,
+}
+
+/// A cached top-k ranking, tagged with the per-shard write generations the
+/// store held *before* the ranking ran: a ranking read every entry, so any
+/// write anywhere is grounds for invalidation.
+struct TopKEntry {
+    hits: Vec<(String, f64)>,
+    gens: Vec<u64>,
 }
 
 pub struct Node {
@@ -144,6 +175,15 @@ pub struct Node {
     lsh_names: RwLock<HashMap<u64, String>>,
     /// Keyed similarity-serving store (upsert/delete/topk/snapshot ops).
     store: SketchStore,
+    /// Merged-union read cache (the `sample`/`partition` key-set target):
+    /// normalized key-set digest → [`MergeEntry`]. Hits are re-proved
+    /// against the live store's versions before being served, so a cached
+    /// union is bit-identical to a fresh merge by construction.
+    merge_cache: ByteLruCache<Arc<MergeEntry>>,
+    /// Top-k result cache: query-register digest → [`TopKEntry`].
+    topk_cache: ByteLruCache<Arc<TopKEntry>>,
+    /// `cfg.cache_enabled && cfg.cache_max_bytes > 0`, resolved once.
+    cache_on: bool,
     accel_on: bool,
     /// Resolved `cfg.algo` (validated at construction time).
     default_algo: AlgorithmId,
@@ -220,6 +260,12 @@ impl Node {
                 .or_insert_with(|| Arc::from(engine::build(id, engine_params)));
         }
         let lsh_params = LshParams::for_threshold(cfg.k, cfg.lsh_threshold);
+        let cache_on = cfg.cache_enabled && cfg.cache_max_bytes > 0;
+        // Half the byte budget each: merged unions are big (k × 16-byte
+        // registers) and rankings are small (limit × name), so the top-k
+        // half effectively never evicts while the merge half does the real
+        // LRU work.
+        let merge_budget = cfg.cache_max_bytes / 2;
         Ok(Node {
             router: Router::new(RouterConfig {
                 accel_max_len,
@@ -227,6 +273,7 @@ impl Node {
                 shards: cfg.shards.max(1),
                 shard_min_nplus: cfg.shard_min_nplus,
                 topk_scan_max: cfg.topk_scan_max,
+                cache: cache_on,
             }),
             registry: Registry::new(),
             metrics: Metrics::new(),
@@ -234,6 +281,9 @@ impl Node {
             lsh: RwLock::new(LshIndex::new(lsh_params)),
             lsh_names: RwLock::new(HashMap::new()),
             store: SketchStore::new(lsh_params, cfg.store_shards.max(1)),
+            merge_cache: ByteLruCache::new(merge_budget, 8),
+            topk_cache: ByteLruCache::new(cfg.cache_max_bytes - merge_budget, 8),
+            cache_on,
             accel_on,
             default_algo,
             engine_params,
@@ -376,16 +426,57 @@ impl Node {
 
     /// Resolve a query target to the sketch its estimator runs over — the
     /// execute half of the plan/execute seam (every store-backed read is
-    /// routed by [`Router::plan_query`], so future access-path policies —
-    /// e.g. cached merges for hot key sets — land in the router, not
-    /// here). Key sets union-merge under the store's shard locks with no
-    /// register clones; stream targets read the live stream state.
+    /// routed by [`Router::plan_query`]; the cached-merge access path the
+    /// seam was built for lives behind [`QueryPlan::CachedMerge`]). Key
+    /// sets union-merge under the store's shard locks with no register
+    /// clones — or are served from the versioned merge cache when the
+    /// store can prove every member `(key, version)` is unchanged; stream
+    /// targets always read the live stream state (never cached — their
+    /// state has no version to validate against).
     fn read_query_target(&self, target: &QueryTarget) -> anyhow::Result<GumbelMaxSketch> {
         let shape = match target {
             QueryTarget::Keys(_) => QueryShape::Keys,
             QueryTarget::Stream(_) => QueryShape::Stream,
         };
         match (self.router.plan_query(shape), target) {
+            (QueryPlan::CachedMerge, QueryTarget::Keys(keys)) => {
+                // Normalize first: the §2.3 union merge is idempotent and
+                // order-free, so the sorted deduped member list is both the
+                // canonical cache identity and a bit-identical merge input.
+                let mut members: Vec<String> = keys.clone();
+                members.sort_unstable();
+                members.dedup();
+                let mut d = Digest::new();
+                for key in &members {
+                    d.str(key);
+                }
+                let digest = d.finish();
+                if let Some(hit) = self.merge_cache.get_validated(digest, |e| {
+                    self.store.members_match(&e.members, e.delete_gen)
+                }) {
+                    self.metrics.incr("path.query.merge_cached");
+                    return Ok(hit.sketch.clone());
+                }
+                self.metrics.incr("path.query.merge_keys");
+                // Tag snapshot happens BEFORE the merge: a write racing the
+                // merge bumps its counter first (inside the store's
+                // critical section), so the entry can only validate stale —
+                // it can never serve pre-write registers as post-write
+                // state.
+                let delete_gen = self.store.delete_generation();
+                let (sk, versions) = self.store.merge_keys(&members)?;
+                let members: Vec<(String, u64)> =
+                    members.into_iter().zip(versions).collect();
+                let cost = sk.k() * 16
+                    + members.iter().map(|(key, _)| key.len() + 24).sum::<usize>()
+                    + 64;
+                self.merge_cache.insert(
+                    digest,
+                    Arc::new(MergeEntry { sketch: sk.clone(), members, delete_gen }),
+                    cost,
+                );
+                Ok(sk)
+            }
             (QueryPlan::MergeKeys, QueryTarget::Keys(keys)) => {
                 self.metrics.incr("path.query.merge_keys");
                 let (sk, _versions) = self.store.merge_keys(keys)?;
@@ -408,6 +499,28 @@ impl Node {
     fn observe_store(&self) {
         self.metrics.gauge_set("store.size", self.store.len() as f64);
         self.metrics.gauge_set("store.lsh_size", self.store.lsh_len() as f64);
+        let cs = cache::combine(self.merge_cache.stats(), self.topk_cache.stats());
+        self.metrics.gauge_set("cache.hit", cs.hits as f64);
+        self.metrics.gauge_set("cache.miss", cs.misses as f64);
+        self.metrics.gauge_set("cache.evict", cs.evictions as f64);
+        self.metrics.gauge_set("cache.stale_drop", cs.stale_drops as f64);
+        self.metrics.gauge_set("cache.bytes", cs.bytes as f64);
+    }
+
+    /// [`SketchStore::stats`] plus the combined `cache` object — the one
+    /// payload both the `store_stats` and `metrics` ops embed, on both
+    /// transports (the wire carries stats as opaque JSON, so this needed
+    /// no protocol change).
+    fn store_stats_with_cache(&self) -> crate::util::json::Value {
+        let mut stats = self.store.stats();
+        stats.set(
+            "cache",
+            cache::stats_value(
+                self.cache_on,
+                cache::combine(self.merge_cache.stats(), self.topk_cache.stats()),
+            ),
+        );
+        stats
     }
 
     fn execute_inner(
@@ -423,7 +536,7 @@ impl Node {
                 let mut snap = self.metrics.snapshot();
                 snap.set("sketches", crate::util::json::Value::num(self.registry.sketch_count() as f64));
                 snap.set("streams", crate::util::json::Value::num(self.registry.stream_count() as f64));
-                snap.set("store", self.store.stats());
+                snap.set("store", self.store_stats_with_cache());
                 snap.set("accel", crate::util::json::Value::Bool(self.accel_on));
                 snap.set("shards", crate::util::json::Value::num(self.cfg.shards as f64));
                 snap.set("algo", crate::util::json::Value::str(self.default_algo.name()));
@@ -665,6 +778,33 @@ impl Node {
             Request::TopK { vector, limit } => {
                 self.ensure_lsh_capable()?;
                 let query = self.sketch_sparse(&vector, None, scratch)?;
+                // Probe-then-fill: the ranking cache is keyed by a digest
+                // of every query register bit + the limit, and tagged with
+                // the per-shard write generations snapshotted BEFORE the
+                // ranking runs — any store write since then invalidates
+                // (the ranking read every entry, so whole-store granularity
+                // is exact, not conservative).
+                let digest = self.cache_on.then(|| {
+                    let mut d = Digest::new();
+                    d.u64(limit as u64);
+                    for &y in &query.y {
+                        d.f64(y);
+                    }
+                    for &s in &query.s {
+                        d.u64(s);
+                    }
+                    d.finish()
+                });
+                if let Some(digest) = digest {
+                    if let Some(hit) = self.topk_cache.get_validated(digest, |e| {
+                        self.store.generations() == e.gens
+                    }) {
+                        self.metrics.incr("path.topk.cached");
+                        return Ok(Response::TopK { hits: hit.hits.clone() });
+                    }
+                }
+                let gens =
+                    if digest.is_some() { self.store.generations() } else { Vec::new() };
                 let shape = QueryShape::Rank { store_len: self.store.len() };
                 let (hits, stats) = match self.router.plan_query(shape) {
                     QueryPlan::FullScan => {
@@ -679,6 +819,16 @@ impl Node {
                 };
                 self.metrics.add("topk.candidates", stats.candidates as u64);
                 self.metrics.add("topk.reranked", stats.reranked as u64);
+                if let Some(digest) = digest {
+                    let cost = 64
+                        + gens.len() * 8
+                        + hits.iter().map(|(name, _)| name.len() + 32).sum::<usize>();
+                    self.topk_cache.insert(
+                        digest,
+                        Arc::new(TopKEntry { hits: hits.clone(), gens }),
+                        cost,
+                    );
+                }
                 Response::TopK { hits }
             }
             Request::Sample { target, n, seed } => {
@@ -695,7 +845,7 @@ impl Node {
                 self.metrics.incr("query.partition");
                 Response::Estimate { value }
             }
-            Request::StoreStats => Response::Stats { stats: self.store.stats() },
+            Request::StoreStats => Response::Stats { stats: self.store_stats_with_cache() },
             Request::Snapshot { path } => {
                 let (bytes, entries) = self.store.snapshot_bytes();
                 // Write-then-rename so a crash or full disk mid-write can
@@ -736,7 +886,13 @@ impl Node {
                     Some((self.default_algo.family(), self.cfg.seed, self.cfg.k)),
                 )?;
                 self.metrics.incr("store.restore");
-                // State replaced: a new epoch, visible through `hello`.
+                // State replaced: every cached tag is now unprovable
+                // (restore bumped the version-drop and shard generations),
+                // so validation would reject each entry on its next probe —
+                // clearing now just returns the memory immediately.
+                self.merge_cache.clear();
+                self.topk_cache.clear();
+                // A new epoch, visible through `hello`.
                 self.epoch.fetch_add(1, Ordering::SeqCst);
                 Response::Ack { info: format!("restored {n} entries from '{path}'") }
             }
@@ -939,6 +1095,211 @@ mod tests {
             assert!(message.contains(want), "{message}");
         }
         nd.shutdown();
+    }
+
+    /// Cached reads may only ever change latency, never a bit: for both
+    /// EXP-register families, `sample`/`partition`/`topk` answers from a
+    /// cache-enabled node equal a cache-disabled node's — on the fill, on
+    /// the hit, after an interleaved write, and after the delete +
+    /// re-upsert sequence that resets the key's version run (the case the
+    /// version-drop generation exists for: without it the re-upserted key
+    /// comes back at v1 and a `(key, v1)` tag from the *old* v1 contents
+    /// would wrongly validate).
+    #[test]
+    fn cached_reads_are_bit_identical_to_fresh_across_families() {
+        for algo in ["fastgm", "pminhash"] {
+            let cached = Node::new(CoordinatorConfig {
+                k: 64,
+                algo: algo.into(),
+                ..CoordinatorConfig::default()
+            })
+            .unwrap();
+            let fresh = Node::new(CoordinatorConfig {
+                k: 64,
+                algo: algo.into(),
+                cache_enabled: false,
+                ..CoordinatorConfig::default()
+            })
+            .unwrap();
+            let va = SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+            let vb = SparseVector::new(vec![3, 4], vec![1.5, 1.0]);
+            let vc = SparseVector::new(vec![5, 6, 7], vec![0.5, 0.5, 3.0]);
+            let both = |req: Request| {
+                let a = cached.execute_alloc(req.clone());
+                let b = fresh.execute_alloc(req.clone());
+                assert_eq!(a, b, "[{algo}] cached and fresh answers diverge for {req:?}");
+                a
+            };
+            let upsert = |key: &str, v: &SparseVector| {
+                both(Request::Upsert { key: key.into(), vector: v.clone(), version: None });
+            };
+            upsert("a", &va);
+            upsert("b", &vb);
+            // Duplicated, unsorted key lists normalize to the same entry.
+            let keys = || QueryTarget::Keys(vec!["b".into(), "a".into(), "b".into()]);
+            let probe = |tag: &str| {
+                for _round in 0..2 {
+                    both(Request::Sample { target: keys(), n: 32, seed: 9 });
+                    both(Request::Partition { target: keys() });
+                    both(Request::TopK { vector: va.clone(), limit: 2 });
+                }
+                assert!(
+                    matches!(both(Request::Sample { target: keys(), n: 8, seed: 1 }),
+                        Response::Samples { .. }),
+                    "[{algo}] {tag}: probes must succeed"
+                );
+            };
+            probe("initial fill + hit");
+            // Delete + re-upsert with DIFFERENT contents lands back at v1 —
+            // the exact version the cached tag holds, so only the
+            // version-drop generation can reject the stale entry.
+            both(Request::Delete { key: "b".into() });
+            upsert("b", &vc);
+            assert_eq!(cached.store.version_of("b"), Some(1), "[{algo}]");
+            probe("after delete + re-upsert at the same version");
+            // A plain write to a member key must invalidate too.
+            upsert("b", &va);
+            assert_eq!(cached.store.version_of("b"), Some(2), "[{algo}]");
+            probe("after version bump");
+            // The hit path actually ran (this test would pass vacuously
+            // against an always-miss cache).
+            assert!(
+                cached.metrics().counter("path.query.merge_cached") >= 3,
+                "[{algo}] merge cache never hit"
+            );
+            assert!(
+                cached.metrics().counter("path.topk.cached") >= 1,
+                "[{algo}] topk cache never hit"
+            );
+            assert_eq!(fresh.metrics().counter("path.query.merge_cached"), 0);
+            cached.shutdown();
+            fresh.shutdown();
+        }
+    }
+
+    /// A writer racing a `sample --keys` loop can never make the cache
+    /// serve a stale union: the member key only ever holds one of two
+    /// known vectors, so every sampled answer must equal the fresh-merge
+    /// answer for one of those two states — and once the writer stops, the
+    /// answer must equal the final state's exactly.
+    #[test]
+    fn racing_writer_never_yields_a_stale_cached_union() {
+        let n = node();
+        let va = SparseVector::new(vec![1, 2], vec![1.0, 1.0]);
+        let vb1 = SparseVector::new(vec![10, 11], vec![1.0, 2.0]);
+        let vb2 = SparseVector::new(vec![20, 21], vec![2.0, 1.0]);
+        let up = |key: &str, v: &SparseVector| {
+            n.execute_alloc(Request::Upsert { key: key.into(), vector: v.clone(), version: None });
+        };
+        up("a", &va);
+        let keys = vec!["a".to_string(), "b".to_string()];
+        // The only two answers a consistent union can produce.
+        let expected: Vec<Vec<u64>> = [&vb1, &vb2]
+            .iter()
+            .map(|vb| {
+                up("b", vb);
+                let (merged, _) = n.store.merge_keys(&keys).unwrap();
+                sample::sample_n(&merged, 16, 5).unwrap()
+            })
+            .collect();
+        assert_ne!(expected[0], expected[1], "states must be distinguishable");
+        const ROUNDS: usize = 400;
+        std::thread::scope(|scope| {
+            let writer = scope.spawn(|| {
+                for i in 0..ROUNDS {
+                    n.execute_alloc(Request::Upsert {
+                        key: "b".into(),
+                        vector: if i % 2 == 0 { vb1.clone() } else { vb2.clone() },
+                        version: None,
+                    });
+                }
+            });
+            for _ in 0..ROUNDS {
+                let Response::Samples { ids } = n.execute_alloc(Request::Sample {
+                    target: QueryTarget::Keys(keys.clone()),
+                    n: 16,
+                    seed: 5,
+                }) else {
+                    panic!("expected samples")
+                };
+                assert!(
+                    ids == expected[0] || ids == expected[1],
+                    "stale or torn union served: {ids:?}"
+                );
+            }
+            writer.join().unwrap();
+        });
+        // Quiesced: the cache must now agree with the writer's last state
+        // (ROUNDS even → last write was vb2).
+        let Response::Samples { ids } = n.execute_alloc(Request::Sample {
+            target: QueryTarget::Keys(keys.clone()),
+            n: 16,
+            seed: 5,
+        }) else {
+            panic!("expected samples")
+        };
+        assert_eq!(ids, expected[1], "post-race answer must match the final state");
+        n.shutdown();
+    }
+
+    /// The cache surfaces through both stats ops: `store_stats` and
+    /// `metrics` embed the same `cache` object, hit/miss/bytes move, and
+    /// `restore` clears the cache outright.
+    #[test]
+    fn cache_stats_surface_and_restore_clears() {
+        let path = std::env::temp_dir().join(format!(
+            "fastgm-node-cache-{}.fgms",
+            std::process::id()
+        ));
+        let path_str = path.to_string_lossy().to_string();
+        let n = node();
+        n.execute_alloc(Request::Upsert { key: "a".into(), vector: vec1(), version: None });
+        let sample = || {
+            n.execute_alloc(Request::Sample {
+                target: QueryTarget::key("a"),
+                n: 4,
+                seed: 0,
+            })
+        };
+        sample(); // miss + fill
+        sample(); // hit
+        let Response::Stats { stats } = n.execute_alloc(Request::StoreStats) else {
+            panic!("expected stats")
+        };
+        let cache = stats.get("cache").expect("store_stats must embed the cache object");
+        let field = |name: &str| cache.get(name).and_then(|v| v.as_f64()).unwrap();
+        assert_eq!(cache.get("enabled").and_then(|v| v.as_bool()), Some(true));
+        assert!(field("hits") >= 1.0, "{stats}");
+        assert!(field("misses") >= 1.0, "{stats}");
+        assert!(field("bytes") > 0.0, "{stats}");
+        assert!(field("entries") >= 1.0, "{stats}");
+        // The metrics op embeds the identical object + the cache gauges.
+        let Response::MetricsDump { snapshot } = n.execute_alloc(Request::Metrics) else {
+            panic!("expected metrics")
+        };
+        assert_eq!(
+            snapshot.get("store").and_then(|s| s.get("cache")).map(|v| v.to_string()),
+            Some(cache.to_string()),
+            "metrics and store_stats disagree about the cache"
+        );
+        let gauge = |name: &str| {
+            snapshot.get("gauges").and_then(|g| g.get(name)).and_then(|v| v.as_f64())
+        };
+        assert_eq!(gauge("cache.hit"), Some(field("hits")), "{snapshot}");
+        assert_eq!(gauge("cache.bytes"), Some(field("bytes")), "{snapshot}");
+        assert!(gauge("cache.miss").is_some() && gauge("cache.evict").is_some());
+        assert!(gauge("cache.stale_drop").is_some());
+        // Restore drops every cached entry immediately.
+        n.execute_alloc(Request::Snapshot { path: path_str.clone() });
+        n.execute_alloc(Request::Restore { path: path_str });
+        let Response::Stats { stats } = n.execute_alloc(Request::StoreStats) else {
+            panic!("expected stats")
+        };
+        let cache = stats.get("cache").unwrap();
+        assert_eq!(cache.get("entries").and_then(|v| v.as_f64()), Some(0.0), "{stats}");
+        assert_eq!(cache.get("bytes").and_then(|v| v.as_f64()), Some(0.0), "{stats}");
+        n.shutdown();
+        let _ = std::fs::remove_file(path);
     }
 
     /// The anti-entropy surface end to end on one node: versioned upserts,

@@ -56,6 +56,11 @@ pub enum QueryPlan {
     /// Union-merge the named keys' registers under the shard locks (no
     /// register clones on the hot path), then estimate on the merge.
     MergeKeys,
+    /// Probe the versioned merge cache first; on a validated hit serve the
+    /// cached union (bit-identical to the fresh merge by construction), on
+    /// a miss fall back to [`QueryPlan::MergeKeys`] and fill the cache
+    /// with the merged sketch tagged by its member version vector.
+    CachedMerge,
     /// Read the named live stream state's current sketch.
     StreamSketch,
 }
@@ -74,6 +79,10 @@ pub struct RouterConfig {
     /// Largest store size answered by a brute-force scan; bigger stores go
     /// through the banded LSH probe.
     pub topk_scan_max: usize,
+    /// Probe-then-fill the versioned read-path cache for key-set merges
+    /// (and, at the execution layer, top-k rankings). Off routes key-set
+    /// queries straight to the uncached merge.
+    pub cache: bool,
 }
 
 impl Default for RouterConfig {
@@ -84,6 +93,7 @@ impl Default for RouterConfig {
             shards: 1,
             shard_min_nplus: 4096,
             topk_scan_max: 64,
+            cache: true,
         }
     }
 }
@@ -113,10 +123,13 @@ impl Router {
     }
 
     /// Plan a store-backed query. Ranking queries pick scan-vs-probe by
-    /// store size (the old `topk` routing, unchanged); key-set and stream
-    /// queries have one access path each today — routed here anyway so
-    /// every query op shares the seam (and future policies, e.g. cached
-    /// merges for hot key sets, land in one place).
+    /// store size (the old `topk` routing, unchanged — the execution layer
+    /// wraps either plan with the generation-tagged top-k cache when
+    /// `cache` is on); key-set queries route through the versioned merge
+    /// cache (`CachedMerge` probe-then-fill) unless caching is off; stream
+    /// queries read live state and are never cached (their sketch mutates
+    /// without a version to validate against — TTL caching is recorded
+    /// headroom, not policy).
     pub fn plan_query(&self, shape: QueryShape) -> QueryPlan {
         match shape {
             QueryShape::Rank { store_len } => {
@@ -126,7 +139,13 @@ impl Router {
                     QueryPlan::BandProbe
                 }
             }
-            QueryShape::Keys => QueryPlan::MergeKeys,
+            QueryShape::Keys => {
+                if self.cfg.cache {
+                    QueryPlan::CachedMerge
+                } else {
+                    QueryPlan::MergeKeys
+                }
+            }
             QueryShape::Stream => QueryPlan::StreamSketch,
         }
     }
@@ -259,8 +278,14 @@ mod tests {
         let r = Router::new(RouterConfig { topk_scan_max: 2, ..RouterConfig::default() });
         assert_eq!(r.plan_query(QueryShape::Rank { store_len: 1 }), QueryPlan::FullScan);
         assert_eq!(r.plan_query(QueryShape::Rank { store_len: 3 }), QueryPlan::BandProbe);
-        assert_eq!(r.plan_query(QueryShape::Keys), QueryPlan::MergeKeys);
+        // Cache on (the default): key sets probe-then-fill the merge cache.
+        assert_eq!(r.plan_query(QueryShape::Keys), QueryPlan::CachedMerge);
         assert_eq!(r.plan_query(QueryShape::Stream), QueryPlan::StreamSketch);
+        // Cache off: key sets route straight to the uncached merge, and
+        // nothing else moves.
+        let off = Router::new(RouterConfig { cache: false, ..RouterConfig::default() });
+        assert_eq!(off.plan_query(QueryShape::Keys), QueryPlan::MergeKeys);
+        assert_eq!(off.plan_query(QueryShape::Stream), QueryPlan::StreamSketch);
     }
 
     #[test]

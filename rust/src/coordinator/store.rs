@@ -50,6 +50,7 @@ use crate::sketch::{Family, GumbelMaxSketch, MergeError};
 use crate::util::hash::token_id;
 use crate::util::json::Value;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 /// What a top-k query cost, for the coordinator's metrics.
@@ -79,6 +80,20 @@ pub struct SketchStore {
     lsh: RwLock<LshIndex>,
     /// LSH ids are `token_id(key)`; this maps them back for responses.
     names: RwLock<HashMap<u64, String>>,
+    /// Per-shard write generation, bumped inside the shard's write lock on
+    /// every install/delete/clear. Whole-store answers (top-k rankings)
+    /// are cache-tagged with a snapshot of these: any write anywhere
+    /// invalidates, which is exactly right for a query that ranked every
+    /// entry.
+    gens: Vec<AtomicU64>,
+    /// Version-drop generation, bumped on every delete/clear/restore. Per-
+    /// key versions are only monotonic while the key exists — delete drops
+    /// the version and the next write restarts at 1 (no tombstones), so a
+    /// delete + re-upsert could make a stale `(key, version)` tag match
+    /// again. Tagging cached merges with this counter closes that hole:
+    /// upserts keep exact per-key invalidation, version-dropping events
+    /// (rare) invalidate coarsely.
+    delete_gen: AtomicU64,
 }
 
 impl SketchStore {
@@ -90,6 +105,8 @@ impl SketchStore {
             shards: (0..shards).map(|_| RwLock::new(HashMap::new())).collect(),
             lsh: RwLock::new(LshIndex::new(lsh_params)),
             names: RwLock::new(HashMap::new()),
+            gens: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            delete_gen: AtomicU64::new(0),
         }
     }
 
@@ -126,7 +143,8 @@ impl SketchStore {
     /// `previous + 1`; `Some(v)` installs iff strictly newer.
     fn upsert_inner(&self, key: &str, version: Option<u64>, sk: GumbelMaxSketch) -> Option<u64> {
         let id = token_id(key);
-        let mut shard = self.shards[self.shard_of(key)].write().expect("store shard lock");
+        let idx = self.shard_of(key);
+        let mut shard = self.shards[idx].write().expect("store shard lock");
         let held = shard.get(key).map(|v| v.version);
         let install = match version {
             None => held.map_or(1, |h| h + 1),
@@ -138,6 +156,10 @@ impl SketchStore {
             }
         };
         shard.insert(key.to_string(), VersionedSketch { version: install, sketch: sk.clone() });
+        // Bumped inside the shard critical section, so a generation
+        // snapshot validated under the shard lock can never miss a write
+        // that the map already shows.
+        self.gens[idx].fetch_add(1, Ordering::SeqCst);
         self.lsh.write().expect("store lsh lock").upsert(id, sk);
         self.names.write().expect("store names lock").insert(id, key.to_string());
         Some(install)
@@ -147,9 +169,12 @@ impl SketchStore {
     /// the index updates for the same reason as [`Self::upsert_inner`].
     pub fn delete(&self, key: &str) -> bool {
         let _gate = self.gate.read().expect("store gate");
-        let mut shard = self.shards[self.shard_of(key)].write().expect("store shard lock");
+        let idx = self.shard_of(key);
+        let mut shard = self.shards[idx].write().expect("store shard lock");
         let existed = shard.remove(key).is_some();
         if existed {
+            self.gens[idx].fetch_add(1, Ordering::SeqCst);
+            self.delete_gen.fetch_add(1, Ordering::SeqCst);
             let id = token_id(key);
             self.lsh.write().expect("store lsh lock").remove(id);
             self.names.write().expect("store names lock").remove(&id);
@@ -180,6 +205,50 @@ impl SketchStore {
             .expect("store shard lock")
             .get(key)
             .map(|v| v.version)
+    }
+
+    /// Snapshot of the per-shard write generations — the whole-store
+    /// freshness tag for cached top-k results. Taken *before* running the
+    /// query it tags: a write racing the query bumps its shard generation
+    /// first (inside the shard lock), so the cached entry validates stale
+    /// and is dropped rather than ever serving pre-write rankings as
+    /// post-write state.
+    pub fn generations(&self) -> Vec<u64> {
+        self.gens.iter().map(|g| g.load(Ordering::SeqCst)).collect()
+    }
+
+    /// The version-drop counter cached merges are tagged with (see the
+    /// `delete_gen` field: deletes reset per-key version sequences, so
+    /// `(key, version)` tags alone cannot see delete + re-upsert).
+    pub fn delete_generation(&self) -> u64 {
+        self.delete_gen.load(Ordering::SeqCst)
+    }
+
+    /// Validate a cached merge's tag: true iff `delete_gen` still matches
+    /// and every member key is held at exactly the tagged version. The
+    /// seqlock-style re-check of `delete_gen` after the version pass
+    /// closes the window where a member is deleted and re-upserted back to
+    /// its tagged version between the first read and the shard reads (both
+    /// bumps happen inside the shard critical section, so a shard read
+    /// that observed the re-upsert happens-after the `delete_gen` bump).
+    /// Total writes observed between the two reads invalidate — exactly
+    /// the conservative direction.
+    pub fn members_match(&self, members: &[(String, u64)], delete_gen: u64) -> bool {
+        let _gate = self.gate.read().expect("store gate");
+        if self.delete_gen.load(Ordering::SeqCst) != delete_gen {
+            return false;
+        }
+        for (key, version) in members {
+            let held = self.shards[self.shard_of(key)]
+                .read()
+                .expect("store shard lock")
+                .get(key)
+                .map(|v| v.version);
+            if held != Some(*version) {
+                return false;
+            }
+        }
+        self.delete_gen.load(Ordering::SeqCst) == delete_gen
     }
 
     /// One page of the key range walk behind the `store_keys` op: up to
@@ -339,7 +408,14 @@ impl SketchStore {
         Ok((acc.expect("non-empty keys imply an accumulator"), versions))
     }
 
-    /// Top-`limit` by scoring every stored entry (exact, linear).
+    /// Top-`limit` by scoring every stored entry (exact, linear). Keys are
+    /// *borrowed* through the batched estimator (`estimate_jp_batch` is
+    /// generic over the key) and each shard's batch is ranked down to
+    /// `limit` while its guard is still held, so only the per-shard
+    /// winners are ever cloned — not one `String` per stored entry. The
+    /// per-shard truncation is lossless: the global top-`limit` is a
+    /// subset of the union of per-shard top-`limit`s, and the final
+    /// [`Self::rank`] applies the identical score-desc/key-asc tie rule.
     pub fn scan_topk(
         &self,
         query: &GumbelMaxSketch,
@@ -347,16 +423,21 @@ impl SketchStore {
     ) -> Result<(Vec<(String, f64)>, TopKStats), MergeError> {
         let _gate = self.gate.read().expect("store gate");
         let mut scored = Vec::new();
+        let mut candidates = 0;
         for shard in &self.shards {
             let guard = shard.read().expect("store shard lock");
-            let batch =
-                estimate_jp_batch(query, guard.iter().map(|(name, v)| (name.clone(), &v.sketch)))?;
-            drop(guard);
-            scored.extend(batch);
+            let mut batch =
+                estimate_jp_batch(query, guard.iter().map(|(name, v)| (name, &v.sketch)))?;
+            candidates += batch.len();
+            batch.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1).expect("estimates are never NaN").then(a.0.cmp(b.0))
+            });
+            batch.truncate(limit);
+            scored.extend(batch.into_iter().map(|(name, score)| (name.clone(), score)));
         }
         let stats = TopKStats {
-            candidates: scored.len(),
-            reranked: scored.len(),
+            candidates,
+            reranked: candidates,
             scanned: true,
         };
         Ok((Self::rank(scored, limit), stats))
@@ -435,14 +516,18 @@ impl SketchStore {
     }
 
     fn clear_inner(&self) {
-        for shard in &self.shards {
+        for (idx, shard) in self.shards.iter().enumerate() {
             shard.write().expect("store shard lock").clear();
+            self.gens[idx].fetch_add(1, Ordering::SeqCst);
         }
+        self.delete_gen.fetch_add(1, Ordering::SeqCst);
         *self.lsh.write().expect("store lsh lock") = LshIndex::new(self.lsh_params);
         self.names.write().expect("store names lock").clear();
     }
 
-    /// Stats for the `store_stats` op: size, shard occupancy, index shape.
+    /// Stats for the `store_stats` op: size, shard occupancy, index shape,
+    /// plus the write/version-drop generations the read-path cache tags
+    /// answers with (additive — pre-cache clients ignore them).
     pub fn stats(&self) -> Value {
         let _gate = self.gate.read().expect("store gate");
         let sizes = self.shard_sizes_inner();
@@ -458,6 +543,8 @@ impl SketchStore {
             ),
             ("bands", Value::num(self.lsh_params.bands as f64)),
             ("rows", Value::num(self.lsh_params.rows as f64)),
+            ("generation", Value::num(self.generations().iter().sum::<u64>() as f64)),
+            ("delete_generation", Value::num(self.delete_generation() as f64)),
         ])
     }
 }
@@ -724,6 +811,55 @@ mod tests {
         assert_eq!(st.len(), st.lsh_len());
         st.probe_topk(&probe, 5).unwrap();
         st.scan_topk(&probe, 5).unwrap();
+    }
+
+    /// The cache-tag counters: every install/delete/clear bumps its shard
+    /// generation, only version-dropping events bump `delete_gen`, and
+    /// `members_match` validates exactly the (key, version) vector —
+    /// including the delete + re-upsert case where the raw version matches
+    /// again but the registers may differ.
+    #[test]
+    fn generations_and_members_match_track_writes() {
+        let st = store();
+        let f = sketcher();
+        let sk = |id: u64| f.sketch(&SparseVector::new(vec![id], vec![1.0]));
+        assert_eq!(st.generations().iter().sum::<u64>(), 0);
+        assert_eq!(st.delete_generation(), 0);
+        st.upsert("a", sk(1));
+        st.upsert("b", sk(2));
+        assert_eq!(st.generations().iter().sum::<u64>(), 2, "installs bump shard gens");
+        assert_eq!(st.delete_generation(), 0, "upserts never bump the version-drop counter");
+
+        let tag = vec![("a".to_string(), 1u64), ("b".to_string(), 1u64)];
+        let dgen = st.delete_generation();
+        assert!(st.members_match(&tag, dgen));
+        // A member bumped past its tagged version invalidates.
+        st.upsert("a", sk(3));
+        assert!(!st.members_match(&tag, dgen));
+        let tag2 = vec![("a".to_string(), 2u64), ("b".to_string(), 1u64)];
+        assert!(st.members_match(&tag2, dgen));
+        // A missing member invalidates.
+        assert!(!st.members_match(&[("ghost".to_string(), 1)], dgen));
+
+        // Delete + re-upsert restarts the version sequence at 1 — the raw
+        // (key, version) vector would match the pre-delete tag again, but
+        // the delete generation catches it.
+        let tag_a1 = vec![("a".to_string(), 1u64)];
+        let st2 = store();
+        st2.upsert("a", sk(1));
+        let d0 = st2.delete_generation();
+        assert!(st2.members_match(&tag_a1, d0));
+        assert!(st2.delete(&"a".to_string()));
+        st2.upsert("a", sk(99));
+        assert_eq!(st2.version_of("a"), Some(1), "precondition: version restarted");
+        assert!(!st2.members_match(&tag_a1, d0), "delete_gen must invalidate the old tag");
+        assert!(st2.members_match(&tag_a1, st2.delete_generation()));
+
+        // clear (and therefore restore) bumps both counters.
+        let before = (st.generations(), st.delete_generation());
+        st.clear();
+        assert!(st.delete_generation() > before.1);
+        assert!(st.generations().iter().sum::<u64>() > before.0.iter().sum::<u64>());
     }
 
     #[test]

@@ -117,6 +117,12 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
             "'lines' (thread-per-connection JSON) or 'event' (poll loop: \
              binary frames + JSON lines on one port; unix only)",
         )
+        .opt(
+            "cache-bytes",
+            "",
+            "read-path cache budget in bytes (0 disables; shorthand for \
+             --set cache.max_bytes=N)",
+        )
         .multi("set", "config override key=value");
     let args = spec.parse(argv)?;
     let mut cfg = if args.str("config").is_empty() {
@@ -124,6 +130,11 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     } else {
         Config::from_file(&args.str("config"))?
     };
+    // --cache-bytes is sugar applied before --set, so an explicit
+    // --set cache.max_bytes=N still wins.
+    if !args.str("cache-bytes").is_empty() {
+        cfg.set_override(&format!("cache.max_bytes={}", args.str("cache-bytes")))?;
+    }
     for s in args.all("set") {
         cfg.set_override(&s)?;
     }
@@ -419,6 +430,11 @@ fn cluster_spec(name: &'static str, about: &'static str) -> ArgSpec {
         .opt("write-quorum", "1", "owner acks required per write (1..=R)")
         .opt("io-timeout", "10", "per-node I/O timeout in seconds (expiry marks the node down)")
         .flag("framed", "speak the binary framed protocol to the nodes (event transport only)")
+        .opt(
+            "cache-bytes",
+            "0",
+            "client-side (key,version) gather-blob cache budget in bytes (0 disables)",
+        )
 }
 
 fn cluster_connect(args: &fastgm::util::argparse::Args) -> anyhow::Result<ClusterClient> {
@@ -431,6 +447,7 @@ fn cluster_connect(args: &fastgm::util::argparse::Args) -> anyhow::Result<Cluste
             write_quorum: args.usize("write-quorum")?,
             io_timeout: std::time::Duration::from_secs_f64(secs),
             framed: args.flag("framed"),
+            cache_bytes: args.usize("cache-bytes")?,
         },
     )
 }

@@ -11,7 +11,11 @@
 //!   show ≥10x sustained req/s at equal-or-better p99;
 //! * `BENCH_8.json` — the sampling query engine amortizes: serving a
 //!   32-draw `sample` from a stored sketch is far cheaper than sketching
-//!   even a small vector, the regime the register-as-sample design buys.
+//!   even a small vector, the regime the register-as-sample design buys;
+//! * `BENCH_9.json` — the versioned read-path cache pays rent: a validated
+//!   merged-union hit is ≥10x cheaper than the §2.3 re-merge it elides,
+//!   and a warm `(key, version)` cluster gather is strictly cheaper than
+//!   a cold one.
 //!
 //! Absolute numbers are NOT asserted against the current machine (CI
 //! runners are too noisy; `ci/bench_coverage.py` gates name coverage on
@@ -22,6 +26,7 @@ use fastgm::util::json::{parse, Value};
 const BASELINE: &str = include_str!("../../BENCH_6.json");
 const BASELINE7: &str = include_str!("../../BENCH_7.json");
 const BASELINE8: &str = include_str!("../../BENCH_8.json");
+const BASELINE9: &str = include_str!("../../BENCH_9.json");
 
 /// Pairs emitted by `perf_probe`: `<name>_scalar_ns` vs `<name>_ns`.
 const PAIRS: [&str; 8] = [
@@ -53,6 +58,10 @@ fn baseline8() -> Value {
     parse(BASELINE8).expect("BENCH_8.json parses with the crate JSON layer")
 }
 
+fn baseline9() -> Value {
+    parse(BASELINE9).expect("BENCH_9.json parses with the crate JSON layer")
+}
+
 fn ns(v: &Value, name: &str) -> f64 {
     v.get(name)
         .unwrap_or_else(|| panic!("probe '{name}' missing from the baseline"))
@@ -66,6 +75,7 @@ fn baseline_schema_is_complete_and_consistent() {
         ("BENCH_6.json", baseline()),
         ("BENCH_7.json", baseline7()),
         ("BENCH_8.json", baseline8()),
+        ("BENCH_9.json", baseline9()),
     ] {
         let Value::Obj(entries) = &v else { panic!("{file}: top level must be a name->stats object") };
         assert!(entries.len() >= 50, "{file}: expected the full probe sweep, got {}", entries.len());
@@ -231,4 +241,39 @@ fn framed_transport_sustains_10x_at_no_worse_p99_in_bench7() {
         framed_p99 <= json_p99,
         "framed p99 {framed_p99} ns is worse than JSON p99 {json_p99} ns"
     );
+}
+
+/// BENCH_9 acceptance (ISSUE 9): the versioned read-path cache pays rent.
+/// A validated merged-union hit must be ≥10x cheaper than the 32-key §2.3
+/// re-merge it elides (the identical request through a cache-disabled
+/// node), the top-k result cache must be measured, and a warm
+/// `(key, version)` cluster gather — one `store_keys` version walk, zero
+/// blob fetches — must be strictly cheaper than the cold gather that
+/// re-fetches every candidate blob.
+#[test]
+fn cache_hits_amortize_and_warm_gathers_beat_cold_in_bench9() {
+    let v = baseline9();
+    let hit = ns(&v, "cache.merge_keys_hit_ns");
+    let miss = ns(&v, "cache.merge_keys_miss_ns");
+    assert!(
+        hit * 10.0 <= miss,
+        "merged-union hit ({hit} ns) is not >=10x cheaper than the re-merge ({miss} ns)"
+    );
+    assert!(ns(&v, "cache.topk_hit_ns") > 0.0);
+    let cold = ns(&v, "cluster.gather_cold_ns");
+    let warm = ns(&v, "cluster.gather_warm_ns");
+    assert!(
+        warm < cold,
+        "warm gather ({warm} ns) is not cheaper than the cold gather ({cold} ns)"
+    );
+    // BENCH_9 re-carries every earlier probe (one sweep per baseline
+    // file, so trajectories diff file-to-file).
+    for name in [
+        "fastgm/n1000/k64",
+        "kernel.merge_ns",
+        "transport.sat.framed_ns",
+        "sample.draw32_k256_ns",
+    ] {
+        assert!(ns(&v, name) > 0.0);
+    }
 }

@@ -723,3 +723,87 @@ fn tiny_io_timeout_marks_a_stuffed_node_down() {
     drop(cc); // closes the socket; the stub sees EOF and exits
     stub.join().unwrap();
 }
+
+/// ISSUE 9: the client-side `(key, version)` gather-blob cache. Warm
+/// gathers — `topk`, `sample`, `partition` — must be bit-identical to
+/// cold ones AND to an uncached client's; a version advance must
+/// invalidate exactly the changed key; deletes drop out of the version
+/// view; and `cache_bytes == 0` keeps the whole path off.
+#[test]
+fn gather_blob_cache_is_bit_identical_and_version_invalidated() {
+    use fastgm::coordinator::protocol::QueryTarget;
+    let cluster = LocalCluster::start(2, &cfg()).unwrap();
+    let mut cached = ClusterClient::connect_with(
+        &cluster.addrs(),
+        ReplicaConfig { cache_bytes: 1 << 20, ..Default::default() },
+    )
+    .unwrap();
+    let mut fresh = ClusterClient::connect(&cluster.addrs()).unwrap();
+    assert!(fresh.gather_cache_stats().is_none(), "cache_bytes=0 must disable the cache");
+
+    let mut r = SplitMix64::new(21);
+    let keys: Vec<String> = (0..10).map(|i| format!("doc{i:02}")).collect();
+    for key in &keys {
+        cached.upsert(key, random_vec(&mut r, 20, 5000)).unwrap();
+    }
+    let query = random_vec(&mut r, 20, 5000);
+    let union_target = QueryTarget::Keys(keys.clone());
+
+    // Cold pass fills the cache; warm pass must serve hits and stay
+    // bit-identical to both the cold answers and the uncached client's.
+    let (cold_hits, _) = cached.topk(&query, LIMIT).unwrap();
+    let cold_sample = cached.sample(&union_target, 16, 3).unwrap();
+    let cold_z = cached.partition(&union_target).unwrap();
+    let after_cold = cached.gather_cache_stats().unwrap();
+    assert!(after_cold.entries > 0 && after_cold.bytes > 0, "{after_cold:?}");
+    let (warm_hits, _) = cached.topk(&query, LIMIT).unwrap();
+    assert_eq!(warm_hits, cold_hits, "warm topk drifted from the cold gather");
+    assert_eq!(cached.sample(&union_target, 16, 3).unwrap(), cold_sample);
+    assert_eq!(cached.partition(&union_target).unwrap(), cold_z);
+    let after_warm = cached.gather_cache_stats().unwrap();
+    assert!(after_warm.hits > after_cold.hits, "warm gathers must hit: {after_warm:?}");
+    let (want_hits, _) = fresh.topk(&query, LIMIT).unwrap();
+    assert_eq!(warm_hits, want_hits, "cached topk diverged from the uncached client");
+    assert_eq!(fresh.sample(&union_target, 16, 3).unwrap(), cold_sample);
+
+    // A version advance on one key invalidates exactly that entry: the
+    // next gathers re-fetch it and track the uncached client bit for bit.
+    cached.upsert(&keys[3], random_vec(&mut r, 20, 5000)).unwrap();
+    let (new_hits, _) = cached.topk(&query, LIMIT).unwrap();
+    let (new_want, _) = fresh.topk(&query, LIMIT).unwrap();
+    assert_eq!(new_hits, new_want, "post-write cached topk diverged");
+    assert_eq!(
+        cached.sample(&union_target, 16, 3).unwrap(),
+        fresh.sample(&union_target, 16, 3).unwrap(),
+        "post-write cached sample diverged"
+    );
+    assert_eq!(
+        cached.partition(&union_target).unwrap(),
+        fresh.partition(&union_target).unwrap(),
+        "post-write cached partition estimate diverged"
+    );
+    let after_write = cached.gather_cache_stats().unwrap();
+    assert!(
+        after_write.stale_drops > after_warm.stale_drops,
+        "the version advance must drop the stale entry: {after_write:?}"
+    );
+
+    // A deleted key drops out of the version view: the union target now
+    // fails identically on both clients, and the surviving keys keep
+    // serving (still bit-identical).
+    cached.delete(&keys[7]).unwrap();
+    let e_cached = cached.sample(&union_target, 16, 3).unwrap_err().to_string();
+    let e_fresh = fresh.sample(&union_target, 16, 3).unwrap_err().to_string();
+    assert_eq!(e_cached, e_fresh, "cached error shape drifted");
+    let survivors = QueryTarget::Keys(
+        keys.iter().filter(|k| *k != &keys[7]).cloned().collect(),
+    );
+    assert_eq!(
+        cached.sample(&survivors, 16, 3).unwrap(),
+        fresh.sample(&survivors, 16, 3).unwrap(),
+        "post-delete cached sample diverged"
+    );
+    let s = cached.gather_cache_stats().unwrap();
+    assert!(s.hits > 0 && s.misses > 0, "{s:?}");
+    cluster.stop();
+}

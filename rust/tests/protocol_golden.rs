@@ -246,4 +246,18 @@ fn golden_values_decode_losslessly() {
         panic!("last golden response must be a keys page")
     };
     assert_eq!(keys, vec![("doc1".to_string(), 7), ("doc2".to_string(), 1)]);
+
+    // The extended stats reply (ISSUE 9) carries write generations and the
+    // read-path cache object inside the opaque stats payload; the plain
+    // stats reply right above it keeps decoding unchanged (the payload is
+    // opaque JSON — no codec change was needed).
+    let Response::Stats { stats } = decode_response(resp_lines[9]).unwrap() else {
+        panic!("golden response 9 must be the cache-bearing stats reply")
+    };
+    assert_eq!(stats.get("generation").and_then(|v| v.as_f64()), Some(9.0));
+    assert_eq!(stats.get("delete_generation").and_then(|v| v.as_f64()), Some(1.0));
+    let cache = stats.get("cache").expect("extended stats carry a cache object");
+    assert_eq!(cache.get("enabled").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(cache.get("hits").and_then(|v| v.as_f64()), Some(3.0));
+    assert_eq!(cache.get("max_bytes").and_then(|v| v.as_f64()), Some(8388608.0));
 }
