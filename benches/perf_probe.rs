@@ -302,6 +302,144 @@ fn main() {
         cluster.stop();
     }
 
+    // Binary blob data plane (ISSUE 10): `blob.decode_{copy,view}_ns`
+    // isolate the zero-copy read path — the SAME k=1024 `sketch_blob_bin`
+    // frame decoded by materializing an owned Response (payload memcpy'd
+    // out of the input buffer into a fresh Vec) vs through the borrowing
+    // `FrameView` (registers sliced in place and fed straight to
+    // `codec::decode_sketch_bytes`). Both verify the same checksum and
+    // build the same sketch; the delta is the copy.
+    {
+        use fastgm::coordinator::frame::{self, FrameMsg, FrameStatus, FrameViewStatus};
+        use fastgm::coordinator::protocol::Response;
+        use fastgm::sketch::codec;
+
+        let v = dense_vector(&mut rng, 10_000, WeightDist::Uniform01);
+        let sk = FastGm::new(1024, 1).sketch(&v);
+        let blob = codec::encode_sketch_bytes("doc-bulk", 7, &sk);
+        let mut frame_bytes = Vec::new();
+        frame::encode_response_frame(
+            5,
+            &Response::SketchBlobBin { name: "doc-bulk".into(), data: blob },
+            &mut frame_bytes,
+        );
+        suite.record(b.run("blob.decode_copy_ns", || {
+            let FrameStatus::Frame { msg, .. } = frame::decode_frame(&frame_bytes).unwrap()
+            else {
+                panic!("bench frame incomplete")
+            };
+            let FrameMsg::Response(Response::SketchBlobBin { data, .. }) = msg else {
+                panic!("bench frame is not a blob")
+            };
+            codec::decode_sketch_bytes(&data).unwrap().1
+        }));
+        suite.record(b.run("blob.decode_view_ns", || {
+            let FrameViewStatus::Frame(view) = frame::decode_frame_view(&frame_bytes).unwrap()
+            else {
+                panic!("bench frame incomplete")
+            };
+            let (_, bytes) = view.sketch_blob_bin().unwrap().expect("blob frame");
+            codec::decode_sketch_bytes(bytes).unwrap().1
+        }));
+        if let Some(sp) = suite.speedup("blob.decode_copy_ns", "blob.decode_view_ns") {
+            println!("  -> zero-copy view decode speedup over owned decode at k=1024: {sp:.2}x");
+        }
+    }
+
+    // Live blob transfer (ISSUE 10 tentpole): one event-server node holds
+    // a k=1024 document; `blob.fetch_hex_ns` pulls it as a hex-in-JSON
+    // `sketch_blob` line, `blob.fetch_binary_ns` pulls the SAME blob as a
+    // `sketch_blob_bin` frame — raw codec bytes spliced into the server's
+    // vectored write, zero-copy view decode on the client. Same socket
+    // machinery, same sketch; the delta is the data plane.
+    #[cfg(unix)]
+    {
+        use fastgm::coordinator::client::Client;
+        use fastgm::coordinator::event_server::EventServer;
+        use fastgm::coordinator::protocol::SketchSource;
+        use fastgm::coordinator::service::{Coordinator, CoordinatorConfig};
+        use std::sync::Arc;
+
+        let cfg = CoordinatorConfig {
+            k: 1024,
+            seed: 1,
+            workers: 2,
+            node_id: "bench".into(),
+            ..Default::default()
+        };
+        let coord = Arc::new(Coordinator::new(cfg).unwrap());
+        let es = EventServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+        let addr = es.addr.to_string();
+        let mut ingest = Client::connect(&addr).unwrap();
+        let v = dense_vector(&mut rng, 10_000, WeightDist::Uniform01);
+        ingest.upsert("doc-bulk", v).unwrap();
+        let mut hex_c = Client::connect(&addr).unwrap();
+        let mut bin_c = Client::connect_framed(&addr).unwrap();
+        suite.record(b.run("blob.fetch_hex_ns", || {
+            hex_c.sketch_fetch("doc-bulk", SketchSource::Store).unwrap()
+        }));
+        suite.record(b.run("blob.fetch_binary_ns", || {
+            bin_c.sketch_fetch_bin("doc-bulk", SketchSource::Store).unwrap()
+        }));
+        if let Some(sp) = suite.speedup("blob.fetch_hex_ns", "blob.fetch_binary_ns") {
+            println!("  -> binary blob fetch speedup over hex-in-JSON at k=1024: {sp:.2}x");
+        }
+        drop((ingest, hex_c, bin_c));
+        es.stop();
+        Arc::try_unwrap(coord).ok().expect("event server released the coordinator").shutdown();
+    }
+
+    // Cluster repair over each data plane (ISSUE 10): the same converged
+    // 2-node event cluster at R=2 walked by `repair` — phase-1 version
+    // walk plus phase-3 stream-sketch fetch/merge/install on every node —
+    // once through a hex-in-JSON client and once through a framed one,
+    // where every fetch and install rides `*_bin` frames with the blob
+    // encoded once per fan-out.
+    #[cfg(unix)]
+    {
+        use fastgm::coordinator::cluster::{ClusterClient, LocalCluster, ReplicaConfig};
+        use fastgm::coordinator::service::CoordinatorConfig;
+
+        let ccfg = CoordinatorConfig {
+            k: 1024,
+            seed: 1,
+            workers: 2,
+            node_id: "bench".into(),
+            topk_scan_max: 100_000,
+            ..Default::default()
+        };
+        let cluster = LocalCluster::start_event(2, &ccfg).unwrap();
+        let mut hex_cc = ClusterClient::connect_with(
+            &cluster.addrs(),
+            ReplicaConfig { replication: 2, write_quorum: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut bin_cc = ClusterClient::connect_with(
+            &cluster.addrs(),
+            ReplicaConfig {
+                replication: 2,
+                write_quorum: 1,
+                framed: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut r4 = SplitMix64::new(29);
+        for i in 0..24 {
+            let v = dense_vector(&mut r4, 500, WeightDist::Uniform01);
+            bin_cc.upsert(&format!("doc{i:03}"), v).unwrap();
+        }
+        let items: Vec<(u64, f64)> = (0..2000u64).map(|i| (i * 31 + 7, 1.0)).collect();
+        bin_cc.push("pkts", &items).unwrap();
+        let streams = ["pkts".to_string()];
+        suite.record(b.run("cluster.repair_hex_ns", || hex_cc.repair(&streams).unwrap()));
+        suite.record(b.run("cluster.repair_binary_ns", || bin_cc.repair(&streams).unwrap()));
+        if let Some(sp) = suite.speedup("cluster.repair_hex_ns", "cluster.repair_binary_ns") {
+            println!("  -> binary-plane repair speedup over hex at k=1024: {sp:.2}x");
+        }
+        cluster.stop();
+    }
+
     // Kernel-level scalar-vs-SIMD pairs: the same kernel, forced onto each
     // backend. `<name>_scalar_ns` is the baseline; `<name>_ns` is whatever
     // the host's best backend delivers (scalar again on non-AVX2 hosts, so

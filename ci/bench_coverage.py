@@ -31,10 +31,11 @@ REQUIRED = ("ns_per_op", "ops_per_s", "p10_ns", "p90_ns", "iters", "samples")
 
 # The transport probes are the acceptance evidence for the binary framed
 # transport (ISSUE 7), the sample/partition probes for the query engine
-# (ISSUE 8), and the cache.*/cluster.gather_* probes for the versioned
-# read-path cache (ISSUE 9): they must be present in every fresh run
-# explicitly, not just via the committed-baseline diff (which would stop
-# gating them if the baselines were ever pruned).
+# (ISSUE 8), the cache.*/cluster.gather_* probes for the versioned
+# read-path cache (ISSUE 9), and the blob.*/cluster.repair_* probes for
+# the zero-copy binary data plane (ISSUE 10): they must be present in
+# every fresh run explicitly, not just via the committed-baseline diff
+# (which would stop gating them if the baselines were ever pruned).
 REQUIRED_PROBES = (
     "frame.encode_request_ns",
     "frame.encode_request_json_ns",
@@ -58,6 +59,12 @@ REQUIRED_PROBES = (
     "cache.topk_hit_ns",
     "cluster.gather_cold_ns",
     "cluster.gather_warm_ns",
+    "blob.decode_copy_ns",
+    "blob.decode_view_ns",
+    "blob.fetch_hex_ns",
+    "blob.fetch_binary_ns",
+    "cluster.repair_hex_ns",
+    "cluster.repair_binary_ns",
 )
 
 

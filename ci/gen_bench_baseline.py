@@ -12,7 +12,7 @@ gate on. This script exists so a baseline refresh is reproducible: edit the
 
     FASTGM_BENCH_BUDGET=0.6 cargo bench --bench perf_probe -- --json /tmp/b.json
 
-and re-run ``python3 ci/gen_bench_baseline.py BENCH_9.json``.
+and re-run ``python3 ci/gen_bench_baseline.py BENCH_10.json``.
 
 Derived fields mirror the harness arithmetic: ``ops_per_s`` is the exact
 float inverse of ``ns_per_op`` (the smoke test asserts the product), and
@@ -90,6 +90,20 @@ MEDIANS_NS = [
     ("cache.topk_hit_ns", 1.6e5),
     ("cluster.gather_cold_ns", 6.1e5),
     ("cluster.gather_warm_ns", 3.3e5),
+    # binary blob data plane (ISSUE 10): the same k=1024 codec blob (a)
+    # decoded from a sketch_blob_bin frame by materializing an owned
+    # Response (one payload memcpy) vs through the borrowing FrameView
+    # (registers sliced in place); (b) fetched over a live event-server
+    # socket as hex-in-JSON (2x blob bytes + escaping + JSON parse) vs as
+    # raw codec bytes in a frame (spliced vectored write, zero-copy view
+    # decode); (c) a converged 2-node R=2 repair walk — version walk +
+    # stream-sketch fetch/merge/install — per data plane
+    ("blob.decode_copy_ns", 8400.0),
+    ("blob.decode_view_ns", 6900.0),
+    ("blob.fetch_hex_ns", 1.55e5),
+    ("blob.fetch_binary_ns", 6.2e4),
+    ("cluster.repair_hex_ns", 2.9e6),
+    ("cluster.repair_binary_ns", 1.9e6),
     # kernel-level scalar baselines (k = 1024 registers / block elements)
     ("kernel.uniform_batch_scalar_ns", 1850.0),
     ("kernel.gumbel_batch_scalar_ns", 9100.0),
@@ -168,7 +182,7 @@ def sat_entry(ns):
 
 
 def main():
-    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_9.json"
+    out = sys.argv[1] if len(sys.argv) > 1 else "BENCH_10.json"
     fix = {name: entry(ns) for name, ns in MEDIANS_NS}
     fix.update({name: sat_entry(ns) for name, ns in SATURATION_NS})
     with open(out, "w") as f:

@@ -17,12 +17,12 @@
 //!   event-driven transport); the thread-per-connection JSON server does
 //!   not speak frames.
 
-use super::frame::{self, FrameMsg, FrameStatus};
+use super::frame::{self, FrameMsg, FrameStatus, FrameViewStatus};
 use super::protocol::{self, HelloInfo, QueryTarget, Request, Response, SketchSource};
 use crate::sketch::{codec, GumbelMaxSketch, SparseVector};
 use crate::util::json::Value;
 use std::collections::{HashMap, VecDeque};
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, IoSlice, Read, Write};
 use std::net::TcpStream;
 
 /// Per-connection wire state. Framed mode tracks which request ids are
@@ -194,10 +194,71 @@ impl Client {
         }
     }
 
+    /// [`Client::send_batch`] for blob-bearing requests: consumes the
+    /// requests so that on the framed wire each `store_put_bin` /
+    /// `stream_merge_bin` body is *spliced* into the outgoing buffer run
+    /// — the codec blob the caller encoded is the buffer the socket
+    /// writes, never copied into a contiguous frame. Non-blob requests
+    /// and the JSON wire behave exactly like [`Client::send_batch`].
+    pub fn send_batch_owned(&mut self, reqs: Vec<Request>) -> anyhow::Result<()> {
+        match &mut self.wire {
+            Wire::Json => {
+                let mut buf = String::new();
+                for r in &reqs {
+                    buf.push_str(&protocol::encode_line(&r.to_json()));
+                }
+                self.writer.write_all(buf.as_bytes())?;
+            }
+            Wire::Framed { pending, next_id, .. } => {
+                let mut parts: Vec<Vec<u8>> = Vec::new();
+                for r in reqs {
+                    let id = *next_id;
+                    *next_id = next_id.wrapping_add(1);
+                    pending.push_back(id);
+                    parts.extend(frame::encode_request_frame_vectored(id, r));
+                }
+                write_all_vectored(&mut self.writer, &parts)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Send one request and wait for its response line.
     pub fn call(&mut self, req: &Request) -> anyhow::Result<Response> {
         self.send_batch(std::slice::from_ref(req))?;
         Ok(self.recv_batch(1)?.pop().expect("recv_batch(1) yields one reply"))
+    }
+
+    /// [`Client::call`] consuming the request ([`Client::send_batch_owned`]
+    /// semantics — blob bodies splice on the framed wire).
+    pub fn call_owned(&mut self, req: Request) -> anyhow::Result<Response> {
+        self.send_batch_owned(vec![req])?;
+        Ok(self.recv_batch(1)?.pop().expect("recv_batch(1) yields one reply"))
+    }
+
+    /// Queue one [`PreparedRequest`]. The prepared form must match this
+    /// connection's wire mode — a mismatch is a caller bug, surfaced as a
+    /// clean error instead of garbage on the wire. On the framed wire the
+    /// shared body bytes are written via vectored I/O between a
+    /// per-connection envelope; nothing is re-encoded or re-buffered.
+    pub fn send_prepared(&mut self, p: &PreparedRequest) -> anyhow::Result<()> {
+        match (&mut self.wire, p) {
+            (Wire::Json, PreparedRequest::Json(line)) => {
+                self.writer.write_all(line.as_bytes())?;
+            }
+            (Wire::Framed { pending, next_id, .. }, PreparedRequest::Framed(body)) => {
+                let id = *next_id;
+                *next_id = next_id.wrapping_add(1);
+                pending.push_back(id);
+                let (prefix, trailer) = frame::request_frame_envelope(id, body);
+                write_all_vectored(
+                    &mut self.writer,
+                    &[prefix.as_slice(), body.as_slice(), trailer.as_slice()],
+                )?;
+            }
+            _ => anyhow::bail!("prepared request does not match the connection's wire mode"),
+        }
+        Ok(())
     }
 
     /// Pipeline many requests, then collect all responses (cuts RTT for
@@ -255,9 +316,33 @@ impl Client {
         self.call_ack(&Request::StorePut { data: data.to_string() })
     }
 
+    /// Binary twin of [`Client::store_put`]: `data` is the raw output of
+    /// [`codec::encode_sketch_bytes`]. On the framed wire the blob is
+    /// spliced into the request frame — encoded once by the caller,
+    /// written once by the socket, never hexed or re-buffered. On the
+    /// JSON wire it degrades to the hex form transparently.
+    pub fn store_put_bin(&mut self, data: Vec<u8>) -> anyhow::Result<String> {
+        self.call_owned_ack(Request::StorePutBin { data })
+    }
+
     /// Merge a codec blob into the named live stream state (§2.3 repair).
     pub fn stream_merge(&mut self, stream: &str, data: &str) -> anyhow::Result<String> {
         self.call_ack(&Request::StreamMerge { stream: stream.to_string(), data: data.to_string() })
+    }
+
+    /// Binary twin of [`Client::stream_merge`] ([`Client::store_put_bin`]
+    /// splice semantics).
+    pub fn stream_merge_bin(&mut self, stream: &str, data: Vec<u8>) -> anyhow::Result<String> {
+        self.call_owned_ack(Request::StreamMergeBin { stream: stream.to_string(), data })
+    }
+
+    /// [`Client::call_ack`] for owned blob-bearing requests.
+    fn call_owned_ack(&mut self, req: Request) -> anyhow::Result<String> {
+        match self.call_owned(req)? {
+            Response::Ack { info } => Ok(info),
+            Response::Error { message } => anyhow::bail!("{message}"),
+            other => anyhow::bail!("expected ack, got {other:?}"),
+        }
     }
 
     /// Delete `key` from the keyed store (idempotent).
@@ -366,6 +451,206 @@ impl Client {
             other => anyhow::bail!("expected sketch_blob, got {other:?}"),
         }
     }
+
+    /// Binary twin of [`Client::sketch_fetch`].
+    pub fn sketch_fetch_bin(
+        &mut self,
+        name: &str,
+        source: SketchSource,
+    ) -> anyhow::Result<GumbelMaxSketch> {
+        Ok(self.sketch_fetch_bin_versioned(name, source)?.1)
+    }
+
+    /// Binary twin of [`Client::sketch_fetch_versioned`]: the blob
+    /// arrives as raw codec bytes in the frame body and is decoded
+    /// through the borrowing frame view — the registers are sliced
+    /// straight out of the connection's input buffer, never hexed and
+    /// never copied into an intermediate `Response`. On the JSON wire
+    /// the same request still works (the blob rides as hex inside the
+    /// JSON string) and decodes to identical registers.
+    pub fn sketch_fetch_bin_versioned(
+        &mut self,
+        name: &str,
+        source: SketchSource,
+    ) -> anyhow::Result<(u64, GumbelMaxSketch)> {
+        let req = Request::SketchFetchBin { name: name.to_string(), source };
+        if !self.is_framed() {
+            return match self.call(&req)? {
+                Response::SketchBlobBin { name: got, data } => {
+                    let (key, version, sk) = codec::decode_sketch_bytes(&data)?;
+                    anyhow::ensure!(
+                        got == name && key == name,
+                        "sketch_fetch_bin for '{name}' answered with '{got}' (blob key '{key}')"
+                    );
+                    Ok((version, sk))
+                }
+                Response::Error { message } => anyhow::bail!("{message}"),
+                other => anyhow::bail!("expected sketch_blob_bin, got {other:?}"),
+            };
+        }
+        self.send_batch(std::slice::from_ref(&req))?;
+        self.recv_blob_bin(name)
+    }
+
+    /// Framed-wire receive for one awaited `sketch_blob_bin` reply,
+    /// decoding the blob in place from the connection buffer (zero-copy
+    /// read path). Out-of-order replies for other outstanding requests
+    /// are materialized and parked exactly as in [`Client::recv_batch`].
+    fn recv_blob_bin(&mut self, want_name: &str) -> anyhow::Result<(u64, GumbelMaxSketch)> {
+        let Wire::Framed { rbuf, pending, done, .. } = &mut self.wire else {
+            anyhow::bail!("recv_blob_bin requires framed mode");
+        };
+        let want = pending
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("no request outstanding"))?;
+        if let Some(resp) = done.remove(&want) {
+            // Already arrived during an earlier batch read — the owned
+            // Response path (one copy) is unavoidable here.
+            return match resp {
+                Response::SketchBlobBin { name: got, data } => {
+                    let (key, version, sk) = codec::decode_sketch_bytes(&data)?;
+                    anyhow::ensure!(
+                        got == want_name && key == want_name,
+                        "sketch_fetch_bin for '{want_name}' answered with '{got}' (blob key '{key}')"
+                    );
+                    Ok((version, sk))
+                }
+                Response::Error { message } => anyhow::bail!("{message}"),
+                other => anyhow::bail!("expected sketch_blob_bin, got {other:?}"),
+            };
+        }
+        loop {
+            // Fill until a whole frame is buffered: the view borrows
+            // `rbuf`, so all reads happen before the borrow starts.
+            while matches!(frame::decode_frame_view(rbuf)?, FrameViewStatus::Incomplete) {
+                let mut chunk = [0u8; 16 * 1024];
+                let got = self.reader.read(&mut chunk)?;
+                anyhow::ensure!(got > 0, "server closed the connection mid-frame");
+                rbuf.extend_from_slice(&chunk[..got]);
+            }
+            let FrameViewStatus::Frame(view) = frame::decode_frame_view(rbuf)? else {
+                unreachable!("loop above buffered a full frame")
+            };
+            let consumed = view.consumed;
+            let id = view.id;
+            if id == want {
+                let outcome = (|| -> anyhow::Result<(u64, GumbelMaxSketch)> {
+                    match view.sketch_blob_bin()? {
+                        Some((got, blob)) => {
+                            // `blob` borrows the connection buffer: the
+                            // registers decode from the wire bytes with
+                            // no intermediate copy.
+                            let (key, version, sk) = codec::decode_sketch_bytes(blob)?;
+                            anyhow::ensure!(
+                                got == want_name && key == want_name,
+                                "sketch_fetch_bin for '{want_name}' answered with '{got}' (blob key '{key}')"
+                            );
+                            Ok((version, sk))
+                        }
+                        None => match view.message()? {
+                            FrameMsg::Response(Response::Error { message }) => {
+                                anyhow::bail!("{message}")
+                            }
+                            FrameMsg::Response(other) => {
+                                anyhow::bail!("expected sketch_blob_bin, got {other:?}")
+                            }
+                            FrameMsg::Request(_) => anyhow::bail!("server sent a request frame"),
+                        },
+                    }
+                })();
+                rbuf.drain(..consumed);
+                return outcome;
+            }
+            // Someone else's reply: materialize and park it so a later
+            // recv_batch can claim it.
+            let msg = view.message()?;
+            let FrameMsg::Response(resp) = msg else {
+                anyhow::bail!("server sent a request frame");
+            };
+            anyhow::ensure!(
+                pending.contains(&id),
+                "server answered unknown request id {id}"
+            );
+            anyhow::ensure!(
+                done.insert(id, resp).is_none(),
+                "server answered request id {id} twice"
+            );
+            rbuf.drain(..consumed);
+        }
+    }
+}
+
+/// `write_all` over a run of buffers using vectored I/O: spliced frames
+/// (`[prefix, blob, trailer]`) reach the socket in one syscall in the
+/// common case without ever being copied into a contiguous allocation.
+fn write_all_vectored<B: AsRef<[u8]>>(w: &mut TcpStream, parts: &[B]) -> std::io::Result<()> {
+    let mut idx = 0;
+    let mut off = 0;
+    while idx < parts.len() {
+        if off == parts[idx].as_ref().len() {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(parts.len() - idx);
+        slices.push(IoSlice::new(&parts[idx].as_ref()[off..]));
+        for p in &parts[idx + 1..] {
+            if !p.as_ref().is_empty() {
+                slices.push(IoSlice::new(p.as_ref()));
+            }
+        }
+        let mut n = match w.write_vectored(&slices) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "failed to write spliced frame",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        while n > 0 {
+            let left = parts[idx].as_ref().len() - off;
+            if n >= left {
+                n -= left;
+                idx += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A request serialized once for fan-out to many connections — the
+/// replica-write and repair-install paths, where the SAME payload goes to
+/// R owners. JSON connections share the serialized line verbatim; framed
+/// connections share the encoded frame *body* (the request id lives in
+/// the envelope, so [`Client::send_prepared`] derives only the 14-byte
+/// prefix and the checksum trailer per connection — the body, blob
+/// included, is never re-encoded).
+pub enum PreparedRequest {
+    /// One `encode_line` output, newline included.
+    Json(String),
+    /// One `frame::encode_request_body` output (id-independent).
+    Framed(Vec<u8>),
+}
+
+impl PreparedRequest {
+    /// Serialize `req` once for the wire mode the target connections
+    /// speak (`framed` must match [`Client::is_framed`] of every target).
+    pub fn new(req: &Request, framed: bool) -> PreparedRequest {
+        if framed {
+            let mut body = Vec::new();
+            frame::encode_request_body(req, &mut body);
+            PreparedRequest::Framed(body)
+        } else {
+            PreparedRequest::Json(protocol::encode_line(&req.to_json()))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -465,6 +750,69 @@ mod tests {
             Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
         }
 
+        /// The binary blob helpers must move bit-identical registers over
+        /// both wires: spliced `store_put_bin`/`stream_merge_bin` writes
+        /// and the zero-copy `sketch_fetch_bin` read against the framed
+        /// server, the hex-in-JSON degradation against the line server.
+        #[test]
+        fn binary_blob_helpers_roundtrip_and_match_hex() {
+            let (coord, server) = start_event(2);
+            let mut client = Client::connect_framed(&server.addr.to_string()).unwrap();
+            let v = SparseVector::new(vec![1, 2, 7], vec![1.0, 0.5, 2.5]);
+            let sk = crate::sketch::fastgm::FastGm::new(32, 42).sketch(&v);
+            // Spliced install, zero-copy fetch: registers survive untouched.
+            let blob = codec::encode_sketch_bytes("doc", 3, &sk);
+            assert!(client.store_put_bin(blob.clone()).unwrap().contains("installed"));
+            let (version, got) =
+                client.sketch_fetch_bin_versioned("doc", SketchSource::Store).unwrap();
+            assert_eq!((version, &got), (3, &sk));
+            // ...and bit-identical to what the hex path reports.
+            assert_eq!(
+                client.sketch_fetch_versioned("doc", SketchSource::Store).unwrap(),
+                (3, sk.clone())
+            );
+            // Zero-copy receive still parks out-of-order replies: queue a
+            // ping ahead of the fetch, claim it afterwards.
+            client.send_batch(&[Request::Ping]).unwrap();
+            client
+                .send_batch(&[Request::SketchFetchBin {
+                    name: "doc".into(),
+                    source: SketchSource::Store,
+                }])
+                .unwrap();
+            // Consume the ping first so the blob reply lands in `done`,
+            // exercising the parked-response branch too.
+            assert_eq!(client.recv_batch(1).unwrap(), vec![Response::Pong]);
+            assert_eq!(client.recv_blob_bin("doc").unwrap(), (3, sk.clone()));
+            // Stream merge twin: binary merge is idempotent (§2.3).
+            for _ in 0..2 {
+                let ack = client.stream_merge_bin("s", blob.clone()).unwrap();
+                assert!(ack.contains("merged"), "unexpected ack: {ack}");
+            }
+            assert_eq!(client.sketch_fetch_bin("s", SketchSource::Stream).unwrap(), sk);
+            // Missing keys are clean errors through the view path.
+            assert!(client.sketch_fetch_bin("ghost", SketchSource::Store).is_err());
+            drop(client);
+            server.stop();
+            Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
+
+            // Same helpers over the JSON wire (hex degradation).
+            let json_coord = Arc::new(
+                Coordinator::new(CoordinatorConfig { k: 32, workers: 1, ..Default::default() })
+                    .unwrap(),
+            );
+            let json_server = Server::start(json_coord, "127.0.0.1:0").unwrap();
+            let mut json = Client::connect(&json_server.addr.to_string()).unwrap();
+            let blob = codec::encode_sketch_bytes("doc", 3, &sk);
+            assert!(json.store_put_bin(blob).unwrap().contains("installed"));
+            assert_eq!(
+                json.sketch_fetch_bin_versioned("doc", SketchSource::Store).unwrap(),
+                (3, sk)
+            );
+            drop(json);
+            json_server.stop();
+        }
+
         /// `sample`/`partition` must answer bit-identically over the JSON
         /// and framed wires: two servers with equal state (sketching is
         /// seed-deterministic), one client per wire, same query seeds.
@@ -521,6 +869,34 @@ mod tests {
             assert!(client.set_framed(false).is_err());
             assert_eq!(client.recv_batch(1).unwrap(), vec![Response::Pong]);
             client.set_framed(false).unwrap();
+            drop(client);
+            server.stop();
+            Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();
+        }
+
+        #[test]
+        fn prepared_requests_fan_out_and_refuse_wire_mismatch() {
+            let (coord, server) = start_event(1);
+            let mut client = Client::connect_framed(&server.addr.to_string()).unwrap();
+            // One serialization, many sends — each frame gets its own id.
+            let prepared = PreparedRequest::new(&Request::Ping, true);
+            client.send_prepared(&prepared).unwrap();
+            client.send_prepared(&prepared).unwrap();
+            assert_eq!(client.recv_batch(2).unwrap(), vec![Response::Pong, Response::Pong]);
+            // A blob-bearing prepared request works the same way.
+            let v = SparseVector::new(vec![1], vec![1.0]);
+            let sk = crate::sketch::fastgm::FastGm::new(32, 42).sketch(&v);
+            let put = PreparedRequest::new(
+                &Request::StorePutBin { data: codec::encode_sketch_bytes("p", 2, &sk) },
+                true,
+            );
+            client.send_prepared(&put).unwrap();
+            let Response::Ack { info } = &client.recv_batch(1).unwrap()[0] else {
+                panic!("expected ack")
+            };
+            assert!(info.contains("installed"), "unexpected ack: {info}");
+            // JSON-prepared bytes on a framed wire are refused cleanly.
+            assert!(client.send_prepared(&PreparedRequest::new(&Request::Ping, false)).is_err());
             drop(client);
             server.stop();
             Arc::try_unwrap(coord).ok().expect("still referenced").shutdown();

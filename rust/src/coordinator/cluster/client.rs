@@ -52,10 +52,20 @@
 //! warm gather stays bit-identical to the cold one. At `cache_bytes == 0`
 //! (the default) the client behaves exactly as before: every gather
 //! re-fetches every blob.
+//!
+//! With [`ReplicaConfig::framed`] set, every blob the client moves —
+//! gather fetches, cache fills, repair installs, stream-merge convergence
+//! — rides the binary frame ops (`sketch_fetch_bin`, `store_put_bin`,
+//! `stream_merge_bin`): raw [`crate::sketch::codec`] bytes in the frame
+//! body, no hex expansion, no JSON escaping, decoding to bit-identical
+//! registers. JSON-lines clusters keep the hex ops verbatim, so mixed and
+//! pre-binary deployments interoperate unchanged. Fan-out writes
+//! (`quorum_write`, repair installs, stream convergence) serialize their
+//! request ONCE and share the bytes across all R owners.
 
 use super::partitioner::Partitioner;
 use crate::coordinator::cache::{ByteLruCache, CacheStats, Digest};
-use crate::coordinator::client::Client;
+use crate::coordinator::client::{Client, PreparedRequest};
 use crate::coordinator::merger::merge_tree;
 use crate::coordinator::protocol::{
     HelloInfo, QueryTarget, Request, Response, SketchSource, PROTOCOL_VERSION,
@@ -184,6 +194,21 @@ struct NodeSlot {
     hello: HelloInfo,
     /// `None` = observed down (I/O error) until a `reconnect`.
     conn: Option<Client>,
+}
+
+/// A blob-bearing reply normalized across the hex (`sketch_blob`) and
+/// binary (`sketch_blob_bin`) response shapes — gathers handle both so a
+/// framed cluster and a JSON cluster run the same decision logic.
+enum BlobReply {
+    /// A decodable blob: the name the node answered for, plus the decoded
+    /// `(key, version, sketch)` the blob itself carries.
+    Blob { got: String, key: String, version: u64, sk: GumbelMaxSketch },
+    /// A protocol-level `error` reply (key/stream not held there).
+    Missing(String),
+    /// A blob that failed to decode.
+    Corrupt(String),
+    /// Any other response shape.
+    Unexpected(Response),
 }
 
 /// The sketch config every member must serve (frozen at `connect`);
@@ -444,10 +469,53 @@ impl ClusterClient {
         resps.map_err(|e| self.mark_down(i, &e.to_string()))
     }
 
+    /// [`Self::slot_send`] for a [`PreparedRequest`] — the fan-out form:
+    /// one serialization shared across every owner the caller sends to.
+    fn slot_send_prepared(&mut self, i: usize, p: &PreparedRequest) -> Result<(), ClusterError> {
+        if self.slots[i].conn.is_none() {
+            return Err(self.down_err(i, "previously observed down"));
+        }
+        let sent = self.slots[i].conn.as_mut().expect("checked live above").send_prepared(p);
+        sent.map_err(|e| self.mark_down(i, &e.to_string()))
+    }
+
     /// One synchronous call on node `i` (send + recv).
     fn slot_call(&mut self, i: usize, req: &Request) -> Result<Response, ClusterError> {
         self.slot_send(i, std::slice::from_ref(req))?;
         Ok(self.slot_recv(i, 1)?.pop().expect("slot_recv(1) yields one reply"))
+    }
+
+    /// The blob-fetch request for this client's wire: raw codec bytes over
+    /// frames (`sketch_fetch_bin` — no hex, half the wire size), hex-in-
+    /// JSON over line connections, so mixed and pre-binary peers keep
+    /// speaking the exact protocol they always did. Both forms decode to
+    /// bit-identical registers, which is what keeps every gather result
+    /// independent of the transport.
+    fn fetch_req(&self, name: &str, source: SketchSource) -> Request {
+        if self.repl.framed {
+            Request::SketchFetchBin { name: name.to_string(), source }
+        } else {
+            Request::SketchFetch { name: name.to_string(), source }
+        }
+    }
+
+    /// Normalize either blob-response shape; each call site maps the arms
+    /// back to its own (unchanged) error wording.
+    fn unpack_blob(resp: Response) -> BlobReply {
+        match resp {
+            Response::SketchBlob { name: got, data } => match codec::decode_sketch_hex(&data) {
+                Ok((key, version, sk)) => BlobReply::Blob { got, key, version, sk },
+                Err(e) => BlobReply::Corrupt(e.to_string()),
+            },
+            Response::SketchBlobBin { name: got, data } => {
+                match codec::decode_sketch_bytes(&data) {
+                    Ok((key, version, sk)) => BlobReply::Blob { got, key, version, sk },
+                    Err(e) => BlobReply::Corrupt(e.to_string()),
+                }
+            }
+            Response::Error { message } => BlobReply::Missing(message),
+            other => BlobReply::Unexpected(other),
+        }
     }
 
     fn remote_err(&self, i: usize, message: String) -> ClusterError {
@@ -481,10 +549,15 @@ impl ClusterClient {
     fn quorum_write(&mut self, key: &str, req: &Request) -> Result<String, ClusterError> {
         let owners = self.partitioner.owners(key, self.repl.replication);
         let want = self.repl.write_quorum;
+        // Serialize ONCE, fan the bytes out: every owner receives the same
+        // wire payload without R separate re-encodes of the same request
+        // (framed connections share the body; only the id-bearing envelope
+        // is derived per owner).
+        let prepared = PreparedRequest::new(req, self.repl.framed);
         let mut awaiting: Vec<usize> = Vec::new();
         let mut down: Vec<String> = Vec::new();
         for &o in &owners {
-            match self.slot_send(o, std::slice::from_ref(req)) {
+            match self.slot_send_prepared(o, &prepared) {
                 Ok(()) => awaiting.push(o),
                 Err(ClusterError::NodeDown { node, .. }) => down.push(node),
                 Err(e) => return Err(e),
@@ -681,10 +754,7 @@ impl ClusterClient {
             }
             let reqs: Vec<Request> = names
                 .iter()
-                .map(|name| Request::SketchFetch {
-                    name: name.clone(),
-                    source: SketchSource::Store,
-                })
+                .map(|name| self.fetch_req(name, SketchSource::Store))
                 .collect();
             match self.slot_send(i, &reqs) {
                 Ok(()) => fetching.push((i, names)),
@@ -716,36 +786,34 @@ impl ClusterClient {
                 Err(e) => return Err(e),
             };
             for (name, resp) in names.into_iter().zip(resps) {
-                match resp {
-                    Response::SketchBlob { name: got, data } => {
-                        match codec::decode_sketch_hex(&data) {
-                            // The central re-rank is the trust boundary:
-                            // a blob answering for the wrong key must be
-                            // a loud error, never scored under `name`.
-                            Ok((key, version, sk)) if got == name && key == name => {
-                                let held = best.get(&name).map(|(v, _)| *v);
-                                if !held.is_some_and(|h| h >= version) {
-                                    best.insert(name, (version, sk));
-                                }
-                            }
-                            Ok((key, ..)) => {
-                                return Err(ClusterError::Gather(format!(
-                                    "candidate '{name}': node '{}' answered with '{got}' \
-                                     (blob key '{key}')",
-                                    self.slots[i].hello.node
-                                )))
-                            }
-                            Err(e) => {
-                                return Err(ClusterError::Gather(format!(
-                                    "candidate '{name}': corrupt sketch blob: {e}"
-                                )))
-                            }
+                match Self::unpack_blob(resp) {
+                    // The central re-rank is the trust boundary: a blob
+                    // answering for the wrong key must be a loud error,
+                    // never scored under `name`.
+                    BlobReply::Blob { got, key, version, sk }
+                        if got == name && key == name =>
+                    {
+                        let held = best.get(&name).map(|(v, _)| *v);
+                        if !held.is_some_and(|h| h >= version) {
+                            best.insert(name, (version, sk));
                         }
                     }
-                    Response::Error { message } => {
+                    BlobReply::Blob { got, key, .. } => {
+                        return Err(ClusterError::Gather(format!(
+                            "candidate '{name}': node '{}' answered with '{got}' \
+                             (blob key '{key}')",
+                            self.slots[i].hello.node
+                        )))
+                    }
+                    BlobReply::Corrupt(e) => {
+                        return Err(ClusterError::Gather(format!(
+                            "candidate '{name}': corrupt sketch blob: {e}"
+                        )))
+                    }
+                    BlobReply::Missing(message) => {
                         log::debug!("gather: candidate '{name}' gone on one replica: {message}");
                     }
-                    other => {
+                    BlobReply::Unexpected(other) => {
                         return Err(ClusterError::Gather(format!(
                             "candidate '{name}': expected sketch_blob, got {other:?}"
                         )))
@@ -767,23 +835,24 @@ impl ClusterClient {
                 if reporters.contains(&o) || !self.is_live(o) {
                     continue;
                 }
-                let req = Request::SketchFetch { name: name.clone(), source: SketchSource::Store };
+                let req = self.fetch_req(&name, SketchSource::Store);
                 match self.slot_call(o, &req) {
-                    Ok(Response::SketchBlob { name: got, data }) => {
-                        match codec::decode_sketch_hex(&data) {
-                            Ok((key, version, sk)) if got == name && key == name => {
-                                best.insert(name.clone(), (version, sk));
-                                break;
-                            }
-                            _ => {
-                                return Err(ClusterError::Gather(format!(
-                                    "candidate '{name}': corrupt failover blob from '{}'",
-                                    self.slots[o].hello.node
-                                )))
-                            }
+                    Ok(resp) => match Self::unpack_blob(resp) {
+                        BlobReply::Blob { got, key, version, sk }
+                            if got == name && key == name =>
+                        {
+                            best.insert(name.clone(), (version, sk));
+                            break;
                         }
-                    }
-                    Ok(_) => {} // not held here either; try the next owner
+                        BlobReply::Blob { .. } | BlobReply::Corrupt(_) => {
+                            return Err(ClusterError::Gather(format!(
+                                "candidate '{name}': corrupt failover blob from '{}'",
+                                self.slots[o].hello.node
+                            )))
+                        }
+                        // Not held here either; try the next owner.
+                        BlobReply::Missing(_) | BlobReply::Unexpected(_) => {}
+                    },
                     Err(ClusterError::NodeDown { .. }) => {}
                     Err(e) => return Err(e),
                 }
@@ -936,7 +1005,7 @@ impl ClusterClient {
         // Split-phase like `topk`: the fetch goes onto every live wire
         // before any (potentially large) sketch blob is read back, so the
         // per-site encoding work overlaps.
-        let req = Request::SketchFetch { name: stream.to_string(), source: SketchSource::Stream };
+        let req = self.fetch_req(stream, SketchSource::Stream);
         let mut awaiting: Vec<usize> = Vec::new();
         for i in 0..self.slots.len() {
             match self.slot_send(i, std::slice::from_ref(&req)) {
@@ -951,27 +1020,31 @@ impl ClusterClient {
         let mut responded = 0usize;
         for i in awaiting {
             match self.slot_recv(i, 1) {
-                Ok(mut resps) => match resps.pop().expect("slot_recv(1) yields one reply") {
-                    Response::SketchBlob { data, .. } => {
-                        responded += 1;
-                        let (_, _, sk) = codec::decode_sketch_hex(&data)
-                            .map_err(|e| ClusterError::Gather(format!("site sketch: {e}")))?;
-                        sketches.push(sk);
+                Ok(mut resps) => {
+                    let resp = resps.pop().expect("slot_recv(1) yields one reply");
+                    match Self::unpack_blob(resp) {
+                        BlobReply::Blob { sk, .. } => {
+                            responded += 1;
+                            sketches.push(sk);
+                        }
+                        BlobReply::Corrupt(e) => {
+                            return Err(ClusterError::Gather(format!("site sketch: {e}")))
+                        }
+                        BlobReply::Missing(message) => {
+                            // This site holds no partition of the stream.
+                            responded += 1;
+                            log::debug!(
+                                "cardinality gather: node '{}' has no '{stream}': {message}",
+                                self.slots[i].hello.node
+                            );
+                        }
+                        BlobReply::Unexpected(other) => {
+                            return Err(ClusterError::Gather(format!(
+                                "expected sketch_blob, got {other:?}"
+                            )))
+                        }
                     }
-                    Response::Error { message } => {
-                        // This site holds no partition of the stream.
-                        responded += 1;
-                        log::debug!(
-                            "cardinality gather: node '{}' has no '{stream}': {message}",
-                            self.slots[i].hello.node
-                        );
-                    }
-                    other => {
-                        return Err(ClusterError::Gather(format!(
-                            "expected sketch_blob, got {other:?}"
-                        )))
-                    }
-                },
+                }
                 Err(ClusterError::NodeDown { node, .. }) => {
                     log::warn!("cardinality gather: node '{node}' down, degrading");
                 }
@@ -1009,30 +1082,28 @@ impl ClusterClient {
         let mut reachable = 0usize;
         let mut best: Option<(u64, GumbelMaxSketch)> = None;
         for o in self.partitioner.owners(key, self.repl.replication) {
-            let req = Request::SketchFetch { name: key.to_string(), source: SketchSource::Store };
+            let req = self.fetch_req(key, SketchSource::Store);
             match self.slot_call(o, &req) {
-                Ok(Response::SketchBlob { name: got, data }) => {
-                    reachable += 1;
-                    match codec::decode_sketch_hex(&data) {
-                        Ok((k, version, sk)) if got == key && k == key => {
-                            if !best.as_ref().is_some_and(|(held, _)| *held >= version) {
-                                best = Some((version, sk));
-                            }
-                        }
-                        _ => {
-                            return Err(ClusterError::Gather(format!(
-                                "key '{key}': corrupt blob from '{}'",
-                                self.slots[o].hello.node
-                            )))
+                Ok(resp) => match Self::unpack_blob(resp) {
+                    BlobReply::Blob { got, key: k, version, sk } if got == key && k == key => {
+                        reachable += 1;
+                        if !best.as_ref().is_some_and(|(held, _)| *held >= version) {
+                            best = Some((version, sk));
                         }
                     }
-                }
-                Ok(Response::Error { .. }) => reachable += 1, // live, not holding it
-                Ok(other) => {
-                    return Err(ClusterError::Gather(format!(
-                        "key '{key}': expected sketch_blob, got {other:?}"
-                    )))
-                }
+                    BlobReply::Blob { .. } | BlobReply::Corrupt(_) => {
+                        return Err(ClusterError::Gather(format!(
+                            "key '{key}': corrupt blob from '{}'",
+                            self.slots[o].hello.node
+                        )))
+                    }
+                    BlobReply::Missing(_) => reachable += 1, // live, not holding it
+                    BlobReply::Unexpected(other) => {
+                        return Err(ClusterError::Gather(format!(
+                            "key '{key}': expected sketch_blob, got {other:?}"
+                        )))
+                    }
+                },
                 Err(ClusterError::NodeDown { node, .. }) => {
                     log::warn!("fetch '{key}': owner '{node}' down, failing over");
                 }
@@ -1292,9 +1363,18 @@ impl ClusterClient {
             // One fetch from the holder, then install on every stale
             // owner. The blob carries (key, version) — `store_put`'s LWW
             // check makes a concurrent newer write win over this repair.
-            let req = Request::SketchFetch { name: key.clone(), source: SketchSource::Store };
-            let data = match self.slot_call(holder, &req) {
-                Ok(Response::SketchBlob { name: got, data }) if got == key => data,
+            // The install request is serialized ONCE per key and the same
+            // wire bytes fan out to every stale owner (previously each
+            // owner re-encoded the identical blob); on the framed wire the
+            // blob additionally rides as raw codec bytes end to end.
+            let req = self.fetch_req(&key, SketchSource::Store);
+            let put = match self.slot_call(holder, &req) {
+                Ok(Response::SketchBlob { name: got, data }) if got == key => {
+                    PreparedRequest::new(&Request::StorePut { data }, self.repl.framed)
+                }
+                Ok(Response::SketchBlobBin { name: got, data }) if got == key => {
+                    PreparedRequest::new(&Request::StorePutBin { data }, self.repl.framed)
+                }
                 Ok(_) | Err(ClusterError::NodeDown { .. }) => {
                     // Holder died or no longer has the key (raced a
                     // delete): skip, a rerun converges whatever remains.
@@ -1307,10 +1387,9 @@ impl ClusterClient {
             // wire before any ack is read, so replicas heal in parallel
             // (per-holder fetch batching is a known follow-up; installs
             // dominate at R>2, fetches at R=2).
-            let put = Request::StorePut { data };
             let mut installing: Vec<usize> = Vec::new();
             for o in stale {
-                match self.slot_send(o, std::slice::from_ref(&put)) {
+                match self.slot_send_prepared(o, &put) {
                     Ok(()) => installing.push(o),
                     Err(ClusterError::NodeDown { node, .. }) => {
                         log::warn!("repair: node '{node}' died mid-heal of '{key}'");
@@ -1342,14 +1421,29 @@ impl ClusterClient {
                 }
                 Err(e) => return Err(e),
             };
-            let blob = codec::encode_sketch_hex(stream, 0, &merged);
+            // The merged union is encoded ONCE — raw codec bytes on the
+            // framed wire, hex on JSON — and the same serialized request
+            // fans out to every live node.
+            let req = if self.repl.framed {
+                Request::StreamMergeBin {
+                    stream: stream.clone(),
+                    data: codec::encode_sketch_bytes(stream, 0, &merged),
+                }
+            } else {
+                Request::StreamMerge {
+                    stream: stream.clone(),
+                    data: codec::encode_sketch_hex(stream, 0, &merged),
+                }
+            };
+            let put = PreparedRequest::new(&req, self.repl.framed);
             for i in 0..self.slots.len() {
                 if !self.is_live(i) {
                     continue;
                 }
-                let req = Request::StreamMerge { stream: stream.clone(), data: blob.clone() };
-                match self.slot_call(i, &req) {
-                    Ok(resp) => {
+                let sent = self.slot_send_prepared(i, &put);
+                match sent.and_then(|()| self.slot_recv(i, 1)) {
+                    Ok(mut resps) => {
+                        let resp = resps.pop().expect("slot_recv(1) yields one reply");
                         self.expect_ack(i, resp)?;
                         report.stream_merges += 1;
                     }

@@ -7,15 +7,54 @@ use crate::coordinator::server::Server;
 use crate::coordinator::service::{Coordinator, CoordinatorConfig};
 use std::sync::Arc;
 
+/// Which transport every node of a [`LocalCluster`] serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NodeTransport {
+    /// Thread-per-connection JSON lines (the portable default).
+    #[default]
+    Json,
+    /// The event-driven transport (unix only): binary frames and JSON
+    /// lines on one port — what a framed `ClusterClient`
+    /// (`ReplicaConfig::framed`) requires its nodes to speak.
+    #[cfg(unix)]
+    Event,
+}
+
+/// A running node's server handle, one variant per transport.
+enum NodeServer {
+    Json(Server),
+    #[cfg(unix)]
+    Event(crate::coordinator::event_server::EventServer),
+}
+
+impl NodeServer {
+    fn addr(&self) -> String {
+        match self {
+            NodeServer::Json(s) => s.addr.to_string(),
+            #[cfg(unix)]
+            NodeServer::Event(s) => s.addr.to_string(),
+        }
+    }
+
+    fn stop(self) {
+        match self {
+            NodeServer::Json(s) => s.stop(),
+            #[cfg(unix)]
+            NodeServer::Event(s) => s.stop(),
+        }
+    }
+}
+
 struct LocalNode {
     cfg: CoordinatorConfig,
     addr: String,
     /// `None` after [`LocalCluster::kill`].
-    running: Option<(Server, Arc<Coordinator>)>,
+    running: Option<(NodeServer, Arc<Coordinator>)>,
 }
 
 pub struct LocalCluster {
     nodes: Vec<LocalNode>,
+    transport: NodeTransport,
 }
 
 impl LocalCluster {
@@ -27,8 +66,27 @@ impl LocalCluster {
         LocalCluster::start_on(&addrs, base)
     }
 
+    /// [`LocalCluster::start`] on the event-driven transport: every node
+    /// serves binary frames next to JSON lines, so framed cluster clients
+    /// (and the binary blob data plane) can form against it. Kill/restart
+    /// cycles keep the transport.
+    #[cfg(unix)]
+    pub fn start_event(n: usize, base: &CoordinatorConfig) -> anyhow::Result<LocalCluster> {
+        let addrs = vec!["127.0.0.1:0".to_string(); n];
+        LocalCluster::start_with(&addrs, base, NodeTransport::Event)
+    }
+
     /// Start one node per bind address (the CLI's fixed-port path).
     pub fn start_on(addrs: &[String], base: &CoordinatorConfig) -> anyhow::Result<LocalCluster> {
+        LocalCluster::start_with(addrs, base, NodeTransport::Json)
+    }
+
+    /// Start one node per bind address on the chosen transport.
+    pub fn start_with(
+        addrs: &[String],
+        base: &CoordinatorConfig,
+        transport: NodeTransport,
+    ) -> anyhow::Result<LocalCluster> {
         anyhow::ensure!(!addrs.is_empty(), "cluster needs at least one node");
         let mut nodes = Vec::with_capacity(addrs.len());
         for (i, bind) in addrs.iter().enumerate() {
@@ -36,14 +94,14 @@ impl LocalCluster {
                 node_id: format!("{}-{i}", base.node_id),
                 ..base.clone()
             };
-            let (server, coordinator) = spawn(&cfg, bind)?;
+            let (server, coordinator) = spawn(&cfg, bind, transport)?;
             nodes.push(LocalNode {
                 cfg,
-                addr: server.addr.to_string(),
+                addr: server.addr(),
                 running: Some((server, coordinator)),
             });
         }
-        Ok(LocalCluster { nodes })
+        Ok(LocalCluster { nodes, transport })
     }
 
     pub fn len(&self) -> usize {
@@ -94,8 +152,8 @@ impl LocalCluster {
     /// `restore`; identity (the node id) is what the cluster keys on.
     pub fn restart(&mut self, i: usize) -> anyhow::Result<()> {
         anyhow::ensure!(self.nodes[i].running.is_none(), "node {i} is already running");
-        let (server, coordinator) = spawn(&self.nodes[i].cfg, "127.0.0.1:0")?;
-        self.nodes[i].addr = server.addr.to_string();
+        let (server, coordinator) = spawn(&self.nodes[i].cfg, "127.0.0.1:0", self.transport)?;
+        self.nodes[i].addr = server.addr();
         self.nodes[i].running = Some((server, coordinator));
         Ok(())
     }
@@ -108,9 +166,19 @@ impl LocalCluster {
     }
 }
 
-fn spawn(cfg: &CoordinatorConfig, bind: &str) -> anyhow::Result<(Server, Arc<Coordinator>)> {
+fn spawn(
+    cfg: &CoordinatorConfig,
+    bind: &str,
+    transport: NodeTransport,
+) -> anyhow::Result<(NodeServer, Arc<Coordinator>)> {
     let coordinator = Arc::new(Coordinator::new(cfg.clone())?);
-    let server = Server::start(coordinator.clone(), bind)?;
+    let server = match transport {
+        NodeTransport::Json => NodeServer::Json(Server::start(coordinator.clone(), bind)?),
+        #[cfg(unix)]
+        NodeTransport::Event => NodeServer::Event(
+            crate::coordinator::event_server::EventServer::start(coordinator.clone(), bind)?,
+        ),
+    };
     Ok((server, coordinator))
 }
 
@@ -139,6 +207,24 @@ mod tests {
             let hello = c.hello().unwrap();
             assert_eq!(hello.node, format!("t-{i}"));
         }
+        cluster.stop();
+    }
+
+    /// Event-transport clusters serve frames on every node, and a
+    /// kill/restart cycle keeps the transport.
+    #[cfg(unix)]
+    #[test]
+    fn event_transport_cluster_speaks_frames_across_restarts() {
+        let mut cluster = LocalCluster::start_event(2, &base()).unwrap();
+        for i in 0..2 {
+            let mut c = Client::connect_framed(cluster.addr(i)).unwrap();
+            assert!(c.is_framed());
+            assert_eq!(c.hello().unwrap().node, format!("t-{i}"));
+        }
+        cluster.kill(1);
+        cluster.restart(1).unwrap();
+        let mut c = Client::connect_framed(cluster.addr(1)).unwrap();
+        assert_eq!(c.hello().unwrap().node, "t-1");
         cluster.stop();
     }
 

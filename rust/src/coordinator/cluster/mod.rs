@@ -44,5 +44,5 @@ mod harness;
 mod partitioner;
 
 pub use client::{ClusterClient, ClusterError, GatherStats, RepairReport, ReplicaConfig};
-pub use harness::LocalCluster;
+pub use harness::{LocalCluster, NodeTransport};
 pub use partitioner::Partitioner;

@@ -4,9 +4,9 @@
 //!
 //! Where [`super::server`] spends a blocking OS thread per connection,
 //! this transport multiplexes every connection over a single
-//! `poll(2)`-driven event loop ([`crate::util::poll`] — std only, no
-//! async runtime) and hands actual request execution to the existing
-//! worker pool:
+//! readiness-driven event loop ([`crate::util::readiness`] — epoll on
+//! Linux, `poll(2)` elsewhere, std only, no async runtime) and hands
+//! actual request execution to the existing worker pool:
 //!
 //! * **Protocol auto-detection, per message.** The first unconsumed byte
 //!   of each message picks the decoder: [`frame::FRAME_MAGIC`] (`0xFB`)
@@ -23,7 +23,9 @@
 //!   responses are re-sequenced through a per-connection reorder buffer
 //!   so line-protocol clients keep their in-order contract.
 //! * **Coalesced vectored writes.** Completed responses queue per
-//!   connection and leave in a single `write_vectored` per flush.
+//!   connection and leave in a single `write_vectored` per flush. Blob
+//!   responses (`sketch_fetch_bin`) queue as spliced buffer runs — the
+//!   codec bytes are never copied into a contiguous frame.
 //! * **Bounded buffers.** Read buffers are capped at one max frame;
 //!   a connection with too many requests in flight or too many unsent
 //!   response bytes stops being read until it drains (per-connection
@@ -42,7 +44,7 @@ use super::frame::{self, FrameMsg, FrameStatus};
 use super::protocol::{self, Request, Response};
 use super::service::Coordinator;
 use super::worker::{Job, Reply};
-use crate::util::poll::{poll, PollFd, POLLIN, POLLOUT};
+use crate::util::readiness::{make_backend, Readiness, ReadinessBackend};
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -67,6 +69,10 @@ const MAX_WBUF_BYTES: usize = 8 << 20;
 /// Max buffers per vectored write (typical IOV_MAX is far higher; this
 /// just bounds the stack slice array).
 const MAX_IOV: usize = 64;
+/// Readiness keys: listener, wake pipe, then connection slots.
+const KEY_LISTENER: usize = 0;
+const KEY_WAKE: usize = 1;
+const KEY_CONN0: usize = 2;
 
 /// How a response must leave the connection: binary frames carry their
 /// request id and may complete out of order; JSON lines are re-sequenced.
@@ -76,12 +82,16 @@ enum Token {
     Json { seq: u64 },
 }
 
-/// A finished response, already encoded to wire bytes by the worker.
+/// A finished response, already encoded to wire bytes by the worker. The
+/// payload is a buffer *sequence*: blob-bearing binary responses arrive
+/// as `[prefix, codec blob, trailer]` from the splicing encoder, queued
+/// as-is and joined by the vectored flush — the blob bytes the worker
+/// encoded are the bytes the socket sends, never re-buffered.
 struct Completion {
     conn: usize,
     gen: u64,
     token: Token,
-    payload: Vec<u8>,
+    payload: Vec<Vec<u8>>,
 }
 
 struct Conn {
@@ -102,6 +112,9 @@ struct Conn {
     json_pending: BTreeMap<u64, Vec<u8>>,
     /// EOF seen (or shutdown): stop reading, flush what's owed, close.
     closing: bool,
+    /// Interest last pushed to the readiness backend (read, write) —
+    /// re-registration happens only when this changes.
+    interest: (bool, bool),
 }
 
 impl Conn {
@@ -119,10 +132,16 @@ impl Conn {
             json_next_flush: 0,
             json_pending: BTreeMap::new(),
             closing: false,
+            interest: (false, false),
         }
     }
 
     fn push_write(&mut self, payload: Vec<u8>) {
+        // Empty buffers (an empty spliced blob) carry nothing and would
+        // make `flush` misread socket pushback as a dead peer.
+        if payload.is_empty() {
+            return;
+        }
         self.wbytes += payload.len();
         self.wqueue.push_back(payload);
     }
@@ -237,6 +256,7 @@ impl EventServer {
             free: Vec::new(),
             next_gen: 1,
             batch: BatchStats::new(),
+            backend: make_backend(),
         };
         let handle = std::thread::Builder::new()
             .name("fastgm-event-loop".into())
@@ -269,19 +289,42 @@ struct EventLoop {
     free: Vec<usize>,
     next_gen: u64,
     batch: BatchStats,
+    /// Readiness notifier (epoll on Linux, poll elsewhere — see
+    /// [`crate::util::readiness`]). Interest lives in the backend between
+    /// wakeups; the loop pushes deltas instead of rebuilding an
+    /// O(connections) descriptor array per iteration.
+    backend: Box<dyn ReadinessBackend>,
 }
 
 impl EventLoop {
     fn run(&mut self) {
+        log::info!("event transport readiness backend: {}", self.backend.name());
+        if let Err(e) = self
+            .backend
+            .update(self.listener.as_raw_fd(), KEY_LISTENER, true, false)
+            .and_then(|()| self.backend.update(self.wake_rx.as_raw_fd(), KEY_WAKE, true, false))
+        {
+            log::error!("event loop registration failed: {e}");
+            return;
+        }
         let mut drain_polls = 0u32;
-        let mut fds: Vec<PollFd> = Vec::new();
-        let mut fd_conn: Vec<usize> = Vec::new();
+        let mut accepting = true;
+        let mut ready: Vec<Readiness> = Vec::new();
         loop {
             let draining = self.shutdown.load(Ordering::SeqCst);
             if draining {
                 // Stop reading everywhere; finish what's owed.
                 for conn in self.conns.iter_mut().flatten() {
                     conn.closing = true;
+                }
+                if accepting {
+                    accepting = false;
+                    let _ = self.backend.update(
+                        self.listener.as_raw_fd(),
+                        KEY_LISTENER,
+                        false,
+                        false,
+                    );
                 }
                 self.reap_drained();
                 if self.conns.iter().all(|c| c.is_none()) || drain_polls > SHUTDOWN_DRAIN_POLLS {
@@ -290,33 +333,19 @@ impl EventLoop {
                 drain_polls += 1;
             }
 
-            fds.clear();
-            fd_conn.clear();
-            fds.push(PollFd::new(
-                self.listener.as_raw_fd(),
-                if draining { 0 } else { POLLIN },
-            ));
-            fds.push(PollFd::new(self.wake_rx.as_raw_fd(), POLLIN));
-            for (id, slot) in self.conns.iter().enumerate() {
-                let Some(conn) = slot else { continue };
-                let mut events = 0i16;
-                if !conn.closing && !conn.throttled() {
-                    events |= POLLIN;
-                }
-                if !conn.wqueue.is_empty() {
-                    events |= POLLOUT;
-                }
-                fds.push(PollFd::new(conn.stream.as_raw_fd(), events));
-                fd_conn.push(id);
-            }
-
-            if let Err(e) = poll(&mut fds, IDLE_POLL_MS) {
-                log::error!("event loop poll failed: {e}");
+            // Push interest deltas, then wait: only changed connections
+            // touch the backend, and an epoll wakeup reports just the
+            // ready descriptors.
+            self.refresh_interest();
+            if let Err(e) = self.backend.wait(IDLE_POLL_MS, &mut ready) {
+                log::error!("event loop wait failed: {e}");
                 return;
             }
+            let wake_ready = ready.iter().any(|r| r.key == KEY_WAKE && r.readable);
+            let accept_ready = ready.iter().any(|r| r.key == KEY_LISTENER && r.readable);
 
             // Wake pipe: swallow the pending bytes (level-triggered).
-            if fds[1].readable() {
+            if wake_ready {
                 let mut sink = [0u8; 256];
                 while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0) {}
             }
@@ -326,25 +355,44 @@ impl EventLoop {
                 self.apply_completion(c);
             }
 
-            if !draining && fds[0].readable() {
+            if !draining && accept_ready {
                 self.accept_ready();
             }
 
             // Readable connections: drain socket → parse all complete
             // messages → submit as ONE admission batch.
-            for (i, fd) in fds.iter().enumerate().skip(2) {
-                let id = fd_conn[i - 2];
-                if fd.readable() {
-                    self.service_readable(id);
+            for r in &ready {
+                if r.key >= KEY_CONN0 && r.readable {
+                    self.service_readable(r.key - KEY_CONN0);
                 }
             }
 
-            // Flush everything with queued bytes (not just POLLOUT hits:
-            // completions may have landed after the poll).
+            // Flush everything with queued bytes (not just write-ready
+            // hits: completions may have landed after the wait).
             for id in 0..self.conns.len() {
                 self.service_writable(id);
             }
             self.reap_drained();
+        }
+    }
+
+    /// Re-arm the backend for every connection whose desired interest
+    /// changed since the last push. Steady state is a boolean scan — no
+    /// syscalls, no descriptor-array rebuild.
+    fn refresh_interest(&mut self) {
+        for (id, slot) in self.conns.iter_mut().enumerate() {
+            let Some(conn) = slot else { continue };
+            let want = (!conn.closing && !conn.throttled(), !conn.wqueue.is_empty());
+            if conn.interest == want {
+                continue;
+            }
+            conn.interest = want;
+            if let Err(e) =
+                self.backend.update(conn.stream.as_raw_fd(), KEY_CONN0 + id, want.0, want.1)
+            {
+                log::debug!("interest update failed, closing: {e}");
+                conn.closing = true;
+            }
         }
     }
 
@@ -385,7 +433,8 @@ impl EventLoop {
     }
 
     fn close_conn(&mut self, id: usize) {
-        if self.conns[id].take().is_some() {
+        if let Some(conn) = self.conns[id].take() {
+            self.backend.remove(conn.stream.as_raw_fd());
             self.free.push(id);
             self.publish_conn_gauge();
         }
@@ -399,8 +448,19 @@ impl EventLoop {
         conn.inflight -= 1;
         let is_frame = matches!(c.token, Token::Binary { .. });
         match c.token {
-            Token::Binary { .. } => conn.push_write(c.payload),
-            Token::Json { seq } => conn.sequence_json(seq, c.payload),
+            // The loop is single-threaded, so a multi-buffer (spliced)
+            // frame enqueues contiguously — nothing can interleave.
+            Token::Binary { .. } => {
+                for buf in c.payload {
+                    conn.push_write(buf);
+                }
+            }
+            Token::Json { seq } => {
+                let mut bufs = c.payload.into_iter();
+                let buf = bufs.next().unwrap_or_default();
+                debug_assert!(bufs.next().is_none(), "JSON responses are single-buffer");
+                conn.sequence_json(seq, buf);
+            }
         }
         if is_frame {
             self.coord.node().metrics().incr("transport.frames_out");
@@ -563,7 +623,7 @@ impl EventLoop {
             self.metrics().add("transport.frames_in", frames_in);
         }
         for (token, resp) in local {
-            let payload = encode_payload(token, &resp);
+            let payload = encode_payload(token, resp);
             self.apply_completion(Completion { conn: id, gen: self.gen_of(id), token, payload });
         }
         if fatal {
@@ -645,7 +705,7 @@ fn make_job(
         request,
         reply: Reply::Callback(Box::new(move |resp| {
             coord.node().metrics().observe(op, t0.elapsed().as_secs_f64());
-            let payload = encode_payload(token, &resp);
+            let payload = encode_payload(token, resp);
             let _ = comp.send(Completion { conn, gen, token, payload });
             // WouldBlock means a wakeup is already pending: fine.
             let _ = (&*wake).write(&[1]);
@@ -653,14 +713,13 @@ fn make_job(
     }
 }
 
-fn encode_payload(token: Token, resp: &Response) -> Vec<u8> {
+/// Encode on the worker thread. Binary responses use the splicing
+/// encoder: a `sketch_fetch_bin` blob crosses from `codec` to the socket
+/// as one owned buffer — never copied into a contiguous frame.
+fn encode_payload(token: Token, resp: Response) -> Vec<Vec<u8>> {
     match token {
-        Token::Binary { id } => {
-            let mut payload = Vec::new();
-            frame::encode_response_frame(id, resp, &mut payload);
-            payload
-        }
-        Token::Json { .. } => protocol::encode_line(&resp.to_json()).into_bytes(),
+        Token::Binary { id } => frame::encode_response_frame_vectored(id, resp),
+        Token::Json { .. } => vec![protocol::encode_line(&resp.to_json()).into_bytes()],
     }
 }
 
@@ -912,6 +971,61 @@ mod tests {
         };
         let (key, _, _) = crate::sketch::codec::decode_sketch_hex(&data).unwrap();
         assert_eq!(key, "doc");
+        drop(s);
+        server.stop();
+        Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();
+    }
+
+    /// The binary blob ops over a live socket: a `sketch_fetch_bin`
+    /// response leaves the server as a spliced multi-buffer frame, and
+    /// what arrives decodes to the raw codec bytes; `store_put_bin`
+    /// installs the blob back without any hex round trip.
+    #[test]
+    fn spliced_blob_frames_roundtrip_over_the_wire() {
+        use crate::coordinator::protocol::SketchSource;
+        use crate::sketch::codec;
+        let (coord, server) = start(2);
+        let mut s = TcpStream::connect(server.addr).unwrap();
+        let v = crate::sketch::SparseVector::new(vec![1, 2, 3], vec![1.0, 0.5, 2.0]);
+        send_frames(
+            &mut s,
+            &[(1, Request::Upsert { key: "doc".into(), vector: v, version: None })],
+        );
+        let mut acc = Vec::new();
+        let (_, resp) = read_frame(&mut s, &mut acc);
+        assert!(matches!(resp, Response::Ack { .. }), "upsert failed: {resp:?}");
+        send_frames(
+            &mut s,
+            &[(2, Request::SketchFetchBin { name: "doc".into(), source: SketchSource::Store })],
+        );
+        let (id, resp) = read_frame(&mut s, &mut acc);
+        assert_eq!(id, 2);
+        let Response::SketchBlobBin { name, data } = resp else {
+            panic!("expected binary blob, got {resp:?}")
+        };
+        assert_eq!(name, "doc");
+        let (key, version, sk) = codec::decode_sketch_bytes(&data).unwrap();
+        assert_eq!((key.as_str(), version), ("doc", 1));
+        // Round-trip: install the fetched registers under a new key,
+        // binary both ways.
+        send_frames(
+            &mut s,
+            &[(3, Request::StorePutBin { data: codec::encode_sketch_bytes("copy", 5, &sk) })],
+        );
+        let (_, resp) = read_frame(&mut s, &mut acc);
+        let Response::Ack { info } = resp else { panic!("expected ack, got {resp:?}") };
+        assert!(info.contains("installed 'copy' @v5"), "{info}");
+        send_frames(
+            &mut s,
+            &[(4, Request::SketchFetchBin { name: "copy".into(), source: SketchSource::Store })],
+        );
+        let (_, resp) = read_frame(&mut s, &mut acc);
+        let Response::SketchBlobBin { data, .. } = resp else {
+            panic!("expected binary blob, got {resp:?}")
+        };
+        let (_, v2, sk2) = codec::decode_sketch_bytes(&data).unwrap();
+        assert_eq!(v2, 5);
+        assert_eq!(sk2, sk, "registers must survive the binary round trip bit-identically");
         drop(s);
         server.stop();
         Arc::try_unwrap(coord).ok().expect("coordinator still referenced").shutdown();

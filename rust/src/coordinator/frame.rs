@@ -38,7 +38,7 @@
 use super::protocol::{check_weights, HelloInfo, QueryTarget, Request, Response, SketchSource};
 use crate::sketch::codec::{self, Reader};
 use crate::sketch::{GumbelMaxSketch, SparseVector};
-use crate::util::hash::fnv1a64;
+use crate::util::hash::{fnv1a64, fnv1a64_chain};
 use crate::util::json;
 
 /// First byte of every binary frame. `0xFB` is an invalid first byte for
@@ -59,6 +59,11 @@ pub const MAX_PAYLOAD: usize = 1 << 26;
 
 const KIND_REQUEST: u8 = 0;
 const KIND_RESPONSE: u8 = 1;
+
+/// Body tag of the `sketch_blob_bin` response — named (unlike the other
+/// tags) because the zero-copy read path ([`FrameView::sketch_blob_bin`])
+/// and the spliced write path must agree on it with the body codec.
+const RESP_TAG_BLOB_BIN: u8 = 12;
 
 /// A decoded frame body: the direction is part of the frame, so a server
 /// can refuse response frames and a client request frames, loudly.
@@ -103,13 +108,187 @@ fn encode_frame(id: u64, kind: u8, out: &mut Vec<u8>, body: impl FnOnce(&mut Vec
     codec::push_u64(out, sum);
 }
 
+/// Encode one request frame as buffers to be written back-to-back
+/// (vectored). For the binary blob ops (`store_put_bin` /
+/// `stream_merge_bin`) the already-encoded codec blob is **moved** into
+/// its own span — `codec::encode_sketch_bytes` output is written once and
+/// never re-buffered — with the frame checksum chained across the spans.
+/// Every other request encodes into a single buffer, bit-identical to
+/// [`encode_request_frame`] (so is the concatenation of the spans).
+pub fn encode_request_frame_vectored(id: u64, req: Request) -> Vec<Vec<u8>> {
+    match req {
+        Request::StorePutBin { data } => splice_frame(id, KIND_REQUEST, data, |out| {
+            out.push(25);
+        }),
+        Request::StreamMergeBin { stream, data } => {
+            splice_frame(id, KIND_REQUEST, data, |out| {
+                out.push(26);
+                put_str(out, &stream);
+            })
+        }
+        other => {
+            let mut buf = Vec::new();
+            encode_request_frame(id, &other, &mut buf);
+            vec![buf]
+        }
+    }
+}
+
+/// Response-side twin of [`encode_request_frame_vectored`]: a
+/// `sketch_blob_bin` reply splices its blob span verbatim; everything
+/// else is a single buffer bit-identical to [`encode_response_frame`].
+pub fn encode_response_frame_vectored(id: u64, resp: Response) -> Vec<Vec<u8>> {
+    match resp {
+        Response::SketchBlobBin { name, data } => {
+            splice_frame(id, KIND_RESPONSE, data, |out| {
+                out.push(RESP_TAG_BLOB_BIN);
+                put_str(out, &name);
+            })
+        }
+        other => {
+            let mut buf = Vec::new();
+            encode_response_frame(id, &other, &mut buf);
+            vec![buf]
+        }
+    }
+}
+
+/// Build `[prefix, blob, trailer]`: the prefix holds header + id + kind +
+/// the body head (tag and any scalar fields) + the blob's u32 length, the
+/// blob span is the caller's buffer moved verbatim, and the trailer is
+/// the fnv1a64 checksum folded incrementally across both prior spans —
+/// byte-for-byte the frame [`encode_frame`] would have produced, without
+/// ever copying the blob.
+fn splice_frame(
+    id: u64,
+    kind: u8,
+    blob: Vec<u8>,
+    body_head: impl FnOnce(&mut Vec<u8>),
+) -> Vec<Vec<u8>> {
+    let mut prefix = Vec::with_capacity(HEADER_LEN + MIN_PAYLOAD + 64);
+    prefix.push(FRAME_MAGIC);
+    prefix.push(FRAME_VERSION);
+    codec::push_u32(&mut prefix, 0); // payload_len, backpatched below
+    codec::push_u64(&mut prefix, id);
+    prefix.push(kind);
+    body_head(&mut prefix);
+    codec::push_u32(&mut prefix, blob.len() as u32);
+    let payload_len = (prefix.len() - HEADER_LEN + blob.len()) as u32;
+    prefix[2..HEADER_LEN].copy_from_slice(&payload_len.to_le_bytes());
+    let sum = fnv1a64_chain(fnv1a64(&prefix), &blob);
+    let mut trailer = Vec::with_capacity(TRAILER_LEN);
+    codec::push_u64(&mut trailer, sum);
+    vec![prefix, blob, trailer]
+}
+
+/// Envelope for an already-encoded request body: writing `prefix`, the
+/// body bytes, then `trailer` back to back is bit-identical to
+/// [`encode_request_frame`] — without re-encoding or copying the body.
+/// This is the fan-out path: a replicated write or repair install
+/// serializes its body ONCE and shares the bytes across every owner
+/// connection; only this 14-byte prefix and 8-byte checksum trailer are
+/// derived per frame (the request id is per-connection state).
+pub fn request_frame_envelope(id: u64, body: &[u8]) -> (Vec<u8>, Vec<u8>) {
+    let mut prefix = Vec::with_capacity(HEADER_LEN + MIN_PAYLOAD);
+    prefix.push(FRAME_MAGIC);
+    prefix.push(FRAME_VERSION);
+    codec::push_u32(&mut prefix, (MIN_PAYLOAD + body.len()) as u32);
+    codec::push_u64(&mut prefix, id);
+    prefix.push(KIND_REQUEST);
+    let sum = fnv1a64_chain(fnv1a64(&prefix), body);
+    let mut trailer = Vec::with_capacity(TRAILER_LEN);
+    codec::push_u64(&mut trailer, sum);
+    (prefix, trailer)
+}
+
 /// Try to decode one frame off the front of `buf`. `Incomplete` means
 /// "more bytes needed"; `Err` means the stream is corrupt (or not a frame
 /// at all) and the connection should be torn down — framing cannot be
 /// resynchronized once the length prefix is untrustworthy.
 pub fn decode_frame(buf: &[u8]) -> anyhow::Result<FrameStatus> {
+    match decode_frame_view(buf)? {
+        FrameViewStatus::Incomplete => Ok(FrameStatus::Incomplete),
+        FrameViewStatus::Frame(view) => Ok(FrameStatus::Frame {
+            consumed: view.consumed,
+            id: view.id,
+            msg: view.message()?,
+        }),
+    }
+}
+
+/// One complete frame with its body **borrowed** from the caller's buffer:
+/// header, length range and checksum are already validated, but the
+/// message is not yet parsed. This is the zero-copy read path — a client
+/// awaiting a `sketch_blob_bin` reply slices the codec blob straight out
+/// of the connection's input buffer via [`FrameView::sketch_blob_bin`]
+/// (registers sliced, not copied) instead of materializing an owned
+/// [`Response`] first.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameView<'a> {
+    /// Total frame bytes consumed off the buffer front.
+    pub consumed: usize,
+    /// Client-assigned request id (echoed verbatim in responses).
+    pub id: u64,
+    /// Direction: `true` for response frames (kind byte 1).
+    pub is_response: bool,
+    /// The tag-byte message body, borrowed from the input buffer.
+    pub body: &'a [u8],
+}
+
+/// Result of [`decode_frame_view`] on a (possibly partial) buffer front.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FrameViewStatus<'a> {
+    /// The buffer holds a prefix of a well-formed frame — read more bytes.
+    Incomplete,
+    /// One complete, checksum-verified frame borrowing the buffer.
+    Frame(FrameView<'a>),
+}
+
+impl<'a> FrameView<'a> {
+    /// Parse the borrowed body into an owned message — exactly what
+    /// [`decode_frame`] returns, same strictness, same errors.
+    pub fn message(&self) -> anyhow::Result<FrameMsg> {
+        let mut r = Reader { bytes: self.body, pos: 0 };
+        let msg = if self.is_response {
+            FrameMsg::Response(read_response(&mut r)?)
+        } else {
+            FrameMsg::Request(read_request(&mut r)?)
+        };
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "frame has {} trailing payload bytes after the message",
+            r.remaining()
+        );
+        Ok(msg)
+    }
+
+    /// If this frame is a `sketch_blob_bin` response, return its name and
+    /// the codec blob as a slice **borrowing the input buffer** — feed it
+    /// to [`codec::decode_sketch_bytes`] directly, no intermediate copy.
+    /// Any other frame answers `None` (fall back to [`Self::message`]).
+    pub fn sketch_blob_bin(&self) -> anyhow::Result<Option<(String, &'a [u8])>> {
+        if !self.is_response || self.body.first() != Some(&RESP_TAG_BLOB_BIN) {
+            return Ok(None);
+        }
+        let mut r = Reader { bytes: &self.body[1..], pos: 0 };
+        let name = get_str(&mut r)?;
+        let blob = get_bytes(&mut r)?;
+        anyhow::ensure!(
+            r.remaining() == 0,
+            "frame has {} trailing payload bytes after the blob",
+            r.remaining()
+        );
+        Ok(Some((name, blob)))
+    }
+}
+
+/// The borrowing half of [`decode_frame`]: validate the frame envelope
+/// (magic, version, length range, checksum, kind byte) and hand back the
+/// body as a slice of `buf` without parsing it. Same contract otherwise —
+/// `Incomplete` wants more bytes, `Err` means tear the connection down.
+pub fn decode_frame_view(buf: &[u8]) -> anyhow::Result<FrameViewStatus<'_>> {
     if buf.is_empty() {
-        return Ok(FrameStatus::Incomplete);
+        return Ok(FrameViewStatus::Incomplete);
     }
     anyhow::ensure!(
         buf[0] == FRAME_MAGIC,
@@ -124,7 +303,7 @@ pub fn decode_frame(buf: &[u8]) -> anyhow::Result<FrameStatus> {
         );
     }
     if buf.len() < HEADER_LEN {
-        return Ok(FrameStatus::Incomplete);
+        return Ok(FrameViewStatus::Incomplete);
     }
     let payload_len =
         u32::from_le_bytes(buf[2..HEADER_LEN].try_into().expect("4 bytes")) as usize;
@@ -134,7 +313,7 @@ pub fn decode_frame(buf: &[u8]) -> anyhow::Result<FrameStatus> {
     );
     let total = HEADER_LEN + payload_len + TRAILER_LEN;
     if buf.len() < total {
-        return Ok(FrameStatus::Incomplete);
+        return Ok(FrameViewStatus::Incomplete);
     }
     let (checked, tail) = buf[..total].split_at(total - TRAILER_LEN);
     let want = u64::from_le_bytes(tail.try_into().expect("8-byte tail"));
@@ -144,17 +323,17 @@ pub fn decode_frame(buf: &[u8]) -> anyhow::Result<FrameStatus> {
     );
     let mut r = Reader { bytes: &checked[HEADER_LEN..], pos: 0 };
     let id = r.u64()?;
-    let msg = match r.u8()? {
-        KIND_REQUEST => FrameMsg::Request(read_request(&mut r)?),
-        KIND_RESPONSE => FrameMsg::Response(read_response(&mut r)?),
+    let is_response = match r.u8()? {
+        KIND_REQUEST => false,
+        KIND_RESPONSE => true,
         other => anyhow::bail!("unknown frame kind {other}"),
     };
-    anyhow::ensure!(
-        r.remaining() == 0,
-        "frame has {} trailing payload bytes after the message",
-        r.remaining()
-    );
-    Ok(FrameStatus::Frame { consumed: total, id, msg })
+    Ok(FrameViewStatus::Frame(FrameView {
+        consumed: total,
+        id,
+        is_response,
+        body: &checked[HEADER_LEN + MIN_PAYLOAD..],
+    }))
 }
 
 /// Encode a request body alone (no frame header/checksum) — what the
@@ -275,6 +454,20 @@ pub fn encode_request_body(req: &Request, out: &mut Vec<u8>) {
             out.push(24);
             put_target(out, target);
         }
+        Request::StorePutBin { data } => {
+            out.push(25);
+            put_bytes(out, data);
+        }
+        Request::StreamMergeBin { stream, data } => {
+            out.push(26);
+            put_str(out, stream);
+            put_bytes(out, data);
+        }
+        Request::SketchFetchBin { name, source } => {
+            out.push(27);
+            put_str(out, name);
+            out.push(source_tag(*source));
+        }
     }
 }
 
@@ -342,6 +535,12 @@ fn read_request(r: &mut Reader) -> anyhow::Result<Request> {
             seed: r.u64()?,
         },
         24 => Request::Partition { target: get_target(r)? },
+        25 => Request::StorePutBin { data: get_bytes(r)?.to_vec() },
+        26 => Request::StreamMergeBin { stream: get_str(r)?, data: get_bytes(r)?.to_vec() },
+        27 => Request::SketchFetchBin {
+            name: get_str(r)?,
+            source: source_from_tag(r.u8()?)?,
+        },
         other => anyhow::bail!("unknown request tag {other}"),
     })
 }
@@ -416,6 +615,11 @@ pub fn encode_response_body(resp: &Response, out: &mut Vec<u8>) {
                 codec::push_u64(out, id);
             }
         }
+        Response::SketchBlobBin { name, data } => {
+            out.push(RESP_TAG_BLOB_BIN);
+            put_str(out, name);
+            put_bytes(out, data);
+        }
     }
 }
 
@@ -484,6 +688,10 @@ fn read_response(r: &mut Reader) -> anyhow::Result<Response> {
                 }
                 ids
             },
+        },
+        RESP_TAG_BLOB_BIN => Response::SketchBlobBin {
+            name: get_str(r)?,
+            data: get_bytes(r)?.to_vec(),
         },
         other => anyhow::bail!("unknown response tag {other}"),
     })
@@ -695,6 +903,22 @@ fn is_lower_hex(s: &str) -> bool {
     s.len() % 2 == 0 && s.bytes().all(|b| matches!(b, b'0'..=b'9' | b'a'..=b'f'))
 }
 
+/// Raw byte blob: u32 length + bytes. The binary blob ops' payload form —
+/// no hex detection, no flag byte; the bytes ARE the codec blob.
+fn put_bytes(out: &mut Vec<u8>, data: &[u8]) {
+    codec::push_u32(out, data.len() as u32);
+    out.extend_from_slice(data);
+}
+
+/// Borrowing inverse of [`put_bytes`] — the slice aliases the reader's
+/// buffer, so the zero-copy paths never duplicate the blob. The length
+/// guard rejects hostile prefixes before any allocation happens.
+fn get_bytes<'a>(r: &mut Reader<'a>) -> anyhow::Result<&'a [u8]> {
+    let n = r.u32()? as usize;
+    anyhow::ensure!(n <= MAX_PAYLOAD, "byte blob length {n} too large");
+    r.take(n)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -760,6 +984,16 @@ mod tests {
             Request::SketchFetch { name: "doc".into(), source: SketchSource::Stream },
             Request::Metrics,
             Request::Ping,
+            Request::StorePutBin {
+                data: codec::encode_sketch_bytes("a", 3, &sample_sketch()),
+            },
+            Request::StorePutBin { data: vec![] },
+            Request::StreamMergeBin {
+                stream: "s".into(),
+                data: codec::encode_sketch_bytes("s", 0, &sample_sketch()),
+            },
+            Request::SketchFetchBin { name: "doc".into(), source: SketchSource::Store },
+            Request::SketchFetchBin { name: "doc".into(), source: SketchSource::Stream },
         ]
     }
 
@@ -823,6 +1057,11 @@ mod tests {
             Response::Pong,
             Response::Samples { ids: vec![3, 17, 3, u64::MAX - 2] },
             Response::Samples { ids: vec![] },
+            Response::SketchBlobBin {
+                name: "doc".into(),
+                data: codec::encode_sketch_bytes("doc", 9, &sk),
+            },
+            Response::SketchBlobBin { name: "empty".into(), data: vec![] },
         ]
     }
 
@@ -934,6 +1173,101 @@ mod tests {
         // Untouched registers (the +inf / EMPTY sentinels) survive exactly.
         assert!(sketch.y[0].is_infinite());
         assert_eq!(sketch, sk);
+    }
+
+    /// The spliced (vectored) encoders must be indistinguishable on the
+    /// wire from the contiguous ones: concatenating the spans reproduces
+    /// the frame byte for byte, and the blob span is the caller's buffer
+    /// verbatim — written once, never re-buffered.
+    #[test]
+    fn vectored_encoders_are_bit_identical_and_do_not_copy_the_blob() {
+        let blob = codec::encode_sketch_bytes("doc", 5, &sample_sketch());
+        for req in [
+            Request::StorePutBin { data: blob.clone() },
+            Request::StreamMergeBin { stream: "s".into(), data: blob.clone() },
+        ] {
+            let mut contiguous = Vec::new();
+            encode_request_frame(7, &req, &mut contiguous);
+            let parts = encode_request_frame_vectored(7, req);
+            assert_eq!(parts.len(), 3, "blob requests splice into three spans");
+            assert_eq!(parts[1], blob, "middle span must be the blob verbatim");
+            assert_eq!(parts.concat(), contiguous);
+        }
+        let resp = Response::SketchBlobBin { name: "doc".into(), data: blob.clone() };
+        let mut contiguous = Vec::new();
+        encode_response_frame(9, &resp, &mut contiguous);
+        let parts = encode_response_frame_vectored(9, resp);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[1], blob);
+        assert_eq!(parts.concat(), contiguous);
+        // Non-blob messages fall back to one contiguous buffer.
+        let mut ping = Vec::new();
+        encode_request_frame(1, &Request::Ping, &mut ping);
+        assert_eq!(encode_request_frame_vectored(1, Request::Ping), vec![ping.clone()]);
+        let mut pong = Vec::new();
+        encode_response_frame(1, &Response::Pong, &mut pong);
+        assert_eq!(encode_response_frame_vectored(1, Response::Pong), vec![pong]);
+    }
+
+    /// `decode_frame_view` + `sketch_blob_bin` is the zero-copy read path:
+    /// the returned blob slice must alias the input buffer (no copy), and
+    /// the borrowed bytes must decode to the exact sketch that was sent.
+    #[test]
+    fn frame_view_borrows_the_blob_from_the_input_buffer() {
+        let sk = sample_sketch();
+        let blob = codec::encode_sketch_bytes("doc", 5, &sk);
+        let mut buf = Vec::new();
+        encode_response_frame(
+            42,
+            &Response::SketchBlobBin { name: "doc".into(), data: blob.clone() },
+            &mut buf,
+        );
+        let FrameViewStatus::Frame(view) = decode_frame_view(&buf).unwrap() else {
+            panic!("complete frame must decode")
+        };
+        assert_eq!((view.consumed, view.id, view.is_response), (buf.len(), 42, true));
+        let (name, borrowed) = view.sketch_blob_bin().unwrap().expect("blob frame");
+        assert_eq!(name, "doc");
+        assert_eq!(borrowed, &blob[..]);
+        // The slice aliases `buf` — sliced, not copied.
+        let range = buf.as_ptr() as usize..buf.as_ptr() as usize + buf.len();
+        assert!(range.contains(&(borrowed.as_ptr() as usize)), "blob was copied");
+        let (key, version, back) = codec::decode_sketch_bytes(borrowed).unwrap();
+        assert_eq!((key.as_str(), version), ("doc", 5));
+        assert_eq!(back, sk);
+        // Non-blob frames answer None; view.message() still parses them.
+        let mut other = Vec::new();
+        encode_response_frame(1, &Response::Pong, &mut other);
+        let FrameViewStatus::Frame(view) = decode_frame_view(&other).unwrap() else {
+            panic!("pong frame must decode")
+        };
+        assert_eq!(view.sketch_blob_bin().unwrap(), None);
+        assert_eq!(view.message().unwrap(), FrameMsg::Response(Response::Pong));
+        // Request frames never match the response-blob fast path.
+        let mut req = Vec::new();
+        encode_request_frame(1, &Request::StorePutBin { data: blob }, &mut req);
+        let FrameViewStatus::Frame(view) = decode_frame_view(&req).unwrap() else {
+            panic!("request frame must decode")
+        };
+        assert_eq!(view.sketch_blob_bin().unwrap(), None);
+    }
+
+    /// The fan-out envelope must reproduce `encode_request_frame` byte
+    /// for byte around a shared body, for every request shape and id.
+    #[test]
+    fn request_frame_envelope_is_bit_identical_to_contiguous_encode() {
+        for (i, req) in all_requests().into_iter().enumerate() {
+            let id = (i as u64) * 31 + 5;
+            let mut body = Vec::new();
+            encode_request_body(&req, &mut body);
+            let (prefix, trailer) = request_frame_envelope(id, &body);
+            let mut spliced = prefix;
+            spliced.extend_from_slice(&body);
+            spliced.extend_from_slice(&trailer);
+            let mut contiguous = Vec::new();
+            encode_request_frame(id, &req, &mut contiguous);
+            assert_eq!(spliced, contiguous, "request {i} envelope diverged");
+        }
     }
 
     #[test]

@@ -165,6 +165,14 @@ struct TopKEntry {
     gens: Vec<u64>,
 }
 
+/// A cached "this key does not exist" answer (ROADMAP item 5's negative
+/// cache), tagged with the same per-shard write generations the top-k
+/// entries use: absence can only stop being true through a write, so any
+/// store write invalidating the tag is exact, never conservative-stale.
+struct NegEntry {
+    gens: Vec<u64>,
+}
+
 pub struct Node {
     cfg: CoordinatorConfig,
     registry: Registry,
@@ -182,6 +190,11 @@ pub struct Node {
     merge_cache: ByteLruCache<Arc<MergeEntry>>,
     /// Top-k result cache: query-register digest → [`TopKEntry`].
     topk_cache: ByteLruCache<Arc<TopKEntry>>,
+    /// Negative cache: key digest → [`NegEntry`] proving the key was
+    /// absent at some generation snapshot. Consulted before the store on
+    /// `sketch_fetch` store misses and key-set merges, so a gather loop
+    /// hammering a nonexistent key stops re-probing every shard.
+    neg_cache: ByteLruCache<Arc<NegEntry>>,
     /// `cfg.cache_enabled && cfg.cache_max_bytes > 0`, resolved once.
     cache_on: bool,
     accel_on: bool,
@@ -266,6 +279,9 @@ impl Node {
         // half effectively never evicts while the merge half does the real
         // LRU work.
         let merge_budget = cfg.cache_max_bytes / 2;
+        // Negative entries are tiny (a key plus one u64 per store shard),
+        // so a sliver of the ranking half bounds them comfortably.
+        let neg_budget = (cfg.cache_max_bytes - merge_budget) / 8;
         Ok(Node {
             router: Router::new(RouterConfig {
                 accel_max_len,
@@ -282,7 +298,8 @@ impl Node {
             lsh_names: RwLock::new(HashMap::new()),
             store: SketchStore::new(lsh_params, cfg.store_shards.max(1)),
             merge_cache: ByteLruCache::new(merge_budget, 8),
-            topk_cache: ByteLruCache::new(cfg.cache_max_bytes - merge_budget, 8),
+            topk_cache: ByteLruCache::new(cfg.cache_max_bytes - merge_budget - neg_budget, 8),
+            neg_cache: ByteLruCache::new(neg_budget, 8),
             cache_on,
             accel_on,
             default_algo,
@@ -424,6 +441,134 @@ impl Node {
         Ok(())
     }
 
+    fn neg_digest(key: &str) -> u64 {
+        let mut d = Digest::new();
+        d.str(key);
+        d.finish()
+    }
+
+    /// True when a still-valid cached miss proves `key` is absent — the
+    /// caller may fail without re-probing the store. A hit can never mask
+    /// a racing insert: the entry's generation tag was snapshotted before
+    /// the probe that proved absence, and any write bumps its shard's
+    /// generation inside the store's critical section, so the entry only
+    /// ever validates stale.
+    fn cached_missing(&self, key: &str) -> bool {
+        if !self.cache_on {
+            return false;
+        }
+        let hit = self
+            .neg_cache
+            .get_validated(Self::neg_digest(key), |e| self.store.generations() == e.gens)
+            .is_some();
+        if hit {
+            self.metrics.incr("cache.neg_hit");
+        }
+        hit
+    }
+
+    /// Remember that the store just proved `key` absent. `gens` must have
+    /// been snapshotted BEFORE the probe (the same discipline as the
+    /// top-k tags). Counted as `cache.neg_miss`: a miss that had to touch
+    /// the store and is now cached.
+    fn remember_missing(&self, key: &str, gens: Vec<u64>) {
+        if !self.cache_on || gens.is_empty() {
+            return;
+        }
+        self.metrics.incr("cache.neg_miss");
+        let cost = 32 + key.len() + gens.len() * 8;
+        self.neg_cache.insert(Self::neg_digest(key), Arc::new(NegEntry { gens }), cost);
+    }
+
+    /// Resolve a `sketch_fetch` source to `(version, sketch)` — the shared
+    /// core of the hex and binary blob ops, so both transports serve the
+    /// same bytes, the same errors and the same metrics. Store blobs carry
+    /// the key's write version (the LWW tiebreaker replicas converge by);
+    /// registry and stream sketches have no write history — their blobs
+    /// say 0. Store misses consult the negative cache before touching the
+    /// shards, and fresh misses are remembered.
+    fn fetch_sketch(
+        &self,
+        name: &str,
+        source: SketchSource,
+    ) -> anyhow::Result<(u64, GumbelMaxSketch)> {
+        let found = match source {
+            SketchSource::Store => {
+                if self.cached_missing(name) {
+                    anyhow::bail!("no {} sketch named '{name}'", source.name());
+                }
+                let gens =
+                    if self.cache_on { self.store.generations() } else { Vec::new() };
+                let got = self.store.get_versioned(name);
+                if got.is_none() {
+                    self.remember_missing(name, gens);
+                }
+                got
+            }
+            SketchSource::Registry => self.registry.get_sketch(name).map(|s| (0, s)),
+            SketchSource::Stream => self.registry.stream_sketch(name).map(|s| (0, s)),
+        };
+        let (version, sk) = found
+            .ok_or_else(|| anyhow::anyhow!("no {} sketch named '{name}'", source.name()))?;
+        self.metrics.incr("store.fetch");
+        Ok((version, sk))
+    }
+
+    /// Install one decoded codec blob under LWW — the shared core of
+    /// `store_put` and `store_put_bin` (identical config gates, acks and
+    /// errors on both transports).
+    fn store_put_sketch(
+        &self,
+        key: String,
+        version: u64,
+        sk: GumbelMaxSketch,
+    ) -> anyhow::Result<Response> {
+        anyhow::ensure!(
+            key.len() <= codec::MAX_KEY_LEN,
+            "store keys are limited to {} bytes (got {})",
+            codec::MAX_KEY_LEN,
+            key.len(),
+        );
+        // Same gate as `restore`: only blobs at the serving config can
+        // enter the store (a repair peer at another (family, seed, k)
+        // must fail loudly, not index garbage).
+        anyhow::ensure!(
+            sk.family == self.default_algo.family()
+                && sk.seed == self.cfg.seed
+                && sk.k() == self.cfg.k,
+            "store_put blob '{key}' (family '{}', seed {}, k {}) does not match \
+             the serving config (family '{}', seed {}, k {})",
+            sk.family.name(),
+            sk.seed,
+            sk.k(),
+            self.default_algo.family().name(),
+            self.cfg.seed,
+            self.cfg.k,
+        );
+        self.metrics.incr("store.put");
+        Ok(match self.store.put_versioned(&key, version, sk) {
+            Some(v) => Response::Ack { info: format!("installed '{key}' @v{v}") },
+            None => Response::Ack {
+                info: format!(
+                    "kept '{key}' @v{} (stale blob v{version})",
+                    self.store.version_of(&key).unwrap_or(0),
+                ),
+            },
+        })
+    }
+
+    /// Absorb one decoded peer stream sketch (§2.3 union merge) — shared
+    /// by `stream_merge` and `stream_merge_bin`.
+    fn stream_merge_sketch(
+        &self,
+        stream: String,
+        sk: &GumbelMaxSketch,
+    ) -> anyhow::Result<Response> {
+        self.registry.stream_merge(&stream, self.cfg.k, self.cfg.seed, sk)?;
+        self.metrics.incr("stream.merge");
+        Ok(Response::Ack { info: format!("merged into stream '{stream}'") })
+    }
+
     /// Resolve a query target to the sketch its estimator runs over — the
     /// execute half of the plan/execute seam (every store-backed read is
     /// routed by [`Router::plan_query`]; the cached-merge access path the
@@ -457,6 +602,14 @@ impl Node {
                     self.metrics.incr("path.query.merge_cached");
                     return Ok(hit.sketch.clone());
                 }
+                // A member key the store has already proved absent fails
+                // here without re-probing the shards — the same error the
+                // merge below would produce.
+                for key in &members {
+                    if self.cached_missing(key) {
+                        anyhow::bail!("no store entry '{key}'");
+                    }
+                }
                 self.metrics.incr("path.query.merge_keys");
                 // Tag snapshot happens BEFORE the merge: a write racing the
                 // merge bumps its counter first (inside the store's
@@ -464,7 +617,21 @@ impl Node {
                 // it can never serve pre-write registers as post-write
                 // state.
                 let delete_gen = self.store.delete_generation();
-                let (sk, versions) = self.store.merge_keys(&members)?;
+                let gens = self.store.generations();
+                let (sk, versions) = match self.store.merge_keys(&members) {
+                    Ok(got) => got,
+                    Err(e) => {
+                        // Remember which member the store proved absent so
+                        // the next repeat of this still-failing query is a
+                        // negative-cache hit.
+                        if let Some(missing) =
+                            members.iter().find(|key| self.store.version_of(key).is_none())
+                        {
+                            self.remember_missing(missing, gens);
+                        }
+                        return Err(e);
+                    }
+                };
                 let members: Vec<(String, u64)> =
                     members.into_iter().zip(versions).collect();
                 let cost = sk.k() * 16
@@ -574,22 +741,17 @@ impl Node {
                 Response::Sketch { name, sketch: sk }
             }
             Request::SketchFetch { name, source } => {
-                // Store blobs carry the key's write version (the LWW
-                // tiebreaker replicas converge by); registry and stream
-                // sketches have no write history — their blobs say 0.
-                let (version, sk) = match source {
-                    SketchSource::Store => self.store.get_versioned(&name),
-                    SketchSource::Registry => self.registry.get_sketch(&name).map(|s| (0, s)),
-                    SketchSource::Stream => {
-                        self.registry.stream_sketch(&name).map(|s| (0, s))
-                    }
-                }
-                .ok_or_else(|| {
-                    anyhow::anyhow!("no {} sketch named '{name}'", source.name())
-                })?;
-                self.metrics.incr("store.fetch");
+                let (version, sk) = self.fetch_sketch(&name, source)?;
                 let data = codec::encode_sketch_hex(&name, version, &sk);
                 Response::SketchBlob { name, data }
+            }
+            Request::SketchFetchBin { name, source } => {
+                // Same lookup, raw container bytes: the framed transport
+                // splices `data` into the response frame verbatim, so the
+                // encode below is the only serialization the blob sees.
+                let (version, sk) = self.fetch_sketch(&name, source)?;
+                let data = codec::encode_sketch_bytes(&name, version, &sk);
+                Response::SketchBlobBin { name, data }
             }
             Request::Push { stream, items } => {
                 let n = self.registry.stream_push(&stream, self.cfg.k, self.cfg.seed, &items);
@@ -725,44 +887,20 @@ impl Node {
             Request::StorePut { data } => {
                 self.ensure_lsh_capable()?;
                 let (key, version, sk) = codec::decode_sketch_hex(&data)?;
-                anyhow::ensure!(
-                    key.len() <= codec::MAX_KEY_LEN,
-                    "store keys are limited to {} bytes (got {})",
-                    codec::MAX_KEY_LEN,
-                    key.len(),
-                );
-                // Same gate as `restore`: only blobs at the serving
-                // config can enter the store (a repair peer at another
-                // (family, seed, k) must fail loudly, not index garbage).
-                anyhow::ensure!(
-                    sk.family == self.default_algo.family()
-                        && sk.seed == self.cfg.seed
-                        && sk.k() == self.cfg.k,
-                    "store_put blob '{key}' (family '{}', seed {}, k {}) does not match \
-                     the serving config (family '{}', seed {}, k {})",
-                    sk.family.name(),
-                    sk.seed,
-                    sk.k(),
-                    self.default_algo.family().name(),
-                    self.cfg.seed,
-                    self.cfg.k,
-                );
-                self.metrics.incr("store.put");
-                match self.store.put_versioned(&key, version, sk) {
-                    Some(v) => Response::Ack { info: format!("installed '{key}' @v{v}") },
-                    None => Response::Ack {
-                        info: format!(
-                            "kept '{key}' @v{} (stale blob v{version})",
-                            self.store.version_of(&key).unwrap_or(0),
-                        ),
-                    },
-                }
+                self.store_put_sketch(key, version, sk)?
+            }
+            Request::StorePutBin { data } => {
+                self.ensure_lsh_capable()?;
+                let (key, version, sk) = codec::decode_sketch_bytes(&data)?;
+                self.store_put_sketch(key, version, sk)?
             }
             Request::StreamMerge { stream, data } => {
                 let (_, _, sk) = codec::decode_sketch_hex(&data)?;
-                self.registry.stream_merge(&stream, self.cfg.k, self.cfg.seed, &sk)?;
-                self.metrics.incr("stream.merge");
-                Response::Ack { info: format!("merged into stream '{stream}'") }
+                self.stream_merge_sketch(stream, &sk)?
+            }
+            Request::StreamMergeBin { stream, data } => {
+                let (_, _, sk) = codec::decode_sketch_bytes(&data)?;
+                self.stream_merge_sketch(stream, &sk)?
             }
             Request::Delete { key } => {
                 let existed = self.store.delete(&key);
@@ -892,6 +1030,7 @@ impl Node {
                 // clearing now just returns the memory immediately.
                 self.merge_cache.clear();
                 self.topk_cache.clear();
+                self.neg_cache.clear();
                 // A new epoch, visible through `hello`.
                 self.epoch.fetch_add(1, Ordering::SeqCst);
                 Response::Ack { info: format!("restored {n} entries from '{path}'") }
@@ -1407,6 +1546,137 @@ mod tests {
             n.execute_alloc(Request::StreamMerge { stream: "s".into(), data: bad }),
             Response::Error { .. }
         ));
+        n.shutdown();
+    }
+
+    /// The binary blob ops serve byte-identical codec payloads to their
+    /// hex twins and enforce the same gates: `sketch_fetch_bin` blobs are
+    /// exactly the un-hexed `sketch_fetch` bytes for all three sources,
+    /// `store_put_bin` installs/keeps/refuses like `store_put`, and
+    /// `stream_merge_bin` converges to the same §2.3 union.
+    #[test]
+    fn binary_blob_ops_mirror_their_hex_twins_bit_for_bit() {
+        let n = node();
+        let v = vec1();
+        n.execute_alloc(Request::Upsert { key: "x".into(), vector: v.clone(), version: None });
+        n.execute_alloc(Request::Sketch { name: "x".into(), vector: v.clone(), algo: None });
+        n.execute_alloc(Request::Push { stream: "x".into(), items: vec![(1, 0.5)] });
+        for source in [SketchSource::Store, SketchSource::Registry, SketchSource::Stream] {
+            let Response::SketchBlob { data: hex, .. } =
+                n.execute_alloc(Request::SketchFetch { name: "x".into(), source })
+            else {
+                panic!("expected hex blob for {source:?}")
+            };
+            let Response::SketchBlobBin { name, data: raw } =
+                n.execute_alloc(Request::SketchFetchBin { name: "x".into(), source })
+            else {
+                panic!("expected binary blob for {source:?}")
+            };
+            assert_eq!(name, "x");
+            assert_eq!(codec::from_hex(&hex).unwrap(), raw, "{source:?}");
+        }
+        // Misses use the same per-source error text as the hex op.
+        let resp = n.execute_alloc(Request::SketchFetchBin {
+            name: "nope".into(),
+            source: SketchSource::Stream,
+        });
+        let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+        assert!(message.contains("no stream sketch named 'nope'"), "{message}");
+        // store_put_bin: newer installs, stale is kept, wrong config and
+        // garbage are loud errors — the hex op's exact contract.
+        let Response::SketchBlobBin { data, .. } = n.execute_alloc(Request::SketchFetchBin {
+            name: "x".into(),
+            source: SketchSource::Store,
+        }) else {
+            panic!("expected blob")
+        };
+        let (_, _, sk) = codec::decode_sketch_bytes(&data).unwrap();
+        let Response::Ack { info } = n.execute_alloc(Request::StorePutBin {
+            data: codec::encode_sketch_bytes("x", 9, &sk),
+        }) else {
+            panic!("expected ack")
+        };
+        assert!(info.contains("installed 'x' @v9"), "{info}");
+        let Response::Ack { info } = n.execute_alloc(Request::StorePutBin {
+            data: codec::encode_sketch_bytes("x", 2, &sk),
+        }) else {
+            panic!("expected ack")
+        };
+        assert!(info.contains("kept 'x' @v9"), "{info}");
+        let wrong_cfg = codec::encode_sketch_bytes(
+            "x",
+            99,
+            &crate::sketch::fastgm::FastGm::new(32, 42).sketch(&v),
+        );
+        let resp = n.execute_alloc(Request::StorePutBin { data: wrong_cfg });
+        let Response::Error { message } = resp else { panic!("expected error, got {resp:?}") };
+        assert!(message.contains("does not match"), "{message}");
+        assert!(matches!(
+            n.execute_alloc(Request::StorePutBin { data: vec![0xde, 0xad] }),
+            Response::Error { .. }
+        ));
+        // stream_merge_bin absorbs a peer blob into the same union the
+        // hex op would produce.
+        let mut peer = crate::sketch::stream_fastgm::StreamFastGm::new(64, 42);
+        peer.push(2, 1.5);
+        let blob = codec::encode_sketch_bytes("x", 0, &peer.sketch());
+        assert!(matches!(
+            n.execute_alloc(Request::StreamMergeBin { stream: "x".into(), data: blob }),
+            Response::Ack { .. }
+        ));
+        let Response::SketchBlobBin { data, .. } = n.execute_alloc(Request::SketchFetchBin {
+            name: "x".into(),
+            source: SketchSource::Stream,
+        }) else {
+            panic!("expected blob")
+        };
+        let (_, _, merged) = codec::decode_sketch_bytes(&data).unwrap();
+        let mut union = crate::sketch::stream_fastgm::StreamFastGm::new(64, 42);
+        union.push(1, 0.5);
+        union.push(2, 1.5);
+        assert_eq!(merged, union.sketch());
+        n.shutdown();
+    }
+
+    /// Negative caching (ROADMAP item 5): a repeated miss on a
+    /// nonexistent key is served from the cache without re-probing the
+    /// store, and ANY store write invalidates the cached miss instantly —
+    /// the very next read sees the key.
+    #[test]
+    fn negative_cache_serves_repeat_misses_and_writes_invalidate() {
+        let n = node();
+        let fetch = |name: &str| {
+            n.execute_alloc(Request::SketchFetch {
+                name: name.into(),
+                source: SketchSource::Store,
+            })
+        };
+        // First miss probes the store and fills (neg_miss); the repeat is
+        // served from the cache (neg_hit).
+        assert!(matches!(fetch("ghost"), Response::Error { .. }));
+        assert_eq!(n.metrics().counter("cache.neg_miss"), 1);
+        assert_eq!(n.metrics().counter("cache.neg_hit"), 0);
+        assert!(matches!(fetch("ghost"), Response::Error { .. }));
+        assert_eq!(n.metrics().counter("cache.neg_hit"), 1);
+        // Key-set queries over a missing member go negative too, with the
+        // same error text the store merge produces.
+        let q = Request::Sample { target: QueryTarget::key("ghost"), n: 2, seed: 0 };
+        let Response::Error { message } = n.execute_alloc(q.clone()) else {
+            panic!("expected error")
+        };
+        assert!(message.contains("no store entry 'ghost'"), "{message}");
+        assert!(n.metrics().counter("cache.neg_hit") >= 2);
+        // Writing the key invalidates the cached miss immediately.
+        n.execute_alloc(Request::Upsert { key: "ghost".into(), vector: vec1(), version: None });
+        assert!(matches!(fetch("ghost"), Response::SketchBlob { .. }));
+        assert!(matches!(n.execute_alloc(q), Response::Samples { .. }));
+        // A different key's write also invalidates (whole-store
+        // generations, same tag the top-k cache uses) — absence is then
+        // re-proved and re-cached.
+        assert!(matches!(fetch("phantom"), Response::Error { .. }));
+        n.execute_alloc(Request::Upsert { key: "other".into(), vector: vec1(), version: None });
+        assert!(matches!(fetch("phantom"), Response::Error { .. }));
+        assert_eq!(n.metrics().counter("cache.neg_miss"), 3);
         n.shutdown();
     }
 }

@@ -4,6 +4,7 @@
 //! encoding tests below lock the format (it is also what
 //! `examples/serve_e2e.rs` and the Python-free CLI client speak).
 
+use crate::sketch::codec;
 use crate::sketch::{GumbelMaxSketch, SparseVector};
 use crate::util::json::{self, Value};
 
@@ -23,7 +24,14 @@ use crate::util::json::{self, Value};
 /// cannot serve sampling would fail per-query and per-replica instead of
 /// at connect. Advertising v3 in `hello` lets the handshake refuse the
 /// skew up front, same as v2 did for versioned writes.
-pub const PROTOCOL_VERSION: u64 = 3;
+///
+/// v4: the binary blob ops `sketch_fetch_bin` / `store_put_bin` /
+/// `stream_merge_bin` and the `sketch_blob_bin` response — the framed
+/// transport's raw-`sketch::codec` data plane. Same rationale as v3:
+/// framed cluster clients scatter these to every replica on the hot
+/// gather/repair paths, so a mixed cluster where some nodes cannot serve
+/// them must refuse at connect, not fail per-blob mid-repair.
+pub const PROTOCOL_VERSION: u64 = 4;
 
 /// Which server-side collection a `sketch_fetch` reads from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -219,6 +227,17 @@ pub enum Request {
     /// Metrics snapshot.
     Metrics,
     Ping,
+    /// [`Request::StorePut`] with the codec blob as **raw bytes** — the
+    /// framed transport's binary data plane (no hex, written/read without
+    /// re-buffering). On the JSON wire the bytes surface as hex, so the
+    /// op stays speakable (and golden-testable) on both transports.
+    StorePutBin { data: Vec<u8> },
+    /// [`Request::StreamMerge`] with a raw-byte codec blob (see
+    /// [`Request::StorePutBin`] for the transport encoding rule).
+    StreamMergeBin { stream: String, data: Vec<u8> },
+    /// [`Request::SketchFetch`] answered with [`Response::SketchBlobBin`]
+    /// (raw codec bytes) instead of a hex [`Response::SketchBlob`].
+    SketchFetchBin { name: String, source: SketchSource },
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -241,6 +260,10 @@ pub enum Response {
     Samples { ids: Vec<u64> },
     Error { message: String },
     Pong,
+    /// One codec-encoded sketch as **raw bytes** (`sketch_fetch_bin`'s
+    /// reply). The framed transport writes `data` without re-encoding it;
+    /// the JSON wire carries it as hex (see [`Request::StorePutBin`]).
+    SketchBlobBin { name: String, data: Vec<u8> },
 }
 
 fn vector_to_json(v: &SparseVector) -> Value {
@@ -419,6 +442,20 @@ impl Request {
             ]),
             Request::Metrics => Value::obj(vec![("op", Value::str("metrics"))]),
             Request::Ping => Value::obj(vec![("op", Value::str("ping"))]),
+            Request::StorePutBin { data } => Value::obj(vec![
+                ("op", Value::str("store_put_bin")),
+                ("data", Value::str(codec::to_hex(data))),
+            ]),
+            Request::StreamMergeBin { stream, data } => Value::obj(vec![
+                ("op", Value::str("stream_merge_bin")),
+                ("stream", Value::str(stream.clone())),
+                ("data", Value::str(codec::to_hex(data))),
+            ]),
+            Request::SketchFetchBin { name, source } => Value::obj(vec![
+                ("op", Value::str("sketch_fetch_bin")),
+                ("name", Value::str(name.clone())),
+                ("source", Value::str(source.name())),
+            ]),
         }
     }
 
@@ -554,6 +591,17 @@ impl Request {
             },
             "metrics" => Request::Metrics,
             "ping" => Request::Ping,
+            "store_put_bin" => Request::StorePutBin {
+                data: codec::from_hex(v.req_str("data")?)?,
+            },
+            "stream_merge_bin" => Request::StreamMergeBin {
+                stream: v.req_str("stream")?.to_string(),
+                data: codec::from_hex(v.req_str("data")?)?,
+            },
+            "sketch_fetch_bin" => Request::SketchFetchBin {
+                name: v.req_str("name")?.to_string(),
+                source: SketchSource::from_name(v.req_str("source")?)?,
+            },
             other => anyhow::bail!("unknown op '{other}'"),
         })
     }
@@ -586,6 +634,9 @@ impl Request {
             Request::SketchFetch { .. } => "sketch_fetch",
             Request::Metrics => "metrics",
             Request::Ping => "ping",
+            Request::StorePutBin { .. } => "store_put_bin",
+            Request::StreamMergeBin { .. } => "stream_merge_bin",
+            Request::SketchFetchBin { .. } => "sketch_fetch_bin",
         }
     }
 }
@@ -682,6 +733,12 @@ impl Response {
                 ("ok", Value::Bool(true)),
                 ("type", Value::str("pong")),
             ]),
+            Response::SketchBlobBin { name, data } => Value::obj(vec![
+                ("ok", Value::Bool(true)),
+                ("type", Value::str("sketch_blob_bin")),
+                ("name", Value::str(name.clone())),
+                ("data", Value::str(codec::to_hex(data))),
+            ]),
         }
     }
 
@@ -766,6 +823,10 @@ impl Response {
             "sketch_blob" => Response::SketchBlob {
                 name: v.req_str("name")?.to_string(),
                 data: v.req_str("data")?.to_string(),
+            },
+            "sketch_blob_bin" => Response::SketchBlobBin {
+                name: v.req_str("name")?.to_string(),
+                data: codec::from_hex(v.req_str("data")?)?,
             },
             "samples" => Response::Samples {
                 ids: v
@@ -874,6 +935,14 @@ mod tests {
         }
         roundtrip_req(Request::Metrics);
         roundtrip_req(Request::Ping);
+        roundtrip_req(Request::StorePutBin { data: b"FGMS\x02\x00".to_vec() });
+        roundtrip_req(Request::StreamMergeBin {
+            stream: "s".into(),
+            data: vec![0x46, 0x47, 0x4d, 0x53, 0xff, 0x00],
+        });
+        for source in [SketchSource::Store, SketchSource::Registry, SketchSource::Stream] {
+            roundtrip_req(Request::SketchFetchBin { name: "doc1".into(), source });
+        }
     }
 
     #[test]
@@ -908,9 +977,44 @@ mod tests {
             },
         });
         roundtrip_resp(Response::SketchBlob { name: "doc1".into(), data: "46474d53".into() });
+        roundtrip_resp(Response::SketchBlobBin {
+            name: "doc1".into(),
+            data: b"FGMS\x02\x00\x00".to_vec(),
+        });
         roundtrip_resp(Response::Samples { ids: vec![3, 17, 3, u64::MAX - 2] });
         roundtrip_resp(Response::Samples { ids: vec![] });
         roundtrip_resp(Response::Pong);
+    }
+
+    /// The binary blob ops surface their bytes as hex on the JSON wire —
+    /// strict hex, so a JSON peer cannot smuggle malformed bodies past the
+    /// decoder, and the source field is mandatory (no CLI-convenience
+    /// default: only cluster clients speak these ops).
+    #[test]
+    fn bin_ops_validate_their_fields() {
+        let put = decode_request(r#"{"op":"store_put_bin","data":"46474d53"}"#).unwrap();
+        assert_eq!(put, Request::StorePutBin { data: b"FGMS".to_vec() });
+        assert!(decode_request(r#"{"op":"store_put_bin"}"#).is_err());
+        assert!(decode_request(r#"{"op":"store_put_bin","data":"zz"}"#).is_err());
+        assert!(decode_request(r#"{"op":"store_put_bin","data":"abc"}"#).is_err());
+        assert!(decode_request(r#"{"op":"stream_merge_bin","stream":"s"}"#).is_err());
+        assert!(decode_request(r#"{"op":"stream_merge_bin","data":"ab"}"#).is_err());
+        assert!(decode_request(r#"{"op":"sketch_fetch_bin","name":"a"}"#).is_err());
+        assert!(
+            decode_request(r#"{"op":"sketch_fetch_bin","name":"a","source":"disk"}"#).is_err()
+        );
+        let fetch =
+            decode_request(r#"{"op":"sketch_fetch_bin","name":"a","source":"stream"}"#)
+                .unwrap();
+        assert_eq!(
+            fetch,
+            Request::SketchFetchBin { name: "a".into(), source: SketchSource::Stream }
+        );
+        assert!(decode_response(r#"{"ok":true,"type":"sketch_blob_bin","name":"a"}"#).is_err());
+        assert!(
+            decode_response(r#"{"ok":true,"type":"sketch_blob_bin","name":"a","data":"q"}"#)
+                .is_err()
+        );
     }
 
     #[test]
@@ -941,13 +1045,13 @@ mod tests {
 
     #[test]
     fn hello_reply_requires_its_fields() {
-        assert!(decode_response(r#"{"ok":true,"type":"hello","protocol":3}"#).is_err());
+        assert!(decode_response(r#"{"ok":true,"type":"hello","protocol":4}"#).is_err());
         assert!(decode_response(
-            r#"{"ok":true,"type":"hello","protocol":3,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":"fastgm"}"#
+            r#"{"ok":true,"type":"hello","protocol":4,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":"fastgm"}"#
         )
         .is_err(), "algos must be an array");
         let ok = decode_response(
-            r#"{"ok":true,"type":"hello","protocol":3,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
+            r#"{"ok":true,"type":"hello","protocol":4,"node":"n","epoch":0,"k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
         )
         .unwrap();
         let Response::Hello { info } = ok else { panic!("expected hello") };

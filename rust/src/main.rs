@@ -429,7 +429,12 @@ fn cluster_spec(name: &'static str, about: &'static str) -> ArgSpec {
         .opt("replication", "1", "replica set size R (HRW top-R owners per key)")
         .opt("write-quorum", "1", "owner acks required per write (1..=R)")
         .opt("io-timeout", "10", "per-node I/O timeout in seconds (expiry marks the node down)")
-        .flag("framed", "speak the binary framed protocol to the nodes (event transport only)")
+        .flag(
+            "framed",
+            "speak the binary framed protocol to the nodes (event transport only); \
+             blob transfers (gathers, repair, stream merges) ride raw codec bytes \
+             instead of hex-in-JSON",
+        )
         .opt(
             "cache-bytes",
             "0",

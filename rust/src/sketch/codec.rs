@@ -233,10 +233,13 @@ pub fn decode_store(bytes: &[u8]) -> anyhow::Result<Vec<(String, u64, GumbelMaxS
 // -- single-sketch wire transfer (cluster gather + repair paths) -----------
 //
 // `sketch_fetch` responses and `store_put` requests carry one
-// codec-encoded sketch inside a JSON string, so the binary snapshot format
-// — per-key version, checksum, strict decode and all — is also the
-// cross-node transfer format (§2.3 sketches move between sites exactly as
-// they are persisted). Hex keeps the encoding dependency-free.
+// codec-encoded sketch, so the binary snapshot format — per-key version,
+// checksum, strict decode and all — is also the cross-node transfer
+// format (§2.3 sketches move between sites exactly as they are
+// persisted). The JSON-lines protocol wraps the bytes in hex (dependency-
+// free, string-safe); the framed transport's `*_bin` ops carry them raw —
+// same bytes, half the wire size, zero re-encoding (the frame layer
+// splices this module's output into the frame verbatim).
 
 /// Lowercase hex of `bytes`.
 pub fn to_hex(bytes: &[u8]) -> String {

@@ -7,7 +7,17 @@ use super::rng::fmix64;
 /// FNV-1a 64-bit — stable, allocation-free, good enough for short tokens.
 #[inline]
 pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    fnv1a64_chain(0xCBF2_9CE4_8422_2325, bytes)
+}
+
+/// Continue an FNV-1a fold from a previous [`fnv1a64`] state. The fold is
+/// a plain byte-by-byte recurrence, so
+/// `fnv1a64_chain(fnv1a64(a), b) == fnv1a64` of `a` and `b` concatenated —
+/// which lets the framed transport checksum a frame spliced from several
+/// buffers (header span, codec blob, trailer) without ever concatenating
+/// them.
+#[inline]
+pub fn fnv1a64_chain(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01B3);
@@ -52,6 +62,21 @@ mod tests {
         assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
         assert_eq!(fnv1a64(b"foobar"), 0x85944171F73967E8);
+    }
+
+    /// The chained fold equals the one-shot fold of the concatenation, at
+    /// every split point — what the spliced frame checksum relies on.
+    #[test]
+    fn chained_fold_matches_concatenation() {
+        let bytes = b"the quick brown fox jumps over the lazy dog";
+        let whole = fnv1a64(bytes);
+        for split in 0..=bytes.len() {
+            let (a, b) = bytes.split_at(split);
+            assert_eq!(fnv1a64_chain(fnv1a64(a), b), whole, "split at {split}");
+        }
+        // Three-way splits chain too (prefix | blob | nothing-left).
+        let h = fnv1a64_chain(fnv1a64_chain(fnv1a64(&bytes[..9]), &bytes[9..20]), &bytes[20..]);
+        assert_eq!(h, whole);
     }
 
     #[test]

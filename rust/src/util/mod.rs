@@ -14,4 +14,5 @@ pub mod stats;
 pub mod logger;
 pub mod bench;
 pub mod poll;
+pub mod readiness;
 pub mod proptest;

@@ -1,0 +1,355 @@
+//! Readiness backends for the event-driven transport: one trait, two
+//! implementations, picked at runtime.
+//!
+//! [`PollBackend`] wraps [`super::poll`] and rebuilds its `pollfd` array
+//! per wait — O(watched descriptors) every wakeup, but portable to every
+//! unix. [`EpollBackend`] (Linux only) keeps the interest set in the
+//! kernel: registration changes are incremental `epoll_ctl` calls and a
+//! wakeup costs O(ready descriptors), so an event loop over 10k mostly
+//! idle sockets stops paying for the 9 990 quiet ones. [`make_backend`]
+//! prefers epoll where it exists and falls back to poll — set
+//! `FASTGM_READINESS=poll` to force the fallback (each backend reports
+//! readiness identically, so the choice is invisible above this module).
+//!
+//! Like [`super::poll`], the epoll syscalls are self-declared `extern`
+//! fns — std already links libc and the offline build carries no libc
+//! crate.
+
+use super::poll::{poll, PollFd, POLLIN, POLLOUT};
+use std::collections::HashMap;
+
+/// One ready descriptor, by the caller's key (not the raw fd): readable /
+/// writable mirror [`PollFd::readable`] / [`PollFd::writable`] — errors
+/// and hangups surface as both, so the caller's read/write path observes
+/// the failure and closes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Readiness {
+    pub key: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// A pluggable readiness notifier. `update` replaces (or installs) the
+/// interest set of `fd` under the caller-chosen `key`; `remove` must be
+/// called before the descriptor is closed; `wait` blocks up to
+/// `timeout_ms` and appends ready descriptors to `out` (cleared first).
+pub trait ReadinessBackend: Send {
+    fn name(&self) -> &'static str;
+    fn update(&mut self, fd: i32, key: usize, read: bool, write: bool) -> std::io::Result<()>;
+    fn remove(&mut self, fd: i32);
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Readiness>) -> std::io::Result<()>;
+}
+
+/// Portable fallback: interest lives in a map; every `wait` materializes
+/// it into a fresh `pollfd` array (the O(connections) rebuild the epoll
+/// backend exists to avoid).
+pub struct PollBackend {
+    interest: HashMap<i32, (usize, i16)>,
+    /// Scratch reused across waits (allocation-free steady state).
+    fds: Vec<PollFd>,
+    keys: Vec<usize>,
+}
+
+impl PollBackend {
+    pub fn new() -> PollBackend {
+        PollBackend { interest: HashMap::new(), fds: Vec::new(), keys: Vec::new() }
+    }
+}
+
+impl Default for PollBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReadinessBackend for PollBackend {
+    fn name(&self) -> &'static str {
+        "poll"
+    }
+
+    fn update(&mut self, fd: i32, key: usize, read: bool, write: bool) -> std::io::Result<()> {
+        let mut events = 0i16;
+        if read {
+            events |= POLLIN;
+        }
+        if write {
+            events |= POLLOUT;
+        }
+        self.interest.insert(fd, (key, events));
+        Ok(())
+    }
+
+    fn remove(&mut self, fd: i32) {
+        self.interest.remove(&fd);
+    }
+
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Readiness>) -> std::io::Result<()> {
+        out.clear();
+        self.fds.clear();
+        self.keys.clear();
+        for (&fd, &(key, events)) in &self.interest {
+            // Zero-interest fds stay registered: poll still reports
+            // errors/hangups for them, matching epoll's semantics.
+            self.fds.push(PollFd::new(fd, events));
+            self.keys.push(key);
+        }
+        poll(&mut self.fds, timeout_ms)?;
+        for (fd, &key) in self.fds.iter().zip(&self.keys) {
+            if fd.readable() || fd.writable() {
+                out.push(Readiness { key, readable: fd.readable(), writable: fd.writable() });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    pub const EPOLL_CLOEXEC: i32 = 0o2000000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+
+    /// `struct epoll_event` is `__attribute__((packed))` on x86-64 (and
+    /// only there); `#[repr(C, packed)]` matches the kernel ABI on every
+    /// architecture Rust targets for Linux.
+    #[repr(C, packed)]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout: std::os::raw::c_int,
+        ) -> i32;
+        pub fn close(fd: i32) -> i32;
+    }
+}
+
+/// Kernel-side interest set via `epoll(7)`. The local `armed` map only
+/// mirrors what the kernel holds so `update` can pick ADD vs MOD and skip
+/// the syscall entirely when nothing changed — the steady-state cost of a
+/// wakeup is one `epoll_wait` returning just the ready descriptors.
+#[cfg(target_os = "linux")]
+pub struct EpollBackend {
+    epfd: i32,
+    /// fd → (key, armed event mask).
+    armed: HashMap<i32, (usize, u32)>,
+    events: Vec<sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollBackend {
+    pub fn new() -> std::io::Result<EpollBackend> {
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        Ok(EpollBackend {
+            epfd,
+            armed: HashMap::new(),
+            events: vec![sys::EpollEvent { events: 0, data: 0 }; 256],
+        })
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollBackend {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl ReadinessBackend for EpollBackend {
+    fn name(&self) -> &'static str {
+        "epoll"
+    }
+
+    fn update(&mut self, fd: i32, key: usize, read: bool, write: bool) -> std::io::Result<()> {
+        let mut mask = 0u32;
+        if read {
+            mask |= sys::EPOLLIN;
+        }
+        if write {
+            mask |= sys::EPOLLOUT;
+        }
+        let op = match self.armed.get(&fd) {
+            Some(&(k, m)) if k == key && m == mask => return Ok(()),
+            Some(_) => sys::EPOLL_CTL_MOD,
+            None => sys::EPOLL_CTL_ADD,
+        };
+        let mut ev = sys::EpollEvent { events: mask, data: key as u64 };
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(std::io::Error::last_os_error());
+        }
+        self.armed.insert(fd, (key, mask));
+        Ok(())
+    }
+
+    fn remove(&mut self, fd: i32) {
+        if self.armed.remove(&fd).is_some() {
+            let mut ev = sys::EpollEvent { events: 0, data: 0 };
+            // Best-effort: the close() that follows detaches it anyway.
+            unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
+        }
+    }
+
+    fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Readiness>) -> std::io::Result<()> {
+        out.clear();
+        let n = loop {
+            let rc = unsafe {
+                sys::epoll_wait(
+                    self.epfd,
+                    self.events.as_mut_ptr(),
+                    self.events.len() as i32,
+                    timeout_ms,
+                )
+            };
+            if rc >= 0 {
+                break rc as usize;
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() != std::io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        };
+        for ev in &self.events[..n] {
+            let (mask, key) = (ev.events, ev.data as usize);
+            out.push(Readiness {
+                key,
+                readable: mask & (sys::EPOLLIN | sys::EPOLLHUP | sys::EPOLLERR) != 0,
+                writable: mask & (sys::EPOLLOUT | sys::EPOLLERR) != 0,
+            });
+        }
+        if n == self.events.len() {
+            // Saturated: more may be ready; grow so one wakeup can report
+            // a larger burst next time.
+            self.events.resize(n * 2, sys::EpollEvent { events: 0, data: 0 });
+        }
+        Ok(())
+    }
+}
+
+/// The best backend this platform offers: epoll on Linux (unless
+/// `FASTGM_READINESS=poll` forces the fallback or `epoll_create1` fails),
+/// poll everywhere else.
+pub fn make_backend() -> Box<dyn ReadinessBackend> {
+    #[cfg(target_os = "linux")]
+    {
+        if std::env::var("FASTGM_READINESS").as_deref() != Ok("poll") {
+            match EpollBackend::new() {
+                Ok(b) => return Box::new(b),
+                Err(e) => log::warn!("epoll unavailable ({e}); falling back to poll"),
+            }
+        }
+    }
+    Box::new(PollBackend::new())
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    fn backends() -> Vec<Box<dyn ReadinessBackend>> {
+        let mut all: Vec<Box<dyn ReadinessBackend>> = vec![Box::new(PollBackend::new())];
+        #[cfg(target_os = "linux")]
+        all.push(Box::new(EpollBackend::new().unwrap()));
+        all
+    }
+
+    /// Both backends report the same readiness transitions for the same
+    /// socket activity — the property that makes the runtime selection
+    /// invisible to the event loop.
+    #[test]
+    fn backends_agree_on_read_write_and_hangup() {
+        for mut b in backends() {
+            let name = b.name();
+            let (a, mut peer) = UnixStream::pair().unwrap();
+            let fd = a.as_raw_fd();
+            let mut out = Vec::new();
+            // Read interest, quiet socket: timeout, nothing ready.
+            b.update(fd, 7, true, false).unwrap();
+            b.wait(10, &mut out).unwrap();
+            assert!(out.is_empty(), "[{name}] quiet socket reported {out:?}");
+            // A written byte wakes readability under the caller's key.
+            peer.write_all(&[1]).unwrap();
+            b.wait(1000, &mut out).unwrap();
+            assert_eq!(out.len(), 1, "[{name}]");
+            assert!(out[0].readable && out[0].key == 7, "[{name}] {out:?}");
+            let mut sink = [0u8; 8];
+            let _ = (&a).read(&mut sink);
+            // Write interest on an idle socket is immediately ready.
+            b.update(fd, 7, false, true).unwrap();
+            b.wait(1000, &mut out).unwrap();
+            assert!(out.iter().any(|r| r.key == 7 && r.writable), "[{name}] {out:?}");
+            // Zero interest: the fd stays registered but reports nothing.
+            b.update(fd, 7, false, false).unwrap();
+            peer.write_all(&[2]).unwrap();
+            b.wait(10, &mut out).unwrap();
+            assert!(
+                !out.iter().any(|r| r.key == 7 && r.readable),
+                "[{name}] zero-interest fd reported readable: {out:?}"
+            );
+            // Hangup surfaces as readable (EOF drain), like PollFd does.
+            b.update(fd, 7, true, false).unwrap();
+            drop(peer);
+            b.wait(1000, &mut out).unwrap();
+            assert!(out.iter().any(|r| r.key == 7 && r.readable), "[{name}] {out:?}");
+            // Removal: no further events, and re-adding works.
+            b.remove(fd);
+            b.wait(10, &mut out).unwrap();
+            assert!(out.is_empty(), "[{name}] removed fd still reported: {out:?}");
+            b.update(fd, 9, true, false).unwrap();
+            b.wait(1000, &mut out).unwrap();
+            assert!(out.iter().any(|r| r.key == 9 && r.readable), "[{name}] {out:?}");
+        }
+    }
+
+    /// Updates are cheap no-ops when nothing changed, and key remapping
+    /// takes effect (slot recycling depends on this).
+    #[test]
+    fn rearming_and_key_remap() {
+        for mut b in backends() {
+            let name = b.name();
+            let (a, mut peer) = UnixStream::pair().unwrap();
+            let fd = a.as_raw_fd();
+            b.update(fd, 1, true, false).unwrap();
+            b.update(fd, 1, true, false).unwrap(); // identical re-arm
+            b.update(fd, 2, true, false).unwrap(); // same mask, new key
+            peer.write_all(&[1]).unwrap();
+            let mut out = Vec::new();
+            b.wait(1000, &mut out).unwrap();
+            assert_eq!(out.len(), 1, "[{name}] {out:?}");
+            assert_eq!(out[0].key, 2, "[{name}] stale key survived remap");
+        }
+    }
+
+    #[test]
+    fn make_backend_returns_a_working_backend() {
+        let mut b = make_backend();
+        #[cfg(target_os = "linux")]
+        assert_eq!(b.name(), "epoll");
+        let (a, mut peer) = UnixStream::pair().unwrap();
+        b.update(a.as_raw_fd(), 3, true, false).unwrap();
+        peer.write_all(&[1]).unwrap();
+        let mut out = Vec::new();
+        b.wait(1000, &mut out).unwrap();
+        assert_eq!(out, vec![Readiness { key: 3, readable: true, writable: false }]);
+    }
+}

@@ -15,7 +15,11 @@
 //! * `BENCH_9.json` — the versioned read-path cache pays rent: a validated
 //!   merged-union hit is ≥10x cheaper than the §2.3 re-merge it elides,
 //!   and a warm `(key, version)` cluster gather is strictly cheaper than
-//!   a cold one.
+//!   a cold one;
+//! * `BENCH_10.json` — the zero-copy binary data plane pays rent: a
+//!   k=1024 binary blob fetch is ≥2x cheaper than its hex-in-JSON twin,
+//!   the borrowing view decode beats the owned (copying) decode of the
+//!   same frame, and a binary-plane repair walk beats the hex one.
 //!
 //! Absolute numbers are NOT asserted against the current machine (CI
 //! runners are too noisy; `ci/bench_coverage.py` gates name coverage on
@@ -27,6 +31,7 @@ const BASELINE: &str = include_str!("../../BENCH_6.json");
 const BASELINE7: &str = include_str!("../../BENCH_7.json");
 const BASELINE8: &str = include_str!("../../BENCH_8.json");
 const BASELINE9: &str = include_str!("../../BENCH_9.json");
+const BASELINE10: &str = include_str!("../../BENCH_10.json");
 
 /// Pairs emitted by `perf_probe`: `<name>_scalar_ns` vs `<name>_ns`.
 const PAIRS: [&str; 8] = [
@@ -62,6 +67,10 @@ fn baseline9() -> Value {
     parse(BASELINE9).expect("BENCH_9.json parses with the crate JSON layer")
 }
 
+fn baseline10() -> Value {
+    parse(BASELINE10).expect("BENCH_10.json parses with the crate JSON layer")
+}
+
 fn ns(v: &Value, name: &str) -> f64 {
     v.get(name)
         .unwrap_or_else(|| panic!("probe '{name}' missing from the baseline"))
@@ -76,6 +85,7 @@ fn baseline_schema_is_complete_and_consistent() {
         ("BENCH_7.json", baseline7()),
         ("BENCH_8.json", baseline8()),
         ("BENCH_9.json", baseline9()),
+        ("BENCH_10.json", baseline10()),
     ] {
         let Value::Obj(entries) = &v else { panic!("{file}: top level must be a name->stats object") };
         assert!(entries.len() >= 50, "{file}: expected the full probe sweep, got {}", entries.len());
@@ -273,6 +283,47 @@ fn cache_hits_amortize_and_warm_gathers_beat_cold_in_bench9() {
         "kernel.merge_ns",
         "transport.sat.framed_ns",
         "sample.draw32_k256_ns",
+    ] {
+        assert!(ns(&v, name) > 0.0);
+    }
+}
+
+/// BENCH_10 acceptance (ISSUE 10): the zero-copy binary data plane pays
+/// rent. Fetching a k=1024 blob as raw codec bytes in a frame must be
+/// ≥2x cheaper than the hex-in-JSON fetch of the SAME blob, the
+/// borrowing `FrameView` decode must be strictly cheaper than the owned
+/// (copying) decode of the same frame, and a repair walk whose fetches
+/// and installs ride the binary plane must beat the hex walk.
+#[test]
+fn binary_blob_plane_pays_rent_in_bench10() {
+    let v = baseline10();
+    let hex = ns(&v, "blob.fetch_hex_ns");
+    let bin = ns(&v, "blob.fetch_binary_ns");
+    assert!(
+        bin * 2.0 <= hex,
+        "binary blob fetch ({bin} ns) is not >=2x cheaper than hex ({hex} ns) at k=1024"
+    );
+    let copy = ns(&v, "blob.decode_copy_ns");
+    let view = ns(&v, "blob.decode_view_ns");
+    assert!(
+        view < copy,
+        "zero-copy view decode ({view} ns) is not cheaper than the owned decode ({copy} ns)"
+    );
+    let rhex = ns(&v, "cluster.repair_hex_ns");
+    let rbin = ns(&v, "cluster.repair_binary_ns");
+    assert!(
+        rbin < rhex,
+        "binary-plane repair ({rbin} ns) is not cheaper than the hex repair ({rhex} ns)"
+    );
+    // BENCH_10 re-carries every earlier probe family (one sweep per
+    // baseline file, so trajectories diff file-to-file).
+    for name in [
+        "fastgm/n1000/k64",
+        "kernel.merge_ns",
+        "transport.sat.framed_ns",
+        "sample.draw32_k256_ns",
+        "cache.merge_keys_hit_ns",
+        "cluster.gather_warm_ns",
     ] {
         assert!(ns(&v, name) > 0.0);
     }

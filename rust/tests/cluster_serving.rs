@@ -686,7 +686,7 @@ fn tiny_io_timeout_marks_a_stuffed_node_down() {
         let mut w = stream;
         w.write_all(
             concat!(
-                r#"{"ok":true,"type":"hello","protocol":3,"node":"stuffed","epoch":0,"#,
+                r#"{"ok":true,"type":"hello","protocol":4,"node":"stuffed","epoch":0,"#,
                 r#""k":8,"seed":1,"algo":"fastgm","algos":["fastgm"]}"#,
                 "\n"
             )
@@ -805,5 +805,83 @@ fn gather_blob_cache_is_bit_identical_and_version_invalidated() {
     );
     let s = cached.gather_cache_stats().unwrap();
     assert!(s.hits > 0 && s.misses > 0, "{s:?}");
+    cluster.stop();
+}
+
+/// ISSUE 10 acceptance: a framed cluster client moves every blob —
+/// gather fetches, single-key reads, stream merges, repair installs — as
+/// raw codec bytes in binary frames, and its answers are BIT-IDENTICAL
+/// to a hex-in-JSON client's against the SAME nodes: healthy, with a
+/// node down at R=2 (failover fetches ride the binary path too), and
+/// after a binary-plane repair of a cold-restarted node.
+#[cfg(unix)]
+#[test]
+fn binary_and_hex_gathers_are_bit_identical_with_a_node_down() {
+    const M: usize = 3;
+    let (query, docs) = corpus(60);
+    let mut cluster = LocalCluster::start_event(M, &cfg()).unwrap();
+    let repl = || ReplicaConfig { replication: 2, write_quorum: 1, ..Default::default() };
+    let mut hex = ClusterClient::connect_with(&cluster.addrs(), repl()).unwrap();
+    let mut bin =
+        ClusterClient::connect_with(&cluster.addrs(), ReplicaConfig { framed: true, ..repl() })
+            .unwrap();
+
+    // Ingest through the BINARY client; read back through both planes.
+    for (i, d) in docs.iter().enumerate() {
+        let info = bin.upsert(&format!("doc{i:03}"), d.clone()).unwrap();
+        assert!(info.contains("(2/2 replicas)"), "{info}");
+    }
+    let items: Vec<(u64, f64)> = (0..700u64).map(|i| (i * 977 + 13, 1.0)).collect();
+    bin.push("pkts", &items).unwrap();
+
+    let brute = brute_force_topk(&query, &docs, LIMIT);
+    let (bin_hits, bin_stats) = bin.topk(&query, LIMIT).unwrap();
+    let (hex_hits, _) = hex.topk(&query, LIMIT).unwrap();
+    assert_eq!(bin_hits, brute, "binary gather drifted from the brute scan");
+    assert_eq!(bin_hits, hex_hits, "binary and hex gathers disagree");
+    assert_eq!(bin_stats.live, M);
+    let healthy_sketch = hex.merged_stream_sketch("pkts").unwrap();
+    assert_eq!(bin.merged_stream_sketch("pkts").unwrap(), healthy_sketch);
+    // Single-key reads: same (version, registers) through both planes,
+    // and the same None for a key nobody holds.
+    for i in 0..docs.len() {
+        let key = format!("doc{i:03}");
+        assert_eq!(bin.fetch_key(&key).unwrap(), hex.fetch_key(&key).unwrap(), "'{key}'");
+    }
+    assert_eq!(bin.fetch_key("ghost").unwrap(), None);
+
+    // One node down at R=2: every partition keeps a live replica, and
+    // BOTH planes keep their exact healthy answers.
+    const VICTIM: usize = 1;
+    cluster.kill(VICTIM);
+    let (bin_down, stats) = bin.topk(&query, LIMIT).unwrap();
+    assert_eq!(stats.live, M - 1, "{stats:?}");
+    assert_eq!(bin_down, brute, "degraded binary gather drifted");
+    assert_eq!(hex.topk(&query, LIMIT).unwrap().0, brute, "degraded hex gather drifted");
+    assert_eq!(bin.merged_stream_sketch("pkts").unwrap(), healthy_sketch);
+    assert_eq!(hex.merged_stream_sketch("pkts").unwrap(), healthy_sketch);
+    for i in 0..docs.len() {
+        let key = format!("doc{i:03}");
+        assert_eq!(
+            bin.fetch_key(&key).unwrap(),
+            hex.fetch_key(&key).unwrap(),
+            "'{key}' diverged with a node down"
+        );
+    }
+
+    // Cold restart + repair THROUGH THE BINARY PLANE: the phase-2 blob
+    // installs ride `store_put_bin`, phase-3 stream convergence rides
+    // `stream_merge_bin` — and the hex client sees the same converged
+    // cluster afterwards.
+    cluster.restart(VICTIM).unwrap();
+    bin.reconnect(VICTIM, cluster.addr(VICTIM)).unwrap();
+    hex.reconnect(VICTIM, cluster.addr(VICTIM)).unwrap();
+    let report = bin.repair(&["pkts".to_string()]).unwrap();
+    assert!(report.keys_healed > 0, "cold node must be healed: {report:?}");
+    assert_eq!(report.stream_merges, M, "every live node absorbs the union");
+    assert_eq!(bin.repair(&["pkts".to_string()]).unwrap().keys_healed, 0, "repair idempotent");
+    assert_eq!(bin.topk(&query, LIMIT).unwrap().0, brute);
+    assert_eq!(hex.topk(&query, LIMIT).unwrap().0, brute);
+    assert_eq!(hex.merged_stream_sketch("pkts").unwrap(), healthy_sketch);
     cluster.stop();
 }

@@ -13,17 +13,26 @@ use fastgm::coordinator::frame::{
     FRAME_MAGIC, FRAME_VERSION, HEADER_LEN,
 };
 use fastgm::coordinator::protocol::{Request, Response, SketchSource};
+use fastgm::sketch::codec;
 use fastgm::sketch::fastgm::FastGm;
 use fastgm::sketch::{Sketcher, SparseVector};
 use fastgm::util::hash::fnv1a64;
 use fastgm::util::rng::SplitMix64;
 
 /// A frame per message shape class: fixed (ping), stringy, vector-heavy,
-/// sketch-register and blob payloads — so the byte-level properties are
-/// exercised against every field primitive the codec has.
+/// sketch-register and blob payloads — both the hex-in-JSON blob arm and
+/// the binary blob kinds (`store_put_bin` / `stream_merge_bin` /
+/// `sketch_fetch_bin` / `sketch_blob_bin`) whose bodies carry raw codec
+/// bytes, including `0xFB` (the frame magic) and newlines — so the
+/// byte-level properties are exercised against every field primitive the
+/// codec has.
 fn sample_frames() -> Vec<(u64, Vec<u8>)> {
     let v = SparseVector::new(vec![3, 1 << 60, 7], vec![0.25, 1.5, 9.0]);
     let sk = FastGm::new(16, 11).sketch(&v);
+    // A real codec blob for a key containing a raw newline — the byte
+    // that would tear a line protocol apart but must ride frames
+    // untouched (the register bytes themselves are arbitrary binary).
+    let blob = codec::encode_sketch_bytes("βlob\nkey", 9, &sk);
     let reqs: Vec<(u64, Request)> = vec![
         (1, Request::Ping),
         (u64::MAX, Request::Sketch { name: "βeta-doc".into(), vector: v.clone(), algo: None }),
@@ -33,6 +42,9 @@ fn sample_frames() -> Vec<(u64, Vec<u8>)> {
             Request::StorePut { data: "fb01aa".into() }, // raw-byte blob arm
         ),
         (9, Request::SketchFetch { name: "s".into(), source: SketchSource::Stream }),
+        (10, Request::StorePutBin { data: blob.clone() }),
+        (11, Request::StreamMergeBin { stream: "clicks".into(), data: blob.clone() }),
+        (12, Request::SketchFetchBin { name: "s".into(), source: SketchSource::Stream }),
     ];
     let mut frames = Vec::new();
     for (id, req) in &reqs {
@@ -42,6 +54,7 @@ fn sample_frames() -> Vec<(u64, Vec<u8>)> {
     }
     let resps: Vec<(u64, Response)> = vec![
         (2, Response::Pong),
+        (13, Response::SketchBlobBin { name: "βlob\nkey".into(), data: blob }),
         (3, Response::Sketch { name: "doc".into(), sketch: sk }),
         (4, Response::Error { message: "no sketch named 'ghost'".into() }),
     ];
@@ -184,6 +197,87 @@ fn hostile_length_prefixes_are_refused() {
             decode_frame(&refresh_checksum(bad)).is_err(),
             "payload length {len} accepted"
         );
+    }
+}
+
+/// The bulk-blob kinds at transfer scale: a k=1024 codec blob rides a
+/// `sketch_blob_bin` frame bit-exactly, the borrowing [`FrameView`]
+/// slices the SAME bytes the owned decoder parses (no copy between the
+/// socket buffer and `decode_sketch_bytes`), every strict prefix is
+/// `Incomplete`, sampled single-bit flips never yield a frame on either
+/// decode path, and hostile length prefixes are refused before any
+/// allocation — the full wire contract at the size the data plane
+/// actually moves.
+#[test]
+fn bulk_blob_frames_hold_the_wire_properties_at_k1024() {
+    use fastgm::coordinator::frame::{decode_frame_view, FrameViewStatus, MAX_PAYLOAD};
+
+    let dims: Vec<u64> = (0..1024u64).map(|i| i * 37 + 5).collect();
+    let weights: Vec<f64> = (0..1024).map(|i| 0.5 + (i % 97) as f64).collect();
+    let sk = FastGm::new(1024, 7).sketch(&SparseVector::new(dims, weights));
+    let blob = codec::encode_sketch_bytes("bulk", 41, &sk);
+    let mut frame_bytes = Vec::new();
+    encode_response_frame(
+        99,
+        &Response::SketchBlobBin { name: "bulk".into(), data: blob.clone() },
+        &mut frame_bytes,
+    );
+    assert!(frame_bytes.len() > 4 * 1024, "k=1024 blob should be kilobytes of payload");
+
+    // Owned and borrowing decodes agree; the view hands back the exact
+    // blob bytes, which the codec parses straight into the sketch.
+    let FrameStatus::Frame { consumed, id, msg } = decode_frame(&frame_bytes).unwrap() else {
+        panic!("complete bulk frame reported incomplete")
+    };
+    assert_eq!((consumed, id), (frame_bytes.len(), 99));
+    let FrameMsg::Response(Response::SketchBlobBin { name, data }) = msg else {
+        panic!("bulk frame decoded to the wrong message")
+    };
+    assert_eq!((name.as_str(), data), ("bulk", blob.clone()));
+    let FrameViewStatus::Frame(view) = decode_frame_view(&frame_bytes).unwrap() else {
+        panic!("complete bulk frame reported incomplete by the view decoder")
+    };
+    assert_eq!((view.consumed, view.id), (frame_bytes.len(), 99));
+    let (vname, vblob) = view.sketch_blob_bin().unwrap().expect("blob frame");
+    assert_eq!((vname.as_str(), vblob), ("bulk", blob.as_slice()));
+    let (key, version, decoded) = codec::decode_sketch_bytes(vblob).unwrap();
+    assert_eq!((key.as_str(), version), ("bulk", 41));
+    assert_eq!(decoded, sk);
+
+    // Every strict prefix — all ~17k of them — is a clean Incomplete.
+    for len in 0..frame_bytes.len() {
+        assert!(
+            matches!(decode_frame_view(&frame_bytes[..len]).unwrap(), FrameViewStatus::Incomplete),
+            "bulk prefix {len}/{} not Incomplete",
+            frame_bytes.len()
+        );
+    }
+
+    // Sampled single-bit corruption across the whole frame: neither
+    // decode path may ever hand back a frame.
+    let mut r = SplitMix64::new(17);
+    for _ in 0..400 {
+        let mut bad = frame_bytes.clone();
+        let at = r.next_range(0, bad.len() - 1);
+        bad[at] ^= 1 << r.next_range(0, 7);
+        assert!(
+            !matches!(decode_frame(&bad), Ok(FrameStatus::Frame { .. })),
+            "bit flip at byte {at} went unnoticed by decode_frame"
+        );
+        assert!(
+            !matches!(decode_frame_view(&bad), Ok(FrameViewStatus::Frame(_))),
+            "bit flip at byte {at} went unnoticed by decode_frame_view"
+        );
+    }
+
+    // Hostile length prefixes on a bulk frame are refused up front —
+    // a 4 GiB length must never reserve memory.
+    for len in [0u32, 1, 8, u32::MAX, (MAX_PAYLOAD + 1) as u32] {
+        let mut bad = frame_bytes.clone();
+        bad[2..HEADER_LEN].copy_from_slice(&len.to_le_bytes());
+        let bad = refresh_checksum(bad);
+        assert!(decode_frame(&bad).is_err(), "payload length {len} accepted");
+        assert!(decode_frame_view(&bad).is_err(), "payload length {len} accepted by the view");
     }
 }
 

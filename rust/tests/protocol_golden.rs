@@ -44,6 +44,9 @@ const ALL_REQUEST_OPS: &[&str] = &[
     "partition",
     "metrics",
     "ping",
+    "store_put_bin",
+    "stream_merge_bin",
+    "sketch_fetch_bin",
 ];
 
 /// Every response type. Same rule as [`ALL_REQUEST_OPS`].
@@ -57,6 +60,7 @@ const ALL_RESPONSE_TYPES: &[&str] = &[
     "keys",
     "hello",
     "sketch_blob",
+    "sketch_blob_bin",
     "samples",
     "error",
     "pong",
@@ -216,6 +220,25 @@ fn golden_values_decode_losslessly() {
         Request::Partition { target: QueryTarget::Stream("s".into()) }
     );
 
+    // The binary blob ops (ISSUE 10): on the JSON wire their payload is
+    // hex (the compatibility form); the decoded value is the RAW bytes —
+    // so "46474d53" decodes to the literal codec magic, not the hex text.
+    assert_eq!(
+        decode_request(lines[30]).unwrap(),
+        Request::StorePutBin { data: b"FGMS".to_vec() }
+    );
+    assert_eq!(
+        decode_request(lines[31]).unwrap(),
+        Request::StreamMergeBin { stream: "s".into(), data: b"FGMS".to_vec() }
+    );
+    assert_eq!(
+        decode_request(lines[32]).unwrap(),
+        Request::SketchFetchBin {
+            name: "doc1".into(),
+            source: fastgm::coordinator::protocol::SketchSource::Store,
+        }
+    );
+
     let resp_lines = golden_lines(RESPONSES);
     let Response::Sketch { sketch, .. } = decode_response(resp_lines[0]).unwrap() else {
         panic!("first golden response must be a sketch")
@@ -230,6 +253,14 @@ fn golden_values_decode_losslessly() {
     };
     assert_eq!(sketch.seed, u64::MAX);
     assert_eq!(sketch.s[0], (1u64 << 53) + 1);
+
+    // The binary blob reply decodes its hex compatibility form to raw
+    // bytes, exactly like the request side.
+    let Response::SketchBlobBin { name, data } = decode_response(resp_lines[12]).unwrap()
+    else {
+        panic!("golden response 12 must be the binary blob reply")
+    };
+    assert_eq!((name.as_str(), data), ("doc1", b"FGMS".to_vec()));
 
     // Sampled register ids survive the >2^53 string encoding round trip.
     let Response::Samples { ids } =
